@@ -1,0 +1,41 @@
+//! Layer-wise speedup explorer (Figure 7): sweep QUIK configurations over
+//! LLaMA-shaped linear layers on the calibrated RTX 3090 device model and
+//! print who wins where — including the fusion-version ablation (Fig. 6).
+
+use quik::config::{LayerPlan, QuikPolicy};
+use quik::devicemodel::gpu::RTX3090;
+use quik::devicemodel::layer::{FusionVersion, QuikLayerModel};
+
+fn main() {
+    let g = RTX3090;
+    let m = 2048;
+    println!("QUIK-4B layer speedups vs FP16 ({} tokens, {}):\n", m, g.name);
+    println!("{:<16} {:>8} {:>8} {:>8}", "layer k->n", "v1", "v2", "v3");
+    for (k, n) in [
+        (2048usize, 2048usize),
+        (4096, 4096),
+        (8192, 8192),
+        (8192, 28672),
+    ] {
+        let l = QuikLayerModel::new(k, n, QuikPolicy::QUIK_4B.plan_for("q_proj", k));
+        let s = |v| l.speedup(&g, m, v);
+        println!(
+            "{:<16} {:>7.2}x {:>7.2}x {:>7.2}x",
+            format!("{k}->{n}"),
+            s(FusionVersion::V1Unfused),
+            s(FusionVersion::V2FusedQuant),
+            s(FusionVersion::V3FusedBoth)
+        );
+    }
+
+    println!("\noutlier-count sensitivity on 8192->8192 (v3, us):");
+    for n_out in [0usize, 128, 256, 512, 1024] {
+        let plan = LayerPlan { n_outlier: n_out, ..QuikPolicy::QUIK_4B.plan_for("q_proj", 8192) };
+        let l = QuikLayerModel::new(8192, 8192, plan);
+        println!(
+            "  {n_out:>5} outliers: {:>7.1} us",
+            l.quik_time(&g, m, FusionVersion::V3FusedBoth).total() * 1e6
+        );
+    }
+    println!("\n(shape: outliers nearly free — the paper's Fig. 14)");
+}

@@ -1,0 +1,34 @@
+//! Memory planning (Table 6): how much memory each model needs under
+//! FP16 / QUIK-8B / QUIK-4B, its byte-level composition, and how many
+//! RTX 3090s a deployment takes — the paper's Falcon-180B story.
+
+use quik::config::{model_zoo, spec, QuikPolicy};
+use quik::devicemodel::gpu::RTX3090;
+use quik::memmodel::{memory_report, table6_row};
+
+fn main() {
+    println!("peak memory (GB), batch 1 x seq 2048 prefill\n");
+    println!("{:<13} {:>8} {:>8} {:>8} {:>6}", "model", "FP16", "Q8", "Q4", "GPUs");
+    for (name, s) in model_zoo() {
+        let [fp16, q8, q4] = table6_row(&s, 1, 2048);
+        let gpus = (q4 * 1e9 / (RTX3090.mem_capacity * 0.9)).ceil();
+        println!("{name:<13} {fp16:>8.1} {q8:>8.1} {q4:>8.1} {gpus:>6.0}");
+    }
+
+    println!("\nLLaMA2-70B QUIK-4B composition:");
+    let r = memory_report(&spec("llama2-70b").unwrap(), &QuikPolicy::QUIK_4B, 1, 2048);
+    for (label, bytes) in [
+        ("quantized weights", r.weight_bytes),
+        ("FP16 outlier columns", r.outlier_bytes),
+        ("scales/metadata", r.metadata_bytes),
+        ("embeddings + head", r.embedding_bytes),
+        ("activations", r.activation_bytes),
+        ("KV cache (2048 ctx)", r.kv_cache_bytes),
+    ] {
+        println!("  {label:<22} {:>8.2} GB", bytes / 1e9);
+    }
+    println!("  {:<22} {:>8.2} GB  (paper: 49.1 GB, <50 GB headline)", "total", r.total_gb());
+
+    println!("\nFalcon-180B: FP16 {:.0} GB exceeds an 8x3090 server (192 GB);", table6_row(&spec("falcon-180b").unwrap(), 1, 2048)[0]);
+    println!("QUIK-4B brings it to {:.0} GB — single-server deployment.", table6_row(&spec("falcon-180b").unwrap(), 1, 2048)[2]);
+}

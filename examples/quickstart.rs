@@ -1,0 +1,52 @@
+//! Quickstart: load a QUIK AOT artifact, run one prefill call through
+//! PJRT, and inspect the output — the smallest end-to-end slice of the
+//! three-layer stack.
+//!
+//! ```sh
+//! make artifacts          # once: trains + quantizes + AOT-lowers
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use quik::runtime::engine::ModelRuntime;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // 1. Load the manifest and compile the QUIK-4B prefill program.
+    let mut rt = ModelRuntime::load(&artifacts, "llama-s")?;
+    println!("available variants: {:?}", rt.variants());
+    rt.ensure_loaded("quik4_prefill_b1")?;
+    let art = rt.artifact("quik4_prefill_b1").unwrap();
+    println!(
+        "loaded quik4_prefill_b1: batch={} seq={} ({} weight tensors)",
+        art.spec.batch,
+        art.spec.seq,
+        art.spec.params.len()
+    );
+
+    // 2. Run a prefill over a toy prompt (token ids mod vocab).
+    let seq = art.spec.seq;
+    let prompt: Vec<i32> = (0..seq as i32).map(|i| (i * 17 + 3) % 250).collect();
+    let mut cache = art.new_cache()?;
+    let out = art.run(&prompt, &mut cache)?;
+
+    // 3. Inspect: logits shape and the greedy next token.
+    println!(
+        "logits: [{} x {} x {}], cache now at position {}",
+        out.batch, out.seq, out.vocab, cache.cache_len
+    );
+    println!("greedy next token: {}", out.argmax_last()[0]);
+
+    // 4. The same artifact exists in FP16 — compare the predictions.
+    rt.ensure_loaded("fp16_prefill_b1")?;
+    let fp = rt.artifact("fp16_prefill_b1").unwrap();
+    let mut fp_cache = fp.new_cache()?;
+    let fp_out = fp.run(&prompt, &mut fp_cache)?;
+    println!(
+        "FP16 next token: {} (QUIK-4B and FP16 {})",
+        fp_out.argmax_last()[0],
+        if fp_out.argmax_last() == out.argmax_last() { "agree" } else { "differ" }
+    );
+    Ok(())
+}

@@ -1,0 +1,404 @@
+"""AOT export: lower the model forwards to HLO text + weight blobs.
+
+This is the only bridge between the Python build path and the Rust serving
+runtime.  For each exported artifact we emit:
+
+* ``<name>.hlo.txt`` — HLO **text** (NOT a serialized ``HloModuleProto``:
+  jax ≥ 0.5 emits 64-bit instruction ids which xla_extension 0.5.1 rejects;
+  the text parser reassigns ids — see /opt/xla-example/README.md);
+* ``<name>.weights.bin`` — the flattened weight leaves as one raw
+  little-endian blob, with per-leaf (name, dtype, shape, offset) records in
+  the manifest.  Weights are HLO *parameters*, not constants, so artifacts
+  stay small and one HLO serves any checkpoint with the same shapes;
+* a ``manifest.json`` entry describing parameter order, runtime inputs
+  (tokens / KV-cache buffers / cache_len) and outputs.
+
+Exported signatures (one per (variant, batch) combination)::
+
+    prefill/decode: (weights..., tokens[B,S], cache_k, cache_v, cache_len)
+                    → (logits[B,S,V], cache_k', cache_v')
+
+Prefill is just the ``S = prompt_len, cache_len = 0`` instance; decode is
+``S = 1``.  The Rust coordinator owns the cache buffers and threads them
+through consecutive calls (zero-copy on CPU PJRT aside, the interface is
+the paper's "unified single-token and multi-token inference" future-work
+point made concrete).
+
+Golden files: for every artifact we also run the lowered function in
+Python on fixed inputs and store input/output arrays, so the Rust runtime
+has an exact end-to-end numeric check (``rust/tests/runtime_golden.rs``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+from .modeling import common, presets
+from .quik import policy as policy_mod
+from .kernels.ref import QuantizedWeights
+from .kernels import quik_linear as quik_linear_mod
+from .kernels.ref import quik_linear_ref
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+DEFAULT_OUT = REPO / "artifacts"
+
+_DTYPES = {"float32": "f32", "int32": "s32", "int8": "s8"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# export trees for FP16 and quantized models
+# ---------------------------------------------------------------------------
+
+
+def fp16_export_tree(params: common.Params):
+    """The FP16 artifact simply ships the full parameter pytree."""
+    return params, {}
+
+
+def quik_export_tree(qm: model_mod.QuantizedModel):
+    """Split a QuantizedModel into (traced pytree, static metadata).
+
+    The pytree carries every runtime array (int8 weights, FP outlier
+    columns, scales, permutations, biases, SmoothQuant scales and the
+    non-linear base params with quantized FP weights stripped); the static
+    metadata records per-layer bit widths — everything the traced apply
+    callback needs that must be a Python constant.
+    """
+    base = {
+        "embed": qm.params["embed"],
+        "final_norm": qm.params["final_norm"],
+        "layers": [],
+    }
+    if "pos_embed" in qm.params:
+        base["pos_embed"] = qm.params["pos_embed"]
+    q: dict[str, dict] = {}
+    meta: dict[str, dict] = {}
+    for li, lp in enumerate(qm.params["layers"]):
+        slot: dict = {"attn_norm": lp["attn_norm"]}
+        if "mlp_norm" in lp:
+            slot["mlp_norm"] = lp["mlp_norm"]
+        for lname in qm.cfg.linear_names():
+            section = "self_attn" if lname[0] in "qkvo" else "mlp"
+            full = f"layers.{li}.{section}.{lname}"
+            ql = qm.qlayers[full]
+            if ql.scheme == "fp16":
+                slot[lname] = {"w": ql.w_fp16} | (
+                    {"b": ql.bias} if ql.bias is not None else {}
+                )
+                continue
+            slot[lname] = {}  # quantized: no FP weight in the artifact
+            entry: dict = {
+                "w_int": ql.qw.w_int,
+                "w_fp": ql.qw.w_fp,
+                "scale_w": ql.qw.scale_w,
+                "w_reduced": ql.qw.w_reduced,
+            }
+            if ql.perm is not None:
+                entry["perm"] = jnp.asarray(ql.perm, jnp.int32)
+            if ql.bias is not None:
+                entry["bias"] = ql.bias
+            if ql.smooth_scale is not None:
+                entry["smooth"] = jnp.asarray(ql.smooth_scale)
+            q[full] = entry
+            meta[full] = {
+                "weight_bits": ql.plan.weight_bits,
+                "act_bits": ql.plan.act_bits,
+            }
+        base["layers"].append(slot)
+    return {"base": base, "q": q}, meta
+
+
+def make_export_apply(qtree: dict, meta: dict, use_kernels: bool) -> common.ApplyLinear:
+    """Traced quantized-linear callback used inside the lowered function."""
+
+    def apply(name: str, x: jnp.ndarray, p: common.Params) -> jnp.ndarray:
+        e = qtree.get(name)
+        if e is None:
+            y = jnp.matmul(x, p["w"].T)
+            return y + p["b"] if "b" in p else y
+        if "smooth" in e:
+            x = x / e["smooth"][None, :]
+        if "perm" in e:
+            x = x[:, e["perm"]]
+        qw = QuantizedWeights(
+            w_int=e["w_int"], w_fp=e["w_fp"], scale_w=e["scale_w"],
+            w_reduced=e["w_reduced"], bits=meta[name]["weight_bits"],
+        )
+        bias = e.get("bias")
+        act_bits = meta[name]["act_bits"]
+        if use_kernels:
+            return quik_linear_mod.quik_linear(
+                x, qw, bias, version=3, act_bits=act_bits
+            )
+        return quik_linear_ref(x, qw, bias, act_bits=act_bits)
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# artifact writer
+# ---------------------------------------------------------------------------
+
+
+def _leaf_records(tree) -> list[tuple[str, np.ndarray]]:
+    """Flatten a pytree into (dotted-path, array) leaves in traversal order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = ".".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def export_artifact(
+    name: str,
+    cfg: common.ModelConfig,
+    weights_tree,
+    meta: dict | None,
+    batch: int,
+    seq: int,
+    out_dir: pathlib.Path,
+    use_kernels: bool = False,
+    golden_seed: int = 0,
+) -> dict:
+    """Lower one (variant, batch, seq) forward; write hlo/weights/golden.
+
+    ``meta`` non-None marks a quantized tree (``{"base": ..., "q": ...}``);
+    the apply callback is built *inside* the traced function from the traced
+    weights argument, so every quantized array is an HLO parameter (never a
+    baked constant).
+    """
+    t_max = cfg.max_seq
+    cache_shape = (cfg.n_layers, batch, cfg.n_heads, t_max, cfg.d_head)
+
+    def fn(weights, tokens, cache_k, cache_v, cache_len):
+        if meta is None:
+            base, apply = weights, common._default_apply
+        else:
+            base = weights["base"]
+            apply = make_export_apply(weights["q"], meta, use_kernels)
+        return common.forward_with_cache(
+            base, tokens, cfg, cache_k, cache_v, cache_len, apply_linear=apply,
+        )
+
+    specs = (
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), weights_tree),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    hlo_path = out_dir / f"{name}.hlo.txt"
+    hlo_path.write_text(to_hlo_text(lowered))
+
+    # Weight blob + per-leaf records (this order == HLO parameter order,
+    # since jit flattens arguments in pytree traversal order).
+    records = _leaf_records(weights_tree)
+    blob_path = out_dir / f"{name}.weights.bin"
+    params_meta = []
+    with open(blob_path, "wb") as f:
+        offset = 0
+        for pname, arr in records:
+            raw = np.ascontiguousarray(arr).tobytes()
+            params_meta.append({
+                "name": pname,
+                "dtype": _DTYPES[str(arr.dtype)],
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            })
+            f.write(raw)
+            offset += len(raw)
+
+    # Golden run: prefill on fixed tokens, then one decode step.
+    r = np.random.default_rng(golden_seed)
+    tokens = r.integers(0, cfg.vocab, size=(batch, seq)).astype(np.int32)
+    ck = jnp.zeros(cache_shape, jnp.float32)
+    cv = jnp.zeros(cache_shape, jnp.float32)
+    logits, ck1, cv1 = fn(weights_tree, jnp.asarray(tokens), ck, cv, jnp.int32(0))
+    golden_path = out_dir / f"{name}.golden.bin"
+    with open(golden_path, "wb") as f:
+        f.write(np.ascontiguousarray(tokens).tobytes())
+        f.write(np.ascontiguousarray(np.asarray(logits, np.float32)).tobytes())
+    golden = {
+        "tokens_shape": [batch, seq],
+        "logits_shape": list(logits.shape),
+        "file": golden_path.name,
+    }
+
+    return {
+        "hlo": hlo_path.name,
+        "weights": blob_path.name,
+        "params": params_meta,
+        "inputs": [
+            {"name": "tokens", "dtype": "s32", "shape": [batch, seq]},
+            {"name": "cache_k", "dtype": "f32", "shape": list(cache_shape)},
+            {"name": "cache_v", "dtype": "f32", "shape": list(cache_shape)},
+            {"name": "cache_len", "dtype": "s32", "shape": []},
+        ],
+        "outputs": [
+            {"name": "logits", "dtype": "f32", "shape": [batch, seq, cfg.vocab]},
+            {"name": "cache_k", "dtype": "f32", "shape": list(cache_shape)},
+            {"name": "cache_v", "dtype": "f32", "shape": list(cache_shape)},
+        ],
+        "golden": golden,
+        "batch": batch,
+        "seq": seq,
+    }
+
+
+# ---------------------------------------------------------------------------
+# top-level build
+# ---------------------------------------------------------------------------
+
+
+def build_model_artifacts(
+    model_name: str,
+    out_dir: pathlib.Path,
+    train_steps: int = 300,
+    prefill_seq: int = 64,
+    batches: tuple[int, ...] = (1, 4),
+    kernel_variant: bool = True,
+) -> dict:
+    """Train + quantize one tiny model and export all its artifacts."""
+    cfg, params, losses = train_mod.load_or_train(model_name, steps=train_steps)
+    calib = data_mod.calibration_sequences("pile", 64, 128, seed=1)[:, :-1]
+    calib_inputs = model_mod.calibrate(params, cfg, calib)
+    pol = policy_mod.QuikPolicy(n_outlier=presets.tiny_outliers(cfg))
+    qm = model_mod.quantize_model(params, cfg, calib_inputs, pol, scheme="quik")
+
+    fp_tree, _ = fp16_export_tree(params)
+    q_tree, q_meta = quik_export_tree(qm)
+
+    artifacts = {}
+    for b in batches:
+        artifacts[f"fp16_prefill_b{b}"] = export_artifact(
+            f"{model_name}_fp16_prefill_b{b}", cfg, fp_tree, None,
+            b, prefill_seq, out_dir,
+        )
+        artifacts[f"fp16_decode_b{b}"] = export_artifact(
+            f"{model_name}_fp16_decode_b{b}", cfg, fp_tree, None,
+            b, 1, out_dir,
+        )
+        artifacts[f"quik4_prefill_b{b}"] = export_artifact(
+            f"{model_name}_quik4_prefill_b{b}", cfg, q_tree, q_meta,
+            b, prefill_seq, out_dir,
+        )
+        artifacts[f"quik4_decode_b{b}"] = export_artifact(
+            f"{model_name}_quik4_decode_b{b}", cfg, q_tree, q_meta,
+            b, 1, out_dir,
+        )
+    # Speculative-decoding support (the paper's future-work §5): a
+    # "verify" artifact scores K draft tokens in one call — same cached
+    # forward, S_new = K.  QUIK-4B drafts with decode_b1; FP16 verifies.
+    spec_k = 4
+    artifacts["fp16_verify_b1"] = export_artifact(
+        f"{model_name}_fp16_verify_b1", cfg, fp_tree, None,
+        1, spec_k, out_dir,
+    )
+    artifacts["quik4_verify_b1"] = export_artifact(
+        f"{model_name}_quik4_verify_b1", cfg, q_tree, q_meta,
+        1, spec_k, out_dir,
+    )
+    if kernel_variant:
+        # Pallas-kernel lowering proof: the fused QUIK kernels inside the
+        # same HLO (interpret-mode grids become HLO loops — slower to run,
+        # numerically identical; the runtime test checks it against quik4).
+        artifacts["quik4_kernels_prefill_b1"] = export_artifact(
+            f"{model_name}_quik4_kernels_prefill_b1", cfg, q_tree, q_meta,
+            1, 16, out_dir, use_kernels=True,
+        )
+
+    return {
+        "config": {
+            "family": cfg.family, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+        },
+        "train_final_loss": losses[-1] if losses else None,
+        "artifacts": artifacts,
+    }
+
+
+def write_quant_goldens(out_dir: pathlib.Path) -> None:
+    """Cross-language golden vectors: the Rust quant substrate must match
+    the Python oracle bit-for-bit on these (rust/tests/quant_substrate.rs).
+    """
+    from .kernels import ref as kref
+
+    r = np.random.default_rng(20240501)
+    m, k, n = 4, 16, 6
+    x = (r.normal(size=(m, k)) * 3).astype(np.float32)
+    w = r.normal(size=(n, k)).astype(np.float32)
+    golden: dict = {"m": m, "k": k, "n": n, "x": x.flatten().tolist(),
+                    "w": w.flatten().tolist(), "cases": {}}
+    for bits in (4, 8):
+        qa = kref.quantize_acts_ref(jnp.asarray(x), bits)
+        qw = kref.quantize_weights_ref(jnp.asarray(w), bits, 0)
+        acc = kref.int_matmul_ref(qa.q, qw.w_int)
+        y = kref.dequantize_ref(acc, qa.scale, qa.zero, qw.scale_w,
+                                qw.w_reduced, bits)
+        golden["cases"][str(bits)] = {
+            "q": np.asarray(qa.q).flatten().astype(int).tolist(),
+            "scale": np.asarray(qa.scale).tolist(),
+            "zero": np.asarray(qa.zero).tolist(),
+            "w_int": np.asarray(qw.w_int).flatten().astype(int).tolist(),
+            "scale_w": np.asarray(qw.scale_w).tolist(),
+            "w_reduced": np.asarray(qw.w_reduced).tolist(),
+            "acc": np.asarray(acc).flatten().astype(int).tolist(),
+            "y": np.asarray(y).flatten().tolist(),
+        }
+    (out_dir / "quant_golden.json").write_text(json.dumps(golden))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    ap.add_argument("--models", nargs="*", default=["llama-s"])
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--no-kernel-variant", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"models": {}}
+    for name in args.models:
+        print(f"[aot] building artifacts for {name}")
+        manifest["models"][name] = build_model_artifacts(
+            name, out_dir, train_steps=args.train_steps,
+            kernel_variant=not args.no_kernel_variant,
+        )
+
+    # Paper-scale shape table for Rust device/memory model parity tests.
+    (out_dir / "model_zoo.json").write_text(
+        json.dumps(presets.PAPER_SCALE, indent=1)
+    )
+    write_quant_goldens(out_dir)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

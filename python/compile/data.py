@@ -1,0 +1,127 @@
+"""Synthetic multi-domain corpus — stand-in for Pile / C4 / WikiText2 / PTB.
+
+The paper's pipeline touches four datasets: Pile (outlier calibration, 512
+random sentences), C4 (GPTQ calibration, 128×2048-token samples), and
+WikiText2 / PTB / C4 (perplexity evaluation).  None are available here, so
+we generate a corpus with the statistical properties that matter for the
+reproduction (DESIGN.md §2 Substitutions):
+
+* **Zipfian unigram marginals** — like natural text, a few tokens dominate;
+* **topic structure** — a mixture of per-topic first-order Markov chains
+  with sticky topic switching, so a trained model develops feature
+  directions that differ in magnitude (the raw material for activation
+  outliers);
+* **distinct splits** — each named split mixes topics with different
+  weights and uses a disjoint seed stream, standing in for the paper's
+  train/calibration/eval dataset separation.
+
+Splits: ``train`` (pretraining), ``pile`` (outlier calibration), ``c4``
+(GPTQ calibration + C4 eval), ``wikitext2`` and ``ptb`` (eval).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+VOCAB_SIZE = 256
+N_TOPICS = 8
+
+# Per-split (seed offset, topic temperature): eval splits lean on different
+# topic mixtures so they are genuinely held-out distributions.
+SPLITS = {
+    "train": (0, 1.0),
+    "pile": (1, 1.0),
+    "c4": (2, 0.8),
+    "wikitext2": (3, 1.2),
+    "ptb": (4, 1.5),
+}
+
+
+def _zipf_probs(n: int, s: float = 1.1) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-s)
+    return p / p.sum()
+
+
+@functools.lru_cache(maxsize=None)
+def _topic_chains(seed: int = 1234) -> np.ndarray:
+    """Per-topic Markov transition matrices ``[T, V, V]`` (row-stochastic).
+
+    Each topic prefers a different band of the vocabulary, superimposed on
+    a shared Zipfian backbone — so topics are distinguishable but share the
+    head of the distribution, like real text domains.
+    """
+    r = np.random.default_rng(seed)
+    zipf = _zipf_probs(VOCAB_SIZE)
+    chains = np.empty((N_TOPICS, VOCAB_SIZE, VOCAB_SIZE), np.float64)
+    for t in range(N_TOPICS):
+        # Topic bias: a smooth bump over a band of the vocab.
+        centers = (np.arange(VOCAB_SIZE) - (t + 0.5) * VOCAB_SIZE / N_TOPICS)
+        bias = np.exp(-0.5 * (centers / (VOCAB_SIZE / N_TOPICS)) ** 2)
+        base = zipf * (0.3 + bias)
+        # Row-dependent perturbation makes it a true first-order chain.
+        pert = r.gamma(2.0, size=(VOCAB_SIZE, VOCAB_SIZE))
+        m = base[None, :] * pert
+        chains[t] = m / m.sum(axis=1, keepdims=True)
+    return chains
+
+
+def make_corpus(split: str, n_tokens: int, seed: int = 0) -> np.ndarray:
+    """Generate ``n_tokens`` of the given split as ``int32[n_tokens]``."""
+    if split not in SPLITS:
+        raise KeyError(f"unknown split {split!r}; have {sorted(SPLITS)}")
+    seed_off, temp = SPLITS[split]
+    r = np.random.default_rng(977 * (seed_off + 1) + seed)
+    chains = _topic_chains()
+
+    # Split-specific topic mixture (temperature-skewed).
+    logits = r.normal(size=N_TOPICS) * temp
+    topic_probs = np.exp(logits - logits.max())
+    topic_probs /= topic_probs.sum()
+
+    # Pre-computed per-topic CDFs + a pre-drawn uniform stream make the
+    # sequential sampling loop a cheap searchsorted per token.
+    cdfs = np.cumsum(chains, axis=2)
+    uniforms = r.random(n_tokens)
+    out = np.empty(n_tokens, np.int32)
+    topic = int(r.choice(N_TOPICS, p=topic_probs))
+    tok = int(r.integers(VOCAB_SIZE))
+    stay = 0.995  # sticky topics → long coherent spans
+    i = 0
+    while i < n_tokens:
+        run = int(min(r.geometric(1 - stay), n_tokens - i))
+        cdf = cdfs[topic]
+        for j in range(i, i + run):
+            tok = min(int(np.searchsorted(cdf[tok], uniforms[j])), VOCAB_SIZE - 1)
+            out[j] = tok
+        i += run
+        topic = int(r.choice(N_TOPICS, p=topic_probs))
+    return out
+
+
+def batches(
+    tokens: np.ndarray, batch: int, seq: int, seed: int = 0
+) -> "np.ndarray":
+    """Random ``[batch, seq+1]`` windows (inputs + next-token targets)."""
+    r = np.random.default_rng(seed)
+    starts = r.integers(0, len(tokens) - seq - 1, size=batch)
+    return np.stack([tokens[s : s + seq + 1] for s in starts]).astype(np.int32)
+
+
+def eval_windows(tokens: np.ndarray, seq: int) -> np.ndarray:
+    """Deterministic non-overlapping eval windows ``[n, seq+1]``."""
+    n = (len(tokens) - 1) // seq
+    out = np.empty((n, seq + 1), np.int32)
+    for i in range(n):
+        out[i] = tokens[i * seq : i * seq + seq + 1]
+    return out
+
+
+def calibration_sequences(
+    split: str, n_seq: int, seq: int, seed: int = 0
+) -> np.ndarray:
+    """Paper-style calibration draws (e.g. 512 Pile sentences, 128 C4 seqs)."""
+    corpus = make_corpus(split, n_seq * (seq + 1) + seq, seed=seed)
+    return batches(corpus, n_seq, seq, seed=seed + 1)

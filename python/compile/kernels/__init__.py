@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the QUIK mixed-precision pipeline.
+
+Modules:
+  ref          pure-jnp correctness oracles (ground truth for pytest)
+  quant        fused per-token asymmetric quantization (+ v1 unfused baseline)
+  matmul       INT4/INT8 tiled matmul with fused dequantization epilogue
+  quik_linear  the full Algorithm-1 linear layer composing the above
+  norm_quant   fused RMSNorm + split + quantize (extension, DESIGN.md)
+"""
+from . import matmul, norm_quant, quant, quik_linear, ref  # noqa: F401

@@ -1,0 +1,255 @@
+"""Pallas integer matmul kernels with fused dequantization epilogue.
+
+The paper's compute backbone is a CUTLASS INT4/INT8 tensor-core MatMul with
+INT32 accumulation, plus a custom *epilogue* that applies the scale/zero
+correction (paper Eq. 1) before the accumulator tile ever leaves registers
+(§3.4 "Dequantization Epilogue").  The TPU/Pallas rethink targets the MXU:
+
+* the grid is ``(M/bm, N/bn, K/bk)`` with the K axis innermost so the int32
+  accumulator tile stays VMEM-resident across the whole reduction;
+* ``jnp.dot(..., preferred_element_type=int32)`` maps onto the MXU systolic
+  array (int8 operands — the INT4 values are int8-carried in interpret
+  mode, packed as nibbles only in the storage format);
+* the dequantization epilogue — and the accumulation of the FP outlier
+  MatMul result — runs on the final K step, before the single HBM
+  write-out: the exact analogue of CUTLASS's pre-commit register epilogue.
+
+``int_matmul`` (no epilogue) + ``dequantize_acc`` reproduce the *unfused*
+"version 2" pipeline of Figure 6; ``int_matmul_dequant`` is the fully fused
+"version 3".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import half_range
+
+# MXU-shaped default tiles: 128×128 output tile, 128-deep reduction slab.
+# At int8 this is 3 × 128×128 ≤ 64 KiB of VMEM per step — far under the
+# ~16 MiB budget, leaving room for double buffering (see DESIGN.md §Perf).
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _pad2(x: jnp.ndarray, bm: int, bk: int) -> jnp.ndarray:
+    pm = (-x.shape[0]) % bm
+    pk = (-x.shape[1]) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    return x
+
+
+def _pad1(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    p = (-x.shape[0]) % b
+    if p:
+        x = jnp.pad(x, ((0, p),))
+    return x
+
+
+def _blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int):
+    bm = min(bm, m) if m else bm
+    bn = min(bn, n) if n else bn
+    bk = min(bk, k) if k else bk
+    return bm, bn, bk
+
+
+def _int_mm_kernel(qx_ref, qw_ref, out_ref, acc_ref):
+    """Plain INT×INT tiled matmul, int32 accumulation in VMEM scratch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        qx_ref[...].astype(jnp.int32),
+        qw_ref[...].astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _commit():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def int_matmul(
+    qx: jnp.ndarray,
+    qw: jnp.ndarray,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jnp.ndarray:
+    """``qx[M,K] @ qw[N,K]^T`` with int32 accumulation (no epilogue).
+
+    The CUTLASS-equivalent raw integer MatMul.  Zero padding on any axis is
+    harmless: padded int8 operands contribute 0 to the accumulator.
+    """
+    m, k = qx.shape
+    n = qw.shape[0]
+    bm, bn, bk = _blocks(m, n, k, block_m, block_n, block_k)
+    qxp, qwp = _pad2(qx, bm, bk), _pad2(qw, bn, bk)
+    mp, kp = qxp.shape
+    np_ = qwp.shape[0]
+    out = pl.pallas_call(
+        _int_mm_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=True,
+    )(qxp, qwp)
+    return out[:m, :n]
+
+
+def _dequant_kernel(
+    acc_ref, sa_ref, za_ref, sw_ref, wr_ref, out_ref, *, bits: int
+):
+    """Standalone dequantization pass (v2 pipeline): int32 tile → f32 tile."""
+    acc = acc_ref[...].astype(jnp.float32)
+    sa = sa_ref[...]
+    shift = za_ref[...] + half_range(bits) * sa
+    out_ref[...] = acc * sa[:, None] * sw_ref[...][None, :] + shift[:, None] * wr_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_m", "block_n"))
+def dequantize_acc(
+    acc: jnp.ndarray,
+    scale_act: jnp.ndarray,
+    zero_act: jnp.ndarray,
+    scale_w: jnp.ndarray,
+    w_reduced: jnp.ndarray,
+    bits: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jnp.ndarray:
+    """Unfused dequantization kernel (Algorithm 1 ``Dequantization``).
+
+    Reads the int32 accumulator back from HBM — exactly the round-trip the
+    fused epilogue of :func:`int_matmul_dequant` eliminates.
+    """
+    m, n = acc.shape
+    bm, bn, _ = _blocks(m, n, 1, block_m, block_n, 1)
+    accp = _pad2(acc, bm, bn)
+    sa, za = _pad1(scale_act, bm), _pad1(zero_act, bm)
+    sw, wr = _pad1(scale_w, bn), _pad1(w_reduced, bn)
+    mp, np_ = accp.shape
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, bits=bits),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(accp, sa, za, sw, wr)
+    return out[:m, :n]
+
+
+def _int_mm_dequant_kernel(
+    qx_ref, qw_ref, sa_ref, za_ref, sw_ref, wr_ref, fp_ref,
+    out_ref, acc_ref, *, bits: int,
+):
+    """Fused matmul + dequant epilogue + outlier-result accumulation (v3).
+
+    The epilogue fires on the last K step while the int32 accumulator tile
+    is still VMEM-resident; the FP outlier MatMul result (``fp_ref``) is
+    accumulated in the same breath (Algorithm 1 line 8), so the output tile
+    is written to HBM exactly once, fully dequantized.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        qx_ref[...].astype(jnp.int32),
+        qw_ref[...].astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        sa = sa_ref[...]
+        shift = za_ref[...] + half_range(bits) * sa
+        y = acc * sa[:, None] * sw_ref[...][None, :]
+        y += shift[:, None] * wr_ref[...][None, :]
+        out_ref[...] = y + fp_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "block_m", "block_n", "block_k")
+)
+def int_matmul_dequant(
+    qx: jnp.ndarray,
+    qw: jnp.ndarray,
+    scale_act: jnp.ndarray,
+    zero_act: jnp.ndarray,
+    scale_w: jnp.ndarray,
+    w_reduced: jnp.ndarray,
+    result_fp: jnp.ndarray,
+    bits: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jnp.ndarray:
+    """Fully fused QUIK MatMul (Figure 6 "version 3").
+
+    Args:
+      qx: ``int8[M, K_base]`` quantized activations (INT``bits`` values).
+      qw: ``int8[N, K_base]`` quantized weights.
+      scale_act, zero_act: ``f32[M]`` per-token metadata.
+      scale_w, w_reduced: ``f32[N]`` per-output weight metadata.
+      result_fp: ``f32[M, N]`` result of the outlier FP MatMul, accumulated
+        into the epilogue (pass zeros when there are no outliers).
+      bits: activation/weight bit width (4 or 8).
+
+    Returns:
+      ``f32[M, N]`` dequantized output — Algorithm 1's ``dequantFP +
+      resultFP`` computed with a single HBM write.
+    """
+    m, k = qx.shape
+    n = qw.shape[0]
+    bm, bn, bk = _blocks(m, n, k, block_m, block_n, block_k)
+    qxp, qwp = _pad2(qx, bm, bk), _pad2(qw, bn, bk)
+    sa, za = _pad1(scale_act, bm), _pad1(zero_act, bm)
+    sw, wr = _pad1(scale_w, bn), _pad1(w_reduced, bn)
+    fpp = _pad2(result_fp, bm, bn)
+    mp, kp = qxp.shape
+    np_ = qwp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_int_mm_dequant_kernel, bits=bits),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=True,
+    )(qxp, qwp, sa, za, sw, wr, fpp)
+    return out[:m, :n]

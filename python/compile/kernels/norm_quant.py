@@ -1,0 +1,120 @@
+"""Fused RMSNorm → outlier-split → quantize kernel (extension).
+
+In the QUIK forward pass every quantized linear layer's input comes out of
+a normalization (LLaMA blocks) — so the activation tensor is read from HBM
+by the norm, written back, then read again by the quantization kernel.
+Fusing the three stages removes one full HBM round-trip of the hidden
+state, exactly the class of optimization §3.4 applies inside the quant
+pipeline, extended one operator upstream (the same trick SmoothQuant uses
+to hide its migration scale in the LayerNorm).
+
+Per `(block_m, D)` VMEM-resident tile:
+
+1. RMSNorm: ``x * rsqrt(mean(x²) + ε) * g`` (gain already permuted to the
+   outlier-last order);
+2. static split: trailing ``n_outlier`` columns out in FP;
+3. per-token min/max + asymmetric quantization of the base block.
+
+Numerics: identical to ``norm → permute → split_quantize`` composed (the
+reference path in :func:`norm_split_quantize_ref`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import DEFAULT_BLOCK_M, _pad_rows, _quant_block
+from .ref import QuantizedActs, quantize_acts_ref
+
+
+def _norm_quant_kernel(
+    x_ref, g_ref, q_ref, fp_ref, scale_ref, zero_ref, *, bits: int, k_base: int, eps: float
+):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=1, keepdims=True)
+    xn = x * jax.lax.rsqrt(ms + eps) * g_ref[...][None, :]
+    base = xn[:, :k_base]
+    q, scale, zero = _quant_block(base, bits)
+    q_ref[...] = q
+    fp_ref[...] = xn[:, k_base:]
+    scale_ref[...] = scale
+    zero_ref[...] = zero
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_outlier", "bits", "block_m", "eps")
+)
+def norm_split_quantize(
+    x: jnp.ndarray,
+    gain: jnp.ndarray,
+    n_outlier: int,
+    bits: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    eps: float = 1e-6,
+) -> tuple[QuantizedActs, jnp.ndarray]:
+    """Fused RMSNorm + outlier split + per-token quantization.
+
+    Args:
+      x: ``f32[M, D]`` **outlier-permuted** residual-stream activations
+        (the permutation commutes with RMSNorm: the mean-square is
+        order-invariant, so permuting before the norm is exact as long as
+        ``gain`` is permuted identically).
+      gain: ``f32[D]`` RMSNorm gain in the same permuted order.
+      n_outlier: trailing FP16 outlier columns.
+      bits: activation bit width.
+
+    Returns:
+      ``(QuantizedActs over the base block, f32[M, n_outlier] outliers)``.
+    """
+    if n_outlier == 0:
+        # degenerate split: fuse norm+quant only
+        from .quant import quantize_acts
+
+        ms = jnp.mean(x * x, axis=1, keepdims=True)
+        xn = x * jax.lax.rsqrt(ms + eps) * gain[None, :]
+        return quantize_acts(xn, bits, block_m), xn[:, :0]
+    xp, m = _pad_rows(x, block_m)
+    mp, d = xp.shape
+    k_base = d - n_outlier
+    q, fp, scale, zero = pl.pallas_call(
+        functools.partial(
+            _norm_quant_kernel, bits=bits, k_base=k_base, eps=eps
+        ),
+        grid=(mp // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, k_base), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, n_outlier), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, k_base), jnp.int8),
+            jax.ShapeDtypeStruct((mp, n_outlier), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, gain)
+    return QuantizedActs(q=q[:m], scale=scale[:m], zero=zero[:m]), fp[:m]
+
+
+def norm_split_quantize_ref(
+    x: jnp.ndarray,
+    gain: jnp.ndarray,
+    n_outlier: int,
+    bits: int,
+    eps: float = 1e-6,
+) -> tuple[QuantizedActs, jnp.ndarray]:
+    """Unfused oracle: RMSNorm, then slice, then quantize."""
+    ms = jnp.mean(x * x, axis=1, keepdims=True)
+    xn = x * jax.lax.rsqrt(ms + eps) * gain[None, :]
+    k_base = x.shape[1] - n_outlier
+    return quantize_acts_ref(xn[:, :k_base], bits), xn[:, k_base:]

@@ -1,0 +1,204 @@
+"""Pallas quantization kernels — the paper's fused quantization pipeline.
+
+The paper's CUDA implementation (§3.4 "Quantization Fusion") assigns each
+input row to a CUDA block and performs three logical passes over a
+register/shared-memory resident row: min/max reduction over the non-outlier
+elements, quantization of the non-outliers, and moving the outliers to a
+separate buffer.  The TPU/Pallas rethink keeps the same HBM↔scratchpad
+schedule but expresses it with a ``BlockSpec`` over token tiles: each grid
+step holds a ``(block_m, K)`` activation tile in VMEM and performs the
+reduce + quantize + outlier-move entirely in-register before a single
+write-out.  (See DESIGN.md §3 Hardware adaptation.)
+
+Three pipeline variants reproduce the paper's Figure 6 kernel versions:
+
+* ``quantize_acts_v1``   — deliberately *unfused*: separate passes for the
+  outlier split, the min/max metadata scan and the quantization write, each
+  materializing an intermediate (paper's "version 1").
+* ``quantize_acts``      — the fused single-pass Pallas kernel ("version 2"
+  quantization; also used by version 3).
+* ``split_quantize``     — fused split + quantize: one VMEM pass emits the
+  packed base tensor, the FP outlier slice and the per-token metadata.
+
+All kernels run under ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.  INT4/INT8 values are
+carried in int8 containers; the byte-exact nibble packing used for memory
+accounting lives in ``rust/src/quant/int4.rs``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    SCALE_EPS,
+    QuantizedActs,
+    act_qrange,
+    half_range,
+)
+
+# Default token-tile height.  The paper tunes "rows per CUDA block" to 8-32
+# (§3.4 Parallelization Tuning); block_m plays the same role for the VMEM
+# tile and 64 rows keeps the tile ≪ 16 MB VMEM for K up to 28k (f32).
+DEFAULT_BLOCK_M = 64
+
+
+def _pad_rows(x: jnp.ndarray, block_m: int) -> tuple[jnp.ndarray, int]:
+    """Zero-pad the token axis up to a multiple of ``block_m``."""
+    m = x.shape[0]
+    pad = (-m) % block_m
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def _quant_block(x: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize a resident ``(bm, K)`` tile; returns (q, scale, zero)."""
+    lo = jnp.min(x, axis=1)
+    hi = jnp.max(x, axis=1)
+    scale = jnp.maximum((hi - lo) / float((1 << bits) - 1), SCALE_EPS)
+    q = jnp.round((x - lo[:, None]) / scale[:, None]) - half_range(bits)
+    qmin, qmax = act_qrange(bits)
+    return jnp.clip(q, qmin, qmax).astype(jnp.int8), scale, lo
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref, zero_ref, *, bits: int):
+    """Fused pass: reduce → quantize, all while the tile is VMEM-resident."""
+    q, scale, zero = _quant_block(x_ref[...], bits)
+    q_ref[...] = q
+    scale_ref[...] = scale
+    zero_ref[...] = zero
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_m"))
+def quantize_acts(
+    x: jnp.ndarray, bits: int, block_m: int = DEFAULT_BLOCK_M
+) -> QuantizedActs:
+    """Fused per-token asymmetric quantization (paper v2/v3 quant kernel).
+
+    One read of ``x`` from HBM, one write of the int output + metadata —
+    versus v1's two reads (min/max scan, quantize) and an extra round-trip
+    for the split (see ``quantize_acts_v1``).
+
+    Args:
+      x: ``f32[M, K_base]`` non-outlier activation block (outliers already
+        permuted out by the caller; use :func:`split_quantize` to fuse the
+        split too).
+      bits: activation bit width (4 or 8).
+      block_m: token-tile height (the "rows per block" tuning knob).
+
+    Returns:
+      :class:`QuantizedActs` with ``q`` int8-carried INT``bits`` values.
+    """
+    xp, m = _pad_rows(x, block_m)
+    mp, k = xp.shape
+    q, scale, zero = pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits),
+        grid=(mp // block_m,),
+        in_specs=[pl.BlockSpec((block_m, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, k), jnp.int8),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp)
+    return QuantizedActs(q=q[:m], scale=scale[:m], zero=zero[:m])
+
+
+def _split_quant_kernel(
+    x_ref, q_ref, fp_ref, scale_ref, zero_ref, *, bits: int, k_base: int
+):
+    """Fused split + quantize over a column-permuted ``(bm, K)`` tile.
+
+    The outlier columns are the trailing ``K - k_base`` columns (paper's
+    permuted layout, Fig. 4), so the "split" is a static in-register slice:
+    metadata reduction and quantization read only ``x[:, :k_base]`` while the
+    outlier move is a copy of ``x[:, k_base:]`` — the three CUDA passes of
+    §3.4 collapsed into one VMEM visit.
+    """
+    x = x_ref[...]
+    base = x[:, :k_base]
+    q, scale, zero = _quant_block(base, bits)
+    q_ref[...] = q
+    fp_ref[...] = x[:, k_base:]
+    scale_ref[...] = scale
+    zero_ref[...] = zero
+
+
+@functools.partial(jax.jit, static_argnames=("n_outlier", "bits", "block_m"))
+def split_quantize(
+    x: jnp.ndarray,
+    n_outlier: int,
+    bits: int,
+    block_m: int = DEFAULT_BLOCK_M,
+) -> tuple[QuantizedActs, jnp.ndarray]:
+    """Fused outlier split + per-token quantization (Algorithm 1 lines 3-4).
+
+    Args:
+      x: ``f32[M, K]`` column-permuted activations, outliers last.
+      n_outlier: number of trailing outlier columns kept in full precision.
+
+    Returns:
+      ``(QuantizedActs over the base block, f32[M, n_outlier] outliers)``.
+    """
+    if n_outlier == 0:
+        return quantize_acts(x, bits, block_m), x[:, :0]
+    xp, m = _pad_rows(x, block_m)
+    mp, k = xp.shape
+    k_base = k - n_outlier
+    q, fp, scale, zero = pl.pallas_call(
+        functools.partial(_split_quant_kernel, bits=bits, k_base=k_base),
+        grid=(mp // block_m,),
+        in_specs=[pl.BlockSpec((block_m, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_m, k_base), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, n_outlier), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, k_base), jnp.int8),
+            jax.ShapeDtypeStruct((mp, n_outlier), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp)
+    return QuantizedActs(q=q[:m], scale=scale[:m], zero=zero[:m]), fp[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("n_outlier", "bits"))
+def split_quantize_v1(
+    x: jnp.ndarray, n_outlier: int, bits: int
+) -> tuple[QuantizedActs, jnp.ndarray]:
+    """Unfused v1 pipeline: split, scan and quantize as *separate* passes.
+
+    Mirrors the paper's naive implementation (§3.4): one read+write for the
+    outlier part, one read+write for the base part, two more reads for the
+    per-token min/max and a final read+write for quantization.  Numerically
+    identical to :func:`split_quantize`; exists as the Figure 6 "version 1"
+    baseline and as a cross-check of the fused kernels.
+    """
+    k_base = x.shape[1] - n_outlier
+    # Pass 1+2: materialize the split (base copy + outlier copy).
+    base = jnp.asarray(x[:, :k_base])
+    fp = jnp.asarray(x[:, k_base:])
+    # Pass 3+4: metadata scans.
+    lo = jnp.min(base, axis=1)
+    hi = jnp.max(base, axis=1)
+    scale = jnp.maximum((hi - lo) / float((1 << bits) - 1), SCALE_EPS)
+    # Pass 5: quantization write.
+    q = jnp.round((base - lo[:, None]) / scale[:, None]) - half_range(bits)
+    qmin, qmax = act_qrange(bits)
+    q = jnp.clip(q, qmin, qmax).astype(jnp.int8)
+    return QuantizedActs(q=q, scale=scale, zero=lo), fp

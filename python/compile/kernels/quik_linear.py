@@ -1,0 +1,113 @@
+"""The complete QUIK linear layer — Algorithm 1 end to end.
+
+``quik_linear`` composes the L1 kernels into the paper's mixed-precision
+forward pass for one linear layer::
+
+    x (outlier-permuted) ──split──▶ x_base ──quant──▶ INT MatMul ─┐
+                          └───────▶ x_fp  ──FP MatMul─────────────┤
+                                                  dequant epilogue ▼
+                                                        y = dequantFP + resultFP
+
+Three ``version`` settings reproduce the Figure 6 kernel-fusion ablation:
+
+=======  =============================  ==============================
+version  quantization                   dequantization
+=======  =============================  ==============================
+1        unfused (5 logical passes)     unfused (extra int32 round-trip)
+2        fused split+quant kernel       unfused
+3        fused split+quant kernel       fused MatMul epilogue
+=======  =============================  ==============================
+
+All three are numerically identical (checked in
+``python/tests/test_quik_linear.py``); they differ only in memory traffic,
+which is what the device model (``rust/src/devicemodel``) charges for.
+
+This module is what L2 (``compile.model``) calls for every linear layer, so
+the whole pipeline lowers into the model's single HLO artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import matmul, quant
+from .ref import QuantizedWeights
+
+
+def _fp_matmul(x_fp: jnp.ndarray, w_fp: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Outlier (full-precision) MatMul; zeros when the layer has no outliers."""
+    if x_fp.shape[1] == 0:
+        return jnp.zeros((m, n), jnp.float32)
+    return jnp.matmul(x_fp.astype(jnp.float32), w_fp.T)
+
+
+def quik_linear(
+    x: jnp.ndarray,
+    qw: QuantizedWeights,
+    bias: jnp.ndarray | None = None,
+    version: int = 3,
+    block_m: int | None = None,
+    act_bits: int | None = None,
+) -> jnp.ndarray:
+    """QUIK mixed-precision linear layer ``y ≈ x @ W^T + b``.
+
+    Args:
+      x: ``f32[M, K]`` activations, column-permuted so outlier features are
+        the trailing ``qw.w_fp.shape[1]`` columns (the permutation is fixed
+        offline by calibration — see ``compile.quik.outliers``).
+      qw: offline-quantized weight package (GPTQ or RTN).
+      bias: optional ``f32[N]``.
+      version: fusion level 1/2/3 (see module docstring).
+      block_m: override the quantization token-tile height.
+      act_bits: activation bit width; defaults to ``qw.bits``.  16 selects
+        the weight-only path (FP activations × dequantized weights — the
+        W4A16 rows of Tables 10/11).
+
+    Returns:
+      ``f32[M, N]``.
+    """
+    if version not in (1, 2, 3):
+        raise ValueError(f"version must be 1, 2 or 3, got {version}")
+    a_bits = qw.bits if act_bits is None else act_bits
+    n_outlier = qw.w_fp.shape[1]
+    m = x.shape[0]
+    n = qw.w_int.shape[0]
+    bm = block_m or quant.DEFAULT_BLOCK_M
+    k_base = qw.w_int.shape[1]
+
+    if a_bits >= 16:
+        # Weight-only configuration: no activation quantization at all; the
+        # MatMul runs in FP on dequantized weights (memory-bound-only gains).
+        w_deq = qw.w_int.astype(jnp.float32) * qw.scale_w[:, None]
+        y = jnp.matmul(x[:, :k_base].astype(jnp.float32), w_deq.T)
+        y = y + _fp_matmul(x[:, k_base:], qw.w_fp, m, n)
+        if bias is not None:
+            y = y + bias[None, :]
+        return y
+
+    # --- split + quantize ---------------------------------------------
+    if version == 1:
+        qa, x_fp = quant.split_quantize_v1(x, n_outlier, a_bits)
+    else:
+        qa, x_fp = quant.split_quantize(x, n_outlier, a_bits, block_m=bm)
+
+    # --- FP outlier MatMul (always a separate MXU call, as in the paper
+    # where it is a separate cuBLAS/CUTLASS FP16 GEMM) -------------------
+    result_fp = _fp_matmul(x_fp, qw.w_fp, m, n)
+
+    # --- INT MatMul + dequantization -----------------------------------
+    if version == 3:
+        y = matmul.int_matmul_dequant(
+            qa.q, qw.w_int, qa.scale, qa.zero, qw.scale_w, qw.w_reduced,
+            result_fp, a_bits,
+        )
+    else:
+        acc = matmul.int_matmul(qa.q, qw.w_int)
+        y = matmul.dequantize_acc(
+            acc, qa.scale, qa.zero, qw.scale_w, qw.w_reduced, a_bits
+        )
+        y = y + result_fp
+
+    if bias is not None:
+        y = y + bias[None, :]
+    return y

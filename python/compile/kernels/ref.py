@@ -1,0 +1,199 @@
+"""Pure-jnp reference oracles for the QUIK kernels.
+
+Everything in this module is deliberately written as straight-line jnp with
+no Pallas, no fusion and no cleverness: it is the correctness ground truth
+that ``pytest python/tests`` checks the Pallas kernels (and, via golden
+files, the Rust substrate) against.
+
+Quantization scheme (paper §3.3):
+
+* **Activations** — asymmetric, per token (row).  For a row ``x`` and bit
+  width ``b``::
+
+      scale = (max(x) - min(x)) / (2^b - 1)
+      zero  = min(x)
+      q     = round((x - zero) / scale) - halfRange          # signed
+      halfRange = 2^(b-1)
+
+  so ``q`` lies in ``[-2^(b-1), 2^(b-1) - 1]`` and the reconstruction is
+  ``x ≈ scale * (q + halfRange) + zero``.
+
+* **Weights** — symmetric, per output channel::
+
+      scale = max(|w|) / (2^(b-1) - 1)
+      q     = clamp(round(w / scale), -(2^(b-1)-1), 2^(b-1)-1)
+
+* **Dequantization** (paper Eq. 1) — with ``acc = Σ_k wq[n,k] * xq[m,k]``
+  accumulated in int32::
+
+      y[m,n] = acc * scaleAct[m] * scaleW[n]
+             + (zeroAct[m] + halfRange * scaleAct[m]) * wReduced[n]
+
+  where ``wReduced[n] = scaleW[n] * Σ_k wq[n,k]`` is precomputed offline.
+
+Outlier handling follows the paper's permuted layout: the caller permutes
+columns so the ``n_outlier`` outlier features are the *last* columns of both
+the activation and the weight matrix; the split is then a plain slice.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+def half_range(bits: int) -> int:
+    """Signed offset used to re-center unsigned quantized activations."""
+    return 1 << (bits - 1)
+
+
+def act_qrange(bits: int) -> tuple[int, int]:
+    """Inclusive signed range for asymmetrically quantized activations."""
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def weight_qmax(bits: int) -> int:
+    """Symmetric weight quantization maximum magnitude (e.g. 7 for INT4)."""
+    return (1 << (bits - 1)) - 1
+
+
+# An epsilon floor for scales: a fully-constant token row would otherwise
+# produce scale == 0 and NaNs on the divide.
+SCALE_EPS = 1e-8
+
+
+class QuantizedActs(NamedTuple):
+    """Per-token asymmetrically quantized activations.
+
+    ``q`` carries INT``bits`` values in an int8 container (interpret-mode
+    stand-in for the packed format; see ``rust/src/quant/int4.rs`` for the
+    byte-exact packed layout used by the memory model).
+    """
+
+    q: jnp.ndarray        # int8[M, K_base]  values in act_qrange(bits)
+    scale: jnp.ndarray    # f32[M]
+    zero: jnp.ndarray     # f32[M]
+
+
+class QuantizedWeights(NamedTuple):
+    """Offline-quantized QUIK weight package for one linear layer.
+
+    Layout convention matches the paper's Figure 4/5: column-permuted so
+    outlier input features occupy the trailing columns.  ``w_int`` covers the
+    base (quantized) input features; ``w_fp`` the outlier columns kept in
+    full precision.
+    """
+
+    w_int: jnp.ndarray      # int8[N, K_base]   symmetric INTb weights
+    w_fp: jnp.ndarray       # f32[N, n_outlier] outlier columns (may be 0-wide)
+    scale_w: jnp.ndarray    # f32[N]            per-output symmetric scale
+    w_reduced: jnp.ndarray  # f32[N]            scale_w * Σ_k w_int[., k]
+    bits: int
+
+
+def quantize_acts_ref(x: jnp.ndarray, bits: int) -> QuantizedActs:
+    """Asymmetric per-token quantization of the *base* activation block."""
+    lo = jnp.min(x, axis=-1)
+    hi = jnp.max(x, axis=-1)
+    scale = jnp.maximum((hi - lo) / float((1 << bits) - 1), SCALE_EPS)
+    zero = lo
+    q = jnp.round((x - zero[:, None]) / scale[:, None]) - half_range(bits)
+    qmin, qmax = act_qrange(bits)
+    q = jnp.clip(q, qmin, qmax).astype(jnp.int8)
+    return QuantizedActs(q=q, scale=scale, zero=zero)
+
+
+def dequantize_acts_ref(qa: QuantizedActs, bits: int) -> jnp.ndarray:
+    """Reconstruct activations — used only by tests, never on the hot path."""
+    return (
+        qa.scale[:, None] * (qa.q.astype(jnp.float32) + half_range(bits))
+        + qa.zero[:, None]
+    )
+
+
+def quantize_weights_ref(
+    w: jnp.ndarray, bits: int, n_outlier: int = 0
+) -> QuantizedWeights:
+    """Symmetric per-output-channel RTN weight quantization.
+
+    ``w`` is ``[N, K]`` *already column-permuted* so the last ``n_outlier``
+    input features are outliers; those columns stay FP.  GPTQ-based
+    quantization (the accurate path) lives in ``compile.quik.gptq`` and
+    produces the same ``QuantizedWeights`` container.
+    """
+    k_base = w.shape[1] - n_outlier
+    w_base = w[:, :k_base]
+    w_fp = w[:, k_base:].astype(jnp.float32)
+    qmax = weight_qmax(bits)
+    scale = jnp.maximum(jnp.max(jnp.abs(w_base), axis=-1) / qmax, SCALE_EPS)
+    w_int = jnp.clip(jnp.round(w_base / scale[:, None]), -qmax, qmax).astype(
+        jnp.int8
+    )
+    w_reduced = scale * jnp.sum(w_int.astype(jnp.float32), axis=-1)
+    return QuantizedWeights(
+        w_int=w_int, w_fp=w_fp, scale_w=scale, w_reduced=w_reduced, bits=bits
+    )
+
+
+def int_matmul_ref(qx: jnp.ndarray, qw: jnp.ndarray) -> jnp.ndarray:
+    """INT×INT matmul with int32 accumulation: ``qx[M,K] @ qw[N,K]^T``."""
+    return jnp.matmul(
+        qx.astype(jnp.int32), qw.astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+
+
+def dequantize_ref(
+    acc: jnp.ndarray,
+    scale_act: jnp.ndarray,
+    zero_act: jnp.ndarray,
+    scale_w: jnp.ndarray,
+    w_reduced: jnp.ndarray,
+    bits: int,
+) -> jnp.ndarray:
+    """Paper Eq. 1 / Algorithm 1 ``Dequantization``: int32 → f32."""
+    x = acc.astype(jnp.float32) * scale_act[:, None] * scale_w[None, :]
+    shift = zero_act + half_range(bits) * scale_act
+    return x + shift[:, None] * w_reduced[None, :]
+
+
+def quik_linear_ref(
+    x: jnp.ndarray,
+    qw: QuantizedWeights,
+    bias: jnp.ndarray | None = None,
+    act_bits: int | None = None,
+) -> jnp.ndarray:
+    """Full QUIK linear layer, Algorithm 1 ``QUIK Matmul`` (unfused).
+
+    ``x`` is ``[M, K]`` column-permuted (outliers last).  Returns
+    ``[M, N] = dequant(intmm(quant(x_base), w_int)) + x_fp @ w_fp^T (+ bias)``.
+
+    ``act_bits`` defaults to the weight bit width (the paper's symmetric
+    4W4A / 8W8A settings); pass 16 for the weight-only W4A16 configuration
+    of Tables 10/11 (activations stay FP, the MatMul runs on dequantized
+    weights) or 8 for the mixed W4A8 ablation.
+    """
+    a_bits = qw.bits if act_bits is None else act_bits
+    k_base = qw.w_int.shape[1]
+    x_base, x_fp = x[:, :k_base], x[:, k_base:]
+    if a_bits >= 16:
+        w_deq = qw.w_int.astype(jnp.float32) * qw.scale_w[:, None]
+        y = jnp.matmul(x_base.astype(jnp.float32), w_deq.T)
+    else:
+        qa = quantize_acts_ref(x_base, a_bits)
+        acc = int_matmul_ref(qa.q, qw.w_int)
+        y = dequantize_ref(
+            acc, qa.scale, qa.zero, qw.scale_w, qw.w_reduced, a_bits
+        )
+    if x_fp.shape[1]:
+        y = y + jnp.matmul(x_fp.astype(jnp.float32), qw.w_fp.T)
+    if bias is not None:
+        y = y + bias[None, :]
+    return y
+
+
+def quant_error_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-row squared reconstruction error — calibration diagnostics."""
+    qa = quantize_acts_ref(x, bits)
+    return jnp.sum((dequantize_acts_ref(qa, bits) - x) ** 2, axis=-1)

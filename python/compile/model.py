@@ -1,0 +1,168 @@
+"""L2 entry point: calibration, model-level quantization, quantized forward.
+
+This is the layer the AOT exporter (``compile.aot``) and the experiment
+runner (``compile.experiments``) drive:
+
+* :func:`calibrate` — run the FP model over calibration sequences and
+  capture every linear layer's input (bounded sample per layer, matching
+  the paper's 512-Pile-sentence / 128-C4-sample recipe at tiny scale);
+* :func:`quantize_model` — resolve the per-layer precision plan via the
+  :class:`~compile.quik.policy.QuikPolicy` and quantize each linear with
+  the selected scheme (QUIK / RTN / SmoothQuant / GPTQ-weight-only /
+  SparseGPT / FP16);
+* :func:`make_forward` — the quantized forward, either through the jnp
+  oracle (fast eval) or through the Pallas kernels (the path that lowers
+  into the AOT HLO artifact).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from .modeling import common
+from .quik import policy as policy_mod
+from .quik import quantize as quantize_mod
+from .quik.quantize import QuantizedLinear
+
+# Rows of calibration activations retained per linear layer.  Enough for a
+# well-conditioned Hessian at tiny-model widths while bounding memory.
+MAX_CALIB_ROWS = 4096
+
+
+def calibrate(
+    params: common.Params,
+    cfg: common.ModelConfig,
+    calib_tokens: np.ndarray,
+    max_rows: int = MAX_CALIB_ROWS,
+) -> dict[str, np.ndarray]:
+    """Capture per-linear-layer inputs over ``[n_seq, S]`` calibration data.
+
+    Returns ``{layer_name: f32[rows, in_features]}`` with rows capped at
+    ``max_rows`` (first-come, which over random calibration sequences is an
+    unbiased sample).
+    """
+    store: dict[str, list] = {}
+    apply = common.make_capture_apply(store)
+    for i in range(calib_tokens.shape[0]):
+        seq = jnp.asarray(calib_tokens[i : i + 1])
+        common.forward(params, seq, cfg, apply_linear=apply)
+        if all(
+            sum(a.shape[0] for a in v) >= max_rows for v in store.values()
+        ):
+            break
+    return {
+        name: np.concatenate(chunks, axis=0)[:max_rows]
+        for name, chunks in store.items()
+    }
+
+
+@dataclass
+class QuantizedModel:
+    """A model ready for quantized inference / AOT export."""
+
+    cfg: common.ModelConfig
+    params: common.Params                 # original params (norms, embeds, FP fallbacks)
+    qlayers: dict[str, QuantizedLinear]   # per-linear quantized packages
+    policy: policy_mod.QuikPolicy
+    scheme: str
+
+    def forward(
+        self,
+        tokens: jnp.ndarray,
+        use_kernels: bool = False,
+        kv_caches=None,
+        position_offset: int = 0,
+    ):
+        apply = common.make_quantized_apply(self.qlayers, use_kernels=use_kernels)
+        return common.forward(
+            self.params, tokens, self.cfg, apply_linear=apply,
+            kv_caches=kv_caches, position_offset=position_offset,
+        )
+
+    def zero_outlier_layer_count(self) -> int:
+        """Number of linear layers running without any outliers (Table 5)."""
+        return sum(
+            1 for ql in self.qlayers.values()
+            if ql.qw is not None and ql.qw.w_fp.shape[1] == 0
+        )
+
+
+def quantize_model(
+    params: common.Params,
+    cfg: common.ModelConfig,
+    calib_inputs: dict[str, np.ndarray],
+    quik_policy: policy_mod.QuikPolicy,
+    scheme: str = "quik",
+    clip: bool = True,
+    alpha: float = 0.5,
+) -> QuantizedModel:
+    """Quantize every linear layer of the model per the policy.
+
+    ``calib_inputs`` comes from :func:`calibrate` — run on the *Pile* split
+    for outlier selection; the Hessians for GPTQ reuse the same captured
+    activations (at tiny scale the paper's separate C4 draw adds nothing).
+    """
+    from .quik import outliers as outliers_mod
+
+    qlayers: dict[str, QuantizedLinear] = {}
+    for li, lp in enumerate(params["layers"]):
+        for lname in cfg.linear_names():
+            section = "self_attn" if lname.endswith("_proj") and lname[0] in "qkvo" else "mlp"
+            full = f"layers.{li}.{section}.{lname}"
+            x = calib_inputs[full]
+            stats = outliers_mod.collect_stats(x)
+            plan = quik_policy.plan_for(full, x.shape[1], stats)
+            if scheme == "sparse_quik" and plan.sparsity == "dense":
+                eff_scheme = "quik" if plan.is_quantized else "fp16"
+            else:
+                eff_scheme = scheme
+            w = np.asarray(lp[lname]["w"])
+            b = np.asarray(lp[lname]["b"]) if "b" in lp[lname] else None
+            qlayers[full] = quantize_mod.quantize_linear(
+                w, x, plan, scheme=eff_scheme, bias=b, clip=clip, alpha=alpha,
+            )
+    return QuantizedModel(
+        cfg=cfg, params=params, qlayers=qlayers,
+        policy=quik_policy, scheme=scheme,
+    )
+
+
+def make_forward(qm: QuantizedModel | None, params, cfg, use_kernels=False):
+    """Uniform forward closure: quantized when ``qm`` is given, else FP16.
+
+    The cache-less path (what the eval harness hammers) is jitted once per
+    input shape; the KV-cache path stays eager (serving goes through the
+    AOT artifacts, not this closure).
+    """
+    import jax
+
+    if qm is None:
+        @jax.jit
+        def fp_jitted(tokens):
+            return common.forward(params, tokens, cfg)[0]
+
+        def fp_forward(tokens, kv_caches=None, position_offset=0):
+            if kv_caches is None and position_offset == 0:
+                return fp_jitted(tokens), None
+            return common.forward(
+                params, tokens, cfg, kv_caches=kv_caches,
+                position_offset=position_offset,
+            )
+        return fp_forward
+
+    @jax.jit
+    def q_jitted(tokens):
+        apply = common.make_quantized_apply(qm.qlayers, use_kernels=use_kernels)
+        return common.forward(qm.params, tokens, cfg, apply_linear=apply)[0]
+
+    def q_forward(tokens, kv_caches=None, position_offset=0):
+        if kv_caches is None and position_offset == 0:
+            return q_jitted(tokens), None
+        return qm.forward(
+            tokens, use_kernels=use_kernels, kv_caches=kv_caches,
+            position_offset=position_offset,
+        )
+    return q_forward

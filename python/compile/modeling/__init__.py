@@ -1,0 +1,19 @@
+"""L2 model zoo: decoder-only transformers in plain JAX.
+
+``common`` implements the three block flavours the paper evaluates —
+
+* **LLaMA-2 style**: RMSNorm, rotary embeddings, SwiGLU MLP
+  (gate/up/down — the down-projection input is the Hadamard product whose
+  variance blow-up drives the 8-bit down-proj policy, Fig. 10),
+* **OPT style**: LayerNorm, learned positions, GeLU MLP (fc1/fc2), biases,
+* **Falcon style**: parallel attention + MLP sharing one LayerNorm (the
+  layout that breaks SmoothQuant's scale folding, §4.1).
+
+Every linear layer is routed through an injectable ``apply_linear``
+callback, which is how the same forward serves FP16 evaluation,
+calibration capture, quantized evaluation and Pallas-kernel AOT export.
+``presets`` names the tiny reproduction configs and the paper-scale shape
+specs shared with ``rust/src/config``.
+"""
+
+from . import common, presets  # noqa: F401

@@ -1,0 +1,394 @@
+"""Decoder-only transformer forward passes (LLaMA-2 / OPT / Falcon styles).
+
+Pure-JAX (no flax): parameters are nested dicts of arrays, the forward is a
+function, and every linear layer goes through an ``apply_linear(name, x, p)``
+callback so one implementation serves four callers:
+
+1. FP16 evaluation (default callback: ``x @ w.T + b``),
+2. calibration capture (callback records layer inputs, then computes FP),
+3. quantized evaluation (callback looks up a ``QuantizedLinear``),
+4. AOT export (callback routes through the Pallas QUIK kernels so the
+   whole quantized pipeline lowers into one HLO artifact).
+
+The linear layer *names* (``q_proj``…``down_proj``/``fc2``) are the keys the
+precision policy matches on (``compile.quik.policy``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Params = dict
+ApplyLinear = Callable[[str, jnp.ndarray, Params], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description for all three families."""
+
+    family: str = "llama"        # "llama" | "opt" | "falcon"
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 352              # llama: SwiGLU hidden; opt/falcon: 4*d
+    max_seq: int = 256
+    # Outlier-feature seeding: a handful of residual channels get a large
+    # norm gain at init; training keeps them large, reproducing the
+    # documented 100x activation-outlier phenomenon at tiny scale (with
+    # gain 25 the trained models show ~25-70x feature-wise linf spread —
+    # DESIGN.md §2 Substitutions).
+    n_seeded_outliers: int = 6
+    outlier_gain: float = 25.0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def norm_type(self) -> str:
+        return "rmsnorm" if self.family == "llama" else "layernorm"
+
+    @property
+    def has_bias(self) -> bool:
+        return self.family == "opt"
+
+    @property
+    def parallel_attn(self) -> bool:
+        return self.family == "falcon"
+
+    def linear_names(self) -> list[str]:
+        """Names of the per-block linear layers, in forward order."""
+        attn = ["q_proj", "k_proj", "v_proj", "o_proj"]
+        if self.family == "llama":
+            mlp = ["gate_proj", "up_proj", "down_proj"]
+        else:
+            mlp = ["fc1", "fc2"]
+        return attn + mlp
+
+    def linear_shape(self, name: str) -> tuple[int, int]:
+        """``(out_features, in_features)`` of a per-block linear layer."""
+        d, f = self.d_model, self.d_ff
+        return {
+            "q_proj": (d, d), "k_proj": (d, d), "v_proj": (d, d),
+            "o_proj": (d, d),
+            "gate_proj": (f, d), "up_proj": (f, d), "down_proj": (d, f),
+            "fc1": (f, d), "fc2": (d, f),
+        }[name]
+
+    def num_params(self) -> int:
+        n = self.vocab * self.d_model  # tied embedding / lm head
+        norm_width = self.d_model * (2 if self.norm_type == "layernorm" else 1)
+        for _ in range(self.n_layers):
+            for name in self.linear_names():
+                o, i = self.linear_shape(name)
+                n += o * i + (o if self.has_bias else 0)
+            n += norm_width * (1 if self.parallel_attn else 2)
+        n += norm_width  # final norm
+        if self.family == "opt":
+            n += self.max_seq * self.d_model  # learned positions
+        return n
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Initialize parameters (scaled-normal init, tied LM head)."""
+    r = np.random.default_rng(seed)
+
+    def dense(o, i, std=None):
+        std = std if std is not None else (1.0 / np.sqrt(i))
+        return jnp.asarray(r.normal(0.0, std, size=(o, i)).astype(np.float32))
+
+    p: Params = {
+        "embed": dense(cfg.vocab, cfg.d_model, std=0.02 * np.sqrt(cfg.d_model)),
+        "final_norm": _init_norm(cfg, r),
+        "layers": [],
+    }
+    if cfg.family == "opt":
+        p["pos_embed"] = dense(cfg.max_seq, cfg.d_model, std=0.02)
+    for _ in range(cfg.n_layers):
+        lp: Params = {"attn_norm": _init_norm(cfg, r)}
+        if not cfg.parallel_attn:
+            lp["mlp_norm"] = _init_norm(cfg, r)
+        for name in cfg.linear_names():
+            o, i = cfg.linear_shape(name)
+            lp[name] = {"w": dense(o, i)}
+            if cfg.has_bias:
+                lp[name]["b"] = jnp.zeros(o, jnp.float32)
+        p["layers"].append(lp)
+    return p
+
+
+def _init_norm(cfg: ModelConfig, r: np.random.Generator) -> Params:
+    """Norm gain with seeded outlier channels (see ModelConfig docstring)."""
+    g = np.ones(cfg.d_model, np.float32)
+    if cfg.n_seeded_outliers:
+        idx = r.choice(cfg.d_model, cfg.n_seeded_outliers, replace=False)
+        g[idx] = cfg.outlier_gain
+    out: Params = {"g": jnp.asarray(g)}
+    if cfg.norm_type == "layernorm":
+        out["b"] = jnp.zeros(cfg.d_model, jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def norm(x: jnp.ndarray, p: Params, kind: str) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + 1e-6) * p["g"]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * p["g"] + p["b"]
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """Rotary position embedding over ``[B, H, S, Dh]``."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _default_apply(name: str, x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    y = jnp.matmul(x, p["w"].T)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def attention(
+    x: jnp.ndarray,
+    lp: Params,
+    cfg: ModelConfig,
+    apply_linear: ApplyLinear,
+    prefix: str,
+    positions: jnp.ndarray,
+    kv_cache: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    causal_offset: int = 0,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Causal multi-head attention ``[B, S, D] → [B, S, D]``.
+
+    When ``kv_cache=(k_past, v_past)`` is given (decode path) the new keys
+    and values are appended and attention spans the concatenation; the
+    updated cache is returned either way.
+    """
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    flat = x.reshape(b * s, d)
+
+    def lin(name):
+        return apply_linear(f"{prefix}.{name}", flat, lp[name]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = lin("q_proj"), lin("k_proj"), lin("v_proj")
+    if cfg.family == "llama" or cfg.family == "falcon":
+        q = rope(q, positions)
+        k = rope(k, positions)
+    if kv_cache is not None:
+        k = jnp.concatenate([kv_cache[0], k], axis=2)
+        v = jnp.concatenate([kv_cache[1], v], axis=2)
+    t = k.shape[2]
+
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / np.sqrt(dh)
+    # Causal mask: query i (absolute position causal_offset + i) attends to
+    # keys with absolute position ≤ its own.
+    qpos = jnp.arange(s)[:, None] + causal_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= qpos
+    scores = jnp.where(mask[None, None], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bhtd->bhsd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, d)
+    out = apply_linear(f"{prefix}.o_proj", ctx, lp["o_proj"]).reshape(b, s, d)
+    return out, (k, v)
+
+
+def mlp(
+    x: jnp.ndarray, lp: Params, cfg: ModelConfig,
+    apply_linear: ApplyLinear, prefix: str,
+) -> jnp.ndarray:
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    if cfg.family == "llama":
+        gate = apply_linear(f"{prefix}.gate_proj", flat, lp["gate_proj"])
+        up = apply_linear(f"{prefix}.up_proj", flat, lp["up_proj"])
+        # SwiGLU: the Hadamard product multiplies the two branches' variances
+        # together — the root cause of the down-proj sensitivity (Fig. 10).
+        hidden = jax.nn.silu(gate) * up
+        out = apply_linear(f"{prefix}.down_proj", hidden, lp["down_proj"])
+    else:
+        hidden = jax.nn.gelu(apply_linear(f"{prefix}.fc1", flat, lp["fc1"]))
+        out = apply_linear(f"{prefix}.fc2", hidden, lp["fc2"])
+    return out.reshape(b, s, d)
+
+
+def forward(
+    params: Params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    apply_linear: ApplyLinear = _default_apply,
+    kv_caches: list | None = None,
+    position_offset: int = 0,
+) -> tuple[jnp.ndarray, list]:
+    """Full forward ``int32[B, S] → f32[B, S, V]`` logits.
+
+    ``kv_caches``/``position_offset`` implement incremental decoding: pass
+    the caches returned by the prefill call and ``offset = context length``.
+    Returns ``(logits, new_kv_caches)``.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s) + position_offset
+    if cfg.family == "opt":
+        x = x + params["pos_embed"][positions]
+
+    new_caches = []
+    for li, lp in enumerate(params["layers"]):
+        prefix = f"layers.{li}"
+        cache = kv_caches[li] if kv_caches is not None else None
+        if cfg.parallel_attn:
+            # Falcon: one shared norm feeds attention AND the MLP — the
+            # layout that defeats SmoothQuant's LayerNorm scale folding.
+            h = norm(x, lp["attn_norm"], cfg.norm_type)
+            attn_out, new_cache = attention(
+                h, lp, cfg, apply_linear, f"{prefix}.self_attn", positions,
+                cache, position_offset,
+            )
+            mlp_out = mlp(h, lp, cfg, apply_linear, f"{prefix}.mlp")
+            x = x + attn_out + mlp_out
+        else:
+            h = norm(x, lp["attn_norm"], cfg.norm_type)
+            attn_out, new_cache = attention(
+                h, lp, cfg, apply_linear, f"{prefix}.self_attn", positions,
+                cache, position_offset,
+            )
+            x = x + attn_out
+            h = norm(x, lp["mlp_norm"], cfg.norm_type)
+            x = x + mlp(h, lp, cfg, apply_linear, f"{prefix}.mlp")
+        new_caches.append(new_cache)
+
+    x = norm(x, params["final_norm"], cfg.norm_type)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])  # tied head
+    return logits, new_caches
+
+
+def forward_with_cache(
+    params: Params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    apply_linear: ApplyLinear = _default_apply,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Serving-path forward with **fixed-size** KV-cache buffers.
+
+    This is the function the AOT artifacts are lowered from: the Rust
+    coordinator owns the cache buffers and threads them through PJRT calls.
+
+    Args:
+      tokens: ``int32[B, S_new]`` — the prompt for prefill (``cache_len=0``)
+        or a single generated token (``S_new=1``) for decode.
+      cache_k / cache_v: ``f32[L, B, H, T_max, Dh]`` persistent buffers.
+      cache_len: ``int32[]`` tokens already in the cache.
+
+    Returns:
+      ``(logits[B, S_new, V], cache_k, cache_v)`` with the new tokens'
+      keys/values written at ``cache_len .. cache_len+S_new``.
+    """
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    t_max = cache_k.shape[3]
+    x = params["embed"][tokens]
+    positions = jnp.arange(s) + cache_len
+    if cfg.family == "opt":
+        x = x + params["pos_embed"][positions]
+
+    def attn_cached(xn, lp, li, prefix):
+        flat = xn.reshape(b * s, cfg.d_model)
+
+        def lin(name):
+            return (
+                apply_linear(f"{prefix}.{name}", flat, lp[name])
+                .reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+            )
+
+        q, k, v = lin("q_proj"), lin("k_proj"), lin("v_proj")
+        if cfg.family in ("llama", "falcon"):
+            q = rope(q, positions)
+            k = rope(k, positions)
+        ck = jax.lax.dynamic_update_slice(
+            cache_k[li], k, (0, 0, cache_len, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache_v[li], v, (0, 0, cache_len, 0)
+        )
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, ck) / np.sqrt(dh)
+        qpos = jnp.arange(s)[:, None] + cache_len          # absolute
+        kpos = jnp.arange(t_max)[None, :]
+        mask = kpos <= qpos                                 # causal + length
+        scores = jnp.where(mask[None, None], scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,bhtd->bhsd", probs, cv)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, cfg.d_model)
+        out = apply_linear(f"{prefix}.o_proj", ctx, lp["o_proj"]).reshape(b, s, cfg.d_model)
+        return out, ck, cv
+
+    new_k, new_v = [], []
+    for li, lp in enumerate(params["layers"]):
+        prefix = f"layers.{li}"
+        if cfg.parallel_attn:
+            hn = norm(x, lp["attn_norm"], cfg.norm_type)
+            attn_out, ck, cv = attn_cached(hn, lp, li, f"{prefix}.self_attn")
+            mlp_out = mlp(hn, lp, cfg, apply_linear, f"{prefix}.mlp")
+            x = x + attn_out + mlp_out
+        else:
+            hn = norm(x, lp["attn_norm"], cfg.norm_type)
+            attn_out, ck, cv = attn_cached(hn, lp, li, f"{prefix}.self_attn")
+            x = x + attn_out
+            hn = norm(x, lp["mlp_norm"], cfg.norm_type)
+            x = x + mlp(hn, lp, cfg, apply_linear, f"{prefix}.mlp")
+        new_k.append(ck)
+        new_v.append(cv)
+
+    x = norm(x, params["final_norm"], cfg.norm_type)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def make_capture_apply(store: dict[str, list]) -> ApplyLinear:
+    """Calibration callback: record each linear layer's input, compute FP."""
+
+    def apply(name: str, x: jnp.ndarray, p: Params) -> jnp.ndarray:
+        store.setdefault(name, []).append(np.asarray(x))
+        return _default_apply(name, x, p)
+
+    return apply
+
+
+def make_quantized_apply(
+    qlayers: dict[str, "object"], use_kernels: bool = False
+) -> ApplyLinear:
+    """Quantized-inference callback: route through ``QuantizedLinear``s.
+
+    Layers absent from ``qlayers`` (e.g. excluded by policy) fall back to
+    the FP16 path using the original parameters.
+    """
+
+    def apply(name: str, x: jnp.ndarray, p: Params) -> jnp.ndarray:
+        ql = qlayers.get(name)
+        if ql is None:
+            return _default_apply(name, x, p)
+        return ql(x, use_kernels=use_kernels)
+
+    return apply

@@ -1,0 +1,83 @@
+"""Model zoo presets: tiny runnable configs + paper-scale shape specs.
+
+Two kinds of entries:
+
+* ``TINY`` — models small enough to pretrain on the synthetic corpus in
+  minutes on CPU; all accuracy experiments (Tables 1-5, 7-14) run on these.
+  The three llama sizes mirror the paper's 7B/13B/70B size sweep (Fig. 1).
+* ``PAPER_SCALE`` — the exact layer shapes of the models the paper
+  benchmarks; consumed by the analytic device/memory models (both here and
+  in ``rust/src/config`` — ``make artifacts`` emits ``model_zoo.json`` so
+  the Rust side can verify parity in its tests).
+
+Paper-scale notes: LLaMA2-70B uses grouped-query attention in reality; the
+shape spec keeps full MHA k/v projections scaled to the published parameter
+count (the FLOP/memory deltas are <2% and affect no conclusion — see
+DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from .common import ModelConfig
+
+# ---------------------------------------------------------------------------
+# tiny runnable models (trained on the synthetic corpus)
+# ---------------------------------------------------------------------------
+
+TINY: dict[str, ModelConfig] = {
+    # LLaMA-style size ladder (stands in for 7B / 13B / 70B).
+    "llama-s": ModelConfig(family="llama", d_model=96, n_layers=3, n_heads=4, d_ff=256),
+    "llama-m": ModelConfig(family="llama", d_model=128, n_layers=4, n_heads=4, d_ff=352),
+    "llama-l": ModelConfig(family="llama", d_model=192, n_layers=6, n_heads=6, d_ff=512),
+    # OPT-style and Falcon-style mid-size models.
+    "opt-m": ModelConfig(family="opt", d_model=128, n_layers=4, n_heads=4, d_ff=512),
+    "falcon-m": ModelConfig(family="falcon", d_model=128, n_layers=4, n_heads=4, d_ff=512),
+}
+
+# Default outlier budget for tiny models: 1/8 of d_model, matching the
+# paper's note that 256 outliers ≈ 12.5% of OPT-1.3b's hidden size.
+def tiny_outliers(cfg: ModelConfig) -> int:
+    return max(4, cfg.d_model // 8)
+
+
+# ---------------------------------------------------------------------------
+# paper-scale shape specs (for the device & memory models)
+# ---------------------------------------------------------------------------
+
+def _spec(family, d_model, n_layers, n_heads, n_kv_heads, d_ff, vocab, max_seq=2048):
+    return dict(
+        family=family, d_model=d_model, n_layers=n_layers, n_heads=n_heads,
+        n_kv_heads=n_kv_heads, d_ff=d_ff, vocab=vocab, max_seq=max_seq,
+    )
+
+# n_kv_heads < n_heads marks grouped-query (LLaMA2-70B, Falcon-40B/180B)
+# and multi-query (Falcon-7B) attention; mirrored in rust/src/config.
+PAPER_SCALE: dict[str, dict] = {
+    # OPT family (Zhang et al. 2022), vocab 50272.
+    "opt-1.3b": _spec("opt", 2048, 24, 32, 32, 8192, 50272),
+    "opt-6.7b": _spec("opt", 4096, 32, 32, 32, 16384, 50272),
+    "opt-13b": _spec("opt", 5120, 40, 40, 40, 20480, 50272),
+    "opt-30b": _spec("opt", 7168, 48, 56, 56, 28672, 50272),
+    "opt-66b": _spec("opt", 9216, 64, 72, 72, 36864, 50272),
+    # LLaMA-2 family (Touvron et al. 2023), vocab 32000.
+    "llama2-7b": _spec("llama", 4096, 32, 32, 32, 11008, 32000, 4096),
+    "llama2-13b": _spec("llama", 5120, 40, 40, 40, 13824, 32000, 4096),
+    "llama2-70b": _spec("llama", 8192, 80, 64, 8, 28672, 32000, 4096),
+    # Falcon family (TII UAE 2023), vocab 65024.
+    "falcon-7b": _spec("falcon", 4544, 32, 71, 1, 18176, 65024),
+    "falcon-40b": _spec("falcon", 8192, 60, 128, 8, 32768, 65024),
+    "falcon-180b": _spec("falcon", 14848, 80, 232, 8, 59392, 65024),
+}
+
+
+def paper_linear_shapes(name: str) -> list[tuple[str, int, int]]:
+    """Per-block linear layers ``(name, out, in)`` of a paper-scale model."""
+    s = PAPER_SCALE[name]
+    d, f = s["d_model"], s["d_ff"]
+    kv = s["n_kv_heads"] * (d // s["n_heads"])
+    attn = [("q_proj", d, d), ("k_proj", kv, d), ("v_proj", kv, d), ("o_proj", d, d)]
+    if s["family"] == "llama":
+        mlp = [("gate_proj", f, d), ("up_proj", f, d), ("down_proj", d, f)]
+    else:
+        mlp = [("fc1", f, d), ("fc2", d, f)]
+    return attn + mlp

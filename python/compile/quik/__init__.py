@@ -1,0 +1,15 @@
+"""Offline QUIK calibration and quantization algorithms (build-time only).
+
+Modules:
+  outliers    ℓ∞-norm outlier feature selection + column permutation (Fig. 4)
+  clipping    linear-search weight clipping over squared error (§3.2)
+  gptq        GPTQ with outlier-aware column reordering (§3.1-3.2)
+  policy      per-layer precision policy: 8-bit down-proj, zero-outlier
+              thresholds, outlier-count scaling (§3.2, §4.3.1, Table 5)
+  sparsegpt   SparseGPT extended with outlier columns: joint 2:4 + INT
+              quantization (§4.3.2)
+  baselines   RTN W4A4, SmoothQuant, GPTQ weight-only — comparison schemes
+  quantize    model-level driver tying policy + calibration + GPTQ together
+"""
+
+from . import baselines, clipping, gptq, outliers, policy, quantize, sparsegpt  # noqa: F401

@@ -1,0 +1,91 @@
+"""Baseline quantization schemes the paper compares against (Tables 1-4).
+
+* **RTN (round-to-nearest)** — plain symmetric per-output weight
+  quantization with no error compensation; with ``n_outlier = 0`` this is
+  the "0 Outliers" row of Table 10 that collapses to 10k+ perplexity.
+* **SmoothQuant** (Xiao et al. 2022) — migrates activation outlier
+  magnitude into the weights with a per-feature scale
+  ``s_k = max|X_k|^α / max|W_k|^(1-α)`` before quantizing both sides.
+  Close to lossless at 8 bits (Table 4) but breaks down at 4 bits
+  (Table 1: 1.8e4 perplexity on OPT-6.7B).
+* **GPTQ weight-only (W4A16)** — GPTQ weights, FP activations; the
+  memory-bound-only baseline of Tables 10/11.
+
+All emit the shared :class:`~compile.kernels.ref.QuantizedWeights`
+container so the same model forward / eval harness runs every scheme.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..kernels.ref import QuantizedWeights, weight_qmax
+
+
+def rtn_quantize(
+    w: np.ndarray, bits: int, n_outlier: int = 0
+) -> QuantizedWeights:
+    """Round-to-nearest symmetric per-output quantization (no Hessian)."""
+    w = np.asarray(w, np.float32)
+    k_base = w.shape[1] - n_outlier
+    base, w_fp = w[:, :k_base], w[:, k_base:]
+    qmax = weight_qmax(bits)
+    scale = np.maximum(np.max(np.abs(base), axis=1), 1e-8) / qmax
+    w_int = np.clip(np.round(base / scale[:, None]), -qmax, qmax).astype(np.int8)
+    w_reduced = scale * w_int.astype(np.float32).sum(axis=1)
+    return QuantizedWeights(
+        w_int=jnp.asarray(w_int),
+        w_fp=jnp.asarray(w_fp),
+        scale_w=jnp.asarray(scale),
+        w_reduced=jnp.asarray(w_reduced),
+        bits=bits,
+    )
+
+
+@dataclass(frozen=True)
+class SmoothQuantResult:
+    """SmoothQuant package: quantized scaled weights + the migration scale.
+
+    At runtime the activations must be divided by ``smooth_scale``
+    feature-wise before the quantized MatMul (in the real system this
+    divide is fused into the preceding LayerNorm — which is exactly why
+    SmoothQuant cannot handle Falcon-7B's shared layer norm, §4.1).
+    """
+
+    qw: QuantizedWeights
+    smooth_scale: np.ndarray  # f32[K]
+
+
+def smoothquant_scales(
+    act_linf: np.ndarray, w: np.ndarray, alpha: float
+) -> np.ndarray:
+    """Per-input-feature migration scale ``s_k = max|X_k|^α / max|W_k|^(1-α)``."""
+    act_linf = np.maximum(np.asarray(act_linf, np.float32), 1e-5)
+    w_linf = np.maximum(np.max(np.abs(w), axis=0), 1e-5)
+    s = act_linf**alpha / w_linf ** (1.0 - alpha)
+    return np.maximum(s, 1e-5).astype(np.float32)
+
+
+def smoothquant_quantize(
+    w: np.ndarray,
+    act_linf: np.ndarray,
+    bits: int,
+    alpha: float = 0.5,
+) -> SmoothQuantResult:
+    """SmoothQuant: migrate difficulty, then RTN-quantize ``W · diag(s)``.
+
+    No outlier columns — SmoothQuant's whole premise is that migration makes
+    them unnecessary (true at 8 bits, false at 4: Tables 1 & 4).
+    """
+    w = np.asarray(w, np.float32)
+    s = smoothquant_scales(act_linf, w, alpha)
+    qw = rtn_quantize(w * s[None, :], bits, n_outlier=0)
+    return SmoothQuantResult(qw=qw, smooth_scale=s)
+
+
+def smooth_activations(x: np.ndarray, s: np.ndarray) -> np.ndarray:
+    """Apply the inverse migration ``X / s`` (runtime side of SmoothQuant)."""
+    return np.asarray(x, np.float32) / s[None, :]

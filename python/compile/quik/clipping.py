@@ -1,0 +1,74 @@
+"""Weight clipping via linear search (paper §3.2 "Weight Clipping").
+
+Symmetric RTN/GPTQ weight quantization uses ``scale = max|w| / qmax``; a
+single large weight therefore inflates the scale and wastes quantization
+levels on the tail.  Clipping trims the distribution first: we search over
+shrink factors ``c ∈ (0, 1]`` applied to the scale and keep the one that
+minimizes the squared reconstruction error — the paper's "linear search
+over the clipping thresholds ... over the squared error".
+
+This is the cheap heuristic alternative to learned clipping (PACT/LSQ/
+OmniQuant); Table 11 shows it is worth ~0.1-0.2 perplexity on LLaMA-2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..kernels.ref import weight_qmax
+
+# Paper-style grid: 40 shrink factors from 1.0 down to ~0.3 of max|w|.
+DEFAULT_GRID = np.linspace(1.0, 0.3, 40)
+
+
+def quantize_rows_symmetric(
+    w: np.ndarray, bits: int, scale: np.ndarray
+) -> np.ndarray:
+    """Round-to-nearest symmetric quantization with a given per-row scale."""
+    qmax = weight_qmax(bits)
+    q = np.clip(np.round(w / scale[:, None]), -qmax, qmax)
+    return q
+
+
+def search_clip_scale(
+    w: np.ndarray,
+    bits: int,
+    grid: np.ndarray = DEFAULT_GRID,
+    h_diag: np.ndarray | None = None,
+) -> np.ndarray:
+    """Per-row clipped quantization scale minimizing squared error.
+
+    Args:
+      w: ``f32[N, K]`` weight rows (base columns only — outliers excluded,
+        which the paper notes also removes weight outliers from the scale).
+      bits: weight bit width.
+      grid: candidate shrink factors over ``max|w|``.
+      h_diag: optional ``f32[K]`` Hessian diagonal (``E[x_k^2]``); when
+        provided the error is input-weighted — the squared error *proxy of
+        the layer output*, which is what GPTQ ultimately cares about.
+
+    Returns:
+      ``f32[N]`` per-row scales (already shrunk; feed straight to GPTQ/RTN).
+    """
+    w = np.asarray(w, np.float32)
+    n = w.shape[0]
+    qmax = weight_qmax(bits)
+    base = np.maximum(np.max(np.abs(w), axis=1), 1e-8) / qmax  # unclipped
+    weight = h_diag[None, :] if h_diag is not None else 1.0
+
+    best_err = np.full(n, np.inf, np.float32)
+    best_scale = base.copy()
+    for c in grid:
+        scale = base * c
+        q = quantize_rows_symmetric(w, bits, scale)
+        err = np.sum(weight * (q * scale[:, None] - w) ** 2, axis=1)
+        better = err < best_err
+        best_err = np.where(better, err, best_err)
+        best_scale = np.where(better, scale, best_scale)
+    return best_scale
+
+
+def clip_error(w: np.ndarray, bits: int, scale: np.ndarray) -> float:
+    """Total squared reconstruction error for a given scale (diagnostics)."""
+    q = quantize_rows_symmetric(w, bits, scale)
+    return float(np.sum((q * scale[:, None] - w) ** 2))

@@ -1,0 +1,153 @@
+"""GPTQ weight quantization with outlier-aware column reordering (§3.1-3.2).
+
+GPTQ iterates over weight columns; each column is quantized in one shot and
+the *remaining* (right-hand) columns are updated with second-order
+information — the inverse-Hessian Cholesky factor — to compensate the error
+just introduced.  Error therefore accumulates toward the last columns.
+
+QUIK's twist (Figure 4): permute the activation-outlier columns to the end
+*before* running GPTQ.  Then
+
+1. the "difficult" outlier columns are never quantized at all (they stay
+   FP16 at runtime),
+2. the error accumulated by GPTQ lands exactly in those FP16 columns, and
+3. weight outliers no longer inflate the 4-bit quantization scale.
+
+The implementation is from scratch in float64 numpy (Cholesky-based, with
+dampening and lazy block updates exactly as in Frantar et al. 2022) and
+emits the same :class:`~compile.kernels.ref.QuantizedWeights` container the
+Pallas kernels consume.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..kernels.ref import QuantizedWeights, weight_qmax
+from . import clipping
+
+
+@dataclass(frozen=True)
+class GPTQConfig:
+    """Hyper-parameters of the GPTQ pass (paper defaults)."""
+
+    bits: int = 4
+    n_outlier: int = 0        # trailing FP16 columns (already permuted last)
+    damp: float = 0.01        # dampening fraction of mean Hessian diagonal
+    block_size: int = 128     # lazy-update block width
+    clip: bool = False        # linear-search weight clipping (§3.2)
+
+
+def hessian_from_calib(x: np.ndarray) -> np.ndarray:
+    """Layer Hessian ``H = 2 X^T X`` from calibration inputs ``[tokens, K]``.
+
+    The constant factor is irrelevant to GPTQ (it cancels in the update);
+    we keep the conventional ``2`` for parity with the reference code.
+    """
+    x = np.asarray(x, np.float64)
+    return 2.0 * (x.T @ x)
+
+
+def _inv_hessian_cholesky(h: np.ndarray, damp: float) -> np.ndarray:
+    """Upper Cholesky factor of ``H^{-1}`` with dead-column handling."""
+    h = np.array(h, np.float64, copy=True)
+    k = h.shape[0]
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    mean_diag = float(np.mean(np.diag(h)))
+    h[np.arange(k), np.arange(k)] += damp * mean_diag
+    hinv = np.linalg.inv(h)
+    # Upper-triangular Cholesky factor U with H^{-1} = U^T U — the
+    # orientation GPTQ's column updates consume (rows of U index the
+    # already-quantized column, columns the ones still to fix up).
+    return np.linalg.cholesky(hinv).T
+
+
+def gptq_quantize(
+    w: np.ndarray,
+    hessian: np.ndarray,
+    cfg: GPTQConfig,
+) -> tuple[QuantizedWeights, float]:
+    """Quantize ``w`` with GPTQ; outlier columns absorb the residual error.
+
+    Args:
+      w: ``f32[N, K]`` weight matrix, **column-permuted** so the trailing
+        ``cfg.n_outlier`` input features are the activation outliers.
+      hessian: ``[K, K]`` calibration Hessian in the *same permuted order*
+        (use :func:`~compile.quik.outliers.permute_hessian`).
+      cfg: GPTQ hyper-parameters.
+
+    Returns:
+      ``(QuantizedWeights, proxy_error)`` where ``proxy_error`` is the
+      Hessian-weighted squared error ``Σ err^2 / U_jj^2`` — the quantity
+      GPTQ minimizes, useful for ablation diagnostics.
+    """
+    w = np.array(w, np.float64, copy=True)
+    n, k = w.shape
+    k_base = k - cfg.n_outlier
+    if k_base <= 0:
+        raise ValueError("all columns marked outlier — nothing to quantize")
+    if hessian.shape != (k, k):
+        raise ValueError(f"hessian shape {hessian.shape} != ({k}, {k})")
+
+    u = _inv_hessian_cholesky(hessian, cfg.damp)
+    qmax = weight_qmax(cfg.bits)
+
+    # Per-output symmetric scale over the BASE columns only (outliers are
+    # excluded, removing weight outliers from the scale — §3.2), optionally
+    # clipped by linear search weighted by the Hessian diagonal.
+    base = w[:, :k_base].astype(np.float32)
+    if cfg.clip:
+        h_diag = np.asarray(np.diag(hessian)[:k_base], np.float32)
+        scale = clipping.search_clip_scale(base, cfg.bits, h_diag=h_diag)
+    else:
+        scale = np.maximum(np.max(np.abs(base), axis=1), 1e-8) / qmax
+    scale = scale.astype(np.float64)
+
+    w_int = np.zeros((n, k_base), np.int8)
+    proxy_err = 0.0
+
+    for start in range(0, k, cfg.block_size):
+        end = min(start + cfg.block_size, k)
+        w_blk = w[:, start:end]
+        err_blk = np.zeros((n, end - start), np.float64)
+        for j in range(start, end):
+            jj = j - start
+            col = w_blk[:, jj]
+            if j < k_base:
+                q = np.clip(np.round(col / scale), -qmax, qmax)
+                w_int[:, j] = q.astype(np.int8)
+                dq = q * scale
+            else:
+                # Outlier column: kept FP, no quantization error introduced.
+                dq = col
+            err = (col - dq) / u[j, j]
+            proxy_err += float(np.sum(err * err))
+            # In-block eager update of the remaining columns.
+            if jj + 1 < end - start:
+                w_blk[:, jj + 1 :] -= np.outer(err, u[j, j + 1 : end])
+            err_blk[:, jj] = err
+        # Lazy update of everything right of the block.
+        if end < k:
+            w[:, end:] -= err_blk @ u[start:end, end:]
+
+    w_fp = w[:, k_base:].astype(np.float32)
+    scale32 = scale.astype(np.float32)
+    w_reduced = scale32 * w_int.astype(np.float32).sum(axis=1)
+    qw = QuantizedWeights(
+        w_int=jnp.asarray(w_int),
+        w_fp=jnp.asarray(w_fp),
+        scale_w=jnp.asarray(scale32),
+        w_reduced=jnp.asarray(w_reduced),
+        bits=cfg.bits,
+    )
+    return qw, proxy_err
+
+
+def dequantized_weight(qw: QuantizedWeights) -> np.ndarray:
+    """Reconstruct the effective ``[N, K]`` FP weight (base dequant + FP)."""
+    base = np.asarray(qw.w_int, np.float32) * np.asarray(qw.scale_w)[:, None]
+    return np.concatenate([base, np.asarray(qw.w_fp)], axis=1)

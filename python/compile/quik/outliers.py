@@ -1,0 +1,113 @@
+"""Outlier feature selection and column permutation (paper §3.2, Fig. 4).
+
+Activation matrices in trained LLMs contain *outlier features*: a small set
+of columns whose magnitudes run up to 100× larger than the rest.  Following
+SmoothQuant's observation that these features are **fixed per layer across
+datasets**, QUIK extracts their indices *offline* from a small calibration
+set and permutes them to the end of the feature axis, so the runtime split
+is a static slice (no on-the-fly outlier detection à la LLM.int8()).
+
+This module computes, per linear layer:
+
+* the ℓ∞ norm (max |x|) of every input feature over the calibration set —
+  the outlier score used for selection;
+* per-feature variance — the sensitivity diagnostic behind Figure 10 and
+  the 8-bit down-projection policy;
+* the permutation placing the top-``n_outlier`` features last, plus its
+  inverse (needed to permute weight columns and, at runtime, incoming
+  activations).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CalibStats:
+    """Per-input-feature statistics of one linear layer's calibration input."""
+
+    linf: np.ndarray      # f32[K] max |x| per feature (outlier score)
+    variance: np.ndarray  # f32[K] per-feature variance (Fig. 10 diagnostic)
+    mean_sq: np.ndarray   # f32[K] E[x^2] per feature (Hessian diagonal / #rows)
+
+    @property
+    def k(self) -> int:
+        return self.linf.shape[0]
+
+
+def collect_stats(x: np.ndarray) -> CalibStats:
+    """Compute calibration statistics from ``x`` of shape ``[tokens, K]``."""
+    x = np.asarray(x, np.float32)
+    return CalibStats(
+        linf=np.max(np.abs(x), axis=0),
+        variance=np.var(x, axis=0),
+        mean_sq=np.mean(x * x, axis=0),
+    )
+
+
+def merge_stats(stats: list[CalibStats]) -> CalibStats:
+    """Merge statistics from multiple calibration batches (equal weights)."""
+    if not stats:
+        raise ValueError("no calibration statistics to merge")
+    return CalibStats(
+        linf=np.max([s.linf for s in stats], axis=0),
+        variance=np.mean([s.variance for s in stats], axis=0),
+        mean_sq=np.mean([s.mean_sq for s in stats], axis=0),
+    )
+
+
+def select_outliers(stats: CalibStats, n_outlier: int) -> np.ndarray:
+    """Indices of the ``n_outlier`` features with the largest ℓ∞ norm.
+
+    Returned sorted ascending (a stable layout for the permutation); the
+    paper selects by ℓ∞ norm following SmoothQuant / LLM.int8().
+    """
+    if n_outlier < 0 or n_outlier > stats.k:
+        raise ValueError(f"n_outlier={n_outlier} out of range for K={stats.k}")
+    if n_outlier == 0:
+        return np.empty(0, np.int64)
+    idx = np.argpartition(-stats.linf, n_outlier - 1)[:n_outlier]
+    return np.sort(idx)
+
+
+def outlier_permutation(k: int, outlier_idx: np.ndarray) -> np.ndarray:
+    """Permutation ``perm`` moving ``outlier_idx`` to the *end* of ``0..K``.
+
+    ``x_permuted = x[:, perm]``; base features keep their relative order,
+    outlier features keep theirs.  This is the reordering of Figure 4 that
+    lets GPTQ accumulate quantization error into the trailing FP16 columns.
+    """
+    outlier_idx = np.asarray(outlier_idx, np.int64)
+    mask = np.zeros(k, bool)
+    mask[outlier_idx] = True
+    base = np.nonzero(~mask)[0]
+    return np.concatenate([base, outlier_idx])
+
+
+def inverse_permutation(perm: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`outlier_permutation` (restores original order)."""
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0])
+    return inv
+
+
+def permute_hessian(h: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """Re-order a Hessian ``H = X^T X`` consistently with a column perm."""
+    return h[np.ix_(perm, perm)]
+
+
+def max_scale(stats: CalibStats, bits: int, n_outlier: int) -> float:
+    """Max per-token quantization scale proxy for the zero-outlier rule.
+
+    Table 5 drops outliers from layers whose "maximum of scale" falls below
+    a threshold ``T``.  The offline proxy is the widest calibration range of
+    the base block divided by the quantization levels: layers whose inputs
+    are tame (small scale) don't need FP16 outliers at all.
+    """
+    perm = outlier_permutation(stats.k, select_outliers(stats, n_outlier))
+    base_linf = stats.linf[perm[: stats.k - n_outlier]] if n_outlier else stats.linf
+    # Asymmetric per-token range is ≤ 2·max|x|; scale = range / (2^b - 1).
+    return float(2.0 * np.max(base_linf) / ((1 << bits) - 1))

@@ -1,0 +1,112 @@
+"""Per-layer precision policy (paper §3.2, §4.3.1, Tables 5/7/8).
+
+QUIK is sensitivity-aware: most linear layers run 4W4A with a fixed outlier
+budget, but layers whose inputs have pathological statistics get special
+treatment —
+
+* **Down-projection / FC2** layers (LLaMA's ``down_proj``, Falcon's
+  ``fc2``): the SwiGLU/GeLU Hadamard-product input has much larger variance
+  (Figure 10), so these layers are quantized to **8 bits** and their
+  outlier count is scaled up proportionally to the input width (≈3.5×,
+  Table 8's 896 vs 256).
+* **Zero-outlier layers** (Table 5): layers whose maximum quantization
+  scale falls below a threshold ``T`` drop their outliers entirely,
+  removing all mixed-precision overhead for those layers.
+
+The policy is a plain function from (layer name, input width, calibration
+stats) to a :class:`LayerPlan`, so schedulers/benches can query it without
+touching model code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from . import outliers as outliers_mod
+
+# Layer-name fragments identifying the sensitive second MLP projection.
+DOWN_PROJ_NAMES = ("down_proj", "fc2")
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    """Resolved precision decision for one linear layer."""
+
+    weight_bits: int          # 4, 8, or 16 (16 = keep FP)
+    act_bits: int             # 4, 8, or 16
+    n_outlier: int            # FP16 outlier feature columns
+    sparsity: str = "dense"   # "dense" | "2:4"
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.weight_bits < 16
+
+
+@dataclass(frozen=True)
+class QuikPolicy:
+    """Model-wide policy knobs (paper defaults: 256 outliers, 8-bit down-proj).
+
+    ``n_outlier`` is an absolute count as in the paper's main experiments
+    ("we employed 256 outliers across all linear modules"); it is clamped
+    to at most ``max_outlier_frac`` of the layer's input width so tiny
+    reproduction models keep a sensible base block.
+    """
+
+    weight_bits: int = 4
+    act_bits: int = 4
+    n_outlier: int = 256
+    down_proj_bits: int = 8           # Table 7: 4-bit down-proj loses >2 ppl
+    down_proj_outlier_mult: float = 3.5  # Table 8: 896 ≈ 3.5 × 256
+    zero_outlier_threshold: float = 0.0  # Table 5's T; 0 disables the rule
+    max_outlier_frac: float = 0.5
+    sparsity: str = "dense"
+    sparse_dense_layers: tuple[str, ...] = ()  # layer fragments kept dense
+
+    def plan_for(
+        self,
+        layer_name: str,
+        in_features: int,
+        stats: outliers_mod.CalibStats | None = None,
+    ) -> LayerPlan:
+        """Resolve the precision plan for one layer."""
+        is_down = any(f in layer_name for f in DOWN_PROJ_NAMES)
+        w_bits = self.down_proj_bits if is_down else self.weight_bits
+        a_bits = self.down_proj_bits if is_down else self.act_bits
+
+        n_out = self.n_outlier
+        if is_down and n_out > 0:
+            # Scale the outlier budget with the (wider) down-proj input.
+            n_out = int(round(n_out * self.down_proj_outlier_mult))
+        n_out = min(n_out, int(in_features * self.max_outlier_frac))
+
+        # Table 5 zero-outlier rule: drop outliers from tame layers.
+        if (
+            n_out > 0
+            and self.zero_outlier_threshold > 0
+            and stats is not None
+            and outliers_mod.max_scale(stats, a_bits, n_out)
+            < self.zero_outlier_threshold
+        ):
+            n_out = 0
+
+        sparsity = self.sparsity
+        if sparsity != "dense" and any(
+            f in layer_name for f in self.sparse_dense_layers
+        ):
+            sparsity = "dense"
+        return LayerPlan(
+            weight_bits=w_bits, act_bits=a_bits, n_outlier=n_out,
+            sparsity=sparsity,
+        )
+
+    def with_(self, **kw) -> "QuikPolicy":
+        """Functional update helper for ablation sweeps."""
+        return replace(self, **kw)
+
+
+# Canonical configurations used throughout the experiments.
+QUIK_4B = QuikPolicy()                                   # headline scheme
+QUIK_8B = QuikPolicy(weight_bits=8, act_bits=8, down_proj_bits=8)
+QUIK_4B_NO_OUTLIERS = QuikPolicy(n_outlier=0)
+QUIK_4B_DOWN4 = QuikPolicy(down_proj_bits=4)             # Table 7 ablation
+FP16 = QuikPolicy(weight_bits=16, act_bits=16, n_outlier=0, down_proj_bits=16)

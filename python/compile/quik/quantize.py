@@ -1,0 +1,154 @@
+"""Layer- and model-level quantization driver.
+
+Ties the calibration pipeline together for one linear layer::
+
+    calib acts ─▶ stats ─▶ outlier indices ─▶ permutation
+                                   │
+    weights ──▶ permute ──▶ Hessian (permuted) ──▶ GPTQ / RTN / SparseGPT
+                                   │
+                          QuantizedLinear  (consumed by L2 model + AOT)
+
+``QuantizedLinear`` is scheme-agnostic: QUIK (GPTQ + outliers), RTN,
+SmoothQuant and SparseGPT all produce one, and the same forward is used for
+perplexity evals and for HLO export, so every accuracy table runs through
+identical model code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..kernels import quik_linear as quik_linear_mod
+from ..kernels.ref import QuantizedWeights, quik_linear_ref
+from . import baselines, gptq, outliers, sparsegpt
+from .policy import LayerPlan
+
+Scheme = Literal["quik", "rtn", "smoothquant", "gptq_wonly", "sparse_quik", "fp16"]
+
+
+@dataclass
+class QuantizedLinear:
+    """One linear layer ready for quantized inference.
+
+    ``perm`` maps original feature order → permuted (outliers last); the
+    runtime applies ``x[:, perm]`` before the QUIK kernel.  For FP16 layers
+    everything except ``w`` / ``bias`` is ``None``.
+    """
+
+    plan: LayerPlan
+    scheme: Scheme
+    qw: QuantizedWeights | None          # None for fp16
+    perm: np.ndarray | None              # int64[K]
+    bias: jnp.ndarray | None
+    w_fp16: jnp.ndarray | None = None    # retained only for fp16 scheme
+    smooth_scale: np.ndarray | None = None  # SmoothQuant migration scale
+    sparse_mask: np.ndarray | None = None   # 2:4 keep-mask (diagnostics)
+
+    @property
+    def out_features(self) -> int:
+        if self.qw is not None:
+            return int(self.qw.w_int.shape[0])
+        return int(self.w_fp16.shape[0])
+
+    @property
+    def in_features(self) -> int:
+        if self.qw is not None:
+            return int(self.qw.w_int.shape[1] + self.qw.w_fp.shape[1])
+        return int(self.w_fp16.shape[1])
+
+    def __call__(self, x: jnp.ndarray, use_kernels: bool = False) -> jnp.ndarray:
+        """Forward ``[M, K] → [M, N]``.
+
+        ``use_kernels=True`` routes through the Pallas kernels (the path
+        that lowers into the AOT artifact); ``False`` uses the jnp oracle —
+        numerically identical, much faster under interpret-mode-free eval.
+        """
+        if self.scheme == "fp16":
+            y = jnp.matmul(x, self.w_fp16.T)
+            return y + self.bias[None, :] if self.bias is not None else y
+        if self.smooth_scale is not None:
+            x = x / jnp.asarray(self.smooth_scale)[None, :]
+        if self.perm is not None:
+            x = x[:, jnp.asarray(self.perm)]
+        act_bits = self.plan.act_bits
+        if use_kernels:
+            return quik_linear_mod.quik_linear(
+                x, self.qw, self.bias, version=3, act_bits=act_bits
+            )
+        return quik_linear_ref(x, self.qw, self.bias, act_bits=act_bits)
+
+
+def quantize_linear(
+    w: np.ndarray,
+    calib_x: np.ndarray,
+    plan: LayerPlan,
+    scheme: Scheme = "quik",
+    bias: np.ndarray | None = None,
+    clip: bool = True,
+    alpha: float = 0.5,
+    damp: float = 0.01,
+) -> QuantizedLinear:
+    """Quantize one linear layer from its weight and calibration inputs.
+
+    Args:
+      w: ``f32[N, K]`` original (unpermuted) weight.
+      calib_x: ``f32[tokens, K]`` calibration activations for this layer.
+      plan: resolved precision plan (bits / outliers / sparsity).
+      scheme: quantization algorithm (see module docstring).
+      bias: optional ``f32[N]``.
+      clip: enable linear-search weight clipping for the QUIK scheme.
+      alpha: SmoothQuant migration strength.
+      damp: GPTQ/SparseGPT Hessian dampening.
+    """
+    w = np.asarray(w, np.float32)
+    bias_j = jnp.asarray(bias) if bias is not None else None
+
+    if scheme == "fp16" or not plan.is_quantized:
+        return QuantizedLinear(
+            plan=plan, scheme="fp16", qw=None, perm=None,
+            bias=bias_j, w_fp16=jnp.asarray(w),
+        )
+
+    stats = outliers.collect_stats(calib_x)
+    n_out = min(plan.n_outlier, w.shape[1] - 1)
+
+    if scheme == "smoothquant":
+        res = baselines.smoothquant_quantize(
+            w, stats.linf, plan.weight_bits, alpha=alpha
+        )
+        return QuantizedLinear(
+            plan=plan, scheme=scheme, qw=res.qw, perm=None,
+            bias=bias_j, smooth_scale=res.smooth_scale,
+        )
+
+    idx = outliers.select_outliers(stats, n_out)
+    perm = outliers.outlier_permutation(w.shape[1], idx)
+    w_p = w[:, perm]
+
+    if scheme == "rtn":
+        qw = baselines.rtn_quantize(w_p, plan.weight_bits, n_out)
+        return QuantizedLinear(plan=plan, scheme=scheme, qw=qw, perm=perm, bias=bias_j)
+
+    h = gptq.hessian_from_calib(np.asarray(calib_x)[:, perm])
+
+    if scheme == "sparse_quik":
+        cfg = sparsegpt.SparseGPTConfig(
+            bits=plan.weight_bits, n_outlier=n_out, damp=damp
+        )
+        qw, mask, _ = sparsegpt.sparsegpt_quantize(w_p, h, cfg)
+        return QuantizedLinear(
+            plan=plan, scheme=scheme, qw=qw, perm=perm, bias=bias_j,
+            sparse_mask=mask,
+        )
+
+    # "quik" and "gptq_wonly" share the GPTQ pass; they differ only in the
+    # activation bits recorded in the plan (16 for weight-only).
+    cfg = gptq.GPTQConfig(
+        bits=plan.weight_bits, n_outlier=n_out, damp=damp, clip=clip
+    )
+    qw, _ = gptq.gptq_quantize(w_p, h, cfg)
+    return QuantizedLinear(plan=plan, scheme=scheme, qw=qw, perm=perm, bias=bias_j)

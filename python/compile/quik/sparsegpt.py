@@ -1,0 +1,161 @@
+"""SparseGPT extended with QUIK outliers: joint 2:4 sparsity + quantization.
+
+Paper §4.3.2: naively sparsifying an already-quantized model (or vice
+versa) wrecks accuracy; instead the SparseGPT algorithm (Frantar &
+Alistarh 2023) is extended to (a) jointly decide the 2:4 mask and the
+quantized values with shared second-order error compensation, and (b) keep
+the QUIK outlier feature columns dense *and* in FP16.
+
+The 2:4 pattern (two of every four consecutive weights zero) is what
+NVIDIA sparse tensor cores accelerate; here it is enforced along the input
+(column) dimension of the base block.  Mask selection per group of 4
+columns uses the SparseGPT saliency ``w² / [H^{-1}]_jj²``; pruned weights
+propagate their full value as error, surviving weights are quantized (or
+kept FP for the sparse-only configuration) and propagate their rounding
+error — all through the same inverse-Hessian Cholesky updates as GPTQ.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..kernels.ref import QuantizedWeights, weight_qmax
+from .gptq import _inv_hessian_cholesky
+
+
+@dataclass(frozen=True)
+class SparseGPTConfig:
+    """Joint sparsification + quantization hyper-parameters."""
+
+    bits: int | None = 4      # None → sparsify only, keep weights FP
+    n_outlier: int = 0        # trailing dense-FP16 outlier columns
+    prune_n: int = 2          # zeros per group
+    prune_m: int = 4          # group size  (2:4 — the hardware pattern)
+    damp: float = 0.01
+    block_size: int = 128
+
+
+def sparsegpt_quantize(
+    w: np.ndarray,
+    hessian: np.ndarray,
+    cfg: SparseGPTConfig,
+) -> tuple[QuantizedWeights, np.ndarray, float]:
+    """Jointly 2:4-sparsify and quantize ``w`` (outlier columns dense/FP).
+
+    Args:
+      w: ``f32[N, K]`` column-permuted weights (outliers last).
+      hessian: ``[K, K]`` permuted calibration Hessian.
+      cfg: see :class:`SparseGPTConfig`.
+
+    Returns:
+      ``(QuantizedWeights, mask, proxy_error)`` — ``mask`` is the boolean
+      keep-mask over the base block (``True`` = kept), guaranteed to satisfy
+      the ``prune_n:prune_m`` pattern on every full group; ``w_int`` is 0 at
+      pruned positions so the packed format stays valid.
+    """
+    w = np.array(w, np.float64, copy=True)
+    n, k = w.shape
+    k_base = k - cfg.n_outlier
+    if k_base <= 0:
+        raise ValueError("all columns marked outlier — nothing to sparsify")
+
+    u = _inv_hessian_cholesky(hessian, cfg.damp)
+    bits = cfg.bits
+    qmax = weight_qmax(bits) if bits is not None else 0
+
+    # Scale from the base block before any update (symmetric per-output).
+    if bits is not None:
+        scale = np.maximum(np.max(np.abs(w[:, :k_base]), axis=1), 1e-8) / qmax
+    else:
+        scale = np.ones(n)
+
+    keep = np.ones((n, k_base), bool)
+    w_q = np.zeros((n, k_base), np.float64)   # dequantized kept values
+    w_int = np.zeros((n, k_base), np.int8)
+    proxy_err = 0.0
+
+    for start in range(0, k, cfg.block_size):
+        end = min(start + cfg.block_size, k)
+        w_blk = w[:, start:end]
+        err_blk = np.zeros((n, end - start), np.float64)
+        mask_blk: np.ndarray | None = None
+        group_start = -1
+        for j in range(start, end):
+            jj = j - start
+            col = w_blk[:, jj]
+            if j < k_base:
+                # (Re)compute the prune mask at each group boundary, using
+                # the *updated* weights — SparseGPT's adaptive mask choice.
+                if j % cfg.prune_m == 0 and j + cfg.prune_m <= k_base:
+                    group_start = j
+                    g = w_blk[:, jj : jj + cfg.prune_m]
+                    d = np.diag(u)[j : j + cfg.prune_m]
+                    saliency = (g / d[None, :]) ** 2
+                    order = np.argsort(saliency, axis=1)
+                    gmask = np.ones((n, cfg.prune_m), bool)
+                    rows = np.arange(n)[:, None]
+                    gmask[rows, order[:, : cfg.prune_n]] = False
+                    keep[:, j : j + cfg.prune_m] = gmask
+                    mask_blk = gmask
+                in_group = (
+                    mask_blk is not None
+                    and group_start >= 0
+                    and group_start <= j < group_start + cfg.prune_m
+                )
+                kept = keep[:, j] if in_group else np.ones(n, bool)
+                keep[:, j] = kept
+                if bits is not None:
+                    q = np.clip(np.round(col / scale), -qmax, qmax)
+                    dq = np.where(kept, q * scale, 0.0)
+                    w_int[:, j] = np.where(kept, q, 0).astype(np.int8)
+                else:
+                    dq = np.where(kept, col, 0.0)
+                w_q[:, j] = dq
+            else:
+                dq = col  # dense FP outlier column
+            err = (col - dq) / u[j, j]
+            proxy_err += float(np.sum(err * err))
+            if jj + 1 < end - start:
+                w_blk[:, jj + 1 :] -= np.outer(err, u[j, j + 1 : end])
+            err_blk[:, jj] = err
+        if end < k:
+            w[:, end:] -= err_blk @ u[start:end, end:]
+
+    w_fp = w[:, k_base:].astype(np.float32)
+    scale32 = scale.astype(np.float32)
+    if bits is None:
+        # Sparse-FP configuration: encode kept FP values through an INT8
+        # container is not possible losslessly; callers use `w_q` instead.
+        bits_out = 16
+        w_reduced = np.zeros(n, np.float32)
+        w_int_out = w_int
+    else:
+        bits_out = bits
+        w_reduced = scale32 * w_int.astype(np.float32).sum(axis=1)
+        w_int_out = w_int
+    qw = QuantizedWeights(
+        w_int=jnp.asarray(w_int_out),
+        w_fp=jnp.asarray(w_fp),
+        scale_w=jnp.asarray(scale32),
+        w_reduced=jnp.asarray(w_reduced),
+        bits=bits_out,
+    )
+    return qw, keep, proxy_err
+
+
+def check_24_pattern(mask: np.ndarray, prune_n: int = 2, prune_m: int = 4) -> bool:
+    """Verify every full ``prune_m`` group keeps exactly ``m - n`` weights."""
+    n, k = mask.shape
+    full = (k // prune_m) * prune_m
+    if full == 0:
+        return True
+    groups = mask[:, :full].reshape(n, -1, prune_m)
+    return bool(np.all(groups.sum(axis=2) == prune_m - prune_n))
+
+
+def sparsity_ratio(mask: np.ndarray) -> float:
+    """Fraction of pruned weights in the base block."""
+    return float(1.0 - mask.mean())

@@ -1,0 +1,163 @@
+"""Tiny-model pretraining on the synthetic corpus (build-time only).
+
+The accuracy side of the reproduction needs *trained* models: activation
+outliers and the down-projection variance spike (Fig. 10) are properties of
+trained transformers, not of random init.  This module pretrains the
+``modeling.presets.TINY`` zoo on the synthetic corpus with a hand-rolled
+AdamW (no optax in the image) and caches checkpoints under
+``artifacts/checkpoints/`` keyed by a config/corpus fingerprint, so
+``make artifacts`` trains each model exactly once.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import data
+from .modeling import common, presets
+
+CKPT_DIR = pathlib.Path(__file__).resolve().parents[2] / "artifacts" / "checkpoints"
+
+
+# ---------------------------------------------------------------------------
+# loss / optimizer
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg):
+    """Mean next-token cross-entropy over a ``[B, S+1]`` batch."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits, _ = common.forward(params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * wd * p
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(params, opt_state, batch, lr, cfg):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+    params, opt_state = adamw_update(params, grads, opt_state, lr)
+    return params, opt_state, loss
+
+
+# ---------------------------------------------------------------------------
+# checkpoint (de)serialization
+# ---------------------------------------------------------------------------
+
+
+def _flatten(params, prefix=""):
+    out = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(params, list):
+        for i, v in enumerate(params):
+            out.update(_flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = np.asarray(params)
+    return out
+
+
+def _unflatten(flat: dict, cfg: common.ModelConfig):
+    """Rebuild the nested param dict from flat dotted keys."""
+    params = common.init_params(cfg, seed=0)  # template structure
+
+    def set_path(obj, path, value):
+        key = path[0]
+        if isinstance(obj, list):
+            key = int(key)
+        if len(path) == 1:
+            obj[key] = jnp.asarray(value)
+        else:
+            set_path(obj[key], path[1:], value)
+
+    for k, v in flat.items():
+        set_path(params, k.split("."), v)
+    return params
+
+
+def fingerprint(cfg: common.ModelConfig, steps: int, seed: int) -> str:
+    blob = json.dumps([cfg.__dict__, steps, seed], sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+# ---------------------------------------------------------------------------
+# the trainer
+# ---------------------------------------------------------------------------
+
+
+def train(
+    cfg: common.ModelConfig,
+    steps: int = 300,
+    batch: int = 16,
+    seq: int = 128,
+    lr_max: float = 3e-3,
+    seed: int = 0,
+    corpus_tokens: int = 400_000,
+    log_every: int = 50,
+    name: str = "model",
+) -> tuple[common.Params, list[float]]:
+    """Pretrain; returns ``(params, loss_curve)``.  Cached on disk."""
+    CKPT_DIR.mkdir(parents=True, exist_ok=True)
+    fp = fingerprint(cfg, steps, seed)
+    path = CKPT_DIR / f"{name}-{fp}.npz"
+    if path.exists():
+        flat = dict(np.load(path, allow_pickle=False))
+        losses = [float(x) for x in flat.pop("__loss_curve__")]
+        return _unflatten(flat, cfg), losses
+
+    corpus = data.make_corpus("train", corpus_tokens, seed=seed)
+    params = common.init_params(cfg, seed=seed)
+    opt_state = adamw_init(params)
+    losses = []
+    warmup = max(1, steps // 20)
+    for step in range(steps):
+        # linear warmup + cosine decay
+        if step < warmup:
+            lr = lr_max * (step + 1) / warmup
+        else:
+            frac = (step - warmup) / max(1, steps - warmup)
+            lr = lr_max * 0.5 * (1 + np.cos(np.pi * frac))
+        b = jnp.asarray(data.batches(corpus, batch, seq, seed=seed * 100_003 + step))
+        params, opt_state, loss = train_step(params, opt_state, b, lr, cfg)
+        losses.append(float(loss))
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            print(f"[train {name}] step {step:4d}  lr {lr:.2e}  loss {losses[-1]:.4f}")
+
+    flat = _flatten(params)
+    flat["__loss_curve__"] = np.asarray(losses, np.float32)
+    np.savez(path, **flat)
+    return params, losses
+
+
+def load_or_train(name: str, steps: int = 300, seed: int = 0, **kw):
+    """Train-or-load one of the ``presets.TINY`` models by name."""
+    cfg = presets.TINY[name]
+    params, losses = train(cfg, steps=steps, seed=seed, name=name, **kw)
+    return cfg, params, losses

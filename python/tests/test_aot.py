@@ -1,0 +1,113 @@
+"""AOT export path: HLO text, weight blobs, manifests, goldens.
+
+Uses an ultra-tiny config so the full train→quantize→lower→write pipeline
+runs in seconds, into a temp directory.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, data, model, train
+from compile.modeling import common
+from compile.quik import policy
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = common.ModelConfig(
+        family="llama", vocab=data.VOCAB_SIZE, d_model=32, n_layers=2,
+        n_heads=2, d_ff=48, max_seq=64, n_seeded_outliers=2, outlier_gain=8.0,
+    )
+    params, _ = train.train(cfg, steps=8, batch=4, seq=32,
+                            corpus_tokens=10_000, log_every=0,
+                            name="pytest-aot")
+    calib = data.calibration_sequences("pile", 4, 32, seed=0)[:, :-1]
+    ci = model.calibrate(params, cfg, calib, max_rows=256)
+    qm = model.quantize_model(params, cfg, ci, policy.QuikPolicy(n_outlier=4))
+
+    fp_tree, _ = aot.fp16_export_tree(params)
+    q_tree, q_meta = aot.quik_export_tree(qm)
+    fp_spec = aot.export_artifact("t_fp16", cfg, fp_tree, None, 1, 8, out)
+    q_spec = aot.export_artifact("t_quik", cfg, q_tree, q_meta, 1, 8, out)
+    return out, cfg, fp_spec, q_spec, params
+
+
+def test_hlo_text_is_parseable_hlo(exported):
+    out, _, fp_spec, q_spec, _ = exported
+    for spec in (fp_spec, q_spec):
+        text = (out / spec["hlo"]).read_text()
+        assert text.startswith("HloModule"), text[:60]
+        assert "ENTRY" in text
+
+
+def test_weights_are_parameters_not_constants(exported):
+    """The HLO must take every weight as a parameter (no giant constants)."""
+    out, _, fp_spec, _, params = exported
+    text = (out / fp_spec["hlo"]).read_text()
+    n_params = text.count("parameter(")
+    # weights + tokens + cache_k + cache_v + cache_len
+    assert n_params >= len(fp_spec["params"]) + 4
+    # no embedded weight-sized f32 constants: the file stays small
+    assert len(text) < 2_000_000
+
+
+def test_weight_blob_matches_manifest(exported):
+    out, _, fp_spec, q_spec, _ = exported
+    for spec in (fp_spec, q_spec):
+        blob = (out / spec["weights"]).read_bytes()
+        total = sum(p["nbytes"] for p in spec["params"])
+        assert len(blob) == total
+        # offsets are contiguous and ordered
+        off = 0
+        for p in spec["params"]:
+            assert p["offset"] == off
+            assert p["nbytes"] == int(np.prod(p["shape"])) * (1 if p["dtype"] == "s8" else 4)
+            off += p["nbytes"]
+
+
+def test_quik_blob_smaller_than_fp16(exported):
+    _, _, fp_spec, q_spec, _ = exported
+    fp_bytes = sum(p["nbytes"] for p in fp_spec["params"])
+    q_bytes = sum(p["nbytes"] for p in q_spec["params"])
+    assert q_bytes < fp_bytes * 0.7, (q_bytes, fp_bytes)
+
+
+def test_golden_file_consistent(exported):
+    out, cfg, fp_spec, _, params = exported
+    g = fp_spec["golden"]
+    blob = (out / g["file"]).read_bytes()
+    n_tok = int(np.prod(g["tokens_shape"]))
+    n_log = int(np.prod(g["logits_shape"]))
+    assert len(blob) == 4 * (n_tok + n_log)
+    tokens = np.frombuffer(blob[: n_tok * 4], np.int32).reshape(g["tokens_shape"])
+    logits = np.frombuffer(blob[n_tok * 4 :], np.float32).reshape(g["logits_shape"])
+    # re-run the forward in python: must match the stored golden
+    ck = jnp.zeros((cfg.n_layers, 1, cfg.n_heads, cfg.max_seq, cfg.d_head))
+    want, _, _ = common.forward_with_cache(
+        params, jnp.asarray(tokens), cfg, ck, jnp.zeros_like(ck), jnp.int32(0)
+    )
+    np.testing.assert_allclose(logits, np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_quik_export_tree_strips_fp_weights(exported):
+    """Quantized layers must not ship their FP16 weight in the artifact."""
+    _, _, _, q_spec, _ = exported
+    names = [p["name"] for p in q_spec["params"]]
+    # every 'w_int' present; no bare '<linear>.w' for quantized layers
+    assert any("w_int" in n for n in names)
+    for n in names:
+        if n.endswith(".w"):
+            # only allowed for fp16-fallback layers; QUIK_4B quantizes all
+            raise AssertionError(f"FP weight leaked into quik artifact: {n}")
+
+
+def test_dtypes_are_supported_set(exported):
+    _, _, fp_spec, q_spec, _ = exported
+    for spec in (fp_spec, q_spec):
+        for p in spec["params"] + spec["inputs"] + spec["outputs"]:
+            assert p["dtype"] in ("f32", "s32", "s8"), p

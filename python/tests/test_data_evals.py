@@ -1,0 +1,171 @@
+"""Tests for the synthetic corpus, trainer plumbing and eval harness."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data, evals, train
+from compile.modeling import common
+
+
+def tiny_cfg(**kw):
+    # vocab must cover the synthetic corpus (data.VOCAB_SIZE tokens)
+    base = dict(family="llama", vocab=data.VOCAB_SIZE, d_model=32, n_layers=2,
+                n_heads=2, d_ff=48, max_seq=64, n_seeded_outliers=2,
+                outlier_gain=4.0)
+    base.update(kw)
+    return common.ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_deterministic_and_in_vocab():
+    a = data.make_corpus("train", 5000, seed=3)
+    b = data.make_corpus("train", 5000, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < data.VOCAB_SIZE
+
+
+def test_corpus_splits_differ():
+    a = data.make_corpus("train", 5000, seed=0)
+    b = data.make_corpus("wikitext2", 5000, seed=0)
+    assert not np.array_equal(a, b)
+
+
+def test_corpus_zipfian_head():
+    """A few tokens should dominate (natural-text-like marginals)."""
+    c = data.make_corpus("train", 50_000, seed=1)
+    counts = np.bincount(c, minlength=data.VOCAB_SIZE)
+    top10 = np.sort(counts)[-10:].sum() / counts.sum()
+    assert top10 > 0.2, f"top-10 token mass {top10}"
+
+
+def test_corpus_has_structure():
+    """Bigram entropy must be well below unigram entropy (learnable)."""
+    c = data.make_corpus("train", 100_000, seed=2)
+    uni = np.bincount(c, minlength=256).astype(float)
+    uni /= uni.sum()
+    h_uni = -(uni[uni > 0] * np.log(uni[uni > 0])).sum()
+    # conditional entropy via bigram counts
+    big = np.zeros((256, 256))
+    np.add.at(big, (c[:-1], c[1:]), 1)
+    rows = big.sum(1, keepdims=True)
+    cond = big / np.maximum(rows, 1)
+    h_cond = -(big * np.log(np.maximum(cond, 1e-12))).sum() / big.sum()
+    assert h_cond < h_uni - 0.3, f"H(x)={h_uni:.2f} H(x|prev)={h_cond:.2f}"
+
+
+def test_eval_windows_non_overlapping():
+    toks = np.arange(1000, dtype=np.int32) % 256
+    w = data.eval_windows(toks, 64)
+    assert w.shape == ((1000 - 1) // 64, 65)
+    np.testing.assert_array_equal(w[0], toks[:65])
+    np.testing.assert_array_equal(w[1], toks[64:129])
+
+
+def test_batches_shapes_and_bounds():
+    toks = data.make_corpus("c4", 5000, seed=0)
+    b = data.batches(toks, 8, 32, seed=1)
+    assert b.shape == (8, 33)
+    assert b.max() < data.VOCAB_SIZE
+
+
+def test_calibration_sequences_shape():
+    c = data.calibration_sequences("pile", 4, 16, seed=0)
+    assert c.shape == (4, 17)
+
+
+def test_unknown_split_raises():
+    with pytest.raises(KeyError):
+        data.make_corpus("imagenet", 10)
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+
+def test_training_reduces_loss():
+    cfg = tiny_cfg()
+    params, losses = train.train(cfg, steps=25, batch=8, seq=32,
+                                 corpus_tokens=20_000, log_every=0,
+                                 name="pytest-tiny")
+    assert losses[-1] < losses[0] * 0.9, f"{losses[0]} -> {losses[-1]}"
+
+
+def test_checkpoint_cache_roundtrip():
+    cfg = tiny_cfg(d_model=16, d_ff=24, n_heads=2)
+    p1, l1 = train.train(cfg, steps=5, batch=4, seq=16, corpus_tokens=5_000,
+                         log_every=0, name="pytest-cache")
+    p2, l2 = train.train(cfg, steps=5, batch=4, seq=16, corpus_tokens=5_000,
+                         log_every=0, name="pytest-cache")
+    assert l1 == l2  # second call loaded the checkpoint
+    import jax
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adamw_moves_parameters():
+    cfg = tiny_cfg(d_model=16, d_ff=24)
+    params = common.init_params(cfg, seed=0)
+    opt = train.adamw_init(params)
+    batch = jnp.asarray(data.batches(data.make_corpus("train", 2000, 0), 4, 16, 0))
+    p2, _, loss = train.train_step(params, opt, batch, 1e-3, cfg)
+    assert float(loss) > 0
+    moved = np.abs(np.asarray(p2["embed"]) - np.asarray(params["embed"])).max()
+    assert moved > 0
+
+
+# ---------------------------------------------------------------------------
+# evals
+# ---------------------------------------------------------------------------
+
+
+def test_perplexity_sane_range():
+    cfg = tiny_cfg()
+    params, _ = train.train(cfg, steps=25, batch=8, seq=32,
+                            corpus_tokens=20_000, log_every=0,
+                            name="pytest-tiny")
+    from compile import model as model_mod
+    fwd = model_mod.make_forward(None, params, cfg)
+    ppl = evals.perplexity(fwd, n_tokens=2048, seq=32)
+    # trained: better than uniform (256); worse than perfect (1)
+    assert 1.0 < ppl < 200.0, ppl
+
+
+def test_perplexity_untrained_is_near_uniform():
+    cfg = tiny_cfg(n_seeded_outliers=0)
+    params = common.init_params(cfg, seed=1)
+    from compile import model as model_mod
+    fwd = model_mod.make_forward(None, params, cfg)
+    ppl = evals.perplexity(fwd, n_tokens=1024, seq=32)
+    assert ppl > 100.0, f"untrained model suspiciously good: {ppl}"
+
+
+def test_zero_shot_chance_level_for_random_scorer():
+    """A constant-logits model must score ~50% on every task."""
+    class Uniform:
+        def __call__(self, tokens):
+            b, s = tokens.shape
+            return jnp.zeros((b, s, data.VOCAB_SIZE)), None
+
+    accs = evals.zero_shot_suite(Uniform(), n_items=32)
+    for t, a in accs.items():
+        if t == "avg":
+            continue
+        assert 0.2 <= a <= 0.8, f"{t}: {a}"
+
+
+def test_zero_shot_trained_beats_chance_on_easy():
+    cfg = tiny_cfg()
+    params, _ = train.train(cfg, steps=25, batch=8, seq=32,
+                            corpus_tokens=20_000, log_every=0,
+                            name="pytest-tiny")
+    from compile import model as model_mod
+    fwd = model_mod.make_forward(None, params, cfg)
+    acc = evals.zero_shot_accuracy(fwd, "piqa", n_items=32, prefix_len=24,
+                                   cont_len=8)
+    assert acc > 0.6, f"piqa-like accuracy {acc}"

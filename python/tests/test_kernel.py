@@ -1,0 +1,300 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Every kernel in ``compile.kernels`` is checked against ``kernels.ref`` on
+fixed shapes and under a hypothesis sweep over shapes, scale regimes and
+bit widths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, quant, quik_linear, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def rand_acts(r, m, k, scale=1.0):
+    x = r.normal(size=(m, k)).astype(np.float32) * scale
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# quantize_acts (fused Pallas) vs ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("m,k", [(8, 16), (64, 128), (100, 96), (1, 32)])
+def test_quantize_acts_matches_ref(bits, m, k):
+    x = rand_acts(rng(0), m, k)
+    got = quant.quantize_acts(x, bits, block_m=32)
+    want = ref.quantize_acts_ref(x, bits)
+    np.testing.assert_array_equal(np.asarray(got.q), np.asarray(want.q))
+    np.testing.assert_allclose(got.scale, want.scale, rtol=1e-6)
+    np.testing.assert_allclose(got.zero, want.zero, rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_roundtrip_error_bounded(bits):
+    """Reconstruction error per element is bounded by scale/2 (+ rounding)."""
+    x = rand_acts(rng(1), 32, 64, scale=3.0)
+    qa = quant.quantize_acts(x, bits, block_m=16)
+    recon = ref.dequantize_acts_ref(qa, bits)
+    err = np.abs(np.asarray(recon - x))
+    bound = np.asarray(qa.scale)[:, None] * 0.5 + 1e-5
+    assert (err <= bound).all()
+
+
+def test_quantize_constant_row_no_nan():
+    """A constant token row must not produce NaN (scale floor)."""
+    x = jnp.ones((4, 32), jnp.float32) * 2.5
+    qa = quant.quantize_acts(x, 4, block_m=4)
+    assert np.isfinite(np.asarray(qa.scale)).all()
+    assert np.isfinite(np.asarray(ref.dequantize_acts_ref(qa, 4))).all()
+
+
+def test_quantize_signed_range():
+    x = rand_acts(rng(2), 16, 48, scale=10.0)
+    for bits in (4, 8):
+        qa = quant.quantize_acts(x, bits, block_m=8)
+        qmin, qmax = ref.act_qrange(bits)
+        q = np.asarray(qa.q)
+        assert q.min() >= qmin and q.max() <= qmax
+
+
+# ---------------------------------------------------------------------------
+# split_quantize (fused split) vs v1 (unfused) vs ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_outlier", [0, 8, 32])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_split_quantize_matches_v1(n_outlier, bits):
+    x = rand_acts(rng(3), 48, 96)
+    qa2, fp2 = quant.split_quantize(x, n_outlier, bits, block_m=16)
+    qa1, fp1 = quant.split_quantize_v1(x, n_outlier, bits)
+    np.testing.assert_array_equal(np.asarray(qa2.q), np.asarray(qa1.q))
+    np.testing.assert_allclose(qa2.scale, qa1.scale, rtol=1e-6)
+    np.testing.assert_allclose(qa2.zero, qa1.zero, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(fp2), np.asarray(fp1))
+
+
+def test_split_quantize_outliers_exact_copy():
+    """Outlier columns must be moved bit-exactly, never quantized."""
+    x = rand_acts(rng(4), 32, 64, scale=100.0)
+    _, fp = quant.split_quantize(x, 16, 4, block_m=8)
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(x[:, 48:]))
+
+
+def test_split_quantize_metadata_excludes_outliers():
+    """Per-token scale/zero must be computed over the base block only."""
+    r = rng(5)
+    base = rand_acts(r, 16, 32)
+    outl = rand_acts(r, 16, 8, scale=1000.0)  # huge outliers
+    x = jnp.concatenate([base, outl], axis=1)
+    qa, _ = quant.split_quantize(x, 8, 4, block_m=8)
+    want = ref.quantize_acts_ref(base, 4)
+    np.testing.assert_allclose(qa.scale, want.scale, rtol=1e-6)
+    np.testing.assert_allclose(qa.zero, want.zero, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int_matmul vs ref (exact integer arithmetic)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,n,k", [(8, 8, 16), (64, 48, 96), (100, 33, 70), (1, 1, 8), (128, 128, 256)]
+)
+def test_int_matmul_exact(m, n, k):
+    r = rng(6)
+    qx = jnp.asarray(r.integers(-8, 8, size=(m, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-7, 8, size=(n, k)), jnp.int8)
+    got = matmul.int_matmul(qx, qw, block_m=32, block_n=32, block_k=32)
+    want = ref.int_matmul_ref(qx, qw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int_matmul_int8_range_no_overflow():
+    """Full-range int8 operands stay exact within int32 accumulation."""
+    r = rng(7)
+    k = 512
+    qx = jnp.asarray(r.integers(-128, 128, size=(16, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-127, 128, size=(16, k)), jnp.int8)
+    got = matmul.int_matmul(qx, qw, block_m=16, block_n=16, block_k=128)
+    want = ref.int_matmul_ref(qx, qw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# dequantize (standalone + fused epilogue) vs ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_dequantize_acc_matches_ref(bits):
+    r = rng(8)
+    m, n = 40, 56
+    acc = jnp.asarray(r.integers(-10000, 10000, size=(m, n)), jnp.int32)
+    sa = jnp.asarray(r.uniform(0.01, 1.0, m), jnp.float32)
+    za = jnp.asarray(r.normal(size=m), jnp.float32)
+    sw = jnp.asarray(r.uniform(0.01, 1.0, n), jnp.float32)
+    wr = jnp.asarray(r.normal(size=n), jnp.float32)
+    got = matmul.dequantize_acc(acc, sa, za, sw, wr, bits, block_m=16, block_n=16)
+    want = ref.dequantize_ref(acc, sa, za, sw, wr, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_fused_matmul_dequant_matches_unfused(bits):
+    r = rng(9)
+    m, n, k = 48, 40, 96
+    qmax = 2 ** (bits - 1)
+    qx = jnp.asarray(r.integers(-qmax, qmax, size=(m, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-(qmax - 1), qmax, size=(n, k)), jnp.int8)
+    sa = jnp.asarray(r.uniform(0.01, 1.0, m), jnp.float32)
+    za = jnp.asarray(r.normal(size=m), jnp.float32)
+    sw = jnp.asarray(r.uniform(0.01, 1.0, n), jnp.float32)
+    wr = jnp.asarray(r.normal(size=n), jnp.float32)
+    fp = jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+    fused = matmul.int_matmul_dequant(
+        qx, qw, sa, za, sw, wr, fp, bits, block_m=16, block_n=16, block_k=32
+    )
+    acc = matmul.int_matmul(qx, qw, block_m=16, block_n=16, block_k=32)
+    unfused = matmul.dequantize_acc(acc, sa, za, sw, wr, bits) + fp
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quik_linear end-to-end vs ref, all fusion versions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("version", [1, 2, 3])
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("n_outlier", [0, 16])
+def test_quik_linear_matches_ref(version, bits, n_outlier):
+    r = rng(10)
+    m, n, k = 33, 48, 80
+    x = rand_acts(r, m, k)
+    w = jnp.asarray(r.normal(size=(n, k)).astype(np.float32))
+    qw = ref.quantize_weights_ref(w, bits, n_outlier)
+    bias = jnp.asarray(r.normal(size=n).astype(np.float32))
+    got = quik_linear.quik_linear(x, qw, bias, version=version, block_m=16)
+    want = ref.quik_linear_ref(x, qw, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_quik_linear_versions_identical():
+    """All three fusion versions must agree to float tolerance."""
+    r = rng(11)
+    x = rand_acts(r, 40, 64)
+    w = jnp.asarray(r.normal(size=(32, 64)).astype(np.float32))
+    qw = ref.quantize_weights_ref(w, 4, 8)
+    ys = [
+        np.asarray(quik_linear.quik_linear(x, qw, version=v, block_m=8))
+        for v in (1, 2, 3)
+    ]
+    np.testing.assert_allclose(ys[0], ys[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ys[1], ys[2], rtol=1e-5, atol=1e-5)
+
+
+def test_quik_linear_8bit_more_accurate_than_4bit():
+    """INT8 path must reconstruct the FP product better than INT4."""
+    r = rng(12)
+    x = rand_acts(r, 64, 128)
+    w = jnp.asarray(r.normal(size=(96, 128)).astype(np.float32))
+    exact = np.asarray(x @ w.T)
+    errs = {}
+    for bits in (4, 8):
+        qw = ref.quantize_weights_ref(w, bits, 0)
+        y = np.asarray(quik_linear.quik_linear(x, qw, version=3, block_m=16))
+        errs[bits] = np.mean((y - exact) ** 2)
+    assert errs[8] < errs[4] / 4
+
+
+def test_quik_linear_outliers_reduce_error():
+    """With planted outlier features, keeping them FP must cut the error."""
+    r = rng(13)
+    m, n, k, n_out = 64, 48, 128, 16
+    x = np.array(rand_acts(r, m, k))
+    x[:, -n_out:] *= 50.0  # planted outlier features, already permuted last
+    x = jnp.asarray(x)
+    w = jnp.asarray(r.normal(size=(n, k)).astype(np.float32))
+    exact = np.asarray(x @ w.T)
+    qw0 = ref.quantize_weights_ref(w, 4, 0)
+    qw1 = ref.quantize_weights_ref(w, 4, n_out)
+    e0 = np.mean((np.asarray(quik_linear.quik_linear(x, qw0, version=3, block_m=16)) - exact) ** 2)
+    e1 = np.mean((np.asarray(quik_linear.quik_linear(x, qw1, version=3, block_m=16)) - exact) ** 2)
+    assert e1 < e0 / 10
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes × bits × scale regimes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(2, 160),
+    bits=st.sampled_from([4, 8]),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_quantize_acts(m, k, bits, scale, seed):
+    x = rand_acts(rng(seed), m, k, scale)
+    got = quant.quantize_acts(x, bits, block_m=32)
+    want = ref.quantize_acts_ref(x, bits)
+    # XLA may fuse the divide differently inside the Pallas kernel than in
+    # the jnp oracle; values landing exactly on a rounding tie can flip by
+    # one level.  Allow off-by-one on a vanishing fraction of elements.
+    diff = np.abs(np.asarray(got.q, np.int32) - np.asarray(want.q, np.int32))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() <= 1e-3, f"{(diff > 0).mean():%} elements off"
+    np.testing.assert_allclose(got.scale, want.scale, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    n=st.integers(1, 64),
+    k=st.integers(1, 128),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_int_matmul(m, n, k, seed):
+    r = rng(seed)
+    qx = jnp.asarray(r.integers(-8, 8, size=(m, k)), jnp.int8)
+    qw = jnp.asarray(r.integers(-7, 8, size=(n, k)), jnp.int8)
+    got = matmul.int_matmul(qx, qw, block_m=32, block_n=32, block_k=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.int_matmul_ref(qx, qw)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    n=st.integers(1, 48),
+    k=st.integers(8, 96),
+    bits=st.sampled_from([4, 8]),
+    n_outlier_frac=st.floats(0.0, 0.4),
+    version=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_quik_linear(m, n, k, bits, n_outlier_frac, version, seed):
+    r = rng(seed)
+    n_outlier = int(k * n_outlier_frac)
+    if k - n_outlier < 2:
+        n_outlier = 0
+    x = rand_acts(r, m, k)
+    w = jnp.asarray(r.normal(size=(n, k)).astype(np.float32))
+    qw = ref.quantize_weights_ref(w, bits, n_outlier)
+    got = quik_linear.quik_linear(x, qw, version=version, block_m=16)
+    want = ref.quik_linear_ref(x, qw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,222 @@
+"""Tests for the L2 model zoo: forwards, KV-cache path, calibration capture."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data, model
+from compile.modeling import common, presets
+from compile.quik import policy
+
+
+def tiny_cfg(family="llama", **kw):
+    base = dict(family=family, vocab=64, d_model=32, n_layers=2, n_heads=2,
+                d_ff=48 if family == "llama" else 64, max_seq=64,
+                n_seeded_outliers=2, outlier_gain=4.0)
+    base.update(kw)
+    return common.ModelConfig(**base)
+
+
+@pytest.mark.parametrize("family", ["llama", "opt", "falcon"])
+def test_forward_shapes(family):
+    cfg = tiny_cfg(family)
+    params = common.init_params(cfg, seed=0)
+    tokens = jnp.asarray(np.arange(12, dtype=np.int32).reshape(2, 6) % cfg.vocab)
+    logits, caches = common.forward(params, tokens, cfg)
+    assert logits.shape == (2, 6, cfg.vocab)
+    assert len(caches) == cfg.n_layers
+    k, v = caches[0]
+    assert k.shape == (2, cfg.n_heads, 6, cfg.d_head)
+
+
+@pytest.mark.parametrize("family", ["llama", "opt", "falcon"])
+def test_causality(family):
+    """Changing a future token must not affect past logits."""
+    cfg = tiny_cfg(family)
+    params = common.init_params(cfg, seed=1)
+    r = np.random.default_rng(0)
+    t1 = r.integers(0, cfg.vocab, size=(1, 8)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % cfg.vocab
+    l1, _ = common.forward(params, jnp.asarray(t1), cfg)
+    l2, _ = common.forward(params, jnp.asarray(t2), cfg)
+    np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]))
+
+
+@pytest.mark.parametrize("family", ["llama", "opt", "falcon"])
+def test_incremental_decode_matches_full_forward(family):
+    """Concat-cache decode ≡ one-shot full forward."""
+    cfg = tiny_cfg(family)
+    params = common.init_params(cfg, seed=2)
+    r = np.random.default_rng(1)
+    toks = r.integers(0, cfg.vocab, size=(1, 10)).astype(np.int32)
+    full, _ = common.forward(params, jnp.asarray(toks), cfg)
+
+    pre, caches = common.forward(params, jnp.asarray(toks[:, :6]), cfg)
+    outs = [np.asarray(pre)]
+    for i in range(6, 10):
+        step, caches = common.forward(
+            params, jnp.asarray(toks[:, i : i + 1]), cfg,
+            kv_caches=caches, position_offset=i,
+        )
+        outs.append(np.asarray(step))
+    inc = np.concatenate(outs, axis=1)
+    np.testing.assert_allclose(inc, np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("family", ["llama", "opt", "falcon"])
+def test_fixed_buffer_cache_matches_full_forward(family):
+    """forward_with_cache (the AOT/serving path) ≡ plain forward."""
+    cfg = tiny_cfg(family)
+    params = common.init_params(cfg, seed=3)
+    r = np.random.default_rng(2)
+    b, s_pre, n_dec, t_max = 2, 6, 3, 16
+    toks = r.integers(0, cfg.vocab, size=(b, s_pre + n_dec)).astype(np.int32)
+    full, _ = common.forward(params, jnp.asarray(toks), cfg)
+
+    ck = jnp.zeros((cfg.n_layers, b, cfg.n_heads, t_max, cfg.d_head), jnp.float32)
+    cv = jnp.zeros_like(ck)
+    logits, ck, cv = common.forward_with_cache(
+        params, jnp.asarray(toks[:, :s_pre]), cfg, ck, cv, jnp.int32(0)
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full[:, :s_pre]), rtol=2e-4, atol=2e-4
+    )
+    for i in range(n_dec):
+        pos = s_pre + i
+        logits, ck, cv = common.forward_with_cache(
+            params, jnp.asarray(toks[:, pos : pos + 1]), cfg, ck, cv, jnp.int32(pos)
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full[:, pos]), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_rope_relative_property():
+    """RoPE: score(q_i, k_j) depends only on i - j (same content)."""
+    dh = 8
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(1, 1, 1, dh)).astype(np.float32))
+    q = jnp.tile(x, (1, 1, 6, 1))
+    pos = jnp.arange(6)
+    rq = common.rope(q, pos)
+    s01 = float(jnp.dot(rq[0, 0, 0], rq[0, 0, 1]))
+    s34 = float(jnp.dot(rq[0, 0, 3], rq[0, 0, 4]))
+    assert abs(s01 - s34) < 1e-4
+
+
+def test_capture_apply_collects_all_linears():
+    cfg = tiny_cfg("llama")
+    params = common.init_params(cfg, seed=4)
+    store = {}
+    tokens = jnp.asarray(np.zeros((1, 4), np.int32))
+    common.forward(params, tokens, cfg, apply_linear=common.make_capture_apply(store))
+    expected = {
+        f"layers.{li}.{sec}.{nm}"
+        for li in range(cfg.n_layers)
+        for sec, nm in [
+            ("self_attn", "q_proj"), ("self_attn", "k_proj"),
+            ("self_attn", "v_proj"), ("self_attn", "o_proj"),
+            ("mlp", "gate_proj"), ("mlp", "up_proj"), ("mlp", "down_proj"),
+        ]
+    }
+    assert set(store) == expected
+    x = store["layers.0.mlp.down_proj"][0]
+    assert x.shape == (4, cfg.d_ff)
+
+
+def test_num_params_matches_actual():
+    for family in ("llama", "opt", "falcon"):
+        cfg = tiny_cfg(family)
+        params = common.init_params(cfg, seed=0)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        assert actual == cfg.num_params(), family
+
+
+def test_seeded_outlier_channels_visible_in_activations():
+    """Norm-gain seeding must create outlier features at the linear inputs."""
+    cfg = tiny_cfg("llama", n_seeded_outliers=3, outlier_gain=10.0)
+    params = common.init_params(cfg, seed=5)
+    store = {}
+    tokens = jnp.asarray(np.random.default_rng(4).integers(0, 64, (2, 16)).astype(np.int32))
+    common.forward(params, tokens, cfg, apply_linear=common.make_capture_apply(store))
+    x = store["layers.0.self_attn.q_proj"][0]
+    linf = np.max(np.abs(x), axis=0)
+    top3 = np.sort(linf)[-3:]
+    rest = np.sort(linf)[:-3]
+    assert top3.min() > 3 * np.median(rest)
+
+
+# ---------------------------------------------------------------------------
+# model-level quantization drivers
+# ---------------------------------------------------------------------------
+
+
+def quantize_setup(family="llama", scheme="quik", **pol_kw):
+    cfg = tiny_cfg(family)
+    params = common.init_params(cfg, seed=6)
+    calib = data.calibration_sequences("pile", 8, 32, seed=0)[:, :-1]
+    ci = model.calibrate(params, cfg, calib, max_rows=256)
+    pol = policy.QuikPolicy(n_outlier=4, **pol_kw)
+    qm = model.quantize_model(params, cfg, ci, pol, scheme=scheme)
+    return cfg, params, qm
+
+
+def test_quantize_model_covers_all_linears():
+    cfg, params, qm = quantize_setup()
+    assert len(qm.qlayers) == cfg.n_layers * len(cfg.linear_names())
+
+
+def test_quantize_model_down_proj_is_8bit():
+    _, _, qm = quantize_setup()
+    dp = qm.qlayers["layers.0.mlp.down_proj"]
+    qp = qm.qlayers["layers.0.self_attn.q_proj"]
+    assert dp.plan.weight_bits == 8 and qp.plan.weight_bits == 4
+
+
+def test_quantized_forward_close_to_fp():
+    cfg, params, qm = quantize_setup()
+    toks = jnp.asarray(np.random.default_rng(5).integers(0, 64, (2, 16)).astype(np.int32))
+    lq, _ = qm.forward(toks)
+    lf, _ = common.forward(params, toks, cfg)
+    # 4-bit quantized logits track FP to a loose but meaningful tolerance
+    rel = np.linalg.norm(np.asarray(lq - lf)) / np.linalg.norm(np.asarray(lf))
+    assert rel < 0.35, rel
+
+
+def test_quantized_forward_kernel_path_matches_ref_path():
+    cfg, params, qm = quantize_setup()
+    toks = jnp.asarray(np.random.default_rng(6).integers(0, 64, (1, 8)).astype(np.int32))
+    l_ref, _ = qm.forward(toks, use_kernels=False)
+    l_ker, _ = qm.forward(toks, use_kernels=True)
+    np.testing.assert_allclose(
+        np.asarray(l_ker), np.asarray(l_ref), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_zero_outlier_count_reporting():
+    _, _, qm = quantize_setup()
+    assert qm.zero_outlier_layer_count() == 0
+    # force zero outliers via policy
+    cfg = tiny_cfg()
+    params = common.init_params(cfg, seed=6)
+    calib = data.calibration_sequences("pile", 4, 32, seed=0)[:, :-1]
+    ci = model.calibrate(params, cfg, calib, max_rows=128)
+    qmz = model.quantize_model(params, cfg, ci, policy.QuikPolicy(n_outlier=0), scheme="quik")
+    assert qmz.zero_outlier_layer_count() == len(qmz.qlayers)
+
+
+def test_presets_paper_scale_shapes():
+    shapes = presets.paper_linear_shapes("llama2-70b")
+    names = [n for n, _, _ in shapes]
+    assert names == ["q_proj", "k_proj", "v_proj", "o_proj",
+                     "gate_proj", "up_proj", "down_proj"]
+    d = dict((n, (o, i)) for n, o, i in shapes)
+    assert d["down_proj"] == (8192, 28672)
+    assert presets.PAPER_SCALE["falcon-180b"]["d_model"] == 14848
+
+
+def test_tiny_outlier_budget_rule():
+    cfg = presets.TINY["llama-m"]
+    assert presets.tiny_outliers(cfg) == 16  # 128 / 8

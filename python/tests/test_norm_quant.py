@@ -1,0 +1,87 @@
+"""Fused RMSNorm+split+quantize kernel vs its unfused oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import norm_quant
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("n_outlier", [0, 4, 16])
+def test_fused_matches_unfused(bits, n_outlier):
+    r = rng(0)
+    m, d = 40, 64
+    x = jnp.asarray(r.normal(size=(m, d)).astype(np.float32))
+    g = jnp.asarray(r.uniform(0.5, 2.0, d).astype(np.float32))
+    qa_f, fp_f = norm_quant.norm_split_quantize(x, g, n_outlier, bits, block_m=16)
+    qa_r, fp_r = norm_quant.norm_split_quantize_ref(x, g, n_outlier, bits)
+    diff = np.abs(np.asarray(qa_f.q, np.int32) - np.asarray(qa_r.q, np.int32))
+    assert diff.max() <= 1 and (diff > 0).mean() < 1e-3  # rounding ties only
+    np.testing.assert_allclose(qa_f.scale, qa_r.scale, rtol=1e-5)
+    np.testing.assert_allclose(qa_f.zero, qa_r.zero, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(fp_f), np.asarray(fp_r), rtol=1e-6)
+
+
+def test_permutation_commutes_with_rmsnorm():
+    """Permuting features before RMSNorm == permuting after (exactness of
+    the outlier-permuted layout the fused kernel assumes)."""
+    r = rng(1)
+    m, d = 8, 32
+    x = r.normal(size=(m, d)).astype(np.float32)
+    g = r.uniform(0.5, 2.0, d).astype(np.float32)
+    perm = r.permutation(d)
+    qa_a, fp_a = norm_quant.norm_split_quantize_ref(
+        jnp.asarray(x[:, perm]), jnp.asarray(g[perm]), 4, 4
+    )
+    # unpermuted norm, then permute, then split+quant
+    ms = np.mean(x * x, axis=1, keepdims=True)
+    xn = (x / np.sqrt(ms + 1e-6) * g)[:, perm]
+    from compile.kernels.ref import quantize_acts_ref
+
+    qa_b = quantize_acts_ref(jnp.asarray(xn[:, :28]), 4)
+    np.testing.assert_allclose(qa_a.scale, qa_b.scale, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(qa_a.q), np.asarray(qa_b.q))
+    np.testing.assert_allclose(np.asarray(fp_a), xn[:, 28:], rtol=1e-5)
+
+
+def test_outlier_gain_lands_in_fp_columns():
+    """A large gain on outlier channels must not touch base quantization."""
+    r = rng(2)
+    m, d, n_out = 16, 32, 4
+    x = jnp.asarray(r.normal(size=(m, d)).astype(np.float32))
+    g = np.ones(d, np.float32)
+    g[-n_out:] = 100.0
+    qa, fp = norm_quant.norm_split_quantize(x, jnp.asarray(g), n_out, 4, block_m=8)
+    g1 = np.ones(d, np.float32)
+    qa1, _ = norm_quant.norm_split_quantize(x, jnp.asarray(g1), n_out, 4, block_m=8)
+    np.testing.assert_array_equal(np.asarray(qa.q), np.asarray(qa1.q))
+    assert np.abs(np.asarray(fp)).max() > 10.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    d=st.integers(8, 96),
+    frac=st.floats(0.0, 0.4),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_fused_norm_quant(m, d, frac, bits, seed):
+    r = rng(seed)
+    n_outlier = int(d * frac)
+    if d - n_outlier < 2:
+        n_outlier = 0
+    x = jnp.asarray(r.normal(size=(m, d)).astype(np.float32))
+    g = jnp.asarray(r.uniform(0.5, 2.0, d).astype(np.float32))
+    qa_f, fp_f = norm_quant.norm_split_quantize(x, g, n_outlier, bits, block_m=16)
+    qa_r, fp_r = norm_quant.norm_split_quantize_ref(x, g, n_outlier, bits)
+    diff = np.abs(np.asarray(qa_f.q, np.int32) - np.asarray(qa_r.q, np.int32))
+    assert diff.max() <= 1
+    np.testing.assert_allclose(qa_f.scale, qa_r.scale, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(fp_f), np.asarray(fp_r), rtol=1e-6)

@@ -1,0 +1,381 @@
+"""Tests for the offline QUIK calibration/quantization algorithms."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import quik_linear_ref
+from compile.quik import baselines, clipping, gptq, outliers, policy, quantize, sparsegpt
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_calib(r, tokens, k, outlier_idx=(), outlier_gain=50.0):
+    """Calibration activations with planted outlier features."""
+    x = r.normal(size=(tokens, k)).astype(np.float32)
+    for i in outlier_idx:
+        x[:, i] *= outlier_gain
+    return x
+
+
+# ---------------------------------------------------------------------------
+# outlier selection & permutation
+# ---------------------------------------------------------------------------
+
+
+def test_select_outliers_finds_planted():
+    x = make_calib(rng(0), 256, 64, outlier_idx=(3, 17, 40))
+    stats = outliers.collect_stats(x)
+    idx = outliers.select_outliers(stats, 3)
+    assert set(idx.tolist()) == {3, 17, 40}
+
+
+def test_outlier_permutation_moves_outliers_last():
+    perm = outliers.outlier_permutation(8, np.array([1, 5]))
+    assert perm.tolist() == [0, 2, 3, 4, 6, 7, 1, 5]
+    inv = outliers.inverse_permutation(perm)
+    assert (perm[inv] == np.arange(8)).all()
+    assert (inv[perm] == np.arange(8)).all()
+
+
+def test_permute_hessian_consistent():
+    r = rng(1)
+    x = make_calib(r, 128, 16)
+    perm = outliers.outlier_permutation(16, np.array([2, 9]))
+    h = gptq.hessian_from_calib(x)
+    hp = outliers.permute_hessian(h, perm)
+    hp_direct = gptq.hessian_from_calib(x[:, perm])
+    np.testing.assert_allclose(hp, hp_direct, rtol=1e-6)
+
+
+def test_merge_stats_linf_is_max():
+    a = outliers.collect_stats(np.ones((4, 3), np.float32))
+    b = outliers.collect_stats(np.full((4, 3), -5.0, np.float32))
+    m = outliers.merge_stats([a, b])
+    np.testing.assert_allclose(m.linf, [5, 5, 5])
+
+
+def test_select_outliers_bounds():
+    stats = outliers.collect_stats(np.ones((2, 4), np.float32))
+    assert outliers.select_outliers(stats, 0).size == 0
+    with pytest.raises(ValueError):
+        outliers.select_outliers(stats, 5)
+
+
+# ---------------------------------------------------------------------------
+# weight clipping
+# ---------------------------------------------------------------------------
+
+
+def test_clipping_never_worse_than_unclipped():
+    r = rng(2)
+    w = r.normal(size=(16, 64)).astype(np.float32)
+    w[0, 0] = 40.0  # one huge weight outlier
+    unclipped = np.max(np.abs(w), axis=1) / 7
+    clipped = clipping.search_clip_scale(w, 4)
+    assert clipping.clip_error(w, 4, clipped) <= clipping.clip_error(w, 4, unclipped) + 1e-6
+
+
+def test_clipping_shrinks_scale_with_weight_outlier():
+    """A moderate weight outlier (8σ) makes clipping strictly profitable."""
+    r = rng(3)
+    w = r.normal(size=(4, 128)).astype(np.float32)
+    w[:, 0] = 8.0
+    clipped = clipping.search_clip_scale(w, 4)
+    unclipped = np.max(np.abs(w), axis=1) / 7
+    assert (clipped < unclipped - 1e-6).all()
+    assert clipping.clip_error(w, 4, clipped) < clipping.clip_error(w, 4, unclipped)
+
+
+# ---------------------------------------------------------------------------
+# GPTQ
+# ---------------------------------------------------------------------------
+
+
+def layer_output_error(w_hat, w, x):
+    """‖X (W_hat - W)^T‖² — the objective GPTQ minimizes."""
+    d = (w_hat - w).astype(np.float64)
+    return float(np.sum((x.astype(np.float64) @ d.T) ** 2))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_gptq_beats_rtn_on_layer_output(bits):
+    r = rng(4)
+    n, k, t = 32, 64, 512
+    w = r.normal(size=(n, k)).astype(np.float32)
+    x = make_calib(r, t, k)
+    h = gptq.hessian_from_calib(x)
+    qw_g, _ = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=bits, n_outlier=0))
+    qw_r = baselines.rtn_quantize(w, bits, 0)
+    e_g = layer_output_error(gptq.dequantized_weight(qw_g), w, x)
+    e_r = layer_output_error(gptq.dequantized_weight(qw_r), w, x)
+    assert e_g < e_r
+
+
+def test_gptq_outlier_columns_absorb_error():
+    """With outliers, GPTQ's layer-output error must shrink further."""
+    r = rng(5)
+    n, k, t, n_out = 24, 64, 512, 8
+    w = r.normal(size=(n, k)).astype(np.float32)
+    x = make_calib(r, t, k, outlier_idx=tuple(range(k - n_out, k)))
+    h = gptq.hessian_from_calib(x)
+    qw0, _ = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=4, n_outlier=0))
+    qw1, _ = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=4, n_outlier=n_out))
+    e0 = layer_output_error(gptq.dequantized_weight(qw0), w, x)
+    e1 = layer_output_error(gptq.dequantized_weight(qw1), w, x)
+    assert e1 < e0
+
+
+def test_gptq_fp_columns_differ_from_original():
+    """Outlier FP columns must be error-compensated, not copied verbatim."""
+    r = rng(6)
+    w = r.normal(size=(16, 32)).astype(np.float32)
+    x = make_calib(r, 256, 32)
+    h = gptq.hessian_from_calib(x)
+    qw, _ = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=4, n_outlier=4))
+    assert not np.allclose(np.asarray(qw.w_fp), w[:, -4:])
+
+
+def test_gptq_clipping_improves_proxy():
+    r = rng(7)
+    w = r.normal(size=(16, 64)).astype(np.float32)
+    w[:, 5] *= 30.0  # weight outlier inflating the scale
+    x = make_calib(r, 256, 64)
+    h = gptq.hessian_from_calib(x)
+    _, e_plain = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=4, clip=False))
+    _, e_clip = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=4, clip=True))
+    assert e_clip <= e_plain
+
+
+def test_gptq_dead_columns_handled():
+    r = rng(8)
+    w = r.normal(size=(8, 16)).astype(np.float32)
+    x = make_calib(r, 64, 16)
+    x[:, 3] = 0.0  # dead feature → zero Hessian row/col
+    h = gptq.hessian_from_calib(x)
+    qw, _ = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=4))
+    assert np.isfinite(gptq.dequantized_weight(qw)).all()
+
+
+def test_gptq_w8_near_lossless():
+    r = rng(9)
+    w = r.normal(size=(16, 48)).astype(np.float32)
+    x = make_calib(r, 256, 48)
+    h = gptq.hessian_from_calib(x)
+    qw, _ = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=8))
+    rel = np.abs(gptq.dequantized_weight(qw) - w) / (np.abs(w) + 1e-3)
+    assert np.median(rel) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# SparseGPT 2:4 + quant
+# ---------------------------------------------------------------------------
+
+
+def test_sparsegpt_24_pattern_holds():
+    r = rng(10)
+    w = r.normal(size=(16, 64)).astype(np.float32)
+    x = make_calib(r, 256, 64)
+    h = gptq.hessian_from_calib(x)
+    qw, mask, _ = sparsegpt.sparsegpt_quantize(
+        w, h, sparsegpt.SparseGPTConfig(bits=4, n_outlier=0)
+    )
+    assert sparsegpt.check_24_pattern(mask)
+    assert abs(sparsegpt.sparsity_ratio(mask) - 0.5) < 1e-6
+    # pruned positions must be exactly zero in the int tensor
+    assert (np.asarray(qw.w_int)[~mask] == 0).all()
+
+
+def test_sparsegpt_outlier_columns_stay_dense():
+    r = rng(11)
+    n_out = 8
+    w = r.normal(size=(16, 64)).astype(np.float32)
+    x = make_calib(r, 256, 64, outlier_idx=tuple(range(64 - n_out, 64)))
+    h = gptq.hessian_from_calib(x)
+    qw, mask, _ = sparsegpt.sparsegpt_quantize(
+        w, h, sparsegpt.SparseGPTConfig(bits=4, n_outlier=n_out)
+    )
+    assert mask.shape[1] == 64 - n_out          # mask covers base only
+    assert np.asarray(qw.w_fp).shape[1] == n_out  # outliers dense FP
+
+
+def test_sparsegpt_beats_magnitude_prune_then_rtn():
+    """Joint one-shot must beat naive magnitude-prune → RTN (§4.3.2)."""
+    r = rng(12)
+    n, k, t = 32, 64, 512
+    w = r.normal(size=(n, k)).astype(np.float32)
+    x = make_calib(r, t, k)
+    h = gptq.hessian_from_calib(x)
+    qw, mask, _ = sparsegpt.sparsegpt_quantize(
+        w, h, sparsegpt.SparseGPTConfig(bits=4, n_outlier=0)
+    )
+    e_joint = layer_output_error(gptq.dequantized_weight(qw), w, x)
+
+    # naive: keep the 2 largest |w| per group of 4, then RTN quantize
+    wn = w.copy().reshape(n, -1, 4)
+    order = np.argsort(np.abs(wn), axis=2)
+    naive_mask = np.ones_like(wn, bool)
+    i0, i1 = np.ogrid[:n, : wn.shape[1]]
+    naive_mask[i0, i1, order[:, :, 0]] = False
+    naive_mask[i0, i1, order[:, :, 1]] = False
+    w_naive = (wn * naive_mask).reshape(n, k)
+    qw_naive = baselines.rtn_quantize(w_naive, 4, 0)
+    e_naive = layer_output_error(gptq.dequantized_weight(qw_naive), w, x)
+    assert e_joint < e_naive
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+
+def test_smoothquant_flattens_outliers():
+    r = rng(13)
+    x = make_calib(r, 256, 32, outlier_idx=(4,), outlier_gain=100.0)
+    w = r.normal(size=(16, 32)).astype(np.float32)
+    s = baselines.smoothquant_scales(outliers.collect_stats(x).linf, w, 0.5)
+    xs = baselines.smooth_activations(x, s)
+    ratio_before = np.max(np.abs(x[:, 4])) / np.median(np.max(np.abs(x), axis=0))
+    ratio_after = np.max(np.abs(xs[:, 4])) / np.median(np.max(np.abs(xs), axis=0))
+    assert ratio_after < ratio_before / 3
+
+
+def test_smoothquant_8bit_preserves_product():
+    r = rng(14)
+    x = make_calib(r, 128, 32, outlier_idx=(7,))
+    w = r.normal(size=(16, 32)).astype(np.float32)
+    res = baselines.smoothquant_quantize(w, outliers.collect_stats(x).linf, 8)
+    xs = jnp.asarray(baselines.smooth_activations(x, res.smooth_scale))
+    y = np.asarray(quik_linear_ref(xs, res.qw))
+    rel = np.linalg.norm(y - x @ w.T) / np.linalg.norm(x @ w.T)
+    assert rel < 0.05
+
+
+def test_rtn_roundtrip_bits():
+    r = rng(15)
+    w = r.normal(size=(8, 32)).astype(np.float32)
+    for bits in (4, 8):
+        qw = baselines.rtn_quantize(w, bits, 0)
+        q = np.asarray(qw.w_int)
+        qmax = 2 ** (bits - 1) - 1
+        assert q.min() >= -qmax and q.max() <= qmax
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+
+def test_policy_down_proj_gets_8bit_and_more_outliers():
+    p = policy.QUIK_4B
+    plan = p.plan_for("layers.0.mlp.down_proj", 11008)
+    assert plan.weight_bits == 8 and plan.act_bits == 8
+    assert plan.n_outlier == 896  # 3.5 × 256 (Table 8)
+    plan_q = p.plan_for("layers.0.self_attn.q_proj", 4096)
+    assert plan_q.weight_bits == 4 and plan_q.n_outlier == 256
+
+
+def test_policy_zero_outlier_threshold():
+    r = rng(16)
+    tame = outliers.collect_stats(r.normal(size=(64, 128)).astype(np.float32) * 0.01)
+    wild = outliers.collect_stats(make_calib(r, 64, 128, outlier_idx=(0,), outlier_gain=1000))
+    p = policy.QuikPolicy(n_outlier=16, zero_outlier_threshold=0.1)
+    assert p.plan_for("q_proj", 128, tame).n_outlier == 0
+    assert p.plan_for("q_proj", 128, wild).n_outlier == 16
+
+
+def test_policy_outlier_clamped_to_fraction():
+    p = policy.QuikPolicy(n_outlier=256, max_outlier_frac=0.25)
+    assert p.plan_for("q_proj", 64).n_outlier == 16
+
+
+def test_policy_sparse_dense_exceptions():
+    p = policy.QuikPolicy(sparsity="2:4", sparse_dense_layers=("mlp",))
+    assert p.plan_for("mlp.up_proj", 512).sparsity == "dense"
+    assert p.plan_for("self_attn.q_proj", 512).sparsity == "2:4"
+
+
+def test_fp16_policy_not_quantized():
+    plan = policy.FP16.plan_for("q_proj", 512)
+    assert not plan.is_quantized
+
+
+# ---------------------------------------------------------------------------
+# quantize_linear end-to-end (scheme matrix)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "scheme", ["quik", "rtn", "smoothquant", "gptq_wonly", "sparse_quik", "fp16"]
+)
+def test_quantize_linear_schemes_run_and_approximate(scheme):
+    r = rng(17)
+    n, k, t = 24, 64, 256
+    w = r.normal(size=(n, k)).astype(np.float32)
+    b = r.normal(size=n).astype(np.float32)
+    x = make_calib(r, t, k, outlier_idx=(3, 40))
+    plan = policy.LayerPlan(
+        weight_bits=16 if scheme == "fp16" else 4,
+        act_bits=16 if scheme in ("fp16", "gptq_wonly") else 4,
+        n_outlier=0 if scheme == "smoothquant" else 8,
+    )
+    ql = quantize.quantize_linear(w, x, plan, scheme=scheme, bias=b)
+    xt = jnp.asarray(x[:32])
+    y = np.asarray(ql(xt))
+    exact = x[:32] @ w.T + b
+    rel = np.linalg.norm(y - exact) / np.linalg.norm(exact)
+    # fp16 exact; weight-only very tight; 4-bit schemes loose but sane
+    budget = {"fp16": 1e-6, "gptq_wonly": 0.05, "quik": 0.2, "rtn": 0.3,
+              "smoothquant": 0.6, "sparse_quik": 0.6}[scheme]
+    assert rel < budget, f"{scheme}: rel={rel}"
+
+
+def test_quantize_linear_quik_beats_rtn_with_outliers():
+    r = rng(18)
+    n, k, t = 32, 96, 512
+    w = r.normal(size=(n, k)).astype(np.float32)
+    x = make_calib(r, t, k, outlier_idx=(1, 2, 50), outlier_gain=30.0)
+    plan = policy.LayerPlan(weight_bits=4, act_bits=4, n_outlier=8)
+    y_exact = x[:64] @ w.T
+    errs = {}
+    for scheme in ("quik", "rtn"):
+        ql = quantize.quantize_linear(w, x, plan, scheme=scheme)
+        y = np.asarray(ql(jnp.asarray(x[:64])))
+        errs[scheme] = np.linalg.norm(y - y_exact)
+    assert errs["quik"] < errs["rtn"]
+
+
+def test_quantized_linear_kernel_path_matches_ref_path():
+    """use_kernels=True (Pallas, what AOT lowers) ≡ jnp oracle path."""
+    r = rng(19)
+    w = r.normal(size=(16, 48)).astype(np.float32)
+    x = make_calib(r, 128, 48, outlier_idx=(5,))
+    plan = policy.LayerPlan(weight_bits=4, act_bits=4, n_outlier=4)
+    ql = quantize.quantize_linear(w, x, plan, scheme="quik")
+    xt = jnp.asarray(x[:16])
+    np.testing.assert_allclose(
+        np.asarray(ql(xt, use_kernels=True)),
+        np.asarray(ql(xt, use_kernels=False)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bits=st.sampled_from([4, 8]),
+    n_outlier=st.sampled_from([0, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_gptq_quantized_range(bits, n_outlier, seed):
+    r = rng(seed)
+    w = r.normal(size=(8, 32)).astype(np.float32)
+    x = r.normal(size=(128, 32)).astype(np.float32)
+    h = gptq.hessian_from_calib(x)
+    qw, _ = gptq.gptq_quantize(w, h, gptq.GPTQConfig(bits=bits, n_outlier=n_outlier))
+    q = np.asarray(qw.w_int)
+    qmax = 2 ** (bits - 1) - 1
+    assert q.min() >= -qmax and q.max() <= qmax
+    assert np.asarray(qw.w_fp).shape == (8, n_outlier)

@@ -1,0 +1,31 @@
+//! Figure 12 (Appendix G) — layer-wise speedups on RTX 3080: the QUIK
+//! speedup shape holds on a second GPU (>4x large layers).
+
+use quik::config::QuikPolicy;
+use quik::devicemodel::gpu::RTX3080;
+use quik::devicemodel::layer::{FusionVersion, QuikLayerModel};
+use quik::util::bench::{f, header, row};
+
+fn main() {
+    let g = RTX3080;
+    let m = 2048;
+    println!("\nFigure 12 — layer-wise speedups, {m} tokens, {}\n", g.name);
+    header(&["layer k->n", "QUIK-4B", "QUIK-8B"]);
+    for (k, n) in [
+        (2048usize, 2048usize),
+        (4096, 4096),
+        (5120, 5120),
+        (8192, 8192),
+        (8192, 28672),
+    ] {
+        let p4 = QuikPolicy::QUIK_4B.plan_for("q_proj", k);
+        let p8 = QuikPolicy::QUIK_8B.plan_for("q_proj", k);
+        let l4 = QuikLayerModel::new(k, n, p4);
+        let l8 = QuikLayerModel::new(k, n, quik::config::LayerPlan { n_outlier: 0, ..p8 });
+        row(&[
+            format!("{k}->{n}"),
+            format!("{}x", f(l4.speedup(&g, m, FusionVersion::V3FusedBoth), 2)),
+            format!("{}x", f(l8.speedup(&g, m, FusionVersion::V3FusedBoth), 2)),
+        ]);
+    }
+}

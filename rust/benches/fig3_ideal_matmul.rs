@@ -1,0 +1,27 @@
+//! Figure 3 — ideal MatMul throughput by precision and layer size on
+//! RTX 3090: INT8 slightly >2× FP16, INT4 ≈ 2× INT8 at large sizes;
+//! all precisions collapse at small sizes (launch/memory bound).
+
+use quik::devicemodel::gpu::{Precision, RTX3090};
+use quik::devicemodel::roofline::achieved_flops;
+use quik::util::bench::{f, header, row};
+
+fn main() {
+    let g = RTX3090;
+    let m = 2048; // prefill tokens
+    println!("\nFigure 3 — ideal MatMul T(FL)OPS, {m} tokens, {}\n", g.name);
+    header(&["layer (k=n)", "FP16", "INT8", "INT4", "int4/fp16"]);
+    for size in [1024usize, 2048, 4096, 8192, 16384] {
+        let tops = |p| achieved_flops(&g, m, size, size, p) / 1e12;
+        let fp16 = tops(Precision::FP16);
+        let int8 = tops(Precision::INT8);
+        let int4 = tops(Precision::INT4);
+        row(&[
+            format!("{size}"),
+            f(fp16, 1),
+            f(int8, 1),
+            f(int4, 1),
+            format!("{:.2}x", int4 / fp16),
+        ]);
+    }
+}

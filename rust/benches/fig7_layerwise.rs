@@ -1,0 +1,35 @@
+//! Figure 7 — layer-wise speedup vs FP16 for QUIK-4B (256 outliers) and
+//! QUIK-8B (no outliers) on RTX 3090, LLaMA layer shapes, 2048 tokens.
+
+use quik::config::QuikPolicy;
+use quik::devicemodel::gpu::RTX3090;
+use quik::devicemodel::layer::{FusionVersion, QuikLayerModel};
+use quik::util::bench::{f, header, row};
+
+fn main() {
+    let g = RTX3090;
+    let m = 2048;
+    println!("\nFigure 7 — layer-wise speedups, {m} tokens, {}\n", g.name);
+    header(&["layer k->n", "QUIK-4B", "QUIK-8B"]);
+    let shapes = [
+        (2048usize, 2048usize),
+        (4096, 4096),
+        (4096, 11008),
+        (5120, 5120),
+        (8192, 8192),
+        (8192, 28672),
+        (28672, 8192),
+    ];
+    for (k, n) in shapes {
+        let p4 = QuikPolicy::QUIK_4B.plan_for("q_proj", k);
+        let p8 = QuikPolicy::QUIK_8B.plan_for("q_proj", k);
+        let l4 = QuikLayerModel::new(k, n, p4);
+        let l8 = QuikLayerModel::new(k, n, quik::config::LayerPlan { n_outlier: 0, ..p8 });
+        row(&[
+            format!("{k}->{n}"),
+            format!("{}x", f(l4.speedup(&g, m, FusionVersion::V3FusedBoth), 2)),
+            format!("{}x", f(l8.speedup(&g, m, FusionVersion::V3FusedBoth), 2)),
+        ]);
+    }
+    println!("\npaper shape: >4x on large layers, >2x on small ✓");
+}

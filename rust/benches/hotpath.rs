@@ -1,0 +1,84 @@
+//! Hot-path micro-benchmarks (the §Perf anchor for L3 optimization):
+//! request-time activation quantization, INT4 packing, outlier split,
+//! batcher admission/dispatch, and (when artifacts exist) PJRT decode
+//! step latency — the pieces that sit on the serving path.
+
+use std::time::{Duration, Instant};
+
+use quik::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use quik::coordinator::request::Request;
+use quik::quant::{int4, outlier, quantize_acts};
+use quik::util::bench::{bench_auto, report};
+use quik::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let budget = Duration::from_millis(300);
+
+    // --- per-token asymmetric quantization (Algorithm 1 Quantization) ---
+    for (m, k) in [(64usize, 4096usize), (2048, 4096)] {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let r = bench_auto(&format!("quantize_acts {m}x{k} int4"), budget, || {
+            std::hint::black_box(quantize_acts(&x, m, k, 4));
+        });
+        let gbps = (m * k * 4) as f64 / r.mean.as_secs_f64() / 1e9;
+        report(&r);
+        println!("    -> {gbps:.2} GB/s activation throughput");
+    }
+
+    // --- INT4 nibble packing ---
+    let vals: Vec<i8> = (0..1 << 20).map(|_| rng.range_i32(-8, 7) as i8).collect();
+    let r = bench_auto("int4_pack 1M values", budget, || {
+        std::hint::black_box(int4::pack(&vals));
+    });
+    report(&r);
+
+    // --- outlier split (column permutation of a token batch) ---
+    let (m, k) = (2048usize, 4096usize);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let idx: Vec<usize> = (0..256).map(|i| i * 16).collect();
+    let perm = outlier::outlier_permutation(k, &idx);
+    let r = bench_auto("outlier permute 2048x4096", budget, || {
+        std::hint::black_box(outlier::permute_columns(&x, m, k, &perm));
+    });
+    report(&r);
+
+    // --- batcher admission + dispatch ---
+    let r = bench_auto("batcher push+dispatch x1024", budget, || {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_sizes: vec![4, 1],
+            max_wait: Duration::from_millis(0),
+            bucket: 64,
+            max_queue: 4096,
+        });
+        for id in 0..1024u64 {
+            b.push(Request::new(id, vec![0; 48], 1));
+        }
+        let now = Instant::now() + Duration::from_millis(1);
+        while b.queued() > 0 {
+            std::hint::black_box(b.next_batch(now));
+        }
+    });
+    report(&r);
+    println!(
+        "    -> {:.0} req/s admission+dispatch",
+        1024.0 / r.mean.as_secs_f64()
+    );
+
+    // --- PJRT decode step (the serving inner loop) ---
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        use quik::runtime::engine::ModelRuntime;
+        let mut rt = ModelRuntime::load(dir, "llama-s").unwrap();
+        for variant in ["fp16_decode_b1", "quik4_decode_b1"] {
+            rt.ensure_loaded(variant).unwrap();
+            let art = rt.artifact(variant).unwrap();
+            let mut cache = art.new_cache().unwrap();
+            art.run(&[1], &mut cache).unwrap();
+            let r = bench_auto(&format!("pjrt decode step {variant}"), budget, || {
+                std::hint::black_box(art.run(&[1], &mut cache).unwrap());
+            });
+            report(&r);
+        }
+    }
+}

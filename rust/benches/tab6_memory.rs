@@ -1,0 +1,31 @@
+//! Table 6 — peak memory (GB) for FP16 / QUIK-8B / QUIK-4B across the
+//! model zoo, plus the outlier-storage note and GPU-count estimates.
+
+use quik::config::{model_zoo, QuikPolicy};
+use quik::devicemodel::gpu::RTX3090;
+use quik::memmodel::{memory_report, table6_row};
+use quik::util::bench::{f, header, row};
+
+fn main() {
+    println!("\nTable 6 — peak memory (GB), batch 1 x seq 2048\n");
+    header(&["model", "FP16", "QUIK-8B", "QUIK-4B", "red-8b", "red-4b", "GPUs 4b"]);
+    for (name, s) in model_zoo() {
+        let [fp16, q8, q4] = table6_row(&s, 1, 2048);
+        let gpus = (q4 * 1e9 / (RTX3090.mem_capacity * 0.9)).ceil();
+        row(&[
+            name.into(),
+            f(fp16, 1),
+            f(q8, 1),
+            f(q4, 1),
+            format!("{:.0}%", (1.0 - q8 / fp16) * 100.0),
+            format!("{:.0}%", (1.0 - q4 / fp16) * 100.0),
+            f(gpus, 0),
+        ]);
+    }
+    println!("\noutlier storage (paper note: 2.71 GB OPT-66B, 4.06 GB LLaMA2-70B):");
+    for name in ["opt-66b", "llama2-70b"] {
+        let s = quik::config::spec(name).unwrap();
+        let r = memory_report(&s, &QuikPolicy::QUIK_4B, 1, 2048);
+        println!("  {name:<12} outliers {:.2} GB", r.outlier_bytes / 1e9);
+    }
+}

@@ -1,0 +1,274 @@
+//! Model zoo: paper-scale architecture specs + QUIK precision policy.
+//!
+//! The shape table mirrors `python/compile/modeling/presets.PAPER_SCALE`
+//! (`make artifacts` emits `artifacts/model_zoo.json`; the parity test in
+//! `rust/tests/model_parity.rs` asserts the two stay in sync).  These specs
+//! feed the [`crate::devicemodel`] and [`crate::memmodel`] computations
+//! that regenerate every performance table and figure in the paper.
+
+/// Architecture family (decides the MLP shape and norm layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Llama,
+    Opt,
+    Falcon,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Option<Family> {
+        match s {
+            "llama" => Some(Family::Llama),
+            "opt" => Some(Family::Opt),
+            "falcon" => Some(Family::Falcon),
+            _ => None,
+        }
+    }
+}
+
+/// Paper-scale model shape spec.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    pub family: Family,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Key/value heads: < n_heads for grouped-query (LLaMA2-70B: 8) and
+    /// multi-query (Falcon-7B: 1) attention — shrinks k/v projections and
+    /// the KV cache.
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+/// One linear layer's shape within a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinearShape {
+    pub name: &'static str,
+    pub out_features: usize,
+    pub in_features: usize,
+}
+
+impl ModelSpec {
+    /// Head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Key/value projection width (GQA/MQA-aware).
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.d_head()
+    }
+
+    /// Per-block linear layers in forward order (paper's backbone layers).
+    pub fn linear_shapes(&self) -> Vec<LinearShape> {
+        let d = self.d_model;
+        let kv = self.kv_dim();
+        let f = self.d_ff;
+        let mut v = vec![
+            LinearShape { name: "q_proj", out_features: d, in_features: d },
+            LinearShape { name: "k_proj", out_features: kv, in_features: d },
+            LinearShape { name: "v_proj", out_features: kv, in_features: d },
+            LinearShape { name: "o_proj", out_features: d, in_features: d },
+        ];
+        match self.family {
+            Family::Llama => {
+                v.push(LinearShape { name: "gate_proj", out_features: f, in_features: d });
+                v.push(LinearShape { name: "up_proj", out_features: f, in_features: d });
+                v.push(LinearShape { name: "down_proj", out_features: d, in_features: f });
+            }
+            Family::Opt | Family::Falcon => {
+                v.push(LinearShape { name: "fc1", out_features: f, in_features: d });
+                v.push(LinearShape { name: "fc2", out_features: d, in_features: f });
+            }
+        }
+        v
+    }
+
+    /// Total backbone linear-layer parameters (excludes embeddings).
+    pub fn linear_params(&self) -> usize {
+        self.n_layers
+            * self
+                .linear_shapes()
+                .iter()
+                .map(|l| l.out_features * l.in_features)
+                .sum::<usize>()
+    }
+
+    /// Total parameters (backbone + embeddings/head; norms negligible).
+    pub fn total_params(&self) -> usize {
+        self.linear_params() + 2 * self.vocab * self.d_model
+    }
+
+    /// Is this layer the sensitive second MLP projection? (§4.3.1)
+    pub fn is_down_proj(name: &str) -> bool {
+        name == "down_proj" || name == "fc2"
+    }
+}
+
+/// Named paper-scale models (Tables 1-9, Figs 1/8/9/11).
+pub fn model_zoo() -> Vec<(&'static str, ModelSpec)> {
+    use Family::*;
+    let s = |family, d_model, n_layers, n_heads, n_kv_heads, d_ff, vocab, max_seq| ModelSpec {
+        family, d_model, n_layers, n_heads, n_kv_heads, d_ff, vocab, max_seq,
+    };
+    vec![
+        ("opt-1.3b", s(Opt, 2048, 24, 32, 32, 8192, 50272, 2048)),
+        ("opt-6.7b", s(Opt, 4096, 32, 32, 32, 16384, 50272, 2048)),
+        ("opt-13b", s(Opt, 5120, 40, 40, 40, 20480, 50272, 2048)),
+        ("opt-30b", s(Opt, 7168, 48, 56, 56, 28672, 50272, 2048)),
+        ("opt-66b", s(Opt, 9216, 64, 72, 72, 36864, 50272, 2048)),
+        ("llama2-7b", s(Llama, 4096, 32, 32, 32, 11008, 32000, 4096)),
+        ("llama2-13b", s(Llama, 5120, 40, 40, 40, 13824, 32000, 4096)),
+        ("llama2-70b", s(Llama, 8192, 80, 64, 8, 28672, 32000, 4096)),
+        ("falcon-7b", s(Falcon, 4544, 32, 71, 1, 18176, 65024, 2048)),
+        ("falcon-40b", s(Falcon, 8192, 60, 128, 8, 32768, 65024, 2048)),
+        ("falcon-180b", s(Falcon, 14848, 80, 232, 8, 59392, 65024, 2048)),
+    ]
+}
+
+/// Look up a zoo model by name.
+pub fn spec(name: &str) -> Option<ModelSpec> {
+    model_zoo().into_iter().find(|(n, _)| *n == name).map(|(_, s)| s)
+}
+
+/// QUIK per-layer precision plan (mirrors `compile.quik.policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub weight_bits: u32,
+    pub act_bits: u32,
+    pub n_outlier: usize,
+    pub sparse24: bool,
+}
+
+/// Model-wide precision policy (paper defaults: 256 outliers, 8-bit
+/// down-projection with a 3.5× outlier budget).
+#[derive(Debug, Clone, Copy)]
+pub struct QuikPolicy {
+    pub weight_bits: u32,
+    pub act_bits: u32,
+    pub n_outlier: usize,
+    pub down_proj_bits: u32,
+    pub down_proj_outlier_mult: f64,
+    pub sparse24: bool,
+}
+
+impl QuikPolicy {
+    pub const QUIK_4B: QuikPolicy = QuikPolicy {
+        weight_bits: 4,
+        act_bits: 4,
+        n_outlier: 256,
+        down_proj_bits: 8,
+        down_proj_outlier_mult: 3.5,
+        sparse24: false,
+    };
+    pub const QUIK_8B: QuikPolicy = QuikPolicy {
+        weight_bits: 8,
+        act_bits: 8,
+        n_outlier: 256,
+        down_proj_bits: 8,
+        down_proj_outlier_mult: 1.0,
+        sparse24: false,
+    };
+    /// "Ideal" kernels of Fig. 8: straight INT4/INT8, no outliers.
+    pub const IDEAL_4B: QuikPolicy = QuikPolicy {
+        weight_bits: 4,
+        act_bits: 4,
+        n_outlier: 0,
+        down_proj_bits: 4,
+        down_proj_outlier_mult: 1.0,
+        sparse24: false,
+    };
+    pub const IDEAL_8B: QuikPolicy = QuikPolicy {
+        weight_bits: 8,
+        act_bits: 8,
+        n_outlier: 0,
+        down_proj_bits: 8,
+        down_proj_outlier_mult: 1.0,
+        sparse24: false,
+    };
+    pub const FP16: QuikPolicy = QuikPolicy {
+        weight_bits: 16,
+        act_bits: 16,
+        n_outlier: 0,
+        down_proj_bits: 16,
+        down_proj_outlier_mult: 1.0,
+        sparse24: false,
+    };
+
+    /// Specialize the policy for a model family.  The 8-bit second-MLP
+    /// exception applies to LLaMA (`down_proj`) and Falcon (`fc2`) only;
+    /// OPT models quantize *all* backbone layers uniformly with 256
+    /// outliers (Table 1's "QUIK quantizes all linear backbone layers").
+    pub fn specialize(mut self, family: Family) -> QuikPolicy {
+        if matches!(family, Family::Opt) {
+            self.down_proj_bits = self.weight_bits;
+            self.down_proj_outlier_mult = 1.0;
+        }
+        self
+    }
+
+    /// Resolve the plan for one linear layer (QUIK's sensitivity rules).
+    pub fn plan_for(&self, layer_name: &str, in_features: usize) -> LayerPlan {
+        let is_down = ModelSpec::is_down_proj(layer_name);
+        let (wb, ab) = if is_down {
+            (self.down_proj_bits, self.down_proj_bits)
+        } else {
+            (self.weight_bits, self.act_bits)
+        };
+        let mut n_out = if is_down && self.n_outlier > 0 {
+            (self.n_outlier as f64 * self.down_proj_outlier_mult).round() as usize
+        } else {
+            self.n_outlier
+        };
+        n_out = n_out.min(in_features / 2);
+        LayerPlan { weight_bits: wb, act_bits: ab, n_outlier: n_out, sparse24: self.sparse24 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_all_eleven_models() {
+        assert_eq!(model_zoo().len(), 11);
+        assert!(spec("llama2-70b").is_some());
+        assert!(spec("nonexistent").is_none());
+    }
+
+    #[test]
+    fn param_counts_near_nameplate() {
+        // within 15% of the advertised parameter counts
+        let cases = [
+            ("opt-66b", 66e9, 0.15),
+            ("llama2-7b", 6.7e9, 0.15),
+            ("llama2-70b", 70e9, 0.10),
+            ("falcon-180b", 180e9, 0.10),
+        ];
+        for (name, want, tol) in cases {
+            let got = spec(name).unwrap().total_params() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < tol, "{name}: {got:.3e} vs {want:.3e} (rel {rel:.2})");
+        }
+    }
+
+    #[test]
+    fn down_proj_plan_rules() {
+        let p = QuikPolicy::QUIK_4B;
+        let dp = p.plan_for("down_proj", 28672);
+        assert_eq!(dp.weight_bits, 8);
+        assert_eq!(dp.n_outlier, 896); // 3.5 × 256 (Table 8)
+        let qp = p.plan_for("q_proj", 8192);
+        assert_eq!(qp.weight_bits, 4);
+        assert_eq!(qp.n_outlier, 256);
+    }
+
+    #[test]
+    fn llama_has_three_mlp_linears() {
+        let s = spec("llama2-7b").unwrap();
+        assert_eq!(s.linear_shapes().len(), 7);
+        let s = spec("opt-66b").unwrap();
+        assert_eq!(s.linear_shapes().len(), 6);
+    }
+}

@@ -1,0 +1,261 @@
+//! Dynamic batcher: length-bucketed, deadline-driven batch formation.
+//!
+//! The artifacts expose a discrete set of batch sizes (e.g. {1, 4}); the
+//! batcher's job is to pick, at each scheduling point, the largest batch
+//! the queue can fill — and to stop waiting once the oldest request has
+//! been queued past `max_wait` (tail-latency guard).  Requests are
+//! bucketed by prompt length because a batch shares one `cache_len`
+//! scalar (see module docs of [`crate::coordinator`]).
+//!
+//! Pure data structure — no threads, no clocks of its own — so every
+//! policy decision is unit-testable with an explicit `now`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+/// A formed batch: the requests plus the artifact batch size to use
+/// (requests.len() ≤ batch_size; the gap is padded with dummy rows).
+#[derive(Debug)]
+pub struct BatchPlan {
+    pub requests: Vec<Request>,
+    pub batch_size: usize,
+    pub prompt_len: usize,
+}
+
+impl BatchPlan {
+    pub fn padding(&self) -> usize {
+        self.batch_size - self.requests.len()
+    }
+}
+
+/// Batch-formation policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Artifact batch sizes available, descending (e.g. [4, 1]).
+    pub batch_sizes: Vec<usize>,
+    /// Max time the oldest request may wait for co-riders.
+    pub max_wait: Duration,
+    /// Prompt-length bucket granularity (lengths are rounded up to this).
+    pub bucket: usize,
+    /// Admission limit: requests beyond this queue depth are rejected
+    /// (backpressure — the client's response channel closes immediately).
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            batch_sizes: vec![4, 1],
+            max_wait: Duration::from_millis(20),
+            bucket: 64,
+            max_queue: 1024,
+        }
+    }
+}
+
+/// The queue + policy.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(!cfg.batch_sizes.is_empty());
+        let mut cfg = cfg;
+        cfg.batch_sizes.sort_unstable_by(|a, b| b.cmp(a));
+        Self { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    /// Admission-controlled push: rejects (returns the request back) when
+    /// the queue is at capacity, so callers can fail fast instead of
+    /// building unbounded latency.
+    pub fn try_push(&mut self, r: Request) -> Result<(), Request> {
+        if self.queue.len() >= self.cfg.max_queue {
+            return Err(r);
+        }
+        self.queue.push_back(r);
+        Ok(())
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn bucket_of(&self, prompt_len: usize) -> usize {
+        prompt_len.div_ceil(self.cfg.bucket).max(1) * self.cfg.bucket
+    }
+
+    /// Count of queued requests in the same bucket as the oldest request.
+    fn head_bucket_count(&self) -> (usize, usize) {
+        let head_bucket = self.bucket_of(self.queue[0].prompt_len());
+        let count = self
+            .queue
+            .iter()
+            .filter(|r| self.bucket_of(r.prompt_len()) == head_bucket)
+            .count();
+        (head_bucket, count)
+    }
+
+    /// Form the next batch, or `None` if the policy prefers to wait.
+    ///
+    /// Policy: serve the oldest request's bucket.  Take the largest
+    /// artifact batch size that the bucket can fill; if the bucket can't
+    /// fill even the smallest size times... (it always can: size 1), wait
+    /// for co-riders unless the oldest request is older than `max_wait` —
+    /// then dispatch whatever is there, padded.
+    pub fn next_batch(&mut self, now: Instant) -> Option<BatchPlan> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let (head_bucket, available) = self.head_bucket_count();
+        let oldest_wait = now.duration_since(self.queue[0].arrival);
+        let deadline_hit = oldest_wait >= self.cfg.max_wait;
+
+        // largest size the bucket fills completely
+        let fill_size = self.cfg.batch_sizes.iter().copied().find(|&s| available >= s);
+        let size = match (fill_size, deadline_hit) {
+            (Some(s), _) => s,
+            // can't fill any size fully; if the deadline passed, dispatch
+            // padded at the smallest size ≥ available, else wait
+            (None, true) => self
+                .cfg
+                .batch_sizes
+                .iter()
+                .copied()
+                .filter(|&s| s >= available)
+                .min()
+                .unwrap_or_else(|| self.cfg.batch_sizes[0]),
+            (None, false) => return None,
+        };
+
+        // extract up to `size` requests from the head bucket, FIFO
+        let mut requests = Vec::with_capacity(size);
+        let mut i = 0;
+        while i < self.queue.len() && requests.len() < size {
+            if self.bucket_of(self.queue[i].prompt_len()) == head_bucket {
+                requests.push(self.queue.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        Some(BatchPlan { requests, batch_size: size, prompt_len: head_bucket })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, vec![0; len], 4)
+    }
+
+    fn batcher(sizes: &[usize], wait_ms: u64) -> DynamicBatcher {
+        DynamicBatcher::new(BatcherConfig {
+            batch_sizes: sizes.to_vec(),
+            max_wait: Duration::from_millis(wait_ms),
+            bucket: 64,
+            max_queue: 1024,
+        })
+    }
+
+    #[test]
+    fn fills_largest_batch_when_queue_allows() {
+        let mut b = batcher(&[4, 1], 1000);
+        for i in 0..5 {
+            b.push(req(i, 60));
+        }
+        let plan = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(plan.batch_size, 4);
+        assert_eq!(plan.requests.len(), 4);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn waits_for_coriders_until_deadline() {
+        let mut b = batcher(&[4, 1], 1000);
+        b.push(req(0, 60));
+        b.push(req(1, 60));
+        // only 2 of 4 — policy prefers waiting (falls to size 1? no:
+        // 1 fits! available=2 ≥ 1 → fill_size = Some(4)? 2 < 4 → next is 1)
+        let plan = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(plan.batch_size, 1);
+        assert_eq!(plan.requests.len(), 1);
+    }
+
+    #[test]
+    fn deadline_dispatches_padded_batch() {
+        let mut b = batcher(&[4], 0); // only size 4 exists; zero wait
+        b.push(req(0, 60));
+        b.push(req(1, 60));
+        let plan = b.next_batch(Instant::now() + Duration::from_millis(1)).unwrap();
+        assert_eq!(plan.batch_size, 4);
+        assert_eq!(plan.requests.len(), 2);
+        assert_eq!(plan.padding(), 2);
+    }
+
+    #[test]
+    fn only_size4_waits_below_deadline() {
+        let mut b = batcher(&[4], 10_000);
+        b.push(req(0, 60));
+        b.push(req(1, 60));
+        assert!(b.next_batch(Instant::now()).is_none());
+        assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn buckets_by_prompt_length() {
+        let mut b = batcher(&[4, 1], 1000);
+        b.push(req(0, 60)); // bucket 64
+        b.push(req(1, 100)); // bucket 128
+        b.push(req(2, 50)); // bucket 64
+        b.push(req(3, 64)); // bucket 64
+        b.push(req(4, 40)); // bucket 64
+        let plan = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(plan.batch_size, 4);
+        assert_eq!(plan.prompt_len, 64);
+        let ids: Vec<u64> = plan.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 3, 4]); // FIFO within the bucket
+        assert_eq!(b.queued(), 1); // the 128-bucket request remains
+    }
+
+    #[test]
+    fn admission_control_rejects_over_capacity() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_sizes: vec![1],
+            max_wait: Duration::from_millis(0),
+            bucket: 64,
+            max_queue: 2,
+        });
+        assert!(b.try_push(req(0, 10)).is_ok());
+        assert!(b.try_push(req(1, 10)).is_ok());
+        let rejected = b.try_push(req(2, 10));
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().id, 2);
+        assert_eq!(b.queued(), 2);
+        // draining frees capacity again
+        b.next_batch(Instant::now() + Duration::from_millis(1)).unwrap();
+        assert!(b.try_push(req(3, 10)).is_ok());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = batcher(&[1], 0);
+        for i in 0..3 {
+            b.push(req(i, 60));
+        }
+        for want in 0..3 {
+            let plan = b.next_batch(Instant::now()).unwrap();
+            assert_eq!(plan.requests[0].id, want);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Serving metrics: counters + log-bucketed latency histograms.
+
+use std::time::Duration;
+
+/// Log-scale histogram from 1µs to ~17min (doubling buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>, // bucket i covers [2^i µs, 2^(i+1) µs)
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { buckets: vec![0; 30], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Approximate quantile (upper edge of the bucket containing it).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// All serving-path metrics (owned by the coordinator worker thread).
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub rejected: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub queue_time: Histogram,
+    pub prefill_time: Histogram,
+    pub decode_time: Histogram,
+    pub e2e_time: Histogram,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, batch_size: usize, used: usize) {
+        self.batches += 1;
+        self.padded_slots += (batch_size - used) as u64;
+    }
+
+    /// Mean batch occupancy (1.0 = no padding waste).
+    pub fn occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            return 1.0;
+        }
+        let total_slots = self.padded_slots + self.requests_completed;
+        self.requests_completed as f64 / total_slots as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} rejected={} prompt_toks={} gen_toks={} batches={} occupancy={:.2}\n\
+             queue   mean={:?} p50={:?} p99={:?}\n\
+             prefill mean={:?} p50={:?} p99={:?}\n\
+             decode  mean={:?} p50={:?} p99={:?}\n\
+             e2e     mean={:?} p50={:?} p99={:?}",
+            self.requests_completed,
+            self.rejected,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.batches,
+            self.occupancy(),
+            self.queue_time.mean(),
+            self.queue_time.quantile(0.5),
+            self.queue_time.quantile(0.99),
+            self.prefill_time.mean(),
+            self.prefill_time.quantile(0.5),
+            self.prefill_time.quantile(0.99),
+            self.decode_time.mean(),
+            self.decode_time.quantile(0.5),
+            self.decode_time.quantile(0.99),
+            self.e2e_time.mean(),
+            self.e2e_time.quantile(0.5),
+            self.e2e_time.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::default();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) <= h.max() * 2);
+    }
+
+    #[test]
+    fn histogram_mean() {
+        let mut h = Histogram::default();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn occupancy_tracks_padding() {
+        let mut m = Metrics::default();
+        m.requests_completed = 6;
+        m.record_batch(4, 3); // 1 padded
+        m.record_batch(4, 3); // 1 padded
+        assert!((m.occupancy() - 6.0 / 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,38 @@
+//! L3 serving coordinator — the paper's system contribution, integrated.
+//!
+//! QUIK's evaluation is a batched-prefill serving scenario (§4.2: 2048-token
+//! prompts, single batches, HuggingFace integration).  This coordinator is
+//! the production shape of that integration: a request router + dynamic
+//! batcher + prefill/decode scheduler in front of the PJRT runtime that
+//! executes the AOT QUIK artifacts.  Python is never on this path.
+//!
+//! Pipeline:
+//!
+//! ```text
+//! submit() ──▶ queue ──▶ DynamicBatcher (length-bucketed, token budget)
+//!                             │ BatchPlan
+//!                             ▼
+//!                  Scheduler: prefill (b∈{1,4}) → greedy decode loop
+//!                             │ threads KV-cache literals through PJRT
+//!                             ▼
+//!                        Response (+ Metrics)
+//! ```
+//!
+//! Batches are bucketed by prompt length because the artifacts have static
+//! shapes and the KV cache advances with one shared `cache_len` scalar —
+//! the same constraint real serving stacks handle with shape buckets.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod speculative;
+pub mod tcp;
+
+pub use batcher::{BatchPlan, DynamicBatcher};
+pub use metrics::Metrics;
+pub use request::{Request, RequestId, Response};
+pub use scheduler::Scheduler;
+pub use server::{Coordinator, ServeReport, WorkloadSpec};
+pub use speculative::{SpecStats, SpeculativeDecoder};

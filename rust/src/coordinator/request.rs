@@ -1,0 +1,62 @@
+//! Request/response types for the serving path.
+
+use std::time::{Duration, Instant};
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// One inference request: a tokenized prompt + generation budget.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self { id, prompt, max_new_tokens, arrival: Instant::now() }
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.len()
+    }
+}
+
+/// Completed request with timing breakdown.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    /// Time spent queued before its batch was formed.
+    pub queue_time: Duration,
+    /// Prefill wall time of the batch this request rode in.
+    pub prefill_time: Duration,
+    /// Total decode wall time of the batch.
+    pub decode_time: Duration,
+    /// Arrival → response.
+    pub total_time: Duration,
+    /// Batch size this request was served with.
+    pub batch_size: usize,
+}
+
+impl Response {
+    /// Tokens processed (prompt) + produced (generated).
+    pub fn total_tokens(&self) -> usize {
+        self.prompt_len + self.generated.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_basics() {
+        let r = Request::new(7, vec![1, 2, 3], 16);
+        assert_eq!(r.prompt_len(), 3);
+        assert_eq!(r.id, 7);
+    }
+}

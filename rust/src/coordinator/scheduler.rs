@@ -1,0 +1,175 @@
+//! Prefill/decode scheduler: executes a [`BatchPlan`] against the runtime.
+//!
+//! One batch goes through a static-batching lifecycle: right-pad prompts
+//! to the artifact's prefill length, run the prefill artifact, roll the
+//! shared `cache_len` back to the true prompt length (pad garbage beyond
+//! it is overwritten and causally masked — see `forward_with_cache`), then
+//! run the decode artifact greedily until every rider has its tokens.
+//!
+//! Variant names follow the manifest: `{fp16,quik4}_{prefill,decode}_b{N}`.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::batcher::BatchPlan;
+use super::request::Response;
+use crate::runtime::engine::ModelRuntime;
+
+/// Which weight format to serve (selects the artifact family).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Fp16,
+    Quik4,
+}
+
+impl Variant {
+    pub fn prefix(&self) -> &'static str {
+        match self {
+            Variant::Fp16 => "fp16",
+            Variant::Quik4 => "quik4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "fp16" => Some(Variant::Fp16),
+            "quik4" => Some(Variant::Quik4),
+            _ => None,
+        }
+    }
+}
+
+/// Executes batches; owns nothing but a reference to the runtime.
+pub struct Scheduler<'rt> {
+    runtime: &'rt mut ModelRuntime,
+    variant: Variant,
+    pad_token: i32,
+}
+
+impl<'rt> Scheduler<'rt> {
+    pub fn new(runtime: &'rt mut ModelRuntime, variant: Variant) -> Self {
+        Self { runtime, variant, pad_token: 0 }
+    }
+
+    fn artifact_name(&self, phase: &str, batch: usize) -> String {
+        format!("{}_{}_b{}", self.variant.prefix(), phase, batch)
+    }
+
+    /// Run one batch to completion (prefill + full decode).  Returns one
+    /// [`Response`] per real request (padding rows are dropped).
+    pub fn run_batch(&mut self, plan: BatchPlan) -> Result<Vec<Response>> {
+        let b = plan.batch_size;
+        let prefill_name = self.artifact_name("prefill", b);
+        let decode_name = self.artifact_name("decode", b);
+        self.runtime.ensure_loaded(&prefill_name)?;
+        self.runtime.ensure_loaded(&decode_name)?;
+
+        let prefill = self.runtime.artifact(&prefill_name).unwrap();
+        let seq = prefill.spec.seq;
+        let max_ctx = prefill.spec.inputs[1].shape[3]; // cache T_max
+
+        // Longest common prompt length in the batch (bucketed equal, but
+        // be safe): shared cache_len forces alignment to the minimum.
+        let prompt_len = plan
+            .requests
+            .iter()
+            .map(|r| r.prompt_len())
+            .min()
+            .context("empty batch")?;
+        if prompt_len > seq {
+            bail!("prompt length {prompt_len} exceeds prefill seq {seq}");
+        }
+        let max_new = plan
+            .requests
+            .iter()
+            .map(|r| r.max_new_tokens)
+            .max()
+            .unwrap_or(0)
+            .min(max_ctx - prompt_len);
+
+        // ---- prefill ----------------------------------------------------
+        let t_batch = Instant::now();
+        let mut tokens = vec![self.pad_token; b * seq];
+        for (row, req) in plan.requests.iter().enumerate() {
+            tokens[row * seq..row * seq + prompt_len]
+                .copy_from_slice(&req.prompt[..prompt_len]);
+        }
+        let mut cache = prefill.new_cache()?;
+        let t0 = Instant::now();
+        let out = prefill.run(&tokens, &mut cache)?;
+        let prefill_time = t0.elapsed();
+        // Roll the cache position back to the true prompt end: positions
+        // beyond it hold pad garbage that decode overwrites sequentially.
+        cache.cache_len = prompt_len as i32;
+
+        // ---- greedy decode ----------------------------------------------
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); plan.requests.len()];
+        let mut next: Vec<i32> = (0..b)
+            .map(|row| argmax(out.row(row, prompt_len - 1)))
+            .collect();
+        let decode = self.runtime.artifact(&decode_name).unwrap();
+        let t1 = Instant::now();
+        for _step in 0..max_new {
+            for (row, g) in generated.iter_mut().enumerate() {
+                if g.len() < plan.requests[row].max_new_tokens {
+                    g.push(next[row]);
+                }
+            }
+            if generated
+                .iter()
+                .zip(&plan.requests)
+                .all(|(g, r)| g.len() >= r.max_new_tokens)
+            {
+                break;
+            }
+            let step_out = decode.run(&next, &mut cache)?;
+            next = (0..b).map(|row| argmax(step_out.row(row, 0))).collect();
+        }
+        let decode_time = t1.elapsed();
+
+        // ---- responses ---------------------------------------------------
+        let total = t_batch.elapsed();
+        Ok(plan
+            .requests
+            .iter()
+            .zip(generated)
+            .map(|(req, gen)| Response {
+                id: req.id,
+                prompt_len,
+                generated: gen,
+                queue_time: t_batch.duration_since(req.arrival),
+                prefill_time,
+                decode_time,
+                total_time: req.arrival.elapsed().max(total),
+                batch_size: b,
+            })
+            .collect())
+    }
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(Variant::Quik4.prefix(), "quik4");
+        assert_eq!(Variant::parse("fp16"), Some(Variant::Fp16));
+        assert_eq!(Variant::parse("x"), None);
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 0.9, -0.5]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+}

@@ -1,0 +1,283 @@
+//! The coordinator: worker thread owning the PJRT runtime + client handle.
+//!
+//! PJRT wrapper types are `!Send`, so the runtime is *created inside* the
+//! worker thread and never crosses a thread boundary; clients talk to it
+//! through channels.  The worker loop alternates between draining the
+//! submission channel into the [`DynamicBatcher`] and executing the next
+//! [`BatchPlan`] through the [`Scheduler`].
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, Response};
+use super::scheduler::{Scheduler, Variant};
+use crate::runtime::engine::ModelRuntime;
+use crate::util::rng::Rng;
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Metrics(Sender<Metrics>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator (clone `Sender`s freely).
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<Result<()>>>,
+    next_id: RequestId,
+    pub vocab: usize,
+    pub prefill_seq: usize,
+}
+
+impl Coordinator {
+    /// Start the worker: loads the runtime for (model, variant), reports
+    /// readiness (or the startup error) before returning.
+    pub fn start(
+        artifacts_dir: impl Into<String>,
+        model: impl Into<String>,
+        variant: Variant,
+        batcher_cfg: BatcherConfig,
+    ) -> Result<Self> {
+        let artifacts_dir = artifacts_dir.into();
+        let model = model.into();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+
+        let worker = std::thread::Builder::new()
+            .name("quik-coordinator".into())
+            .spawn(move || worker_main(artifacts_dir, model, variant, batcher_cfg, rx, ready_tx))
+            .context("spawning coordinator worker")?;
+
+        let (vocab, prefill_seq) = ready_rx
+            .recv()
+            .context("coordinator worker died during startup")??;
+        Ok(Self { tx, worker: Some(worker), next_id: 0, vocab, prefill_seq })
+    }
+
+    /// Submit a request; returns the channel the response will arrive on.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id;
+        self.next_id += 1;
+        let _ = self.tx.send(Msg::Submit(Request::new(id, prompt, max_new_tokens), tx));
+        rx
+    }
+
+    /// Snapshot of the worker's metrics.
+    pub fn metrics(&self) -> Result<Metrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Metrics(tx)).context("worker gone")?;
+        rx.recv().context("worker gone")
+    }
+
+    /// Graceful shutdown (drains nothing — call after workloads finish).
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(
+    artifacts_dir: String,
+    model: String,
+    variant: Variant,
+    batcher_cfg: BatcherConfig,
+    rx: Receiver<Msg>,
+    ready_tx: Sender<Result<(usize, usize)>>,
+) -> Result<()> {
+    let mut runtime = match ModelRuntime::load(&artifacts_dir, &model) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return Ok(());
+        }
+    };
+    // Pre-compile the artifacts we will serve with (largest batch first).
+    let sizes = batcher_cfg.batch_sizes.clone();
+    for b in &sizes {
+        for phase in ["prefill", "decode"] {
+            let name = format!("{}_{}_b{}", variant.prefix(), phase, b);
+            if let Err(e) = runtime.ensure_loaded(&name) {
+                let _ = ready_tx.send(Err(e));
+                return Ok(());
+            }
+        }
+    }
+    let entry = runtime.manifest.model(&model)?;
+    let vocab = entry.config.vocab;
+    let prefill_seq = runtime
+        .artifact(&format!("{}_prefill_b{}", variant.prefix(), sizes[0]))
+        .map(|a| a.spec.seq)
+        .unwrap_or(64);
+    let _ = ready_tx.send(Ok((vocab, prefill_seq)));
+
+    let mut batcher = DynamicBatcher::new(batcher_cfg);
+    let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+    let mut metrics = Metrics::default();
+
+    loop {
+        // Drain the mailbox (short block when idle so deadlines fire).
+        let msg = if batcher.queued() == 0 {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        } else {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(_) => None,
+            }
+        };
+        match msg {
+            Some(Msg::Submit(req, tx)) => {
+                let id = req.id;
+                match batcher.try_push(req) {
+                    Ok(()) => {
+                        waiters.insert(id, tx);
+                    }
+                    Err(_rejected) => {
+                        metrics.rejected += 1;
+                        drop(tx); // client sees a closed channel immediately
+                    }
+                }
+                continue; // keep draining before forming a batch
+            }
+            Some(Msg::Metrics(tx)) => {
+                let _ = tx.send(metrics.clone());
+                continue;
+            }
+            Some(Msg::Shutdown) => return Ok(()),
+            None => {}
+        }
+
+        if let Some(plan) = batcher.next_batch(Instant::now()) {
+            let used = plan.requests.len();
+            let bsize = plan.batch_size;
+            let mut scheduler = Scheduler::new(&mut runtime, variant);
+            match scheduler.run_batch(plan) {
+                Ok(responses) => {
+                    metrics.record_batch(bsize, used);
+                    for resp in responses {
+                        metrics.requests_completed += 1;
+                        metrics.prompt_tokens += resp.prompt_len as u64;
+                        metrics.generated_tokens += resp.generated.len() as u64;
+                        metrics.queue_time.record(resp.queue_time);
+                        metrics.prefill_time.record(resp.prefill_time);
+                        metrics.decode_time.record(resp.decode_time);
+                        metrics.e2e_time.record(resp.total_time);
+                        if let Some(tx) = waiters.remove(&resp.id) {
+                            let _ = tx.send(resp);
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[coordinator] batch failed: {e:#}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// workload driver (used by the CLI and the e2e example)
+// ---------------------------------------------------------------------------
+
+/// Synthetic serving workload description.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// Requests/s Poisson arrival rate; `None` = submit all at once (burst).
+    pub arrival_rate: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self { n_requests: 16, prompt_len: 48, max_new_tokens: 16, arrival_rate: None, seed: 0 }
+    }
+}
+
+/// Aggregate results of one workload run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub n_requests: usize,
+    pub wall_time: Duration,
+    pub total_tokens: usize,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub mean_e2e: Duration,
+    pub p99_e2e: Duration,
+    pub metrics: Metrics,
+}
+
+impl ServeReport {
+    pub fn tokens_per_s(&self) -> f64 {
+        self.total_tokens as f64 / self.wall_time.as_secs_f64()
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        self.n_requests as f64 / self.wall_time.as_secs_f64()
+    }
+}
+
+/// Drive a workload through a coordinator and gather the report.
+pub fn run_workload(coord: &mut Coordinator, spec: &WorkloadSpec) -> Result<ServeReport> {
+    let mut rng = Rng::new(spec.seed);
+    let vocab = coord.vocab as i32;
+    let prompt_len = spec.prompt_len.min(coord.prefill_seq);
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(spec.n_requests);
+    for _ in 0..spec.n_requests {
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.range_i32(0, vocab - 1)).collect();
+        pending.push(coord.submit(prompt, spec.max_new_tokens));
+        if let Some(rate) = spec.arrival_rate {
+            std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
+        }
+    }
+
+    let mut responses = Vec::with_capacity(spec.n_requests);
+    for rx in pending {
+        responses.push(rx.recv().context("coordinator dropped a request")?);
+    }
+    let wall = t0.elapsed();
+
+    let prompt_tokens: usize = responses.iter().map(|r| r.prompt_len).sum();
+    let generated: usize = responses.iter().map(|r| r.generated.len()).sum();
+    let mut e2e: Vec<Duration> = responses.iter().map(|r| r.total_time).collect();
+    e2e.sort();
+    let mean = e2e.iter().sum::<Duration>() / e2e.len() as u32;
+    let p99 = e2e[(e2e.len() * 99 / 100).min(e2e.len() - 1)];
+
+    Ok(ServeReport {
+        n_requests: spec.n_requests,
+        wall_time: wall,
+        total_tokens: prompt_tokens + generated,
+        prompt_tokens,
+        generated_tokens: generated,
+        mean_e2e: mean,
+        p99_e2e: p99,
+        metrics: coord.metrics()?,
+    })
+}

@@ -1,0 +1,202 @@
+//! Speculative decoding on QUIK artifacts (the paper's §5 future work,
+//! "integration with speculative decoding (Leviathan et al., 2023)").
+//!
+//! The cheap **draft** model is the QUIK-4B quantized variant; the
+//! **target** is the FP16 variant of the *same* checkpoint.  Greedy
+//! speculative decoding:
+//!
+//! 1. draft K tokens autoregressively with `quik4_decode_b1`;
+//! 2. score all K in one `fp16_verify_b1` call (a cached forward with
+//!    `S_new = K` — the KV-cache interface makes multi-token verification
+//!    a first-class artifact);
+//! 3. accept the longest prefix where the target's greedy choice equals
+//!    the draft; emit one extra target token at the first divergence;
+//! 4. **roll back** both caches to the accepted position — sound because
+//!    the fixed-buffer cache masks positions ≥ `cache_len` and decode
+//!    overwrites them in order (see `forward_with_cache`).
+//!
+//! With a well-calibrated QUIK draft the acceptance rate is high (the
+//! quantized model rarely flips greedy choices), so most steps emit
+//! several tokens per expensive target call.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::engine::{LoadedArtifact, ModelRuntime};
+
+/// Outcome statistics of a speculative generation run.
+#[derive(Debug, Clone, Default)]
+pub struct SpecStats {
+    pub draft_tokens: usize,
+    pub accepted_tokens: usize,
+    pub target_calls: usize,
+    pub draft_calls: usize,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the target accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.draft_tokens == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens as f64 / self.draft_tokens as f64
+    }
+
+    /// Tokens emitted per target-model call (the speedup driver).
+    pub fn tokens_per_target_call(&self, emitted: usize) -> f64 {
+        if self.target_calls == 0 {
+            return 0.0;
+        }
+        emitted as f64 / self.target_calls as f64
+    }
+}
+
+/// Greedy speculative decoder over one (draft, target) artifact pair.
+pub struct SpeculativeDecoder<'rt> {
+    draft_decode: &'rt LoadedArtifact,
+    target_verify: &'rt LoadedArtifact,
+    target_prefill: &'rt LoadedArtifact,
+    draft_prefill: &'rt LoadedArtifact,
+    k: usize,
+}
+
+impl<'rt> SpeculativeDecoder<'rt> {
+    /// Borrow the four artifacts from a runtime (load them first with
+    /// [`ModelRuntime::ensure_loaded`]; see [`load_artifacts`]).
+    pub fn new(rt: &'rt ModelRuntime) -> Result<Self> {
+        let need = |v: &str| {
+            rt.artifact(v)
+                .with_context(|| format!("artifact {v} not loaded — call load_artifacts"))
+        };
+        let target_verify = need("fp16_verify_b1")?;
+        let k = target_verify.spec.seq;
+        Ok(Self {
+            draft_decode: need("quik4_decode_b1")?,
+            target_verify,
+            target_prefill: need("fp16_prefill_b1")?,
+            draft_prefill: need("quik4_prefill_b1")?,
+            k,
+        })
+    }
+
+    /// Load everything [`SpeculativeDecoder::new`] needs.
+    pub fn load_artifacts(rt: &mut ModelRuntime) -> Result<()> {
+        for v in [
+            "quik4_decode_b1",
+            "quik4_prefill_b1",
+            "fp16_verify_b1",
+            "fp16_prefill_b1",
+        ] {
+            rt.ensure_loaded(v)?;
+        }
+        Ok(())
+    }
+
+    /// Generate `n_tokens` greedily from `prompt`; returns the tokens (as
+    /// the FP16 target would have produced them) plus statistics.
+    pub fn generate(&self, prompt: &[i32], n_tokens: usize) -> Result<(Vec<i32>, SpecStats)> {
+        let seq = self.target_prefill.spec.seq;
+        if prompt.len() != seq {
+            bail!("prompt must be exactly {seq} tokens (artifact static shape)");
+        }
+        let mut stats = SpecStats::default();
+
+        // Prefill both models on the same prompt.
+        let mut tgt_cache = self.target_prefill.new_cache()?;
+        let tgt_out = self.target_prefill.run(prompt, &mut tgt_cache)?;
+        let mut drf_cache = self.draft_prefill.new_cache()?;
+        self.draft_prefill.run(prompt, &mut drf_cache)?;
+
+        // The first token comes from the target's prefill logits.
+        let mut out = vec![tgt_out.argmax_last()[0]];
+        let max_ctx = self.target_prefill.spec.inputs[1].shape[3];
+
+        while out.len() < n_tokens {
+            let budget = n_tokens - out.len();
+            let k = self.k.min(budget).min(max_ctx - tgt_cache.cache_len as usize - 1);
+            if k == 0 {
+                break;
+            }
+            // --- draft k tokens (starting from the last emitted token) ---
+            let mut draft = Vec::with_capacity(k);
+            let mut cur = *out.last().unwrap();
+            for _ in 0..k {
+                let step = self.draft_decode.run(&[cur], &mut drf_cache)?;
+                stats.draft_calls += 1;
+                cur = step.argmax_last()[0];
+                draft.push(cur);
+            }
+            stats.draft_tokens += k;
+
+            // --- verify: one target call over [last_emitted, draft[..k-1]] ---
+            // Scoring position i of this window predicts draft[i].
+            let mut window = Vec::with_capacity(self.k);
+            window.push(*out.last().unwrap());
+            window.extend(&draft[..k - 1]);
+            while window.len() < self.k {
+                window.push(0); // pad; positions ≥ k are rolled back anyway
+            }
+            let before = tgt_cache.cache_len;
+            let v = self.target_verify.run(&window, &mut tgt_cache)?;
+            stats.target_calls += 1;
+
+            // --- accept longest agreeing prefix; emit target's fix-up ---
+            let mut accepted = 0;
+            let mut fixup = None;
+            for i in 0..k {
+                let t = argmax(v.row(0, i));
+                if t == draft[i] {
+                    accepted += 1;
+                } else {
+                    fixup = Some(t);
+                    break;
+                }
+            }
+            stats.accepted_tokens += accepted;
+            out.extend(&draft[..accepted]);
+            let had_fixup = fixup.is_some();
+            if let Some(t) = fixup {
+                out.push(t);
+            }
+            // --- roll both caches back to the true emitted length -------
+            // Invariant: the cache holds every emitted token except the
+            // newest one (which rides as the next window's first entry).
+            // The verify call wrote [pending, draft[..k-1]]; keep the
+            // pending slot plus the accepted drafts that live in-cache.
+            tgt_cache.cache_len = before + accepted as i32 + if had_fixup { 1 } else { 0 };
+            // draft consumed k; keep the same true context as the target
+            drf_cache.cache_len = tgt_cache.cache_len;
+            // resync draft if the target corrected it: nothing to do —
+            // positions past cache_len are masked and will be rewritten.
+            if out.len() >= n_tokens {
+                break;
+            }
+        }
+        out.truncate(n_tokens);
+        Ok((out, stats))
+    }
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_rates() {
+        let s = SpecStats {
+            draft_tokens: 10,
+            accepted_tokens: 8,
+            target_calls: 3,
+            draft_calls: 10,
+        };
+        assert!((s.acceptance_rate() - 0.8).abs() < 1e-9);
+        assert!((s.tokens_per_target_call(11) - 11.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,217 @@
+//! TCP front-end: a JSON-lines inference protocol over the coordinator.
+//!
+//! Wire format — one JSON object per line, in either direction::
+//!
+//!   → {"prompt": [1, 2, 3, ...], "max_new_tokens": 16}
+//!   ← {"id": 0, "tokens": [7, 42, ...], "prompt_len": 3,
+//!      "prefill_ms": 12.3, "decode_ms": 40.1, "total_ms": 55.0}
+//!   ← {"error": "..."}                       (malformed request)
+//!
+//! Connections are handled on std threads; each request is forwarded to
+//! the (single) coordinator worker through its channel, so batching
+//! happens *across* connections — concurrent clients ride shared batches.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::request::Response;
+use super::server::Coordinator;
+use crate::util::json::{parse, Value};
+
+/// A handle that forwards submissions to the coordinator thread-safely.
+///
+/// `Coordinator::submit` needs `&mut self` (request-id counter); the TCP
+/// front shares it behind a mutex — contention is negligible next to
+/// inference time.
+pub struct SharedCoordinator(Arc<Mutex<Coordinator>>);
+
+impl SharedCoordinator {
+    pub fn new(coord: Coordinator) -> Self {
+        Self(Arc::new(Mutex::new(coord)))
+    }
+
+    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<Response> {
+        self.0.lock().unwrap().submit(prompt, max_new)
+    }
+
+    fn clone_ref(&self) -> Self {
+        Self(Arc::clone(&self.0))
+    }
+}
+
+/// Parse one request line. Returns `(prompt, max_new_tokens)`.
+pub fn parse_request(line: &str) -> Result<(Vec<i32>, usize)> {
+    let v = parse(line).context("invalid JSON")?;
+    let prompt = v
+        .get("prompt")
+        .and_then(Value::as_array)
+        .context("missing 'prompt' array")?
+        .iter()
+        .map(|t| {
+            t.as_f64()
+                .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+                .map(|x| x as i32)
+                .context("prompt tokens must be non-negative integers")
+        })
+        .collect::<Result<Vec<i32>>>()?;
+    if prompt.is_empty() {
+        anyhow::bail!("empty prompt");
+    }
+    let max_new = v
+        .get("max_new_tokens")
+        .and_then(Value::as_usize)
+        .unwrap_or(16)
+        .min(1024);
+    Ok((prompt, max_new))
+}
+
+/// Serialize a response line.
+pub fn format_response(r: &Response) -> String {
+    let toks: Vec<String> = r.generated.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"id\":{},\"tokens\":[{}],\"prompt_len\":{},\"prefill_ms\":{:.3},\"decode_ms\":{:.3},\"total_ms\":{:.3},\"batch_size\":{}}}",
+        r.id,
+        toks.join(","),
+        r.prompt_len,
+        r.prefill_time.as_secs_f64() * 1e3,
+        r.decode_time.as_secs_f64() * 1e3,
+        r.total_time.as_secs_f64() * 1e3,
+        r.batch_size,
+    )
+}
+
+fn handle_conn(stream: TcpStream, coord: SharedCoordinator) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Ok((prompt, max_new)) => match coord.submit(prompt, max_new).recv() {
+                Ok(resp) => format_response(&resp),
+                Err(_) => "{\"error\":\"coordinator unavailable\"}".to_string(),
+            },
+            Err(e) => format!("{{\"error\":{:?}}}", e.to_string()),
+        };
+        if writer.write_all(reply.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Serve forever on `addr` (e.g. `127.0.0.1:8191`).  Returns the bound
+/// address via `on_ready` before entering the accept loop (tests use an
+/// ephemeral port).
+pub fn serve(
+    addr: &str,
+    coord: Coordinator,
+    on_ready: Option<Sender<std::net::SocketAddr>>,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    if let Some(tx) = on_ready {
+        let _ = tx.send(local);
+    }
+    println!("[tcp] serving on {local} (JSON-lines: {{\"prompt\": [...]}})");
+    let shared = SharedCoordinator::new(coord);
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let c = shared.clone_ref();
+        std::thread::spawn(move || handle_conn(stream, c));
+        served += 1;
+        if let Some(max) = max_conns {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client (used by tests and the demo driver).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send one request, wait for its JSON-line reply.
+    pub fn infer(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        writeln!(
+            self.writer,
+            "{{\"prompt\":[{}],\"max_new_tokens\":{max_new}}}",
+            toks.join(",")
+        )?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let v = parse(&line).context("bad server reply")?;
+        if let Some(err) = v.get("error") {
+            anyhow::bail!("server error: {err:?}");
+        }
+        Ok(v.get("tokens")
+            .and_then(Value::as_array)
+            .context("missing tokens")?
+            .iter()
+            .map(|t| t.as_f64().unwrap() as i32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn resp() -> Response {
+        Response {
+            id: 3,
+            prompt_len: 5,
+            generated: vec![1, 2, 3],
+            queue_time: Duration::from_millis(1),
+            prefill_time: Duration::from_millis(10),
+            decode_time: Duration::from_millis(20),
+            total_time: Duration::from_millis(31),
+            batch_size: 4,
+        }
+    }
+
+    #[test]
+    fn request_parsing() {
+        let (p, n) = parse_request(r#"{"prompt": [1, 2, 3], "max_new_tokens": 8}"#).unwrap();
+        assert_eq!(p, vec![1, 2, 3]);
+        assert_eq!(n, 8);
+        let (_, n) = parse_request(r#"{"prompt": [0]}"#).unwrap();
+        assert_eq!(n, 16); // default
+        assert!(parse_request(r#"{"prompt": []}"#).is_err());
+        assert!(parse_request(r#"{"prompt": [1.5]}"#).is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"max_new_tokens": 4}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_through_parser() {
+        let line = format_response(&resp());
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("tokens").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(v.get("batch_size").unwrap().as_usize(), Some(4));
+    }
+}

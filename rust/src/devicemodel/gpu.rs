@@ -1,0 +1,122 @@
+//! GPU profiles: published peak numbers for the paper's testbed cards.
+//!
+//! Peaks are NVIDIA's dense tensor-core numbers (GA102/GA104 whitepaper);
+//! `tensor_efficiency` is the fraction of peak a well-tuned large GEMM
+//! reaches in practice (CUTLASS on Ampere lands at 60-75%), and
+//! `kernel_launch` the per-kernel fixed cost that makes small matrices
+//! overhead-dominated (Figs. 6/7).
+
+/// Data precision of a MatMul operand path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    FP32,
+    FP16,
+    INT8,
+    INT4,
+}
+
+impl Precision {
+    /// Storage bytes per element (INT4 is nibble-packed).
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::FP32 => 4.0,
+            Precision::FP16 => 2.0,
+            Precision::INT8 => 1.0,
+            Precision::INT4 => 0.5,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::FP32 => "FP32",
+            Precision::FP16 => "FP16",
+            Precision::INT8 => "INT8",
+            Precision::INT4 => "INT4",
+        }
+    }
+}
+
+/// Roofline constants for one GPU.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    /// HBM/GDDR bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Peak dense throughput per precision, ops/s (MAC*2).
+    pub fp32_flops: f64,
+    pub fp16_flops: f64,
+    pub int8_ops: f64,
+    pub int4_ops: f64,
+    /// Fraction of peak a tuned large *floating-point* GEMM attains
+    /// (cuBLAS-class FP16/FP32 kernels).
+    pub fp_efficiency: f64,
+    /// Fraction of peak the INT8/INT4 CUTLASS tensor-core path attains.
+    /// Higher than `fp_efficiency` on Ampere — integer tensor-core tiles
+    /// have lower register pressure and the QUIK kernels are CUTLASS-tuned
+    /// — which is how the paper's Fig. 7 exceeds the naive 4× ratio.
+    pub int_efficiency: f64,
+    /// Fixed per-kernel cost, seconds.
+    pub kernel_launch: f64,
+    /// Usable memory per card, bytes (for GPU-count estimates).
+    pub mem_capacity: f64,
+}
+
+/// RTX 3090 (GA102): the paper's primary testbed (§4.2).
+pub const RTX3090: GpuProfile = GpuProfile {
+    name: "RTX3090",
+    mem_bw: 936.2e9,
+    fp32_flops: 35.6e12,
+    fp16_flops: 142.0e12, // FP16 accumulate tensor-core path
+    int8_ops: 284.0e12,
+    int4_ops: 568.0e12,
+    fp_efficiency: 0.58,
+    int_efficiency: 0.72,
+    kernel_launch: 5.0e-6,
+    mem_capacity: 24.0e9,
+};
+
+/// RTX 3080 (GA102, cut down): the Appendix G testbed.
+pub const RTX3080: GpuProfile = GpuProfile {
+    name: "RTX3080",
+    mem_bw: 760.3e9,
+    fp32_flops: 29.8e12,
+    fp16_flops: 119.0e12,
+    int8_ops: 238.0e12,
+    int4_ops: 476.0e12,
+    fp_efficiency: 0.58,
+    int_efficiency: 0.72,
+    kernel_launch: 5.0e-6,
+    mem_capacity: 10.0e9,
+};
+
+impl GpuProfile {
+    /// Attainable MatMul throughput (ops/s) at a precision, after the
+    /// large-GEMM efficiency haircut.
+    pub fn attainable(&self, p: Precision) -> f64 {
+        match p {
+            Precision::FP32 => self.fp32_flops * self.fp_efficiency,
+            Precision::FP16 => self.fp16_flops * self.fp_efficiency,
+            Precision::INT8 => self.int8_ops * self.int_efficiency,
+            Precision::INT4 => self.int4_ops * self.int_efficiency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_ladder_matches_fig3() {
+        // Fig 3: INT8 slightly above 2× FP16; INT4 ≈ 2× INT8.
+        let g = RTX3090;
+        assert!(g.int8_ops / g.fp16_flops >= 2.0);
+        assert!((g.int4_ops / g.int8_ops - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn int4_bytes_are_packed() {
+        assert_eq!(Precision::INT4.bytes(), 0.5);
+        assert_eq!(Precision::FP16.bytes(), 2.0);
+    }
+}

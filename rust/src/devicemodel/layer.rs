@@ -1,0 +1,271 @@
+//! Per-linear-layer cost model of the QUIK pipeline (Algorithm 1, §3.4).
+//!
+//! Charges every pass the paper's kernels perform — split, metadata scan,
+//! quantization, INT MatMul, dequantization, FP outlier MatMul, result
+//! accumulation — with the memory traffic and kernel launches each fusion
+//! version actually incurs:
+//!
+//! | version | quantization                         | dequantization        |
+//! |---------|--------------------------------------|-----------------------|
+//! | 1       | 5 unfused passes over the activations| int32 HBM round-trip  |
+//! | 2       | 1 fused pass                         | int32 HBM round-trip  |
+//! | 3       | 1 fused pass                         | fused MatMul epilogue |
+//!
+//! This is what regenerates Figs. 6/7/13/14 and feeds the block model.
+
+use super::gpu::{GpuProfile, Precision};
+use super::roofline::{matmul_time, memory_pass, KernelTime};
+use crate::config::LayerPlan;
+
+/// Kernel-fusion level (the paper's "version 1/2/3", Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionVersion {
+    V1Unfused,
+    V2FusedQuant,
+    V3FusedBoth,
+}
+
+/// Cost breakdown of one QUIK linear layer invocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCost {
+    pub quant: f64,    // split + metadata + activation quantization
+    pub int_mm: f64,   // INT4/INT8 MatMul
+    pub dequant: f64,  // dequantization (0 when fused into the epilogue)
+    pub fp_mm: f64,    // FP16 outlier MatMul (+ unfused accumulation)
+    pub launches: f64, // total launch overhead included above
+}
+
+impl LayerCost {
+    pub fn total(&self) -> f64 {
+        self.quant + self.int_mm + self.dequant + self.fp_mm
+    }
+}
+
+/// The per-layer model: shape + precision plan.
+#[derive(Debug, Clone, Copy)]
+pub struct QuikLayerModel {
+    pub in_features: usize,
+    pub out_features: usize,
+    pub plan: LayerPlan,
+}
+
+fn int_precision(bits: u32) -> Precision {
+    match bits {
+        4 => Precision::INT4,
+        8 => Precision::INT8,
+        16 => Precision::FP16,
+        b => panic!("unsupported bit width {b}"),
+    }
+}
+
+impl QuikLayerModel {
+    pub fn new(in_features: usize, out_features: usize, plan: LayerPlan) -> Self {
+        Self { in_features, out_features, plan }
+    }
+
+    /// FP16 baseline: one cuBLAS-style GEMM.
+    pub fn fp16_time(&self, gpu: &GpuProfile, m: usize) -> f64 {
+        matmul_time(gpu, m, self.out_features, self.in_features, Precision::FP16, Precision::FP16)
+            .total()
+    }
+
+    /// Weight-only (W4A16/W8A16): FP16 compute, quantized weight traffic.
+    /// No computation savings — the paper's point about weight-only methods.
+    pub fn weight_only_time(&self, gpu: &GpuProfile, m: usize) -> f64 {
+        let (n, k) = (self.out_features, self.in_features);
+        let wp = int_precision(self.plan.weight_bits);
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let bytes = (m * k) as f64 * Precision::FP16.bytes()
+            + (n * k) as f64 * wp.bytes()
+            + (m * n) as f64 * Precision::FP16.bytes();
+        // dequantize-on-load adds compute, never removes it (§2)
+        let kt = KernelTime {
+            compute: flops / gpu.attainable(Precision::FP16),
+            memory: bytes / gpu.mem_bw,
+            launch: gpu.kernel_launch,
+        };
+        kt.total()
+    }
+
+    /// Full QUIK pipeline cost at fusion level `version`.
+    pub fn quik_time(&self, gpu: &GpuProfile, m: usize, version: FusionVersion) -> LayerCost {
+        let plan = self.plan;
+        if plan.weight_bits >= 16 {
+            let t = self.fp16_time(gpu, m);
+            return LayerCost { int_mm: t, launches: gpu.kernel_launch, ..Default::default() };
+        }
+        if plan.act_bits >= 16 {
+            let t = self.weight_only_time(gpu, m);
+            return LayerCost { int_mm: t, launches: gpu.kernel_launch, ..Default::default() };
+        }
+        let n = self.out_features;
+        let k = self.in_features;
+        let n_out = plan.n_outlier.min(k);
+        let k_base = k - n_out;
+        let ip = int_precision(plan.act_bits.max(plan.weight_bits));
+        let fp16 = Precision::FP16.bytes();
+        let qb = plan.act_bits as f64 / 8.0;
+        let meta = (m * 8) as f64; // scale+zero f32 per token
+
+        let mf = m as f64;
+        let kf = k as f64;
+        let kbf = k_base as f64;
+        let nof = n_out as f64;
+
+        // ---- quantization / split ------------------------------------
+        let quant = match version {
+            FusionVersion::V1Unfused => {
+                // pass 1+2: split (read x, write base fp16 + outlier fp16)
+                let split = memory_pass(gpu, mf * kf * fp16 + mf * kbf * fp16 + mf * nof * fp16);
+                // pass 3+4: min+max scans over the base copy
+                let scans = memory_pass(gpu, 2.0 * mf * kbf * fp16 + 2.0 * meta);
+                // pass 5: quantize (read base, write packed ints)
+                let qpass = memory_pass(gpu, mf * kbf * fp16 + mf * kbf * qb + meta);
+                split.total() + scans.total() + qpass.total() + 2.0 * gpu.kernel_launch
+                // (5 logical passes ≈ 5 kernel launches: 3 KernelTime
+                // launches + 2 extra for the separate scan kernels)
+            }
+            _ => {
+                // fused: read x once; write ints + outliers + metadata
+                memory_pass(gpu, mf * kf * fp16 + mf * kbf * qb + mf * nof * fp16 + meta).total()
+            }
+        };
+
+        // ---- INT MatMul (+ fused epilogue for v3) ----------------------
+        let int_mm = match version {
+            FusionVersion::V3FusedBoth => {
+                // epilogue writes dequantized fp16 (+ reads the outlier
+                // result tile for the fused accumulation)
+                let flops = 2.0 * mf * n as f64 * kbf;
+                let bytes = mf * kbf * qb
+                    + (n * k_base) as f64 * (plan.weight_bits as f64 / 8.0)
+                    + mf * n as f64 * fp16            // fused output
+                    + if n_out > 0 { mf * n as f64 * fp16 } else { 0.0 }; // read resultFP
+                KernelTime {
+                    compute: flops / gpu.attainable(ip),
+                    memory: bytes / gpu.mem_bw,
+                    launch: gpu.kernel_launch,
+                }
+                .total()
+            }
+            _ => {
+                // raw INT MatMul writing the int32 accumulator to HBM
+                matmul_time(gpu, m, n, k_base, ip, Precision::FP32).total()
+            }
+        };
+
+        // ---- standalone dequantization (v1/v2 only) --------------------
+        let dequant = match version {
+            FusionVersion::V3FusedBoth => 0.0,
+            _ => {
+                // read int32 acc, write fp16 out (+ metadata)
+                memory_pass(gpu, mf * n as f64 * 4.0 + mf * n as f64 * fp16 + meta).total()
+            }
+        };
+
+        // ---- FP16 outlier MatMul + accumulation ------------------------
+        let fp_mm = if n_out == 0 {
+            0.0
+        } else {
+            let mm = matmul_time(gpu, m, n, n_out, Precision::FP16, Precision::FP16).total();
+            let add = match version {
+                FusionVersion::V3FusedBoth => 0.0, // fused into the epilogue
+                _ => memory_pass(gpu, 3.0 * mf * n as f64 * fp16).total(),
+            };
+            mm + add
+        };
+
+        let launches = gpu.kernel_launch
+            * match version {
+                FusionVersion::V1Unfused => 5.0 + 1.0 + 1.0 + 2.0,
+                FusionVersion::V2FusedQuant => 1.0 + 1.0 + 1.0 + 2.0,
+                FusionVersion::V3FusedBoth => 1.0 + 1.0 + 1.0,
+            };
+        LayerCost { quant, int_mm, dequant, fp_mm, launches }
+    }
+
+    /// Layer-wise speedup vs the FP16 baseline (Fig. 7 y-axis).
+    pub fn speedup(&self, gpu: &GpuProfile, m: usize, version: FusionVersion) -> f64 {
+        self.fp16_time(gpu, m) / self.quik_time(gpu, m, version).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuikPolicy;
+    use crate::devicemodel::gpu::RTX3090;
+
+    fn layer(k: usize, n: usize, pol: QuikPolicy) -> QuikLayerModel {
+        QuikLayerModel::new(k, n, pol.plan_for("q_proj", k))
+    }
+
+    #[test]
+    fn fig7_large_layers_exceed_4x() {
+        let g = RTX3090;
+        let l = layer(8192, 8192, QuikPolicy::QUIK_4B);
+        let s = l.speedup(&g, 2048, FusionVersion::V3FusedBoth);
+        assert!(s > 3.6, "large-layer QUIK-4B speedup {s}");
+    }
+
+    #[test]
+    fn fig7_small_layers_around_2x() {
+        let g = RTX3090;
+        let l = layer(2048, 2048, QuikPolicy::QUIK_4B);
+        let s = l.speedup(&g, 2048, FusionVersion::V3FusedBoth);
+        assert!(s > 1.5 && s < 3.5, "small-layer QUIK-4B speedup {s}");
+    }
+
+    #[test]
+    fn fig6_fusion_ladder() {
+        // v1 ≥ v2 ≥ v3, and v1/v3 ≈ 2× on small matrices.
+        let g = RTX3090;
+        let l = layer(4096, 4096, QuikPolicy::QUIK_4B);
+        let t1 = l.quik_time(&g, 2048, FusionVersion::V1Unfused).total();
+        let t2 = l.quik_time(&g, 2048, FusionVersion::V2FusedQuant).total();
+        let t3 = l.quik_time(&g, 2048, FusionVersion::V3FusedBoth).total();
+        assert!(t1 > t2 && t2 > t3);
+        let small = layer(2048, 2048, QuikPolicy::QUIK_4B);
+        let s1 = small.quik_time(&g, 2048, FusionVersion::V1Unfused).total();
+        let s3 = small.quik_time(&g, 2048, FusionVersion::V3FusedBoth).total();
+        assert!(s1 / s3 > 1.5, "fusion gain on small matrices {}", s1 / s3);
+    }
+
+    #[test]
+    fn fig14_outlier_count_insensitive() {
+        // QUIK MatMul time roughly flat across non-zero outlier counts.
+        let g = RTX3090;
+        let mut times = vec![];
+        for n_out in [64usize, 128, 256, 512] {
+            let mut pol = QuikPolicy::QUIK_4B;
+            pol.n_outlier = n_out;
+            let l = layer(8192, 8192, pol);
+            times.push(l.quik_time(&g, 2048, FusionVersion::V3FusedBoth).total());
+        }
+        let spread = times.iter().cloned().fold(f64::MIN, f64::max)
+            / times.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread < 1.25, "outlier sweep spread {spread}");
+    }
+
+    #[test]
+    fn weight_only_no_compute_speedup_at_large_m() {
+        // Weight-only quantization must NOT speed up compute-bound shapes.
+        let g = RTX3090;
+        let l = layer(8192, 8192, QuikPolicy::QUIK_4B);
+        let wo = l.weight_only_time(&g, 2048);
+        let fp = l.fp16_time(&g, 2048);
+        assert!(wo / fp > 0.95, "weight-only 'speedup' {}", fp / wo);
+        // ...but it DOES help at m = 1 (memory-bound decode)
+        let wo1 = l.weight_only_time(&g, 1);
+        let fp1 = l.fp16_time(&g, 1);
+        assert!(fp1 / wo1 > 2.0);
+    }
+
+    #[test]
+    fn fp16_plan_passthrough() {
+        let g = RTX3090;
+        let l = layer(4096, 4096, QuikPolicy::FP16);
+        let c = l.quik_time(&g, 512, FusionVersion::V3FusedBoth);
+        assert!((c.total() - l.fp16_time(&g, 512)).abs() / c.total() < 1e-9);
+    }
+}

@@ -1,0 +1,28 @@
+//! Calibrated analytical GPU device model (the paper's RTX 3090 testbed).
+//!
+//! The reproduction has no NVIDIA GPU, so every performance table/figure is
+//! regenerated from a roofline-style cost model fed by *exact* operation
+//! and byte counts of the QUIK pipeline (Algorithm 1 + the §3.4 fusion
+//! variants).  The model is deliberately simple — peak-throughput ceilings,
+//! a memory-bandwidth ceiling, and a per-kernel launch overhead — because
+//! those three terms are what produce every shape the paper reports:
+//!
+//! * compute-bound vs memory-bound crossover at ~128 tokens (Fig. 2);
+//! * INT8 ≈ 2× FP16 and INT4 ≈ 2× INT8 on raw MatMuls (Fig. 3);
+//! * fusion wins concentrated at small matrices (Fig. 6);
+//! * >4× layer-wise speedups on large layers, ~2× on small (Fig. 7);
+//! * 3.1-3.4× end-to-end with outlier/quantization overheads (Figs. 8/9);
+//! * throughput saturation at large sequence length (Fig. 13);
+//! * outlier-count insensitivity of the MatMul time (Fig. 14).
+//!
+//! DESIGN.md §2 records the substitution; EXPERIMENTS.md compares each
+//! regenerated series against the paper's.
+
+pub mod gpu;
+pub mod layer;
+pub mod roofline;
+pub mod transformer;
+
+pub use gpu::{GpuProfile, Precision};
+pub use layer::{LayerCost, QuikLayerModel};
+pub use transformer::{BlockBreakdown, TransformerModel};

@@ -1,0 +1,235 @@
+//! Block- and model-level cost aggregation (Figs. 1/8/9/11/13, Table 6's
+//! companion GPU-count estimates).
+//!
+//! Sums the per-linear QUIK costs over a block, adds the FP16 parts the
+//! paper leaves untouched (attention score/context MatMuls, softmax,
+//! layer norms, residuals, the LM head), and scales to the full model.
+
+use super::gpu::{GpuProfile, Precision};
+use super::layer::{FusionVersion, LayerCost, QuikLayerModel};
+use super::roofline::{matmul_time, memory_pass};
+use crate::config::{ModelSpec, QuikPolicy};
+
+/// End-to-end per-block time breakdown (Fig. 8 right).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockBreakdown {
+    pub int_mm: f64,
+    pub fp_outlier_mm: f64,
+    pub quant_dequant: f64,
+    pub attention_other: f64, // attention matmuls, softmax, norms, residuals
+}
+
+impl BlockBreakdown {
+    pub fn total(&self) -> f64 {
+        self.int_mm + self.fp_outlier_mm + self.quant_dequant + self.attention_other
+    }
+
+    pub fn fractions(&self) -> [(&'static str, f64); 4] {
+        let t = self.total();
+        [
+            ("int_matmul", self.int_mm / t),
+            ("fp16_outlier_matmul", self.fp_outlier_mm / t),
+            ("quant+dequant", self.quant_dequant / t),
+            ("attention+other", self.attention_other / t),
+        ]
+    }
+}
+
+/// FLOP share per precision over the model's linear layers (Fig. 11).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlopBreakdown {
+    pub int4: f64,
+    pub int8: f64,
+    pub fp16: f64,
+}
+
+/// Whole-model cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerModel {
+    pub spec: ModelSpec,
+    pub policy: QuikPolicy,
+}
+
+impl TransformerModel {
+    pub fn new(spec: ModelSpec, policy: QuikPolicy) -> Self {
+        // family specialization: OPT gets no down-proj exception (Table 1)
+        Self { spec, policy: policy.specialize(spec.family) }
+    }
+
+    fn layers(&self) -> Vec<QuikLayerModel> {
+        self.spec
+            .linear_shapes()
+            .into_iter()
+            .map(|l| {
+                QuikLayerModel::new(
+                    l.in_features,
+                    l.out_features,
+                    self.policy.plan_for(l.name, l.in_features),
+                )
+            })
+            .collect()
+    }
+
+    /// FP16 parts common to baseline and QUIK: attention score/context
+    /// MatMuls (FlashAttention-style, so no S×S HBM materialization),
+    /// softmax/norm/residual memory passes.
+    fn attention_other_time(&self, gpu: &GpuProfile, m: usize) -> f64 {
+        let d = self.spec.d_model;
+        let h = self.spec.n_heads;
+        let dh = d / h;
+        // QKᵀ and PV per head: 2 × (2·m·m·dh) flops, batched as one launch
+        let qk = matmul_time(gpu, m, m, dh, Precision::FP16, Precision::FP16);
+        let per_head = 2.0 * (qk.compute.max(qk.memory));
+        let attn = per_head * h as f64 + 2.0 * gpu.kernel_launch;
+        // softmax + 2 norms + residuals + activation function: ~6 passes
+        // over the [m, d] hidden state
+        let elementwise = memory_pass(gpu, 6.0 * (m * d) as f64 * 2.0).total();
+        attn + elementwise
+    }
+
+    /// One transformer block under QUIK (summed LayerCost + FP16 parts).
+    pub fn block_breakdown(
+        &self,
+        gpu: &GpuProfile,
+        m: usize,
+        version: FusionVersion,
+    ) -> BlockBreakdown {
+        let mut b = BlockBreakdown {
+            attention_other: self.attention_other_time(gpu, m),
+            ..Default::default()
+        };
+        for l in self.layers() {
+            let c: LayerCost = l.quik_time(gpu, m, version);
+            b.int_mm += c.int_mm;
+            b.fp_outlier_mm += c.fp_mm;
+            b.quant_dequant += c.quant + c.dequant;
+        }
+        b
+    }
+
+    /// One transformer block in FP16.
+    pub fn block_fp16(&self, gpu: &GpuProfile, m: usize) -> f64 {
+        let linears: f64 = self.layers().iter().map(|l| l.fp16_time(gpu, m)).sum();
+        linears + self.attention_other_time(gpu, m)
+    }
+
+    /// End-to-end prefill time for a `m`-token sequence (all blocks + head).
+    pub fn e2e_time(&self, gpu: &GpuProfile, m: usize, version: FusionVersion) -> f64 {
+        let block = self.block_breakdown(gpu, m, version).total();
+        block * self.spec.n_layers as f64 + self.head_time(gpu, m)
+    }
+
+    /// End-to-end FP16 prefill time.
+    pub fn e2e_fp16(&self, gpu: &GpuProfile, m: usize) -> f64 {
+        self.block_fp16(gpu, m) * self.spec.n_layers as f64 + self.head_time(gpu, m)
+    }
+
+    /// LM head (always FP16 in the paper — the 0.71% of Table 1's note).
+    fn head_time(&self, gpu: &GpuProfile, m: usize) -> f64 {
+        matmul_time(gpu, m, self.spec.vocab, self.spec.d_model, Precision::FP16, Precision::FP16)
+            .total()
+    }
+
+    /// Prefill throughput, tokens/s (Fig. 9 annotations).
+    pub fn throughput(&self, gpu: &GpuProfile, m: usize, version: FusionVersion) -> f64 {
+        m as f64 / self.e2e_time(gpu, m, version)
+    }
+
+    /// End-to-end speedup vs FP16 (Figs. 1/8/9).
+    pub fn speedup(&self, gpu: &GpuProfile, m: usize, version: FusionVersion) -> f64 {
+        self.e2e_fp16(gpu, m) / self.e2e_time(gpu, m, version)
+    }
+
+    /// MAC share per precision over all linear layers (Fig. 11).
+    /// Outlier columns are FP16 work; the rest follows the layer plan.
+    pub fn flop_breakdown(&self) -> FlopBreakdown {
+        let mut f = FlopBreakdown::default();
+        for shape in self.spec.linear_shapes() {
+            let plan = self.policy.plan_for(shape.name, shape.in_features);
+            let macs = (shape.out_features * shape.in_features) as f64;
+            let n_out = plan.n_outlier.min(shape.in_features) as f64;
+            let out_frac = n_out / shape.in_features as f64;
+            f.fp16 += macs * out_frac;
+            let base = macs * (1.0 - out_frac);
+            match plan.weight_bits {
+                4 => f.int4 += base,
+                8 => f.int8 += base,
+                _ => f.fp16 += base,
+            }
+        }
+        let t = f.int4 + f.int8 + f.fp16;
+        FlopBreakdown { int4: f.int4 / t, int8: f.int8 / t, fp16: f.fp16 / t }
+    }
+
+    /// GPUs needed to hold the model (Fig. 8's 7 → 5 → 3 story);
+    /// weight bytes come from the memory model.
+    pub fn gpus_needed(&self, gpu: &GpuProfile, total_bytes: f64) -> usize {
+        (total_bytes / (gpu.mem_capacity * 0.9)).ceil() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{spec, QuikPolicy};
+    use crate::devicemodel::gpu::RTX3090;
+
+    #[test]
+    fn fig9_llama70b_speedup_band() {
+        // paper: 3.4× e2e for LLaMA2-70B at seq 2048
+        let m = TransformerModel::new(spec("llama2-70b").unwrap(), QuikPolicy::QUIK_4B);
+        let s = m.speedup(&RTX3090, 2048, FusionVersion::V3FusedBoth);
+        assert!(s > 2.8 && s < 4.0, "llama2-70b e2e speedup {s}");
+    }
+
+    #[test]
+    fn fig9_bigger_models_speed_up_more() {
+        let s7 = TransformerModel::new(spec("llama2-7b").unwrap(), QuikPolicy::QUIK_4B)
+            .speedup(&RTX3090, 2048, FusionVersion::V3FusedBoth);
+        let s70 = TransformerModel::new(spec("llama2-70b").unwrap(), QuikPolicy::QUIK_4B)
+            .speedup(&RTX3090, 2048, FusionVersion::V3FusedBoth);
+        assert!(s70 > s7, "70B ({s70}) should beat 7B ({s7})");
+    }
+
+    #[test]
+    fn fig8_quik_within_15pct_of_ideal4() {
+        let g = RTX3090;
+        let spec70 = spec("llama2-70b").unwrap();
+        let quik = TransformerModel::new(spec70, QuikPolicy::QUIK_4B)
+            .e2e_time(&g, 2048, FusionVersion::V3FusedBoth);
+        let ideal = TransformerModel::new(spec70, QuikPolicy::IDEAL_4B)
+            .e2e_time(&g, 2048, FusionVersion::V3FusedBoth);
+        let gap = quik / ideal - 1.0;
+        assert!(gap > 0.0 && gap < 0.35, "QUIK vs Ideal-4bit gap {gap}");
+    }
+
+    #[test]
+    fn fig11_llama70b_flop_shares() {
+        // paper: ≈70% INT4, ≈27% INT8, remainder FP16 outliers
+        let m = TransformerModel::new(spec("llama2-70b").unwrap(), QuikPolicy::QUIK_4B);
+        let f = m.flop_breakdown();
+        assert!((f.int4 - 0.70).abs() < 0.06, "int4 share {}", f.int4);
+        assert!((f.int8 - 0.27).abs() < 0.06, "int8 share {}", f.int8);
+        assert!(f.fp16 < 0.06, "fp16 share {}", f.fp16);
+    }
+
+    #[test]
+    fn fig13_throughput_saturates_at_long_seq() {
+        // relative QUIK speedup decreases from peak as seq grows past ~2k
+        let m = TransformerModel::new(spec("llama2-7b").unwrap(), QuikPolicy::QUIK_4B);
+        let g = RTX3090;
+        let s_small = m.speedup(&g, 64, FusionVersion::V3FusedBoth);
+        let s_mid = m.speedup(&g, 2048, FusionVersion::V3FusedBoth);
+        assert!(s_mid > s_small, "quant overheads dominate at small seq");
+    }
+
+    #[test]
+    fn fig8_breakdown_fractions_sane() {
+        let m = TransformerModel::new(spec("llama2-70b").unwrap(), QuikPolicy::QUIK_4B);
+        let b = m.block_breakdown(&RTX3090, 2048, FusionVersion::V3FusedBoth);
+        let fr: f64 = b.fractions().iter().map(|(_, f)| f).sum();
+        assert!((fr - 1.0).abs() < 1e-9);
+        // once most compute is 4-bit, the FP16 'other' ops are significant
+        assert!(b.fractions()[3].1 > 0.10);
+    }
+}

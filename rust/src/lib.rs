@@ -1,0 +1,26 @@
+//! # QUIK — end-to-end 4-bit LLM inference (reproduction)
+//!
+//! Rust coordinator + runtime for the QUIK hybrid quantization scheme
+//! (Ashkboos et al., EMNLP 2024).  The crate is layer 3 of a three-layer
+//! stack:
+//!
+//! * **L1** — Pallas kernels (fused quantization, INT4/INT8 MatMul with a
+//!   dequantization epilogue) authored in `python/compile/kernels/`;
+//! * **L2** — JAX model forwards calling those kernels, AOT-lowered to HLO
+//!   text by `python/compile/aot.py` into `artifacts/`;
+//! * **L3** — this crate: loads the artifacts via PJRT ([`runtime`]), serves
+//!   batched prefill/decode requests ([`coordinator`]), and hosts the QUIK
+//!   quantization substrate in native Rust ([`quant`]) plus the calibrated
+//!   RTX-3090 device model ([`devicemodel`]) and byte-exact memory model
+//!   ([`memmodel`]) that regenerate the paper's performance figures.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod devicemodel;
+pub mod memmodel;
+pub mod quant;
+pub mod runtime;
+pub mod util;

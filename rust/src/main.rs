@@ -1,0 +1,293 @@
+//! `quik` — CLI for the QUIK serving stack and paper-experiment reports.
+//!
+//! Subcommands:
+//!
+//! * `serve`          — run a synthetic serving workload through the
+//!                      coordinator (FP16 or QUIK-4B artifacts) and report
+//!                      throughput/latency;
+//! * `generate`       — generate tokens from a prompt (greedy), printing
+//!                      the token stream;
+//! * `memory-report`  — Table 6: peak memory per model/precision;
+//! * `flops-report`   — Fig. 11: FLOP share per precision;
+//! * `layer-report`   — Fig. 7: layer-wise speedups on the device model;
+//! * `e2e-report`     — Fig. 9: end-to-end speedups for the model zoo;
+//! * `variants`       — list artifacts available in the manifest.
+//!
+//! Argument parsing is hand-rolled (offline build; no clap).
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use quik::config::{model_zoo, QuikPolicy};
+use quik::coordinator::batcher::BatcherConfig;
+use quik::coordinator::scheduler::Variant;
+use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
+use quik::devicemodel::gpu::RTX3090;
+use quik::devicemodel::layer::FusionVersion;
+use quik::devicemodel::{QuikLayerModel, TransformerModel};
+use quik::memmodel::table6_row;
+use quik::runtime::engine::ModelRuntime;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {a}"))?
+                .to_string();
+            let val = it.next().unwrap_or_else(|| "true".into());
+            flags.insert(key, val);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key, &default.to_string())
+            .parse()
+            .with_context(|| format!("--{key} must be an integer"))
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "serve" => serve(&args),
+        "generate" => generate(&args),
+        "memory-report" => memory_report(),
+        "flops-report" => flops_report(),
+        "layer-report" => layer_report(),
+        "e2e-report" => e2e_report(),
+        "variants" => variants(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "quik — end-to-end 4-bit LLM inference (QUIK reproduction)\n\n\
+         USAGE: quik <command> [--flag value]...\n\n\
+         COMMANDS\n\
+           serve          --model llama-s --variant quik4|fp16 --artifacts artifacts\n\
+                          --requests 16 --prompt-len 48 --gen 16 [--rate <req/s>]\n\
+                          [--tcp 127.0.0.1:8191]  (JSON-lines network mode)\n\
+           generate       --model llama-s --variant quik4 --tokens 32 [--seed 7]\n\
+           memory-report  (Table 6)\n\
+           flops-report   (Figure 11)\n\
+           layer-report   (Figure 7)\n\
+           e2e-report     (Figure 9)\n\
+           variants       --model llama-s --artifacts artifacts"
+    );
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = args.get("model", "llama-s");
+    let artifacts = args.get("artifacts", "artifacts");
+    let variant = Variant::parse(&args.get("variant", "quik4"))
+        .context("--variant must be fp16 or quik4")?;
+    let spec = WorkloadSpec {
+        n_requests: args.get_usize("requests", 16)?,
+        prompt_len: args.get_usize("prompt-len", 48)?,
+        max_new_tokens: args.get_usize("gen", 16)?,
+        arrival_rate: args.flags.get("rate").map(|r| r.parse()).transpose()?,
+        seed: args.get_usize("seed", 0)? as u64,
+    };
+    println!("starting coordinator: model={model} variant={variant:?}");
+    let coord = Coordinator::start(
+        artifacts,
+        &model,
+        variant,
+        BatcherConfig {
+            batch_sizes: vec![4, 1],
+            max_wait: Duration::from_millis(30),
+            bucket: 64,
+            max_queue: 1024,
+        },
+    )?;
+    if let Some(addr) = args.flags.get("tcp") {
+        // network mode: JSON-lines over TCP, batching across connections
+        return quik::coordinator::tcp::serve(addr, coord, None, None);
+    }
+    let mut coord = coord;
+    let report = run_workload(&mut coord, &spec)?;
+    println!(
+        "\n=== serve report ({model}, {variant:?}) ===\n\
+         requests: {}  wall: {:.2?}\n\
+         tokens: {} total ({} prompt + {} generated)\n\
+         throughput: {:.1} tok/s, {:.2} req/s\n\
+         latency: mean {:.2?}, p99 {:.2?}\n\n{}",
+        report.n_requests,
+        report.wall_time,
+        report.total_tokens,
+        report.prompt_tokens,
+        report.generated_tokens,
+        report.tokens_per_s(),
+        report.requests_per_s(),
+        report.mean_e2e,
+        report.p99_e2e,
+        report.metrics.report()
+    );
+    coord.shutdown()
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let model = args.get("model", "llama-s");
+    let artifacts = args.get("artifacts", "artifacts");
+    let variant = Variant::parse(&args.get("variant", "quik4"))
+        .context("--variant must be fp16 or quik4")?;
+    let n_tokens = args.get_usize("tokens", 32)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+
+    let mut rt = ModelRuntime::load(&artifacts, &model)?;
+    let prefill_name = format!("{}_prefill_b1", variant.prefix());
+    let decode_name = format!("{}_decode_b1", variant.prefix());
+    rt.ensure_loaded(&prefill_name)?;
+    rt.ensure_loaded(&decode_name)?;
+
+    let prefill = rt.artifact(&prefill_name).unwrap();
+    let seq = prefill.spec.seq;
+    let vocab = rt.manifest.model(&model)?.config.vocab as i32;
+    let mut rng = quik::util::rng::Rng::new(seed);
+    let prompt: Vec<i32> = (0..seq).map(|_| rng.range_i32(0, vocab - 1)).collect();
+
+    let mut cache = prefill.new_cache()?;
+    let out = prefill.run(&prompt, &mut cache)?;
+    let mut next = out.argmax_last()[0];
+    print!("prompt[..8]={:?} →", &prompt[..8.min(prompt.len())]);
+    let decode = rt.artifact(&decode_name).unwrap();
+    for _ in 0..n_tokens {
+        print!(" {next}");
+        let step = decode.run(&[next], &mut cache)?;
+        next = step.argmax_last()[0];
+    }
+    println!();
+    Ok(())
+}
+
+fn memory_report() -> Result<()> {
+    println!("Table 6 — peak memory (GB), batch 1 x seq 2048 prefill\n");
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "model", "FP16", "QUIK-8B", "QUIK-4B", "red-8b", "red-4b"
+    );
+    for (name, s) in model_zoo() {
+        let [fp16, q8, q4] = table6_row(&s, 1, 2048);
+        println!(
+            "{:<14} {:>10.1} {:>10.1} {:>10.1} {:>7.0}% {:>7.0}%",
+            name,
+            fp16,
+            q8,
+            q4,
+            (1.0 - q8 / fp16) * 100.0,
+            (1.0 - q4 / fp16) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn flops_report() -> Result<()> {
+    println!("Figure 11 — linear-layer FLOP share per precision (QUIK-4B)\n");
+    println!("{:<14} {:>8} {:>8} {:>8}", "model", "INT4", "INT8", "FP16");
+    for (name, s) in model_zoo() {
+        let f = TransformerModel::new(s, QuikPolicy::QUIK_4B).flop_breakdown();
+        println!(
+            "{:<14} {:>7.1}% {:>7.1}% {:>7.1}%",
+            name,
+            f.int4 * 100.0,
+            f.int8 * 100.0,
+            f.fp16 * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn layer_report() -> Result<()> {
+    println!("Figure 7 — layer-wise speedup vs FP16 on RTX3090 (2048 tokens)\n");
+    println!("{:<16} {:>10} {:>10}", "layer (k->n)", "QUIK-4B", "QUIK-8B");
+    let shapes = [
+        (2048usize, 2048usize),
+        (4096, 4096),
+        (5120, 5120),
+        (8192, 8192),
+        (8192, 28672),
+        (28672, 8192),
+    ];
+    for (k, n) in shapes {
+        let l4 = QuikLayerModel::new(k, n, QuikPolicy::QUIK_4B.plan_for("q_proj", k));
+        let l8 = QuikLayerModel::new(k, n, QuikPolicy::QUIK_8B.plan_for("q_proj", k));
+        println!(
+            "{:<16} {:>9.2}x {:>9.2}x",
+            format!("{k}->{n}"),
+            l4.speedup(&RTX3090, 2048, FusionVersion::V3FusedBoth),
+            l8.speedup(&RTX3090, 2048, FusionVersion::V3FusedBoth)
+        );
+    }
+    Ok(())
+}
+
+fn e2e_report() -> Result<()> {
+    println!("Figure 9 — end-to-end prefill speedup vs FP16 (seq 2048, RTX3090)\n");
+    println!(
+        "{:<14} {:>10} {:>12} {:>12}",
+        "model", "speedup", "FP16 tok/s", "QUIK tok/s"
+    );
+    for (name, s) in model_zoo() {
+        let m = TransformerModel::new(s, QuikPolicy::QUIK_4B);
+        let fp16_tput = 2048.0 / m.e2e_fp16(&RTX3090, 2048);
+        let quik_tput = m.throughput(&RTX3090, 2048, FusionVersion::V3FusedBoth);
+        println!(
+            "{:<14} {:>9.2}x {:>12.0} {:>12.0}",
+            name,
+            m.speedup(&RTX3090, 2048, FusionVersion::V3FusedBoth),
+            fp16_tput,
+            quik_tput
+        );
+    }
+    Ok(())
+}
+
+fn variants(args: &Args) -> Result<()> {
+    let model = args.get("model", "llama-s");
+    let artifacts = args.get("artifacts", "artifacts");
+    let m = quik::runtime::artifacts::Manifest::load(&artifacts)?;
+    let entry = m.model(&model)?;
+    println!(
+        "model {model}: family={} d_model={} layers={} vocab={}",
+        entry.config.family, entry.config.d_model, entry.config.n_layers, entry.config.vocab
+    );
+    for (name, a) in &entry.artifacts {
+        println!(
+            "  {name:<28} hlo={} batch={} seq={} params={}",
+            a.hlo,
+            a.batch,
+            a.seq,
+            a.params.len()
+        );
+    }
+    if entry.artifacts.is_empty() {
+        bail!("no artifacts — run `make artifacts`");
+    }
+    Ok(())
+}

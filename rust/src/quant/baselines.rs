@@ -1,0 +1,188 @@
+//! Baseline quantization schemes in the Rust substrate (parity with
+//! `compile.quik.baselines`): SmoothQuant α-migration and the naive
+//! round-to-nearest path QUIK is compared against in Tables 1/2/4.
+//!
+//! These exist so the serving side can self-check any scheme's numerics
+//! without Python, and so the property tests can assert the paper's
+//! ordering (QUIK ≤ SmoothQuant ≤ RTN layer error under planted outliers)
+//! natively.
+
+use super::outlier::linf_scores;
+use super::quantizer::{quantize_weights, WeightQuant};
+
+/// SmoothQuant migration scale `s_k = max|X_k|^α / max|W_k|^(1-α)`.
+pub fn smoothquant_scales(
+    act_linf: &[f32],
+    w: &[f32],
+    n: usize,
+    k: usize,
+    alpha: f32,
+) -> Vec<f32> {
+    assert_eq!(act_linf.len(), k);
+    assert_eq!(w.len(), n * k);
+    let mut w_linf = vec![0f32; k];
+    for row in 0..n {
+        for col in 0..k {
+            w_linf[col] = w_linf[col].max(w[row * k + col].abs());
+        }
+    }
+    (0..k)
+        .map(|c| {
+            let a = act_linf[c].max(1e-5);
+            let ww = w_linf[c].max(1e-5);
+            (a.powf(alpha) / ww.powf(1.0 - alpha)).max(1e-5)
+        })
+        .collect()
+}
+
+/// SmoothQuant package: quantized scaled weights + migration scale.
+pub struct SmoothQuantResult {
+    pub wq: WeightQuant,
+    pub smooth: Vec<f32>,
+}
+
+/// Migrate difficulty into the weights, then RTN-quantize `W·diag(s)`.
+pub fn smoothquant_quantize(
+    w: &[f32],
+    calib_x: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    bits: u32,
+    alpha: f32,
+) -> SmoothQuantResult {
+    let act_linf = linf_scores(calib_x, m, k);
+    let smooth = smoothquant_scales(&act_linf, w, n, k, alpha);
+    let mut ws = vec![0f32; n * k];
+    for row in 0..n {
+        for col in 0..k {
+            ws[row * k + col] = w[row * k + col] * smooth[col];
+        }
+    }
+    SmoothQuantResult { wq: quantize_weights(&ws, n, k, bits), smooth }
+}
+
+/// Runtime side of SmoothQuant: `X / s` feature-wise.
+pub fn smooth_activations(x: &[f32], m: usize, k: usize, smooth: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    let mut out = vec![0f32; m * k];
+    for row in 0..m {
+        for col in 0..k {
+            out[row * k + col] = x[row * k + col] / smooth[col];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::dequant::quik_linear;
+    use crate::util::rng::Rng;
+
+    fn planted(m: usize, k: usize, outlier_cols: &[usize], gain: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        for r in 0..m {
+            for &c in outlier_cols {
+                x[r * k + c] *= gain;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn migration_flattens_planted_outliers() {
+        let (m, k) = (128, 32);
+        let x = planted(m, k, &[5], 50.0, 1);
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..16 * k).map(|_| rng.normal()).collect();
+        let s = smoothquant_scales(&linf_scores(&x, m, k), &w, 16, k, 0.5);
+        let xs = smooth_activations(&x, m, k, &s);
+        let before = linf_scores(&x, m, k);
+        let after = linf_scores(&xs, m, k);
+        let spread = |v: &[f32]| {
+            let mx = v.iter().cloned().fold(0f32, f32::max);
+            let mut sorted = v.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            mx / sorted[v.len() / 2]
+        };
+        assert!(spread(&after) < spread(&before) / 3.0);
+    }
+
+    #[test]
+    fn smoothquant_8bit_preserves_product() {
+        let (m, n, k) = (32, 8, 24);
+        let x = planted(m, k, &[3], 20.0, 3);
+        let mut rng = Rng::new(4);
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let res = smoothquant_quantize(&w, &x, m, n, k, 8, 0.5);
+        let xs = smooth_activations(&x, m, k, &res.smooth);
+        let y = quik_linear(&xs, m, k, 8, &res.wq, &[], 0);
+        // exact product
+        let mut rel_num = 0f64;
+        let mut rel_den = 0f64;
+        for i in 0..m {
+            for j in 0..n {
+                let exact: f32 = (0..k).map(|c| x[i * k + c] * w[j * k + c]).sum();
+                rel_num += ((y[i * n + j] - exact) as f64).powi(2);
+                rel_den += (exact as f64).powi(2);
+            }
+        }
+        assert!((rel_num / rel_den).sqrt() < 0.07);
+    }
+
+    #[test]
+    fn paper_ordering_under_outliers_quik_beats_smoothquant_beats_rtn() {
+        // 4-bit with strong planted outliers: QUIK (outliers in FP16)
+        // < SmoothQuant-4b < RTN, in layer-output error — Tables 1/2.
+        use crate::quant::gptq::{gptq_quantize, hessian_from_calib, GptqConfig};
+        use crate::quant::outlier::{outlier_permutation, permute_columns, select_outliers};
+
+        let (m, n, k, n_out) = (256, 12, 32, 4);
+        let outlier_cols: Vec<usize> = vec![1, 9, 17, 25];
+        let x = planted(m, k, &outlier_cols, 30.0, 5);
+        let mut rng = Rng::new(6);
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let exact: Vec<f32> = (0..m * n)
+            .map(|i| {
+                let (r, j) = (i / n, i % n);
+                (0..k).map(|c| x[r * k + c] * w[j * k + c]).sum()
+            })
+            .collect();
+        let err = |y: &[f32]| -> f64 {
+            y.iter().zip(&exact).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+
+        // QUIK: permute outliers last, GPTQ base, FP outlier columns
+        let idx = select_outliers(&linf_scores(&x, m, k), n_out);
+        let perm = outlier_permutation(k, &idx);
+        let xp = permute_columns(&x, m, k, &perm);
+        let wp = permute_columns(&w, n, k, &perm);
+        let h = hessian_from_calib(&xp, m, k);
+        let g = gptq_quantize(&wp, n, k, &h, GptqConfig { n_outlier: n_out, ..Default::default() })
+            .unwrap();
+        let wq = WeightQuant {
+            w_int: g.w_int.clone(),
+            scale: g.scale.clone(),
+            w_reduced: g.w_reduced.clone(),
+            n,
+            k: k - n_out,
+            bits: 4,
+        };
+        let y_quik = quik_linear(&xp, m, k, 4, &wq, &g.w_fp, n_out);
+
+        // SmoothQuant-4b
+        let sq = smoothquant_quantize(&w, &x, m, n, k, 4, 0.5);
+        let xs = smooth_activations(&x, m, k, &sq.smooth);
+        let y_sq = quik_linear(&xs, m, k, 4, &sq.wq, &[], 0);
+
+        // RTN-4b, no outlier handling
+        let rtn = quantize_weights(&w, n, k, 4);
+        let y_rtn = quik_linear(&x, m, k, 4, &rtn, &[], 0);
+
+        let (e_q, e_s, e_r) = (err(&y_quik), err(&y_sq), err(&y_rtn));
+        assert!(e_q < e_s, "QUIK {e_q} !< SmoothQuant {e_s}");
+        assert!(e_s < e_r, "SmoothQuant {e_s} !< RTN {e_r}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Integer MatMul + Eq.-1 dequantization (Algorithm 1 `Dequantization`).
+//!
+//! The CPU-side mirror of the Pallas fused epilogue — used by the
+//! coordinator's self-checks and as the reference in the property tests:
+//!
+//! ```text
+//! y[m,n] = acc[m,n] * scaleAct[m] * scaleW[n]
+//!        + (zeroAct[m] + halfRange * scaleAct[m]) * wReduced[n]
+//! ```
+
+use super::quantizer::{ActQuant, WeightQuant};
+use super::half_range;
+
+/// `acc[m,n] = Σ_k qx[m,k] * qw[n,k]` with i32 accumulation.
+///
+/// Exact integer arithmetic: INT4 operands with K ≤ 2^23 cannot overflow
+/// i32 (|q| ≤ 8·7·K), and full-range INT8 stays exact for K ≤ 2^16.
+pub fn int_matmul(qx: &[i8], qw: &[i8], m: usize, n: usize, k: usize) -> Vec<i32> {
+    assert_eq!(qx.len(), m * k);
+    assert_eq!(qw.len(), n * k);
+    let mut acc = vec![0i32; m * n];
+    for i in 0..m {
+        let xrow = &qx[i * k..(i + 1) * k];
+        for j in 0..n {
+            let wrow = &qw[j * k..(j + 1) * k];
+            let mut s = 0i32;
+            for (xv, wv) in xrow.iter().zip(wrow) {
+                s += (*xv as i32) * (*wv as i32);
+            }
+            acc[i * n + j] = s;
+        }
+    }
+    acc
+}
+
+/// Eq.-1 dequantization of an i32 accumulator tile to f32.
+pub fn dequantize(
+    acc: &[i32],
+    scale_act: &[f32],
+    zero_act: &[f32],
+    scale_w: &[f32],
+    w_reduced: &[f32],
+    m: usize,
+    n: usize,
+    bits: u32,
+) -> Vec<f32> {
+    assert_eq!(acc.len(), m * n);
+    let hr = half_range(bits) as f32;
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let shift = zero_act[i] + hr * scale_act[i];
+        for j in 0..n {
+            out[i * n + j] =
+                acc[i * n + j] as f32 * scale_act[i] * scale_w[j] + shift * w_reduced[j];
+        }
+    }
+    out
+}
+
+/// Full QUIK linear on the CPU: quantized base MatMul + FP outlier MatMul.
+///
+/// `x` is `[m, k]` column-permuted (outliers last, `k = k_base + n_outlier`).
+/// This is the coordinator-side oracle used to sanity-check artifacts and
+/// by the property tests; the production path runs inside the HLO.
+pub fn quik_linear(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    qa_bits: u32,
+    wq: &WeightQuant,
+    w_fp: &[f32], // [n, n_outlier]
+    n_outlier: usize,
+) -> Vec<f32> {
+    let k_base = k - n_outlier;
+    assert_eq!(wq.k, k_base);
+    let n = wq.n;
+    // split (trailing columns are the outliers)
+    let mut x_base = vec![0f32; m * k_base];
+    let mut x_fp = vec![0f32; m * n_outlier];
+    for i in 0..m {
+        x_base[i * k_base..(i + 1) * k_base].copy_from_slice(&x[i * k..i * k + k_base]);
+        x_fp[i * n_outlier..(i + 1) * n_outlier]
+            .copy_from_slice(&x[i * k + k_base..(i + 1) * k]);
+    }
+    let qa: ActQuant = super::quantize_acts(&x_base, m, k_base, qa_bits);
+    let acc = int_matmul(&qa.q, &wq.w_int, m, n, k_base);
+    let mut y = dequantize(&acc, &qa.scale, &qa.zero, &wq.scale, &wq.w_reduced, m, n, qa_bits);
+    // FP outlier MatMul, accumulated into the result (Algorithm 1 line 8)
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0f32;
+            for c in 0..n_outlier {
+                s += x_fp[i * n_outlier + c] * w_fp[j * n_outlier + c];
+            }
+            y[i * n + j] += s;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_acts, quantize_weights};
+
+    #[test]
+    fn int_matmul_small_exact() {
+        // [1,2;3,4] @ [1,1;1,1]^T = [3,3;7,7]
+        let qx = [1i8, 2, 3, 4];
+        let qw = [1i8, 1, 1, 1];
+        assert_eq!(int_matmul(&qx, &qw, 2, 2, 2), vec![3, 3, 7, 7]);
+    }
+
+    #[test]
+    fn dequant_identity_for_unit_scales() {
+        let acc = vec![10i32, -20];
+        let y = dequantize(&acc, &[1.0], &[0.0], &[1.0, 1.0], &[0.0, 0.0], 1, 2, 4);
+        // shift = 0 + 8*1 = 8, w_reduced = 0 → y = acc
+        assert_eq!(y, vec![10.0, -20.0]);
+    }
+
+    #[test]
+    fn quik_linear_approximates_fp_product() {
+        // pseudo-random but deterministic data
+        let m = 8;
+        let k = 32;
+        let n = 12;
+        let lcg = |s: &mut u64| {
+            *s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((*s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+        };
+        let mut st = 42u64;
+        let x: Vec<f32> = (0..m * k).map(|_| lcg(&mut st)).collect();
+        let w: Vec<f32> = (0..n * k).map(|_| lcg(&mut st)).collect();
+        // exact product
+        let mut exact = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                exact[i * n + j] =
+                    (0..k).map(|c| x[i * k + c] * w[j * k + c]).sum::<f32>();
+            }
+        }
+        for bits in [4u32, 8] {
+            let wq = quantize_weights(&w, n, k, bits);
+            let y = quik_linear(&x, m, k, bits, &wq, &[], 0);
+            let err: f32 = y
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            let norm: f32 = exact.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let budget = if bits == 8 { 0.01 } else { 0.2 };
+            assert!(err / norm < budget, "bits={bits} rel={}", err / norm);
+        }
+    }
+
+    #[test]
+    fn eq1_shift_consistency() {
+        // Directly verify Eq. 1: <w, x+z> == <w,x> + z*Σw  in quantized form.
+        let x = vec![0.5f32, -1.5, 2.0, 0.25];
+        let w = vec![1.0f32, 2.0, -1.0, 0.5];
+        let qa = quantize_acts(&x, 1, 4, 8);
+        let wq = quantize_weights(&w, 1, 4, 8);
+        let acc = int_matmul(&qa.q, &wq.w_int, 1, 1, 4);
+        let y = dequantize(&acc, &qa.scale, &qa.zero, &wq.scale, &wq.w_reduced, 1, 1, 8);
+        let exact: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        assert!((y[0] - exact).abs() < 0.05, "y={} exact={}", y[0], exact);
+    }
+}

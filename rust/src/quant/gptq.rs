@@ -1,0 +1,401 @@
+//! GPTQ weight quantization — native Rust substrate parity.
+//!
+//! A from-scratch port of `compile.quik.gptq` (Frantar et al. 2022 with the
+//! QUIK outlier-column reordering): Cholesky-based inverse-Hessian factor,
+//! dampening, per-column quantize + error propagation, lazy block updates,
+//! and FP outlier columns that absorb the accumulated error.
+//!
+//! The linear algebra (Cholesky, triangular solves, SPD inverse) is
+//! implemented here directly in f64 — no external linalg crate — because
+//! GPTQ only needs these three kernels and the matrices are small
+//! (K ≤ a few thousand).
+
+use super::weight_qmax;
+
+/// GPTQ hyper-parameters (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct GptqConfig {
+    pub bits: u32,
+    pub n_outlier: usize,
+    pub damp: f64,
+    pub block_size: usize,
+}
+
+impl Default for GptqConfig {
+    fn default() -> Self {
+        Self { bits: 4, n_outlier: 0, damp: 0.01, block_size: 128 }
+    }
+}
+
+/// GPTQ output: quantized base + error-compensated FP outlier columns.
+#[derive(Debug, Clone)]
+pub struct GptqResult {
+    pub w_int: Vec<i8>,      // [n, k_base]
+    pub w_fp: Vec<f32>,      // [n, n_outlier]
+    pub scale: Vec<f32>,     // [n]
+    pub w_reduced: Vec<f32>, // [n]
+    pub n: usize,
+    pub k_base: usize,
+    pub n_outlier: usize,
+    /// Hessian-weighted proxy error Σ err² / U_jj² (the GPTQ objective).
+    pub proxy_error: f64,
+}
+
+/// `H = 2 Xᵀ X` from `[m, k]` row-major calibration activations.
+pub fn hessian_from_calib(x: &[f32], m: usize, k: usize) -> Vec<f64> {
+    assert_eq!(x.len(), m * k);
+    let mut h = vec![0f64; k * k];
+    for row in 0..m {
+        let xs = &x[row * k..(row + 1) * k];
+        for i in 0..k {
+            let xi = xs[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            for j in i..k {
+                h[i * k + j] += 2.0 * xi * xs[j] as f64;
+            }
+        }
+    }
+    // mirror the upper triangle
+    for i in 0..k {
+        for j in 0..i {
+            h[i * k + j] = h[j * k + i];
+        }
+    }
+    h
+}
+
+/// Cholesky `A = L Lᵀ` (lower, in place on a copy). Errors on non-SPD.
+fn cholesky(a: &[f64], k: usize) -> Result<Vec<f64>, String> {
+    let mut l = vec![0f64; k * k];
+    for i in 0..k {
+        for j in 0..=i {
+            let mut s = a[i * k + j];
+            for c in 0..j {
+                s -= l[i * k + c] * l[j * k + c];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!("matrix not SPD at pivot {i} (s={s})"));
+                }
+                l[i * k + i] = s.sqrt();
+            } else {
+                l[i * k + j] = s / l[j * k + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// SPD inverse via Cholesky: solves `A X = I` column by column.
+fn spd_inverse(a: &[f64], k: usize) -> Result<Vec<f64>, String> {
+    let l = cholesky(a, k)?;
+    let mut inv = vec![0f64; k * k];
+    let mut y = vec![0f64; k];
+    for col in 0..k {
+        // forward solve L y = e_col
+        for i in 0..k {
+            let mut s = if i == col { 1.0 } else { 0.0 };
+            for c in 0..i {
+                s -= l[i * k + c] * y[c];
+            }
+            y[i] = s / l[i * k + i];
+        }
+        // backward solve Lᵀ x = y
+        for i in (0..k).rev() {
+            let mut s = y[i];
+            for c in (i + 1)..k {
+                s -= l[c * k + i] * inv[c * k + col];
+            }
+            inv[i * k + col] = s / l[i * k + i];
+        }
+    }
+    Ok(inv)
+}
+
+/// Upper factor `U` with `H⁻¹ = Uᵀ U` (the orientation GPTQ consumes):
+/// dampen, invert, Cholesky the inverse, transpose.
+fn inv_hessian_cholesky(h: &[f64], k: usize, damp: f64) -> Result<Vec<f64>, String> {
+    let mut hd = h.to_vec();
+    // dead columns: zero diagonal → pin to 1 (weight will quantize to 0)
+    let mut diag_sum = 0.0;
+    for i in 0..k {
+        if hd[i * k + i] == 0.0 {
+            hd[i * k + i] = 1.0;
+        }
+        diag_sum += hd[i * k + i];
+    }
+    let damp_add = damp * diag_sum / k as f64;
+    for i in 0..k {
+        hd[i * k + i] += damp_add;
+    }
+    let hinv = spd_inverse(&hd, k)?;
+    let m = cholesky(&hinv, k)?; // hinv = M Mᵀ, M lower
+    // U = Mᵀ (upper) satisfies hinv = Uᵀ U
+    let mut u = vec![0f64; k * k];
+    for i in 0..k {
+        for j in 0..k {
+            u[i * k + j] = m[j * k + i];
+        }
+    }
+    Ok(u)
+}
+
+/// Run GPTQ on `[n, k]` column-permuted weights (outliers last).
+pub fn gptq_quantize(
+    w: &[f32],
+    n: usize,
+    k: usize,
+    hessian: &[f64],
+    cfg: GptqConfig,
+) -> Result<GptqResult, String> {
+    assert_eq!(w.len(), n * k);
+    assert_eq!(hessian.len(), k * k);
+    let k_base = k
+        .checked_sub(cfg.n_outlier)
+        .filter(|&kb| kb > 0)
+        .ok_or("all columns marked outlier")?;
+    let u = inv_hessian_cholesky(hessian, k, cfg.damp)?;
+    let qmax = weight_qmax(cfg.bits) as f64;
+
+    let mut wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+
+    // per-output symmetric scale over the base columns
+    let mut scale = vec![0f64; n];
+    for row in 0..n {
+        let amax = wf[row * k..row * k + k_base]
+            .iter()
+            .fold(0f64, |a, &v| a.max(v.abs()));
+        scale[row] = (amax / qmax).max(1e-8);
+    }
+
+    let mut w_int = vec![0i8; n * k_base];
+    let mut proxy = 0f64;
+
+    let mut start = 0usize;
+    while start < k {
+        let end = (start + cfg.block_size).min(k);
+        let bw = end - start;
+        let mut err_blk = vec![0f64; n * bw];
+        for j in start..end {
+            let jj = j - start;
+            let ujj = u[j * k + j];
+            for row in 0..n {
+                let col = wf[row * k + j];
+                let dq = if j < k_base {
+                    let q = (col / scale[row]).round().clamp(-qmax, qmax);
+                    w_int[row * k_base + j] = q as i8;
+                    q * scale[row]
+                } else {
+                    col // FP outlier column: no quantization error
+                };
+                let err = (col - dq) / ujj;
+                proxy += err * err;
+                err_blk[row * bw + jj] = err;
+                // eager in-block update of columns to the right
+                for t in (j + 1)..end {
+                    wf[row * k + t] -= err * u[j * k + t];
+                }
+            }
+        }
+        // lazy update of everything right of the block
+        if end < k {
+            for row in 0..n {
+                for t in end..k {
+                    let mut s = 0f64;
+                    for jj in 0..bw {
+                        s += err_blk[row * bw + jj] * u[(start + jj) * k + t];
+                    }
+                    wf[row * k + t] -= s;
+                }
+            }
+        }
+        start = end;
+    }
+
+    let mut w_fp = vec![0f32; n * cfg.n_outlier];
+    for row in 0..n {
+        for c in 0..cfg.n_outlier {
+            w_fp[row * cfg.n_outlier + c] = wf[row * k + k_base + c] as f32;
+        }
+    }
+    let scale32: Vec<f32> = scale.iter().map(|&s| s as f32).collect();
+    let mut w_reduced = vec![0f32; n];
+    for row in 0..n {
+        let sum: f32 = w_int[row * k_base..(row + 1) * k_base]
+            .iter()
+            .map(|&q| q as f32)
+            .sum();
+        w_reduced[row] = scale32[row] * sum;
+    }
+    Ok(GptqResult {
+        w_int,
+        w_fp,
+        scale: scale32,
+        w_reduced,
+        n,
+        k_base,
+        n_outlier: cfg.n_outlier,
+        proxy_error: proxy,
+    })
+}
+
+/// Effective dequantized `[n, k]` weight (base dequant ++ FP columns).
+pub fn dequantized_weight(r: &GptqResult) -> Vec<f32> {
+    let k = r.k_base + r.n_outlier;
+    let mut out = vec![0f32; r.n * k];
+    for row in 0..r.n {
+        for c in 0..r.k_base {
+            out[row * k + c] = r.w_int[row * r.k_base + c] as f32 * r.scale[row];
+        }
+        for c in 0..r.n_outlier {
+            out[row * k + r.k_base + c] = r.w_fp[row * r.n_outlier + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(s: &mut u64) -> f32 {
+        *s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((*s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+    }
+
+    fn random_mat(n: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed;
+        (0..n * k).map(|_| lcg(&mut s)).collect()
+    }
+
+    fn layer_err(w_hat: &[f32], w: &[f32], x: &[f32], m: usize, n: usize, k: usize) -> f64 {
+        // ‖X (Ŵ - W)ᵀ‖²
+        let mut e = 0f64;
+        for r in 0..m {
+            for j in 0..n {
+                let mut s = 0f64;
+                for c in 0..k {
+                    s += x[r * k + c] as f64
+                        * (w_hat[j * k + c] as f64 - w[j * k + c] as f64);
+                }
+                e += s * s;
+            }
+        }
+        e
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = B Bᵀ + I is SPD
+        let k = 6;
+        let b = random_mat(k, k, 7);
+        let mut a = vec![0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                for c in 0..k {
+                    a[i * k + j] += b[i * k + c] as f64 * b[j * k + c] as f64;
+                }
+            }
+            a[i * k + i] += 1.0;
+        }
+        let inv = spd_inverse(&a, k).unwrap();
+        // A * inv ≈ I
+        for i in 0..k {
+            for j in 0..k {
+                let mut s = 0f64;
+                for c in 0..k {
+                    s += a[i * k + c] * inv[c * k + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-9, "({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn inv_hessian_factor_orientation() {
+        // verify H⁻¹ = Uᵀ U
+        let k = 5;
+        let x = random_mat(64, k, 9);
+        let h = hessian_from_calib(&x, 64, k);
+        let u = inv_hessian_cholesky(&h, k, 0.01).unwrap();
+        // rebuild damped H to compare against
+        let mut hd = h.clone();
+        let mean_diag: f64 = (0..k).map(|i| hd[i * k + i]).sum::<f64>() / k as f64;
+        for i in 0..k {
+            hd[i * k + i] += 0.01 * mean_diag;
+        }
+        let hinv = spd_inverse(&hd, k).unwrap();
+        for i in 0..k {
+            for j in 0..k {
+                let mut s = 0f64;
+                for c in 0..k {
+                    s += u[c * k + i] * u[c * k + j];
+                }
+                assert!((s - hinv[i * k + j]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_beats_rtn() {
+        let (m, n, k) = (256, 16, 32);
+        let x = random_mat(m, k, 11);
+        let w = random_mat(n, k, 13);
+        let h = hessian_from_calib(&x, m, k);
+        let g = gptq_quantize(&w, n, k, &h, GptqConfig::default()).unwrap();
+        let rtn = crate::quant::quantize_weights(&w, n, k, 4);
+        let mut rtn_hat = vec![0f32; n * k];
+        for r in 0..n {
+            for c in 0..k {
+                rtn_hat[r * k + c] = rtn.w_int[r * k + c] as f32 * rtn.scale[r];
+            }
+        }
+        let e_g = layer_err(&dequantized_weight(&g), &w, &x, m, n, k);
+        let e_r = layer_err(&rtn_hat, &w, &x, m, n, k);
+        assert!(e_g < e_r, "gptq {e_g} !< rtn {e_r}");
+    }
+
+    #[test]
+    fn outlier_columns_compensated() {
+        let (m, n, k, n_out) = (256, 8, 24, 4);
+        let mut x = random_mat(m, k, 17);
+        for r in 0..m {
+            for c in (k - n_out)..k {
+                x[r * k + c] *= 30.0; // planted outlier features (already last)
+            }
+        }
+        let w = random_mat(n, k, 19);
+        let h = hessian_from_calib(&x, m, k);
+        let g0 = gptq_quantize(&w, n, k, &h, GptqConfig::default()).unwrap();
+        let g1 = gptq_quantize(
+            &w, n, k, &h,
+            GptqConfig { n_outlier: n_out, ..Default::default() },
+        )
+        .unwrap();
+        let e0 = layer_err(&dequantized_weight(&g0), &w, &x, m, n, k);
+        let e1 = layer_err(&dequantized_weight(&g1), &w, &x, m, n, k);
+        assert!(e1 < e0, "outliers must reduce layer error: {e1} !< {e0}");
+        // FP columns must differ from the originals (error compensation)
+        let orig_fp: Vec<f32> = (0..n)
+            .flat_map(|r| ((k - n_out)..k).map(move |c| (r, c)))
+            .map(|(r, c)| w[r * k + c])
+            .collect();
+        assert_ne!(g1.w_fp, orig_fp);
+    }
+
+    #[test]
+    fn dead_column_handled() {
+        let (m, n, k) = (64, 4, 8);
+        let mut x = random_mat(m, k, 23);
+        for r in 0..m {
+            x[r * k + 3] = 0.0;
+        }
+        let w = random_mat(n, k, 29);
+        let h = hessian_from_calib(&x, m, k);
+        let g = gptq_quantize(&w, n, k, &h, GptqConfig::default()).unwrap();
+        assert!(dequantized_weight(&g).iter().all(|v| v.is_finite()));
+    }
+}

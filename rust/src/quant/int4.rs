@@ -1,0 +1,84 @@
+//! INT4 nibble packing — the byte-exact storage format.
+//!
+//! The Pallas kernels carry INT4 values in int8 containers (interpret-mode
+//! limitation); this module is the real packed format the paper's CUTLASS
+//! kernels consume and the one the [`crate::memmodel`] charges for: two
+//! signed 4-bit values per byte, low nibble first.
+//!
+//! Values must be in `[-8, 7]`; `pack` debug-asserts this and masks to the
+//! low nibble, `unpack` sign-extends.
+
+/// Pack a slice of INT4 values (each in `[-8, 7]`) into nibbles.
+///
+/// Odd lengths are padded with a zero nibble; `unpack` takes the original
+/// length to drop it again.
+pub fn pack(values: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len().div_ceil(2));
+    for pair in values.chunks(2) {
+        let lo = pair[0];
+        let hi = *pair.get(1).unwrap_or(&0);
+        debug_assert!((-8..=7).contains(&lo) && (-8..=7).contains(&hi));
+        out.push(((lo as u8) & 0x0f) | (((hi as u8) & 0x0f) << 4));
+    }
+    out
+}
+
+/// Unpack `len` INT4 values from nibble storage (inverse of [`pack`]).
+pub fn unpack(packed: &[u8], len: usize) -> Vec<i8> {
+    assert!(packed.len() * 2 >= len, "packed buffer too short");
+    let mut out = Vec::with_capacity(len);
+    for (i, byte) in packed.iter().enumerate() {
+        if 2 * i < len {
+            out.push(sign_extend4(byte & 0x0f));
+        }
+        if 2 * i + 1 < len {
+            out.push(sign_extend4(byte >> 4));
+        }
+    }
+    out
+}
+
+#[inline]
+fn sign_extend4(nibble: u8) -> i8 {
+    // shift into the top nibble and arithmetic-shift back down
+    ((nibble << 4) as i8) >> 4
+}
+
+/// Bytes required to store `n` INT4 values packed.
+pub fn packed_len(n: usize) -> usize {
+    n.div_ceil(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_values() {
+        let values: Vec<i8> = (-8..=7).collect();
+        assert_eq!(unpack(&pack(&values), values.len()), values);
+    }
+
+    #[test]
+    fn roundtrip_odd_length() {
+        let values = vec![-8i8, 7, 3];
+        let packed = pack(&values);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack(&packed, 3), values);
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sign_extend4(0x0f), -1);
+        assert_eq!(sign_extend4(0x08), -8);
+        assert_eq!(sign_extend4(0x07), 7);
+        assert_eq!(sign_extend4(0x00), 0);
+    }
+
+    #[test]
+    fn density_is_half_byte() {
+        assert_eq!(packed_len(4096), 2048);
+        assert_eq!(packed_len(4097), 2049);
+        assert_eq!(pack(&vec![0i8; 4096]).len(), 2048);
+    }
+}

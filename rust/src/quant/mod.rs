@@ -1,0 +1,63 @@
+//! Native QUIK quantization substrate.
+//!
+//! A from-scratch Rust implementation of every numeric component of the
+//! QUIK pipeline (paper §3): per-token asymmetric activation quantization,
+//! per-output symmetric weight quantization, the INT4 nibble-packed storage
+//! format, the Eq.-1 dequantization epilogue, outlier selection/permutation
+//! and GPTQ / 2:4-sparsity weight preparation.
+//!
+//! Two reasons this exists alongside the Python build path:
+//!
+//! 1. the serving coordinator needs quantization *at request time* (the
+//!    paper's activations are quantized online, per token), and
+//! 2. baselines (`baselines`): SmoothQuant / RTN in Rust so the paper's
+//!    accuracy ordering is assertable natively, and
+//! 3. it is the property-test anchor: `rust/tests/quant_substrate.rs`
+//!    checks it against golden vectors emitted by the Python oracle, and
+//!    proptest sweeps the invariants (round-trip bounds, packing bijection,
+//!    permutation bijection, Eq.-1 identity).
+
+pub mod baselines;
+pub mod dequant;
+pub mod gptq;
+pub mod int4;
+pub mod outlier;
+pub mod quantizer;
+pub mod sparse;
+
+pub use dequant::{dequantize, int_matmul};
+pub use quantizer::{quantize_acts, quantize_weights, ActQuant, WeightQuant};
+
+/// Signed re-centering offset for asymmetric activation quantization.
+pub fn half_range(bits: u32) -> i32 {
+    1 << (bits - 1)
+}
+
+/// Symmetric weight quantization magnitude bound (7 for INT4, 127 for INT8).
+pub fn weight_qmax(bits: u32) -> i32 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Inclusive signed value range for asymmetric activation quantization.
+pub fn act_qrange(bits: u32) -> (i32, i32) {
+    (-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+}
+
+/// Scale floor guarding constant rows against division by zero
+/// (mirrors `compile.kernels.ref.SCALE_EPS`).
+pub const SCALE_EPS: f32 = 1e-8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(half_range(4), 8);
+        assert_eq!(half_range(8), 128);
+        assert_eq!(weight_qmax(4), 7);
+        assert_eq!(weight_qmax(8), 127);
+        assert_eq!(act_qrange(4), (-8, 7));
+        assert_eq!(act_qrange(8), (-128, 127));
+    }
+}

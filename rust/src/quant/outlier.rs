@@ -1,0 +1,105 @@
+//! Outlier feature selection and the column permutation (paper §3.2).
+//!
+//! Mirrors `compile.quik.outliers`: features are scored by ℓ∞ norm over a
+//! calibration sample, the top-N become outliers, and a permutation moves
+//! them to the end of the feature axis so the runtime split is a slice.
+//! The coordinator applies the *inverse* mapping when laying out incoming
+//! activations for an artifact that was exported in permuted order.
+
+/// Per-feature ℓ∞ norm of an `[m, k]` row-major activation sample.
+pub fn linf_scores(x: &[f32], m: usize, k: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    let mut s = vec![0f32; k];
+    for row in 0..m {
+        for col in 0..k {
+            s[col] = s[col].max(x[row * k + col].abs());
+        }
+    }
+    s
+}
+
+/// Indices of the `n_outlier` features with largest score, sorted ascending.
+pub fn select_outliers(scores: &[f32], n_outlier: usize) -> Vec<usize> {
+    assert!(n_outlier <= scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut top: Vec<usize> = idx.into_iter().take(n_outlier).collect();
+    top.sort_unstable();
+    top
+}
+
+/// Permutation moving `outlier_idx` to the end of `0..k`, preserving the
+/// relative order of both groups (Fig. 4's reordering).
+pub fn outlier_permutation(k: usize, outlier_idx: &[usize]) -> Vec<usize> {
+    let mut is_outlier = vec![false; k];
+    for &i in outlier_idx {
+        is_outlier[i] = true;
+    }
+    let mut perm = Vec::with_capacity(k);
+    perm.extend((0..k).filter(|&i| !is_outlier[i]));
+    perm.extend(outlier_idx.iter().copied());
+    perm
+}
+
+/// Inverse permutation (`inv[perm[i]] = i`).
+pub fn inverse_permutation(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+/// Apply a column permutation to an `[m, k]` row-major matrix.
+pub fn permute_columns(x: &[f32], m: usize, k: usize, perm: &[usize]) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(perm.len(), k);
+    let mut out = vec![0f32; m * k];
+    for row in 0..m {
+        let src = &x[row * k..(row + 1) * k];
+        let dst = &mut out[row * k..(row + 1) * k];
+        // §Perf: zip over (dst, perm) so the gather loop carries no bounds
+        // checks on the write side; the read stays a checked index (perm
+        // entries are validated by the assert above via perm.len()).
+        for (d, &p) in dst.iter_mut().zip(perm) {
+            *d = src[p];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_planted_outliers() {
+        // feature 1 and 3 have large magnitude
+        let x = vec![
+            0.1, 9.0, 0.2, -8.0, //
+            -0.2, -7.5, 0.1, 6.0,
+        ];
+        let scores = linf_scores(&x, 2, 4);
+        assert_eq!(select_outliers(&scores, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn permutation_moves_outliers_last() {
+        let perm = outlier_permutation(6, &[1, 4]);
+        assert_eq!(perm, vec![0, 2, 3, 5, 1, 4]);
+        let inv = inverse_permutation(&perm);
+        for i in 0..6 {
+            assert_eq!(perm[inv[i]], i);
+            assert_eq!(inv[perm[i]], i);
+        }
+    }
+
+    #[test]
+    fn permute_then_inverse_is_identity() {
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let perm = outlier_permutation(4, &[2]);
+        let inv = inverse_permutation(&perm);
+        let back = permute_columns(&permute_columns(&x, 3, 4, &perm), 3, 4, &inv);
+        assert_eq!(back, x);
+    }
+}

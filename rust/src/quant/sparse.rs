@@ -1,0 +1,115 @@
+//! 2:4 structured sparsity utilities (paper §4.3.2).
+//!
+//! The hardware-supported N:M pattern keeps exactly `M - N` of every `M`
+//! consecutive weights along the input dimension.  The joint
+//! SparseGPT+QUIK preparation lives in `compile.quik.sparsegpt`; this
+//! module provides the runtime-side format checks, magnitude-mask
+//! baseline, and the compressed-size accounting the memory model charges
+//! (2:4 INT4 ≈ 0.25 B/weight + 2-bit metadata per kept pair).
+
+/// Keep-mask for `n:m` magnitude pruning of an `[rows, cols]` matrix.
+///
+/// Within each group of `m` consecutive columns the `m - n` largest |w|
+/// are kept.  Trailing partial groups are kept dense (as in the paper's
+/// layer-granularity application).
+pub fn magnitude_mask_nm(w: &[f32], rows: usize, cols: usize, n: usize, m: usize) -> Vec<bool> {
+    assert_eq!(w.len(), rows * cols);
+    assert!(n < m);
+    let mut mask = vec![true; rows * cols];
+    let full = (cols / m) * m;
+    for r in 0..rows {
+        for g in (0..full).step_by(m) {
+            let mut idx: Vec<usize> = (0..m).collect();
+            idx.sort_by(|&a, &b| {
+                w[r * cols + g + a]
+                    .abs()
+                    .partial_cmp(&w[r * cols + g + b].abs())
+                    .unwrap()
+            });
+            for &i in idx.iter().take(n) {
+                mask[r * cols + g + i] = false;
+            }
+        }
+    }
+    mask
+}
+
+/// Verify every full `m`-group keeps exactly `m - n` entries.
+pub fn check_nm_pattern(mask: &[bool], rows: usize, cols: usize, n: usize, m: usize) -> bool {
+    let full = (cols / m) * m;
+    for r in 0..rows {
+        for g in (0..full).step_by(m) {
+            let kept = (0..m).filter(|&i| mask[r * cols + g + i]).count();
+            if kept != m - n {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Apply a keep-mask (zero out pruned weights).
+pub fn apply_mask(w: &mut [f32], mask: &[bool]) {
+    for (v, &keep) in w.iter_mut().zip(mask) {
+        if !keep {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Fraction of pruned entries.
+pub fn sparsity(mask: &[bool]) -> f64 {
+    let pruned = mask.iter().filter(|&&k| !k).count();
+    pruned as f64 / mask.len() as f64
+}
+
+/// Compressed bytes for a 2:4-sparse INT-`bits` weight matrix.
+///
+/// Kept values store at `bits/8` bytes each (half the positions), plus
+/// 2 bits of position metadata per group of 4 (NVIDIA's sparse format).
+pub fn sparse24_weight_bytes(rows: usize, cols: usize, bits: u32) -> usize {
+    let kept = rows * cols / 2;
+    let value_bytes = kept * bits as usize / 8;
+    let meta_bytes = rows * cols / 4 / 4; // 2 bits per 4-group = cols/4 * 2b
+    value_bytes + meta_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn magnitude_mask_is_24() {
+        let w: Vec<f32> = (0..32).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+        let mask = magnitude_mask_nm(&w, 2, 16, 2, 4);
+        assert!(check_nm_pattern(&mask, 2, 16, 2, 4));
+        assert!((sparsity(&mask) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mask_keeps_largest() {
+        let w = vec![1.0f32, -5.0, 0.1, 3.0]; // group of 4: keep -5 and 3
+        let mask = magnitude_mask_nm(&w, 1, 4, 2, 4);
+        assert_eq!(mask, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn partial_group_stays_dense() {
+        let w = vec![1.0f32; 6]; // one full group + 2 trailing
+        let mask = magnitude_mask_nm(&w, 1, 6, 2, 4);
+        assert!(mask[4] && mask[5]);
+    }
+
+    #[test]
+    fn apply_mask_zeros_pruned() {
+        let mut w = vec![1.0f32, 2.0, 3.0, 4.0];
+        apply_mask(&mut w, &[true, false, true, false]);
+        assert_eq!(w, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn sparse_bytes_halve_plus_meta() {
+        // 128x128 INT4 dense: 8192 B; 2:4: 4096 B values + 1024 B meta
+        assert_eq!(sparse24_weight_bytes(128, 128, 4), 4096 + 1024);
+    }
+}

@@ -1,0 +1,308 @@
+//! Artifact manifest parsing + weight blob loading.
+//!
+//! Mirrors the JSON layout written by `python/compile/aot.py`: per model,
+//! per variant, an HLO file, a raw weight blob (leaves in HLO parameter
+//! order) and golden input/output files for the numeric round-trip test.
+//! Parsed with the in-crate [`crate::util::json`] parser (offline build —
+//! no serde).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One tensor's dtype/shape record in the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "s32" | "s8"
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn element_size(&self) -> usize {
+        match self.dtype.as_str() {
+            "f32" | "s32" => 4,
+            "s8" => 1,
+            other => panic!("unknown dtype {other}"),
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(TensorSpec {
+            name: str_field(v, "name")?,
+            dtype: str_field(v, "dtype")?,
+            shape: usize_array(v, "shape")?,
+            offset: v.get("offset").and_then(Value::as_usize).unwrap_or(0),
+            nbytes: v.get("nbytes").and_then(Value::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+fn str_field(v: &Value, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .with_context(|| format!("missing string field {key:?}"))
+}
+
+fn usize_field(v: &Value, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Value::as_usize)
+        .with_context(|| format!("missing integer field {key:?}"))
+}
+
+fn usize_array(v: &Value, key: &str) -> Result<Vec<usize>> {
+    v.get(key)
+        .and_then(Value::as_array)
+        .with_context(|| format!("missing array field {key:?}"))?
+        .iter()
+        .map(|x| x.as_usize().context("non-integer array element"))
+        .collect()
+}
+
+/// Golden input/output record for one artifact.
+#[derive(Debug, Clone)]
+pub struct GoldenSpec {
+    pub tokens_shape: Vec<usize>,
+    pub logits_shape: Vec<usize>,
+    pub file: String,
+}
+
+/// One compiled-program entry (an exported (variant, batch, seq)).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub hlo: String,
+    pub weights: String,
+    pub params: Vec<TensorSpec>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub golden: GoldenSpec,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        let tensor_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)
+                .and_then(Value::as_array)
+                .with_context(|| format!("missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let g = v.get("golden").context("missing golden")?;
+        Ok(ArtifactSpec {
+            hlo: str_field(v, "hlo")?,
+            weights: str_field(v, "weights")?,
+            params: tensor_list("params")?,
+            inputs: tensor_list("inputs")?,
+            outputs: tensor_list("outputs")?,
+            golden: GoldenSpec {
+                tokens_shape: usize_array(g, "tokens_shape")?,
+                logits_shape: usize_array(g, "logits_shape")?,
+                file: str_field(g, "file")?,
+            },
+            batch: usize_field(v, "batch")?,
+            seq: usize_field(v, "seq")?,
+        })
+    }
+}
+
+/// Model architecture summary mirrored into the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelConfigSpec {
+    pub family: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfigSpec,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).context("parsing manifest")?;
+        let mut models = BTreeMap::new();
+        let model_map = root
+            .get("models")
+            .and_then(Value::as_object)
+            .context("manifest missing models")?;
+        for (name, entry) in model_map {
+            let c = entry.get("config").context("missing config")?;
+            let config = ModelConfigSpec {
+                family: str_field(c, "family")?,
+                vocab: usize_field(c, "vocab")?,
+                d_model: usize_field(c, "d_model")?,
+                n_layers: usize_field(c, "n_layers")?,
+                n_heads: usize_field(c, "n_heads")?,
+                d_ff: usize_field(c, "d_ff")?,
+                max_seq: usize_field(c, "max_seq")?,
+            };
+            let mut artifacts = BTreeMap::new();
+            for (vname, vspec) in entry
+                .get("artifacts")
+                .and_then(Value::as_object)
+                .context("missing artifacts")?
+            {
+                artifacts.insert(
+                    vname.clone(),
+                    ArtifactSpec::from_json(vspec)
+                        .with_context(|| format!("artifact {vname}"))?,
+                );
+            }
+            models.insert(name.clone(), ModelEntry { config, artifacts });
+        }
+        Ok(Manifest { models, dir: dir.to_path_buf() })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).with_context(|| {
+            format!("model {name:?} not in manifest (have {:?})", self.models.keys())
+        })
+    }
+
+    pub fn artifact(&self, model: &str, variant: &str) -> Result<&ArtifactSpec> {
+        let m = self.model(model)?;
+        m.artifacts.get(variant).with_context(|| {
+            format!(
+                "artifact {variant:?} not found for {model:?} (have {:?})",
+                m.artifacts.keys()
+            )
+        })
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+/// Read one weight blob and slice it into per-parameter byte vectors
+/// (HLO parameter order).
+pub fn read_weight_blob(path: &Path, params: &[TensorSpec]) -> Result<Vec<Vec<u8>>> {
+    let blob = fs::read(path).with_context(|| format!("reading weight blob {path:?}"))?;
+    let mut out = Vec::with_capacity(params.len());
+    for p in params {
+        let end = p.offset + p.nbytes;
+        if end > blob.len() {
+            bail!("weight blob too short for {}: need {end}, have {}", p.name, blob.len());
+        }
+        if p.nbytes != p.element_count() * p.element_size() {
+            bail!("inconsistent manifest record for {}", p.name);
+        }
+        out.push(blob[p.offset..end].to_vec());
+    }
+    Ok(out)
+}
+
+/// Read a golden file: `tokens: i32[tokens_shape]` then `logits: f32[...]`.
+pub fn read_golden(path: &Path, g: &GoldenSpec) -> Result<(Vec<i32>, Vec<f32>)> {
+    let blob = fs::read(path).with_context(|| format!("reading golden {path:?}"))?;
+    let n_tok: usize = g.tokens_shape.iter().product();
+    let n_log: usize = g.logits_shape.iter().product();
+    if blob.len() != n_tok * 4 + n_log * 4 {
+        bail!("golden file size mismatch: {} vs {}", blob.len(), n_tok * 4 + n_log * 4);
+    }
+    let tokens = blob[..n_tok * 4]
+        .chunks_exact(4)
+        .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let logits = blob[n_tok * 4..]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    Ok((tokens, logits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec {
+            name: "w".into(),
+            dtype: "s8".into(),
+            shape: vec![4, 8],
+            offset: 0,
+            nbytes: 32,
+        };
+        assert_eq!(t.element_count(), 32);
+        assert_eq!(t.element_size(), 1);
+    }
+
+    #[test]
+    fn blob_slicing_checks_bounds() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("quik_test_blob.bin");
+        fs::write(&path, [0u8; 16]).unwrap();
+        let bad = vec![TensorSpec {
+            name: "a".into(),
+            dtype: "f32".into(),
+            shape: vec![8],
+            offset: 0,
+            nbytes: 32,
+        }];
+        assert!(read_weight_blob(&path, &bad).is_err());
+        let ok = vec![TensorSpec {
+            name: "a".into(),
+            dtype: "f32".into(),
+            shape: vec![4],
+            offset: 0,
+            nbytes: 16,
+        }];
+        assert_eq!(read_weight_blob(&path, &ok).unwrap()[0].len(), 16);
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join("quik_manifest_test");
+        fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "models": {"m": {"config": {"family": "llama", "vocab": 256,
+             "d_model": 96, "n_layers": 3, "n_heads": 4, "d_ff": 256,
+             "max_seq": 256}, "train_final_loss": 1.0,
+           "artifacts": {"v": {"hlo": "x.hlo.txt", "weights": "x.bin",
+             "params": [], "inputs": [], "outputs": [],
+             "golden": {"tokens_shape": [1, 2], "logits_shape": [1, 2, 3],
+                        "file": "g.bin"},
+             "batch": 1, "seq": 2}}}}}"#;
+        fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model("m").unwrap().config.d_model, 96);
+        assert_eq!(m.artifact("m", "v").unwrap().seq, 2);
+        assert!(m.artifact("m", "nope").is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,208 @@
+//! PJRT execution engine: compile HLO text once, run prefill/decode calls.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.  Weight
+//! parameters are materialized as `Literal`s once at load time and passed
+//! by reference on every call; KV-cache literals are threaded through
+//! consecutive calls by the coordinator.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifacts::{read_weight_blob, ArtifactSpec, Manifest, TensorSpec};
+
+fn element_type(dtype: &str) -> Result<ElementType> {
+    Ok(match dtype {
+        "f32" => ElementType::F32,
+        "s32" => ElementType::S32,
+        "s8" => ElementType::S8,
+        other => bail!("unsupported dtype {other}"),
+    })
+}
+
+/// Build a literal of the spec's dtype/shape from raw little-endian bytes.
+fn literal_from_bytes(spec: &TensorSpec, bytes: &[u8]) -> Result<Literal> {
+    let ty = element_type(&spec.dtype)?;
+    let mut lit = Literal::create_from_shape(ty.primitive_type(), &spec.shape);
+    if lit.size_bytes() != bytes.len() {
+        bail!(
+            "literal size mismatch for {}: literal {} vs blob {}",
+            spec.name,
+            lit.size_bytes(),
+            bytes.len()
+        );
+    }
+    match ty {
+        ElementType::F32 => {
+            let v: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            lit.copy_raw_from(&v)?;
+        }
+        ElementType::S32 => {
+            let v: Vec<i32> = bytes
+                .chunks_exact(4)
+                .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            lit.copy_raw_from(&v)?;
+        }
+        ElementType::S8 => {
+            let v: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+            lit.copy_raw_from(&v)?;
+        }
+        _ => unreachable!(),
+    }
+    Ok(lit)
+}
+
+/// A compiled artifact with its resident weights.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+    weights: Vec<Literal>,
+}
+
+/// KV-cache state threaded between prefill and decode calls.
+pub struct RunningCache {
+    pub cache_k: Literal,
+    pub cache_v: Literal,
+    pub cache_len: i32,
+}
+
+/// Output of a prefill/decode call.
+pub struct PrefillOutput {
+    /// Row-major `[batch, seq, vocab]` logits.
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl PrefillOutput {
+    /// Argmax token per batch row at the *last* position (greedy decode).
+    pub fn argmax_last(&self) -> Vec<i32> {
+        (0..self.batch)
+            .map(|b| {
+                let base = (b * self.seq + (self.seq - 1)) * self.vocab;
+                let row = &self.logits[base..base + self.vocab];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Logits row at (batch, pos).
+    pub fn row(&self, b: usize, pos: usize) -> &[f32] {
+        let base = (b * self.seq + pos) * self.vocab;
+        &self.logits[base..base + self.vocab]
+    }
+}
+
+impl LoadedArtifact {
+    /// Fresh zeroed KV cache matching this artifact's cache shape.
+    pub fn new_cache(&self) -> Result<RunningCache> {
+        let ck_spec = &self.spec.inputs[1];
+        let cv_spec = &self.spec.inputs[2];
+        let zeros_k = vec![0u8; ck_spec.element_count() * 4];
+        let zeros_v = vec![0u8; cv_spec.element_count() * 4];
+        Ok(RunningCache {
+            cache_k: literal_from_bytes(ck_spec, &zeros_k)?,
+            cache_v: literal_from_bytes(cv_spec, &zeros_v)?,
+            cache_len: 0,
+        })
+    }
+
+    /// Execute one forward step: `tokens` must be `[batch, seq]` for this
+    /// artifact's static shape.  Advances `cache.cache_len` by `seq`.
+    pub fn run(&self, tokens: &[i32], cache: &mut RunningCache) -> Result<PrefillOutput> {
+        let (batch, seq) = (self.spec.batch, self.spec.seq);
+        if tokens.len() != batch * seq {
+            bail!("tokens len {} != batch*seq {}", tokens.len(), batch * seq);
+        }
+        let tok_lit = Literal::vec1(tokens).reshape(&[batch as i64, seq as i64])?;
+        let len_lit = Literal::scalar(cache.cache_len);
+
+        let mut args: Vec<&Literal> = Vec::with_capacity(self.weights.len() + 4);
+        args.extend(self.weights.iter());
+        args.push(&tok_lit);
+        args.push(&cache.cache_k);
+        args.push(&cache.cache_v);
+        args.push(&len_lit);
+
+        let result = self.exe.execute::<&Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (logits_lit, ck, cv) = out.to_tuple3()?;
+
+        let vocab = self.spec.outputs[0].shape[2];
+        let logits = logits_lit.to_vec::<f32>()?;
+        cache.cache_k = ck;
+        cache.cache_v = cv;
+        cache.cache_len += seq as i32;
+        Ok(PrefillOutput { logits, batch, seq, vocab })
+    }
+}
+
+/// The runtime: a PJRT CPU client plus every loaded artifact of one model.
+pub struct ModelRuntime {
+    pub client: PjRtClient,
+    pub model_name: String,
+    pub manifest: Manifest,
+    loaded: HashMap<String, LoadedArtifact>,
+}
+
+impl ModelRuntime {
+    /// Create a CPU-PJRT runtime for `model` from the artifact directory.
+    pub fn load(artifacts_dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.model(model)?; // validate early
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            model_name: model.to_string(),
+            manifest,
+            loaded: HashMap::new(),
+        })
+    }
+
+    /// Compile + load one artifact variant (idempotent).
+    pub fn ensure_loaded(&mut self, variant: &str) -> Result<&LoadedArtifact> {
+        if !self.loaded.contains_key(variant) {
+            let spec = self.manifest.artifact(&self.model_name, variant)?.clone();
+            let hlo_path = self.manifest.path(&spec.hlo);
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {hlo_path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("PJRT compile")?;
+            let blob = read_weight_blob(&self.manifest.path(&spec.weights), &spec.params)?;
+            let weights: Vec<Literal> = spec
+                .params
+                .iter()
+                .zip(&blob)
+                .map(|(p, b)| literal_from_bytes(p, b))
+                .collect::<Result<_>>()?;
+            self.loaded.insert(variant.to_string(), LoadedArtifact { spec, exe, weights });
+        }
+        Ok(&self.loaded[variant])
+    }
+
+    pub fn artifact(&self, variant: &str) -> Option<&LoadedArtifact> {
+        self.loaded.get(variant)
+    }
+
+    /// Variant names available for this model.
+    pub fn variants(&self) -> Vec<String> {
+        self.manifest
+            .model(&self.model_name)
+            .map(|m| m.artifacts.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}

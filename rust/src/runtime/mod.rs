@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT artifacts.
+//!
+//! `make artifacts` (Python, build-time only) leaves `artifacts/` with a
+//! `manifest.json`, HLO-text programs and raw weight blobs.  This module
+//! loads them onto the PJRT CPU client and exposes typed prefill/decode
+//! calls to the coordinator.  HLO *text* is the interchange format — see
+//! `python/compile/aot.py` and /opt/xla-example/README.md for why.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
+pub use engine::{ModelRuntime, PrefillOutput, RunningCache};

@@ -1,0 +1,103 @@
+//! Micro-benchmark harness for `rust/benches/*` (criterion-free).
+//!
+//! Measures a closure with warmup + timed iterations and reports
+//! mean / p50 / p99 wall time.  Also provides the table-printing helpers
+//! the per-figure bench binaries use to emit paper-style rows.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+/// Measure `f` with `warmup` unrecorded runs then `iters` recorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    let p50 = times[iters / 2];
+    let p99 = times[(iters * 99 / 100).min(iters - 1)];
+    BenchResult { name: name.to_string(), iters, mean, p50, p99 }
+}
+
+/// Auto-scale iteration count so a benchmark takes ~`budget` total.
+pub fn bench_auto<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(5.0, 10_000.0) as usize;
+    bench(name, iters / 10 + 1, iters, f)
+}
+
+/// Print a table header (pipe-separated, fixed width).
+pub fn header(cols: &[&str]) {
+    let row: Vec<String> = cols.iter().map(|c| format!("{c:>14}")).collect();
+    println!("| {} |", row.join(" | "));
+    println!("|{}|", vec!["-".repeat(16); cols.len()].join("|"));
+}
+
+/// Print one table row.
+pub fn row(cells: &[String]) {
+    let row: Vec<String> = cells.iter().map(|c| format!("{c:>14}")).collect();
+    println!("| {} |", row.join(" | "));
+}
+
+/// Shorthand for formatting floats.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Report a measured benchmark in a consistent one-line format.
+pub fn report(r: &BenchResult) {
+    println!(
+        "bench {:<40} {:>10.2} us/iter  (p50 {:>8.2}, p99 {:>8.2}, n={})",
+        r.name,
+        r.mean_us(),
+        r.p50.as_secs_f64() * 1e6,
+        r.p99.as_secs_f64() * 1e6,
+        r.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.p99 >= r.p50);
+    }
+
+    #[test]
+    fn auto_scales() {
+        let r = bench_auto("fast", Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+    }
+}

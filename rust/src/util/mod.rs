@@ -1,0 +1,15 @@
+//! In-crate utilities for the offline build.
+//!
+//! The build environment resolves dependencies from a vendored snapshot
+//! that ships only the PJRT bridge (`xla`) and `anyhow`, so the small
+//! infrastructure pieces a crates.io project would pull in live here:
+//!
+//! * [`json`] — a strict, minimal JSON parser (manifest + model zoo files);
+//! * [`rng`]  — a deterministic SplitMix64/LCG generator for tests and
+//!   workload synthesis;
+//! * [`bench`] — a micro-benchmark harness (warmup + timed iterations,
+//!   mean/p50/p99) used by `rust/benches/*` in place of criterion.
+
+pub mod bench;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,211 @@
+//! Coordinator integration: a full serving workload through the worker
+//! thread, dynamic batcher, prefill/decode scheduler and PJRT runtime.
+
+use std::time::Duration;
+
+use quik::coordinator::batcher::BatcherConfig;
+use quik::coordinator::scheduler::Variant;
+use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
+
+fn artifacts_dir() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(artifacts_dir()).join("manifest.json").exists()
+}
+
+fn cfg() -> BatcherConfig {
+    BatcherConfig {
+        batch_sizes: vec![4, 1],
+        max_wait: Duration::from_millis(10),
+        bucket: 64,
+        max_queue: 1024,
+    }
+}
+
+#[test]
+fn serves_burst_workload_quik4() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut coord =
+        Coordinator::start(artifacts_dir(), "llama-s", Variant::Quik4, cfg()).unwrap();
+    let spec = WorkloadSpec {
+        n_requests: 9,
+        prompt_len: 48,
+        max_new_tokens: 6,
+        arrival_rate: None,
+        seed: 1,
+    };
+    let report = run_workload(&mut coord, &spec).unwrap();
+    assert_eq!(report.n_requests, 9);
+    assert_eq!(report.generated_tokens, 9 * 6);
+    assert!(report.tokens_per_s() > 0.0);
+    // burst of 9 with batch sizes {4,1} must have used some 4-batches
+    assert!(report.metrics.batches < 9, "batching never kicked in");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn serves_fp16_variant_too() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut coord =
+        Coordinator::start(artifacts_dir(), "llama-s", Variant::Fp16, cfg()).unwrap();
+    let spec = WorkloadSpec {
+        n_requests: 3,
+        prompt_len: 32,
+        max_new_tokens: 4,
+        arrival_rate: None,
+        seed: 2,
+    };
+    let report = run_workload(&mut coord, &spec).unwrap();
+    assert_eq!(report.n_requests, 3);
+    assert_eq!(report.generated_tokens, 12);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn responses_are_deterministic_per_prompt() {
+    // Greedy decode: the same prompt must generate the same tokens whether
+    // served alone (b=1) or inside a batch (b=4, padded) — the batching
+    // layer must not leak cross-request state.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let prompt: Vec<i32> = (0..48).map(|i| (i * 11 + 5) % 250).collect();
+
+    // alone
+    let mut solo = Coordinator::start(
+        artifacts_dir(),
+        "llama-s",
+        Variant::Quik4,
+        BatcherConfig { batch_sizes: vec![1], ..cfg() },
+    )
+    .unwrap();
+    let rx = solo.submit(prompt.clone(), 5);
+    let alone = rx.recv().unwrap().generated;
+    solo.shutdown().unwrap();
+
+    // batched with three other requests
+    let mut coord =
+        Coordinator::start(artifacts_dir(), "llama-s", Variant::Quik4, cfg()).unwrap();
+    let mut rxs = vec![coord.submit(prompt.clone(), 5)];
+    for seed in 0..3 {
+        let other: Vec<i32> = (0..48).map(|i| (i * 13 + seed) % 250).collect();
+        rxs.push(coord.submit(other, 5));
+    }
+    let batched = rxs.remove(0).recv().unwrap();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert_eq!(batched.generated, alone, "batching changed greedy output");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_accumulate() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut coord =
+        Coordinator::start(artifacts_dir(), "llama-s", Variant::Quik4, cfg()).unwrap();
+    let spec = WorkloadSpec {
+        n_requests: 4,
+        prompt_len: 40,
+        max_new_tokens: 3,
+        arrival_rate: None,
+        seed: 3,
+    };
+    run_workload(&mut coord, &spec).unwrap();
+    let m = coord.metrics().unwrap();
+    assert_eq!(m.requests_completed, 4);
+    assert_eq!(m.generated_tokens, 12);
+    assert!(m.prefill_time.count() >= 4);
+    assert!(m.occupancy() > 0.0 && m.occupancy() <= 1.0);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn speculative_decode_matches_fp16_greedy() {
+    // QUIK-draft + FP16-verify speculative decoding must emit exactly the
+    // FP16 greedy stream (greedy spec-dec is lossless by construction),
+    // across several prompts, with fewer target calls than tokens.
+    use quik::coordinator::speculative::SpeculativeDecoder;
+    use quik::runtime::engine::ModelRuntime;
+    use quik::util::rng::Rng;
+
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut rt = ModelRuntime::load(artifacts_dir(), "llama-s").unwrap();
+    SpeculativeDecoder::load_artifacts(&mut rt).unwrap();
+    rt.ensure_loaded("fp16_decode_b1").unwrap();
+
+    let prefill = rt.artifact("fp16_prefill_b1").unwrap();
+    let decode = rt.artifact("fp16_decode_b1").unwrap();
+    let n_gen = 12;
+    for seed in [1u64, 99, 1234] {
+        let mut rng = Rng::new(seed);
+        let prompt: Vec<i32> =
+            (0..prefill.spec.seq).map(|_| rng.range_i32(0, 255)).collect();
+
+        // plain FP16 greedy reference
+        let mut cache = prefill.new_cache().unwrap();
+        let out = prefill.run(&prompt, &mut cache).unwrap();
+        let mut tok = out.argmax_last()[0];
+        let mut reference = vec![tok];
+        for _ in 0..n_gen - 1 {
+            let step = decode.run(&[tok], &mut cache).unwrap();
+            tok = step.argmax_last()[0];
+            reference.push(tok);
+        }
+
+        let spec = SpeculativeDecoder::new(&rt).unwrap();
+        let (tokens, stats) = spec.generate(&prompt, n_gen).unwrap();
+        assert_eq!(tokens, reference, "seed {seed}: spec-dec diverged from FP16 greedy");
+        assert!(stats.target_calls < n_gen, "no verify batching happened");
+        assert!(stats.acceptance_rate() > 0.0);
+    }
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    // Full network path: TCP JSON-lines server over the coordinator, two
+    // concurrent clients, responses parse and contain the right counts.
+    use quik::coordinator::tcp::{serve, Client};
+    use std::sync::mpsc;
+
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let coord =
+        Coordinator::start(artifacts_dir(), "llama-s", Variant::Quik4, cfg()).unwrap();
+    let (ready_tx, ready_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        serve("127.0.0.1:0", coord, Some(ready_tx), Some(2)).unwrap();
+    });
+    let addr = ready_rx.recv().unwrap();
+
+    let handles: Vec<_> = (0..2)
+        .map(|seed| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let prompt: Vec<i32> = (0..48).map(|i| (i * 7 + seed) % 250).collect();
+                client.infer(&prompt, 5).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let tokens = h.join().unwrap();
+        assert_eq!(tokens.len(), 5);
+    }
+}

@@ -1,0 +1,67 @@
+//! Parity: the Rust model zoo (rust/src/config) must match the Python shape
+//! table (`compile.modeling.presets.PAPER_SCALE`, exported to
+//! `artifacts/model_zoo.json` by `make artifacts`).
+
+use quik::config::{model_zoo, Family};
+use quik::util::json::{parse, Value};
+
+fn load_zoo() -> Option<Value> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/model_zoo.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(parse(&text).expect("model_zoo.json must parse"))
+}
+
+#[test]
+fn zoo_matches_python_shape_table() {
+    let Some(zoo) = load_zoo() else {
+        eprintln!("skipping: artifacts/model_zoo.json missing (run `make artifacts`)");
+        return;
+    };
+    let obj = zoo.as_object().unwrap();
+    let rust_zoo = model_zoo();
+    assert_eq!(obj.len(), rust_zoo.len(), "model count mismatch");
+    for (name, spec) in rust_zoo {
+        let py = obj
+            .get(name)
+            .unwrap_or_else(|| panic!("python zoo missing {name}"));
+        let get = |k: &str| py.get(k).and_then(Value::as_usize).unwrap();
+        assert_eq!(spec.d_model, get("d_model"), "{name} d_model");
+        assert_eq!(spec.n_layers, get("n_layers"), "{name} n_layers");
+        assert_eq!(spec.n_heads, get("n_heads"), "{name} n_heads");
+        assert_eq!(spec.n_kv_heads, get("n_kv_heads"), "{name} n_kv_heads");
+        assert_eq!(spec.d_ff, get("d_ff"), "{name} d_ff");
+        assert_eq!(spec.vocab, get("vocab"), "{name} vocab");
+        let family = py.get("family").and_then(Value::as_str).unwrap();
+        assert_eq!(Some(spec.family), Family::parse(family), "{name} family");
+    }
+}
+
+#[test]
+fn manifest_config_matches_linear_algebra() {
+    // The tiny artifact model's config must be internally consistent with
+    // the parameter shapes recorded in the manifest.
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let Ok(m) = quik::runtime::artifacts::Manifest::load(dir) else {
+        eprintln!("skipping: no manifest");
+        return;
+    };
+    for (name, entry) in &m.models {
+        let d = entry.config.d_model;
+        let v = entry.config.vocab;
+        for (vname, art) in &entry.artifacts {
+            // embed is always [vocab, d_model]
+            let embed = art
+                .params
+                .iter()
+                .find(|p| p.name.contains("embed"))
+                .unwrap_or_else(|| panic!("{name}/{vname}: no embed param"));
+            assert_eq!(embed.shape, vec![v, d], "{name}/{vname} embed shape");
+            // logits output is [batch, seq, vocab]
+            assert_eq!(
+                art.outputs[0].shape,
+                vec![art.batch, art.seq, v],
+                "{name}/{vname} logits shape"
+            );
+        }
+    }
+}

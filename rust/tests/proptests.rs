@@ -1,0 +1,219 @@
+//! Property tests over the coordinator + quant substrate invariants
+//! (hand-rolled sweep driver — the offline build has no proptest crate;
+//! `util::rng` provides deterministic case generation).
+
+use std::time::{Duration, Instant};
+
+use quik::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use quik::coordinator::request::Request;
+use quik::quant::{
+    dequant, gptq, int4, outlier, quantize_acts, quantize_weights, sparse,
+};
+use quik::util::rng::Rng;
+
+const CASES: usize = 50;
+
+#[test]
+fn prop_int4_pack_roundtrip() {
+    let mut rng = Rng::new(100);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(257);
+        let values: Vec<i8> = (0..n).map(|_| rng.range_i32(-8, 7) as i8).collect();
+        let packed = int4::pack(&values);
+        assert_eq!(packed.len(), int4::packed_len(n));
+        assert_eq!(int4::unpack(&packed, n), values);
+    }
+}
+
+#[test]
+fn prop_quantize_roundtrip_bounded() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let m = 1 + rng.below(12);
+        let k = 2 + rng.below(60);
+        let scale_regime = [0.001f32, 1.0, 100.0][case % 3];
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() * scale_regime).collect();
+        for bits in [4u32, 8] {
+            let qa = quantize_acts(&x, m, k, bits);
+            let (qmin, qmax) = quik::quant::act_qrange(bits);
+            assert!(qa.q.iter().all(|&q| (q as i32) >= qmin && (q as i32) <= qmax));
+            // reconstruction within half a step per element
+            let hr = quik::quant::half_range(bits) as f32;
+            for r in 0..m {
+                for c in 0..k {
+                    let recon = qa.scale[r] * (qa.q[r * k + c] as f32 + hr) + qa.zero[r];
+                    assert!(
+                        (recon - x[r * k + c]).abs() <= qa.scale[r] * 0.5 + 1e-4,
+                        "roundtrip bound violated"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_eq1_dequant_equals_direct_reconstruction() {
+    // Eq. 1 identity: dequantize(intmm(qx, qw)) == dq(x) @ dq(w)^T exactly
+    // (in f64), for any quantized operands.
+    let mut rng = Rng::new(102);
+    for _ in 0..CASES {
+        let m = 1 + rng.below(6);
+        let n = 1 + rng.below(6);
+        let k = 1 + rng.below(24);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() * 2.0).collect();
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let bits = if rng.below(2) == 0 { 4 } else { 8 };
+        let qa = quantize_acts(&x, m, k, bits);
+        let wq = quantize_weights(&w, n, k, bits);
+        let acc = dequant::int_matmul(&qa.q, &wq.w_int, m, n, k);
+        let y = dequant::dequantize(
+            &acc, &qa.scale, &qa.zero, &wq.scale, &wq.w_reduced, m, n, bits,
+        );
+        let hr = quik::quant::half_range(bits) as f64;
+        for i in 0..m {
+            for j in 0..n {
+                let mut direct = 0f64;
+                for c in 0..k {
+                    let xr = qa.scale[i] as f64 * (qa.q[i * k + c] as f64 + hr)
+                        + qa.zero[i] as f64;
+                    let wr = wq.scale[j] as f64 * wq.w_int[j * k + c] as f64;
+                    direct += xr * wr;
+                }
+                let got = y[i * n + j] as f64;
+                assert!(
+                    (got - direct).abs() <= 1e-3 * direct.abs().max(1.0),
+                    "Eq.1 identity: got {got}, direct {direct}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_outlier_permutation_bijective() {
+    let mut rng = Rng::new(103);
+    for _ in 0..CASES {
+        let k = 2 + rng.below(100);
+        let n_out = rng.below(k);
+        let scores: Vec<f32> = (0..k).map(|_| rng.f64() as f32).collect();
+        let idx = outlier::select_outliers(&scores, n_out);
+        let perm = outlier::outlier_permutation(k, &idx);
+        let inv = outlier::inverse_permutation(&perm);
+        let mut seen = vec![false; k];
+        for &p in &perm {
+            assert!(!seen[p], "permutation not a bijection");
+            seen[p] = true;
+        }
+        for i in 0..k {
+            assert_eq!(perm[inv[i]], i);
+        }
+        // trailing entries are exactly the selected outliers
+        assert_eq!(&perm[k - n_out..], idx.as_slice());
+    }
+}
+
+#[test]
+fn prop_gptq_never_worse_than_rtn_on_calibration() {
+    let mut rng = Rng::new(104);
+    for case in 0..10 {
+        let n = 4 + rng.below(8);
+        let k = 8 + rng.below(16);
+        let m = 128;
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let h = gptq::hessian_from_calib(&x, m, k);
+        let g = gptq::gptq_quantize(&w, n, k, &h, gptq::GptqConfig::default())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let rtn = quantize_weights(&w, n, k, 4);
+        let layer_err = |w_hat: &[f32]| -> f64 {
+            let mut e = 0f64;
+            for r in 0..m {
+                for j in 0..n {
+                    let mut s = 0f64;
+                    for c in 0..k {
+                        s += x[r * k + c] as f64 * (w_hat[j * k + c] as f64 - w[j * k + c] as f64);
+                    }
+                    e += s * s;
+                }
+            }
+            e
+        };
+        let mut rtn_hat = vec![0f32; n * k];
+        for r in 0..n {
+            for c in 0..k {
+                rtn_hat[r * k + c] = rtn.w_int[r * k + c] as f32 * rtn.scale[r];
+            }
+        }
+        let e_g = layer_err(&gptq::dequantized_weight(&g));
+        let e_r = layer_err(&rtn_hat);
+        assert!(e_g <= e_r * 1.001, "case {case}: gptq {e_g} > rtn {e_r}");
+    }
+}
+
+#[test]
+fn prop_sparse_mask_pattern_and_magnitude() {
+    let mut rng = Rng::new(105);
+    for _ in 0..CASES {
+        let rows = 1 + rng.below(8);
+        let groups = 1 + rng.below(16);
+        let cols = groups * 4;
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let mask = sparse::magnitude_mask_nm(&w, rows, cols, 2, 4);
+        assert!(sparse::check_nm_pattern(&mask, rows, cols, 2, 4));
+        // kept weights in each group are the 2 largest by |w|
+        for r in 0..rows {
+            for g in (0..cols).step_by(4) {
+                let vals: Vec<f32> =
+                    (0..4).map(|i| w[r * cols + g + i].abs()).collect();
+                let mut sorted = vals.clone();
+                sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let thresh = sorted[1];
+                for i in 0..4 {
+                    if mask[r * cols + g + i] {
+                        assert!(vals[i] >= thresh - 1e-9);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_never_loses_or_duplicates() {
+    let mut rng = Rng::new(106);
+    for _ in 0..20 {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_sizes: vec![4, 2, 1],
+            max_wait: Duration::from_millis(0), // immediate dispatch
+            bucket: 32,
+            max_queue: 4096,
+        });
+        let n = 1 + rng.below(40);
+        for id in 0..n as u64 {
+            let len = 16 + rng.below(96);
+            b.push(Request::new(id, vec![0; len], 1));
+        }
+        let mut seen = std::collections::HashSet::new();
+        let deadline = Instant::now() + Duration::from_secs(1);
+        while b.queued() > 0 {
+            let plan = b
+                .next_batch(Instant::now() + Duration::from_millis(5))
+                .expect("deadline passed, batch must form");
+            assert!(plan.requests.len() <= plan.batch_size);
+            assert!(!plan.requests.is_empty());
+            // all riders share a length bucket
+            let buckets: std::collections::HashSet<usize> = plan
+                .requests
+                .iter()
+                .map(|r| r.prompt_len().div_ceil(32).max(1) * 32)
+                .collect();
+            assert_eq!(buckets.len(), 1, "mixed buckets in one batch");
+            for r in &plan.requests {
+                assert!(seen.insert(r.id), "request {} duplicated", r.id);
+            }
+            assert!(Instant::now() < deadline, "batcher livelock");
+        }
+        assert_eq!(seen.len(), n, "requests lost");
+    }
+}

@@ -1,0 +1,91 @@
+//! Cross-language golden test: the Rust quant substrate must reproduce the
+//! Python oracle (`compile.kernels.ref`) **bit-for-bit** on the integer
+//! outputs and to float tolerance on scales/dequantized values.
+//!
+//! Goldens are emitted by `make artifacts` (`compile.aot.write_quant_goldens`)
+//! into `artifacts/quant_golden.json`.
+
+use quik::quant::{dequant, quantize_acts, quantize_weights};
+use quik::util::json::{parse, Value};
+
+fn load_golden() -> Option<Value> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/quant_golden.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(parse(&text).expect("golden json must parse"))
+}
+
+fn f32_vec(v: &Value, key: &str) -> Vec<f32> {
+    v.get(key)
+        .and_then(Value::as_array)
+        .unwrap_or_else(|| panic!("missing {key}"))
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn i8_vec(v: &Value, key: &str) -> Vec<i8> {
+    v.get(key)
+        .and_then(Value::as_array)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i8)
+        .collect()
+}
+
+fn i32_vec(v: &Value, key: &str) -> Vec<i32> {
+    v.get(key)
+        .and_then(Value::as_array)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect()
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = y.abs().max(1.0);
+        assert!(
+            (x - y).abs() / denom < tol,
+            "{what}[{i}]: rust {x} vs python {y}"
+        );
+    }
+}
+
+#[test]
+fn matches_python_oracle_bit_for_bit() {
+    let Some(g) = load_golden() else {
+        eprintln!("skipping: artifacts/quant_golden.json missing (run `make artifacts`)");
+        return;
+    };
+    let m = g.get("m").unwrap().as_usize().unwrap();
+    let k = g.get("k").unwrap().as_usize().unwrap();
+    let n = g.get("n").unwrap().as_usize().unwrap();
+    let x = f32_vec(&g, "x");
+    let w = f32_vec(&g, "w");
+
+    for bits in [4u32, 8] {
+        let case = g
+            .get("cases")
+            .and_then(|c| c.get(&bits.to_string()))
+            .unwrap_or_else(|| panic!("missing case {bits}"));
+
+        let qa = quantize_acts(&x, m, k, bits);
+        assert_eq!(qa.q, i8_vec(case, "q"), "bits={bits} activation ints");
+        close(&qa.scale, &f32_vec(case, "scale"), 1e-6, "scale");
+        close(&qa.zero, &f32_vec(case, "zero"), 1e-6, "zero");
+
+        let wq = quantize_weights(&w, n, k, bits);
+        assert_eq!(wq.w_int, i8_vec(case, "w_int"), "bits={bits} weight ints");
+        close(&wq.scale, &f32_vec(case, "scale_w"), 1e-6, "scale_w");
+        close(&wq.w_reduced, &f32_vec(case, "w_reduced"), 1e-5, "w_reduced");
+
+        let acc = dequant::int_matmul(&qa.q, &wq.w_int, m, n, k);
+        assert_eq!(acc, i32_vec(case, "acc"), "bits={bits} int32 accumulator");
+
+        let y = dequant::dequantize(
+            &acc, &qa.scale, &qa.zero, &wq.scale, &wq.w_reduced, m, n, bits,
+        );
+        close(&y, &f32_vec(case, "y"), 1e-4, "dequantized output");
+    }
+}
