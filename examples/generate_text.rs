@@ -1,38 +1,34 @@
-//! Greedy generation through the QUIK-4B artifact: prefill a prompt from
-//! the synthetic corpus distribution, then stream decode steps, comparing
-//! the FP16 and QUIK token streams (quantization rarely flips greedy
-//! choices on a well-calibrated model).
+//! Greedy generation through the native QUIK engine: prefill a prompt,
+//! then stream decode steps, comparing the FP32-reference and QUIK-4B
+//! token streams (hybrid quantization rarely flips greedy choices on an
+//! outlier-calibrated model).
 
 use anyhow::Result;
-use quik::runtime::engine::ModelRuntime;
+use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+use quik::backend::{InferenceBackend, Phase, Variant};
 use quik::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     let n_gen = 24;
-    let mut rt = ModelRuntime::load(&artifacts, "llama-s")?;
+    let mut backend =
+        NativeBackend::seeded("generate-text", NativeConfig::demo(), 5, demo_policy())?;
+    backend.prepare(Variant::Quik4, Phase::Prefill, 1)?;
 
     let mut streams = vec![];
-    for variant in ["fp16", "quik4"] {
-        let prefill_name = format!("{variant}_prefill_b1");
-        let decode_name = format!("{variant}_decode_b1");
-        rt.ensure_loaded(&prefill_name)?;
-        rt.ensure_loaded(&decode_name)?;
-        let prefill = rt.artifact(&prefill_name).unwrap();
+    for variant in [Variant::Fp16, Variant::Quik4] {
         let mut rng = Rng::new(2024);
         let prompt: Vec<i32> =
-            (0..prefill.spec.seq).map(|_| rng.range_i32(0, 255)).collect();
-        let mut cache = prefill.new_cache()?;
-        let out = prefill.run(&prompt, &mut cache)?;
+            (0..24).map(|_| rng.range_i32(0, backend.vocab() as i32 - 1)).collect();
+        let mut cache = backend.new_cache(variant, 1)?;
+        let out = backend.forward(variant, Phase::Prefill, &prompt, 1, &mut cache)?;
         let mut tok = out.argmax_last()[0];
-        let decode = rt.artifact(&decode_name).unwrap();
         let mut stream = vec![tok];
         for _ in 0..n_gen - 1 {
-            let step = decode.run(&[tok], &mut cache)?;
+            let step = backend.forward(variant, Phase::Decode, &[tok], 1, &mut cache)?;
             tok = step.argmax_last()[0];
             stream.push(tok);
         }
-        println!("{variant:>6}: {stream:?}");
+        println!("{:>6}: {stream:?}", variant.prefix());
         streams.push(stream);
     }
     let agree = streams[0]

@@ -1,52 +1,52 @@
-//! Quickstart: load a QUIK AOT artifact, run one prefill call through
-//! PJRT, and inspect the output — the smallest end-to-end slice of the
-//! three-layer stack.
+//! Quickstart: the smallest end-to-end slice of the native QUIK engine.
+//!
+//! Builds a seeded FP32 checkpoint, quantizes every backbone linear
+//! through the QUIK pipeline at startup (calibration → outlier selection
+//! → nibble-packed INT4), then runs one prefill step on both the FP32
+//! reference and the QUIK-4B stack and compares their greedy choices.
+//! No Python, no artifacts, no XLA:
 //!
 //! ```sh
-//! make artifacts          # once: trains + quantizes + AOT-lowers
 //! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
-use quik::runtime::engine::ModelRuntime;
+use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+use quik::backend::{InferenceBackend, Phase, Variant};
 
 fn main() -> Result<()> {
-    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-
-    // 1. Load the manifest and compile the QUIK-4B prefill program.
-    let mut rt = ModelRuntime::load(&artifacts, "llama-s")?;
-    println!("available variants: {:?}", rt.variants());
-    rt.ensure_loaded("quik4_prefill_b1")?;
-    let art = rt.artifact("quik4_prefill_b1").unwrap();
+    // 1. Seeded checkpoint + QUIK quantization at startup.
+    let mut backend = NativeBackend::seeded("quickstart", NativeConfig::demo(), 5, demo_policy())?;
+    println!("variants: {:?}", backend.variants());
+    backend.prepare(Variant::Quik4, Phase::Prefill, 1)?;
     println!(
-        "loaded quik4_prefill_b1: batch={} seq={} ({} weight tensors)",
-        art.spec.batch,
-        art.spec.seq,
-        art.spec.params.len()
+        "quantized weight storage: {} bytes (vs {} bytes FP32 backbone)",
+        backend.quik_storage_bytes().unwrap(),
+        backend.fp32_linear_bytes()
     );
 
-    // 2. Run a prefill over a toy prompt (token ids mod vocab).
-    let seq = art.spec.seq;
-    let prompt: Vec<i32> = (0..seq as i32).map(|i| (i * 17 + 3) % 250).collect();
-    let mut cache = art.new_cache()?;
-    let out = art.run(&prompt, &mut cache)?;
+    // 2. Run a prefill over a toy prompt on both variants.
+    let vocab = backend.vocab() as i32;
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 17 + 3) % vocab).collect();
+    let mut choices = vec![];
+    for variant in [Variant::Fp16, Variant::Quik4] {
+        let mut cache = backend.new_cache(variant, 1)?;
+        let out = backend.forward(variant, Phase::Prefill, &prompt, 1, &mut cache)?;
+        println!(
+            "{variant:?}: logits [{} x {} x {}], greedy next token {}",
+            out.batch,
+            out.seq,
+            out.vocab,
+            out.argmax_last()[0]
+        );
+        choices.push(out.argmax_last()[0]);
+    }
 
-    // 3. Inspect: logits shape and the greedy next token.
+    // 3. On the outlier-planted demo model the hybrid INT4 format keeps
+    //    the greedy choice.
     println!(
-        "logits: [{} x {} x {}], cache now at position {}",
-        out.batch, out.seq, out.vocab, cache.cache_len
-    );
-    println!("greedy next token: {}", out.argmax_last()[0]);
-
-    // 4. The same artifact exists in FP16 — compare the predictions.
-    rt.ensure_loaded("fp16_prefill_b1")?;
-    let fp = rt.artifact("fp16_prefill_b1").unwrap();
-    let mut fp_cache = fp.new_cache()?;
-    let fp_out = fp.run(&prompt, &mut fp_cache)?;
-    println!(
-        "FP16 next token: {} (QUIK-4B and FP16 {})",
-        fp_out.argmax_last()[0],
-        if fp_out.argmax_last() == out.argmax_last() { "agree" } else { "differ" }
+        "FP32 and QUIK-4B {}",
+        if choices[0] == choices[1] { "agree" } else { "differ" }
     );
     Ok(())
 }

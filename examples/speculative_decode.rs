@@ -1,45 +1,45 @@
 //! Speculative decoding demo (the paper's §5 future work made concrete):
-//! QUIK-4B drafts, FP16 verifies in K-token windows, and the emitted
-//! stream is provably the FP16 greedy stream — compared against plain
-//! FP16 decode for both correctness and target-call savings.
+//! QUIK-4B drafts, the FP32 reference verifies in K-token windows, and
+//! the emitted stream is provably the reference greedy stream — compared
+//! against plain reference decode for both correctness and target-call
+//! savings.  Runs entirely on the native backend.
 
 use anyhow::Result;
+use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+use quik::backend::{InferenceBackend, Phase, Variant};
 use quik::coordinator::speculative::SpeculativeDecoder;
-use quik::runtime::engine::ModelRuntime;
 use quik::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     let n_gen = 32;
-    let mut rt = ModelRuntime::load(&artifacts, "llama-s")?;
-    SpeculativeDecoder::load_artifacts(&mut rt)?;
-    rt.ensure_loaded("fp16_decode_b1")?;
+    let mut backend =
+        NativeBackend::seeded("spec-decode", NativeConfig::demo(), 5, demo_policy())?;
+    SpeculativeDecoder::prepare(&mut backend)?;
 
-    let prefill = rt.artifact("fp16_prefill_b1").unwrap();
     let mut rng = Rng::new(99);
-    let prompt: Vec<i32> = (0..prefill.spec.seq).map(|_| rng.range_i32(0, 255)).collect();
+    let prompt: Vec<i32> =
+        (0..24).map(|_| rng.range_i32(0, backend.vocab() as i32 - 1)).collect();
 
-    // --- plain FP16 greedy reference ---
+    // --- plain FP32 greedy reference ---
     let t0 = std::time::Instant::now();
-    let mut cache = prefill.new_cache()?;
-    let out = prefill.run(&prompt, &mut cache)?;
+    let mut cache = backend.new_cache(Variant::Fp16, 1)?;
+    let out = backend.forward(Variant::Fp16, Phase::Prefill, &prompt, 1, &mut cache)?;
     let mut tok = out.argmax_last()[0];
-    let decode = rt.artifact("fp16_decode_b1").unwrap();
     let mut reference = vec![tok];
     for _ in 0..n_gen - 1 {
-        let step = decode.run(&[tok], &mut cache)?;
+        let step = backend.forward(Variant::Fp16, Phase::Decode, &[tok], 1, &mut cache)?;
         tok = step.argmax_last()[0];
         reference.push(tok);
     }
     let t_plain = t0.elapsed();
 
-    // --- speculative: QUIK-4B draft + FP16 verify ---
-    let spec = SpeculativeDecoder::new(&rt)?;
+    // --- speculative: QUIK-4B draft + FP32 verify ---
+    let spec = SpeculativeDecoder::new(&backend)?;
     let t1 = std::time::Instant::now();
     let (tokens, stats) = spec.generate(&prompt, n_gen)?;
     let t_spec = t1.elapsed();
 
-    println!("plain FP16 : {reference:?}  ({t_plain:.2?})");
+    println!("plain FP32 : {reference:?}  ({t_plain:.2?})");
     println!("speculative: {tokens:?}  ({t_spec:.2?})");
     println!(
         "match: {}   acceptance {:.0}%   {:.2} tokens/target-call ({} target calls vs {} plain)",

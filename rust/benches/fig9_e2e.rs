@@ -27,32 +27,36 @@ fn main() {
     }
     println!("\npaper anchors: OPT-66B 439->1343 tok/s (3.1x); LLaMA2-70B 3.4x");
 
-    // measured tiny-model prefill on CPU PJRT (artifact sanity, not a GPU claim)
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if std::path::Path::new(dir).join("manifest.json").exists() {
-        use quik::runtime::engine::ModelRuntime;
-        use std::time::Instant;
-        println!("\nmeasured CPU-PJRT prefill (llama-s artifact, b=4):");
-        let mut rt = ModelRuntime::load(dir, "llama-s").unwrap();
-        for variant in ["fp16_prefill_b4", "quik4_prefill_b4"] {
-            rt.ensure_loaded(variant).unwrap();
-            let art = rt.artifact(variant).unwrap();
-            let toks = vec![1i32; art.spec.batch * art.spec.seq];
-            let mut cache = art.new_cache().unwrap();
-            art.run(&toks, &mut cache).unwrap(); // warmup
-            let n = 5;
-            let t0 = Instant::now();
-            for _ in 0..n {
-                let mut c = art.new_cache().unwrap();
-                art.run(&toks, &mut c).unwrap();
+    // measured tiny-model prefill on CPU PJRT (artifact sanity, not a GPU
+    // claim) — only with the pjrt feature + `make artifacts`
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            use quik::runtime::engine::ModelRuntime;
+            use std::time::Instant;
+            println!("\nmeasured CPU-PJRT prefill (llama-s artifact, b=4):");
+            let mut rt = ModelRuntime::load(dir, "llama-s").unwrap();
+            for variant in ["fp16_prefill_b4", "quik4_prefill_b4"] {
+                rt.ensure_loaded(variant).unwrap();
+                let art = rt.artifact(variant).unwrap();
+                let toks = vec![1i32; art.spec.batch * art.spec.seq];
+                let mut cache = art.new_cache().unwrap();
+                art.run(&toks, &mut cache).unwrap(); // warmup
+                let n = 5;
+                let t0 = Instant::now();
+                for _ in 0..n {
+                    let mut c = art.new_cache().unwrap();
+                    art.run(&toks, &mut c).unwrap();
+                }
+                let dt = t0.elapsed().as_secs_f64() / n as f64;
+                println!(
+                    "  {variant:<22} {:>8.1} ms/batch  {:>8.0} tok/s",
+                    dt * 1e3,
+                    (art.spec.batch * art.spec.seq) as f64 / dt
+                );
             }
-            let dt = t0.elapsed().as_secs_f64() / n as f64;
-            println!(
-                "  {variant:<22} {:>8.1} ms/batch  {:>8.0} tok/s",
-                dt * 1e3,
-                (art.spec.batch * art.spec.seq) as f64 / dt
-            );
+            println!("  (CPU PJRT carries INT4 in int8 without tensor cores; the\n   quantized path shows overhead here, speedup lives on the device model)");
         }
-        println!("  (CPU PJRT carries INT4 in int8 without tensor cores; the\n   quantized path shows overhead here, speedup lives on the device model)");
     }
 }

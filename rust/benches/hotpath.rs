@@ -65,20 +65,44 @@ fn main() {
         1024.0 / r.mean.as_secs_f64()
     );
 
-    // --- PJRT decode step (the serving inner loop) ---
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if std::path::Path::new(dir).join("manifest.json").exists() {
-        use quik::runtime::engine::ModelRuntime;
-        let mut rt = ModelRuntime::load(dir, "llama-s").unwrap();
-        for variant in ["fp16_decode_b1", "quik4_decode_b1"] {
-            rt.ensure_loaded(variant).unwrap();
-            let art = rt.artifact(variant).unwrap();
-            let mut cache = art.new_cache().unwrap();
-            art.run(&[1], &mut cache).unwrap();
-            let r = bench_auto(&format!("pjrt decode step {variant}"), budget, || {
-                std::hint::black_box(art.run(&[1], &mut cache).unwrap());
+    // --- native decode step (the serving inner loop) ---
+    {
+        use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+        use quik::backend::{InferenceBackend, KvCache, Phase, Variant};
+        let mut backend =
+            NativeBackend::seeded("hotpath", NativeConfig::demo(), 5, demo_policy()).unwrap();
+        backend.prepare(Variant::Quik4, Phase::Decode, 1).unwrap();
+        let prompt: Vec<i32> = (0..24).map(|i| i % 90).collect();
+        for variant in [Variant::Fp16, Variant::Quik4] {
+            let mut cache = backend.new_cache(variant, 1).unwrap();
+            backend.forward(variant, Phase::Prefill, &prompt, 1, &mut cache).unwrap();
+            let r = bench_auto(&format!("native decode step {variant:?}"), budget, || {
+                cache.set_len(24);
+                std::hint::black_box(
+                    backend.forward(variant, Phase::Decode, &[1], 1, &mut cache).unwrap(),
+                );
             });
             report(&r);
+        }
+    }
+
+    // --- PJRT decode step (artifact runtime, pjrt feature only) ---
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            use quik::runtime::engine::ModelRuntime;
+            let mut rt = ModelRuntime::load(dir, "llama-s").unwrap();
+            for variant in ["fp16_decode_b1", "quik4_decode_b1"] {
+                rt.ensure_loaded(variant).unwrap();
+                let art = rt.artifact(variant).unwrap();
+                let mut cache = art.new_cache().unwrap();
+                art.run(&[1], &mut cache).unwrap();
+                let r = bench_auto(&format!("pjrt decode step {variant}"), budget, || {
+                    std::hint::black_box(art.run(&[1], &mut cache).unwrap());
+                });
+                report(&r);
+            }
         }
     }
 }

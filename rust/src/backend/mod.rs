@@ -1,0 +1,205 @@
+//! Execution-backend abstraction for the serving stack.
+//!
+//! The coordinator (batcher + scheduler + speculative decoder) is generic
+//! over [`InferenceBackend`]: anything that can run a batched prefill or
+//! decode step against a KV cache can serve requests.  Two backends ship:
+//!
+//! * [`native`] — a pure-Rust CPU transformer forward built on the QUIK
+//!   quantization substrate in [`crate::quant`] (INT4 nibble-packed weights,
+//!   per-token asymmetric activation quantization, Eq.-1 dequantization,
+//!   FP32 outlier columns).  No external dependencies; always available.
+//! * [`pjrt`] — the PJRT/XLA artifact runtime (`--features pjrt`), which
+//!   replays AOT-lowered JAX programs exported by `python/compile/aot.py`.
+//!
+//! The trait surface is deliberately small and shape-oriented: backends may
+//! have *static* program shapes (PJRT artifacts are compiled for a fixed
+//! `[batch, seq]`) or *dynamic* shapes (the native forward accepts any), so
+//! callers negotiate the step length through [`InferenceBackend::step_seq`]
+//! and pad to whatever the backend answers.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::util::argmax;
+
+/// Which weight format to serve.  `Fp16` is the full-precision reference
+/// family (served as FP32 by the native CPU backend, FP16-named artifacts
+/// by PJRT); `Quik4` is the paper's hybrid INT4 + outlier scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Fp16,
+    Quik4,
+}
+
+impl Variant {
+    pub fn prefix(&self) -> &'static str {
+        match self {
+            Variant::Fp16 => "fp16",
+            Variant::Quik4 => "quik4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "fp16" | "fp32" | "full" => Some(Variant::Fp16),
+            "quik4" => Some(Variant::Quik4),
+            _ => None,
+        }
+    }
+}
+
+/// Execution phase of one forward step.  `Verify` is a multi-token cached
+/// forward (speculative decoding scores a whole draft window in one call);
+/// backends that do not specialize it may treat it exactly like `Prefill`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+    Verify,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Verify => "verify",
+        }
+    }
+}
+
+/// KV-cache handle threaded between consecutive forward steps.
+///
+/// The only state callers may touch is the *logical* length: schedulers
+/// roll it back after padded prefills and the speculative decoder rolls it
+/// back after partially-accepted draft windows.  Backends must guarantee
+/// that positions at or beyond `len()` are masked out of attention and are
+/// overwritten by subsequent steps (the fixed-buffer cache discipline).
+pub trait KvCache {
+    /// Current logical context length (tokens resident in the cache).
+    fn len(&self) -> usize;
+
+    /// Roll the logical length backward (or forward over known-valid
+    /// entries).  Positions `>= len` become writable garbage.
+    fn set_len(&mut self, len: usize);
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Row-major `[batch, seq, vocab]` logits of one forward step.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl StepOutput {
+    /// Logits row at (batch, pos).
+    pub fn row(&self, b: usize, pos: usize) -> &[f32] {
+        let base = (b * self.seq + pos) * self.vocab;
+        &self.logits[base..base + self.vocab]
+    }
+
+    /// Greedy token at (batch, pos).
+    pub fn argmax_at(&self, b: usize, pos: usize) -> i32 {
+        argmax(self.row(b, pos))
+    }
+
+    /// Argmax token per batch row at the *last* position (greedy decode).
+    pub fn argmax_last(&self) -> Vec<i32> {
+        (0..self.batch).map(|b| self.argmax_at(b, self.seq - 1)).collect()
+    }
+}
+
+/// An execution engine the coordinator can serve requests through.
+///
+/// Lifecycle: `prepare` each (variant, phase, batch) you intend to run
+/// (compile artifacts / quantize weights — idempotent), then `new_cache`
+/// per sequence-batch and drive `forward` steps against it.  `prepare`
+/// is the only method that mutates the backend, so schedulers can hold a
+/// shared reference during steady-state serving.
+pub trait InferenceBackend {
+    type Cache: KvCache;
+
+    /// Human-readable model/backend identifier (logs and reports).
+    fn name(&self) -> &str;
+
+    /// Vocabulary size of the served model.
+    fn vocab(&self) -> usize;
+
+    /// Maximum total context (prompt + generated) a cache can hold.
+    fn max_context(&self) -> usize;
+
+    /// Variant/program names this backend can serve (enumeration for the
+    /// CLI and admission checks).
+    fn variants(&self) -> Vec<String>;
+
+    /// Make (variant, phase, batch) runnable: compile/load the program or
+    /// quantize the weight stack.  Must be idempotent.
+    fn prepare(&mut self, variant: Variant, phase: Phase, batch: usize) -> Result<()>;
+
+    /// The per-call sequence length the prepared program consumes.
+    /// Static-shape backends return their compiled length; dynamic-shape
+    /// backends echo `requested` (clamped to the context budget).
+    fn step_seq(
+        &self,
+        variant: Variant,
+        phase: Phase,
+        batch: usize,
+        requested: usize,
+    ) -> Result<usize>;
+
+    /// Fresh zeroed KV cache for `batch` concurrent rows.
+    fn new_cache(&self, variant: Variant, batch: usize) -> Result<Self::Cache>;
+
+    /// One forward step.  `tokens` is `[batch, seq]` row-major with
+    /// `seq = tokens.len() / batch`; the cache advances by `seq`.
+    fn forward(
+        &self,
+        variant: Variant,
+        phase: Phase,
+        tokens: &[i32],
+        batch: usize,
+        cache: &mut Self::Cache,
+    ) -> Result<StepOutput>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(Variant::Quik4.prefix(), "quik4");
+        assert_eq!(Variant::parse("fp16"), Some(Variant::Fp16));
+        assert_eq!(Variant::parse("fp32"), Some(Variant::Fp16));
+        assert_eq!(Variant::parse("x"), None);
+    }
+
+    #[test]
+    fn phase_names() {
+        assert_eq!(Phase::Prefill.name(), "prefill");
+        assert_eq!(Phase::Decode.name(), "decode");
+        assert_eq!(Phase::Verify.name(), "verify");
+    }
+
+    #[test]
+    fn step_output_rows() {
+        let out = StepOutput {
+            logits: vec![0.0, 1.0, /* row (0,1) */ 3.0, 2.0],
+            batch: 1,
+            seq: 2,
+            vocab: 2,
+        };
+        assert_eq!(out.row(0, 1), &[3.0, 2.0]);
+        assert_eq!(out.argmax_at(0, 0), 1);
+        assert_eq!(out.argmax_last(), vec![0]);
+    }
+}

@@ -1,0 +1,496 @@
+//! The native CPU transformer forward: embedding → per-layer (RMSNorm →
+//! RoPE attention over a real KV cache → RMSNorm → SwiGLU MLP) → logits.
+//!
+//! Every row of the `[batch, seq]` token grid is processed with an
+//! identical, row-independent operation order (per-token activation
+//! quantization, per-row dot products, per-(batch,pos) attention).  That
+//! makes three serving-level properties *bit-exact* by construction:
+//!
+//! 1. a request generates the same tokens alone or inside a padded batch;
+//! 2. a K-token verify window equals K sequential decode steps — greedy
+//!    speculative decoding is lossless;
+//! 3. rolling the cache length back and replaying is deterministic.
+//!
+//! The linear layers are abstracted behind [`LinearSet`] so the same
+//! forward serves the FP32 reference stack, the QUIK-quantized stack and
+//! the calibration pass that captures per-layer activations for outlier
+//! selection.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::linear::QuikLinear;
+use super::model::{LayerWeights, NativeCheckpoint, NativeConfig};
+use crate::backend::{KvCache, StepOutput};
+
+/// Which linear inside a block (forward order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Linear {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+/// All block linears in forward order.
+pub const LINEARS: [Linear; 7] =
+    [Linear::Q, Linear::K, Linear::V, Linear::O, Linear::Gate, Linear::Up, Linear::Down];
+
+impl Linear {
+    /// Stable index (calibration store key).
+    pub fn index(&self) -> usize {
+        match self {
+            Linear::Q => 0,
+            Linear::K => 1,
+            Linear::V => 2,
+            Linear::O => 3,
+            Linear::Gate => 4,
+            Linear::Up => 5,
+            Linear::Down => 6,
+        }
+    }
+
+    /// Name used by [`crate::config::QuikPolicy::plan_for`] sensitivity rules.
+    pub fn layer_name(&self) -> &'static str {
+        match self {
+            Linear::Q => "q_proj",
+            Linear::K => "k_proj",
+            Linear::V => "v_proj",
+            Linear::O => "o_proj",
+            Linear::Gate => "gate_proj",
+            Linear::Up => "up_proj",
+            Linear::Down => "down_proj",
+        }
+    }
+
+    pub fn in_features(&self, cfg: &NativeConfig) -> usize {
+        match self {
+            Linear::Down => cfg.d_ff,
+            _ => cfg.d_model,
+        }
+    }
+
+    pub fn out_features(&self, cfg: &NativeConfig) -> usize {
+        match self {
+            Linear::Q | Linear::O => cfg.d_model,
+            Linear::K | Linear::V => cfg.kv_dim(),
+            Linear::Gate | Linear::Up => cfg.d_ff,
+            Linear::Down => cfg.d_model,
+        }
+    }
+
+    /// The FP32 weight tensor of this linear in a block.
+    pub fn weights<'a>(&self, lw: &'a LayerWeights) -> &'a [f32] {
+        match self {
+            Linear::Q => &lw.wq,
+            Linear::K => &lw.wk,
+            Linear::V => &lw.wv,
+            Linear::O => &lw.wo,
+            Linear::Gate => &lw.w_gate,
+            Linear::Up => &lw.w_up,
+            Linear::Down => &lw.w_down,
+        }
+    }
+}
+
+/// How a forward pass executes its linear layers.
+pub(crate) trait LinearSet {
+    fn apply(&self, layer: usize, which: Linear, x: &[f32], m: usize) -> Vec<f32>;
+}
+
+/// FP32 reference linears straight off the checkpoint.
+pub(crate) struct FpLinears<'a>(pub &'a NativeCheckpoint);
+
+impl LinearSet for FpLinears<'_> {
+    fn apply(&self, layer: usize, which: Linear, x: &[f32], m: usize) -> Vec<f32> {
+        let cfg = &self.0.config;
+        matmul_f32(
+            x,
+            which.weights(&self.0.layers[layer]),
+            m,
+            which.out_features(cfg),
+            which.in_features(cfg),
+        )
+    }
+}
+
+/// The QUIK-quantized layer stack: per block, all seven linears.
+#[derive(Debug, Clone)]
+pub struct QuikStack {
+    /// `layers[block][Linear::index()]`.
+    pub layers: Vec<Vec<QuikLinear>>,
+}
+
+impl QuikStack {
+    /// Resident bytes of all quantized linears (packed INT4/INT8 base,
+    /// FP32 outlier columns, scales).
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().flatten().map(QuikLinear::storage_bytes).sum()
+    }
+}
+
+pub(crate) struct QuikLinears<'a>(pub &'a QuikStack);
+
+impl LinearSet for QuikLinears<'_> {
+    fn apply(&self, layer: usize, which: Linear, x: &[f32], m: usize) -> Vec<f32> {
+        self.0.layers[layer][which.index()].forward(x, m)
+    }
+}
+
+/// Calibration recorder: applies FP32 and captures each linear's input
+/// activations, keyed by `(block, Linear::index())`.
+pub(crate) struct CalibLinears<'a> {
+    ckpt: &'a NativeCheckpoint,
+    store: RefCell<HashMap<(usize, usize), (Vec<f32>, usize)>>,
+}
+
+impl<'a> CalibLinears<'a> {
+    pub(crate) fn new(ckpt: &'a NativeCheckpoint) -> Self {
+        Self { ckpt, store: RefCell::new(HashMap::new()) }
+    }
+
+    pub(crate) fn into_store(self) -> HashMap<(usize, usize), (Vec<f32>, usize)> {
+        self.store.into_inner()
+    }
+}
+
+impl LinearSet for CalibLinears<'_> {
+    fn apply(&self, layer: usize, which: Linear, x: &[f32], m: usize) -> Vec<f32> {
+        self.store.borrow_mut().insert((layer, which.index()), (x.to_vec(), m));
+        FpLinears(self.ckpt).apply(layer, which, x, m)
+    }
+}
+
+/// `y[m,n] = x[m,k] @ w[n,k]^T` in FP32 (row-major, checked shapes).
+pub(crate) fn matmul_f32(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), n * k);
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        for j in 0..n {
+            let wrow = &w[j * k..(j + 1) * k];
+            let mut s = 0f32;
+            for (a, b) in xrow.iter().zip(wrow) {
+                s += a * b;
+            }
+            y[i * n + j] = s;
+        }
+    }
+    y
+}
+
+/// Fixed-capacity KV cache laid out
+/// `[n_layers, batch, n_kv_heads, max_ctx, d_head]`.
+#[derive(Debug, Clone)]
+pub struct NativeKvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+    pub batch: usize,
+    n_kv_heads: usize,
+    max_ctx: usize,
+    d_head: usize,
+}
+
+impl NativeKvCache {
+    pub fn new(cfg: &NativeConfig, batch: usize) -> Self {
+        let elems = cfg.n_layers * batch * cfg.n_kv_heads * cfg.max_seq * cfg.d_head();
+        Self {
+            k: vec![0f32; elems],
+            v: vec![0f32; elems],
+            len: 0,
+            batch,
+            n_kv_heads: cfg.n_kv_heads,
+            max_ctx: cfg.max_seq,
+            d_head: cfg.d_head(),
+        }
+    }
+
+    /// Offset of `(layer, batch_row, kv_head, pos)`'s `d_head` slice.
+    fn idx(&self, layer: usize, b: usize, kv_head: usize, pos: usize) -> usize {
+        (((layer * self.batch + b) * self.n_kv_heads + kv_head) * self.max_ctx + pos)
+            * self.d_head
+    }
+}
+
+impl KvCache for NativeKvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn set_len(&mut self, len: usize) {
+        self.len = len.min(self.max_ctx);
+    }
+}
+
+/// RoPE inverse frequencies for a head dimension — constant per config,
+/// computed once per forward step instead of per (layer, head, pair).
+fn rope_inv_freq(dh: usize) -> Vec<f32> {
+    (0..dh / 2).map(|i| 10000f32.powf(-((2 * i) as f32) / dh as f32)).collect()
+}
+
+/// Rotary position embedding applied in place to one head slice.
+fn rope_in_place(v: &mut [f32], pos: usize, inv_freq: &[f32]) {
+    for (i, &inv) in inv_freq.iter().enumerate() {
+        let ang = pos as f32 * inv;
+        let (s, c) = ang.sin_cos();
+        let (a, b) = (v[2 * i], v[2 * i + 1]);
+        v[2 * i] = a * c - b * s;
+        v[2 * i + 1] = a * s + b * c;
+    }
+}
+
+/// `x / sqrt(mean(x²) + eps) * w`, per row.
+fn rmsnorm(x: &[f32], w: &[f32], m: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * d];
+    for row in 0..m {
+        let xs = &x[row * d..(row + 1) * d];
+        let mut ss = 0f32;
+        for &v in xs {
+            ss += v * v;
+        }
+        let denom = (ss / d as f32 + 1e-5).sqrt();
+        let dst = &mut out[row * d..(row + 1) * d];
+        for i in 0..d {
+            dst[i] = xs[i] * w[i] / denom;
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn softmax_in_place(s: &mut [f32]) {
+    let mx = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in s.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in s.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// One forward step over `[batch, seq]` tokens against the KV cache.
+/// Positions beyond the cache's logical length are overwritten; attention
+/// for the token at global position `p` spans cache entries `0..=p`
+/// (causal by construction).
+pub(crate) fn forward_pass(
+    ckpt: &NativeCheckpoint,
+    linears: &dyn LinearSet,
+    tokens: &[i32],
+    batch: usize,
+    cache: &mut NativeKvCache,
+) -> Result<StepOutput> {
+    let cfg = &ckpt.config;
+    if batch == 0 || tokens.is_empty() || tokens.len() % batch != 0 {
+        bail!("tokens len {} not a positive multiple of batch {batch}", tokens.len());
+    }
+    if cache.batch != batch {
+        bail!("cache batch {} != step batch {batch}", cache.batch);
+    }
+    let seq = tokens.len() / batch;
+    let p0 = cache.len();
+    if p0 + seq > cfg.max_seq {
+        bail!("context overflow: cache {} + step {seq} > max_seq {}", p0, cfg.max_seq);
+    }
+    let d = cfg.d_model;
+    let dh = cfg.d_head();
+    let kvd = cfg.kv_dim();
+    let n_heads = cfg.n_heads;
+    let group = n_heads / cfg.n_kv_heads;
+    let att_scale = (1.0 / (dh as f64).sqrt()) as f32;
+    let inv_freq = rope_inv_freq(dh);
+    let m = batch * seq;
+
+    // ---- embedding ------------------------------------------------------
+    let mut x = vec![0f32; m * d];
+    for (i, &t) in tokens.iter().enumerate() {
+        if t < 0 || t as usize >= cfg.vocab {
+            bail!("token {t} outside vocab {}", cfg.vocab);
+        }
+        let t = t as usize;
+        x[i * d..(i + 1) * d].copy_from_slice(&ckpt.embedding[t * d..(t + 1) * d]);
+    }
+
+    // ---- blocks ---------------------------------------------------------
+    for (l, lw) in ckpt.layers.iter().enumerate() {
+        let h = rmsnorm(&x, &lw.attn_norm, m, d);
+        let q = linears.apply(l, Linear::Q, &h, m);
+        let kk = linears.apply(l, Linear::K, &h, m);
+        let vv = linears.apply(l, Linear::V, &h, m);
+
+        let mut attn = vec![0f32; m * d];
+        for b in 0..batch {
+            for t in 0..seq {
+                let row = b * seq + t;
+                let pos = p0 + t;
+                // write this position's K (rotated) and V into the cache
+                for kv_i in 0..cfg.n_kv_heads {
+                    let src = &kk[row * kvd + kv_i * dh..row * kvd + (kv_i + 1) * dh];
+                    let mut kr = src.to_vec();
+                    rope_in_place(&mut kr, pos, &inv_freq);
+                    let ci = cache.idx(l, b, kv_i, pos);
+                    cache.k[ci..ci + dh].copy_from_slice(&kr);
+                    let vsrc = &vv[row * kvd + kv_i * dh..row * kvd + (kv_i + 1) * dh];
+                    cache.v[ci..ci + dh].copy_from_slice(vsrc);
+                }
+                // attend: query at `pos` over cache positions 0..=pos
+                for head in 0..n_heads {
+                    let mut qr = q[row * d + head * dh..row * d + (head + 1) * dh].to_vec();
+                    rope_in_place(&mut qr, pos, &inv_freq);
+                    let kv_i = head / group;
+                    let ctx = pos + 1;
+                    let mut scores = vec![0f32; ctx];
+                    for (p, sc) in scores.iter_mut().enumerate() {
+                        let ci = cache.idx(l, b, kv_i, p);
+                        let mut s = 0f32;
+                        for e in 0..dh {
+                            s += cache.k[ci + e] * qr[e];
+                        }
+                        *sc = s * att_scale;
+                    }
+                    softmax_in_place(&mut scores);
+                    let out = &mut attn[row * d + head * dh..row * d + (head + 1) * dh];
+                    for (p, &wgt) in scores.iter().enumerate() {
+                        let ci = cache.idx(l, b, kv_i, p);
+                        for e in 0..dh {
+                            out[e] += wgt * cache.v[ci + e];
+                        }
+                    }
+                }
+            }
+        }
+        let o = linears.apply(l, Linear::O, &attn, m);
+        for (xv, ov) in x.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+
+        let h2 = rmsnorm(&x, &lw.mlp_norm, m, d);
+        let g = linears.apply(l, Linear::Gate, &h2, m);
+        let u = linears.apply(l, Linear::Up, &h2, m);
+        let mut act = vec![0f32; m * cfg.d_ff];
+        for (a, (&gv, &uv)) in act.iter_mut().zip(g.iter().zip(&u)) {
+            *a = silu(gv) * uv;
+        }
+        let dn = linears.apply(l, Linear::Down, &act, m);
+        for (xv, dv) in x.iter_mut().zip(&dn) {
+            *xv += dv;
+        }
+    }
+
+    // ---- head -----------------------------------------------------------
+    let xf = rmsnorm(&x, &ckpt.final_norm, m, d);
+    let logits = matmul_f32(&xf, &ckpt.lm_head, m, cfg.vocab, d);
+    cache.set_len(p0 + seq);
+    Ok(StepOutput { logits, batch, seq, vocab: cfg.vocab })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeCheckpoint {
+        NativeCheckpoint::seeded(
+            NativeConfig {
+                vocab: 16,
+                d_model: 8,
+                n_layers: 1,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 12,
+                max_seq: 16,
+            },
+            1,
+        )
+    }
+
+    #[test]
+    fn forward_shapes_and_cache_advance() {
+        let ck = tiny();
+        let mut cache = NativeKvCache::new(&ck.config, 2);
+        let out =
+            forward_pass(&ck, &FpLinears(&ck), &[1, 2, 3, 4, 5, 6], 2, &mut cache).unwrap();
+        assert_eq!((out.batch, out.seq, out.vocab), (2, 3, 16));
+        assert_eq!(out.logits.len(), 2 * 3 * 16);
+        assert_eq!(cache.len(), 3);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rejects_bad_tokens_and_overflow() {
+        let ck = tiny();
+        let mut cache = NativeKvCache::new(&ck.config, 1);
+        assert!(forward_pass(&ck, &FpLinears(&ck), &[99], 1, &mut cache).is_err());
+        assert!(forward_pass(&ck, &FpLinears(&ck), &[-1], 1, &mut cache).is_err());
+        cache.set_len(16);
+        assert!(forward_pass(&ck, &FpLinears(&ck), &[1], 1, &mut cache).is_err());
+        let mut wrong_batch = NativeKvCache::new(&ck.config, 2);
+        assert!(forward_pass(&ck, &FpLinears(&ck), &[1], 1, &mut wrong_batch).is_err());
+    }
+
+    #[test]
+    fn batched_rows_are_independent() {
+        // The same prompt in row 0 must produce identical logits whether
+        // row 1 exists or not (padding rows cannot leak).
+        let ck = tiny();
+        let prompt = [3, 7, 11];
+        let mut solo_cache = NativeKvCache::new(&ck.config, 1);
+        let solo = forward_pass(&ck, &FpLinears(&ck), &prompt, 1, &mut solo_cache).unwrap();
+        let mut both = prompt.to_vec();
+        both.extend([1, 1, 1]);
+        let mut pair_cache = NativeKvCache::new(&ck.config, 2);
+        let pair = forward_pass(&ck, &FpLinears(&ck), &both, 2, &mut pair_cache).unwrap();
+        for pos in 0..3 {
+            assert_eq!(solo.row(0, pos), pair.row(0, pos), "row 0 diverged at {pos}");
+        }
+    }
+
+    #[test]
+    fn multi_token_step_equals_sequential_steps() {
+        // Core cache property: one [1, 3] forward == three [1, 1] forwards.
+        let ck = tiny();
+        let toks = [5, 9, 2];
+        let mut cache_a = NativeKvCache::new(&ck.config, 1);
+        let multi = forward_pass(&ck, &FpLinears(&ck), &toks, 1, &mut cache_a).unwrap();
+        let mut cache_b = NativeKvCache::new(&ck.config, 1);
+        for (i, &t) in toks.iter().enumerate() {
+            let step = forward_pass(&ck, &FpLinears(&ck), &[t], 1, &mut cache_b).unwrap();
+            assert_eq!(step.row(0, 0), multi.row(0, i), "position {i} diverged");
+        }
+        assert_eq!(cache_a.len(), cache_b.len());
+    }
+
+    #[test]
+    fn rollback_replay_is_exact() {
+        let ck = tiny();
+        let mut cache = NativeKvCache::new(&ck.config, 1);
+        forward_pass(&ck, &FpLinears(&ck), &[4, 8], 1, &mut cache).unwrap();
+        let a = forward_pass(&ck, &FpLinears(&ck), &[3], 1, &mut cache).unwrap();
+        cache.set_len(2); // roll the speculative token back
+        let b = forward_pass(&ck, &FpLinears(&ck), &[3], 1, &mut cache).unwrap();
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn calibration_captures_every_linear() {
+        let ck = tiny();
+        let calib = CalibLinears::new(&ck);
+        let mut cache = NativeKvCache::new(&ck.config, 1);
+        forward_pass(&ck, &calib, &[1, 2, 3, 4], 1, &mut cache).unwrap();
+        let store = calib.into_store();
+        assert_eq!(store.len(), ck.config.n_layers * LINEARS.len());
+        let (x, m) = &store[&(0, Linear::Down.index())];
+        assert_eq!(*m, 4);
+        assert_eq!(x.len(), 4 * ck.config.d_ff);
+    }
+}

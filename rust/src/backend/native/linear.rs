@@ -1,0 +1,224 @@
+//! One QUIK-quantized linear layer (paper §3, Algorithm 1), built on the
+//! [`crate::quant`] substrate.
+//!
+//! Offline (startup): calibration activations score each input feature by
+//! ℓ∞ norm, the top-N become outlier columns and a permutation moves them
+//! to the end of the feature axis (`quant::outlier`).  The base columns
+//! are quantized per-output-row symmetric (`quantize_weights`) and stored
+//! *nibble-packed* for INT4 (`quant::int4`) — the real storage format the
+//! memory model charges for.  Outlier columns stay FP32.
+//!
+//! Online (per token): the input is permuted, split, the base part is
+//! quantized per-token asymmetric (`quantize_acts`), multiplied in exact
+//! integer arithmetic (`int_matmul`) and dequantized through the fused
+//! Eq.-1 epilogue; the outlier part runs a small FP32 GEMM accumulated
+//! into the same output tile (Algorithm 1 line 8).
+
+use crate::config::LayerPlan;
+use crate::quant::dequant::quik_linear;
+use crate::quant::{int4, outlier, quantize_weights, WeightQuant};
+
+/// A quantized linear: `y = x @ W^T` in the QUIK hybrid format.
+#[derive(Debug, Clone)]
+pub struct QuikLinear {
+    pub n: usize,
+    pub k: usize,
+    pub k_base: usize,
+    pub n_outlier: usize,
+    pub weight_bits: u32,
+    pub act_bits: u32,
+    /// Column permutation applied to incoming activations (outliers last).
+    perm: Vec<usize>,
+    /// INT4 path: nibble-packed `w_int` (`[n, k_base]`, row-major).
+    packed: Vec<u8>,
+    /// INT8 path: plain `i8` weights (empty when `weight_bits == 4`).
+    w_int8: Vec<i8>,
+    scale: Vec<f32>,     // per output row
+    w_reduced: Vec<f32>, // Eq.-1 shift term, per output row
+    w_fp: Vec<f32>,      // [n, n_outlier] FP32 outlier columns
+}
+
+impl QuikLinear {
+    /// Quantize an FP32 weight `[n, k]` under `plan`, selecting outliers
+    /// from `calib` (`[calib_rows, k]` activations seen by this layer).
+    pub fn quantize(
+        w: &[f32],
+        n: usize,
+        k: usize,
+        plan: LayerPlan,
+        calib: &[f32],
+        calib_rows: usize,
+    ) -> QuikLinear {
+        assert_eq!(w.len(), n * k, "weight must be [n, k] row-major");
+        assert_eq!(calib.len(), calib_rows * k, "calib must be [m, k] row-major");
+        assert!(
+            plan.weight_bits == 4 || plan.weight_bits == 8,
+            "native QUIK linear supports 4- or 8-bit weights, got {}",
+            plan.weight_bits
+        );
+        let n_outlier = plan.n_outlier.min(k / 2);
+        let scores = outlier::linf_scores(calib, calib_rows, k);
+        let outliers = outlier::select_outliers(&scores, n_outlier);
+        let perm = outlier::outlier_permutation(k, &outliers);
+        let wp = outlier::permute_columns(w, n, k, &perm);
+        let k_base = k - n_outlier;
+
+        let mut w_base = vec![0f32; n * k_base];
+        let mut w_fp = vec![0f32; n * n_outlier];
+        for row in 0..n {
+            w_base[row * k_base..(row + 1) * k_base]
+                .copy_from_slice(&wp[row * k..row * k + k_base]);
+            w_fp[row * n_outlier..(row + 1) * n_outlier]
+                .copy_from_slice(&wp[row * k + k_base..(row + 1) * k]);
+        }
+        let wq = quantize_weights(&w_base, n, k_base, plan.weight_bits);
+        let (packed, w_int8) = if plan.weight_bits == 4 {
+            (int4::pack(&wq.w_int), Vec::new())
+        } else {
+            (Vec::new(), wq.w_int)
+        };
+        QuikLinear {
+            n,
+            k,
+            k_base,
+            n_outlier,
+            weight_bits: plan.weight_bits,
+            act_bits: plan.act_bits,
+            perm,
+            packed,
+            w_int8,
+            scale: wq.scale,
+            w_reduced: wq.w_reduced,
+            w_fp,
+        }
+    }
+
+    /// Forward `[m, k] -> [m, n]`: permute the input into outlier order,
+    /// unpack the nibble storage, and run [`crate::quant::dequant::quik_linear`]
+    /// — the same Algorithm-1 oracle the property tests pin down — for the
+    /// online activation quantization, integer MatMul, fused Eq.-1
+    /// dequantization and FP32 outlier accumulation.
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        assert_eq!(x.len(), m * self.k, "input must be [m, k] row-major");
+        let xp = outlier::permute_columns(x, m, self.k, &self.perm);
+        let w_int = if self.weight_bits == 4 {
+            int4::unpack(&self.packed, self.n * self.k_base)
+        } else {
+            self.w_int8.clone()
+        };
+        let wq = WeightQuant {
+            w_int,
+            scale: self.scale.clone(),
+            w_reduced: self.w_reduced.clone(),
+            n: self.n,
+            k: self.k_base,
+            bits: self.weight_bits,
+        };
+        quik_linear(&xp, m, self.k, self.act_bits, &wq, &self.w_fp, self.n_outlier)
+    }
+
+    /// Bytes of resident quantized storage: packed/int8 base weights plus
+    /// FP32 outlier columns, scales and the Eq.-1 shift term.
+    pub fn storage_bytes(&self) -> usize {
+        let base = if self.weight_bits == 4 { self.packed.len() } else { self.w_int8.len() };
+        base + 4 * (self.w_fp.len() + self.scale.len() + self.w_reduced.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn plan(wb: u32, ab: u32, n_out: usize) -> LayerPlan {
+        LayerPlan { weight_bits: wb, act_bits: ab, n_outlier: n_out, sparse24: false }
+    }
+
+    /// Random [rows, cols] with heavy-tailed columns at stride 4.
+    fn data(rng: &mut Rng, rows: usize, cols: usize, boost: f32) -> Vec<f32> {
+        (0..rows * cols)
+            .map(|i| {
+                let v = rng.normal();
+                if i % cols % 4 == 3 {
+                    v * boost
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_fp32_closely_with_outliers() {
+        let (m, k, n) = (6, 32, 10);
+        let mut rng = Rng::new(9);
+        let w = data(&mut rng, n, k, 1.0);
+        let calib = data(&mut rng, 16, k, 8.0);
+        let x = data(&mut rng, m, k, 8.0);
+        let lin = QuikLinear::quantize(&w, n, k, plan(4, 4, 8), &calib, 16);
+        assert_eq!(lin.n_outlier, 8);
+        let y = lin.forward(&x, m);
+        // fp32 reference
+        let mut want = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                want[i * n + j] = (0..k).map(|c| x[i * k + c] * w[j * k + c]).sum::<f32>();
+            }
+        }
+        let err: f32 = y.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let norm: f32 = want.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(err / norm < 0.12, "rel err {} too large", err / norm);
+    }
+
+    #[test]
+    fn int8_path_much_tighter_than_int4() {
+        let (m, k, n) = (4, 24, 6);
+        let mut rng = Rng::new(3);
+        let w = data(&mut rng, n, k, 1.0);
+        let calib = data(&mut rng, 8, k, 4.0);
+        let x = data(&mut rng, m, k, 4.0);
+        let rel = |lin: &QuikLinear| -> f32 {
+            let y = lin.forward(&x, m);
+            let mut want = vec![0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    want[i * n + j] = (0..k).map(|c| x[i * k + c] * w[j * k + c]).sum::<f32>();
+                }
+            }
+            let err: f32 =
+                y.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+            err / want.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-9)
+        };
+        let l8 = QuikLinear::quantize(&w, n, k, plan(8, 8, 6), &calib, 8);
+        let l4 = QuikLinear::quantize(&w, n, k, plan(4, 4, 6), &calib, 8);
+        assert!(rel(&l8) < 0.02);
+        assert!(rel(&l8) < rel(&l4));
+    }
+
+    #[test]
+    fn packed_storage_is_half_byte_per_base_weight() {
+        let (k, n) = (32, 10);
+        let mut rng = Rng::new(1);
+        let w = data(&mut rng, n, k, 1.0);
+        let calib = data(&mut rng, 8, k, 8.0);
+        let lin = QuikLinear::quantize(&w, n, k, plan(4, 4, 8), &calib, 8);
+        // 24 base columns × 10 rows = 240 int4 values = 120 bytes packed
+        assert_eq!(lin.k_base, 24);
+        let fp32_bytes = 4 * n * k;
+        assert!(lin.storage_bytes() < fp32_bytes / 2);
+    }
+
+    #[test]
+    fn zero_outliers_degenerates_to_plain_quik() {
+        let (m, k, n) = (3, 16, 5);
+        let mut rng = Rng::new(7);
+        let w = data(&mut rng, n, k, 1.0);
+        let calib = data(&mut rng, 4, k, 1.0);
+        let x = data(&mut rng, m, k, 1.0);
+        let lin = QuikLinear::quantize(&w, n, k, plan(8, 8, 0), &calib, 4);
+        assert_eq!(lin.n_outlier, 0);
+        let y = lin.forward(&x, m);
+        assert_eq!(y.len(), m * n);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+}

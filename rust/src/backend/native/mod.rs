@@ -1,0 +1,290 @@
+//! `NativeBackend` — a self-contained CPU QUIK inference engine.
+//!
+//! Serves two variants of the same FP32 checkpoint:
+//!
+//! * [`Variant::Fp16`] — the full-precision reference (FP32 on CPU);
+//! * [`Variant::Quik4`] — every backbone linear quantized at startup
+//!   through the paper's pipeline: a seeded calibration forward captures
+//!   per-layer activations, ℓ∞ scoring selects outlier columns
+//!   (`quant::outlier`), base columns are RTN-quantized per output row
+//!   (`quant::quantize_weights`) and stored nibble-packed
+//!   (`quant::int4`), and each request-time forward quantizes
+//!   activations per token and runs `quant::int_matmul` with the fused
+//!   Eq.-1 dequantization epilogue.
+//!
+//! Unlike the PJRT artifact runtime, shapes are fully dynamic: any
+//! `[batch, seq]` step within the context budget is accepted, so the
+//! scheduler pads only to the longest prompt in a batch.
+
+pub mod forward;
+pub mod linear;
+pub mod model;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{InferenceBackend, Phase, StepOutput, Variant};
+use crate::config::QuikPolicy;
+use crate::util::rng::Rng;
+
+use self::forward::{forward_pass, CalibLinears, FpLinears, QuikLinears, LINEARS};
+
+pub use self::forward::{Linear, NativeKvCache, QuikStack};
+pub use self::linear::QuikLinear;
+pub use self::model::{LayerWeights, NativeCheckpoint, NativeConfig};
+
+/// Seed + length of the deterministic calibration sample used for outlier
+/// selection at startup (tokens drawn uniformly over the vocabulary).
+pub const CALIB_SEED: u64 = 4242;
+pub const CALIB_LEN: usize = 32;
+
+/// The QUIK policy the demo/golden model is quantized under: W4A4 with 12
+/// outlier columns, and the sensitive second MLP projection at 8 bits with
+/// a 2× outlier budget (the paper's down-proj exception, scaled to the
+/// demo width).
+pub fn demo_policy() -> QuikPolicy {
+    QuikPolicy {
+        weight_bits: 4,
+        act_bits: 4,
+        n_outlier: 12,
+        down_proj_bits: 8,
+        down_proj_outlier_mult: 2.0,
+        sparse24: false,
+    }
+}
+
+/// A pure-Rust QUIK inference backend over one FP32 checkpoint.
+pub struct NativeBackend {
+    name: String,
+    ckpt: NativeCheckpoint,
+    policy: QuikPolicy,
+    quik: Option<QuikStack>,
+}
+
+impl NativeBackend {
+    pub fn new(
+        name: impl Into<String>,
+        ckpt: NativeCheckpoint,
+        policy: QuikPolicy,
+    ) -> Result<Self> {
+        ckpt.config.validate()?;
+        Ok(Self { name: name.into(), ckpt, policy, quik: None })
+    }
+
+    /// Deterministic random checkpoint (see [`NativeCheckpoint::seeded`]).
+    pub fn seeded(
+        name: impl Into<String>,
+        config: NativeConfig,
+        seed: u64,
+        policy: QuikPolicy,
+    ) -> Result<Self> {
+        Self::new(name, NativeCheckpoint::seeded(config, seed), policy)
+    }
+
+    /// Load an FP32 checkpoint file written by [`NativeCheckpoint::save`].
+    pub fn from_file(
+        name: impl Into<String>,
+        path: impl AsRef<std::path::Path>,
+        policy: QuikPolicy,
+    ) -> Result<Self> {
+        Self::new(name, NativeCheckpoint::load(path)?, policy)
+    }
+
+    pub fn config(&self) -> &NativeConfig {
+        &self.ckpt.config
+    }
+
+    pub fn checkpoint(&self) -> &NativeCheckpoint {
+        &self.ckpt
+    }
+
+    /// The quantized stack, if [`InferenceBackend::prepare`] has built it.
+    pub fn quik_stack(&self) -> Option<&QuikStack> {
+        self.quik.as_ref()
+    }
+
+    /// Resident bytes of the quantized weights (None before preparation).
+    pub fn quik_storage_bytes(&self) -> Option<usize> {
+        self.quik.as_ref().map(QuikStack::storage_bytes)
+    }
+
+    /// FP32 bytes of the backbone linears the quantized stack replaces.
+    pub fn fp32_linear_bytes(&self) -> usize {
+        self.ckpt.linear_bytes()
+    }
+
+    /// Build the QUIK stack: calibration forward → outlier selection →
+    /// per-linear quantization under the policy's sensitivity rules.
+    /// Idempotent; called by `prepare(Quik4, ..)`.
+    pub fn ensure_quantized(&mut self) -> Result<()> {
+        if self.quik.is_some() {
+            return Ok(());
+        }
+        let cfg = self.ckpt.config;
+        let calib_len = CALIB_LEN.min(cfg.max_seq);
+        let mut rng = Rng::new(CALIB_SEED);
+        let tokens: Vec<i32> =
+            (0..calib_len).map(|_| rng.range_i32(0, cfg.vocab as i32 - 1)).collect();
+        let calib = CalibLinears::new(&self.ckpt);
+        let mut cache = NativeKvCache::new(&cfg, 1);
+        forward_pass(&self.ckpt, &calib, &tokens, 1, &mut cache)
+            .context("calibration forward")?;
+        let store = calib.into_store();
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let mut block = Vec::with_capacity(LINEARS.len());
+            for which in LINEARS {
+                let (x, rows) = store
+                    .get(&(l, which.index()))
+                    .context("calibration pass missed a linear")?;
+                let plan = self.policy.plan_for(which.layer_name(), which.in_features(&cfg));
+                block.push(QuikLinear::quantize(
+                    which.weights(&self.ckpt.layers[l]),
+                    which.out_features(&cfg),
+                    which.in_features(&cfg),
+                    plan,
+                    x,
+                    *rows,
+                ));
+            }
+            layers.push(block);
+        }
+        self.quik = Some(QuikStack { layers });
+        Ok(())
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    type Cache = NativeKvCache;
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn vocab(&self) -> usize {
+        self.ckpt.config.vocab
+    }
+
+    fn max_context(&self) -> usize {
+        self.ckpt.config.max_seq
+    }
+
+    fn variants(&self) -> Vec<String> {
+        vec![Variant::Fp16.prefix().to_string(), Variant::Quik4.prefix().to_string()]
+    }
+
+    fn prepare(&mut self, variant: Variant, _phase: Phase, _batch: usize) -> Result<()> {
+        match variant {
+            Variant::Fp16 => Ok(()), // the checkpoint itself is the program
+            Variant::Quik4 => self.ensure_quantized(),
+        }
+    }
+
+    fn step_seq(
+        &self,
+        _variant: Variant,
+        _phase: Phase,
+        _batch: usize,
+        requested: usize,
+    ) -> Result<usize> {
+        // Fully dynamic shapes: accept what the caller wants, within budget.
+        Ok(requested.clamp(1, self.ckpt.config.max_seq))
+    }
+
+    fn new_cache(&self, _variant: Variant, batch: usize) -> Result<NativeKvCache> {
+        if batch == 0 {
+            bail!("batch must be positive");
+        }
+        Ok(NativeKvCache::new(&self.ckpt.config, batch))
+    }
+
+    fn forward(
+        &self,
+        variant: Variant,
+        _phase: Phase,
+        tokens: &[i32],
+        batch: usize,
+        cache: &mut NativeKvCache,
+    ) -> Result<StepOutput> {
+        match variant {
+            Variant::Fp16 => forward_pass(&self.ckpt, &FpLinears(&self.ckpt), tokens, batch, cache),
+            Variant::Quik4 => {
+                let stack = self
+                    .quik
+                    .as_ref()
+                    .context("quik4 stack not built — call prepare(Quik4, ..) first")?;
+                forward_pass(&self.ckpt, &QuikLinears(stack), tokens, batch, cache)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::KvCache;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::seeded("test", NativeConfig::demo(), 5, demo_policy()).unwrap()
+    }
+
+    #[test]
+    fn prepare_builds_quik_stack_once() {
+        let mut b = backend();
+        assert!(b.quik_stack().is_none());
+        b.prepare(Variant::Quik4, Phase::Prefill, 1).unwrap();
+        let bytes = b.quik_storage_bytes().unwrap();
+        b.prepare(Variant::Quik4, Phase::Decode, 4).unwrap(); // idempotent
+        assert_eq!(b.quik_storage_bytes().unwrap(), bytes);
+        // nibble packing + outlier columns must beat FP32 comfortably
+        assert!(bytes * 2 < b.fp32_linear_bytes(), "{bytes} vs {}", b.fp32_linear_bytes());
+    }
+
+    #[test]
+    fn quik_forward_requires_prepare() {
+        let b = backend();
+        let mut cache = b.new_cache(Variant::Quik4, 1).unwrap();
+        assert!(b.forward(Variant::Quik4, Phase::Prefill, &[1, 2], 1, &mut cache).is_err());
+    }
+
+    #[test]
+    fn fp32_and_quik_share_cache_shape() {
+        let mut b = backend();
+        b.prepare(Variant::Quik4, Phase::Prefill, 1).unwrap();
+        for variant in [Variant::Fp16, Variant::Quik4] {
+            let mut cache = b.new_cache(variant, 2).unwrap();
+            let out = b.forward(variant, Phase::Prefill, &[1, 2, 3, 4], 2, &mut cache).unwrap();
+            assert_eq!((out.batch, out.seq, out.vocab), (2, 2, 96));
+            assert_eq!(cache.len(), 2);
+        }
+    }
+
+    #[test]
+    fn outliers_cover_every_linear_of_the_demo_policy() {
+        let mut b = backend();
+        b.prepare(Variant::Quik4, Phase::Prefill, 1).unwrap();
+        let stack = b.quik_stack().unwrap();
+        assert_eq!(stack.layers.len(), 2);
+        for block in &stack.layers {
+            assert_eq!(block.len(), LINEARS.len());
+            for lin in block {
+                assert!(lin.n_outlier > 0, "a linear ended up with no outlier columns");
+            }
+        }
+        // down_proj runs at 8 bits with the 2x outlier budget
+        let down = &stack.layers[0][Linear::Down.index()];
+        assert_eq!(down.weight_bits, 8);
+        assert_eq!(down.n_outlier, 24);
+        let q = &stack.layers[0][Linear::Q.index()];
+        assert_eq!(q.weight_bits, 4);
+        assert_eq!(q.n_outlier, 12);
+    }
+
+    #[test]
+    fn step_seq_is_dynamic() {
+        let b = backend();
+        assert_eq!(b.step_seq(Variant::Fp16, Phase::Prefill, 4, 17).unwrap(), 17);
+        assert_eq!(b.step_seq(Variant::Fp16, Phase::Verify, 1, 500).unwrap(), 96);
+        assert_eq!(b.step_seq(Variant::Quik4, Phase::Decode, 1, 0).unwrap(), 1);
+    }
+}

@@ -1,0 +1,348 @@
+//! Native model definition: config, FP32 checkpoint, seeded init and a
+//! self-describing binary checkpoint format.
+//!
+//! The architecture is the paper's LLaMA-family backbone (RMSNorm →
+//! RoPE attention with grouped-query KV heads → SwiGLU MLP), i.e. the
+//! same block structure `config::ModelSpec::linear_shapes` models, sized
+//! down so a checkpoint quantizes in milliseconds at startup.
+//!
+//! [`NativeCheckpoint::seeded`] plants *outlier features*: a fixed stride
+//! of embedding columns is scaled by [`OUTLIER_BOOST`], giving the
+//! residual stream the heavy-tailed per-feature distribution that QUIK's
+//! outlier split exploits (paper §3.2, Fig. 3).  Without that structure a
+//! random model has no outliers to extract and INT4 range is wasted on
+//! uniform noise; with it, the golden parity test can demand exact greedy
+//! agreement between the FP32 reference and the QUIK-4B stack.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// Embedding columns `c` with `c % OUTLIER_STRIDE == OUTLIER_PHASE` are
+/// boosted — the planted outlier features of seeded checkpoints.
+pub const OUTLIER_STRIDE: usize = 6;
+pub const OUTLIER_PHASE: usize = 5;
+pub const OUTLIER_BOOST: f32 = 16.0;
+
+/// Architecture of a native checkpoint (LLaMA-style block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NativeConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Key/value heads (< `n_heads` for grouped-query attention).
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl NativeConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.d_head()
+    }
+
+    /// The demo/golden-test architecture: small enough that startup
+    /// quantization and CI serving runs take milliseconds, large enough
+    /// to exercise GQA, multi-layer residual flow and outlier selection.
+    pub fn demo() -> Self {
+        Self {
+            vocab: 96,
+            d_model: 48,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 128,
+            max_seq: 96,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.vocab == 0 || self.d_model == 0 || self.n_layers == 0 || self.max_seq == 0 {
+            bail!("config has a zero dimension: {self:?}");
+        }
+        if self.n_heads == 0 || self.d_model % self.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        if self.d_head() % 2 != 0 {
+            bail!("d_head {} must be even for RoPE", self.d_head());
+        }
+        if self.n_kv_heads == 0 || self.n_heads % self.n_kv_heads != 0 {
+            bail!("n_heads {} not divisible by n_kv_heads {}", self.n_heads, self.n_kv_heads);
+        }
+        Ok(())
+    }
+}
+
+/// One transformer block's FP32 weights (all matrices `[out, in]` row-major).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>, // [d_model]
+    pub wq: Vec<f32>,        // [d_model, d_model]
+    pub wk: Vec<f32>,        // [kv_dim, d_model]
+    pub wv: Vec<f32>,        // [kv_dim, d_model]
+    pub wo: Vec<f32>,        // [d_model, d_model]
+    pub mlp_norm: Vec<f32>,  // [d_model]
+    pub w_gate: Vec<f32>,    // [d_ff, d_model]
+    pub w_up: Vec<f32>,      // [d_ff, d_model]
+    pub w_down: Vec<f32>,    // [d_model, d_ff]
+}
+
+/// A full FP32 checkpoint: what `quantize_weights`/`outlier` consume at
+/// backend startup and what the FP32 reference variant serves directly.
+#[derive(Debug, Clone)]
+pub struct NativeCheckpoint {
+    pub config: NativeConfig,
+    pub embedding: Vec<f32>,  // [vocab, d_model]
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>, // [d_model]
+    pub lm_head: Vec<f32>,    // [vocab, d_model]
+}
+
+fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+impl NativeCheckpoint {
+    /// Deterministic random checkpoint with planted outlier features.
+    ///
+    /// The draw order (embedding, then per layer wq/wk/wv/wo/w_gate/w_up/
+    /// w_down, then lm_head) is part of the golden-test contract — the
+    /// parity vectors were produced by an independent mirror of exactly
+    /// this sequence.
+    pub fn seeded(config: NativeConfig, seed: u64) -> Self {
+        let d = config.d_model;
+        let kv = config.kv_dim();
+        let ff = config.d_ff;
+        let mut rng = Rng::new(seed);
+        let sd = (1.0 / (d as f64).sqrt()) as f32;
+        let sff = (1.0 / (ff as f64).sqrt()) as f32;
+
+        let mut embedding = Vec::with_capacity(config.vocab * d);
+        for i in 0..config.vocab * d {
+            let mut v = rng.normal() * 0.1;
+            if (i % d) % OUTLIER_STRIDE == OUTLIER_PHASE {
+                v *= OUTLIER_BOOST;
+            }
+            embedding.push(v);
+        }
+
+        let mut layers = Vec::with_capacity(config.n_layers);
+        for _ in 0..config.n_layers {
+            layers.push(LayerWeights {
+                attn_norm: vec![1.0; d],
+                wq: normal_vec(&mut rng, d * d, sd),
+                wk: normal_vec(&mut rng, kv * d, sd),
+                wv: normal_vec(&mut rng, kv * d, sd),
+                wo: normal_vec(&mut rng, d * d, sd),
+                mlp_norm: vec![1.0; d],
+                w_gate: normal_vec(&mut rng, ff * d, sd),
+                w_up: normal_vec(&mut rng, ff * d, sd),
+                w_down: normal_vec(&mut rng, d * ff, sff),
+            });
+        }
+
+        Self {
+            config,
+            embedding,
+            layers,
+            final_norm: vec![1.0; d],
+            lm_head: normal_vec(&mut rng, config.vocab * d, sd),
+        }
+    }
+
+    /// Total FP32 bytes of the backbone linear weights (the tensors the
+    /// QUIK stack replaces — norms/embeddings/head stay FP32 either way).
+    pub fn linear_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                4 * (l.wq.len()
+                    + l.wk.len()
+                    + l.wv.len()
+                    + l.wo.len()
+                    + l.w_gate.len()
+                    + l.w_up.len()
+                    + l.w_down.len())
+            })
+            .sum()
+    }
+
+    /// Tensors in serialization order (shared by save/load).
+    fn tensor_lens(config: &NativeConfig) -> Vec<usize> {
+        let d = config.d_model;
+        let kv = config.kv_dim();
+        let ff = config.d_ff;
+        let mut lens = vec![config.vocab * d];
+        for _ in 0..config.n_layers {
+            lens.extend([d, d * d, kv * d, kv * d, d * d, d, ff * d, ff * d, d * ff]);
+        }
+        lens.push(d);
+        lens.push(config.vocab * d);
+        lens
+    }
+
+    /// Write the checkpoint: magic, 7×u32 config, then raw f32 LE tensors.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        for v in [
+            self.config.vocab,
+            self.config.d_model,
+            self.config.n_layers,
+            self.config.n_heads,
+            self.config.n_kv_heads,
+            self.config.d_ff,
+            self.config.max_seq,
+        ] {
+            out.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        for t in self.tensors() {
+            for x in t {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        fs::write(path.as_ref(), &out)
+            .with_context(|| format!("writing checkpoint {:?}", path.as_ref()))
+    }
+
+    /// Load a checkpoint written by [`NativeCheckpoint::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let blob = fs::read(path.as_ref())
+            .with_context(|| format!("reading checkpoint {:?}", path.as_ref()))?;
+        if blob.len() < MAGIC.len() + 28 || &blob[..MAGIC.len()] != MAGIC {
+            bail!("not a QUIK native checkpoint (bad magic)");
+        }
+        let mut off = MAGIC.len();
+        let mut next_u32 = |blob: &[u8]| -> usize {
+            let v = u32::from_le_bytes(blob[off..off + 4].try_into().unwrap()) as usize;
+            off += 4;
+            v
+        };
+        let config = NativeConfig {
+            vocab: next_u32(&blob),
+            d_model: next_u32(&blob),
+            n_layers: next_u32(&blob),
+            n_heads: next_u32(&blob),
+            n_kv_heads: next_u32(&blob),
+            d_ff: next_u32(&blob),
+            max_seq: next_u32(&blob),
+        };
+        config.validate()?;
+        let lens = Self::tensor_lens(&config);
+        let need: usize = off + 4 * lens.iter().sum::<usize>();
+        if blob.len() != need {
+            bail!("checkpoint size mismatch: have {} bytes, need {need}", blob.len());
+        }
+        let mut read_f32s = |n: usize| -> Vec<f32> {
+            let v = blob[off..off + 4 * n]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            off += 4 * n;
+            v
+        };
+        let embedding = read_f32s(config.vocab * config.d_model);
+        let mut layers = Vec::with_capacity(config.n_layers);
+        let d = config.d_model;
+        let kv = config.kv_dim();
+        let ff = config.d_ff;
+        for _ in 0..config.n_layers {
+            layers.push(LayerWeights {
+                attn_norm: read_f32s(d),
+                wq: read_f32s(d * d),
+                wk: read_f32s(kv * d),
+                wv: read_f32s(kv * d),
+                wo: read_f32s(d * d),
+                mlp_norm: read_f32s(d),
+                w_gate: read_f32s(ff * d),
+                w_up: read_f32s(ff * d),
+                w_down: read_f32s(d * ff),
+            });
+        }
+        let final_norm = read_f32s(d);
+        let lm_head = read_f32s(config.vocab * d);
+        Ok(Self { config, embedding, layers, final_norm, lm_head })
+    }
+
+    /// All tensors in serialization order.
+    fn tensors(&self) -> Vec<&[f32]> {
+        let mut v: Vec<&[f32]> = vec![&self.embedding];
+        for l in &self.layers {
+            v.extend([
+                l.attn_norm.as_slice(),
+                &l.wq,
+                &l.wk,
+                &l.wv,
+                &l.wo,
+                &l.mlp_norm,
+                &l.w_gate,
+                &l.w_up,
+                &l.w_down,
+            ]);
+        }
+        v.push(&self.final_norm);
+        v.push(&self.lm_head);
+        v
+    }
+}
+
+const MAGIC: &[u8; 8] = b"QUIKNAT1";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_config_is_valid() {
+        let c = NativeConfig::demo();
+        c.validate().unwrap();
+        assert_eq!(c.d_head(), 12);
+        assert_eq!(c.kv_dim(), 24);
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_planted() {
+        let c = NativeConfig::demo();
+        let a = NativeCheckpoint::seeded(c, 5);
+        let b = NativeCheckpoint::seeded(c, 5);
+        assert_eq!(a.embedding, b.embedding);
+        assert_eq!(a.layers[1].w_down, b.layers[1].w_down);
+        assert_eq!(a.lm_head, b.lm_head);
+        // planted outlier columns dominate the embedding's column norms
+        let d = c.d_model;
+        let col_linf = |col: usize| -> f32 {
+            (0..c.vocab).map(|r| a.embedding[r * d + col].abs()).fold(0f32, f32::max)
+        };
+        assert!(col_linf(OUTLIER_PHASE) > 4.0 * col_linf(0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let c = NativeConfig { vocab: 16, d_model: 8, n_layers: 1, n_heads: 2, n_kv_heads: 1, d_ff: 12, max_seq: 16 };
+        let ck = NativeCheckpoint::seeded(c, 3);
+        let path = std::env::temp_dir().join("quik_native_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let back = NativeCheckpoint::load(&path).unwrap();
+        assert_eq!(back.config, c);
+        assert_eq!(back.embedding, ck.embedding);
+        assert_eq!(back.layers[0].w_up, ck.layers[0].w_up);
+        assert_eq!(back.lm_head, ck.lm_head);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("quik_native_bad_ckpt.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(NativeCheckpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,125 @@
+//! `PjrtBackend` — the PJRT/XLA artifact runtime behind [`InferenceBackend`].
+//!
+//! Wraps [`ModelRuntime`]: each (variant, phase, batch) maps to a manifest
+//! artifact named `{variant}_{phase}_b{batch}` with a *static* compiled
+//! shape, so [`InferenceBackend::step_seq`] answers the artifact's fixed
+//! sequence length and callers pad to it.  Only compiled behind the
+//! `pjrt` cargo feature (needs the vendored XLA bridge crate).
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{InferenceBackend, KvCache, Phase, StepOutput, Variant};
+use crate::runtime::engine::{ModelRuntime, RunningCache};
+
+impl KvCache for RunningCache {
+    fn len(&self) -> usize {
+        self.cache_len.max(0) as usize
+    }
+
+    fn set_len(&mut self, len: usize) {
+        self.cache_len = len as i32;
+    }
+}
+
+/// PJRT artifact backend for one model of an artifact directory.
+pub struct PjrtBackend {
+    rt: ModelRuntime,
+    vocab: usize,
+    max_ctx: usize,
+}
+
+impl PjrtBackend {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>, model: &str) -> Result<Self> {
+        let rt = ModelRuntime::load(artifacts_dir, model)?;
+        let entry = rt.manifest.model(model)?;
+        let vocab = entry.config.vocab;
+        let max_ctx = entry.config.max_seq;
+        Ok(Self { rt, vocab, max_ctx })
+    }
+
+    fn artifact_name(variant: Variant, phase: Phase, batch: usize) -> String {
+        format!("{}_{}_b{}", variant.prefix(), phase.name(), batch)
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut ModelRuntime {
+        &mut self.rt
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    type Cache = RunningCache;
+
+    fn name(&self) -> &str {
+        &self.rt.model_name
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn max_context(&self) -> usize {
+        self.max_ctx
+    }
+
+    fn variants(&self) -> Vec<String> {
+        self.rt.variants()
+    }
+
+    fn prepare(&mut self, variant: Variant, phase: Phase, batch: usize) -> Result<()> {
+        let name = Self::artifact_name(variant, phase, batch);
+        self.rt
+            .ensure_loaded(&name)
+            .with_context(|| format!("compiling artifact {name}"))
+            .map(|_| ())
+    }
+
+    fn step_seq(
+        &self,
+        variant: Variant,
+        phase: Phase,
+        batch: usize,
+        _requested: usize,
+    ) -> Result<usize> {
+        let name = Self::artifact_name(variant, phase, batch);
+        let art = self
+            .rt
+            .artifact(&name)
+            .with_context(|| format!("artifact {name} not prepared"))?;
+        Ok(art.spec.seq)
+    }
+
+    fn new_cache(&self, variant: Variant, batch: usize) -> Result<RunningCache> {
+        // Every phase of a (variant, batch) family shares one cache shape;
+        // the prefill artifact defines it.
+        let name = Self::artifact_name(variant, Phase::Prefill, batch);
+        let art = self
+            .rt
+            .artifact(&name)
+            .with_context(|| format!("artifact {name} not prepared"))?;
+        art.new_cache()
+    }
+
+    fn forward(
+        &self,
+        variant: Variant,
+        phase: Phase,
+        tokens: &[i32],
+        batch: usize,
+        cache: &mut RunningCache,
+    ) -> Result<StepOutput> {
+        let name = Self::artifact_name(variant, phase, batch);
+        let art = self
+            .rt
+            .artifact(&name)
+            .with_context(|| format!("artifact {name} not prepared"))?;
+        if batch != art.spec.batch {
+            bail!("batch {batch} != artifact batch {}", art.spec.batch);
+        }
+        art.run(tokens, cache)
+    }
+}

@@ -136,16 +136,19 @@ impl DynamicBatcher {
             (None, false) => return None,
         };
 
-        // extract up to `size` requests from the head bucket, FIFO
+        // Extract up to `size` head-bucket requests FIFO in one pass over
+        // the queue (a single drain; the old repeated `VecDeque::remove`
+        // was O(n²) under deep queues).
         let mut requests = Vec::with_capacity(size);
-        let mut i = 0;
-        while i < self.queue.len() && requests.len() < size {
-            if self.bucket_of(self.queue[i].prompt_len()) == head_bucket {
-                requests.push(self.queue.remove(i).unwrap());
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for r in std::mem::take(&mut self.queue) {
+            if requests.len() < size && self.bucket_of(r.prompt_len()) == head_bucket {
+                requests.push(r);
             } else {
-                i += 1;
+                rest.push_back(r);
             }
         }
+        self.queue = rest;
         Some(BatchPlan { requests, batch_size: size, prompt_len: head_bucket })
     }
 }

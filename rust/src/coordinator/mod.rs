@@ -1,10 +1,11 @@
-//! L3 serving coordinator — the paper's system contribution, integrated.
+//! Serving coordinator — the paper's system contribution, integrated.
 //!
 //! QUIK's evaluation is a batched-prefill serving scenario (§4.2: 2048-token
 //! prompts, single batches, HuggingFace integration).  This coordinator is
 //! the production shape of that integration: a request router + dynamic
-//! batcher + prefill/decode scheduler in front of the PJRT runtime that
-//! executes the AOT QUIK artifacts.  Python is never on this path.
+//! batcher + prefill/decode scheduler, generic over any
+//! [`crate::backend::InferenceBackend`] — the native Rust QUIK engine by
+//! default, the PJRT artifact runtime behind `--features pjrt`.
 //!
 //! Pipeline:
 //!
@@ -13,14 +14,16 @@
 //!                             │ BatchPlan
 //!                             ▼
 //!                  Scheduler: prefill (b∈{1,4}) → greedy decode loop
-//!                             │ threads KV-cache literals through PJRT
+//!                             │ threads the backend's KV-cache handle
 //!                             ▼
 //!                        Response (+ Metrics)
 //! ```
 //!
-//! Batches are bucketed by prompt length because the artifacts have static
-//! shapes and the KV cache advances with one shared `cache_len` scalar —
-//! the same constraint real serving stacks handle with shape buckets.
+//! Batches are bucketed by prompt length because a batch shares one
+//! logical cache length (and PJRT programs have static shapes) — the same
+//! constraint real serving stacks handle with shape buckets.  Prompts are
+//! padded to the longest in the batch and each row samples its first
+//! token at its own true last prompt position.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,114 +1,95 @@
-//! Prefill/decode scheduler: executes a [`BatchPlan`] against the runtime.
+//! Prefill/decode scheduler: executes a [`BatchPlan`] against any
+//! [`InferenceBackend`].
 //!
-//! One batch goes through a static-batching lifecycle: right-pad prompts
-//! to the artifact's prefill length, run the prefill artifact, roll the
-//! shared `cache_len` back to the true prompt length (pad garbage beyond
-//! it is overwritten and causally masked — see `forward_with_cache`), then
-//! run the decode artifact greedily until every rider has its tokens.
+//! One batch goes through a static-batching lifecycle: right-pad every
+//! prompt to the backend's prefill step length (the *longest* prompt in
+//! the batch for dynamic-shape backends, the compiled artifact length for
+//! PJRT), run one prefill step, roll the shared cache length back to the
+//! longest true prompt, then decode greedily until every rider has its
+//! tokens.
 //!
-//! Variant names follow the manifest: `{fp16,quik4}_{prefill,decode}_b{N}`.
+//! Each row's first sampled token comes from the logits at *its own* last
+//! prompt position, so shorter prompts in a bucket are not silently
+//! truncated to the batch minimum.  Positions between a short row's true
+//! length and the batch maximum hold pad-token KV entries during decode —
+//! the standard static-batching compromise (buckets keep the gap below
+//! the bucket granularity).
 
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use super::batcher::BatchPlan;
 use super::request::Response;
-use crate::runtime::engine::ModelRuntime;
+use crate::backend::{InferenceBackend, KvCache, Phase};
+use crate::util::argmax;
 
-/// Which weight format to serve (selects the artifact family).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Variant {
-    Fp16,
-    Quik4,
-}
+pub use crate::backend::Variant;
 
-impl Variant {
-    pub fn prefix(&self) -> &'static str {
-        match self {
-            Variant::Fp16 => "fp16",
-            Variant::Quik4 => "quik4",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Variant> {
-        match s {
-            "fp16" => Some(Variant::Fp16),
-            "quik4" => Some(Variant::Quik4),
-            _ => None,
-        }
-    }
-}
-
-/// Executes batches; owns nothing but a reference to the runtime.
-pub struct Scheduler<'rt> {
-    runtime: &'rt mut ModelRuntime,
+/// Executes batches; owns nothing but a reference to the backend.
+pub struct Scheduler<'b, B: InferenceBackend> {
+    backend: &'b mut B,
     variant: Variant,
     pad_token: i32,
 }
 
-impl<'rt> Scheduler<'rt> {
-    pub fn new(runtime: &'rt mut ModelRuntime, variant: Variant) -> Self {
-        Self { runtime, variant, pad_token: 0 }
-    }
-
-    fn artifact_name(&self, phase: &str, batch: usize) -> String {
-        format!("{}_{}_b{}", self.variant.prefix(), phase, batch)
+impl<'b, B: InferenceBackend> Scheduler<'b, B> {
+    pub fn new(backend: &'b mut B, variant: Variant) -> Self {
+        Self { backend, variant, pad_token: 0 }
     }
 
     /// Run one batch to completion (prefill + full decode).  Returns one
     /// [`Response`] per real request (padding rows are dropped).
     pub fn run_batch(&mut self, plan: BatchPlan) -> Result<Vec<Response>> {
         let b = plan.batch_size;
-        let prefill_name = self.artifact_name("prefill", b);
-        let decode_name = self.artifact_name("decode", b);
-        self.runtime.ensure_loaded(&prefill_name)?;
-        self.runtime.ensure_loaded(&decode_name)?;
-
-        let prefill = self.runtime.artifact(&prefill_name).unwrap();
-        let seq = prefill.spec.seq;
-        let max_ctx = prefill.spec.inputs[1].shape[3]; // cache T_max
-
-        // Longest common prompt length in the batch (bucketed equal, but
-        // be safe): shared cache_len forces alignment to the minimum.
-        let prompt_len = plan
-            .requests
-            .iter()
-            .map(|r| r.prompt_len())
-            .min()
-            .context("empty batch")?;
-        if prompt_len > seq {
-            bail!("prompt length {prompt_len} exceeds prefill seq {seq}");
+        if plan.requests.is_empty() {
+            bail!("empty batch");
         }
+        if plan.requests.iter().any(|r| r.prompt.is_empty()) {
+            bail!("empty prompt in batch");
+        }
+        self.backend.prepare(self.variant, Phase::Prefill, b)?;
+        self.backend.prepare(self.variant, Phase::Decode, b)?;
+
+        let max_prompt = plan.requests.iter().map(|r| r.prompt_len()).max().unwrap();
+        let seq = self.backend.step_seq(self.variant, Phase::Prefill, b, max_prompt)?;
+        if max_prompt > seq {
+            bail!("prompt length {max_prompt} exceeds prefill seq {seq}");
+        }
+        let max_ctx = self.backend.max_context();
         let max_new = plan
             .requests
             .iter()
             .map(|r| r.max_new_tokens)
             .max()
             .unwrap_or(0)
-            .min(max_ctx - prompt_len);
+            .min(max_ctx.saturating_sub(max_prompt));
 
-        // ---- prefill ----------------------------------------------------
+        // ---- prefill: right-pad each prompt to the step length ----------
         let t_batch = Instant::now();
         let mut tokens = vec![self.pad_token; b * seq];
         for (row, req) in plan.requests.iter().enumerate() {
-            tokens[row * seq..row * seq + prompt_len]
-                .copy_from_slice(&req.prompt[..prompt_len]);
+            tokens[row * seq..row * seq + req.prompt_len()].copy_from_slice(&req.prompt);
         }
-        let mut cache = prefill.new_cache()?;
+        let mut cache = self.backend.new_cache(self.variant, b)?;
         let t0 = Instant::now();
-        let out = prefill.run(&tokens, &mut cache)?;
+        let out = self.backend.forward(self.variant, Phase::Prefill, &tokens, b, &mut cache)?;
         let prefill_time = t0.elapsed();
-        // Roll the cache position back to the true prompt end: positions
-        // beyond it hold pad garbage that decode overwrites sequentially.
-        cache.cache_len = prompt_len as i32;
+        // Roll the shared cache position back to the longest true prompt:
+        // pad positions beyond it are masked and overwritten by decode.
+        cache.set_len(max_prompt);
 
         // ---- greedy decode ----------------------------------------------
+        // Each row's first token is sampled at its *own* last prompt
+        // position (no truncation to the batch-minimum length).
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); plan.requests.len()];
         let mut next: Vec<i32> = (0..b)
-            .map(|row| argmax(out.row(row, prompt_len - 1)))
+            .map(|row| {
+                let pos =
+                    plan.requests.get(row).map(|r| r.prompt_len()).unwrap_or(max_prompt) - 1;
+                argmax(out.row(row, pos))
+            })
             .collect();
-        let decode = self.runtime.artifact(&decode_name).unwrap();
         let t1 = Instant::now();
         for _step in 0..max_new {
             for (row, g) in generated.iter_mut().enumerate() {
@@ -123,7 +104,8 @@ impl<'rt> Scheduler<'rt> {
             {
                 break;
             }
-            let step_out = decode.run(&next, &mut cache)?;
+            let step_out =
+                self.backend.forward(self.variant, Phase::Decode, &next, b, &mut cache)?;
             next = (0..b).map(|row| argmax(step_out.row(row, 0))).collect();
         }
         let decode_time = t1.elapsed();
@@ -136,7 +118,7 @@ impl<'rt> Scheduler<'rt> {
             .zip(generated)
             .map(|(req, gen)| Response {
                 id: req.id,
-                prompt_len,
+                prompt_len: req.prompt_len(),
                 generated: gen,
                 queue_time: t_batch.duration_since(req.arrival),
                 prefill_time,
@@ -148,28 +130,14 @@ impl<'rt> Scheduler<'rt> {
     }
 }
 
-fn argmax(row: &[f32]) -> i32 {
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i as i32)
-        .unwrap_or(0)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn variant_names() {
+    fn variant_reexport_parses() {
         assert_eq!(Variant::Quik4.prefix(), "quik4");
         assert_eq!(Variant::parse("fp16"), Some(Variant::Fp16));
         assert_eq!(Variant::parse("x"), None);
-    }
-
-    #[test]
-    fn argmax_picks_peak() {
-        assert_eq!(argmax(&[0.1, 0.9, -0.5]), 1);
-        assert_eq!(argmax(&[2.0]), 0);
     }
 }

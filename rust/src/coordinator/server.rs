@@ -1,10 +1,12 @@
-//! The coordinator: worker thread owning the PJRT runtime + client handle.
+//! The coordinator: a worker thread owning the backend + client handle.
 //!
-//! PJRT wrapper types are `!Send`, so the runtime is *created inside* the
-//! worker thread and never crosses a thread boundary; clients talk to it
-//! through channels.  The worker loop alternates between draining the
-//! submission channel into the [`DynamicBatcher`] and executing the next
-//! [`BatchPlan`] through the [`Scheduler`].
+//! The backend is built *inside* the worker thread by a caller-supplied
+//! factory — PJRT wrapper types are `!Send`, and the native backend is
+//! happiest owning its weight stacks on the thread that runs them —
+//! so only channels cross the thread boundary.  The worker loop
+//! alternates between draining the submission channel into the
+//! [`DynamicBatcher`] and executing the next [`BatchPlan`] through the
+//! [`Scheduler`].
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -16,8 +18,10 @@ use anyhow::{Context, Result};
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
-use super::scheduler::{Scheduler, Variant};
-use crate::runtime::engine::ModelRuntime;
+use super::scheduler::Scheduler;
+use crate::backend::native::{NativeBackend, NativeCheckpoint};
+use crate::backend::{InferenceBackend, Phase, Variant};
+use crate::config::QuikPolicy;
 use crate::util::rng::Rng;
 
 enum Msg {
@@ -32,13 +36,54 @@ pub struct Coordinator {
     worker: Option<JoinHandle<Result<()>>>,
     next_id: RequestId,
     pub vocab: usize,
+    /// Longest prompt one prefill step accepts (the backend's compiled or
+    /// context-limited step length).
     pub prefill_seq: usize,
+    /// Total context budget (prompt + generated) of the backend.
+    pub max_context: usize,
 }
 
 impl Coordinator {
-    /// Start the worker: loads the runtime for (model, variant), reports
-    /// readiness (or the startup error) before returning.
-    pub fn start(
+    /// Start a worker serving `variant` through the backend `factory`
+    /// builds (on the worker thread).  Reports readiness — or the startup
+    /// error — before returning.
+    pub fn start<B, F>(factory: F, variant: Variant, batcher_cfg: BatcherConfig) -> Result<Self>
+    where
+        B: InferenceBackend,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
+
+        let worker = std::thread::Builder::new()
+            .name("quik-coordinator".into())
+            .spawn(move || worker_main(factory, variant, batcher_cfg, rx, ready_tx))
+            .context("spawning coordinator worker")?;
+
+        let (vocab, prefill_seq, max_context) = ready_rx
+            .recv()
+            .context("coordinator worker died during startup")??;
+        Ok(Self { tx, worker: Some(worker), next_id: 0, vocab, prefill_seq, max_context })
+    }
+
+    /// Start over the native backend with the given checkpoint + policy.
+    pub fn start_native(
+        ckpt: NativeCheckpoint,
+        policy: QuikPolicy,
+        variant: Variant,
+        batcher_cfg: BatcherConfig,
+    ) -> Result<Self> {
+        Self::start(
+            move || NativeBackend::new("native", ckpt, policy),
+            variant,
+            batcher_cfg,
+        )
+    }
+
+    /// Start over the PJRT artifact runtime (needs the `pjrt` feature and
+    /// an artifact directory produced by `make artifacts`).
+    #[cfg(feature = "pjrt")]
+    pub fn start_pjrt(
         artifacts_dir: impl Into<String>,
         model: impl Into<String>,
         variant: Variant,
@@ -46,18 +91,11 @@ impl Coordinator {
     ) -> Result<Self> {
         let artifacts_dir = artifacts_dir.into();
         let model = model.into();
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
-
-        let worker = std::thread::Builder::new()
-            .name("quik-coordinator".into())
-            .spawn(move || worker_main(artifacts_dir, model, variant, batcher_cfg, rx, ready_tx))
-            .context("spawning coordinator worker")?;
-
-        let (vocab, prefill_seq) = ready_rx
-            .recv()
-            .context("coordinator worker died during startup")??;
-        Ok(Self { tx, worker: Some(worker), next_id: 0, vocab, prefill_seq })
+        Self::start(
+            move || crate::backend::pjrt::PjrtBackend::load(&artifacts_dir, &model),
+            variant,
+            batcher_cfg,
+        )
     }
 
     /// Submit a request; returns the channel the response will arrive on.
@@ -95,39 +133,40 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker_main(
-    artifacts_dir: String,
-    model: String,
+fn worker_main<B, F>(
+    factory: F,
     variant: Variant,
     batcher_cfg: BatcherConfig,
     rx: Receiver<Msg>,
-    ready_tx: Sender<Result<(usize, usize)>>,
-) -> Result<()> {
-    let mut runtime = match ModelRuntime::load(&artifacts_dir, &model) {
-        Ok(rt) => rt,
+    ready_tx: Sender<Result<(usize, usize, usize)>>,
+) -> Result<()>
+where
+    B: InferenceBackend,
+    F: FnOnce() -> Result<B>,
+{
+    let mut backend = match factory() {
+        Ok(b) => b,
         Err(e) => {
             let _ = ready_tx.send(Err(e));
             return Ok(());
         }
     };
-    // Pre-compile the artifacts we will serve with (largest batch first).
+    // Pre-prepare the programs we will serve with (largest batch first).
     let sizes = batcher_cfg.batch_sizes.clone();
     for b in &sizes {
-        for phase in ["prefill", "decode"] {
-            let name = format!("{}_{}_b{}", variant.prefix(), phase, b);
-            if let Err(e) = runtime.ensure_loaded(&name) {
+        for phase in [Phase::Prefill, Phase::Decode] {
+            if let Err(e) = backend.prepare(variant, phase, *b) {
                 let _ = ready_tx.send(Err(e));
                 return Ok(());
             }
         }
     }
-    let entry = runtime.manifest.model(&model)?;
-    let vocab = entry.config.vocab;
-    let prefill_seq = runtime
-        .artifact(&format!("{}_prefill_b{}", variant.prefix(), sizes[0]))
-        .map(|a| a.spec.seq)
+    let vocab = backend.vocab();
+    let max_context = backend.max_context();
+    let prefill_seq = backend
+        .step_seq(variant, Phase::Prefill, sizes[0], max_context)
         .unwrap_or(64);
-    let _ = ready_tx.send(Ok((vocab, prefill_seq)));
+    let _ = ready_tx.send(Ok((vocab, prefill_seq, max_context)));
 
     let mut batcher = DynamicBatcher::new(batcher_cfg);
     let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
@@ -150,6 +189,16 @@ fn worker_main(
         match msg {
             Some(Msg::Submit(req, tx)) => {
                 let id = req.id;
+                // Admission validation: a bad token would make the backend
+                // fail the *whole batch* at forward time — reject the one
+                // request up front instead (client sees a closed channel).
+                let invalid = req.prompt.is_empty()
+                    || req.prompt.iter().any(|&t| t < 0 || t as usize >= vocab);
+                if invalid {
+                    metrics.rejected += 1;
+                    drop(tx);
+                    continue;
+                }
                 match batcher.try_push(req) {
                     Ok(()) => {
                         waiters.insert(id, tx);
@@ -172,7 +221,8 @@ fn worker_main(
         if let Some(plan) = batcher.next_batch(Instant::now()) {
             let used = plan.requests.len();
             let bsize = plan.batch_size;
-            let mut scheduler = Scheduler::new(&mut runtime, variant);
+            let ids: Vec<RequestId> = plan.requests.iter().map(|r| r.id).collect();
+            let mut scheduler = Scheduler::new(&mut backend, variant);
             match scheduler.run_batch(plan) {
                 Ok(responses) => {
                     metrics.record_batch(bsize, used);
@@ -191,6 +241,14 @@ fn worker_main(
                 }
                 Err(e) => {
                     eprintln!("[coordinator] batch failed: {e:#}");
+                    // Fail fast for every rider: dropping the waiters
+                    // closes their channels, instead of leaking them and
+                    // leaving clients blocked on recv() forever.
+                    for id in ids {
+                        if waiters.remove(&id).is_some() {
+                            metrics.rejected += 1;
+                        }
+                    }
                 }
             }
         }
@@ -245,7 +303,14 @@ impl ServeReport {
 pub fn run_workload(coord: &mut Coordinator, spec: &WorkloadSpec) -> Result<ServeReport> {
     let mut rng = Rng::new(spec.seed);
     let vocab = coord.vocab as i32;
-    let prompt_len = spec.prompt_len.min(coord.prefill_seq);
+    // Fit the step length AND leave the generation budget inside the
+    // context window — otherwise a dynamic-shape backend (prefill_seq ==
+    // max_context) would silently generate nothing.
+    let prompt_len = spec
+        .prompt_len
+        .min(coord.prefill_seq)
+        .min(coord.max_context.saturating_sub(spec.max_new_tokens))
+        .max(1);
 
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(spec.n_requests);

@@ -1,27 +1,31 @@
-//! Speculative decoding on QUIK artifacts (the paper's §5 future work,
-//! "integration with speculative decoding (Leviathan et al., 2023)").
+//! Speculative decoding over any [`InferenceBackend`] (the paper's §5
+//! future work, "integration with speculative decoding").
 //!
 //! The cheap **draft** model is the QUIK-4B quantized variant; the
-//! **target** is the FP16 variant of the *same* checkpoint.  Greedy
-//! speculative decoding:
+//! **target** is the full-precision variant of the *same* checkpoint.
+//! Greedy speculative decoding:
 //!
-//! 1. draft K tokens autoregressively with `quik4_decode_b1`;
-//! 2. score all K in one `fp16_verify_b1` call (a cached forward with
-//!    `S_new = K` — the KV-cache interface makes multi-token verification
-//!    a first-class artifact);
+//! 1. draft K tokens autoregressively with `(Quik4, Decode)` steps;
+//! 2. score all K in one `(Fp16, Verify)` call — a cached multi-token
+//!    forward, a first-class phase of the backend trait;
 //! 3. accept the longest prefix where the target's greedy choice equals
 //!    the draft; emit one extra target token at the first divergence;
-//! 4. **roll back** both caches to the accepted position — sound because
-//!    the fixed-buffer cache masks positions ≥ `cache_len` and decode
-//!    overwrites them in order (see `forward_with_cache`).
+//! 4. **roll back** both caches to the accepted position via
+//!    [`KvCache::set_len`] — sound because positions at or beyond the
+//!    logical length are masked and overwritten in order.
 //!
-//! With a well-calibrated QUIK draft the acceptance rate is high (the
-//! quantized model rarely flips greedy choices), so most steps emit
-//! several tokens per expensive target call.
+//! On the native backend a verify window is bit-identical to K sequential
+//! decode steps (row-independent forward), so greedy spec-dec is exactly
+//! lossless: the emitted stream *is* the target's greedy stream.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::runtime::engine::{LoadedArtifact, ModelRuntime};
+use crate::backend::{InferenceBackend, KvCache, Phase, Variant};
+use crate::util::argmax;
+
+/// Verify-window size requested from dynamic-shape backends (static-shape
+/// backends answer with their compiled `verify` artifact length instead).
+pub const DEFAULT_WINDOW: usize = 8;
 
 /// Outcome statistics of a speculative generation run.
 #[derive(Debug, Clone, Default)]
@@ -50,77 +54,72 @@ impl SpecStats {
     }
 }
 
-/// Greedy speculative decoder over one (draft, target) artifact pair.
-pub struct SpeculativeDecoder<'rt> {
-    draft_decode: &'rt LoadedArtifact,
-    target_verify: &'rt LoadedArtifact,
-    target_prefill: &'rt LoadedArtifact,
-    draft_prefill: &'rt LoadedArtifact,
+/// Greedy speculative decoder over one backend's (draft, target) pair.
+pub struct SpeculativeDecoder<'b, B: InferenceBackend> {
+    backend: &'b B,
     k: usize,
 }
 
-impl<'rt> SpeculativeDecoder<'rt> {
-    /// Borrow the four artifacts from a runtime (load them first with
-    /// [`ModelRuntime::ensure_loaded`]; see [`load_artifacts`]).
-    pub fn new(rt: &'rt ModelRuntime) -> Result<Self> {
-        let need = |v: &str| {
-            rt.artifact(v)
-                .with_context(|| format!("artifact {v} not loaded — call load_artifacts"))
-        };
-        let target_verify = need("fp16_verify_b1")?;
-        let k = target_verify.spec.seq;
-        Ok(Self {
-            draft_decode: need("quik4_decode_b1")?,
-            target_verify,
-            target_prefill: need("fp16_prefill_b1")?,
-            draft_prefill: need("quik4_prefill_b1")?,
-            k,
-        })
-    }
-
-    /// Load everything [`SpeculativeDecoder::new`] needs.
-    pub fn load_artifacts(rt: &mut ModelRuntime) -> Result<()> {
-        for v in [
-            "quik4_decode_b1",
-            "quik4_prefill_b1",
-            "fp16_verify_b1",
-            "fp16_prefill_b1",
-        ] {
-            rt.ensure_loaded(v)?;
-        }
+impl<'b, B: InferenceBackend> SpeculativeDecoder<'b, B> {
+    /// Prepare every (variant, phase) the decoder drives.  Call once with
+    /// a mutable backend before constructing the decoder.
+    pub fn prepare(backend: &mut B) -> Result<()> {
+        backend.prepare(Variant::Quik4, Phase::Prefill, 1)?;
+        backend.prepare(Variant::Quik4, Phase::Decode, 1)?;
+        backend.prepare(Variant::Fp16, Phase::Prefill, 1)?;
+        backend.prepare(Variant::Fp16, Phase::Verify, 1)?;
         Ok(())
     }
 
+    /// Borrow a prepared backend (see [`SpeculativeDecoder::prepare`]).
+    pub fn new(backend: &'b B) -> Result<Self> {
+        let k = backend.step_seq(Variant::Fp16, Phase::Verify, 1, DEFAULT_WINDOW)?;
+        if k == 0 {
+            bail!("verify window is zero");
+        }
+        Ok(Self { backend, k })
+    }
+
+    /// The verify-window size in use.
+    pub fn window(&self) -> usize {
+        self.k
+    }
+
     /// Generate `n_tokens` greedily from `prompt`; returns the tokens (as
-    /// the FP16 target would have produced them) plus statistics.
+    /// the full-precision target would have produced them) + statistics.
     pub fn generate(&self, prompt: &[i32], n_tokens: usize) -> Result<(Vec<i32>, SpecStats)> {
-        let seq = self.target_prefill.spec.seq;
+        let seq = self.backend.step_seq(Variant::Fp16, Phase::Prefill, 1, prompt.len())?;
         if prompt.len() != seq {
-            bail!("prompt must be exactly {seq} tokens (artifact static shape)");
+            bail!("prompt must be exactly {seq} tokens for this backend's prefill");
         }
         let mut stats = SpecStats::default();
 
         // Prefill both models on the same prompt.
-        let mut tgt_cache = self.target_prefill.new_cache()?;
-        let tgt_out = self.target_prefill.run(prompt, &mut tgt_cache)?;
-        let mut drf_cache = self.draft_prefill.new_cache()?;
-        self.draft_prefill.run(prompt, &mut drf_cache)?;
+        let mut tgt_cache = self.backend.new_cache(Variant::Fp16, 1)?;
+        let tgt_out =
+            self.backend.forward(Variant::Fp16, Phase::Prefill, prompt, 1, &mut tgt_cache)?;
+        let mut drf_cache = self.backend.new_cache(Variant::Quik4, 1)?;
+        self.backend.forward(Variant::Quik4, Phase::Prefill, prompt, 1, &mut drf_cache)?;
 
         // The first token comes from the target's prefill logits.
         let mut out = vec![tgt_out.argmax_last()[0]];
-        let max_ctx = self.target_prefill.spec.inputs[1].shape[3];
+        let max_ctx = self.backend.max_context();
 
         while out.len() < n_tokens {
             let budget = n_tokens - out.len();
-            let k = self.k.min(budget).min(max_ctx - tgt_cache.cache_len as usize - 1);
-            if k == 0 {
+            let k = self.k.min(budget).min(max_ctx.saturating_sub(tgt_cache.len() + 1));
+            // The verify call always consumes a full window, so stop when
+            // the context cannot absorb one.
+            if k == 0 || tgt_cache.len() + self.k > max_ctx {
                 break;
             }
             // --- draft k tokens (starting from the last emitted token) ---
             let mut draft = Vec::with_capacity(k);
             let mut cur = *out.last().unwrap();
             for _ in 0..k {
-                let step = self.draft_decode.run(&[cur], &mut drf_cache)?;
+                let step = self
+                    .backend
+                    .forward(Variant::Quik4, Phase::Decode, &[cur], 1, &mut drf_cache)?;
                 stats.draft_calls += 1;
                 cur = step.argmax_last()[0];
                 draft.push(cur);
@@ -135,8 +134,9 @@ impl<'rt> SpeculativeDecoder<'rt> {
             while window.len() < self.k {
                 window.push(0); // pad; positions ≥ k are rolled back anyway
             }
-            let before = tgt_cache.cache_len;
-            let v = self.target_verify.run(&window, &mut tgt_cache)?;
+            let before = tgt_cache.len();
+            let v =
+                self.backend.forward(Variant::Fp16, Phase::Verify, &window, 1, &mut tgt_cache)?;
             stats.target_calls += 1;
 
             // --- accept longest agreeing prefix; emit target's fix-up ---
@@ -162,11 +162,11 @@ impl<'rt> SpeculativeDecoder<'rt> {
             // newest one (which rides as the next window's first entry).
             // The verify call wrote [pending, draft[..k-1]]; keep the
             // pending slot plus the accepted drafts that live in-cache.
-            tgt_cache.cache_len = before + accepted as i32 + if had_fixup { 1 } else { 0 };
-            // draft consumed k; keep the same true context as the target
-            drf_cache.cache_len = tgt_cache.cache_len;
-            // resync draft if the target corrected it: nothing to do —
-            // positions past cache_len are masked and will be rewritten.
+            tgt_cache.set_len(before + accepted + usize::from(had_fixup));
+            // draft consumed k; keep the same true context as the target.
+            // Positions past the logical length are masked and rewritten,
+            // so no explicit resync is needed if the target corrected it.
+            drf_cache.set_len(tgt_cache.len());
             if out.len() >= n_tokens {
                 break;
             }
@@ -174,14 +174,6 @@ impl<'rt> SpeculativeDecoder<'rt> {
         out.truncate(n_tokens);
         Ok((out, stats))
     }
-}
-
-fn argmax(row: &[f32]) -> i32 {
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i as i32)
-        .unwrap_or(0)
 }
 
 #[cfg(test)]

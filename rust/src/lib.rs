@@ -1,22 +1,39 @@
 //! # QUIK — end-to-end 4-bit LLM inference (reproduction)
 //!
-//! Rust coordinator + runtime for the QUIK hybrid quantization scheme
-//! (Ashkboos et al., EMNLP 2024).  The crate is layer 3 of a three-layer
-//! stack:
+//! Rust serving stack for the QUIK hybrid quantization scheme (Ashkboos
+//! et al., EMNLP 2024).  The crate is layer 3 of a three-layer stack, and
+//! since the backend refactor it is a *self-contained quantized inference
+//! engine* — the default build serves requests with zero external runtime
+//! dependencies:
 //!
 //! * **L1** — Pallas kernels (fused quantization, INT4/INT8 MatMul with a
 //!   dequantization epilogue) authored in `python/compile/kernels/`;
 //! * **L2** — JAX model forwards calling those kernels, AOT-lowered to HLO
-//!   text by `python/compile/aot.py` into `artifacts/`;
-//! * **L3** — this crate: loads the artifacts via PJRT ([`runtime`]), serves
-//!   batched prefill/decode requests ([`coordinator`]), and hosts the QUIK
-//!   quantization substrate in native Rust ([`quant`]) plus the calibrated
-//!   RTX-3090 device model ([`devicemodel`]) and byte-exact memory model
-//!   ([`memmodel`]) that regenerate the paper's performance figures.
+//!   text by `python/compile/aot.py` into `artifacts/` (only needed for
+//!   the PJRT backend);
+//! * **L3** — this crate:
+//!   * [`backend`] — the [`backend::InferenceBackend`] trait plus two
+//!     implementations: [`backend::native`], a pure-Rust CPU transformer
+//!     forward (RMSNorm → RoPE/GQA attention over a real KV cache →
+//!     SwiGLU MLP) whose linears run the QUIK pipeline from [`quant`]
+//!     (nibble-packed INT4 weights, per-token activation quantization,
+//!     fused Eq.-1 dequantization, FP32 outlier columns), quantizing an
+//!     FP32 checkpoint at startup; and `backend::pjrt` (behind the `pjrt`
+//!     cargo feature), which replays the L2 artifacts through PJRT;
+//!   * [`coordinator`] — dynamic batcher + scheduler + speculative
+//!     decoder + TCP front-end, generic over the backend trait;
+//!   * [`quant`] — the native QUIK quantization substrate (shared by both
+//!     backends' stories and property-tested against the Python oracle);
+//!   * [`devicemodel`] / [`memmodel`] — the calibrated RTX-3090 device
+//!     model and byte-exact memory model that regenerate the paper's
+//!     performance figures.
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! binary is self-contained.
+//! Python is never on the request path.  With the default feature set
+//! (`cargo build`) nothing outside this crate is either: the native
+//! backend builds and serves anywhere.  Enable `--features pjrt` (plus
+//! the vendored `xla` crate) to execute AOT artifacts instead.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod devicemodel;

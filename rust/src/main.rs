@@ -3,15 +3,19 @@
 //! Subcommands:
 //!
 //! * `serve`          — run a synthetic serving workload through the
-//!                      coordinator (FP16 or QUIK-4B artifacts) and report
-//!                      throughput/latency;
+//!                      coordinator and report throughput/latency;
 //! * `generate`       — generate tokens from a prompt (greedy), printing
-//!                      the token stream;
+//!                      the token stream for both variants;
 //! * `memory-report`  — Table 6: peak memory per model/precision;
 //! * `flops-report`   — Fig. 11: FLOP share per precision;
 //! * `layer-report`   — Fig. 7: layer-wise speedups on the device model;
 //! * `e2e-report`     — Fig. 9: end-to-end speedups for the model zoo;
-//! * `variants`       — list artifacts available in the manifest.
+//! * `variants`       — list artifacts available in a manifest.
+//!
+//! `serve` and `generate` default to the **native** backend (a seeded
+//! demo checkpoint, or `--ckpt <file>`), which needs no artifacts and no
+//! XLA.  `--backend pjrt` selects the artifact runtime when the crate is
+//! built with `--features pjrt`.
 //!
 //! Argument parsing is hand-rolled (offline build; no clap).
 
@@ -19,15 +23,15 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use quik::backend::native::{demo_policy, NativeCheckpoint, NativeConfig};
+use quik::backend::Variant;
 use quik::config::{model_zoo, QuikPolicy};
 use quik::coordinator::batcher::BatcherConfig;
-use quik::coordinator::scheduler::Variant;
 use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
 use quik::devicemodel::gpu::RTX3090;
 use quik::devicemodel::layer::FusionVersion;
 use quik::devicemodel::{QuikLayerModel, TransformerModel};
 use quik::memmodel::table6_row;
-use quik::runtime::engine::ModelRuntime;
 
 fn main() {
     if let Err(e) = run() {
@@ -90,10 +94,12 @@ fn print_help() {
         "quik — end-to-end 4-bit LLM inference (QUIK reproduction)\n\n\
          USAGE: quik <command> [--flag value]...\n\n\
          COMMANDS\n\
-           serve          --model llama-s --variant quik4|fp16 --artifacts artifacts\n\
+           serve          --variant quik4|fp16 [--backend native|pjrt]\n\
                           --requests 16 --prompt-len 48 --gen 16 [--rate <req/s>]\n\
+                          [--ckpt model.bin | --seed-model 5]     (native)\n\
+                          [--model llama-s --artifacts artifacts]  (pjrt)\n\
                           [--tcp 127.0.0.1:8191]  (JSON-lines network mode)\n\
-           generate       --model llama-s --variant quik4 --tokens 32 [--seed 7]\n\
+           generate       --variant quik4 --tokens 32 [--backend native|pjrt]\n\
            memory-report  (Table 6)\n\
            flops-report   (Figure 11)\n\
            layer-report   (Figure 7)\n\
@@ -102,11 +108,34 @@ fn print_help() {
     );
 }
 
+fn parse_variant(args: &Args) -> Result<Variant> {
+    Variant::parse(&args.get("variant", "quik4")).context("--variant must be fp16 or quik4")
+}
+
+fn batcher_cfg() -> BatcherConfig {
+    BatcherConfig {
+        batch_sizes: vec![4, 1],
+        max_wait: Duration::from_millis(30),
+        bucket: 64,
+        max_queue: 1024,
+    }
+}
+
+/// Build the native demo/file checkpoint the CLI serves by default.
+fn native_checkpoint(args: &Args) -> Result<(NativeCheckpoint, QuikPolicy)> {
+    let ckpt = match args.flags.get("ckpt") {
+        Some(path) => NativeCheckpoint::load(path)?,
+        None => {
+            let seed = args.get_usize("seed-model", 5)? as u64;
+            NativeCheckpoint::seeded(NativeConfig::demo(), seed)
+        }
+    };
+    Ok((ckpt, demo_policy()))
+}
+
 fn serve(args: &Args) -> Result<()> {
-    let model = args.get("model", "llama-s");
-    let artifacts = args.get("artifacts", "artifacts");
-    let variant = Variant::parse(&args.get("variant", "quik4"))
-        .context("--variant must be fp16 or quik4")?;
+    let variant = parse_variant(args)?;
+    let backend = args.get("backend", "native");
     let spec = WorkloadSpec {
         n_requests: args.get_usize("requests", 16)?,
         prompt_len: args.get_usize("prompt-len", 48)?,
@@ -114,18 +143,15 @@ fn serve(args: &Args) -> Result<()> {
         arrival_rate: args.flags.get("rate").map(|r| r.parse()).transpose()?,
         seed: args.get_usize("seed", 0)? as u64,
     };
-    println!("starting coordinator: model={model} variant={variant:?}");
-    let coord = Coordinator::start(
-        artifacts,
-        &model,
-        variant,
-        BatcherConfig {
-            batch_sizes: vec![4, 1],
-            max_wait: Duration::from_millis(30),
-            bucket: 64,
-            max_queue: 1024,
-        },
-    )?;
+    let coord = match backend.as_str() {
+        "native" => {
+            let (ckpt, policy) = native_checkpoint(args)?;
+            println!("starting coordinator: backend=native variant={variant:?}");
+            Coordinator::start_native(ckpt, policy, variant, batcher_cfg())?
+        }
+        "pjrt" => start_pjrt_coordinator(args, variant)?,
+        other => bail!("unknown --backend {other} (native|pjrt)"),
+    };
     if let Some(addr) = args.flags.get("tcp") {
         // network mode: JSON-lines over TCP, batching across connections
         return quik::coordinator::tcp::serve(addr, coord, None, None);
@@ -133,7 +159,7 @@ fn serve(args: &Args) -> Result<()> {
     let mut coord = coord;
     let report = run_workload(&mut coord, &spec)?;
     println!(
-        "\n=== serve report ({model}, {variant:?}) ===\n\
+        "\n=== serve report ({backend}, {variant:?}) ===\n\
          requests: {}  wall: {:.2?}\n\
          tokens: {} total ({} prompt + {} generated)\n\
          throughput: {:.1} tok/s, {:.2} req/s\n\
@@ -152,38 +178,88 @@ fn serve(args: &Args) -> Result<()> {
     coord.shutdown()
 }
 
-fn generate(args: &Args) -> Result<()> {
+#[cfg(feature = "pjrt")]
+fn start_pjrt_coordinator(args: &Args, variant: Variant) -> Result<Coordinator> {
     let model = args.get("model", "llama-s");
     let artifacts = args.get("artifacts", "artifacts");
-    let variant = Variant::parse(&args.get("variant", "quik4"))
-        .context("--variant must be fp16 or quik4")?;
+    println!("starting coordinator: backend=pjrt model={model} variant={variant:?}");
+    Coordinator::start_pjrt(artifacts, model, variant, batcher_cfg())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start_pjrt_coordinator(_args: &Args, _variant: Variant) -> Result<Coordinator> {
+    bail!("this binary was built without the `pjrt` feature — rebuild with `--features pjrt` (and the vendored xla crate)")
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let variant = parse_variant(args)?;
+    let backend = args.get("backend", "native");
     let n_tokens = args.get_usize("tokens", 32)?;
     let seed = args.get_usize("seed", 7)? as u64;
+    match backend.as_str() {
+        "native" => generate_native(args, variant, n_tokens, seed),
+        "pjrt" => generate_pjrt(args, variant, n_tokens, seed),
+        other => bail!("unknown --backend {other} (native|pjrt)"),
+    }
+}
 
-    let mut rt = ModelRuntime::load(&artifacts, &model)?;
-    let prefill_name = format!("{}_prefill_b1", variant.prefix());
-    let decode_name = format!("{}_decode_b1", variant.prefix());
-    rt.ensure_loaded(&prefill_name)?;
-    rt.ensure_loaded(&decode_name)?;
+fn generate_native(args: &Args, variant: Variant, n_tokens: usize, seed: u64) -> Result<()> {
+    use quik::backend::native::NativeBackend;
+    use quik::backend::{InferenceBackend, Phase};
 
-    let prefill = rt.artifact(&prefill_name).unwrap();
-    let seq = prefill.spec.seq;
-    let vocab = rt.manifest.model(&model)?.config.vocab as i32;
+    let (ckpt, policy) = native_checkpoint(args)?;
+    let mut backend = NativeBackend::new("native-cli", ckpt, policy)?;
+    backend.prepare(variant, Phase::Prefill, 1)?;
+    let vocab = backend.vocab() as i32;
+    let prompt_len = args.get_usize("prompt-len", 24)?.min(backend.max_context() / 2).max(1);
     let mut rng = quik::util::rng::Rng::new(seed);
-    let prompt: Vec<i32> = (0..seq).map(|_| rng.range_i32(0, vocab - 1)).collect();
+    let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.range_i32(0, vocab - 1)).collect();
 
-    let mut cache = prefill.new_cache()?;
-    let out = prefill.run(&prompt, &mut cache)?;
+    let mut cache = backend.new_cache(variant, 1)?;
+    let out = backend.forward(variant, Phase::Prefill, &prompt, 1, &mut cache)?;
     let mut next = out.argmax_last()[0];
     print!("prompt[..8]={:?} →", &prompt[..8.min(prompt.len())]);
-    let decode = rt.artifact(&decode_name).unwrap();
-    for _ in 0..n_tokens {
+    let budget = n_tokens.min(backend.max_context().saturating_sub(prompt_len));
+    for _ in 0..budget {
         print!(" {next}");
-        let step = decode.run(&[next], &mut cache)?;
+        let step = backend.forward(variant, Phase::Decode, &[next], 1, &mut cache)?;
         next = step.argmax_last()[0];
     }
     println!();
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn generate_pjrt(args: &Args, variant: Variant, n_tokens: usize, seed: u64) -> Result<()> {
+    use quik::backend::pjrt::PjrtBackend;
+    use quik::backend::{InferenceBackend, Phase};
+
+    let model = args.get("model", "llama-s");
+    let artifacts = args.get("artifacts", "artifacts");
+    let mut backend = PjrtBackend::load(&artifacts, &model)?;
+    backend.prepare(variant, Phase::Prefill, 1)?;
+    backend.prepare(variant, Phase::Decode, 1)?;
+    let seq = backend.step_seq(variant, Phase::Prefill, 1, 0)?;
+    let vocab = backend.vocab() as i32;
+    let mut rng = quik::util::rng::Rng::new(seed);
+    let prompt: Vec<i32> = (0..seq).map(|_| rng.range_i32(0, vocab - 1)).collect();
+
+    let mut cache = backend.new_cache(variant, 1)?;
+    let out = backend.forward(variant, Phase::Prefill, &prompt, 1, &mut cache)?;
+    let mut next = out.argmax_last()[0];
+    print!("prompt[..8]={:?} →", &prompt[..8.min(prompt.len())]);
+    for _ in 0..n_tokens {
+        print!(" {next}");
+        let step = backend.forward(variant, Phase::Decode, &[next], 1, &mut cache)?;
+        next = step.argmax_last()[0];
+    }
+    println!();
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn generate_pjrt(_args: &Args, _variant: Variant, _n: usize, _seed: u64) -> Result<()> {
+    bail!("this binary was built without the `pjrt` feature — rebuild with `--features pjrt` (and the vendored xla crate)")
 }
 
 fn memory_report() -> Result<()> {

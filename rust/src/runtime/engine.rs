@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifacts::{read_weight_blob, ArtifactSpec, Manifest, TensorSpec};
+use crate::backend::StepOutput;
 
 fn element_type(dtype: &str) -> Result<ElementType> {
     Ok(match dtype {
@@ -73,38 +74,6 @@ pub struct RunningCache {
     pub cache_len: i32,
 }
 
-/// Output of a prefill/decode call.
-pub struct PrefillOutput {
-    /// Row-major `[batch, seq, vocab]` logits.
-    pub logits: Vec<f32>,
-    pub batch: usize,
-    pub seq: usize,
-    pub vocab: usize,
-}
-
-impl PrefillOutput {
-    /// Argmax token per batch row at the *last* position (greedy decode).
-    pub fn argmax_last(&self) -> Vec<i32> {
-        (0..self.batch)
-            .map(|b| {
-                let base = (b * self.seq + (self.seq - 1)) * self.vocab;
-                let row = &self.logits[base..base + self.vocab];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i as i32)
-                    .unwrap()
-            })
-            .collect()
-    }
-
-    /// Logits row at (batch, pos).
-    pub fn row(&self, b: usize, pos: usize) -> &[f32] {
-        let base = (b * self.seq + pos) * self.vocab;
-        &self.logits[base..base + self.vocab]
-    }
-}
-
 impl LoadedArtifact {
     /// Fresh zeroed KV cache matching this artifact's cache shape.
     pub fn new_cache(&self) -> Result<RunningCache> {
@@ -121,7 +90,7 @@ impl LoadedArtifact {
 
     /// Execute one forward step: `tokens` must be `[batch, seq]` for this
     /// artifact's static shape.  Advances `cache.cache_len` by `seq`.
-    pub fn run(&self, tokens: &[i32], cache: &mut RunningCache) -> Result<PrefillOutput> {
+    pub fn run(&self, tokens: &[i32], cache: &mut RunningCache) -> Result<StepOutput> {
         let (batch, seq) = (self.spec.batch, self.spec.seq);
         if tokens.len() != batch * seq {
             bail!("tokens len {} != batch*seq {}", tokens.len(), batch * seq);
@@ -145,7 +114,7 @@ impl LoadedArtifact {
         cache.cache_k = ck;
         cache.cache_v = cv;
         cache.cache_len += seq as i32;
-        Ok(PrefillOutput { logits, batch, seq, vocab })
+        Ok(StepOutput { logits, batch, seq, vocab })
     }
 }
 

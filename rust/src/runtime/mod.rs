@@ -1,13 +1,19 @@
-//! PJRT runtime: load and execute the AOT artifacts.
+//! Artifact runtime support.
 //!
-//! `make artifacts` (Python, build-time only) leaves `artifacts/` with a
-//! `manifest.json`, HLO-text programs and raw weight blobs.  This module
-//! loads them onto the PJRT CPU client and exposes typed prefill/decode
-//! calls to the coordinator.  HLO *text* is the interchange format — see
-//! `python/compile/aot.py` and /opt/xla-example/README.md for why.
+//! [`artifacts`] (always available) parses the `manifest.json` layout
+//! written by `python/compile/aot.py` — HLO-text programs, raw weight
+//! blobs, golden vectors — with the in-crate JSON parser.
+//!
+//! [`engine`] (behind the `pjrt` cargo feature) loads those artifacts onto
+//! the PJRT CPU client and executes them; `make artifacts` (Python,
+//! build-time only) produces the inputs.  The default build carries no
+//! XLA dependency at all — serving runs on
+//! [`crate::backend::native::NativeBackend`] instead.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
 pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
-pub use engine::{ModelRuntime, PrefillOutput, RunningCache};
+#[cfg(feature = "pjrt")]
+pub use engine::{ModelRuntime, RunningCache};

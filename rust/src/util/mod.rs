@@ -1,15 +1,50 @@
 //! In-crate utilities for the offline build.
 //!
 //! The build environment resolves dependencies from a vendored snapshot
-//! that ships only the PJRT bridge (`xla`) and `anyhow`, so the small
-//! infrastructure pieces a crates.io project would pull in live here:
+//! that ships only the PJRT bridge (`xla`, optional) and `anyhow`, so the
+//! small infrastructure pieces a crates.io project would pull in live
+//! here:
 //!
 //! * [`json`] — a strict, minimal JSON parser (manifest + model zoo files);
 //! * [`rng`]  — a deterministic SplitMix64/LCG generator for tests and
 //!   workload synthesis;
 //! * [`bench`] — a micro-benchmark harness (warmup + timed iterations,
-//!   mean/p50/p99) used by `rust/benches/*` in place of criterion.
+//!   mean/p50/p99) used by `rust/benches/*` in place of criterion;
+//! * [`argmax`] — the one greedy-decode primitive every backend shares.
 
 pub mod bench;
 pub mod json;
 pub mod rng;
+
+/// Index of the largest element; the *first* maximum wins on exact ties
+/// (matching `numpy.argmax`, and therefore the golden-vector mirrors).
+/// NaN entries never win; an empty row returns 0.
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 0.9, -0.5]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_first_wins_ties_and_ignores_nan() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, 1.0, f32::NAN]), 1);
+    }
+}

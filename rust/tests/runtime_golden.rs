@@ -5,6 +5,11 @@
 //! Also checks that the Pallas-kernel artifact (`quik4_kernels_*`) agrees
 //! with the jnp-oracle artifact (`quik4_*`), i.e. the fused L1 kernels
 //! lower into HLO without changing the numbers.
+//!
+//! Requires the `pjrt` feature (and `make artifacts`); the default build
+//! covers the serving path through the native backend instead.
+
+#![cfg(feature = "pjrt")]
 
 use quik::runtime::artifacts::read_golden;
 use quik::runtime::engine::ModelRuntime;
