@@ -1,19 +1,92 @@
 //! Hot-path micro-benchmarks (the §Perf anchor for L3 optimization):
-//! request-time activation quantization, INT4 packing, outlier split,
-//! batcher admission/dispatch, and (when artifacts exist) PJRT decode
-//! step latency — the pieces that sit on the serving path.
+//! the quantized linear forward (persistent prepacked layout vs the
+//! per-call-unpack baseline), request-time activation quantization, INT4
+//! packing, outlier split, batcher admission/dispatch, and (when
+//! artifacts exist) PJRT decode step latency — the pieces that sit on
+//! the serving path.
+//!
+//! Pass `--json <path>` to also write the results as a machine-readable
+//! baseline (the `BENCH_hotpath.json` perf-trajectory file at the repo
+//! root is recorded this way):
+//!
+//! ```text
+//! cargo bench --bench hotpath -- --json BENCH_hotpath.json
+//! ```
 
 use std::time::{Duration, Instant};
 
 use quik::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use quik::coordinator::request::Request;
 use quik::quant::{int4, outlier, quantize_acts};
-use quik::util::bench::{bench_auto, report};
+use quik::util::bench::{bench_auto, report, BenchResult};
 use quik::util::rng::Rng;
 
+/// One bench row as a JSON object line.
+fn json_bench(r: &BenchResult) -> String {
+    format!(
+        "    {{\"name\": {:?}, \"mean_us\": {:.3}, \"p50_us\": {:.3}, \"p99_us\": {:.3}, \"iters\": {}}}",
+        r.name,
+        r.mean_us(),
+        r.p50.as_secs_f64() * 1e6,
+        r.p99.as_secs_f64() * 1e6,
+        r.iters
+    )
+}
+
 fn main() {
+    let json_path: Option<String> = {
+        let mut path = None;
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            if a == "--json" {
+                path = args.next();
+            }
+        }
+        path
+    };
+    let mut benches: Vec<String> = Vec::new();
+    let mut derived: Vec<String> = Vec::new();
+
     let mut rng = Rng::new(42);
     let budget = Duration::from_millis(300);
+
+    // --- QUIK linear forward: prepared layout vs per-call unpack --------
+    // The serving inner loop.  `forward_into` consumes the persistent
+    // panel-packed weights with reused scratch (zero per-call unpack /
+    // clone / alloc); `forward_unprepared` is the seed per-call-unpack
+    // baseline kept as the property-test oracle.  Outputs are
+    // bit-identical; only the schedule differs.
+    {
+        use quik::backend::native::{LinearScratch, QuikLinear};
+        use quik::config::LayerPlan;
+        let (k, n) = (1024usize, 1024usize);
+        let plan = LayerPlan { weight_bits: 4, act_bits: 4, n_outlier: 32, sparse24: false };
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let calib: Vec<f32> = (0..16 * k).map(|_| rng.normal()).collect();
+        let lin = QuikLinear::quantize(&w, n, k, plan, &calib, 16);
+        let mut scratch = LinearScratch::default();
+        let mut out = Vec::new();
+        for m in [1usize, 64] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let prep = bench_auto(&format!("quik_linear {m}x{k}x{n} prepared"), budget, || {
+                lin.forward_into(&x, m, &mut scratch, &mut out);
+                std::hint::black_box(&out);
+            });
+            report(&prep);
+            let base =
+                bench_auto(&format!("quik_linear {m}x{k}x{n} per-call unpack"), budget, || {
+                    std::hint::black_box(lin.forward_unprepared(&x, m));
+                });
+            report(&base);
+            let speedup = base.mean.as_secs_f64() / prep.mean.as_secs_f64();
+            println!("    -> {speedup:.2}x vs per-call-unpack baseline");
+            benches.push(json_bench(&prep));
+            benches.push(json_bench(&base));
+            derived.push(format!(
+                "    {{\"name\": \"speedup quik_linear {m}x{k}x{n} prepared_vs_unpack\", \"value\": {speedup:.3}}}"
+            ));
+        }
+    }
 
     // --- per-token asymmetric quantization (Algorithm 1 Quantization) ---
     for (m, k) in [(64usize, 4096usize), (2048, 4096)] {
@@ -24,6 +97,7 @@ fn main() {
         let gbps = (m * k * 4) as f64 / r.mean.as_secs_f64() / 1e9;
         report(&r);
         println!("    -> {gbps:.2} GB/s activation throughput");
+        benches.push(json_bench(&r));
     }
 
     // --- INT4 nibble packing ---
@@ -32,6 +106,7 @@ fn main() {
         std::hint::black_box(int4::pack(&vals));
     });
     report(&r);
+    benches.push(json_bench(&r));
 
     // --- outlier split (column permutation of a token batch) ---
     let (m, k) = (2048usize, 4096usize);
@@ -42,6 +117,7 @@ fn main() {
         std::hint::black_box(outlier::permute_columns(&x, m, k, &perm));
     });
     report(&r);
+    benches.push(json_bench(&r));
 
     // --- batcher admission + dispatch ---
     let r = bench_auto("batcher push+dispatch x1024", budget, || {
@@ -64,6 +140,7 @@ fn main() {
         "    -> {:.0} req/s admission+dispatch",
         1024.0 / r.mean.as_secs_f64()
     );
+    benches.push(json_bench(&r));
 
     // --- native decode step (the serving inner loop) ---
     {
@@ -83,6 +160,7 @@ fn main() {
                 );
             });
             report(&r);
+            benches.push(json_bench(&r));
         }
     }
 
@@ -102,7 +180,18 @@ fn main() {
                     std::hint::black_box(art.run(&[1], &mut cache).unwrap());
                 });
                 report(&r);
+                benches.push(json_bench(&r));
             }
         }
+    }
+
+    if let Some(path) = json_path {
+        let doc = format!(
+            "{{\n  \"schema\": \"quik-hotpath-bench/v1\",\n  \"benches\": [\n{}\n  ],\n  \"derived\": [\n{}\n  ]\n}}\n",
+            benches.join(",\n"),
+            derived.join(",\n")
+        );
+        std::fs::write(&path, doc).expect("write --json baseline");
+        println!("wrote {path}");
     }
 }

@@ -83,8 +83,21 @@ pub trait KvCache {
     fn len(&self) -> usize;
 
     /// Roll the logical length backward (or forward over known-valid
-    /// entries).  Positions `>= len` become writable garbage.
+    /// entries).  Positions `>= len` become writable garbage.  Rolling
+    /// *past the cache capacity* is a caller bug; backends should refuse
+    /// it loudly (the native cache debug-asserts) rather than clamp
+    /// silently.
     fn set_len(&mut self, len: usize);
+
+    /// Set one row's logical length.  After a right-padded mixed-length
+    /// prefill, schedulers roll each row back to its *true* prompt
+    /// length so the row decodes at its own positions and never attends
+    /// pad KV — batched decode becomes bit-exact with solo decode.
+    /// Backends without per-row cache lengths may ignore this call and
+    /// keep the pad-KV approximation (the default implementation).
+    fn set_row_len(&mut self, row: usize, len: usize) {
+        let _ = (row, len);
+    }
 
     fn is_empty(&self) -> bool {
         self.len() == 0

@@ -15,13 +15,23 @@
 //! forward serves the FP32 reference stack, the QUIK-quantized stack and
 //! the calibration pass that captures per-layer activations for outlier
 //! selection.
+//!
+//! Two hot-path properties of this module:
+//!
+//! * every intermediate (`rmsnorm` outputs, projections, attention
+//!   accumulators, rotated head slices, score rows) lives in a reusable
+//!   [`ForwardScratch`] threaded through [`forward_pass`] — a step
+//!   allocates only its returned logits once the scratch is warm;
+//! * the KV cache tracks a *per-row* logical length, so a short row in a
+//!   right-padded mixed-length batch decodes at its own positions and
+//!   never attends pad KV — batched decode is bit-exact with solo decode.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use super::linear::QuikLinear;
+use super::linear::{LinearScratch, QuikLinear};
 use super::model::{LayerWeights, NativeCheckpoint, NativeConfig};
 use crate::backend::{KvCache, StepOutput};
 
@@ -98,24 +108,43 @@ impl Linear {
     }
 }
 
-/// How a forward pass executes its linear layers.
+/// How a forward pass executes its linear layers.  `out` is cleared and
+/// resized by the implementation; `lin` is the shared quantization
+/// scratch (FP32 implementations ignore it).
 pub(crate) trait LinearSet {
-    fn apply(&self, layer: usize, which: Linear, x: &[f32], m: usize) -> Vec<f32>;
+    fn apply(
+        &self,
+        layer: usize,
+        which: Linear,
+        x: &[f32],
+        m: usize,
+        lin: &mut LinearScratch,
+        out: &mut Vec<f32>,
+    );
 }
 
 /// FP32 reference linears straight off the checkpoint.
 pub(crate) struct FpLinears<'a>(pub &'a NativeCheckpoint);
 
 impl LinearSet for FpLinears<'_> {
-    fn apply(&self, layer: usize, which: Linear, x: &[f32], m: usize) -> Vec<f32> {
+    fn apply(
+        &self,
+        layer: usize,
+        which: Linear,
+        x: &[f32],
+        m: usize,
+        _lin: &mut LinearScratch,
+        out: &mut Vec<f32>,
+    ) {
         let cfg = &self.0.config;
-        matmul_f32(
+        matmul_f32_into(
             x,
             which.weights(&self.0.layers[layer]),
             m,
             which.out_features(cfg),
             which.in_features(cfg),
-        )
+            out,
+        );
     }
 }
 
@@ -137,13 +166,24 @@ impl QuikStack {
 pub(crate) struct QuikLinears<'a>(pub &'a QuikStack);
 
 impl LinearSet for QuikLinears<'_> {
-    fn apply(&self, layer: usize, which: Linear, x: &[f32], m: usize) -> Vec<f32> {
-        self.0.layers[layer][which.index()].forward(x, m)
+    fn apply(
+        &self,
+        layer: usize,
+        which: Linear,
+        x: &[f32],
+        m: usize,
+        lin: &mut LinearScratch,
+        out: &mut Vec<f32>,
+    ) {
+        self.0.layers[layer][which.index()].forward_into(x, m, lin, out);
     }
 }
 
 /// Calibration recorder: applies FP32 and captures each linear's input
-/// activations, keyed by `(block, Linear::index())`.
+/// activations, keyed by `(block, Linear::index())`.  Activations
+/// *accumulate* across forward passes, so multi-batch calibration feeds
+/// every captured row into outlier selection (an `insert` here would
+/// silently keep only the last batch).
 pub(crate) struct CalibLinears<'a> {
     ckpt: &'a NativeCheckpoint,
     store: RefCell<HashMap<(usize, usize), (Vec<f32>, usize)>>,
@@ -160,17 +200,44 @@ impl<'a> CalibLinears<'a> {
 }
 
 impl LinearSet for CalibLinears<'_> {
-    fn apply(&self, layer: usize, which: Linear, x: &[f32], m: usize) -> Vec<f32> {
-        self.store.borrow_mut().insert((layer, which.index()), (x.to_vec(), m));
-        FpLinears(self.ckpt).apply(layer, which, x, m)
+    fn apply(
+        &self,
+        layer: usize,
+        which: Linear,
+        x: &[f32],
+        m: usize,
+        lin: &mut LinearScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let mut store = self.store.borrow_mut();
+        let entry = store.entry((layer, which.index())).or_insert_with(|| (Vec::new(), 0));
+        entry.0.extend_from_slice(x);
+        entry.1 += m;
+        drop(store);
+        FpLinears(self.ckpt).apply(layer, which, x, m, lin, out);
     }
 }
 
 /// `y[m,n] = x[m,k] @ w[n,k]^T` in FP32 (row-major, checked shapes).
 pub(crate) fn matmul_f32(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut y = Vec::new();
+    matmul_f32_into(x, w, m, n, k, &mut y);
+    y
+}
+
+/// [`matmul_f32`] into a reused output buffer (cleared + resized).
+pub(crate) fn matmul_f32_into(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    y: &mut Vec<f32>,
+) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), n * k);
-    let mut y = vec![0f32; m * n];
+    y.clear();
+    y.resize(m * n, 0.0);
     for i in 0..m {
         let xrow = &x[i * k..(i + 1) * k];
         for j in 0..n {
@@ -182,16 +249,22 @@ pub(crate) fn matmul_f32(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> 
             y[i * n + j] = s;
         }
     }
-    y
 }
 
 /// Fixed-capacity KV cache laid out
 /// `[n_layers, batch, n_kv_heads, max_ctx, d_head]`.
+///
+/// The logical length is tracked **per row**: after a right-padded
+/// mixed-length prefill the scheduler sets each row back to its true
+/// prompt length, and subsequent decode steps append at per-row
+/// positions — a short row's cache content and RoPE positions are then
+/// identical to a solo run, so batched decode is bit-exact (no pad-KV
+/// approximation).  [`KvCache::len`] reports the longest row.
 #[derive(Debug, Clone)]
 pub struct NativeKvCache {
     k: Vec<f32>,
     v: Vec<f32>,
-    len: usize,
+    row_len: Vec<usize>,
     pub batch: usize,
     n_kv_heads: usize,
     max_ctx: usize,
@@ -204,7 +277,7 @@ impl NativeKvCache {
         Self {
             k: vec![0f32; elems],
             v: vec![0f32; elems],
-            len: 0,
+            row_len: vec![0; batch],
             batch,
             n_kv_heads: cfg.n_kv_heads,
             max_ctx: cfg.max_seq,
@@ -221,18 +294,66 @@ impl NativeKvCache {
 
 impl KvCache for NativeKvCache {
     fn len(&self) -> usize {
-        self.len
+        self.row_len.iter().copied().max().unwrap_or(0)
     }
 
+    /// Rolling the logical length *past capacity* is a caller bug (a
+    /// rollback bookkeeping error would otherwise corrupt replay
+    /// invariants invisibly): debug builds panic on it; release builds
+    /// saturate at `max_ctx` and the next `forward` fails its context
+    /// check instead of replaying garbage.
     fn set_len(&mut self, len: usize) {
-        self.len = len.min(self.max_ctx);
+        debug_assert!(
+            len <= self.max_ctx,
+            "set_len({len}) rolls past cache capacity {}",
+            self.max_ctx
+        );
+        self.row_len.fill(len.min(self.max_ctx));
+    }
+
+    fn set_row_len(&mut self, row: usize, len: usize) {
+        debug_assert!(
+            len <= self.max_ctx,
+            "set_row_len({row}, {len}) rolls past cache capacity {}",
+            self.max_ctx
+        );
+        self.row_len[row] = len.min(self.max_ctx);
     }
 }
 
+/// Reusable buffers for every intermediate of one forward step: the
+/// residual stream, norm outputs, projections, attention accumulators,
+/// rotated head slices, score rows and the shared [`LinearScratch`].
+/// Threaded through [`forward_pass`] so the 7 linears × `n_layers` of a
+/// step run without per-call heap allocation once the buffers have grown
+/// to the serving shape (the backend keeps one per instance).
+#[derive(Debug, Default)]
+pub struct ForwardScratch {
+    lin: LinearScratch,
+    x: Vec<f32>,  // residual stream [m, d]
+    h: Vec<f32>,  // rmsnorm output [m, d] (attention and MLP norms)
+    qp: Vec<f32>, // Q projection [m, d]
+    kp: Vec<f32>, // K projection [m, kv_dim]
+    vp: Vec<f32>, // V projection [m, kv_dim]
+    attn: Vec<f32>,
+    o: Vec<f32>,
+    g: Vec<f32>,
+    u: Vec<f32>,
+    act: Vec<f32>,
+    dn: Vec<f32>,
+    qr: Vec<f32>,     // rotated query head [d_head]
+    kr: Vec<f32>,     // rotated key head [d_head]
+    scores: Vec<f32>, // attention score row [max context]
+    xf: Vec<f32>,     // final-norm output [m, d]
+    inv_freq: Vec<f32>,
+}
+
 /// RoPE inverse frequencies for a head dimension — constant per config,
-/// computed once per forward step instead of per (layer, head, pair).
-fn rope_inv_freq(dh: usize) -> Vec<f32> {
-    (0..dh / 2).map(|i| 10000f32.powf(-((2 * i) as f32) / dh as f32)).collect()
+/// recomputed into the scratch buffer each step (cheap) instead of per
+/// (layer, head, pair), with no per-call allocation.
+fn rope_inv_freq_into(dh: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend((0..dh / 2).map(|i| 10000f32.powf(-((2 * i) as f32) / dh as f32)));
 }
 
 /// Rotary position embedding applied in place to one head slice.
@@ -246,9 +367,10 @@ fn rope_in_place(v: &mut [f32], pos: usize, inv_freq: &[f32]) {
     }
 }
 
-/// `x / sqrt(mean(x²) + eps) * w`, per row.
-fn rmsnorm(x: &[f32], w: &[f32], m: usize, d: usize) -> Vec<f32> {
-    let mut out = vec![0f32; m * d];
+/// `x / sqrt(mean(x²) + eps) * w`, per row, into a reused buffer.
+fn rmsnorm_into(x: &[f32], w: &[f32], m: usize, d: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(m * d, 0.0);
     for row in 0..m {
         let xs = &x[row * d..(row + 1) * d];
         let mut ss = 0f32;
@@ -261,7 +383,6 @@ fn rmsnorm(x: &[f32], w: &[f32], m: usize, d: usize) -> Vec<f32> {
             dst[i] = xs[i] * w[i] / denom;
         }
     }
-    out
 }
 
 fn silu(x: f32) -> f32 {
@@ -281,15 +402,18 @@ fn softmax_in_place(s: &mut [f32]) {
 }
 
 /// One forward step over `[batch, seq]` tokens against the KV cache.
-/// Positions beyond the cache's logical length are overwritten; attention
-/// for the token at global position `p` spans cache entries `0..=p`
-/// (causal by construction).
+/// Each row appends at *its own* logical length: row `b`'s token `t`
+/// sits at position `row_len[b] + t`, and its attention spans cache
+/// entries `0..=pos` (causal by construction).  Positions at or beyond a
+/// row's length are overwritten, so rolled-back and pad entries are
+/// never attended.
 pub(crate) fn forward_pass(
     ckpt: &NativeCheckpoint,
     linears: &dyn LinearSet,
     tokens: &[i32],
     batch: usize,
     cache: &mut NativeKvCache,
+    s: &mut ForwardScratch,
 ) -> Result<StepOutput> {
     let cfg = &ckpt.config;
     if batch == 0 || tokens.is_empty() || tokens.len() % batch != 0 {
@@ -299,9 +423,9 @@ pub(crate) fn forward_pass(
         bail!("cache batch {} != step batch {batch}", cache.batch);
     }
     let seq = tokens.len() / batch;
-    let p0 = cache.len();
-    if p0 + seq > cfg.max_seq {
-        bail!("context overflow: cache {} + step {seq} > max_seq {}", p0, cfg.max_seq);
+    let p0_max = cache.len();
+    if p0_max + seq > cfg.max_seq {
+        bail!("context overflow: cache {} + step {seq} > max_seq {}", p0_max, cfg.max_seq);
     }
     let d = cfg.d_model;
     let dh = cfg.d_head();
@@ -309,58 +433,67 @@ pub(crate) fn forward_pass(
     let n_heads = cfg.n_heads;
     let group = n_heads / cfg.n_kv_heads;
     let att_scale = (1.0 / (dh as f64).sqrt()) as f32;
-    let inv_freq = rope_inv_freq(dh);
+    rope_inv_freq_into(dh, &mut s.inv_freq);
     let m = batch * seq;
+    s.qr.clear();
+    s.qr.resize(dh, 0.0);
+    s.kr.clear();
+    s.kr.resize(dh, 0.0);
+    s.scores.clear();
+    s.scores.resize(p0_max + seq, 0.0);
 
     // ---- embedding ------------------------------------------------------
-    let mut x = vec![0f32; m * d];
+    s.x.clear();
+    s.x.resize(m * d, 0.0);
     for (i, &t) in tokens.iter().enumerate() {
         if t < 0 || t as usize >= cfg.vocab {
             bail!("token {t} outside vocab {}", cfg.vocab);
         }
         let t = t as usize;
-        x[i * d..(i + 1) * d].copy_from_slice(&ckpt.embedding[t * d..(t + 1) * d]);
+        s.x[i * d..(i + 1) * d].copy_from_slice(&ckpt.embedding[t * d..(t + 1) * d]);
     }
 
     // ---- blocks ---------------------------------------------------------
     for (l, lw) in ckpt.layers.iter().enumerate() {
-        let h = rmsnorm(&x, &lw.attn_norm, m, d);
-        let q = linears.apply(l, Linear::Q, &h, m);
-        let kk = linears.apply(l, Linear::K, &h, m);
-        let vv = linears.apply(l, Linear::V, &h, m);
+        rmsnorm_into(&s.x, &lw.attn_norm, m, d, &mut s.h);
+        linears.apply(l, Linear::Q, &s.h, m, &mut s.lin, &mut s.qp);
+        linears.apply(l, Linear::K, &s.h, m, &mut s.lin, &mut s.kp);
+        linears.apply(l, Linear::V, &s.h, m, &mut s.lin, &mut s.vp);
 
-        let mut attn = vec![0f32; m * d];
+        s.attn.clear();
+        s.attn.resize(m * d, 0.0);
         for b in 0..batch {
+            let p0 = cache.row_len[b];
             for t in 0..seq {
                 let row = b * seq + t;
                 let pos = p0 + t;
                 // write this position's K (rotated) and V into the cache
                 for kv_i in 0..cfg.n_kv_heads {
-                    let src = &kk[row * kvd + kv_i * dh..row * kvd + (kv_i + 1) * dh];
-                    let mut kr = src.to_vec();
-                    rope_in_place(&mut kr, pos, &inv_freq);
+                    let src = &s.kp[row * kvd + kv_i * dh..row * kvd + (kv_i + 1) * dh];
+                    s.kr.copy_from_slice(src);
+                    rope_in_place(&mut s.kr, pos, &s.inv_freq);
                     let ci = cache.idx(l, b, kv_i, pos);
-                    cache.k[ci..ci + dh].copy_from_slice(&kr);
-                    let vsrc = &vv[row * kvd + kv_i * dh..row * kvd + (kv_i + 1) * dh];
+                    cache.k[ci..ci + dh].copy_from_slice(&s.kr);
+                    let vsrc = &s.vp[row * kvd + kv_i * dh..row * kvd + (kv_i + 1) * dh];
                     cache.v[ci..ci + dh].copy_from_slice(vsrc);
                 }
                 // attend: query at `pos` over cache positions 0..=pos
                 for head in 0..n_heads {
-                    let mut qr = q[row * d + head * dh..row * d + (head + 1) * dh].to_vec();
-                    rope_in_place(&mut qr, pos, &inv_freq);
+                    s.qr.copy_from_slice(&s.qp[row * d + head * dh..row * d + (head + 1) * dh]);
+                    rope_in_place(&mut s.qr, pos, &s.inv_freq);
                     let kv_i = head / group;
                     let ctx = pos + 1;
-                    let mut scores = vec![0f32; ctx];
+                    let scores = &mut s.scores[..ctx];
                     for (p, sc) in scores.iter_mut().enumerate() {
                         let ci = cache.idx(l, b, kv_i, p);
-                        let mut s = 0f32;
+                        let mut sum = 0f32;
                         for e in 0..dh {
-                            s += cache.k[ci + e] * qr[e];
+                            sum += cache.k[ci + e] * s.qr[e];
                         }
-                        *sc = s * att_scale;
+                        *sc = sum * att_scale;
                     }
-                    softmax_in_place(&mut scores);
-                    let out = &mut attn[row * d + head * dh..row * d + (head + 1) * dh];
+                    softmax_in_place(scores);
+                    let out = &mut s.attn[row * d + head * dh..row * d + (head + 1) * dh];
                     for (p, &wgt) in scores.iter().enumerate() {
                         let ci = cache.idx(l, b, kv_i, p);
                         for e in 0..dh {
@@ -370,28 +503,31 @@ pub(crate) fn forward_pass(
                 }
             }
         }
-        let o = linears.apply(l, Linear::O, &attn, m);
-        for (xv, ov) in x.iter_mut().zip(&o) {
+        linears.apply(l, Linear::O, &s.attn, m, &mut s.lin, &mut s.o);
+        for (xv, ov) in s.x.iter_mut().zip(&s.o) {
             *xv += ov;
         }
 
-        let h2 = rmsnorm(&x, &lw.mlp_norm, m, d);
-        let g = linears.apply(l, Linear::Gate, &h2, m);
-        let u = linears.apply(l, Linear::Up, &h2, m);
-        let mut act = vec![0f32; m * cfg.d_ff];
-        for (a, (&gv, &uv)) in act.iter_mut().zip(g.iter().zip(&u)) {
+        rmsnorm_into(&s.x, &lw.mlp_norm, m, d, &mut s.h);
+        linears.apply(l, Linear::Gate, &s.h, m, &mut s.lin, &mut s.g);
+        linears.apply(l, Linear::Up, &s.h, m, &mut s.lin, &mut s.u);
+        s.act.clear();
+        s.act.resize(m * cfg.d_ff, 0.0);
+        for (a, (&gv, &uv)) in s.act.iter_mut().zip(s.g.iter().zip(&s.u)) {
             *a = silu(gv) * uv;
         }
-        let dn = linears.apply(l, Linear::Down, &act, m);
-        for (xv, dv) in x.iter_mut().zip(&dn) {
+        linears.apply(l, Linear::Down, &s.act, m, &mut s.lin, &mut s.dn);
+        for (xv, dv) in s.x.iter_mut().zip(&s.dn) {
             *xv += dv;
         }
     }
 
     // ---- head -----------------------------------------------------------
-    let xf = rmsnorm(&x, &ckpt.final_norm, m, d);
-    let logits = matmul_f32(&xf, &ckpt.lm_head, m, cfg.vocab, d);
-    cache.set_len(p0 + seq);
+    rmsnorm_into(&s.x, &ckpt.final_norm, m, d, &mut s.xf);
+    let logits = matmul_f32(&s.xf, &ckpt.lm_head, m, cfg.vocab, d);
+    for len in cache.row_len.iter_mut() {
+        *len += seq;
+    }
     Ok(StepOutput { logits, batch, seq, vocab: cfg.vocab })
 }
 
@@ -414,12 +550,21 @@ mod tests {
         )
     }
 
+    fn fwd(
+        ck: &NativeCheckpoint,
+        linears: &dyn LinearSet,
+        tokens: &[i32],
+        batch: usize,
+        cache: &mut NativeKvCache,
+    ) -> Result<StepOutput> {
+        forward_pass(ck, linears, tokens, batch, cache, &mut ForwardScratch::default())
+    }
+
     #[test]
     fn forward_shapes_and_cache_advance() {
         let ck = tiny();
         let mut cache = NativeKvCache::new(&ck.config, 2);
-        let out =
-            forward_pass(&ck, &FpLinears(&ck), &[1, 2, 3, 4, 5, 6], 2, &mut cache).unwrap();
+        let out = fwd(&ck, &FpLinears(&ck), &[1, 2, 3, 4, 5, 6], 2, &mut cache).unwrap();
         assert_eq!((out.batch, out.seq, out.vocab), (2, 3, 16));
         assert_eq!(out.logits.len(), 2 * 3 * 16);
         assert_eq!(cache.len(), 3);
@@ -430,12 +575,12 @@ mod tests {
     fn rejects_bad_tokens_and_overflow() {
         let ck = tiny();
         let mut cache = NativeKvCache::new(&ck.config, 1);
-        assert!(forward_pass(&ck, &FpLinears(&ck), &[99], 1, &mut cache).is_err());
-        assert!(forward_pass(&ck, &FpLinears(&ck), &[-1], 1, &mut cache).is_err());
+        assert!(fwd(&ck, &FpLinears(&ck), &[99], 1, &mut cache).is_err());
+        assert!(fwd(&ck, &FpLinears(&ck), &[-1], 1, &mut cache).is_err());
         cache.set_len(16);
-        assert!(forward_pass(&ck, &FpLinears(&ck), &[1], 1, &mut cache).is_err());
+        assert!(fwd(&ck, &FpLinears(&ck), &[1], 1, &mut cache).is_err());
         let mut wrong_batch = NativeKvCache::new(&ck.config, 2);
-        assert!(forward_pass(&ck, &FpLinears(&ck), &[1], 1, &mut wrong_batch).is_err());
+        assert!(fwd(&ck, &FpLinears(&ck), &[1], 1, &mut wrong_batch).is_err());
     }
 
     #[test]
@@ -445,11 +590,11 @@ mod tests {
         let ck = tiny();
         let prompt = [3, 7, 11];
         let mut solo_cache = NativeKvCache::new(&ck.config, 1);
-        let solo = forward_pass(&ck, &FpLinears(&ck), &prompt, 1, &mut solo_cache).unwrap();
+        let solo = fwd(&ck, &FpLinears(&ck), &prompt, 1, &mut solo_cache).unwrap();
         let mut both = prompt.to_vec();
         both.extend([1, 1, 1]);
         let mut pair_cache = NativeKvCache::new(&ck.config, 2);
-        let pair = forward_pass(&ck, &FpLinears(&ck), &both, 2, &mut pair_cache).unwrap();
+        let pair = fwd(&ck, &FpLinears(&ck), &both, 2, &mut pair_cache).unwrap();
         for pos in 0..3 {
             assert_eq!(solo.row(0, pos), pair.row(0, pos), "row 0 diverged at {pos}");
         }
@@ -461,10 +606,10 @@ mod tests {
         let ck = tiny();
         let toks = [5, 9, 2];
         let mut cache_a = NativeKvCache::new(&ck.config, 1);
-        let multi = forward_pass(&ck, &FpLinears(&ck), &toks, 1, &mut cache_a).unwrap();
+        let multi = fwd(&ck, &FpLinears(&ck), &toks, 1, &mut cache_a).unwrap();
         let mut cache_b = NativeKvCache::new(&ck.config, 1);
         for (i, &t) in toks.iter().enumerate() {
-            let step = forward_pass(&ck, &FpLinears(&ck), &[t], 1, &mut cache_b).unwrap();
+            let step = fwd(&ck, &FpLinears(&ck), &[t], 1, &mut cache_b).unwrap();
             assert_eq!(step.row(0, 0), multi.row(0, i), "position {i} diverged");
         }
         assert_eq!(cache_a.len(), cache_b.len());
@@ -474,11 +619,44 @@ mod tests {
     fn rollback_replay_is_exact() {
         let ck = tiny();
         let mut cache = NativeKvCache::new(&ck.config, 1);
-        forward_pass(&ck, &FpLinears(&ck), &[4, 8], 1, &mut cache).unwrap();
-        let a = forward_pass(&ck, &FpLinears(&ck), &[3], 1, &mut cache).unwrap();
+        fwd(&ck, &FpLinears(&ck), &[4, 8], 1, &mut cache).unwrap();
+        let a = fwd(&ck, &FpLinears(&ck), &[3], 1, &mut cache).unwrap();
         cache.set_len(2); // roll the speculative token back
-        let b = forward_pass(&ck, &FpLinears(&ck), &[3], 1, &mut cache).unwrap();
+        let b = fwd(&ck, &FpLinears(&ck), &[3], 1, &mut cache).unwrap();
         assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn per_row_lengths_make_padded_decode_exact() {
+        // A short row in a right-padded mixed-length batch must decode
+        // bit-exactly like a solo run once its row length is rolled back.
+        let ck = tiny();
+        let short = [3, 7];
+        let long = [5, 9, 2, 11];
+        // solo reference for the short prompt
+        let mut solo_cache = NativeKvCache::new(&ck.config, 1);
+        fwd(&ck, &FpLinears(&ck), &short, 1, &mut solo_cache).unwrap();
+        let solo = fwd(&ck, &FpLinears(&ck), &[6], 1, &mut solo_cache).unwrap();
+        // batched: row 0 long, row 1 short right-padded with pad token 0
+        let mut tokens = long.to_vec();
+        tokens.extend(short);
+        tokens.extend([0, 0]);
+        let mut cache = NativeKvCache::new(&ck.config, 2);
+        fwd(&ck, &FpLinears(&ck), &tokens, 2, &mut cache).unwrap();
+        cache.set_len(long.len());
+        cache.set_row_len(1, short.len());
+        let step = fwd(&ck, &FpLinears(&ck), &[1, 6], 2, &mut cache).unwrap();
+        assert_eq!(step.row(1, 0), solo.row(0, 0), "padded row diverged from solo decode");
+        assert_eq!(cache.len(), long.len() + 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "past cache capacity")]
+    fn set_len_past_capacity_panics_in_debug() {
+        let ck = tiny();
+        let mut cache = NativeKvCache::new(&ck.config, 1);
+        cache.set_len(ck.config.max_seq + 1);
     }
 
     #[test]
@@ -486,11 +664,32 @@ mod tests {
         let ck = tiny();
         let calib = CalibLinears::new(&ck);
         let mut cache = NativeKvCache::new(&ck.config, 1);
-        forward_pass(&ck, &calib, &[1, 2, 3, 4], 1, &mut cache).unwrap();
+        fwd(&ck, &calib, &[1, 2, 3, 4], 1, &mut cache).unwrap();
         let store = calib.into_store();
         assert_eq!(store.len(), ck.config.n_layers * LINEARS.len());
         let (x, m) = &store[&(0, Linear::Down.index())];
         assert_eq!(*m, 4);
         assert_eq!(x.len(), 4 * ck.config.d_ff);
+    }
+
+    #[test]
+    fn calibration_accumulates_across_batches() {
+        // Regression: `apply` used to `insert`, keeping only the last
+        // captured batch per (layer, linear) — multi-batch calibration
+        // must feed *all* activations into outlier selection.
+        let ck = tiny();
+        let calib = CalibLinears::new(&ck);
+        let mut c1 = NativeKvCache::new(&ck.config, 1);
+        fwd(&ck, &calib, &[1, 2, 3], 1, &mut c1).unwrap();
+        let mut c2 = NativeKvCache::new(&ck.config, 1);
+        fwd(&ck, &calib, &[4, 5], 1, &mut c2).unwrap();
+        let store = calib.into_store();
+        for l in 0..ck.config.n_layers {
+            for which in LINEARS {
+                let (x, m) = &store[&(l, which.index())];
+                assert_eq!(*m, 5, "layer {l} {which:?} lost a calibration batch");
+                assert_eq!(x.len(), 5 * which.in_features(&ck.config));
+            }
+        }
     }
 }

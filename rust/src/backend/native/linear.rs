@@ -4,19 +4,42 @@
 //! Offline (startup): calibration activations score each input feature by
 //! ℓ∞ norm, the top-N become outlier columns and a permutation moves them
 //! to the end of the feature axis (`quant::outlier`).  The base columns
-//! are quantized per-output-row symmetric (`quantize_weights`) and stored
+//! are quantized per-output-row symmetric (`quantize_weights`), stored
 //! *nibble-packed* for INT4 (`quant::int4`) — the real storage format the
-//! memory model charges for.  Outlier columns stay FP32.
+//! memory model charges for — **and** laid out once into the persistent
+//! panel-packed execution format ([`PackedWeights`]) the blocked kernel
+//! consumes.  Outlier columns stay FP32.
 //!
-//! Online (per token): the input is permuted, split, the base part is
-//! quantized per-token asymmetric (`quantize_acts`), multiplied in exact
-//! integer arithmetic (`int_matmul`) and dequantized through the fused
-//! Eq.-1 epilogue; the outlier part runs a small FP32 GEMM accumulated
-//! into the same output tile (Algorithm 1 line 8).
+//! Online (per token): [`QuikLinear::forward_into`] gathers the input
+//! directly into base/outlier scratch (one fused permute+split), runs the
+//! per-token asymmetric quantization into reused buffers
+//! (`quantize_acts_into`), then the blocked integer MatMul with the Eq.-1
+//! dequantization epilogue fused per output tile
+//! (`quik_matmul_prepacked`), and accumulates the small FP32 outlier GEMM
+//! (Algorithm 1 line 8).  Zero unpacking, zero clones and — once the
+//! scratch is warm — zero heap allocation per call; the output is
+//! bit-identical to the scalar [`quik_linear`] oracle, which
+//! [`QuikLinear::forward_unprepared`] preserves as the property-test
+//! reference and bench baseline.
 
 use crate::config::LayerPlan;
 use crate::quant::dequant::quik_linear;
-use crate::quant::{int4, outlier, quantize_weights, WeightQuant};
+use crate::quant::{
+    int4, outlier, quantize_acts_into, quantize_weights, quik_matmul_prepacked,
+    PackedWeights, WeightQuant,
+};
+
+/// Reusable per-call buffers for [`QuikLinear::forward_into`].  Buffers
+/// grow to the largest shape seen and are then reused — steady-state
+/// forwards allocate nothing.
+#[derive(Debug, Default)]
+pub struct LinearScratch {
+    x_base: Vec<f32>,
+    x_fp: Vec<f32>,
+    q: Vec<i8>,
+    a_scale: Vec<f32>,
+    a_zero: Vec<f32>,
+}
 
 /// A quantized linear: `y = x @ W^T` in the QUIK hybrid format.
 #[derive(Debug, Clone)]
@@ -29,10 +52,13 @@ pub struct QuikLinear {
     pub act_bits: u32,
     /// Column permutation applied to incoming activations (outliers last).
     perm: Vec<usize>,
-    /// INT4 path: nibble-packed `w_int` (`[n, k_base]`, row-major).
+    /// INT4 path: nibble-packed `w_int` (`[n, k_base]`, row-major) — the
+    /// canonical storage format.  Empty for INT8, whose canonical storage
+    /// *is* the `i8` values already held by `prepared` (no second copy).
     packed: Vec<u8>,
-    /// INT8 path: plain `i8` weights (empty when `weight_bits == 4`).
-    w_int8: Vec<i8>,
+    /// Persistent panel-packed execution layout (both bit widths) — built
+    /// once here, consumed directly by the blocked kernel at request time.
+    prepared: PackedWeights,
     scale: Vec<f32>,     // per output row
     w_reduced: Vec<f32>, // Eq.-1 shift term, per output row
     w_fp: Vec<f32>,      // [n, n_outlier] FP32 outlier columns
@@ -72,11 +98,9 @@ impl QuikLinear {
                 .copy_from_slice(&wp[row * k + k_base..(row + 1) * k]);
         }
         let wq = quantize_weights(&w_base, n, k_base, plan.weight_bits);
-        let (packed, w_int8) = if plan.weight_bits == 4 {
-            (int4::pack(&wq.w_int), Vec::new())
-        } else {
-            (Vec::new(), wq.w_int)
-        };
+        let prepared = PackedWeights::pack(&wq.w_int, n, k_base);
+        let packed =
+            if plan.weight_bits == 4 { int4::pack(&wq.w_int) } else { Vec::new() };
         QuikLinear {
             n,
             k,
@@ -86,25 +110,110 @@ impl QuikLinear {
             act_bits: plan.act_bits,
             perm,
             packed,
-            w_int8,
+            prepared,
             scale: wq.scale,
             w_reduced: wq.w_reduced,
             w_fp,
         }
     }
 
-    /// Forward `[m, k] -> [m, n]`: permute the input into outlier order,
-    /// unpack the nibble storage, and run [`crate::quant::dequant::quik_linear`]
-    /// — the same Algorithm-1 oracle the property tests pin down — for the
-    /// online activation quantization, integer MatMul, fused Eq.-1
-    /// dequantization and FP32 outlier accumulation.
+    /// Forward `[m, k] -> [m, n]` through the prepared layout, writing
+    /// into `out` and reusing `scratch` — the production hot path: fused
+    /// permute+split gather, in-place activation quantization, blocked
+    /// integer MatMul with the Eq.-1 epilogue fused per tile, FP32
+    /// outlier accumulation.  Zero heap allocation once the scratch has
+    /// warmed to this shape (`tests/alloc_hotpath.rs` pins this down);
+    /// bit-identical to [`QuikLinear::forward_unprepared`].
+    pub fn forward_into(
+        &self,
+        x: &[f32],
+        m: usize,
+        scratch: &mut LinearScratch,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(x.len(), m * self.k, "input must be [m, k] row-major");
+        let (kb, no, n) = (self.k_base, self.n_outlier, self.n);
+        // fused permute + base/outlier split: gather straight from the
+        // unpermuted input, no [m, k] intermediate
+        scratch.x_base.clear();
+        scratch.x_base.resize(m * kb, 0.0);
+        scratch.x_fp.clear();
+        scratch.x_fp.resize(m * no, 0.0);
+        for row in 0..m {
+            let src = &x[row * self.k..(row + 1) * self.k];
+            let dst = &mut scratch.x_base[row * kb..(row + 1) * kb];
+            for (d, &p) in dst.iter_mut().zip(&self.perm[..kb]) {
+                *d = src[p];
+            }
+            let dst = &mut scratch.x_fp[row * no..(row + 1) * no];
+            for (d, &p) in dst.iter_mut().zip(&self.perm[kb..]) {
+                *d = src[p];
+            }
+        }
+        // per-token asymmetric activation quantization into scratch
+        scratch.q.clear();
+        scratch.q.resize(m * kb, 0);
+        scratch.a_scale.clear();
+        scratch.a_scale.resize(m, 0.0);
+        scratch.a_zero.clear();
+        scratch.a_zero.resize(m, 0.0);
+        quantize_acts_into(
+            &scratch.x_base,
+            m,
+            kb,
+            self.act_bits,
+            &mut scratch.q,
+            &mut scratch.a_scale,
+            &mut scratch.a_zero,
+        );
+        // blocked integer MatMul + fused Eq.-1 dequantization epilogue
+        out.clear();
+        out.resize(m * n, 0.0);
+        quik_matmul_prepacked(
+            &scratch.q,
+            &scratch.a_scale,
+            &scratch.a_zero,
+            &self.prepared,
+            &self.scale,
+            &self.w_reduced,
+            m,
+            self.act_bits,
+            out,
+        );
+        // FP32 outlier GEMM accumulated into the tile (Algorithm 1 line 8)
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f32;
+                let wrow = &self.w_fp[j * no..(j + 1) * no];
+                for (xv, wv) in scratch.x_fp[i * no..(i + 1) * no].iter().zip(wrow) {
+                    s += xv * wv;
+                }
+                out[i * n + j] += s;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper around [`QuikLinear::forward_into`]
+    /// (tests and one-shot callers; serving reuses scratch).
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let mut scratch = LinearScratch::default();
+        let mut out = Vec::new();
+        self.forward_into(x, m, &mut scratch, &mut out);
+        out
+    }
+
+    /// The seed per-call-unpack implementation, kept as the property-test
+    /// oracle and the bench baseline: permute the whole input, unpack the
+    /// nibble storage into a fresh `WeightQuant`, and run the scalar
+    /// [`crate::quant::dequant::quik_linear`].  [`QuikLinear::forward_into`]
+    /// must stay bit-identical to this (asserted by `tests/proptests.rs`).
+    pub fn forward_unprepared(&self, x: &[f32], m: usize) -> Vec<f32> {
         assert_eq!(x.len(), m * self.k, "input must be [m, k] row-major");
         let xp = outlier::permute_columns(x, m, self.k, &self.perm);
         let w_int = if self.weight_bits == 4 {
             int4::unpack(&self.packed, self.n * self.k_base)
         } else {
-            self.w_int8.clone()
+            self.prepared.to_row_major()
         };
         let wq = WeightQuant {
             w_int,
@@ -117,11 +226,22 @@ impl QuikLinear {
         quik_linear(&xp, m, self.k, self.act_bits, &wq, &self.w_fp, self.n_outlier)
     }
 
-    /// Bytes of resident quantized storage: packed/int8 base weights plus
-    /// FP32 outlier columns, scales and the Eq.-1 shift term.
+    /// Bytes of resident quantized storage: nibble-packed INT4 (or one
+    /// byte per INT8) base weights plus FP32 outlier columns, scales and
+    /// the Eq.-1 shift term.  The INT4 execution layout is accounted
+    /// separately ([`QuikLinear::prepared_bytes`]) — a speed-for-memory
+    /// scratch on top of the checkpoint format the memory model charges
+    /// for; for INT8 the execution layout *is* the storage (panel
+    /// re-ordering only, no duplication).
     pub fn storage_bytes(&self) -> usize {
-        let base = if self.weight_bits == 4 { self.packed.len() } else { self.w_int8.len() };
+        let base =
+            if self.weight_bits == 4 { self.packed.len() } else { self.n * self.k_base };
         base + 4 * (self.w_fp.len() + self.scale.len() + self.w_reduced.len())
+    }
+
+    /// Bytes of the persistent panel-packed execution layout.
+    pub fn prepared_bytes(&self) -> usize {
+        self.prepared.bytes()
     }
 }
 
@@ -206,6 +326,41 @@ mod tests {
         assert_eq!(lin.k_base, 24);
         let fp32_bytes = 4 * n * k;
         assert!(lin.storage_bytes() < fp32_bytes / 2);
+    }
+
+    #[test]
+    fn prepared_forward_is_bitexact_with_unprepared_oracle() {
+        let (m, k, n) = (5, 40, 13); // n straddles the panel width
+        let mut rng = Rng::new(21);
+        let w = data(&mut rng, n, k, 1.0);
+        let calib = data(&mut rng, 8, k, 6.0);
+        let x = data(&mut rng, m, k, 6.0);
+        for (wb, ab) in [(4u32, 4u32), (8, 8)] {
+            let lin = QuikLinear::quantize(&w, n, k, plan(wb, ab, 10), &calib, 8);
+            let got = lin.forward(&x, m);
+            let want = lin.forward_unprepared(&x, m);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "prepared path diverged from the oracle at W{wb}A{ab}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_into_reuses_scratch_across_shapes() {
+        let (k, n) = (24, 9);
+        let mut rng = Rng::new(13);
+        let w = data(&mut rng, n, k, 1.0);
+        let calib = data(&mut rng, 8, k, 4.0);
+        let lin = QuikLinear::quantize(&w, n, k, plan(4, 4, 4), &calib, 8);
+        let mut scratch = LinearScratch::default();
+        let mut out = Vec::new();
+        for m in [4usize, 1, 6, 1] {
+            let x = data(&mut rng, m, k, 4.0);
+            lin.forward_into(&x, m, &mut scratch, &mut out);
+            assert_eq!(out, lin.forward_unprepared(&x, m), "m={m}");
+        }
     }
 
     #[test]

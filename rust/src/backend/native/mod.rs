@@ -7,10 +7,13 @@
 //!   through the paper's pipeline: a seeded calibration forward captures
 //!   per-layer activations, ℓ∞ scoring selects outlier columns
 //!   (`quant::outlier`), base columns are RTN-quantized per output row
-//!   (`quant::quantize_weights`) and stored nibble-packed
-//!   (`quant::int4`), and each request-time forward quantizes
-//!   activations per token and runs `quant::int_matmul` with the fused
-//!   Eq.-1 dequantization epilogue.
+//!   (`quant::quantize_weights`), stored nibble-packed (`quant::int4`)
+//!   and laid out once into the persistent panel-packed execution format
+//!   (`quant::PackedWeights`).  Each request-time forward quantizes
+//!   activations per token into reused scratch and runs the blocked
+//!   `quant::quik_matmul_prepacked` kernel (fused Eq.-1 dequantization
+//!   epilogue, bit-identical to the scalar `quant::int_matmul` oracle) —
+//!   no per-call unpacking, cloning or heap allocation.
 //!
 //! Unlike the PJRT artifact runtime, shapes are fully dynamic: any
 //! `[batch, seq]` step within the context budget is accepted, so the
@@ -20,6 +23,8 @@ pub mod forward;
 pub mod linear;
 pub mod model;
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Context, Result};
 
 use crate::backend::{InferenceBackend, Phase, StepOutput, Variant};
@@ -28,8 +33,8 @@ use crate::util::rng::Rng;
 
 use self::forward::{forward_pass, CalibLinears, FpLinears, QuikLinears, LINEARS};
 
-pub use self::forward::{Linear, NativeKvCache, QuikStack};
-pub use self::linear::QuikLinear;
+pub use self::forward::{ForwardScratch, Linear, NativeKvCache, QuikStack};
+pub use self::linear::{LinearScratch, QuikLinear};
 pub use self::model::{LayerWeights, NativeCheckpoint, NativeConfig};
 
 /// Seed + length of the deterministic calibration sample used for outlier
@@ -58,6 +63,11 @@ pub struct NativeBackend {
     ckpt: NativeCheckpoint,
     policy: QuikPolicy,
     quik: Option<QuikStack>,
+    /// Reusable step buffers (see [`ForwardScratch`]) — interior-mutable
+    /// because `forward` takes `&self`; the backend lives on one worker
+    /// thread, so a `RefCell` is sound and keeps steady-state steps free
+    /// of per-linear heap allocation.
+    scratch: RefCell<ForwardScratch>,
 }
 
 impl NativeBackend {
@@ -67,7 +77,13 @@ impl NativeBackend {
         policy: QuikPolicy,
     ) -> Result<Self> {
         ckpt.config.validate()?;
-        Ok(Self { name: name.into(), ckpt, policy, quik: None })
+        Ok(Self {
+            name: name.into(),
+            ckpt,
+            policy,
+            quik: None,
+            scratch: RefCell::new(ForwardScratch::default()),
+        })
     }
 
     /// Deterministic random checkpoint (see [`NativeCheckpoint::seeded`]).
@@ -126,7 +142,8 @@ impl NativeBackend {
             (0..calib_len).map(|_| rng.range_i32(0, cfg.vocab as i32 - 1)).collect();
         let calib = CalibLinears::new(&self.ckpt);
         let mut cache = NativeKvCache::new(&cfg, 1);
-        forward_pass(&self.ckpt, &calib, &tokens, 1, &mut cache)
+        let mut scratch = ForwardScratch::default();
+        forward_pass(&self.ckpt, &calib, &tokens, 1, &mut cache, &mut scratch)
             .context("calibration forward")?;
         let store = calib.into_store();
 
@@ -206,14 +223,17 @@ impl InferenceBackend for NativeBackend {
         batch: usize,
         cache: &mut NativeKvCache,
     ) -> Result<StepOutput> {
+        let mut scratch = self.scratch.borrow_mut();
         match variant {
-            Variant::Fp16 => forward_pass(&self.ckpt, &FpLinears(&self.ckpt), tokens, batch, cache),
+            Variant::Fp16 => {
+                forward_pass(&self.ckpt, &FpLinears(&self.ckpt), tokens, batch, cache, &mut scratch)
+            }
             Variant::Quik4 => {
                 let stack = self
                     .quik
                     .as_ref()
                     .context("quik4 stack not built — call prepare(Quik4, ..) first")?;
-                forward_pass(&self.ckpt, &QuikLinears(stack), tokens, batch, cache)
+                forward_pass(&self.ckpt, &QuikLinears(stack), tokens, batch, cache, &mut scratch)
             }
         }
     }

@@ -10,10 +10,14 @@
 //!
 //! Each row's first sampled token comes from the logits at *its own* last
 //! prompt position, so shorter prompts in a bucket are not silently
-//! truncated to the batch minimum.  Positions between a short row's true
-//! length and the batch maximum hold pad-token KV entries during decode —
-//! the standard static-batching compromise (buckets keep the gap below
-//! the bucket granularity).
+//! truncated to the batch minimum.  After prefill every row is rolled
+//! back to its true prompt length via [`KvCache::set_row_len`]: backends
+//! with per-row cache lengths (the native backend) then decode each row
+//! at its own positions, making mixed-length batches bit-exact with solo
+//! runs.  Backends without per-row lengths (static PJRT artifacts) keep
+//! the classic static-batching approximation — pad-token KV between a
+//! short row's true length and the batch maximum (buckets keep that gap
+//! below the bucket granularity).
 
 use std::time::Instant;
 
@@ -75,9 +79,17 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
         let t0 = Instant::now();
         let out = self.backend.forward(self.variant, Phase::Prefill, &tokens, b, &mut cache)?;
         let prefill_time = t0.elapsed();
-        // Roll the shared cache position back to the longest true prompt:
-        // pad positions beyond it are masked and overwritten by decode.
+        // Roll the shared cache position back to the longest true prompt,
+        // then each row back to its *own* prompt length: backends with
+        // per-row cache lengths (the native backend) decode every row at
+        // its true positions — no pad KV is ever attended, so a short
+        // row's stream is bit-exact with a solo run.  Backends without
+        // per-row lengths ignore the per-row calls and keep the
+        // documented pad-KV approximation.
         cache.set_len(max_prompt);
+        for (row, req) in plan.requests.iter().enumerate() {
+            cache.set_row_len(row, req.prompt_len());
+        }
 
         // ---- greedy decode ----------------------------------------------
         // Each row's first token is sampled at its *own* last prompt

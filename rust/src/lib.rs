@@ -15,11 +15,15 @@
 //!   * [`backend`] — the [`backend::InferenceBackend`] trait plus two
 //!     implementations: [`backend::native`], a pure-Rust CPU transformer
 //!     forward (RMSNorm → RoPE/GQA attention over a real KV cache →
-//!     SwiGLU MLP) whose linears run the QUIK pipeline from [`quant`]
-//!     (nibble-packed INT4 weights, per-token activation quantization,
-//!     fused Eq.-1 dequantization, FP32 outlier columns), quantizing an
-//!     FP32 checkpoint at startup; and `backend::pjrt` (behind the `pjrt`
-//!     cargo feature), which replays the L2 artifacts through PJRT;
+//!     SwiGLU MLP) whose linears run the QUIK pipeline from [`quant`]:
+//!     weights quantized at startup into nibble-packed INT4 storage
+//!     *plus* a persistent panel-packed execution layout, then served by
+//!     per-token activation quantization into reused scratch and a
+//!     blocked integer MatMul with the Eq.-1 dequantization epilogue
+//!     fused per tile (no per-call unpacking or allocation; bit-identical
+//!     to the scalar oracle) with FP32 outlier columns accumulated on
+//!     top; and `backend::pjrt` (behind the `pjrt` cargo feature), which
+//!     replays the L2 artifacts through PJRT;
 //!   * [`coordinator`] — dynamic batcher + scheduler + speculative
 //!     decoder + TCP front-end, generic over the backend trait;
 //!   * [`quant`] — the native QUIK quantization substrate (shared by both

@@ -1,7 +1,16 @@
 //! Integer MatMul + Eq.-1 dequantization (Algorithm 1 `Dequantization`).
 //!
-//! The CPU-side mirror of the Pallas fused epilogue — used by the
-//! coordinator's self-checks and as the reference in the property tests:
+//! Two implementations live here and are kept bit-identical:
+//!
+//! * the scalar triple loop ([`int_matmul`] / [`dequantize`] /
+//!   [`quik_linear`]) — the correctness oracle the property tests and
+//!   the coordinator self-checks pin down;
+//! * the blocked production kernel ([`PackedWeights`] +
+//!   [`int_matmul_blocked`] / [`quik_matmul_prepacked`]) — panel-packed
+//!   weights in a `[n_tile, k_tile]` execution layout with the Eq.-1
+//!   epilogue fused per output tile.  i32 accumulation is exact, so the
+//!   blocked schedule produces the same accumulator (and therefore the
+//!   same f32 output) as the scalar oracle, bit for bit.
 //!
 //! ```text
 //! y[m,n] = acc[m,n] * scaleAct[m] * scaleW[n]
@@ -10,6 +19,135 @@
 
 use super::quantizer::{ActQuant, WeightQuant};
 use super::half_range;
+
+/// Output rows per packed panel (the register-blocking factor of the
+/// blocked kernel: one i32 accumulator lane per panel row).
+pub const PANEL_ROWS: usize = 8;
+
+/// Quantized weights in the blocked execution layout the production
+/// kernel consumes directly: panels of [`PANEL_ROWS`] output rows,
+/// column-major *within* a panel (`data[panel][kk][jr]`), trailing panel
+/// zero-padded.  Built once at quantize time — `forward` never unpacks
+/// or re-lays-out weights again.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    data: Vec<i8>,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl PackedWeights {
+    /// Pack a `[n, k]` row-major `i8` weight matrix into panels.
+    pub fn pack(w_int: &[i8], n: usize, k: usize) -> PackedWeights {
+        assert_eq!(w_int.len(), n * k, "w_int must be [n, k] row-major");
+        let panels = n.div_ceil(PANEL_ROWS);
+        let mut data = vec![0i8; panels * k * PANEL_ROWS];
+        for jp in 0..panels {
+            let base = jp * k * PANEL_ROWS;
+            for jr in 0..PANEL_ROWS.min(n - jp * PANEL_ROWS) {
+                let row = &w_int[(jp * PANEL_ROWS + jr) * k..(jp * PANEL_ROWS + jr + 1) * k];
+                for (kk, &w) in row.iter().enumerate() {
+                    data[base + kk * PANEL_ROWS + jr] = w;
+                }
+            }
+        }
+        PackedWeights { data, n, k }
+    }
+
+    /// Resident bytes of the packed execution layout.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Reconstruct the `[n, k]` row-major weights (inverse of [`PackedWeights::pack`],
+    /// dropping panel padding) — diagnostics and oracle paths only, never
+    /// the hot path.
+    pub fn to_row_major(&self) -> Vec<i8> {
+        let mut w = vec![0i8; self.n * self.k];
+        for j in 0..self.n {
+            let (jp, jr) = (j / PANEL_ROWS, j % PANEL_ROWS);
+            let base = jp * self.k * PANEL_ROWS;
+            for (kk, wv) in w[j * self.k..(j + 1) * self.k].iter_mut().enumerate() {
+                *wv = self.data[base + kk * PANEL_ROWS + jr];
+            }
+        }
+        w
+    }
+}
+
+/// Blocked `acc[m,n] = Σ_k qx[m,k] * qw[n,k]` over panel-packed weights,
+/// bit-identical to [`int_matmul`] (integer accumulation is exact under
+/// any summation order).  Writes into `acc` (resized, no reallocation in
+/// steady state).
+pub fn int_matmul_blocked(qx: &[i8], pw: &PackedWeights, m: usize, acc: &mut Vec<i32>) {
+    let (n, k) = (pw.n, pw.k);
+    assert_eq!(qx.len(), m * k);
+    acc.clear();
+    acc.resize(m * n, 0);
+    for jp in 0..n.div_ceil(PANEL_ROWS) {
+        let panel = &pw.data[jp * k * PANEL_ROWS..(jp + 1) * k * PANEL_ROWS];
+        let j0 = jp * PANEL_ROWS;
+        let jn = PANEL_ROWS.min(n - j0);
+        for i in 0..m {
+            let mut lanes = [0i32; PANEL_ROWS];
+            panel_dot(&qx[i * k..(i + 1) * k], panel, &mut lanes);
+            acc[i * n + j0..i * n + j0 + jn].copy_from_slice(&lanes[..jn]);
+        }
+    }
+}
+
+/// The blocked micro-kernel: `PANEL_ROWS` i32 accumulator lanes walking
+/// one activation row against one weight panel.  The broadcast-multiply
+/// shape (one x value × a contiguous lane vector) is what the
+/// autovectorizer turns into widening i8→i32 SIMD MACs.
+#[inline]
+fn panel_dot(xrow: &[i8], panel: &[i8], lanes: &mut [i32; PANEL_ROWS]) {
+    for (kk, &xv) in xrow.iter().enumerate() {
+        let xv = xv as i32;
+        let wcol = &panel[kk * PANEL_ROWS..kk * PANEL_ROWS + PANEL_ROWS];
+        for (l, &w) in lanes.iter_mut().zip(wcol) {
+            *l += xv * w as i32;
+        }
+    }
+}
+
+/// Blocked integer MatMul with the Eq.-1 dequantization epilogue fused
+/// per output tile — the production form of [`int_matmul`] +
+/// [`dequantize`], bit-identical to running them in sequence (same
+/// integer accumulator, same f32 expression per element).  `out` must be
+/// `[m, n]`; no heap allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn quik_matmul_prepacked(
+    qx: &[i8],
+    scale_act: &[f32],
+    zero_act: &[f32],
+    pw: &PackedWeights,
+    scale_w: &[f32],
+    w_reduced: &[f32],
+    m: usize,
+    bits: u32,
+    out: &mut [f32],
+) {
+    let (n, k) = (pw.n, pw.k);
+    assert_eq!(qx.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    let hr = half_range(bits) as f32;
+    for jp in 0..n.div_ceil(PANEL_ROWS) {
+        let panel = &pw.data[jp * k * PANEL_ROWS..(jp + 1) * k * PANEL_ROWS];
+        let j0 = jp * PANEL_ROWS;
+        let jn = PANEL_ROWS.min(n - j0);
+        for i in 0..m {
+            let mut lanes = [0i32; PANEL_ROWS];
+            panel_dot(&qx[i * k..(i + 1) * k], panel, &mut lanes);
+            let sa = scale_act[i];
+            let shift = zero_act[i] + hr * sa;
+            for jr in 0..jn {
+                let j = j0 + jr;
+                out[i * n + j] = lanes[jr] as f32 * sa * scale_w[j] + shift * w_reduced[j];
+            }
+        }
+    }
+}
 
 /// `acc[m,n] = Σ_k qx[m,k] * qw[n,k]` with i32 accumulation.
 ///
@@ -153,6 +291,50 @@ mod tests {
             let budget = if bits == 8 { 0.01 } else { 0.2 };
             assert!(err / norm < budget, "bits={bits} rel={}", err / norm);
         }
+    }
+
+    #[test]
+    fn panel_pack_row_major_roundtrip() {
+        for &(n, k) in &[(1usize, 3usize), (8, 5), (13, 7), (24, 1)] {
+            let w: Vec<i8> = (0..n * k).map(|i| ((i * 11 + 2) % 15) as i8 - 8).collect();
+            assert_eq!(PackedWeights::pack(&w, n, k).to_row_major(), w, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_matches_scalar_on_awkward_shapes() {
+        // shapes straddling the panel width, including n < PANEL_ROWS
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 7, 5), (2, 8, 16), (5, 13, 33)] {
+            let qx: Vec<i8> = (0..m * k).map(|i| ((i * 7 + 3) % 15) as i8 - 8).collect();
+            let qw: Vec<i8> = (0..n * k).map(|i| ((i * 5 + 1) % 15) as i8 - 8).collect();
+            let want = int_matmul(&qx, &qw, m, n, k);
+            let pw = PackedWeights::pack(&qw, n, k);
+            let mut got = Vec::new();
+            int_matmul_blocked(&qx, &pw, m, &mut got);
+            assert_eq!(got, want, "blocked kernel diverged at m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn fused_prepacked_matches_matmul_then_dequant() {
+        let (m, n, k) = (3usize, 11usize, 17usize);
+        let x: Vec<f32> = (0..m * k).map(|i| ((i * 13 % 29) as f32) - 14.0).collect();
+        let w: Vec<f32> = (0..n * k).map(|i| ((i * 17 % 23) as f32) - 11.0).collect();
+        let qa = quantize_acts(&x, m, k, 4);
+        let wq = quantize_weights(&w, n, k, 4);
+        let acc = int_matmul(&qa.q, &wq.w_int, m, n, k);
+        let want =
+            dequantize(&acc, &qa.scale, &qa.zero, &wq.scale, &wq.w_reduced, m, n, 4);
+        let pw = PackedWeights::pack(&wq.w_int, n, k);
+        let mut got = vec![0f32; m * n];
+        quik_matmul_prepacked(
+            &qa.q, &qa.scale, &qa.zero, &pw, &wq.scale, &wq.w_reduced, m, 4, &mut got,
+        );
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "fused epilogue must be bit-identical to the scalar pipeline"
+        );
     }
 
     #[test]

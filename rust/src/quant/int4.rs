@@ -25,17 +25,26 @@ pub fn pack(values: &[i8]) -> Vec<u8> {
 
 /// Unpack `len` INT4 values from nibble storage (inverse of [`pack`]).
 pub fn unpack(packed: &[u8], len: usize) -> Vec<i8> {
+    let mut out = vec![0i8; len];
+    unpack_into(packed, len, &mut out);
+    out
+}
+
+/// [`unpack`] into a caller-provided buffer — the allocation-free form
+/// for consumers that decode the storage format into reused scratch
+/// (one-time layout builds; the request path itself never unpacks, it
+/// runs on the persistent [`crate::quant::PackedWeights`] layout).
+pub fn unpack_into(packed: &[u8], len: usize, out: &mut [i8]) {
     assert!(packed.len() * 2 >= len, "packed buffer too short");
-    let mut out = Vec::with_capacity(len);
+    assert!(out.len() >= len, "output buffer too short");
     for (i, byte) in packed.iter().enumerate() {
         if 2 * i < len {
-            out.push(sign_extend4(byte & 0x0f));
+            out[2 * i] = sign_extend4(byte & 0x0f);
         }
         if 2 * i + 1 < len {
-            out.push(sign_extend4(byte >> 4));
+            out[2 * i + 1] = sign_extend4(byte >> 4);
         }
     }
-    out
 }
 
 #[inline]
@@ -65,6 +74,16 @@ mod tests {
         let packed = pack(&values);
         assert_eq!(packed.len(), 2);
         assert_eq!(unpack(&packed, 3), values);
+    }
+
+    #[test]
+    fn unpack_into_matches_unpack_and_reuses_buffer() {
+        let values: Vec<i8> = (0..33).map(|i| ((i * 5) % 15) as i8 - 8).collect();
+        let packed = pack(&values);
+        let mut out = vec![0i8; 64]; // oversized reused scratch
+        unpack_into(&packed, values.len(), &mut out);
+        assert_eq!(&out[..values.len()], values.as_slice());
+        assert_eq!(unpack(&packed, values.len()), values);
     }
 
     #[test]

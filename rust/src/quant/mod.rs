@@ -25,8 +25,12 @@ pub mod outlier;
 pub mod quantizer;
 pub mod sparse;
 
-pub use dequant::{dequantize, int_matmul};
-pub use quantizer::{quantize_acts, quantize_weights, ActQuant, WeightQuant};
+pub use dequant::{
+    dequantize, int_matmul, int_matmul_blocked, quik_matmul_prepacked, PackedWeights,
+};
+pub use quantizer::{
+    quantize_acts, quantize_acts_into, quantize_weights, ActQuant, WeightQuant,
+};
 
 /// Signed re-centering offset for asymmetric activation quantization.
 pub fn half_range(bits: u32) -> i32 {

@@ -35,14 +35,33 @@ pub struct WeightQuant {
 /// and `zero = min`, and writes signed re-centered values — the same fused
 /// reduce-then-quantize schedule as the Pallas kernel, on the CPU.
 pub fn quantize_acts(x: &[f32], m: usize, k: usize, bits: u32) -> ActQuant {
+    let mut q = vec![0i8; m * k];
+    let mut scale = vec![0f32; m];
+    let mut zero = vec![0f32; m];
+    quantize_acts_into(x, m, k, bits, &mut q, &mut scale, &mut zero);
+    ActQuant { q, scale, zero, m, k, bits }
+}
+
+/// [`quantize_acts`] writing into caller-provided buffers — the hot-path
+/// form used by the prepared linear layout, which reuses scratch across
+/// calls instead of allocating an [`ActQuant`] per token batch.  Numerics
+/// are byte-identical to [`quantize_acts`] (same code runs both).
+pub fn quantize_acts_into(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    bits: u32,
+    q: &mut [i8],
+    scale: &mut [f32],
+    zero: &mut [f32],
+) {
     assert_eq!(x.len(), m * k, "x must be [m, k] row-major");
+    assert_eq!(q.len(), m * k, "q must be [m, k] row-major");
+    assert!(scale.len() >= m && zero.len() >= m, "per-token buffers too short");
     let (qmin, qmax) = act_qrange(bits);
     let (qminf, qmaxf) = (qmin as f32, qmax as f32);
     let hr = half_range(bits) as f32;
     let levels = ((1u32 << bits) - 1) as f32;
-    let mut q = vec![0i8; m * k];
-    let mut scale = vec![0f32; m];
-    let mut zero = vec![0f32; m];
     for row in 0..m {
         let xs = &x[row * k..(row + 1) * k];
         // §Perf: 8 independent min/max accumulator lanes — a single fold
@@ -89,7 +108,6 @@ pub fn quantize_acts(x: &[f32], m: usize, k: usize, bits: u32) -> ActQuant {
             out[i] = val.clamp(qminf, qmaxf) as i8;
         }
     }
-    ActQuant { q, scale, zero, m, k, bits }
 }
 
 /// Reconstruct activations (tests/diagnostics only — never on the hot path).

@@ -1,0 +1,106 @@
+//! Allocation accounting for the serving hot path.
+//!
+//! The prepared-layout contract says `QuikLinear::forward_into` performs
+//! **zero heap allocation** once its scratch has warmed to the call
+//! shape (the persistent panel-packed weights were laid out at quantize
+//! time; activations quantize into reused buffers; the fused kernel
+//! writes into the caller's output).  A counting global allocator pins
+//! that down — and puts a small ceiling on a whole backend decode step,
+//! so per-linear allocations can never creep back in behind the trait.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use quik::backend::native::{demo_policy, LinearScratch, NativeBackend, NativeConfig, QuikLinear};
+use quik::backend::{InferenceBackend, KvCache, Phase, Variant};
+use quik::config::LayerPlan;
+use quik::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The two tests below count allocations globally, so they must not run
+/// concurrently (libtest runs test fns on parallel threads).
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+#[test]
+fn prepared_linear_forward_is_allocation_free_when_warm() {
+    let _guard = EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner());
+    let (k, n, m) = (96usize, 80usize, 4usize);
+    let mut rng = Rng::new(3);
+    let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+    let calib: Vec<f32> = (0..8 * k).map(|_| rng.normal() * 4.0).collect();
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    for (wb, ab) in [(4u32, 4u32), (8, 8)] {
+        let plan = LayerPlan { weight_bits: wb, act_bits: ab, n_outlier: 12, sparse24: false };
+        let lin = QuikLinear::quantize(&w, n, k, plan, &calib, 8);
+        let mut scratch = LinearScratch::default();
+        let mut out = Vec::new();
+        // warm the scratch to this shape (buffers grow once)
+        lin.forward_into(&x, m, &mut scratch, &mut out);
+        lin.forward_into(&x, m, &mut scratch, &mut out);
+        let before = allocs();
+        lin.forward_into(&x, m, &mut scratch, &mut out);
+        let during = allocs() - before;
+        assert_eq!(during, 0, "W{wb}A{ab} forward_into allocated {during} times when warm");
+    }
+}
+
+#[test]
+fn warm_decode_step_allocation_is_small_and_shape_independent() {
+    let _guard = EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner());
+    // A full backend decode step may allocate its returned logits (and
+    // nothing that scales with layers × linears): the ceiling below is
+    // far under the 7 linears × 2 layers × several-buffers each that the
+    // seed implementation paid per step.
+    let mut backend =
+        NativeBackend::seeded("alloc", NativeConfig::demo(), 5, demo_policy()).unwrap();
+    backend.prepare(Variant::Quik4, Phase::Decode, 1).unwrap();
+    let prompt: Vec<i32> = (0..24).map(|i| i % 90).collect();
+    let mut cache = backend.new_cache(Variant::Quik4, 1).unwrap();
+    backend.forward(Variant::Quik4, Phase::Prefill, &prompt, 1, &mut cache).unwrap();
+    // warm decode-shape buffers
+    for _ in 0..2 {
+        cache.set_len(24);
+        backend.forward(Variant::Quik4, Phase::Decode, &[1], 1, &mut cache).unwrap();
+    }
+    cache.set_len(24);
+    let before = allocs();
+    let out = backend.forward(Variant::Quik4, Phase::Decode, &[1], 1, &mut cache).unwrap();
+    let during = allocs() - before;
+    drop(out);
+    assert!(
+        during <= 4,
+        "warm decode step allocated {during} times; expected only the returned logits"
+    );
+}

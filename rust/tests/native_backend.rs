@@ -126,6 +126,66 @@ fn speculative_decode_is_lossless_on_native_backend() {
 }
 
 #[test]
+fn mixed_length_padded_batch_is_bitexact_with_solo_runs() {
+    // ROADMAP open item closed by per-row cache lengths: a short row in a
+    // right-padded mixed-length batch must generate the same logits as a
+    // solo run, bit for bit — no pad KV is attended and the row decodes
+    // at its own RoPE positions.
+    let mut backend = golden_backend();
+    backend.prepare(Variant::Quik4, Phase::Prefill, 1).unwrap();
+    let long = golden_prompt(backend.vocab()); // 24 tokens
+    let short = long[..10].to_vec();
+
+    // solo reference for the short prompt
+    let mut solo_cache = backend.new_cache(Variant::Quik4, 1).unwrap();
+    let solo_out =
+        backend.forward(Variant::Quik4, Phase::Prefill, &short, 1, &mut solo_cache).unwrap();
+    let mut solo_tok = solo_out.argmax_last()[0];
+    let mut solo_logits = Vec::new();
+    for _ in 0..5 {
+        let step = backend
+            .forward(Variant::Quik4, Phase::Decode, &[solo_tok], 1, &mut solo_cache)
+            .unwrap();
+        solo_logits.push(step.logits.clone());
+        solo_tok = step.argmax_last()[0];
+    }
+
+    // batched: row 0 = long prompt, row 1 = short prompt right-padded
+    let mut tokens = long.clone();
+    tokens.extend(short.iter().copied());
+    tokens.resize(2 * long.len(), 0); // pad token 0
+    let mut cache = backend.new_cache(Variant::Quik4, 2).unwrap();
+    let out = backend.forward(Variant::Quik4, Phase::Prefill, &tokens, 2, &mut cache).unwrap();
+    cache.set_len(long.len());
+    cache.set_row_len(0, long.len());
+    cache.set_row_len(1, short.len());
+    // row 1's first token comes from its own last prompt position and
+    // must match the solo prefill exactly
+    assert_eq!(out.row(1, short.len() - 1), solo_out.row(0, short.len() - 1));
+    let mut next = [out.argmax_at(0, long.len() - 1), out.argmax_at(1, short.len() - 1)];
+    for solo_step in &solo_logits {
+        let step = backend.forward(Variant::Quik4, Phase::Decode, &next, 2, &mut cache).unwrap();
+        assert_eq!(
+            step.row(1, 0),
+            &solo_step[..backend.vocab()],
+            "short row diverged from its solo decode"
+        );
+        next = [step.argmax_at(0, 0), step.argmax_at(1, 0)];
+    }
+}
+
+#[test]
+#[cfg(debug_assertions)]
+#[should_panic(expected = "past cache capacity")]
+fn rollback_past_capacity_is_rejected() {
+    // A rollback bookkeeping bug used to clamp silently; it must fail
+    // loudly instead of corrupting replay invariants invisibly.
+    let backend = golden_backend();
+    let mut cache = backend.new_cache(Variant::Fp16, 1).unwrap();
+    cache.set_len(backend.max_context() + 1);
+}
+
+#[test]
 fn quantized_storage_beats_fp32_by_more_than_2x() {
     let mut backend = golden_backend();
     backend.prepare(Variant::Quik4, Phase::Prefill, 1).unwrap();

@@ -91,6 +91,60 @@ fn prop_eq1_dequant_equals_direct_reconstruction() {
 }
 
 #[test]
+fn prop_blocked_matmul_bitexact_with_scalar_oracle() {
+    // The production panel-packed kernel must agree with the scalar
+    // triple loop on every shape, including m/n/k that straddle the
+    // panel width (i32 accumulation is exact, so equality is bitwise).
+    let mut rng = Rng::new(107);
+    for _ in 0..CASES {
+        let m = 1 + rng.below(9);
+        let n = 1 + rng.below(37);
+        let k = 1 + rng.below(70);
+        let bits_range: i32 = if rng.below(2) == 0 { 8 } else { 127 };
+        let qx: Vec<i8> =
+            (0..m * k).map(|_| rng.range_i32(-bits_range, bits_range - 1) as i8).collect();
+        let qw: Vec<i8> =
+            (0..n * k).map(|_| rng.range_i32(-bits_range, bits_range - 1) as i8).collect();
+        let want = dequant::int_matmul(&qx, &qw, m, n, k);
+        let pw = dequant::PackedWeights::pack(&qw, n, k);
+        let mut got = Vec::new();
+        dequant::int_matmul_blocked(&qx, &pw, m, &mut got);
+        assert_eq!(got, want, "blocked kernel diverged at m={m} n={n} k={k}");
+    }
+}
+
+#[test]
+fn prop_prepared_linear_forward_bitexact_with_seed_path() {
+    // QuikLinear::forward (persistent prepacked layout, fused epilogue,
+    // reused scratch) must be byte-for-byte identical to the seed
+    // per-call-unpack implementation kept as `forward_unprepared`.
+    use quik::backend::native::{LinearScratch, QuikLinear};
+    use quik::config::LayerPlan;
+    let mut rng = Rng::new(108);
+    let mut scratch = LinearScratch::default();
+    let mut out = Vec::new();
+    for case in 0..25 {
+        let m = 1 + rng.below(6);
+        let k = 8 + rng.below(48);
+        let n = 1 + rng.below(21); // straddles the panel width
+        let n_outlier = rng.below(k / 2 + 1);
+        let (wb, ab) = if case % 2 == 0 { (4u32, 4u32) } else { (8, 8) };
+        let plan = LayerPlan { weight_bits: wb, act_bits: ab, n_outlier, sparse24: false };
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let calib: Vec<f32> = (0..8 * k).map(|_| rng.normal() * 3.0).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() * 2.0).collect();
+        let lin = QuikLinear::quantize(&w, n, k, plan, &calib, 8);
+        lin.forward_into(&x, m, &mut scratch, &mut out);
+        let want = lin.forward_unprepared(&x, m);
+        assert_eq!(
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "case {case}: prepared forward diverged (m={m} n={n} k={k} W{wb}A{ab})"
+        );
+    }
+}
+
+#[test]
 fn prop_outlier_permutation_bijective() {
     let mut rng = Rng::new(103);
     for _ in 0..CASES {
