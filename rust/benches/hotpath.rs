@@ -59,6 +59,7 @@ fn main() {
     {
         use quik::backend::native::{LinearScratch, QuikLinear};
         use quik::config::LayerPlan;
+        use quik::util::parallel::WorkerPool;
         let (k, n) = (1024usize, 1024usize);
         let plan = LayerPlan { weight_bits: 4, act_bits: 4, n_outlier: 32, sparse24: false };
         let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
@@ -69,7 +70,7 @@ fn main() {
         for m in [1usize, 64] {
             let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
             let prep = bench_auto(&format!("quik_linear {m}x{k}x{n} prepared"), budget, || {
-                lin.forward_into(&x, m, &mut scratch, &mut out);
+                lin.forward_into(&x, m, WorkerPool::serial(), &mut scratch, &mut out);
                 std::hint::black_box(&out);
             });
             report(&prep);
@@ -84,6 +85,38 @@ fn main() {
             benches.push(json_bench(&base));
             derived.push(format!(
                 "    {{\"name\": \"speedup quik_linear {m}x{k}x{n} prepared_vs_unpack\", \"value\": {speedup:.3}}}"
+            ));
+        }
+
+        // --- parallel vs serial prepacked forward (the PR-3 tentpole) ---
+        // m=1 is the decode shape (output-panel sharding); m=4096 is an
+        // 8×512 prefill (batch-row sharding).  Outputs are bit-identical;
+        // only wall time differs.  The acceptance bar: ≥ 2× on the
+        // m=8×512 prefill shape on a ≥ 4-core runner.
+        let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+        let pool = WorkerPool::new(threads);
+        for m in [1usize, 8 * 512] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let ser_name = format!("quik_linear {m}x{k}x{n} prepacked serial");
+            let ser = bench_auto(&ser_name, budget, || {
+                lin.forward_into(&x, m, WorkerPool::serial(), &mut scratch, &mut out);
+                std::hint::black_box(&out);
+            });
+            report(&ser);
+            let par_name = format!("quik_linear {m}x{k}x{n} prepacked parallel t{threads}");
+            let par = bench_auto(&par_name, budget, || {
+                lin.forward_into(&x, m, &pool, &mut scratch, &mut out);
+                std::hint::black_box(&out);
+            });
+            report(&par);
+            let speedup = ser.mean.as_secs_f64() / par.mean.as_secs_f64();
+            println!(
+                "    -> {speedup:.2}x parallel speedup over serial prepacked ({threads} threads)"
+            );
+            benches.push(json_bench(&ser));
+            benches.push(json_bench(&par));
+            derived.push(format!(
+                "    {{\"name\": \"speedup quik_linear {m}x{k}x{n} parallel_vs_serial t{threads}\", \"value\": {speedup:.3}}}"
             ));
         }
     }

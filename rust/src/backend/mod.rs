@@ -99,6 +99,17 @@ pub trait KvCache {
         let _ = (row, len);
     }
 
+    /// Does this cache honor [`KvCache::set_row_len`]?  Schedulers use
+    /// this to decide whether per-row decode budgets are sound: with
+    /// per-row lengths a short row in a mixed-length batch can keep
+    /// decoding after a longer row has exhausted *its* context (the
+    /// finished row is frozen at its own length); without them every
+    /// row shares one logical length, so budgets must stay clipped by
+    /// the batch-max prompt.  Default `false` (the pad-KV approximation).
+    fn per_row_lens(&self) -> bool {
+        false
+    }
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -28,12 +28,14 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::ops::Range;
 
 use anyhow::{bail, Result};
 
 use super::linear::{LinearScratch, QuikLinear};
 use super::model::{LayerWeights, NativeCheckpoint, NativeConfig};
 use crate::backend::{KvCache, StepOutput};
+use crate::util::parallel::{SliceWriter, WorkerPool};
 
 /// Which linear inside a block (forward order).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -110,14 +112,18 @@ impl Linear {
 
 /// How a forward pass executes its linear layers.  `out` is cleared and
 /// resized by the implementation; `lin` is the shared quantization
-/// scratch (FP32 implementations ignore it).
+/// scratch (FP32 implementations ignore it); `pool` is the backend's
+/// worker pool, which every implementation shards its MatMuls across
+/// (bit-identically — see `util::parallel`).
 pub(crate) trait LinearSet {
+    #[allow(clippy::too_many_arguments)]
     fn apply(
         &self,
         layer: usize,
         which: Linear,
         x: &[f32],
         m: usize,
+        pool: &WorkerPool,
         lin: &mut LinearScratch,
         out: &mut Vec<f32>,
     );
@@ -133,16 +139,18 @@ impl LinearSet for FpLinears<'_> {
         which: Linear,
         x: &[f32],
         m: usize,
+        pool: &WorkerPool,
         _lin: &mut LinearScratch,
         out: &mut Vec<f32>,
     ) {
         let cfg = &self.0.config;
-        matmul_f32_into(
+        matmul_f32_into_pooled(
             x,
             which.weights(&self.0.layers[layer]),
             m,
             which.out_features(cfg),
             which.in_features(cfg),
+            pool,
             out,
         );
     }
@@ -172,10 +180,11 @@ impl LinearSet for QuikLinears<'_> {
         which: Linear,
         x: &[f32],
         m: usize,
+        pool: &WorkerPool,
         lin: &mut LinearScratch,
         out: &mut Vec<f32>,
     ) {
-        self.0.layers[layer][which.index()].forward_into(x, m, lin, out);
+        self.0.layers[layer][which.index()].forward_into(x, m, pool, lin, out);
     }
 }
 
@@ -206,6 +215,7 @@ impl LinearSet for CalibLinears<'_> {
         which: Linear,
         x: &[f32],
         m: usize,
+        pool: &WorkerPool,
         lin: &mut LinearScratch,
         out: &mut Vec<f32>,
     ) {
@@ -214,39 +224,85 @@ impl LinearSet for CalibLinears<'_> {
         entry.0.extend_from_slice(x);
         entry.1 += m;
         drop(store);
-        FpLinears(self.ckpt).apply(layer, which, x, m, lin, out);
+        FpLinears(self.ckpt).apply(layer, which, x, m, pool, lin, out);
     }
 }
 
-/// `y[m,n] = x[m,k] @ w[n,k]^T` in FP32 (row-major, checked shapes).
-pub(crate) fn matmul_f32(x: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut y = Vec::new();
-    matmul_f32_into(x, w, m, n, k, &mut y);
-    y
-}
-
-/// [`matmul_f32`] into a reused output buffer (cleared + resized).
-pub(crate) fn matmul_f32_into(
+/// `y[m,n] = x[m,k] @ w[n,k]^T` in FP32 (row-major, checked shapes),
+/// into a reused output buffer (cleared + resized), sharded across the
+/// worker pool: batch rows when the batch is deep, output columns when
+/// it is shallow (the lm-head decode shape), inline below the parallel
+/// work floor.  Every output element is one dot product evaluated in the
+/// serial accumulation order, so results are bit-identical at any thread
+/// count (pass [`WorkerPool::serial`] for strictly serial execution).
+pub(crate) fn matmul_f32_into_pooled(
     x: &[f32],
     w: &[f32],
     m: usize,
     n: usize,
     k: usize,
+    pool: &WorkerPool,
     y: &mut Vec<f32>,
 ) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), n * k);
     y.clear();
     y.resize(m * n, 0.0);
+    let dst = SliceWriter::new(y.as_mut_slice());
+    pool.shard_2d(
+        m,
+        n,
+        m * n * k,
+        |rows| matmul_f32_rows(x, w, rows, n, k, &dst),
+        |js| matmul_f32_cols(x, w, m, n, k, js, &dst),
+    );
+}
+
+/// Column range `js` of all `m` output rows (disjoint across shards).
+fn matmul_f32_cols(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    js: Range<usize>,
+    dst: &SliceWriter<f32>,
+) {
     for i in 0..m {
         let xrow = &x[i * k..(i + 1) * k];
-        for j in 0..n {
+        // SAFETY: column ranges are disjoint across shards
+        let orow = unsafe { dst.slice(i * n + js.start, js.len()) };
+        for (o, j) in orow.iter_mut().zip(js.clone()) {
             let wrow = &w[j * k..(j + 1) * k];
             let mut s = 0f32;
             for (a, b) in xrow.iter().zip(wrow) {
                 s += a * b;
             }
-            y[i * n + j] = s;
+            *o = s;
+        }
+    }
+}
+
+/// Row range of the output (disjoint contiguous slabs across shards).
+fn matmul_f32_rows(
+    x: &[f32],
+    w: &[f32],
+    rows: Range<usize>,
+    n: usize,
+    k: usize,
+    dst: &SliceWriter<f32>,
+) {
+    for i in rows {
+        let xrow = &x[i * k..(i + 1) * k];
+        // SAFETY: row ranges are disjoint across shards
+        let orow = unsafe { dst.slice(i * n, n) };
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[j * k..(j + 1) * k];
+            let mut s = 0f32;
+            for (a, b) in xrow.iter().zip(wrow) {
+                s += a * b;
+            }
+            *o = s;
         }
     }
 }
@@ -318,6 +374,10 @@ impl KvCache for NativeKvCache {
             self.max_ctx
         );
         self.row_len[row] = len.min(self.max_ctx);
+    }
+
+    fn per_row_lens(&self) -> bool {
+        true
     }
 }
 
@@ -407,12 +467,18 @@ fn softmax_in_place(s: &mut [f32]) {
 /// entries `0..=pos` (causal by construction).  Positions at or beyond a
 /// row's length are overwritten, so rolled-back and pad entries are
 /// never attended.
+///
+/// All linears (attention + MLP projections, and the FP32 lm-head) fan
+/// out across `pool`; the fan-out is bit-identical to the serial
+/// schedule at every pool width, so every batching/replay invariant
+/// above survives parallel execution unchanged.
 pub(crate) fn forward_pass(
     ckpt: &NativeCheckpoint,
     linears: &dyn LinearSet,
     tokens: &[i32],
     batch: usize,
     cache: &mut NativeKvCache,
+    pool: &WorkerPool,
     s: &mut ForwardScratch,
 ) -> Result<StepOutput> {
     let cfg = &ckpt.config;
@@ -456,9 +522,9 @@ pub(crate) fn forward_pass(
     // ---- blocks ---------------------------------------------------------
     for (l, lw) in ckpt.layers.iter().enumerate() {
         rmsnorm_into(&s.x, &lw.attn_norm, m, d, &mut s.h);
-        linears.apply(l, Linear::Q, &s.h, m, &mut s.lin, &mut s.qp);
-        linears.apply(l, Linear::K, &s.h, m, &mut s.lin, &mut s.kp);
-        linears.apply(l, Linear::V, &s.h, m, &mut s.lin, &mut s.vp);
+        linears.apply(l, Linear::Q, &s.h, m, pool, &mut s.lin, &mut s.qp);
+        linears.apply(l, Linear::K, &s.h, m, pool, &mut s.lin, &mut s.kp);
+        linears.apply(l, Linear::V, &s.h, m, pool, &mut s.lin, &mut s.vp);
 
         s.attn.clear();
         s.attn.resize(m * d, 0.0);
@@ -503,20 +569,20 @@ pub(crate) fn forward_pass(
                 }
             }
         }
-        linears.apply(l, Linear::O, &s.attn, m, &mut s.lin, &mut s.o);
+        linears.apply(l, Linear::O, &s.attn, m, pool, &mut s.lin, &mut s.o);
         for (xv, ov) in s.x.iter_mut().zip(&s.o) {
             *xv += ov;
         }
 
         rmsnorm_into(&s.x, &lw.mlp_norm, m, d, &mut s.h);
-        linears.apply(l, Linear::Gate, &s.h, m, &mut s.lin, &mut s.g);
-        linears.apply(l, Linear::Up, &s.h, m, &mut s.lin, &mut s.u);
+        linears.apply(l, Linear::Gate, &s.h, m, pool, &mut s.lin, &mut s.g);
+        linears.apply(l, Linear::Up, &s.h, m, pool, &mut s.lin, &mut s.u);
         s.act.clear();
         s.act.resize(m * cfg.d_ff, 0.0);
         for (a, (&gv, &uv)) in s.act.iter_mut().zip(s.g.iter().zip(&s.u)) {
             *a = silu(gv) * uv;
         }
-        linears.apply(l, Linear::Down, &s.act, m, &mut s.lin, &mut s.dn);
+        linears.apply(l, Linear::Down, &s.act, m, pool, &mut s.lin, &mut s.dn);
         for (xv, dv) in s.x.iter_mut().zip(&s.dn) {
             *xv += dv;
         }
@@ -524,7 +590,8 @@ pub(crate) fn forward_pass(
 
     // ---- head -----------------------------------------------------------
     rmsnorm_into(&s.x, &ckpt.final_norm, m, d, &mut s.xf);
-    let logits = matmul_f32(&s.xf, &ckpt.lm_head, m, cfg.vocab, d);
+    let mut logits = Vec::new();
+    matmul_f32_into_pooled(&s.xf, &ckpt.lm_head, m, cfg.vocab, d, pool, &mut logits);
     for len in cache.row_len.iter_mut() {
         *len += seq;
     }
@@ -557,7 +624,15 @@ mod tests {
         batch: usize,
         cache: &mut NativeKvCache,
     ) -> Result<StepOutput> {
-        forward_pass(ck, linears, tokens, batch, cache, &mut ForwardScratch::default())
+        forward_pass(
+            ck,
+            linears,
+            tokens,
+            batch,
+            cache,
+            WorkerPool::serial(),
+            &mut ForwardScratch::default(),
+        )
     }
 
     #[test]
@@ -613,6 +688,31 @@ mod tests {
             assert_eq!(step.row(0, 0), multi.row(0, i), "position {i} diverged");
         }
         assert_eq!(cache_a.len(), cache_b.len());
+    }
+
+    #[test]
+    fn forward_pass_bitexact_across_pool_widths() {
+        let ck = tiny();
+        let toks = [1, 5, 9, 2, 7, 11];
+        let mut c1 = NativeKvCache::new(&ck.config, 1);
+        let a = fwd(&ck, &FpLinears(&ck), &toks, 1, &mut c1).unwrap();
+        let pool = WorkerPool::new(4);
+        let mut c2 = NativeKvCache::new(&ck.config, 1);
+        let b = forward_pass(
+            &ck,
+            &FpLinears(&ck),
+            &toks,
+            1,
+            &mut c2,
+            &pool,
+            &mut ForwardScratch::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            a.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "pool width changed forward_pass output bits"
+        );
     }
 
     #[test]

@@ -25,9 +25,10 @@
 use crate::config::LayerPlan;
 use crate::quant::dequant::quik_linear;
 use crate::quant::{
-    int4, outlier, quantize_acts_into, quantize_weights, quik_matmul_prepacked,
+    int4, outlier, quantize_acts_into, quantize_weights, quik_matmul_prepacked_pooled,
     PackedWeights, WeightQuant,
 };
+use crate::util::parallel::{SliceWriter, WorkerPool};
 
 /// Reusable per-call buffers for [`QuikLinear::forward_into`].  Buffers
 /// grow to the largest shape seen and are then reused — steady-state
@@ -121,13 +122,18 @@ impl QuikLinear {
     /// into `out` and reusing `scratch` — the production hot path: fused
     /// permute+split gather, in-place activation quantization, blocked
     /// integer MatMul with the Eq.-1 epilogue fused per tile, FP32
-    /// outlier accumulation.  Zero heap allocation once the scratch has
-    /// warmed to this shape (`tests/alloc_hotpath.rs` pins this down);
-    /// bit-identical to [`QuikLinear::forward_unprepared`].
+    /// outlier accumulation.  The base kernel and the outlier GEMM fan
+    /// out across `pool` (batch rows or output panels/columns) — pass
+    /// [`WorkerPool::serial`] for the single-thread oracle path; results
+    /// are bit-identical at every pool width.  Zero heap allocation once
+    /// the scratch has warmed to this shape (`tests/alloc_hotpath.rs`
+    /// pins this down); bit-identical to
+    /// [`QuikLinear::forward_unprepared`].
     pub fn forward_into(
         &self,
         x: &[f32],
         m: usize,
+        pool: &WorkerPool,
         scratch: &mut LinearScratch,
         out: &mut Vec<f32>,
     ) {
@@ -166,10 +172,11 @@ impl QuikLinear {
             &mut scratch.a_scale,
             &mut scratch.a_zero,
         );
-        // blocked integer MatMul + fused Eq.-1 dequantization epilogue
+        // blocked integer MatMul + fused Eq.-1 dequantization epilogue,
+        // sharded across the pool (bit-identical at any width)
         out.clear();
         out.resize(m * n, 0.0);
-        quik_matmul_prepacked(
+        quik_matmul_prepacked_pooled(
             &scratch.q,
             &scratch.a_scale,
             &scratch.a_zero,
@@ -178,27 +185,59 @@ impl QuikLinear {
             &self.w_reduced,
             m,
             self.act_bits,
+            pool,
             out,
         );
-        // FP32 outlier GEMM accumulated into the tile (Algorithm 1 line 8)
-        for i in 0..m {
-            for j in 0..n {
-                let mut s = 0f32;
-                let wrow = &self.w_fp[j * no..(j + 1) * no];
-                for (xv, wv) in scratch.x_fp[i * no..(i + 1) * no].iter().zip(wrow) {
-                    s += xv * wv;
+        // FP32 outlier GEMM accumulated into the tile (Algorithm 1
+        // line 8), fanned out like the base kernel: batch rows when the
+        // batch is deep (contiguous output slabs), output columns when
+        // it is shallow.  Every (i, j) element is one independent dot
+        // product evaluated in the serial order, so the fan-out cannot
+        // change a bit.
+        if no > 0 {
+            let x_fp = &scratch.x_fp;
+            let dst = SliceWriter::new(out.as_mut_slice());
+            let add_rows = |rows: std::ops::Range<usize>| {
+                for i in rows {
+                    let xrow = &x_fp[i * no..(i + 1) * no];
+                    // SAFETY: row ranges are disjoint across shards
+                    let orow = unsafe { dst.slice(i * n, n) };
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let wrow = &self.w_fp[j * no..(j + 1) * no];
+                        let mut s = 0f32;
+                        for (xv, wv) in xrow.iter().zip(wrow) {
+                            s += xv * wv;
+                        }
+                        *o += s;
+                    }
                 }
-                out[i * n + j] += s;
-            }
+            };
+            let add_cols = |js: std::ops::Range<usize>| {
+                for i in 0..m {
+                    let xrow = &x_fp[i * no..(i + 1) * no];
+                    // SAFETY: column ranges are disjoint across shards
+                    let orow = unsafe { dst.slice(i * n + js.start, js.len()) };
+                    for (o, j) in orow.iter_mut().zip(js.clone()) {
+                        let wrow = &self.w_fp[j * no..(j + 1) * no];
+                        let mut s = 0f32;
+                        for (xv, wv) in xrow.iter().zip(wrow) {
+                            s += xv * wv;
+                        }
+                        *o += s;
+                    }
+                }
+            };
+            pool.shard_2d(m, n, m * n * no, add_rows, add_cols);
         }
     }
 
     /// Allocating convenience wrapper around [`QuikLinear::forward_into`]
-    /// (tests and one-shot callers; serving reuses scratch).
+    /// (tests and one-shot callers; serving reuses scratch and passes the
+    /// backend's pool).
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
         let mut scratch = LinearScratch::default();
         let mut out = Vec::new();
-        self.forward_into(x, m, &mut scratch, &mut out);
+        self.forward_into(x, m, WorkerPool::serial(), &mut scratch, &mut out);
         out
     }
 
@@ -358,8 +397,32 @@ mod tests {
         let mut out = Vec::new();
         for m in [4usize, 1, 6, 1] {
             let x = data(&mut rng, m, k, 4.0);
-            lin.forward_into(&x, m, &mut scratch, &mut out);
+            lin.forward_into(&x, m, WorkerPool::serial(), &mut scratch, &mut out);
             assert_eq!(out, lin.forward_unprepared(&x, m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn pooled_forward_is_bitexact_with_oracle() {
+        // shapes sized to cross MIN_PARALLEL_WORK in both shard modes:
+        // m=8 row-shards (m >= threads), m=2 panel-shards, m=1 inlines
+        let (k, n) = (256usize, 160usize);
+        let mut rng = Rng::new(29);
+        let w = data(&mut rng, n, k, 1.0);
+        let calib = data(&mut rng, 8, k, 5.0);
+        let lin = QuikLinear::quantize(&w, n, k, plan(4, 4, 16), &calib, 8);
+        let pool = WorkerPool::new(3);
+        let mut scratch = LinearScratch::default();
+        let mut out = Vec::new();
+        for m in [1usize, 2, 8] {
+            let x = data(&mut rng, m, k, 5.0);
+            lin.forward_into(&x, m, &pool, &mut scratch, &mut out);
+            let want = lin.forward_unprepared(&x, m);
+            assert_eq!(
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "pooled forward diverged from the oracle at m={m}"
+            );
         }
     }
 

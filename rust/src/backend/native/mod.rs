@@ -18,6 +18,15 @@
 //! Unlike the PJRT artifact runtime, shapes are fully dynamic: any
 //! `[batch, seq]` step within the context budget is accepted, so the
 //! scheduler pads only to the longest prompt in a batch.
+//!
+//! Every forward fans its MatMuls (quantized linears, FP32 outlier GEMM,
+//! lm-head) out across a persistent [`crate::util::parallel::WorkerPool`]
+//! — batch rows for deep prefills, output panels/columns for decode —
+//! with results **bit-identical** to serial execution at every pool
+//! width (i32 accumulation is exact and each shard owns its output
+//! elements).  Width comes from [`crate::config::ExecConfig`]
+//! (`QUIK_THREADS` env override, else available parallelism) or
+//! [`NativeBackend::with_threads`].
 
 pub mod forward;
 pub mod linear;
@@ -28,7 +37,8 @@ use std::cell::RefCell;
 use anyhow::{bail, Context, Result};
 
 use crate::backend::{InferenceBackend, Phase, StepOutput, Variant};
-use crate::config::QuikPolicy;
+use crate::config::{ExecConfig, QuikPolicy};
+use crate::util::parallel::WorkerPool;
 use crate::util::rng::Rng;
 
 use self::forward::{forward_pass, CalibLinears, FpLinears, QuikLinears, LINEARS};
@@ -63,6 +73,15 @@ pub struct NativeBackend {
     ckpt: NativeCheckpoint,
     policy: QuikPolicy,
     quik: Option<QuikStack>,
+    /// Persistent worker pool every forward's linears (and the FP32
+    /// lm-head / outlier GEMMs) shard across.  Width defaults to the
+    /// `QUIK_THREADS` env override or the machine's available
+    /// parallelism ([`ExecConfig::resolve_threads`]); override per
+    /// backend with [`NativeBackend::with_threads`].  Built lazily on
+    /// first use so a builder override never spawns (then joins) a
+    /// default-width pool it is about to replace.  Parallel execution is
+    /// bit-identical to serial at every width.
+    pool: std::sync::OnceLock<WorkerPool>,
     /// Reusable step buffers (see [`ForwardScratch`]) — interior-mutable
     /// because `forward` takes `&self`; the backend lives on one worker
     /// thread, so a `RefCell` is sound and keeps steady-state steps free
@@ -82,8 +101,30 @@ impl NativeBackend {
             ckpt,
             policy,
             quik: None,
+            pool: std::sync::OnceLock::new(),
             scratch: RefCell::new(ForwardScratch::default()),
         })
+    }
+
+    /// The worker pool, created on first use at the default width
+    /// ([`ExecConfig::resolve_threads`]) unless
+    /// [`NativeBackend::with_threads`] installed one already.
+    fn pool(&self) -> &WorkerPool {
+        self.pool.get_or_init(|| WorkerPool::new(ExecConfig::default().resolve_threads()))
+    }
+
+    /// Builder override for the worker-pool width (beats the
+    /// `QUIK_THREADS` env default; clamped to ≥ 1).  Width 1 is the
+    /// exact serial path.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        let width = ExecConfig { threads: Some(threads) }.resolve_threads();
+        self.pool = std::sync::OnceLock::from(WorkerPool::new(width));
+        self
+    }
+
+    /// Worker-pool width this backend fans its kernels out across.
+    pub fn threads(&self) -> usize {
+        self.pool().threads()
     }
 
     /// Deterministic random checkpoint (see [`NativeCheckpoint::seeded`]).
@@ -143,7 +184,7 @@ impl NativeBackend {
         let calib = CalibLinears::new(&self.ckpt);
         let mut cache = NativeKvCache::new(&cfg, 1);
         let mut scratch = ForwardScratch::default();
-        forward_pass(&self.ckpt, &calib, &tokens, 1, &mut cache, &mut scratch)
+        forward_pass(&self.ckpt, &calib, &tokens, 1, &mut cache, self.pool(), &mut scratch)
             .context("calibration forward")?;
         let store = calib.into_store();
 
@@ -225,15 +266,29 @@ impl InferenceBackend for NativeBackend {
     ) -> Result<StepOutput> {
         let mut scratch = self.scratch.borrow_mut();
         match variant {
-            Variant::Fp16 => {
-                forward_pass(&self.ckpt, &FpLinears(&self.ckpt), tokens, batch, cache, &mut scratch)
-            }
+            Variant::Fp16 => forward_pass(
+                &self.ckpt,
+                &FpLinears(&self.ckpt),
+                tokens,
+                batch,
+                cache,
+                self.pool(),
+                &mut scratch,
+            ),
             Variant::Quik4 => {
                 let stack = self
                     .quik
                     .as_ref()
                     .context("quik4 stack not built — call prepare(Quik4, ..) first")?;
-                forward_pass(&self.ckpt, &QuikLinears(stack), tokens, batch, cache, &mut scratch)
+                forward_pass(
+                    &self.ckpt,
+                    &QuikLinears(stack),
+                    tokens,
+                    batch,
+                    cache,
+                    self.pool(),
+                    &mut scratch,
+                )
             }
         }
     }
@@ -298,6 +353,35 @@ mod tests {
         let q = &stack.layers[0][Linear::Q.index()];
         assert_eq!(q.weight_bits, 4);
         assert_eq!(q.n_outlier, 12);
+    }
+
+    #[test]
+    fn forward_is_bitexact_across_thread_counts() {
+        // A 32-token prefill on the demo config crosses the parallel
+        // work floor (gate/up projections and the lm-head fan out), so
+        // this genuinely exercises the pooled kernels — logits must be
+        // bit-identical to the 1-thread (serial oracle) backend.
+        let bits = |logits: &[f32]| logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let prompt: Vec<i32> = (0..32).map(|i| (i * 7 + 3) % 90).collect();
+        let mut reference: Option<Vec<u32>> = None;
+        for threads in [1usize, 2, 4] {
+            let mut b = backend().with_threads(threads);
+            assert_eq!(b.threads(), threads);
+            b.prepare(Variant::Quik4, Phase::Prefill, 2).unwrap();
+            let mut cache = b.new_cache(Variant::Quik4, 2).unwrap();
+            let mut tokens = prompt.clone();
+            tokens.extend(prompt.iter().map(|t| (t + 1) % 90));
+            let out = b.forward(Variant::Quik4, Phase::Prefill, &tokens, 2, &mut cache).unwrap();
+            let step = b.forward(Variant::Quik4, Phase::Decode, &[1, 2], 2, &mut cache).unwrap();
+            let mut got = bits(&out.logits);
+            got.extend(bits(&step.logits));
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => {
+                    assert_eq!(&got, want, "threads={threads} changed forward output bits")
+                }
+            }
+        }
     }
 
     #[test]

@@ -132,6 +132,40 @@ pub fn spec(name: &str) -> Option<ModelSpec> {
     model_zoo().into_iter().find(|(n, _)| *n == name).map(|(_, s)| s)
 }
 
+/// Execution-resource configuration for the native backend's parallel
+/// subsystem: how wide the per-backend [`crate::util::parallel::WorkerPool`]
+/// is.  Parallel execution is bit-identical to serial at any width (the
+/// pool only partitions output index space), so this is purely a
+/// throughput knob.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Explicit worker-pool width (total, including the calling thread).
+    /// `None` resolves from the [`ExecConfig::ENV_THREADS`] environment
+    /// override, falling back to the machine's available parallelism.
+    pub threads: Option<usize>,
+}
+
+impl ExecConfig {
+    /// Environment override for the pool width (`QUIK_THREADS=4`); CI
+    /// runs the test suite at 1 and 4 to keep both paths green.
+    pub const ENV_THREADS: &'static str = "QUIK_THREADS";
+
+    /// Resolve the pool width: explicit setting, else `QUIK_THREADS`,
+    /// else available parallelism; always ≥ 1 (an explicit 0 — setting
+    /// or env — clamps to the serial floor, it does not fall through).
+    pub fn resolve_threads(&self) -> usize {
+        if let Some(n) = self.threads {
+            return n.max(1);
+        }
+        if let Ok(v) = std::env::var(Self::ENV_THREADS) {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
 /// QUIK per-layer precision plan (mirrors `compile.quik.policy`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LayerPlan {
@@ -251,6 +285,15 @@ mod tests {
             let rel = (got - want).abs() / want;
             assert!(rel < tol, "{name}: {got:.3e} vs {want:.3e} (rel {rel:.2})");
         }
+    }
+
+    #[test]
+    fn exec_config_resolves_threads() {
+        assert_eq!(ExecConfig { threads: Some(3) }.resolve_threads(), 3);
+        // explicit zero clamps to the serial floor
+        assert_eq!(ExecConfig { threads: Some(0) }.resolve_threads(), 1);
+        // default resolves to *something* runnable regardless of env
+        assert!(ExecConfig::default().resolve_threads() >= 1);
     }
 
     #[test]

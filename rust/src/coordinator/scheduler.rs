@@ -61,13 +61,28 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
             bail!("prompt length {max_prompt} exceeds prefill seq {seq}");
         }
         let max_ctx = self.backend.max_context();
-        let max_new = plan
-            .requests
-            .iter()
-            .map(|r| r.max_new_tokens)
-            .max()
-            .unwrap_or(0)
-            .min(max_ctx.saturating_sub(max_prompt));
+        let mut cache = self.backend.new_cache(self.variant, b)?;
+        // Per-row decode budgets.  With per-row cache lengths each row's
+        // budget is clipped by *its own* remaining context — a short
+        // rider in a mixed-length batch generates exactly the tokens it
+        // would solo (the old batch-max clip silently truncated it).
+        // Rows that exhaust their budget are frozen (fed a pad token at a
+        // pinned position) while longer-budget rows keep decoding.
+        // Without per-row lengths every row shares one logical length,
+        // so the conservative batch-max clip is the only sound bound.
+        let per_row = cache.per_row_lens();
+        // One budget per cache row; padding rows (batch_size > requests)
+        // get 0 and are frozen from the first decode step.
+        let budgets: Vec<usize> = (0..b)
+            .map(|row| {
+                let Some(r) = plan.requests.get(row) else { return 0 };
+                let cap = if per_row { r.prompt_len() } else { max_prompt };
+                r.max_new_tokens.min(max_ctx.saturating_sub(cap))
+            })
+            .collect();
+        let row_prompt =
+            |row: usize| plan.requests.get(row).map(|r| r.prompt_len()).unwrap_or(max_prompt);
+        let max_new = budgets.iter().copied().max().unwrap_or(0);
 
         // ---- prefill: right-pad each prompt to the step length ----------
         let t_batch = Instant::now();
@@ -75,7 +90,6 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
         for (row, req) in plan.requests.iter().enumerate() {
             tokens[row * seq..row * seq + req.prompt_len()].copy_from_slice(&req.prompt);
         }
-        let mut cache = self.backend.new_cache(self.variant, b)?;
         let t0 = Instant::now();
         let out = self.backend.forward(self.variant, Phase::Prefill, &tokens, b, &mut cache)?;
         let prefill_time = t0.elapsed();
@@ -105,16 +119,31 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
         let t1 = Instant::now();
         for _step in 0..max_new {
             for (row, g) in generated.iter_mut().enumerate() {
-                if g.len() < plan.requests[row].max_new_tokens {
+                if g.len() < budgets[row] {
                     g.push(next[row]);
                 }
             }
-            if generated
-                .iter()
-                .zip(&plan.requests)
-                .all(|(g, r)| g.len() >= r.max_new_tokens)
-            {
+            if generated.iter().zip(&budgets).all(|(g, &bud)| g.len() >= bud) {
                 break;
+            }
+            if per_row {
+                // Freeze finished rows (and padding rows): feed a pad
+                // token and pin the row's cache length one below its
+                // final length, so the pad recompute reuses a single slot
+                // and can never push the row past the context budget
+                // while longer-budget rows keep decoding.  Frozen rows'
+                // outputs are discarded, and per-row lengths keep their
+                // cache invisible to every other row.
+                for row in 0..b {
+                    if generated.get(row).is_some_and(|g| g.len() < budgets[row]) {
+                        continue; // still decoding
+                    }
+                    next[row] = self.pad_token;
+                    let pin = (row_prompt(row) + budgets[row])
+                        .saturating_sub(1)
+                        .min(max_ctx.saturating_sub(1));
+                    cache.set_row_len(row, pin);
+                }
             }
             let step_out =
                 self.backend.forward(self.variant, Phase::Decode, &next, b, &mut cache)?;
@@ -145,11 +174,74 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::native::{demo_policy, NativeBackend, NativeConfig};
+    use crate::coordinator::batcher::BatchPlan;
+    use crate::coordinator::request::Request;
 
     #[test]
     fn variant_reexport_parses() {
         assert_eq!(Variant::Quik4.prefix(), "quik4");
         assert_eq!(Variant::parse("fp16"), Some(Variant::Fp16));
         assert_eq!(Variant::parse("x"), None);
+    }
+
+    fn backend() -> NativeBackend {
+        NativeBackend::seeded("sched-test", NativeConfig::demo(), 5, demo_policy())
+            .unwrap()
+            .with_threads(1)
+    }
+
+    #[test]
+    fn short_row_in_mixed_batch_gets_its_own_budget() {
+        // Regression: decode budgets used to be clipped by the *batch-max*
+        // prompt (max_ctx=96 − long prompt 80 = 16), so the short row got
+        // 16 tokens instead of its own 30.  Per-row KV lengths make the
+        // per-row clip sound; the short row must match its solo run
+        // exactly, tokens and count.
+        let short: Vec<i32> = (0..10).map(|i| (i * 7 + 3) % 90).collect();
+        let long: Vec<i32> = (0..80).map(|i| (i * 11 + 5) % 90).collect();
+
+        let solo_plan = BatchPlan {
+            requests: vec![Request::new(0, short.clone(), 30)],
+            batch_size: 1,
+            prompt_len: short.len(),
+        };
+        let mut solo_backend = backend();
+        let mut solo_sched = Scheduler::new(&mut solo_backend, Variant::Fp16);
+        let solo = solo_sched.run_batch(solo_plan).unwrap();
+        assert_eq!(solo[0].generated.len(), 30);
+
+        // batch_size 3 leaves one padding row, which must be frozen too
+        // (it has no budget to spend past the batch-max prompt)
+        let plan = BatchPlan {
+            requests: vec![Request::new(1, long, 30), Request::new(2, short, 30)],
+            batch_size: 3,
+            prompt_len: 80,
+        };
+        let mut b = backend();
+        let mut sched = Scheduler::new(&mut b, Variant::Fp16);
+        let out = sched.run_batch(plan).unwrap();
+        // the long row's own budget really is 96 − 80 = 16
+        assert_eq!(out[0].generated.len(), 16, "long row budget");
+        assert_eq!(out[1].generated.len(), 30, "short row was clipped by the batch-max prompt");
+        assert_eq!(out[1].generated, solo[0].generated, "batched short row diverged from solo");
+    }
+
+    #[test]
+    fn uniform_budgets_unaffected_by_per_row_clip() {
+        // Same-length rows: the per-row clip degenerates to the old
+        // behavior (budget = max_ctx − prompt for every row).
+        let p: Vec<i32> = (0..90).map(|i| (i * 3 + 1) % 90).collect();
+        let plan = BatchPlan {
+            requests: vec![Request::new(0, p.clone(), 50), Request::new(1, p, 50)],
+            batch_size: 2,
+            prompt_len: 90,
+        };
+        let mut b = backend();
+        let mut sched = Scheduler::new(&mut b, Variant::Fp16);
+        let out = sched.run_batch(plan).unwrap();
+        for r in &out {
+            assert_eq!(r.generated.len(), 6, "96 − 90 = 6 tokens fit");
+        }
     }
 }

@@ -35,7 +35,12 @@ impl SharedCoordinator {
     }
 
     pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<Response> {
-        self.0.lock().unwrap().submit(prompt, max_new)
+        // A submitter that panicked while holding the lock poisons the
+        // mutex; the guarded state is just an id counter + channel
+        // sender (always consistent between statements), so recover the
+        // guard instead of letting one panic take down every future
+        // connection with `PoisonError` panics.
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).submit(prompt, max_new)
     }
 
     fn clone_ref(&self) -> Self {
@@ -84,9 +89,37 @@ pub fn format_response(r: &Response) -> String {
     )
 }
 
+/// JSON string literal for `s` (the subset of escapes our strict parser
+/// accepts — `{:?}` Rust-debug formatting is *not* valid JSON for every
+/// input, e.g. non-ASCII escapes).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// One connection's serve loop.  The contract regression-pinned by
+/// `tests/coordinator_integration.rs`: a malformed request — bad JSON,
+/// non-integer prompt tokens, empty prompt — gets a `{"error": ...}`
+/// line and the loop keeps serving; nothing a client sends may panic
+/// this handler or kill the connection.
 fn handle_conn(stream: TcpStream, coord: SharedCoordinator) {
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let Ok(read_half) = stream.try_clone() else {
+        return; // nothing we can report without a functioning socket
+    };
+    let reader = BufReader::new(read_half);
     let mut writer = stream;
     for line in reader.lines() {
         let Ok(line) = line else { break };
@@ -98,7 +131,7 @@ fn handle_conn(stream: TcpStream, coord: SharedCoordinator) {
                 Ok(resp) => format_response(&resp),
                 Err(_) => "{\"error\":\"coordinator unavailable\"}".to_string(),
             },
-            Err(e) => format!("{{\"error\":{:?}}}", e.to_string()),
+            Err(e) => format!("{{\"error\":{}}}", json_escape(&e.to_string())),
         };
         if writer.write_all(reply.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -106,7 +139,6 @@ fn handle_conn(stream: TcpStream, coord: SharedCoordinator) {
             break;
         }
     }
-    let _ = peer;
 }
 
 /// Serve forever on `addr` (e.g. `127.0.0.1:8191`).  Returns the bound
@@ -166,12 +198,20 @@ impl Client {
         if let Some(err) = v.get("error") {
             anyhow::bail!("server error: {err:?}");
         }
-        Ok(v.get("tokens")
+        // A reply with non-numeric tokens is a protocol error, not a
+        // panic (the old `as_f64().unwrap()` here crashed the caller's
+        // connection handling on any malformed line).
+        v.get("tokens")
             .and_then(Value::as_array)
             .context("missing tokens")?
             .iter()
-            .map(|t| t.as_f64().unwrap() as i32)
-            .collect())
+            .map(|t| {
+                t.as_f64()
+                    .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= i32::MAX as f64)
+                    .map(|x| x as i32)
+                    .context("non-integer token in server reply")
+            })
+            .collect()
     }
 }
 
@@ -213,5 +253,51 @@ mod tests {
         assert_eq!(v.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("tokens").unwrap().as_array().unwrap().len(), 3);
         assert_eq!(v.get("batch_size").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn error_lines_are_valid_json_for_any_message() {
+        for msg in ["plain", "with \"quotes\"", "back\\slash", "tab\there\nnewline", "héllo ✓"] {
+            let line = format!("{{\"error\":{}}}", json_escape(msg));
+            let v = parse(&line).unwrap_or_else(|e| panic!("{msg:?} escaped to invalid JSON: {e}"));
+            assert_eq!(v.get("error").unwrap().as_str(), Some(msg));
+        }
+    }
+
+    #[test]
+    fn poisoned_coordinator_mutex_recovers() {
+        // Regression: a submitter thread that panicked while holding the
+        // coordinator lock used to poison it permanently — every later
+        // connection's submit() then panicked on `.unwrap()`.  The guard
+        // must be recovered and requests keep flowing.
+        use crate::backend::native::{demo_policy, NativeCheckpoint, NativeConfig};
+        use crate::backend::Variant;
+        use crate::coordinator::batcher::BatcherConfig;
+
+        let ckpt = NativeCheckpoint::seeded(NativeConfig::demo(), 5);
+        let coord = Coordinator::start_native(
+            ckpt,
+            demo_policy(),
+            Variant::Fp16,
+            BatcherConfig {
+                batch_sizes: vec![1],
+                max_wait: Duration::from_millis(1),
+                bucket: 64,
+                max_queue: 16,
+            },
+        )
+        .unwrap();
+        let shared = SharedCoordinator::new(coord);
+        let arc = Arc::clone(&shared.0);
+        let poisoner = std::thread::spawn(move || {
+            let _guard = arc.lock().unwrap();
+            panic!("poison the coordinator mutex");
+        });
+        assert!(poisoner.join().is_err(), "poisoner must panic");
+        let resp = shared
+            .submit((0..8).map(|i| i % 90).collect(), 2)
+            .recv()
+            .expect("submit after poisoning must still serve");
+        assert_eq!(resp.generated.len(), 2);
     }
 }

@@ -22,8 +22,15 @@
 //!     blocked integer MatMul with the Eq.-1 dequantization epilogue
 //!     fused per tile (no per-call unpacking or allocation; bit-identical
 //!     to the scalar oracle) with FP32 outlier columns accumulated on
-//!     top; and `backend::pjrt` (behind the `pjrt` cargo feature), which
-//!     replays the L2 artifacts through PJRT;
+//!     top.  Every MatMul fans out across a persistent worker pool
+//!     ([`util::parallel`]): batch rows for deep prefills, output
+//!     panels/columns for decode, with a widened ×2-row `panel_dot`
+//!     micro-kernel (AVX2 widening i8→i32 MACs where available) — all of
+//!     it *bit-identical* to serial execution at every thread count
+//!     (`QUIK_THREADS` env override / `NativeBackend::with_threads`,
+//!     default: available parallelism).  And `backend::pjrt` (behind the
+//!     `pjrt` cargo feature), which replays the L2 artifacts through
+//!     PJRT;
 //!   * [`coordinator`] — dynamic batcher + scheduler + speculative
 //!     decoder + TCP front-end, generic over the backend trait;
 //!   * [`quant`] — the native QUIK quantization substrate (shared by both

@@ -16,9 +16,32 @@
 //! y[m,n] = acc[m,n] * scaleAct[m] * scaleW[n]
 //!        + (zeroAct[m] + halfRange * scaleAct[m]) * wReduced[n]
 //! ```
+//!
+//! The blocked kernel is layered so that throughput features can never
+//! change numerics:
+//!
+//! * **micro-kernel** — [`panel_dot`] / [`panel_dot_x2`]: `PANEL_ROWS`
+//!   i32 lanes per activation row; the ×2 variant widens the register
+//!   tile to 2×`PANEL_ROWS`, reusing each loaded weight column for two
+//!   rows (the QIGen recipe).  On x86-64 with AVX2 a
+//!   `target_feature`-gated explicit-intrinsics variant runs instead —
+//!   all variants do the *same exact integer arithmetic*, so kernel
+//!   selection cannot flip an output bit.
+//! * **tile executor** — one function walks a (row range × panel range)
+//!   tile; the serial entry points run the full tile on the caller.
+//! * **pooled entry points** — [`int_matmul_blocked_pooled`] /
+//!   [`quik_matmul_prepacked_pooled`] shard the tile across a
+//!   [`WorkerPool`]: batch rows when the batch is deep (prefill), output
+//!   panels when it is shallow (decode).  Each output element is still
+//!   produced by exactly one shard evaluating the serial expression, so
+//!   the parallel path is bit-identical to the serial oracle at every
+//!   thread count (pinned by `tests/proptests.rs`).
+
+use std::ops::Range;
 
 use super::quantizer::{ActQuant, WeightQuant};
 use super::half_range;
+use crate::util::parallel::{SliceWriter, WorkerPool};
 
 /// Output rows per packed panel (the register-blocking factor of the
 /// blocked kernel: one i32 accumulator lane per panel row).
@@ -84,29 +107,76 @@ pub fn int_matmul_blocked(qx: &[i8], pw: &PackedWeights, m: usize, acc: &mut Vec
     assert_eq!(qx.len(), m * k);
     acc.clear();
     acc.resize(m * n, 0);
-    for jp in 0..n.div_ceil(PANEL_ROWS) {
+    let dst = SliceWriter::new(acc.as_mut_slice());
+    int_tile(qx, pw, 0..m, 0..n.div_ceil(PANEL_ROWS), &dst);
+}
+
+/// [`int_matmul_blocked`] sharded across a [`WorkerPool`]: batch rows
+/// when `m >= threads` (prefill), output panels otherwise (decode).
+/// Tiny problems run inline.  Bit-identical to the serial kernel at any
+/// thread count — every `acc` element is exactly one shard's exact i32
+/// dot product.
+pub fn int_matmul_blocked_pooled(
+    qx: &[i8],
+    pw: &PackedWeights,
+    m: usize,
+    pool: &WorkerPool,
+    acc: &mut Vec<i32>,
+) {
+    let (n, k) = (pw.n, pw.k);
+    assert_eq!(qx.len(), m * k);
+    acc.clear();
+    acc.resize(m * n, 0);
+    let panels = n.div_ceil(PANEL_ROWS);
+    let dst = SliceWriter::new(acc.as_mut_slice());
+    pool.shard_2d(
+        m,
+        panels,
+        m * n * k,
+        |rows| int_tile(qx, pw, rows, 0..panels, &dst),
+        |ps| int_tile(qx, pw, 0..m, ps, &dst),
+    );
+}
+
+/// One (row range × panel range) tile of the blocked integer MatMul.
+/// Activation rows go through the widened 2×[`PANEL_ROWS`] micro-kernel
+/// in pairs (weight columns loaded once per pair), odd remainder through
+/// the single-row kernel.
+fn int_tile(
+    qx: &[i8],
+    pw: &PackedWeights,
+    rows: Range<usize>,
+    panels: Range<usize>,
+    dst: &SliceWriter<i32>,
+) {
+    let (n, k) = (pw.n, pw.k);
+    for jp in panels {
         let panel = &pw.data[jp * k * PANEL_ROWS..(jp + 1) * k * PANEL_ROWS];
         let j0 = jp * PANEL_ROWS;
         let jn = PANEL_ROWS.min(n - j0);
-        for i in 0..m {
+        let mut i = rows.start;
+        while i + 1 < rows.end {
+            let mut l0 = [0i32; PANEL_ROWS];
+            let mut l1 = [0i32; PANEL_ROWS];
+            panel_dot_x2(
+                &qx[i * k..(i + 1) * k],
+                &qx[(i + 1) * k..(i + 2) * k],
+                panel,
+                &mut l0,
+                &mut l1,
+            );
+            // SAFETY: this shard owns the (rows × panels) tile exclusively
+            unsafe {
+                dst.slice(i * n + j0, jn).copy_from_slice(&l0[..jn]);
+                dst.slice((i + 1) * n + j0, jn).copy_from_slice(&l1[..jn]);
+            }
+            i += 2;
+        }
+        if i < rows.end {
             let mut lanes = [0i32; PANEL_ROWS];
             panel_dot(&qx[i * k..(i + 1) * k], panel, &mut lanes);
-            acc[i * n + j0..i * n + j0 + jn].copy_from_slice(&lanes[..jn]);
-        }
-    }
-}
-
-/// The blocked micro-kernel: `PANEL_ROWS` i32 accumulator lanes walking
-/// one activation row against one weight panel.  The broadcast-multiply
-/// shape (one x value × a contiguous lane vector) is what the
-/// autovectorizer turns into widening i8→i32 SIMD MACs.
-#[inline]
-fn panel_dot(xrow: &[i8], panel: &[i8], lanes: &mut [i32; PANEL_ROWS]) {
-    for (kk, &xv) in xrow.iter().enumerate() {
-        let xv = xv as i32;
-        let wcol = &panel[kk * PANEL_ROWS..kk * PANEL_ROWS + PANEL_ROWS];
-        for (l, &w) in lanes.iter_mut().zip(wcol) {
-            *l += xv * w as i32;
+            // SAFETY: as above
+            unsafe { dst.slice(i * n + j0, jn).copy_from_slice(&lanes[..jn]) };
         }
     }
 }
@@ -132,20 +202,286 @@ pub fn quik_matmul_prepacked(
     assert_eq!(qx.len(), m * k);
     assert_eq!(out.len(), m * n);
     let hr = half_range(bits) as f32;
-    for jp in 0..n.div_ceil(PANEL_ROWS) {
+    let dst = SliceWriter::new(out);
+    let panels = 0..n.div_ceil(PANEL_ROWS);
+    quik_tile(qx, scale_act, zero_act, pw, scale_w, w_reduced, hr, 0..m, panels, &dst);
+}
+
+/// [`quik_matmul_prepacked`] sharded across a [`WorkerPool`] (rows for
+/// deep batches, output panels for shallow ones; tiny problems inline).
+/// Each output element is one shard's evaluation of the identical fused
+/// expression over the identical exact i32 accumulator, so this is
+/// bit-identical to the serial kernel — and therefore to the scalar
+/// [`int_matmul`]+[`dequantize`] oracle — at every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn quik_matmul_prepacked_pooled(
+    qx: &[i8],
+    scale_act: &[f32],
+    zero_act: &[f32],
+    pw: &PackedWeights,
+    scale_w: &[f32],
+    w_reduced: &[f32],
+    m: usize,
+    bits: u32,
+    pool: &WorkerPool,
+    out: &mut [f32],
+) {
+    let (n, k) = (pw.n, pw.k);
+    assert_eq!(qx.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    let hr = half_range(bits) as f32;
+    let panels = n.div_ceil(PANEL_ROWS);
+    let dst = SliceWriter::new(out);
+    pool.shard_2d(
+        m,
+        panels,
+        m * n * k,
+        |rows| {
+            quik_tile(qx, scale_act, zero_act, pw, scale_w, w_reduced, hr, rows, 0..panels, &dst)
+        },
+        |ps| quik_tile(qx, scale_act, zero_act, pw, scale_w, w_reduced, hr, 0..m, ps, &dst),
+    );
+}
+
+/// One (row range × panel range) tile of the fused kernel: integer panel
+/// dots (rows paired through the widened micro-kernel) plus the Eq.-1
+/// epilogue per row × panel.
+#[allow(clippy::too_many_arguments)]
+fn quik_tile(
+    qx: &[i8],
+    scale_act: &[f32],
+    zero_act: &[f32],
+    pw: &PackedWeights,
+    scale_w: &[f32],
+    w_reduced: &[f32],
+    hr: f32,
+    rows: Range<usize>,
+    panels: Range<usize>,
+    dst: &SliceWriter<f32>,
+) {
+    let (n, k) = (pw.n, pw.k);
+    for jp in panels {
         let panel = &pw.data[jp * k * PANEL_ROWS..(jp + 1) * k * PANEL_ROWS];
         let j0 = jp * PANEL_ROWS;
         let jn = PANEL_ROWS.min(n - j0);
-        for i in 0..m {
+        let mut i = rows.start;
+        while i + 1 < rows.end {
+            let mut l0 = [0i32; PANEL_ROWS];
+            let mut l1 = [0i32; PANEL_ROWS];
+            panel_dot_x2(
+                &qx[i * k..(i + 1) * k],
+                &qx[(i + 1) * k..(i + 2) * k],
+                panel,
+                &mut l0,
+                &mut l1,
+            );
+            epilogue(&l0, scale_act, zero_act, scale_w, w_reduced, hr, i, n, j0, jn, dst);
+            epilogue(&l1, scale_act, zero_act, scale_w, w_reduced, hr, i + 1, n, j0, jn, dst);
+            i += 2;
+        }
+        if i < rows.end {
             let mut lanes = [0i32; PANEL_ROWS];
             panel_dot(&qx[i * k..(i + 1) * k], panel, &mut lanes);
-            let sa = scale_act[i];
-            let shift = zero_act[i] + hr * sa;
-            for jr in 0..jn {
-                let j = j0 + jr;
-                out[i * n + j] = lanes[jr] as f32 * sa * scale_w[j] + shift * w_reduced[j];
+            epilogue(&lanes, scale_act, zero_act, scale_w, w_reduced, hr, i, n, j0, jn, dst);
+        }
+    }
+}
+
+/// Fused Eq.-1 epilogue for one row × panel tile — the same f32
+/// expression as [`dequantize`], element for element.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn epilogue(
+    lanes: &[i32; PANEL_ROWS],
+    scale_act: &[f32],
+    zero_act: &[f32],
+    scale_w: &[f32],
+    w_reduced: &[f32],
+    hr: f32,
+    i: usize,
+    n: usize,
+    j0: usize,
+    jn: usize,
+    dst: &SliceWriter<f32>,
+) {
+    let sa = scale_act[i];
+    let shift = zero_act[i] + hr * sa;
+    // SAFETY: the caller's shard owns this row × panel tile exclusively
+    let out = unsafe { dst.slice(i * n + j0, jn) };
+    for (jr, o) in out.iter_mut().enumerate() {
+        let j = j0 + jr;
+        *o = lanes[jr] as f32 * sa * scale_w[j] + shift * w_reduced[j];
+    }
+}
+
+/// The blocked micro-kernel: [`PANEL_ROWS`] i32 accumulator lanes walking
+/// one activation row against one weight panel.  Dispatches to the AVX2
+/// widening-MAC variant when the CPU has it; all variants perform the
+/// same exact integer arithmetic, so the selection can never change an
+/// output bit.
+#[inline]
+fn panel_dot(xrow: &[i8], panel: &[i8], lanes: &mut [i32; PANEL_ROWS]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd::have_avx2() {
+            // SAFETY: AVX2 presence verified at runtime
+            unsafe { simd::panel_dot_avx2(xrow, panel, lanes) };
+            return;
+        }
+    }
+    panel_dot_generic(xrow, panel, lanes);
+}
+
+/// Widened micro-kernel: a 2×[`PANEL_ROWS`] accumulator tile walking two
+/// activation rows against one weight panel, loading each weight column
+/// once (halves the dominant load traffic of deep-batch tiles).
+#[inline]
+fn panel_dot_x2(
+    x0: &[i8],
+    x1: &[i8],
+    panel: &[i8],
+    l0: &mut [i32; PANEL_ROWS],
+    l1: &mut [i32; PANEL_ROWS],
+) {
+    debug_assert_eq!(x0.len(), x1.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd::have_avx2() {
+            // SAFETY: AVX2 presence verified at runtime
+            unsafe { simd::panel_dot_x2_avx2(x0, x1, panel, l0, l1) };
+            return;
+        }
+    }
+    panel_dot_x2_generic(x0, x1, panel, l0, l1);
+}
+
+/// Portable micro-kernel, k-loop unrolled ×4 in the broadcast-multiply
+/// shape (one x value × a contiguous lane vector) the autovectorizer
+/// turns into widening i8→i32 SIMD MACs.
+fn panel_dot_generic(xrow: &[i8], panel: &[i8], lanes: &mut [i32; PANEL_ROWS]) {
+    let mut chunks = xrow.chunks_exact(4);
+    let mut base = 0usize;
+    for x4 in chunks.by_ref() {
+        for (u, &xv) in x4.iter().enumerate() {
+            let xv = xv as i32;
+            let wcol = &panel[base + u * PANEL_ROWS..base + (u + 1) * PANEL_ROWS];
+            for (l, &w) in lanes.iter_mut().zip(wcol) {
+                *l += xv * w as i32;
             }
         }
+        base += 4 * PANEL_ROWS;
+    }
+    for (u, &xv) in chunks.remainder().iter().enumerate() {
+        let xv = xv as i32;
+        let wcol = &panel[base + u * PANEL_ROWS..base + (u + 1) * PANEL_ROWS];
+        for (l, &w) in lanes.iter_mut().zip(wcol) {
+            *l += xv * w as i32;
+        }
+    }
+}
+
+/// Portable ×2-row micro-kernel (see [`panel_dot_x2`]).
+fn panel_dot_x2_generic(
+    x0: &[i8],
+    x1: &[i8],
+    panel: &[i8],
+    l0: &mut [i32; PANEL_ROWS],
+    l1: &mut [i32; PANEL_ROWS],
+) {
+    for (kk, (&a, &b)) in x0.iter().zip(x1).enumerate() {
+        let (a, b) = (a as i32, b as i32);
+        let wcol = &panel[kk * PANEL_ROWS..(kk + 1) * PANEL_ROWS];
+        for ((u, v), &w) in l0.iter_mut().zip(l1.iter_mut()).zip(wcol) {
+            let w = w as i32;
+            *u += a * w;
+            *v += b * w;
+        }
+    }
+}
+
+/// Explicit AVX2 widening i8→i32 multiply-accumulate micro-kernels,
+/// `target_feature`-gated and runtime-dispatched ([`have_avx2`] caches
+/// one `cpuid`).  Pure integer lanes: the accumulators are exactly the
+/// scalar accumulators, so enabling or disabling this path can never
+/// change an output bit (pinned by the `micro_kernel_variants_agree`
+/// test, which runs whichever variant the host dispatches against the
+/// portable one).
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use super::PANEL_ROWS;
+    use std::arch::x86_64::{
+        __m128i, __m256i, _mm256_add_epi32, _mm256_cvtepi8_epi32, _mm256_loadu_si256,
+        _mm256_mullo_epi32, _mm256_set1_epi32, _mm256_storeu_si256, _mm_loadl_epi64,
+    };
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    // The kernels hard-code 8 i32 lanes per __m256i accumulator.
+    const _: () = assert!(PANEL_ROWS == 8);
+
+    /// Cached runtime AVX2 detection.
+    #[inline]
+    pub fn have_avx2() -> bool {
+        static CACHE: AtomicU8 = AtomicU8::new(0);
+        match CACHE.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let yes = is_x86_feature_detected!("avx2");
+                CACHE.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (check [`have_avx2`]); `panel` must hold at least
+    /// `xrow.len() * PANEL_ROWS` bytes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn panel_dot_avx2(xrow: &[i8], panel: &[i8], lanes: &mut [i32; PANEL_ROWS]) {
+        debug_assert!(panel.len() >= xrow.len() * PANEL_ROWS);
+        let mut acc = _mm256_loadu_si256(lanes.as_ptr() as *const __m256i);
+        let wp = panel.as_ptr();
+        for (kk, &xv) in xrow.iter().enumerate() {
+            // 8 i8 weights sign-extended to 8×i32, MAC'd against the
+            // broadcast activation — the widening SIMD form of the
+            // scalar lane loop (exact i32 arithmetic either way).
+            let w8 = _mm_loadl_epi64(wp.add(kk * PANEL_ROWS) as *const __m128i);
+            let w = _mm256_cvtepi8_epi32(w8);
+            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(w, _mm256_set1_epi32(xv as i32)));
+        }
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (check [`have_avx2`]); `x0.len() == x1.len()` and
+    /// `panel` must hold at least `x0.len() * PANEL_ROWS` bytes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn panel_dot_x2_avx2(
+        x0: &[i8],
+        x1: &[i8],
+        panel: &[i8],
+        l0: &mut [i32; PANEL_ROWS],
+        l1: &mut [i32; PANEL_ROWS],
+    ) {
+        debug_assert_eq!(x0.len(), x1.len());
+        debug_assert!(panel.len() >= x0.len() * PANEL_ROWS);
+        let mut a0 = _mm256_loadu_si256(l0.as_ptr() as *const __m256i);
+        let mut a1 = _mm256_loadu_si256(l1.as_ptr() as *const __m256i);
+        let wp = panel.as_ptr();
+        for kk in 0..x0.len() {
+            let w8 = _mm_loadl_epi64(wp.add(kk * PANEL_ROWS) as *const __m128i);
+            let w = _mm256_cvtepi8_epi32(w8);
+            a0 = _mm256_add_epi32(
+                a0,
+                _mm256_mullo_epi32(w, _mm256_set1_epi32(*x0.get_unchecked(kk) as i32)),
+            );
+            a1 = _mm256_add_epi32(
+                a1,
+                _mm256_mullo_epi32(w, _mm256_set1_epi32(*x1.get_unchecked(kk) as i32)),
+            );
+        }
+        _mm256_storeu_si256(l0.as_mut_ptr() as *mut __m256i, a0);
+        _mm256_storeu_si256(l1.as_mut_ptr() as *mut __m256i, a1);
     }
 }
 
@@ -335,6 +671,68 @@ mod tests {
             want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             "fused epilogue must be bit-identical to the scalar pipeline"
         );
+    }
+
+    #[test]
+    fn micro_kernel_variants_agree() {
+        // The dispatched micro-kernel (AVX2 where the host has it) and
+        // the portable fallbacks must produce identical lanes — and the
+        // ×2-row widened tile must equal two single-row dots.
+        for k in [0usize, 1, 3, 4, 7, 8, 33, 200] {
+            let x0: Vec<i8> = (0..k).map(|i| ((i * 7 + 1) % 255) as i8).collect();
+            let x1: Vec<i8> = (0..k).map(|i| ((i * 13 + 5) % 255) as i8).collect();
+            let panel: Vec<i8> = (0..k * PANEL_ROWS).map(|i| ((i * 11 + 3) % 255) as i8).collect();
+            let mut want0 = [0i32; PANEL_ROWS];
+            panel_dot_generic(&x0, &panel, &mut want0);
+            let mut want1 = [0i32; PANEL_ROWS];
+            panel_dot_generic(&x1, &panel, &mut want1);
+            let mut got = [0i32; PANEL_ROWS];
+            panel_dot(&x0, &panel, &mut got);
+            assert_eq!(got, want0, "panel_dot diverged from portable at k={k}");
+            let mut g0 = [0i32; PANEL_ROWS];
+            let mut g1 = [0i32; PANEL_ROWS];
+            panel_dot_x2(&x0, &x1, &panel, &mut g0, &mut g1);
+            assert_eq!((g0, g1), (want0, want1), "panel_dot_x2 diverged at k={k}");
+            let mut h0 = [0i32; PANEL_ROWS];
+            let mut h1 = [0i32; PANEL_ROWS];
+            panel_dot_x2_generic(&x0, &x1, &panel, &mut h0, &mut h1);
+            assert_eq!((h0, h1), (want0, want1), "portable x2 diverged at k={k}");
+        }
+    }
+
+    #[test]
+    fn pooled_kernels_bitexact_across_thread_counts() {
+        use crate::util::parallel::WorkerPool;
+        let pools = Vec::from([1usize, 2, 3, 5].map(WorkerPool::new));
+        // shapes chosen to hit: inline (< work floor), row sharding
+        // (m >= threads) and panel sharding (m < threads) — and odd
+        // row counts for the paired micro-kernel remainder
+        let shapes = [(1usize, 1, 1), (3, 7, 5), (9, 40, 256), (2, 256, 256), (5, 13, 33)];
+        for &(m, n, k) in &shapes {
+            let qx: Vec<i8> = (0..m * k).map(|i| ((i * 7 + 3) % 15) as i8 - 8).collect();
+            let qw: Vec<i8> = (0..n * k).map(|i| ((i * 5 + 1) % 15) as i8 - 8).collect();
+            let want_acc = int_matmul(&qx, &qw, m, n, k);
+            let pw = PackedWeights::pack(&qw, n, k);
+            let sa: Vec<f32> = (0..m).map(|i| 0.25 + i as f32 * 0.125).collect();
+            let za: Vec<f32> = (0..m).map(|i| -0.5 + i as f32 * 0.0625).collect();
+            let sw: Vec<f32> = (0..n).map(|j| 0.5 + (j % 3) as f32 * 0.25).collect();
+            let wr: Vec<f32> = (0..n).map(|j| (j as f32) - 4.0).collect();
+            let want = dequantize(&want_acc, &sa, &za, &sw, &wr, m, n, 4);
+            for pool in &pools {
+                let mut acc = Vec::new();
+                int_matmul_blocked_pooled(&qx, &pw, m, pool, &mut acc);
+                let t = pool.threads();
+                assert_eq!(acc, want_acc, "int pooled diverged m={m} n={n} k={k} t={t}");
+                let mut got = vec![0f32; m * n];
+                quik_matmul_prepacked_pooled(&qx, &sa, &za, &pw, &sw, &wr, m, 4, pool, &mut got);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "fused pooled diverged m={m} n={n} k={k} t={}",
+                    pool.threads()
+                );
+            }
+        }
     }
 
     #[test]

@@ -26,7 +26,8 @@ pub mod quantizer;
 pub mod sparse;
 
 pub use dequant::{
-    dequantize, int_matmul, int_matmul_blocked, quik_matmul_prepacked, PackedWeights,
+    dequantize, int_matmul, int_matmul_blocked, int_matmul_blocked_pooled,
+    quik_matmul_prepacked, quik_matmul_prepacked_pooled, PackedWeights,
 };
 pub use quantizer::{
     quantize_acts, quantize_acts_into, quantize_weights, ActQuant, WeightQuant,

@@ -10,10 +10,14 @@
 //!   workload synthesis;
 //! * [`bench`] — a micro-benchmark harness (warmup + timed iterations,
 //!   mean/p50/p99) used by `rust/benches/*` in place of criterion;
+//! * [`parallel`] — the persistent scoped worker pool + disjoint-write
+//!   slice view the parallel kernels in [`crate::quant::dequant`] and the
+//!   native forward shard work through (std threads, no rayon);
 //! * [`argmax`] — the one greedy-decode primitive every backend shares.
 
 pub mod bench;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 
 /// Index of the largest element; the *first* maximum wins on exact ties

@@ -1,0 +1,400 @@
+//! The parallel execution subsystem for the native backend's hot path.
+//!
+//! A [`WorkerPool`] is a set of **persistent** std threads plus the
+//! caller: [`WorkerPool::broadcast`] runs one closure once per slot and
+//! returns when every slot has finished, so a borrowed closure (and
+//! everything it captures) is guaranteed to outlive all parallel use —
+//! scoped-thread semantics without paying a thread spawn per kernel call.
+//! Kernels shard work with [`WorkerPool::for_chunks`] (contiguous ranges,
+//! balanced to ±1) and write disjoint regions of a shared output through
+//! [`SliceWriter`].
+//!
+//! Design constraints (see `quant::dequant` for the kernels riding on
+//! this):
+//!
+//! * **bit-identical at any thread count** — the pool only *partitions*
+//!   index space; every output element is produced by exactly one shard
+//!   running exactly the serial per-element code, so results cannot
+//!   depend on `threads`.  There are no reductions across shards.
+//! * **allocation-free dispatch** — a broadcast stores one type-erased
+//!   pointer-to-closure in a pre-existing slot and wakes the workers; the
+//!   warm serving loop stays heap-silent (`tests/alloc_hotpath.rs`).
+//! * **no new dependencies** — std `Mutex`/`Condvar`/`thread` only.
+//!
+//! A pool of width 1 has no worker threads at all: `broadcast` runs the
+//! closure inline, which keeps single-thread configurations (the
+//! bit-identity oracle, `QUIK_THREADS=1`) on exactly the serial path.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// Work-size floor (≈ scalar multiply-accumulates) below which fanning a
+/// kernel out is a loss: waking workers costs a few microseconds, so
+/// tiny tiles (demo-scale decode steps) run inline on the caller.
+/// Callers gate on `m * n * k < MIN_PARALLEL_WORK`.
+pub const MIN_PARALLEL_WORK: usize = 1 << 16;
+
+/// One broadcast job: a type-erased `&closure` plus the monomorphized
+/// trampoline that invokes it with a slot index.  Valid only while the
+/// broadcasting call is blocked in [`WorkerPool::broadcast`] (which
+/// cannot return before every worker has finished the job).
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (),
+    call: unsafe fn(*const (), usize),
+    epoch: u64,
+}
+
+// SAFETY: the raw pointer is only dereferenced by workers while the
+// owning `broadcast` frame — which holds the real `&closure` — is alive.
+unsafe impl Send for Job {}
+
+struct State {
+    job: Option<Job>,
+    epoch: u64,
+    /// Workers that have not yet finished the current job.
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch.
+    work: Condvar,
+    /// The broadcaster waits here for `remaining == 0`.
+    done: Condvar,
+}
+
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    // State transitions never panic while holding the guard, but recover
+    // from poisoning anyway so one unwinding worker cannot wedge the pool.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker_loop(shared: Arc<Shared>, slot: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (fp, call) = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(j) = &st.job {
+                    if j.epoch != seen {
+                        seen = j.epoch;
+                        break (j.f, j.call);
+                    }
+                }
+                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // SAFETY: the broadcaster blocks until `remaining == 0`, so the
+        // closure behind `fp` outlives this call.
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { call(fp, slot) })).is_ok();
+        let mut st = lock(&shared.state);
+        if !ok {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A fixed-width pool of persistent worker threads with scoped,
+/// borrow-friendly fork/join execution (see module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Build a pool of total width `threads` (clamped to ≥ 1).  The
+    /// caller occupies slot 0; `threads - 1` worker threads take slots
+    /// `1..threads`.  Width 1 spawns nothing and runs everything inline.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|slot| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("quik-worker-{slot}"))
+                    .spawn(move || worker_loop(sh, slot))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles, threads }
+    }
+
+    /// A process-wide width-1 pool: the serial execution oracle.
+    pub fn serial() -> &'static WorkerPool {
+        static SERIAL: OnceLock<WorkerPool> = OnceLock::new();
+        SERIAL.get_or_init(|| WorkerPool::new(1))
+    }
+
+    /// Total parallelism (worker threads + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(slot)` once for every slot in `0..threads()`; the caller
+    /// executes slot 0, the workers slots `1..`.  Returns only when every
+    /// slot has finished, so `f` may borrow locals.  Panics (in any slot)
+    /// propagate to the caller after the join; the pool stays usable.
+    /// Must not be called recursively from inside `f` (the single job
+    /// slot would deadlock — debug builds assert).
+    pub fn broadcast<F>(&self, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.handles.is_empty() {
+            f(0);
+            return;
+        }
+        unsafe fn trampoline<F: Fn(usize)>(p: *const (), slot: usize) {
+            (*(p as *const F))(slot)
+        }
+        {
+            let mut st = lock(&self.shared.state);
+            debug_assert!(
+                st.job.is_none() && st.remaining == 0,
+                "nested/overlapping WorkerPool::broadcast"
+            );
+            st.epoch += 1;
+            st.job = Some(Job {
+                f: f as *const F as *const (),
+                call: trampoline::<F>,
+                epoch: st.epoch,
+            });
+            st.remaining = self.handles.len();
+            st.panicked = false;
+        }
+        self.shared.work.notify_all();
+        // The caller is slot 0.  Even if it panics, the workers borrow
+        // `f`, so the join below must happen before unwinding resumes.
+        let caller = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let workers_panicked = {
+            let mut st = lock(&self.shared.state);
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if workers_panicked {
+            panic!("worker thread panicked during parallel section");
+        }
+    }
+
+    /// Partition `0..units` into `threads()` contiguous chunks (balanced
+    /// to ±1, fewer when `units < threads()`) and run `f(range)` for each
+    /// chunk on its own slot.  `units == 0` is a no-op; one chunk runs
+    /// inline with no dispatch.
+    pub fn for_chunks<F>(&self, units: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if units == 0 {
+            return;
+        }
+        let t = self.threads.min(units);
+        if t == 1 {
+            f(0..units);
+            return;
+        }
+        let (base, rem) = (units / t, units % t);
+        self.broadcast(&|slot: usize| {
+            if slot >= t {
+                return;
+            }
+            let start = slot * base + slot.min(rem);
+            let len = base + usize::from(slot < rem);
+            f(start..start + len);
+        });
+    }
+
+    /// Shard a 2-D kernel over `[rows, cols]` output space with the one
+    /// policy every pooled kernel shares: run `by_rows(0..rows)` inline
+    /// when the pool is serial or `work` (≈ multiply-accumulates) is
+    /// below [`MIN_PARALLEL_WORK`]; shard contiguous row chunks when the
+    /// batch is deep (`rows >= threads()`); otherwise shard column
+    /// chunks.  Each closure must cover the full orthogonal axis for any
+    /// chunk it receives, and chunks are disjoint — which is what keeps
+    /// pooled kernels bit-identical to serial.
+    pub fn shard_2d<R, C>(&self, rows: usize, cols: usize, work: usize, by_rows: R, by_cols: C)
+    where
+        R: Fn(Range<usize>) + Sync,
+        C: Fn(Range<usize>) + Sync,
+    {
+        if self.threads == 1 || work < MIN_PARALLEL_WORK {
+            by_rows(0..rows);
+        } else if rows >= self.threads {
+            self.for_chunks(rows, by_rows);
+        } else {
+            self.for_chunks(cols, by_cols);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A shared view of a mutable slice that parallel shards write **disjoint**
+/// regions of (each kernel shard owns a set of output rows or columns, so
+/// no element is ever written twice — the same property that makes the
+/// parallel kernels bit-identical to serial).
+pub struct SliceWriter<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _lt: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: callers uphold disjointness of concurrently-written ranges (the
+// `slice` contract); `T: Send` means elements may be written from any thread.
+unsafe impl<T: Send> Send for SliceWriter<'_, T> {}
+unsafe impl<T: Send> Sync for SliceWriter<'_, T> {}
+
+impl<'a, T> SliceWriter<'a, T> {
+    pub fn new(s: &'a mut [T]) -> SliceWriter<'a, T> {
+        SliceWriter { ptr: s.as_mut_ptr(), len: s.len(), _lt: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reborrow `start..start + len` mutably.
+    ///
+    /// # Safety
+    /// The range must be in bounds, and ranges handed to concurrently
+    /// running shards must be disjoint.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len, "SliceWriter range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.broadcast(&|slot| {
+            assert_eq!(slot, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn zero_width_clamps_to_one() {
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn broadcast_runs_every_slot_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.broadcast(&|slot| {
+                hits[slot].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (slot, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 50, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn for_chunks_partitions_exactly() {
+        let pool = WorkerPool::new(3);
+        for units in [0usize, 1, 2, 3, 7, 16, 100] {
+            let seen: Vec<AtomicUsize> = (0..units).map(|_| AtomicUsize::new(0)).collect();
+            pool.for_chunks(units, |r| {
+                for i in r {
+                    seen[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                seen.iter().all(|s| s.load(Ordering::Relaxed) == 1),
+                "units={units} not covered exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.broadcast(&|slot| {
+                if slot == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "worker panic must reach the caller");
+        let hits = AtomicUsize::new(0);
+        pool.broadcast(&|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2, "pool unusable after a panic");
+    }
+
+    #[test]
+    fn slice_writer_disjoint_parallel_writes() {
+        let pool = WorkerPool::new(4);
+        let mut v = vec![0usize; 1000];
+        let dst = SliceWriter::new(v.as_mut_slice());
+        pool.for_chunks(1000, |r| {
+            // SAFETY: for_chunks ranges are disjoint
+            let s = unsafe { dst.slice(r.start, r.len()) };
+            for (off, x) in s.iter_mut().enumerate() {
+                *x = r.start + off;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+}

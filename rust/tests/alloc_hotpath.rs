@@ -15,6 +15,7 @@ use std::sync::Mutex;
 use quik::backend::native::{demo_policy, LinearScratch, NativeBackend, NativeConfig, QuikLinear};
 use quik::backend::{InferenceBackend, KvCache, Phase, Variant};
 use quik::config::LayerPlan;
+use quik::util::parallel::WorkerPool;
 use quik::util::rng::Rng;
 
 struct CountingAlloc;
@@ -64,13 +65,18 @@ fn prepared_linear_forward_is_allocation_free_when_warm() {
     for (wb, ab) in [(4u32, 4u32), (8, 8)] {
         let plan = LayerPlan { weight_bits: wb, act_bits: ab, n_outlier: 12, sparse24: false };
         let lin = QuikLinear::quantize(&w, n, k, plan, &calib, 8);
+        // width-1 pool: the serial hot path (a wider pool's broadcast is
+        // also allocation-free, but worker wake timing would make the
+        // count racy to pin; the parallel path's bit-identity has its own
+        // tests)
+        let pool = WorkerPool::serial();
         let mut scratch = LinearScratch::default();
         let mut out = Vec::new();
         // warm the scratch to this shape (buffers grow once)
-        lin.forward_into(&x, m, &mut scratch, &mut out);
-        lin.forward_into(&x, m, &mut scratch, &mut out);
+        lin.forward_into(&x, m, pool, &mut scratch, &mut out);
+        lin.forward_into(&x, m, pool, &mut scratch, &mut out);
         let before = allocs();
-        lin.forward_into(&x, m, &mut scratch, &mut out);
+        lin.forward_into(&x, m, pool, &mut scratch, &mut out);
         let during = allocs() - before;
         assert_eq!(during, 0, "W{wb}A{ab} forward_into allocated {during} times when warm");
     }

@@ -179,6 +179,54 @@ fn invalid_tokens_are_rejected_not_batched() {
 }
 
 #[test]
+fn malformed_tcp_requests_get_error_lines_not_disconnects() {
+    // Regression: nothing a client sends may kill its connection (or the
+    // handler thread).  Every malformed request — non-integer prompt
+    // elements, fractional tokens, garbage bytes, empty prompts — must
+    // produce a parseable {"error": ...} line, and the *same* connection
+    // must keep serving real requests afterwards.
+    use quik::coordinator::tcp::serve;
+    use quik::util::json::parse;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::mpsc;
+
+    let coord = start(Variant::Fp16, cfg());
+    let (ready_tx, ready_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        serve("127.0.0.1:0", coord, Some(ready_tx), Some(1)).unwrap();
+    });
+    let addr = ready_rx.recv().unwrap();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    for bad in [
+        r#"{"prompt": [1, "x", 3]}"#,
+        r#"{"prompt": [1.5]}"#,
+        r#"{"prompt": [1, null]}"#,
+        "not json at all",
+        r#"{"prompt": []}"#,
+        r#"{"max_new_tokens": 4}"#,
+    ] {
+        writeln!(writer, "{bad}").unwrap();
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "connection died after malformed request {bad:?}"
+        );
+        let v = parse(&line).unwrap_or_else(|e| panic!("bad reply to {bad:?} ({e}): {line:?}"));
+        assert!(v.get("error").is_some(), "expected an error line for {bad:?}, got {line}");
+    }
+    // the same connection still serves real requests
+    writeln!(writer, r#"{{"prompt": [1, 2, 3], "max_new_tokens": 2}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = parse(&line).unwrap();
+    assert!(v.get("error").is_none(), "valid request rejected: {line}");
+    assert_eq!(v.get("tokens").unwrap().as_array().unwrap().len(), 2);
+}
+
+#[test]
 fn tcp_server_roundtrip() {
     // Full network path: TCP JSON-lines server over the coordinator, two
     // concurrent clients, responses parse and contain the right counts.

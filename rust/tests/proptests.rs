@@ -9,6 +9,7 @@ use quik::coordinator::request::Request;
 use quik::quant::{
     dequant, gptq, int4, outlier, quantize_acts, quantize_weights, sparse,
 };
+use quik::util::parallel::WorkerPool;
 use quik::util::rng::Rng;
 
 const CASES: usize = 50;
@@ -134,12 +135,125 @@ fn prop_prepared_linear_forward_bitexact_with_seed_path() {
         let calib: Vec<f32> = (0..8 * k).map(|_| rng.normal() * 3.0).collect();
         let x: Vec<f32> = (0..m * k).map(|_| rng.normal() * 2.0).collect();
         let lin = QuikLinear::quantize(&w, n, k, plan, &calib, 8);
-        lin.forward_into(&x, m, &mut scratch, &mut out);
+        lin.forward_into(&x, m, WorkerPool::serial(), &mut scratch, &mut out);
         let want = lin.forward_unprepared(&x, m);
         assert_eq!(
             out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             "case {case}: prepared forward diverged (m={m} n={n} k={k} W{wb}A{ab})"
+        );
+    }
+}
+
+#[test]
+fn prop_pooled_kernels_bitexact_across_thread_counts() {
+    // The parallel execution subsystem may only *partition* work: at any
+    // pool width the blocked integer kernel must produce the exact i32
+    // accumulator of the scalar triple loop (integer accumulation is
+    // exact, and each output element is computed by exactly one shard).
+    let mut rng = Rng::new(109);
+    let pools = Vec::from([1usize, 2, 3, 4].map(WorkerPool::new));
+    for case in 0..20 {
+        // every few cases, force shapes big enough to cross the parallel
+        // work floor in row-shard and panel-shard modes
+        let (m, n, k) = match case % 4 {
+            0 => (8 + rng.below(4), 24 + rng.below(24), 256),
+            1 => (1 + rng.below(2), 200 + rng.below(60), 256),
+            _ => (1 + rng.below(9), 1 + rng.below(37), 1 + rng.below(70)),
+        };
+        let qx: Vec<i8> = (0..m * k).map(|_| rng.range_i32(-127, 126) as i8).collect();
+        let qw: Vec<i8> = (0..n * k).map(|_| rng.range_i32(-8, 7) as i8).collect();
+        let want = dequant::int_matmul(&qx, &qw, m, n, k);
+        let pw = dequant::PackedWeights::pack(&qw, n, k);
+        for pool in &pools {
+            let mut got = Vec::new();
+            dequant::int_matmul_blocked_pooled(&qx, &pw, m, pool, &mut got);
+            assert_eq!(
+                got,
+                want,
+                "case {case}: pooled kernel diverged at m={m} n={n} k={k} t={}",
+                pool.threads()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_linear_forward_bitexact_with_oracle() {
+    // Full QuikLinear::forward_into (gather → act quant → fused pooled
+    // kernel → pooled outlier GEMM) against the seed per-call-unpack
+    // oracle, across thread counts and both shard modes.
+    use quik::backend::native::{LinearScratch, QuikLinear};
+    use quik::config::LayerPlan;
+    let mut rng = Rng::new(110);
+    let pools = Vec::from([1usize, 2, 4].map(WorkerPool::new));
+    let mut scratch = LinearScratch::default();
+    let mut out = Vec::new();
+    for case in 0..8 {
+        let (k, n) = (192 + rng.below(128), 64 + rng.below(160));
+        let m = [1usize, 2, 4, 9][case % 4];
+        let (wb, ab) = if case % 2 == 0 { (4u32, 4u32) } else { (8, 8) };
+        let n_outlier = 8 + rng.below(24);
+        let plan = LayerPlan { weight_bits: wb, act_bits: ab, n_outlier, sparse24: false };
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let calib: Vec<f32> = (0..8 * k).map(|_| rng.normal() * 3.0).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() * 2.0).collect();
+        let lin = QuikLinear::quantize(&w, n, k, plan, &calib, 8);
+        let want = lin.forward_unprepared(&x, m);
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        for pool in &pools {
+            lin.forward_into(&x, m, pool, &mut scratch, &mut out);
+            assert_eq!(
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want_bits,
+                "case {case}: parallel forward diverged (m={m} n={n} k={k} W{wb}A{ab} t={})",
+                pool.threads()
+            );
+        }
+    }
+}
+
+#[test]
+fn degenerate_activation_rows_stay_finite_and_bitexact() {
+    // All-zero and constant activation rows through quantize_acts_into
+    // (scale floors at SCALE_EPS, never 0/0) and the full prepared
+    // linear: no NaN/inf anywhere, and the width-1 pool path is
+    // byte-identical to the serial prepacked oracle.
+    use quik::backend::native::{LinearScratch, QuikLinear};
+    use quik::config::LayerPlan;
+    let (m, k, n) = (4usize, 32usize, 12usize);
+    let mut x = vec![0f32; m * k]; // row 0: all zero
+    for c in 0..k {
+        x[k + c] = 4.25; // row 1: positive constant
+        x[2 * k + c] = -1.75; // row 2: negative constant
+        x[3 * k + c] = if c % 2 == 0 { 1.0 } else { -1.0 }; // row 3: mixed
+    }
+    let mut rng = Rng::new(11);
+    let w: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+    let calib: Vec<f32> = (0..8 * k).map(|_| rng.normal() * 2.0).collect();
+    for (wb, ab) in [(4u32, 4u32), (8, 8)] {
+        for bits in [4u32, 8] {
+            let qa = quantize_acts(&x, m, k, bits);
+            assert!(
+                qa.scale.iter().all(|s| s.is_finite() && *s > 0.0),
+                "degenerate rows produced a bad scale at A{bits}"
+            );
+            assert!(qa.zero.iter().all(|z| z.is_finite()));
+        }
+        let plan = LayerPlan { weight_bits: wb, act_bits: ab, n_outlier: 6, sparse24: false };
+        let lin = QuikLinear::quantize(&w, n, k, plan, &calib, 8);
+        let want = lin.forward_unprepared(&x, m);
+        assert!(
+            want.iter().all(|v| v.is_finite()),
+            "degenerate rows produced non-finite outputs at W{wb}A{ab}"
+        );
+        let mut scratch = LinearScratch::default();
+        let mut out = Vec::new();
+        lin.forward_into(&x, m, &WorkerPool::new(1), &mut scratch, &mut out);
+        assert_eq!(
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "thread-count=1 path not byte-identical on degenerate rows at W{wb}A{ab}"
         );
     }
 }
