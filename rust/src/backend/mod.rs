@@ -110,6 +110,19 @@ pub trait KvCache {
         false
     }
 
+    /// Recycle one row for a brand-new sequence without disturbing any
+    /// neighbor row: the row becomes logically empty and every position
+    /// of it is writable garbage.  The continuous batching engine
+    /// ([`crate::coordinator::engine::ContinuousEngine`]) calls this when
+    /// a slot retires, so the next admitted request starts from a clean
+    /// row while resident rows keep decoding in place.  The default
+    /// implementation is `set_row_len(row, 0)`, which is sufficient for
+    /// any cache whose `>= len` positions are masked and overwritten
+    /// (the fixed-buffer discipline above).
+    fn reset_row(&mut self, row: usize) {
+        self.set_row_len(row, 0);
+    }
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -193,6 +206,45 @@ pub trait InferenceBackend {
         batch: usize,
         cache: &mut Self::Cache,
     ) -> Result<StepOutput>;
+
+    /// One forward step over a *subset* of the batch rows.  `active[b]`
+    /// marks the rows this step computes; inactive rows are frozen:
+    /// their KV entries are neither attended nor written, their logical
+    /// cache length does not advance, and their logits rows are
+    /// unspecified (callers must discard them).  Token values in
+    /// inactive rows are arbitrary placeholders (pad tokens).
+    ///
+    /// This is the primitive behind the continuous batching engine
+    /// ([`crate::coordinator::engine::ContinuousEngine`]): a newly
+    /// admitted request prefills its slot while every resident row stays
+    /// frozen mid-decode, and free slots ride along at zero attention
+    /// cost.
+    ///
+    /// The default implementation **ignores the mask** and runs a plain
+    /// [`InferenceBackend::forward`] with every row live — only sound
+    /// while [`InferenceBackend::supports_row_masking`] answers `false`,
+    /// which keeps such backends on the static batch-at-a-time loop.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_masked(
+        &self,
+        variant: Variant,
+        phase: Phase,
+        tokens: &[i32],
+        batch: usize,
+        cache: &mut Self::Cache,
+        active: &[bool],
+    ) -> Result<StepOutput> {
+        let _ = active;
+        self.forward(variant, phase, tokens, batch, cache)
+    }
+
+    /// Does [`InferenceBackend::forward_masked`] actually honor the row
+    /// mask?  The continuous engine requires `true` here *and*
+    /// [`KvCache::per_row_lens`] on the cache; backends answering
+    /// `false` (the default) are served by the static fallback loop.
+    fn supports_row_masking(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

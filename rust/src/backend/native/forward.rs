@@ -24,7 +24,12 @@
 //!   allocates only its returned logits once the scratch is warm;
 //! * the KV cache tracks a *per-row* logical length, so a short row in a
 //!   right-padded mixed-length batch decodes at its own positions and
-//!   never attends pad KV — batched decode is bit-exact with solo decode.
+//!   never attends pad KV — batched decode is bit-exact with solo decode;
+//! * [`forward_pass_masked`] accepts an active-row mask: inactive rows
+//!   skip the attention loop and all KV writes and do not advance, which
+//!   is what lets the continuous batching engine prefill a newly admitted
+//!   slot while resident rows stay frozen (and retired slots cost no
+//!   attention work at all).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -481,6 +486,29 @@ pub(crate) fn forward_pass(
     pool: &WorkerPool,
     s: &mut ForwardScratch,
 ) -> Result<StepOutput> {
+    forward_pass_masked(ckpt, linears, tokens, batch, cache, pool, s, None)
+}
+
+/// Row-masked forward: the continuous-batching primitive.  With
+/// `active = Some(mask)`, only rows whose mask bit is set participate:
+/// inactive rows skip the attention loop entirely (no score/value work,
+/// no KV writes) and their logical cache length does not advance, so a
+/// frozen resident row is untouched — bit-for-bit — by a neighboring
+/// row's prefill or decode.  Inactive rows still flow through the
+/// (row-independent) linears as placeholder content; their logits are
+/// unspecified and must be discarded by the caller.  `active = None`
+/// runs every row, exactly the classic [`forward_pass`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_pass_masked(
+    ckpt: &NativeCheckpoint,
+    linears: &dyn LinearSet,
+    tokens: &[i32],
+    batch: usize,
+    cache: &mut NativeKvCache,
+    pool: &WorkerPool,
+    s: &mut ForwardScratch,
+    active: Option<&[bool]>,
+) -> Result<StepOutput> {
     let cfg = &ckpt.config;
     if batch == 0 || tokens.is_empty() || tokens.len() % batch != 0 {
         bail!("tokens len {} not a positive multiple of batch {batch}", tokens.len());
@@ -488,8 +516,24 @@ pub(crate) fn forward_pass(
     if cache.batch != batch {
         bail!("cache batch {} != step batch {batch}", cache.batch);
     }
+    if let Some(mask) = active {
+        if mask.len() != batch {
+            bail!("active mask len {} != batch {batch}", mask.len());
+        }
+        if !mask.iter().any(|&a| a) {
+            bail!("masked forward with no active rows");
+        }
+    }
+    let row_active = |b: usize| active.map_or(true, |m| m[b]);
     let seq = tokens.len() / batch;
-    let p0_max = cache.len();
+    // The context budget binds only the rows that actually advance: a
+    // resident row frozen near the context limit must not veto another
+    // slot's admission prefill.
+    let p0_max = (0..batch)
+        .filter(|&b| row_active(b))
+        .map(|b| cache.row_len[b])
+        .max()
+        .unwrap_or(0);
     if p0_max + seq > cfg.max_seq {
         bail!("context overflow: cache {} + step {seq} > max_seq {}", p0_max, cfg.max_seq);
     }
@@ -529,6 +573,9 @@ pub(crate) fn forward_pass(
         s.attn.clear();
         s.attn.resize(m * d, 0.0);
         for b in 0..batch {
+            if !row_active(b) {
+                continue; // frozen row: no KV writes, no attention work
+            }
             let p0 = cache.row_len[b];
             for t in 0..seq {
                 let row = b * seq + t;
@@ -592,8 +639,10 @@ pub(crate) fn forward_pass(
     rmsnorm_into(&s.x, &ckpt.final_norm, m, d, &mut s.xf);
     let mut logits = Vec::new();
     matmul_f32_into_pooled(&s.xf, &ckpt.lm_head, m, cfg.vocab, d, pool, &mut logits);
-    for len in cache.row_len.iter_mut() {
-        *len += seq;
+    for (b, len) in cache.row_len.iter_mut().enumerate() {
+        if row_active(b) {
+            *len += seq;
+        }
     }
     Ok(StepOutput { logits, batch, seq, vocab: cfg.vocab })
 }
@@ -748,6 +797,117 @@ mod tests {
         let step = fwd(&ck, &FpLinears(&ck), &[1, 6], 2, &mut cache).unwrap();
         assert_eq!(step.row(1, 0), solo.row(0, 0), "padded row diverged from solo decode");
         assert_eq!(cache.len(), long.len() + 1);
+    }
+
+    #[test]
+    fn masked_rows_are_frozen_and_unperturbed() {
+        // Continuous-batching primitive: row 1 is admitted (masked
+        // prefill) between two of row 0's decode steps.  Row 0 must stay
+        // frozen during the admission — cache length untouched, and its
+        // next decode bit-identical to an uninterrupted solo run.  Row
+        // 1's prefill must equal its own solo prefill.
+        let ck = tiny();
+        let prompt = [3, 7, 11];
+        // solo reference: prefill + two decode steps
+        let mut solo_cache = NativeKvCache::new(&ck.config, 1);
+        fwd(&ck, &FpLinears(&ck), &prompt, 1, &mut solo_cache).unwrap();
+        let s1 = fwd(&ck, &FpLinears(&ck), &[5], 1, &mut solo_cache).unwrap();
+        let s2 = fwd(&ck, &FpLinears(&ck), &[9], 1, &mut solo_cache).unwrap();
+
+        fn masked(
+            ck: &NativeCheckpoint,
+            toks: &[i32],
+            cache: &mut NativeKvCache,
+            scratch: &mut ForwardScratch,
+            mask: &[bool],
+        ) -> StepOutput {
+            let pool = WorkerPool::serial();
+            forward_pass_masked(ck, &FpLinears(ck), toks, 2, cache, pool, scratch, Some(mask))
+                .unwrap()
+        }
+        let mut scratch = ForwardScratch::default();
+        let mut cache = NativeKvCache::new(&ck.config, 2);
+        // prefill row 0 alone (row 1 masked off, placeholder tokens)
+        let mut grid = prompt.to_vec();
+        grid.extend([0, 0, 0]);
+        masked(&ck, &grid, &mut cache, &mut scratch, &[true, false]);
+        assert_eq!(cache.row_len, vec![3, 0]);
+        // first decode step of row 0
+        let d1 = masked(&ck, &[5, 0], &mut cache, &mut scratch, &[true, false]);
+        assert_eq!(d1.row(0, 0), s1.row(0, 0));
+        assert_eq!(cache.row_len, vec![4, 0]);
+        // admit row 1: masked prefill while row 0 is frozen mid-decode
+        let admit = masked(&ck, &[0, 0, 5, 9], &mut cache, &mut scratch, &[false, true]);
+        assert_eq!(cache.row_len, vec![4, 2], "frozen row advanced during neighbor prefill");
+        let mut c1 = NativeKvCache::new(&ck.config, 1);
+        let solo1 = fwd(&ck, &FpLinears(&ck), &[5, 9], 1, &mut c1).unwrap();
+        assert_eq!(admit.row(1, 1), solo1.row(0, 1), "admitted row diverged from solo prefill");
+        // row 0's next decode is bit-exact despite the interleaved admission
+        let d2 = masked(&ck, &[9, 0], &mut cache, &mut scratch, &[true, false]);
+        assert_eq!(d2.row(0, 0), s2.row(0, 0), "resident row perturbed by admission");
+    }
+
+    #[test]
+    fn masked_forward_rejects_bad_masks() {
+        let ck = tiny();
+        let pool = WorkerPool::serial();
+        let mut scratch = ForwardScratch::default();
+        let mut cache = NativeKvCache::new(&ck.config, 2);
+        // wrong mask length
+        assert!(forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[1, 2],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[true]),
+        )
+        .is_err());
+        // no active rows
+        assert!(forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[1, 2],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[false, false]),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reset_row_recycles_a_slot() {
+        // admit → retire → re-admit into the same row: the second
+        // sequence must see a clean row (its prefill equals solo).
+        let ck = tiny();
+        let mut cache = NativeKvCache::new(&ck.config, 2);
+        let mut grid = vec![4i32, 8, 12, 0, 0, 0];
+        grid[3..].copy_from_slice(&[2, 6, 10]);
+        fwd(&ck, &FpLinears(&ck), &grid, 2, &mut cache).unwrap();
+        assert_eq!(cache.row_len, vec![3, 3]);
+        cache.reset_row(1);
+        assert_eq!(cache.row_len, vec![3, 0]);
+        let pool = WorkerPool::serial();
+        let mut scratch = ForwardScratch::default();
+        let re = forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[0, 0, 7, 3],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[false, true]),
+        )
+        .unwrap();
+        let mut c1 = NativeKvCache::new(&ck.config, 1);
+        let solo = fwd(&ck, &FpLinears(&ck), &[7, 3], 1, &mut c1).unwrap();
+        assert_eq!(re.row(1, 1), solo.row(0, 1), "recycled slot saw stale cache state");
+        assert_eq!(cache.row_len, vec![3, 2]);
     }
 
     #[test]

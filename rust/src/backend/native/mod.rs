@@ -17,7 +17,10 @@
 //!
 //! Unlike the PJRT artifact runtime, shapes are fully dynamic: any
 //! `[batch, seq]` step within the context budget is accepted, so the
-//! scheduler pads only to the longest prompt in a batch.
+//! scheduler pads only to the longest prompt in a batch.  The forward is
+//! also *row-maskable* (`supports_row_masking`): the continuous batching
+//! engine prefills a newly admitted slot while resident rows stay frozen,
+//! and empty/retired slots cost no attention work.
 //!
 //! Every forward fans its MatMuls (quantized linears, FP32 outlier GEMM,
 //! lm-head) out across a persistent [`crate::util::parallel::WorkerPool`]
@@ -41,7 +44,9 @@ use crate::config::{ExecConfig, QuikPolicy};
 use crate::util::parallel::WorkerPool;
 use crate::util::rng::Rng;
 
-use self::forward::{forward_pass, CalibLinears, FpLinears, QuikLinears, LINEARS};
+use self::forward::{
+    forward_pass, forward_pass_masked, CalibLinears, FpLinears, QuikLinears, LINEARS,
+};
 
 pub use self::forward::{ForwardScratch, Linear, NativeKvCache, QuikStack};
 pub use self::linear::{LinearScratch, QuikLinear};
@@ -169,6 +174,48 @@ impl NativeBackend {
         self.ckpt.linear_bytes()
     }
 
+    /// One forward step, optionally row-masked (the continuous-engine
+    /// primitive): `active = Some(mask)` freezes every unmasked row —
+    /// no attention work, no KV writes, no length advance.
+    fn run_forward(
+        &self,
+        variant: Variant,
+        tokens: &[i32],
+        batch: usize,
+        cache: &mut NativeKvCache,
+        active: Option<&[bool]>,
+    ) -> Result<StepOutput> {
+        let mut scratch = self.scratch.borrow_mut();
+        match variant {
+            Variant::Fp16 => forward_pass_masked(
+                &self.ckpt,
+                &FpLinears(&self.ckpt),
+                tokens,
+                batch,
+                cache,
+                self.pool(),
+                &mut scratch,
+                active,
+            ),
+            Variant::Quik4 => {
+                let stack = self
+                    .quik
+                    .as_ref()
+                    .context("quik4 stack not built — call prepare(Quik4, ..) first")?;
+                forward_pass_masked(
+                    &self.ckpt,
+                    &QuikLinears(stack),
+                    tokens,
+                    batch,
+                    cache,
+                    self.pool(),
+                    &mut scratch,
+                    active,
+                )
+            }
+        }
+    }
+
     /// Build the QUIK stack: calibration forward → outlier selection →
     /// per-linear quantization under the policy's sensitivity rules.
     /// Idempotent; called by `prepare(Quik4, ..)`.
@@ -264,33 +311,27 @@ impl InferenceBackend for NativeBackend {
         batch: usize,
         cache: &mut NativeKvCache,
     ) -> Result<StepOutput> {
-        let mut scratch = self.scratch.borrow_mut();
-        match variant {
-            Variant::Fp16 => forward_pass(
-                &self.ckpt,
-                &FpLinears(&self.ckpt),
-                tokens,
-                batch,
-                cache,
-                self.pool(),
-                &mut scratch,
-            ),
-            Variant::Quik4 => {
-                let stack = self
-                    .quik
-                    .as_ref()
-                    .context("quik4 stack not built — call prepare(Quik4, ..) first")?;
-                forward_pass(
-                    &self.ckpt,
-                    &QuikLinears(stack),
-                    tokens,
-                    batch,
-                    cache,
-                    self.pool(),
-                    &mut scratch,
-                )
-            }
-        }
+        self.run_forward(variant, tokens, batch, cache, None)
+    }
+
+    fn forward_masked(
+        &self,
+        variant: Variant,
+        _phase: Phase,
+        tokens: &[i32],
+        batch: usize,
+        cache: &mut NativeKvCache,
+        active: &[bool],
+    ) -> Result<StepOutput> {
+        self.run_forward(variant, tokens, batch, cache, Some(active))
+    }
+
+    /// The native forward honors row masks: inactive rows skip all
+    /// attention work and KV writes (see
+    /// [`crate::backend::InferenceBackend::forward_masked`]), which is
+    /// what qualifies this backend for the continuous batching engine.
+    fn supports_row_masking(&self) -> bool {
+        true
     }
 }
 

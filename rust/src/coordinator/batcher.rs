@@ -85,6 +85,15 @@ impl DynamicBatcher {
         Ok(())
     }
 
+    /// Pop the oldest queued request, FIFO across buckets — the
+    /// admission path of the continuous engine, which fills one free
+    /// slot at a time and has no batch-shape constraint (so no bucketing
+    /// and no co-rider wait).  Backpressure semantics are unchanged:
+    /// admission control still happens in [`DynamicBatcher::try_push`].
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
@@ -248,6 +257,29 @@ mod tests {
         // draining frees capacity again
         b.next_batch(Instant::now() + Duration::from_millis(1)).unwrap();
         assert!(b.try_push(req(3, 10)).is_ok());
+    }
+
+    #[test]
+    fn pop_is_fifo_across_buckets_and_frees_capacity() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_sizes: vec![4, 1],
+            max_wait: Duration::from_millis(1000),
+            bucket: 64,
+            max_queue: 3,
+        });
+        assert!(b.pop().is_none());
+        assert!(b.try_push(req(0, 60)).is_ok());
+        assert!(b.try_push(req(1, 200)).is_ok()); // different bucket
+        assert!(b.try_push(req(2, 60)).is_ok());
+        assert!(b.try_push(req(3, 60)).is_err()); // at capacity
+        // strict arrival order, ignoring buckets
+        assert_eq!(b.pop().unwrap().id, 0);
+        assert_eq!(b.pop().unwrap().id, 1);
+        // popping freed capacity for admission again
+        assert!(b.try_push(req(4, 60)).is_ok());
+        assert_eq!(b.pop().unwrap().id, 2);
+        assert_eq!(b.pop().unwrap().id, 4);
+        assert!(b.pop().is_none());
     }
 
     #[test]

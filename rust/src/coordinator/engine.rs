@@ -1,0 +1,463 @@
+//! Continuous batching engine: a fixed set of decode **slots** over one
+//! long-lived backend cache.
+//!
+//! The static loop ([`crate::coordinator::scheduler::Scheduler`]) runs a
+//! formed batch to completion — one long decoder blocks every queued
+//! request, and freed rows burn decode steps on pad tokens.  QUIK's whole
+//! premise is that batched inference is compute-bound, so served
+//! throughput is decided by how *full* the batch dimension stays.  This
+//! engine keeps it full continuously:
+//!
+//! ```text
+//! slot lifecycle:   admit ──▶ prefill ──▶ decode …… decode ──▶ retire
+//!                     ▲        (row-masked: residents frozen)     │
+//!                     └──────────── slot freed, cache row reset ◀─┘
+//! ```
+//!
+//! * **admit** — a queued request claims a free slot at a step boundary.
+//!   Its prompt is prefilled through a *row-masked* forward
+//!   ([`InferenceBackend::forward_masked`]): only the new row is active,
+//!   so every resident row keeps its KV cache, logical length and RoPE
+//!   positions untouched — a chunked-prefill step that cannot perturb a
+//!   neighbor.
+//! * **decode** — each step advances every resident slot by one token;
+//!   free slots ride along masked off at zero attention cost.
+//! * **retire** — the moment a row hits its budget its [`Response`] is
+//!   delivered and the cache row is recycled ([`KvCache::reset_row`]);
+//!   the next admission reuses the slot immediately.
+//!
+//! The repo's signature invariant survives the inversion of control
+//! flow: rows are computationally independent and the row-masked forward
+//! freezes inactive rows bit-for-bit, so **every admitted request's
+//! token stream is bit-identical to its solo run** under any arrival
+//! schedule, at every thread count (pinned by
+//! `tests/engine_integration.rs`).
+//!
+//! Requirements: the backend must answer `true` from
+//! [`InferenceBackend::supports_row_masking`] and its cache from
+//! [`KvCache::per_row_lens`].  Backends without either (e.g. static PJRT
+//! artifacts) are served by the static batch-at-a-time fallback loop in
+//! [`crate::coordinator::server`].
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::request::{Request, RequestId, Response};
+use crate::backend::{InferenceBackend, KvCache, Phase, Variant};
+use crate::util::argmax;
+
+/// Environment override for the serving loop (`QUIK_ENGINE=continuous`
+/// or `QUIK_ENGINE=static`), consulted when the coordinator is started
+/// with [`EngineMode::Auto`].  CI crosses this with `QUIK_THREADS`.
+pub const ENGINE_ENV: &str = "QUIK_ENGINE";
+
+/// Which serving loop the coordinator worker drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    /// `QUIK_ENGINE` env override if set, else continuous when the
+    /// backend supports it, else static.
+    #[default]
+    Auto,
+    /// Slot-based continuous batching (errors at startup if the backend
+    /// lacks row masking or per-row cache lengths).
+    Continuous,
+    /// Classic batch-at-a-time loop (`Scheduler::run_batch`).
+    Static,
+}
+
+impl EngineMode {
+    pub fn parse(s: &str) -> Option<EngineMode> {
+        match s {
+            "auto" => Some(EngineMode::Auto),
+            "continuous" => Some(EngineMode::Continuous),
+            "static" => Some(EngineMode::Static),
+            _ => None,
+        }
+    }
+}
+
+/// One resident request: its decode state between engine steps.
+struct Slot {
+    req: Request,
+    /// Tokens this row may still generate (clipped by its own remaining
+    /// context, exactly like a solo run).
+    budget: usize,
+    generated: Vec<i32>,
+    /// Sampled but not yet emitted token (fed to the next decode step).
+    next: i32,
+    admitted: Instant,
+    prefill_time: Duration,
+    decode_start: Instant,
+    ttft: Duration,
+}
+
+/// Slot-based continuous batching engine over one backend cache.
+///
+/// The engine owns the long-lived cache and the slot table; the backend
+/// is passed into each call so the worker thread keeps ownership (the
+/// same pattern as [`crate::coordinator::scheduler::Scheduler`]).  All
+/// calls must use the backend the engine was built with.
+pub struct ContinuousEngine<B: InferenceBackend> {
+    variant: Variant,
+    n_slots: usize,
+    pad_token: i32,
+    max_ctx: usize,
+    cache: B::Cache,
+    slots: Vec<Option<Slot>>,
+    /// Reused per-step buffers (decode runs once per generated token).
+    tokens_buf: Vec<i32>,
+    active_buf: Vec<bool>,
+}
+
+impl<B: InferenceBackend> ContinuousEngine<B> {
+    /// Build an engine with `n_slots` decode slots.  Prepares the
+    /// backend's (variant, phase, n_slots) programs and allocates the
+    /// long-lived cache.  Fails when the backend cannot freeze rows
+    /// (no row masking / per-row lengths) — callers fall back to the
+    /// static loop.
+    pub fn new(backend: &mut B, variant: Variant, n_slots: usize) -> Result<Self> {
+        if n_slots == 0 {
+            bail!("continuous engine needs at least one slot");
+        }
+        // Capability-gate *before* preparing programs or allocating the
+        // long-lived cache: the Auto-mode fallback probe on an incapable
+        // backend (PJRT) should cost nothing.
+        if !backend.supports_row_masking() {
+            bail!(
+                "backend {} cannot run the continuous engine (no row-masked \
+                 forwards); use the static loop",
+                backend.name()
+            );
+        }
+        backend.prepare(variant, Phase::Prefill, n_slots)?;
+        backend.prepare(variant, Phase::Decode, n_slots)?;
+        let cache = backend.new_cache(variant, n_slots)?;
+        if !cache.per_row_lens() {
+            bail!(
+                "backend {} cannot run the continuous engine (no per-row KV \
+                 lengths); use the static loop",
+                backend.name()
+            );
+        }
+        Ok(Self {
+            variant,
+            n_slots,
+            pad_token: 0,
+            max_ctx: backend.max_context(),
+            cache,
+            slots: (0..n_slots).map(|_| None).collect(),
+            tokens_buf: Vec::new(),
+            active_buf: Vec::new(),
+        })
+    }
+
+    /// Total decode slots.
+    pub fn slot_count(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Currently resident (admitted, not yet retired) requests.
+    pub fn resident(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    /// Admit one request into a free slot: a row-masked prefill of its
+    /// prompt while every resident row stays frozen.  Returns the slot
+    /// row.  The caller must have validated the request (non-empty
+    /// prompt, in-vocab tokens, prompt within the context budget) and
+    /// checked [`ContinuousEngine::has_free_slot`]; an error here means
+    /// the request cannot be served (its waiter should be closed).
+    pub fn admit(&mut self, backend: &mut B, req: Request) -> Result<usize> {
+        let row = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow!("no free slot"))?;
+        let prompt_len = req.prompt.len();
+        if prompt_len == 0 {
+            bail!("empty prompt");
+        }
+        let seq = backend.step_seq(self.variant, Phase::Prefill, self.n_slots, prompt_len)?;
+        if prompt_len > seq {
+            bail!("prompt length {prompt_len} exceeds prefill step {seq}");
+        }
+        // The same per-row clip a solo run gets: this row's own prompt,
+        // never a batch-max.
+        let budget = req.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
+        let admitted = Instant::now();
+        self.cache.reset_row(row);
+        // [n_slots, prompt_len] token grid: the new row carries the
+        // prompt, every other row a placeholder pad column.  Only the
+        // new row is active, so residents neither attend, nor write KV,
+        // nor advance.
+        let mut tokens = vec![self.pad_token; self.n_slots * prompt_len];
+        tokens[row * prompt_len..(row + 1) * prompt_len].copy_from_slice(&req.prompt);
+        let mut active = vec![false; self.n_slots];
+        active[row] = true;
+        let out = backend.forward_masked(
+            self.variant,
+            Phase::Prefill,
+            &tokens,
+            self.n_slots,
+            &mut self.cache,
+            &active,
+        )?;
+        let next = argmax(out.row(row, prompt_len - 1));
+        let prefill_time = admitted.elapsed();
+        self.slots[row] = Some(Slot {
+            ttft: req.arrival.elapsed(),
+            req,
+            budget,
+            generated: Vec::new(),
+            next,
+            admitted,
+            prefill_time,
+            decode_start: Instant::now(),
+        });
+        Ok(row)
+    }
+
+    /// One engine step: emit every resident row's pending token, retire
+    /// rows that hit their budget (freeing their slot and resetting the
+    /// cache row), then run one row-masked decode forward for the rows
+    /// still resident.  Returns the responses retired by this step.
+    pub fn step(&mut self, backend: &mut B) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        for row in 0..self.n_slots {
+            let retire = match &mut self.slots[row] {
+                Some(slot) => {
+                    if slot.generated.len() < slot.budget {
+                        slot.generated.push(slot.next);
+                    }
+                    slot.generated.len() >= slot.budget
+                }
+                None => false,
+            };
+            if retire {
+                let slot = self.slots[row].take().expect("slot resident");
+                self.cache.reset_row(row);
+                done.push(finish(slot, self.n_slots));
+            }
+        }
+
+        self.tokens_buf.clear();
+        self.tokens_buf.resize(self.n_slots, self.pad_token);
+        self.active_buf.clear();
+        self.active_buf.resize(self.n_slots, false);
+        let mut any = false;
+        for (row, s) in self.slots.iter().enumerate() {
+            if let Some(slot) = s {
+                self.tokens_buf[row] = slot.next;
+                self.active_buf[row] = true;
+                any = true;
+            }
+        }
+        if any {
+            let out = backend.forward_masked(
+                self.variant,
+                Phase::Decode,
+                &self.tokens_buf,
+                self.n_slots,
+                &mut self.cache,
+                &self.active_buf,
+            )?;
+            for (row, s) in self.slots.iter_mut().enumerate() {
+                if let Some(slot) = s {
+                    slot.next = argmax(out.row(row, 0));
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// Run steps until every resident row retires (shutdown drain).
+    /// Bounded by the context budget — each row finishes within its
+    /// remaining decode budget, which can never exceed `max_ctx`.
+    pub fn drain(&mut self, backend: &mut B) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        for _ in 0..=self.max_ctx + 1 {
+            if self.resident() == 0 {
+                return Ok(done);
+            }
+            done.extend(self.step(backend)?);
+        }
+        bail!("engine failed to drain within the context budget");
+    }
+
+    /// Evict every resident request without responses (a failed forward
+    /// left them unservable); returns their ids so the caller can close
+    /// the waiting channels.  All cache rows are reset.
+    pub fn fail_all(&mut self) -> Vec<RequestId> {
+        let mut ids = Vec::new();
+        for row in 0..self.n_slots {
+            if let Some(slot) = self.slots[row].take() {
+                self.cache.reset_row(row);
+                ids.push(slot.req.id);
+            }
+        }
+        ids
+    }
+}
+
+/// Build the response of one retiring slot.
+fn finish(slot: Slot, n_slots: usize) -> Response {
+    Response {
+        id: slot.req.id,
+        prompt_len: slot.req.prompt_len(),
+        generated: slot.generated,
+        queue_time: slot.admitted.duration_since(slot.req.arrival),
+        prefill_time: slot.prefill_time,
+        decode_time: slot.decode_start.elapsed(),
+        ttft: slot.ttft,
+        total_time: slot.req.arrival.elapsed(),
+        batch_size: n_slots,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{demo_policy, NativeBackend, NativeConfig};
+
+    fn backend() -> NativeBackend {
+        NativeBackend::seeded("engine-test", NativeConfig::demo(), 5, demo_policy())
+            .unwrap()
+            .with_threads(1)
+    }
+
+    fn prompt(seed: i32, len: usize) -> Vec<i32> {
+        (0..len as i32).map(|i| (i * 7 + seed).rem_euclid(90)).collect()
+    }
+
+    /// Drive the engine until `want` responses have retired.
+    fn run_until(
+        engine: &mut ContinuousEngine<NativeBackend>,
+        backend: &mut NativeBackend,
+        want: usize,
+    ) -> Vec<Response> {
+        let mut out = Vec::new();
+        for _ in 0..1000 {
+            if out.len() >= want {
+                break;
+            }
+            out.extend(engine.step(backend).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn admit_decode_retire_lifecycle() {
+        let mut b = backend();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
+        assert_eq!(engine.slot_count(), 2);
+        assert!(engine.has_free_slot());
+        assert_eq!(engine.resident(), 0);
+
+        engine.admit(&mut b, Request::new(0, prompt(3, 8), 4)).unwrap();
+        engine.admit(&mut b, Request::new(1, prompt(5, 12), 2)).unwrap();
+        assert_eq!(engine.resident(), 2);
+        assert!(!engine.has_free_slot());
+
+        let done = run_until(&mut engine, &mut b, 2);
+        assert_eq!(done.len(), 2);
+        assert_eq!(engine.resident(), 0);
+        let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).generated.len(), 4);
+        assert_eq!(by_id(1).generated.len(), 2);
+        assert_eq!(by_id(1).batch_size, 2);
+        assert!(by_id(0).ttft <= by_id(0).total_time);
+    }
+
+    #[test]
+    fn short_rider_retires_before_long_resident() {
+        // The continuous-batching point: a later, shorter request must
+        // not wait for an earlier long decoder (the old run-to-completion
+        // loop serialized them).
+        let mut b = backend();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
+        engine.admit(&mut b, Request::new(0, prompt(1, 8), 40)).unwrap();
+        // a few resident-only decode steps before the second arrival
+        let mut done = Vec::new();
+        for _ in 0..3 {
+            done.extend(engine.step(&mut b).unwrap());
+        }
+        assert!(done.is_empty());
+        engine.admit(&mut b, Request::new(1, prompt(2, 8), 2)).unwrap();
+        let first = run_until(&mut engine, &mut b, 1);
+        assert_eq!(first[0].id, 1, "short request did not overtake the long resident");
+        assert_eq!(engine.resident(), 1, "long request must still be decoding");
+        let rest = run_until(&mut engine, &mut b, 1);
+        assert_eq!(rest[0].id, 0);
+        assert_eq!(rest[0].generated.len(), 40);
+    }
+
+    #[test]
+    fn zero_budget_request_retires_with_empty_stream() {
+        let mut b = backend();
+        let max = b.config().max_seq;
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        // prompt fills the whole context: budget clips to 0
+        engine.admit(&mut b, Request::new(7, prompt(0, max), 5)).unwrap();
+        let done = run_until(&mut engine, &mut b, 1);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].generated.is_empty());
+        assert!(engine.has_free_slot());
+    }
+
+    #[test]
+    fn admit_requires_a_free_slot_and_fitting_prompt() {
+        let mut b = backend();
+        let max = b.config().max_seq;
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        engine.admit(&mut b, Request::new(0, prompt(0, 8), 4)).unwrap();
+        assert!(engine.admit(&mut b, Request::new(1, prompt(0, 8), 4)).is_err());
+        let mut engine2 = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        assert!(engine2.admit(&mut b, Request::new(2, prompt(0, max + 1), 1)).is_err());
+        assert!(engine2.has_free_slot(), "failed admission must not leak a slot");
+    }
+
+    #[test]
+    fn fail_all_evicts_and_frees_every_slot() {
+        let mut b = backend();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
+        engine.admit(&mut b, Request::new(0, prompt(1, 8), 4)).unwrap();
+        engine.admit(&mut b, Request::new(1, prompt(2, 8), 4)).unwrap();
+        let mut ids = engine.fail_all();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(engine.resident(), 0);
+        // slots are reusable afterwards
+        engine.admit(&mut b, Request::new(2, prompt(3, 8), 1)).unwrap();
+        let done = engine.drain(&mut b).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 2);
+    }
+
+    #[test]
+    fn drain_finishes_every_resident_row() {
+        let mut b = backend();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
+        engine.admit(&mut b, Request::new(0, prompt(1, 8), 10)).unwrap();
+        engine.admit(&mut b, Request::new(1, prompt(2, 16), 3)).unwrap();
+        let done = engine.drain(&mut b).unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(engine.resident(), 0);
+        let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).generated.len(), 10);
+        assert_eq!(by_id(1).generated.len(), 3);
+    }
+
+    #[test]
+    fn engine_mode_parses() {
+        assert_eq!(EngineMode::parse("auto"), Some(EngineMode::Auto));
+        assert_eq!(EngineMode::parse("continuous"), Some(EngineMode::Continuous));
+        assert_eq!(EngineMode::parse("static"), Some(EngineMode::Static));
+        assert_eq!(EngineMode::parse("x"), None);
+        assert_eq!(EngineMode::default(), EngineMode::Auto);
+    }
+}

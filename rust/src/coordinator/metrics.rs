@@ -1,6 +1,15 @@
 //! Serving metrics: counters + log-bucketed latency histograms.
+//!
+//! Two occupancy views coexist: [`Metrics::occupancy`] is the classic
+//! per-formed-batch padding ratio of the static loop, and
+//! [`Metrics::step_occupancy`] is the continuous engine's per-decode-step
+//! slot utilization (resident rows / total slots, sampled every step) —
+//! the number QUIK's compute-bound batching argument cares about.
+//! Time-to-first-token is tracked per request in [`Metrics::ttft_time`].
 
 use std::time::Duration;
+
+use super::request::Response;
 
 /// Log-scale histogram from 1µs to ~17min (doubling buckets).
 #[derive(Debug, Clone)]
@@ -68,9 +77,19 @@ pub struct Metrics {
     pub generated_tokens: u64,
     pub batches: u64,
     pub padded_slots: u64,
+    /// Decode steps the continuous engine has executed (0 under the
+    /// static loop, whose steps happen inside `run_batch`).
+    pub engine_steps: u64,
+    /// Sum over engine steps of the resident-slot count at that step.
+    pub occupied_slot_steps: u64,
+    /// Sum over engine steps of the total slot count.
+    pub slot_steps: u64,
     pub queue_time: Histogram,
     pub prefill_time: Histogram,
     pub decode_time: Histogram,
+    /// Time-to-first-token per request (arrival → first generated token
+    /// available).
+    pub ttft_time: Histogram,
     pub e2e_time: Histogram,
 }
 
@@ -78,6 +97,27 @@ impl Metrics {
     pub fn record_batch(&mut self, batch_size: usize, used: usize) {
         self.batches += 1;
         self.padded_slots += (batch_size - used) as u64;
+    }
+
+    /// One continuous-engine decode step: `occupied` of `slots` rows
+    /// were resident when the step ran.
+    pub fn record_step(&mut self, occupied: usize, slots: usize) {
+        self.engine_steps += 1;
+        self.occupied_slot_steps += occupied as u64;
+        self.slot_steps += slots as u64;
+    }
+
+    /// Fold one completed request into every per-request counter and
+    /// histogram (shared by the continuous and static serving loops).
+    pub fn record_response(&mut self, r: &Response) {
+        self.requests_completed += 1;
+        self.prompt_tokens += r.prompt_len as u64;
+        self.generated_tokens += r.generated.len() as u64;
+        self.queue_time.record(r.queue_time);
+        self.prefill_time.record(r.prefill_time);
+        self.decode_time.record(r.decode_time);
+        self.ttft_time.record(r.ttft);
+        self.e2e_time.record(r.total_time);
     }
 
     /// Mean batch occupancy (1.0 = no padding waste).
@@ -89,12 +129,31 @@ impl Metrics {
         self.requests_completed as f64 / total_slots as f64
     }
 
+    /// Mean per-step slot occupancy of the continuous engine (1.0 =
+    /// every slot decoding at every step).  1.0 when no engine steps
+    /// have run (static loop).
+    pub fn step_occupancy(&self) -> f64 {
+        if self.slot_steps == 0 {
+            return 1.0;
+        }
+        self.occupied_slot_steps as f64 / self.slot_steps as f64
+    }
+
     pub fn report(&self) -> String {
+        // A fabricated neutral occupancy for a loop that never stepped
+        // (static mode) would mislead operators — say n/a instead.
+        let step_occ = if self.slot_steps == 0 {
+            "n/a".to_string()
+        } else {
+            format!("{:.2}", self.step_occupancy())
+        };
         format!(
             "requests={} rejected={} prompt_toks={} gen_toks={} batches={} occupancy={:.2}\n\
+             engine_steps={} step_occupancy={step_occ}\n\
              queue   mean={:?} p50={:?} p99={:?}\n\
              prefill mean={:?} p50={:?} p99={:?}\n\
              decode  mean={:?} p50={:?} p99={:?}\n\
+             ttft    mean={:?} p50={:?} p95={:?} p99={:?}\n\
              e2e     mean={:?} p50={:?} p99={:?}",
             self.requests_completed,
             self.rejected,
@@ -102,6 +161,7 @@ impl Metrics {
             self.generated_tokens,
             self.batches,
             self.occupancy(),
+            self.engine_steps,
             self.queue_time.mean(),
             self.queue_time.quantile(0.5),
             self.queue_time.quantile(0.99),
@@ -111,9 +171,51 @@ impl Metrics {
             self.decode_time.mean(),
             self.decode_time.quantile(0.5),
             self.decode_time.quantile(0.99),
+            self.ttft_time.mean(),
+            self.ttft_time.quantile(0.5),
+            self.ttft_time.quantile(0.95),
+            self.ttft_time.quantile(0.99),
             self.e2e_time.mean(),
             self.e2e_time.quantile(0.5),
             self.e2e_time.quantile(0.99),
+        )
+    }
+
+    /// Machine-readable snapshot (the TCP `{"metrics": true}` verb) —
+    /// strict JSON, parseable by [`crate::util::json::parse`].
+    pub fn to_json(&self) -> String {
+        fn hist(h: &Histogram) -> String {
+            format!(
+                "{{\"count\":{},\"mean_ms\":{:.3},\"p50_ms\":{:.3},\"p95_ms\":{:.3},\"p99_ms\":{:.3},\"max_ms\":{:.3}}}",
+                h.count(),
+                h.mean().as_secs_f64() * 1e3,
+                h.quantile(0.5).as_secs_f64() * 1e3,
+                h.quantile(0.95).as_secs_f64() * 1e3,
+                h.quantile(0.99).as_secs_f64() * 1e3,
+                h.max().as_secs_f64() * 1e3,
+            )
+        }
+        // `null` (not a fabricated 1.0) when the continuous engine never
+        // stepped — the static loop has no step occupancy to report.
+        let step_occ = if self.slot_steps == 0 {
+            "null".to_string()
+        } else {
+            format!("{:.4}", self.step_occupancy())
+        };
+        format!(
+            "{{\"requests_completed\":{},\"rejected\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"e2e\":{}}}",
+            self.requests_completed,
+            self.rejected,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.batches,
+            self.occupancy(),
+            self.engine_steps,
+            hist(&self.queue_time),
+            hist(&self.prefill_time),
+            hist(&self.decode_time),
+            hist(&self.ttft_time),
+            hist(&self.e2e_time),
         )
     }
 }
@@ -148,5 +250,60 @@ mod tests {
         m.record_batch(4, 3); // 1 padded
         m.record_batch(4, 3); // 1 padded
         assert!((m.occupancy() - 6.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_occupancy_tracks_resident_slots() {
+        let mut m = Metrics::default();
+        assert_eq!(m.step_occupancy(), 1.0); // no steps: neutral
+        m.record_step(1, 4);
+        m.record_step(3, 4);
+        m.record_step(4, 4);
+        assert_eq!(m.engine_steps, 3);
+        assert!((m.step_occupancy() - 8.0 / 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_response_fills_every_histogram() {
+        let mut m = Metrics::default();
+        let r = Response {
+            id: 0,
+            prompt_len: 4,
+            generated: vec![1, 2],
+            queue_time: Duration::from_micros(10),
+            prefill_time: Duration::from_micros(100),
+            decode_time: Duration::from_micros(200),
+            ttft: Duration::from_micros(110),
+            total_time: Duration::from_micros(310),
+            batch_size: 2,
+        };
+        m.record_response(&r);
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.prompt_tokens, 4);
+        assert_eq!(m.generated_tokens, 2);
+        assert_eq!(m.ttft_time.count(), 1);
+        assert_eq!(m.e2e_time.count(), 1);
+    }
+
+    #[test]
+    fn to_json_parses_strictly() {
+        let mut m = Metrics::default();
+        m.record_step(2, 4);
+        m.ttft_time.record(Duration::from_micros(500));
+        let v = crate::util::json::parse(&m.to_json()).expect("metrics JSON must parse");
+        assert_eq!(v.get("engine_steps").unwrap().as_usize(), Some(1));
+        assert!(v.get("ttft").unwrap().get("count").is_some());
+        assert!(v.get("step_occupancy").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn to_json_reports_null_occupancy_without_engine_steps() {
+        // Static loop: no engine steps ran, so step occupancy must be
+        // null — never a fabricated neutral 1.0.
+        let m = Metrics::default();
+        let v = crate::util::json::parse(&m.to_json()).expect("metrics JSON must parse");
+        assert_eq!(v.get("engine_steps").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("step_occupancy"), Some(&crate::util::json::Value::Null));
+        assert!(m.report().contains("step_occupancy=n/a"));
     }
 }

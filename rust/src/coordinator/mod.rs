@@ -1,31 +1,54 @@
 //! Serving coordinator — the paper's system contribution, integrated.
 //!
-//! QUIK's evaluation is a batched-prefill serving scenario (§4.2: 2048-token
-//! prompts, single batches, HuggingFace integration).  This coordinator is
-//! the production shape of that integration: a request router + dynamic
-//! batcher + prefill/decode scheduler, generic over any
-//! [`crate::backend::InferenceBackend`] — the native Rust QUIK engine by
-//! default, the PJRT artifact runtime behind `--features pjrt`.
+//! QUIK's evaluation is a batched-prefill serving scenario (§4.2:
+//! 2048-token prompts, single batches, HuggingFace integration), and its
+//! core systems claim is that batched inference is *compute-bound* —
+//! served throughput is decided by how full the batch dimension stays.
+//! This coordinator is the production shape of that claim: a request
+//! router + admission queue + **slot-based continuous batching engine**,
+//! generic over any [`crate::backend::InferenceBackend`] — the native
+//! Rust QUIK engine by default, the PJRT artifact runtime behind
+//! `--features pjrt`.
 //!
-//! Pipeline:
+//! Continuous pipeline (the default on capable backends):
 //!
 //! ```text
-//! submit() ──▶ queue ──▶ DynamicBatcher (length-bucketed, token budget)
-//!                             │ BatchPlan
+//! submit() ──▶ queue ──▶ DynamicBatcher (admission queue, backpressure)
+//!                             │ one request per free slot
 //!                             ▼
-//!                  Scheduler: prefill (b∈{1,4}) → greedy decode loop
-//!                             │ threads the backend's KV-cache handle
+//!            ContinuousEngine: admit ─▶ prefill ─▶ decode…─▶ retire
+//!              (one long-lived KV cache; row-masked forwards freeze
+//!               residents during admission; slots recycle instantly)
+//!                             │ per-row, the moment a row completes
 //!                             ▼
-//!                        Response (+ Metrics)
+//!                        Response (+ Metrics: TTFT, step occupancy)
 //! ```
 //!
-//! Batches are bucketed by prompt length because a batch shares one
-//! logical cache length (and PJRT programs have static shapes) — the same
-//! constraint real serving stacks handle with shape buckets.  Prompts are
-//! padded to the longest in the batch and each row samples its first
-//! token at its own true last prompt position.
+//! The slot lifecycle is **admit → prefill → decode → retire**: a queued
+//! request claims a free slot at any step boundary (no waiting for the
+//! resident batch to finish), its prompt prefills through a row-masked
+//! forward that leaves every resident row frozen bit-for-bit, it decodes
+//! at its own per-row cache positions, and on hitting its budget the
+//! response is delivered immediately and the cache row is reset for the
+//! next admission.  Every stream stays bit-identical to its solo run
+//! under any arrival schedule (`tests/engine_integration.rs`).
+//!
+//! Two historical static-batching caveats no longer apply on the native
+//! backend: requests are *not* bucketed by prompt length (admission is
+//! FIFO — per-row KV lengths make mixed lengths exact, not approximate),
+//! and a freed row never decodes pad tokens while co-riders finish.
+//!
+//! Backends without per-row caches / row masking (static-shape PJRT
+//! artifacts) keep the classic fallback: length-bucketed [`BatchPlan`]s
+//! run to completion by the [`Scheduler`], prompts padded to the batch
+//! max, one shared logical cache length — there the old caveats (pad-KV
+//! approximation between a short row's length and the bucket max) still
+//! hold.  `QUIK_ENGINE=continuous|static` (or
+//! [`server::Coordinator::start_with_mode`]) selects the loop
+//! explicitly; CI runs the suite in both.
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
@@ -34,6 +57,7 @@ pub mod speculative;
 pub mod tcp;
 
 pub use batcher::{BatchPlan, DynamicBatcher};
+pub use engine::{ContinuousEngine, EngineMode};
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, Response};
 pub use scheduler::Scheduler;

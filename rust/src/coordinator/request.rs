@@ -36,6 +36,11 @@ pub struct Response {
     pub prefill_time: Duration,
     /// Total decode wall time of the batch.
     pub decode_time: Duration,
+    /// Arrival → first generated token available (end of this row's
+    /// prefill): time-to-first-token.  Under the continuous engine this
+    /// is per-row (queue + that row's own prefill); under the static
+    /// loop it is queue + shared batch prefill.
+    pub ttft: Duration,
     /// Arrival → response.
     pub total_time: Duration,
     /// Batch size this request was served with.

@@ -1,6 +1,13 @@
 //! Prefill/decode scheduler: executes a [`BatchPlan`] against any
 //! [`InferenceBackend`].
 //!
+//! This is the **static fallback** serving path — batch-at-a-time, run
+//! to completion — kept for backends without per-row KV lengths or
+//! row-masked forwards (static PJRT artifacts) and as the
+//! `QUIK_ENGINE=static` reference loop.  Capable backends are served by
+//! the slot-based [`crate::coordinator::engine::ContinuousEngine`]
+//! instead, which retires and admits rows mid-flight.
+//!
 //! One batch goes through a static-batching lifecycle: right-pad every
 //! prompt to the backend's prefill step length (the *longest* prompt in
 //! the batch for dynamic-shape backends, the compiled artifact length for
@@ -157,15 +164,19 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
             .requests
             .iter()
             .zip(generated)
-            .map(|(req, gen)| Response {
-                id: req.id,
-                prompt_len: req.prompt_len(),
-                generated: gen,
-                queue_time: t_batch.duration_since(req.arrival),
-                prefill_time,
-                decode_time,
-                total_time: req.arrival.elapsed().max(total),
-                batch_size: b,
+            .map(|(req, gen)| {
+                let queue_time = t_batch.duration_since(req.arrival);
+                Response {
+                    id: req.id,
+                    prompt_len: req.prompt_len(),
+                    generated: gen,
+                    queue_time,
+                    prefill_time,
+                    decode_time,
+                    ttft: queue_time + prefill_time,
+                    total_time: req.arrival.elapsed().max(total),
+                    batch_size: b,
+                }
             })
             .collect())
     }

@@ -3,19 +3,30 @@
 //! The backend is built *inside* the worker thread by a caller-supplied
 //! factory — PJRT wrapper types are `!Send`, and the native backend is
 //! happiest owning its weight stacks on the thread that runs them —
-//! so only channels cross the thread boundary.  The worker loop
-//! alternates between draining the submission channel into the
-//! [`DynamicBatcher`] and executing the next [`BatchPlan`] through the
-//! [`Scheduler`].
+//! so only channels cross the thread boundary.
+//!
+//! Two serving loops share the worker ([`EngineMode`] picks one at
+//! startup, `QUIK_ENGINE` overrides in `Auto` mode):
+//!
+//! * **continuous** (default on capable backends) — the worker drives a
+//!   [`ContinuousEngine`] per step: drain the mailbox, admit queued
+//!   requests into free slots (the [`DynamicBatcher`] acts as a pure
+//!   admission queue with the same backpressure), run one decode step,
+//!   deliver every response the moment its row retires.
+//! * **static fallback** — backends without per-row caches / row masking
+//!   (e.g. PJRT artifacts) keep the classic loop: form a [`BatchPlan`],
+//!   run it to completion through the [`Scheduler`], deliver at batch
+//!   end.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::engine::{ContinuousEngine, EngineMode, ENGINE_ENV};
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
 use super::scheduler::Scheduler;
@@ -46,8 +57,27 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start a worker serving `variant` through the backend `factory`
     /// builds (on the worker thread).  Reports readiness — or the startup
-    /// error — before returning.
+    /// error — before returning.  Engine mode resolves automatically
+    /// ([`EngineMode::Auto`]): continuous on capable backends, the
+    /// static loop otherwise, `QUIK_ENGINE` overriding.
     pub fn start<B, F>(factory: F, variant: Variant, batcher_cfg: BatcherConfig) -> Result<Self>
+    where
+        B: InferenceBackend,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
+        Self::start_with_mode(factory, variant, batcher_cfg, EngineMode::Auto)
+    }
+
+    /// [`Coordinator::start`] with an explicit serving-loop choice.
+    /// `EngineMode::Continuous` fails startup if the backend cannot
+    /// freeze rows; `EngineMode::Static` forces the batch-at-a-time
+    /// fallback (benchmarks compare the two).
+    pub fn start_with_mode<B, F>(
+        factory: F,
+        variant: Variant,
+        batcher_cfg: BatcherConfig,
+        mode: EngineMode,
+    ) -> Result<Self>
     where
         B: InferenceBackend,
         F: FnOnce() -> Result<B> + Send + 'static,
@@ -57,7 +87,7 @@ impl Coordinator {
 
         let worker = std::thread::Builder::new()
             .name("quik-coordinator".into())
-            .spawn(move || worker_main(factory, variant, batcher_cfg, rx, ready_tx))
+            .spawn(move || worker_main(factory, variant, batcher_cfg, mode, rx, ready_tx))
             .context("spawning coordinator worker")?;
 
         let (vocab, prefill_seq, max_context) = ready_rx
@@ -73,10 +103,22 @@ impl Coordinator {
         variant: Variant,
         batcher_cfg: BatcherConfig,
     ) -> Result<Self> {
-        Self::start(
+        Self::start_native_with_mode(ckpt, policy, variant, batcher_cfg, EngineMode::Auto)
+    }
+
+    /// [`Coordinator::start_native`] with an explicit serving loop.
+    pub fn start_native_with_mode(
+        ckpt: NativeCheckpoint,
+        policy: QuikPolicy,
+        variant: Variant,
+        batcher_cfg: BatcherConfig,
+        mode: EngineMode,
+    ) -> Result<Self> {
+        Self::start_with_mode(
             move || NativeBackend::new("native", ckpt, policy),
             variant,
             batcher_cfg,
+            mode,
         )
     }
 
@@ -114,7 +156,11 @@ impl Coordinator {
         rx.recv().context("worker gone")
     }
 
-    /// Graceful shutdown (drains nothing — call after workloads finish).
+    /// Graceful shutdown.  The continuous engine finishes every
+    /// *resident* row first (their clients receive complete responses);
+    /// queued-but-unadmitted requests get their channels closed, so
+    /// every client observes a deterministic outcome — a response or an
+    /// immediate channel close, never a hang.
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(w) = self.worker.take() {
@@ -137,6 +183,7 @@ fn worker_main<B, F>(
     factory: F,
     variant: Variant,
     batcher_cfg: BatcherConfig,
+    mode: EngineMode,
     rx: Receiver<Msg>,
     ready_tx: Sender<Result<(usize, usize, usize)>>,
 ) -> Result<()>
@@ -166,8 +213,208 @@ where
     let prefill_seq = backend
         .step_seq(variant, Phase::Prefill, sizes[0], max_context)
         .unwrap_or(64);
+
+    // Resolve the serving loop before reporting readiness, so a forced
+    // `Continuous` on an incapable backend fails `start()` loudly.
+    // The continuous engine's slot count is the largest configured
+    // batch size — the same compute envelope the static loop pads to.
+    let n_slots = sizes.iter().copied().max().unwrap_or(1);
+    // `QUIK_ENGINE=continuous` is as binding as an explicit
+    // `EngineMode::Continuous`: if the backend cannot run the engine,
+    // startup fails loudly instead of silently green-washing a CI leg
+    // with the static loop.  Only the unset/`auto` (or unparseable)
+    // case keeps the capability-probing fallback.
+    let env_mode = std::env::var(ENGINE_ENV).ok().and_then(|s| EngineMode::parse(&s));
+    let (want_continuous, forced) = match mode {
+        EngineMode::Static => (false, false),
+        EngineMode::Continuous => (true, true),
+        EngineMode::Auto => match env_mode {
+            Some(EngineMode::Static) => (false, false),
+            Some(EngineMode::Continuous) => (true, true),
+            _ => (true, false),
+        },
+    };
+    let engine = if want_continuous {
+        match ContinuousEngine::new(&mut backend, variant, n_slots) {
+            Ok(engine) => Some(engine),
+            Err(e) if forced => {
+                let _ = ready_tx.send(Err(e));
+                return Ok(());
+            }
+            Err(_) => None, // auto preference: static fallback (PJRT caches)
+        }
+    } else {
+        None
+    };
     let _ = ready_tx.send(Ok((vocab, prefill_seq, max_context)));
 
+    match engine {
+        Some(engine) => {
+            run_continuous(&mut backend, engine, batcher_cfg, rx, vocab, max_context)
+        }
+        None => run_static(&mut backend, variant, batcher_cfg, rx, vocab, max_context),
+    }
+}
+
+/// Admission validation shared by both loops: a bad token (or an
+/// oversized prompt) would fail a whole forward — reject the one
+/// request up front instead (its client sees a closed channel).
+fn request_is_valid(req: &Request, vocab: usize, max_context: usize) -> bool {
+    !req.prompt.is_empty()
+        && req.prompt.len() <= max_context
+        && req.prompt.iter().all(|&t| t >= 0 && (t as usize) < vocab)
+}
+
+/// Deliver retired responses: fold into metrics, wake the waiters.
+fn deliver(
+    responses: Vec<Response>,
+    waiters: &mut HashMap<RequestId, Sender<Response>>,
+    metrics: &mut Metrics,
+) {
+    for resp in responses {
+        metrics.record_response(&resp);
+        if let Some(tx) = waiters.remove(&resp.id) {
+            let _ = tx.send(resp);
+        }
+    }
+}
+
+/// The continuous serving loop: per iteration, drain the mailbox, admit
+/// queued requests into free slots (each admission is a row-masked
+/// prefill that leaves residents frozen), then run **one** engine decode
+/// step and deliver whatever retired.  A request arriving mid-decode is
+/// admitted at the next step boundary — it never waits for the resident
+/// batch to finish.
+fn run_continuous<B: InferenceBackend>(
+    backend: &mut B,
+    mut engine: ContinuousEngine<B>,
+    batcher_cfg: BatcherConfig,
+    rx: Receiver<Msg>,
+    vocab: usize,
+    max_context: usize,
+) -> Result<()> {
+    let mut batcher = DynamicBatcher::new(batcher_cfg);
+    let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+    let mut metrics = Metrics::default();
+
+    loop {
+        // Drain the mailbox without stalling resident rows: non-blocking
+        // while anything is resident or queued, short block when idle.
+        let busy = engine.resident() > 0 || batcher.queued() > 0;
+        let msg = if busy {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => Some(Msg::Shutdown),
+            }
+        } else {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => Some(Msg::Shutdown),
+            }
+        };
+        match msg {
+            Some(Msg::Submit(req, tx)) => {
+                let id = req.id;
+                if !request_is_valid(&req, vocab, max_context) {
+                    metrics.rejected += 1;
+                    drop(tx);
+                    continue;
+                }
+                match batcher.try_push(req) {
+                    Ok(()) => {
+                        waiters.insert(id, tx);
+                    }
+                    Err(_rejected) => {
+                        metrics.rejected += 1;
+                        drop(tx); // client sees a closed channel immediately
+                    }
+                }
+                continue; // keep draining the mailbox before stepping
+            }
+            Some(Msg::Metrics(tx)) => {
+                let _ = tx.send(metrics.clone());
+                continue;
+            }
+            Some(Msg::Shutdown) => {
+                // Finish resident rows (complete responses), then close
+                // every queued request's channel: all clients observe a
+                // deterministic outcome instead of a hang.
+                match engine.drain(backend) {
+                    Ok(done) => deliver(done, &mut waiters, &mut metrics),
+                    Err(e) => {
+                        eprintln!("[coordinator] shutdown drain failed: {e:#}");
+                        for id in engine.fail_all() {
+                            if waiters.remove(&id).is_some() {
+                                metrics.rejected += 1;
+                            }
+                        }
+                    }
+                }
+                while let Some(req) = batcher.pop() {
+                    if waiters.remove(&req.id).is_some() {
+                        metrics.rejected += 1;
+                    }
+                }
+                return Ok(());
+            }
+            None => {}
+        }
+
+        // ---- admission: fill free slots from the queue ----------------
+        while engine.has_free_slot() {
+            let Some(req) = batcher.pop() else { break };
+            let id = req.id;
+            if let Err(e) = engine.admit(backend, req) {
+                eprintln!("[coordinator] admission failed: {e:#}");
+                if waiters.remove(&id).is_some() {
+                    metrics.rejected += 1;
+                }
+            }
+        }
+
+        // ---- one decode step ------------------------------------------
+        if engine.resident() > 0 {
+            match engine.step(backend) {
+                Ok(done) => {
+                    // Rows resident *after* the step are exactly the rows
+                    // the decode forward computed (retire happens before
+                    // the forward; admissions happen between steps), so
+                    // occupancy counts real decode compute — a
+                    // retire-only iteration records nothing.
+                    let decoded = engine.resident();
+                    if decoded > 0 {
+                        metrics.record_step(decoded, engine.slot_count());
+                    }
+                    deliver(done, &mut waiters, &mut metrics)
+                }
+                Err(e) => {
+                    eprintln!("[coordinator] engine step failed: {e:#}");
+                    // Evict everything: the cache state after a failed
+                    // step is not trustworthy for resident rows.
+                    for id in engine.fail_all() {
+                        if waiters.remove(&id).is_some() {
+                            metrics.rejected += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The static batch-at-a-time fallback (backends without per-row caches
+/// or row masking): form a batch, run it to completion, deliver at the
+/// end.  Kept bit-for-bit compatible with the pre-engine coordinator.
+fn run_static<B: InferenceBackend>(
+    backend: &mut B,
+    variant: Variant,
+    batcher_cfg: BatcherConfig,
+    rx: Receiver<Msg>,
+    vocab: usize,
+    max_context: usize,
+) -> Result<()> {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
     let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
     let mut metrics = Metrics::default();
@@ -189,12 +436,7 @@ where
         match msg {
             Some(Msg::Submit(req, tx)) => {
                 let id = req.id;
-                // Admission validation: a bad token would make the backend
-                // fail the *whole batch* at forward time — reject the one
-                // request up front instead (client sees a closed channel).
-                let invalid = req.prompt.is_empty()
-                    || req.prompt.iter().any(|&t| t < 0 || t as usize >= vocab);
-                if invalid {
+                if !request_is_valid(&req, vocab, max_context) {
                     metrics.rejected += 1;
                     drop(tx);
                     continue;
@@ -214,7 +456,18 @@ where
                 let _ = tx.send(metrics.clone());
                 continue;
             }
-            Some(Msg::Shutdown) => return Ok(()),
+            Some(Msg::Shutdown) => {
+                // Close every queued request's channel explicitly: the
+                // deterministic-close contract shared with the
+                // continuous loop's shutdown drain.
+                while let Some(req) = batcher.pop() {
+                    if waiters.remove(&req.id).is_some() {
+                        metrics.rejected += 1;
+                    }
+                }
+                waiters.clear();
+                return Ok(());
+            }
             None => {}
         }
 
@@ -222,22 +475,11 @@ where
             let used = plan.requests.len();
             let bsize = plan.batch_size;
             let ids: Vec<RequestId> = plan.requests.iter().map(|r| r.id).collect();
-            let mut scheduler = Scheduler::new(&mut backend, variant);
+            let mut scheduler = Scheduler::new(backend, variant);
             match scheduler.run_batch(plan) {
                 Ok(responses) => {
                     metrics.record_batch(bsize, used);
-                    for resp in responses {
-                        metrics.requests_completed += 1;
-                        metrics.prompt_tokens += resp.prompt_len as u64;
-                        metrics.generated_tokens += resp.generated.len() as u64;
-                        metrics.queue_time.record(resp.queue_time);
-                        metrics.prefill_time.record(resp.prefill_time);
-                        metrics.decode_time.record(resp.decode_time);
-                        metrics.e2e_time.record(resp.total_time);
-                        if let Some(tx) = waiters.remove(&resp.id) {
-                            let _ = tx.send(resp);
-                        }
-                    }
+                    deliver(responses, &mut waiters, &mut metrics);
                 }
                 Err(e) => {
                     eprintln!("[coordinator] batch failed: {e:#}");
@@ -286,6 +528,11 @@ pub struct ServeReport {
     pub generated_tokens: usize,
     pub mean_e2e: Duration,
     pub p99_e2e: Duration,
+    /// Mean time-to-first-token across the coordinator's lifetime (the
+    /// continuous-vs-static comparison's latency axis).
+    pub mean_ttft: Duration,
+    /// p95 time-to-first-token (histogram upper-edge approximation).
+    pub p95_ttft: Duration,
     pub metrics: Metrics,
 }
 
@@ -335,6 +582,7 @@ pub fn run_workload(coord: &mut Coordinator, spec: &WorkloadSpec) -> Result<Serv
     let mean = e2e.iter().sum::<Duration>() / e2e.len() as u32;
     let p99 = e2e[(e2e.len() * 99 / 100).min(e2e.len() - 1)];
 
+    let metrics = coord.metrics()?;
     Ok(ServeReport {
         n_requests: spec.n_requests,
         wall_time: wall,
@@ -343,6 +591,8 @@ pub fn run_workload(coord: &mut Coordinator, spec: &WorkloadSpec) -> Result<Serv
         generated_tokens: generated,
         mean_e2e: mean,
         p99_e2e: p99,
-        metrics: coord.metrics()?,
+        mean_ttft: metrics.ttft_time.mean(),
+        p95_ttft: metrics.ttft_time.quantile(0.95),
+        metrics,
     })
 }

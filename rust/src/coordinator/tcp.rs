@@ -4,12 +4,16 @@
 //!
 //!   → {"prompt": [1, 2, 3, ...], "max_new_tokens": 16}
 //!   ← {"id": 0, "tokens": [7, 42, ...], "prompt_len": 3,
-//!      "prefill_ms": 12.3, "decode_ms": 40.1, "total_ms": 55.0}
+//!      "prefill_ms": 12.3, "decode_ms": 40.1, "ttft_ms": 13.1,
+//!      "total_ms": 55.0}
+//!   → {"metrics": true}                      (metrics verb)
+//!   ← {"requests_completed": 9, "ttft": {...}, ...}  (see Metrics::to_json)
 //!   ← {"error": "..."}                       (malformed request)
 //!
 //! Connections are handled on std threads; each request is forwarded to
-//! the (single) coordinator worker through its channel, so batching
-//! happens *across* connections — concurrent clients ride shared batches.
+//! the (single) coordinator worker through its channel, so requests from
+//! concurrent clients share the engine's decode slots (continuous mode)
+//! or ride shared batches (static mode).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -18,6 +22,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use super::metrics::Metrics;
 use super::request::Response;
 use super::server::Coordinator;
 use crate::util::json::{parse, Value};
@@ -43,6 +48,11 @@ impl SharedCoordinator {
         self.0.lock().unwrap_or_else(|e| e.into_inner()).submit(prompt, max_new)
     }
 
+    /// Snapshot of the worker's metrics (the `{"metrics": true}` verb).
+    pub fn metrics(&self) -> Result<Metrics> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).metrics()
+    }
+
     fn clone_ref(&self) -> Self {
         Self(Arc::clone(&self.0))
     }
@@ -51,6 +61,11 @@ impl SharedCoordinator {
 /// Parse one request line. Returns `(prompt, max_new_tokens)`.
 pub fn parse_request(line: &str) -> Result<(Vec<i32>, usize)> {
     let v = parse(line).context("invalid JSON")?;
+    request_from_value(&v)
+}
+
+/// Extract `(prompt, max_new_tokens)` from an already-parsed line.
+fn request_from_value(v: &Value) -> Result<(Vec<i32>, usize)> {
     let prompt = v
         .get("prompt")
         .and_then(Value::as_array)
@@ -78,12 +93,13 @@ pub fn parse_request(line: &str) -> Result<(Vec<i32>, usize)> {
 pub fn format_response(r: &Response) -> String {
     let toks: Vec<String> = r.generated.iter().map(|t| t.to_string()).collect();
     format!(
-        "{{\"id\":{},\"tokens\":[{}],\"prompt_len\":{},\"prefill_ms\":{:.3},\"decode_ms\":{:.3},\"total_ms\":{:.3},\"batch_size\":{}}}",
+        "{{\"id\":{},\"tokens\":[{}],\"prompt_len\":{},\"prefill_ms\":{:.3},\"decode_ms\":{:.3},\"ttft_ms\":{:.3},\"total_ms\":{:.3},\"batch_size\":{}}}",
         r.id,
         toks.join(","),
         r.prompt_len,
         r.prefill_time.as_secs_f64() * 1e3,
         r.decode_time.as_secs_f64() * 1e3,
+        r.ttft.as_secs_f64() * 1e3,
         r.total_time.as_secs_f64() * 1e3,
         r.batch_size,
     )
@@ -114,7 +130,9 @@ fn json_escape(s: &str) -> String {
 /// `tests/coordinator_integration.rs`: a malformed request — bad JSON,
 /// non-integer prompt tokens, empty prompt — gets a `{"error": ...}`
 /// line and the loop keeps serving; nothing a client sends may panic
-/// this handler or kill the connection.
+/// this handler or kill the connection.  A `{"metrics": true}` line is
+/// the metrics verb: it answers with the worker's metrics snapshot
+/// ([`Metrics::to_json`]) instead of running inference.
 fn handle_conn(stream: TcpStream, coord: SharedCoordinator) {
     let Ok(read_half) = stream.try_clone() else {
         return; // nothing we can report without a functioning socket
@@ -126,12 +144,26 @@ fn handle_conn(stream: TcpStream, coord: SharedCoordinator) {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse_request(&line) {
-            Ok((prompt, max_new)) => match coord.submit(prompt, max_new).recv() {
-                Ok(resp) => format_response(&resp),
-                Err(_) => "{\"error\":\"coordinator unavailable\"}".to_string(),
+        let reply = match parse(&line) {
+            Err(e) => {
+                format!("{{\"error\":{}}}", json_escape(&format!("invalid JSON: {e}")))
+            }
+            // The verb requires `"metrics": true` — a stray falsy
+            // `metrics` field on an inference request must not hijack
+            // the reply with a metrics snapshot.
+            Ok(v) if matches!(v.get("metrics"), Some(Value::Bool(true))) => {
+                match coord.metrics() {
+                    Ok(m) => m.to_json(),
+                    Err(_) => "{\"error\":\"coordinator unavailable\"}".to_string(),
+                }
+            }
+            Ok(v) => match request_from_value(&v) {
+                Ok((prompt, max_new)) => match coord.submit(prompt, max_new).recv() {
+                    Ok(resp) => format_response(&resp),
+                    Err(_) => "{\"error\":\"coordinator unavailable\"}".to_string(),
+                },
+                Err(e) => format!("{{\"error\":{}}}", json_escape(&e.to_string())),
             },
-            Err(e) => format!("{{\"error\":{}}}", json_escape(&e.to_string())),
         };
         if writer.write_all(reply.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -213,6 +245,19 @@ impl Client {
             })
             .collect()
     }
+
+    /// Fetch the server's metrics snapshot (the `{"metrics": true}`
+    /// verb), returned as the parsed JSON value.
+    pub fn metrics(&mut self) -> Result<Value> {
+        writeln!(self.writer, "{{\"metrics\":true}}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let v = parse(&line).context("bad metrics reply")?;
+        if let Some(err) = v.get("error") {
+            anyhow::bail!("server error: {err:?}");
+        }
+        Ok(v)
+    }
 }
 
 #[cfg(test)]
@@ -228,6 +273,7 @@ mod tests {
             queue_time: Duration::from_millis(1),
             prefill_time: Duration::from_millis(10),
             decode_time: Duration::from_millis(20),
+            ttft: Duration::from_millis(11),
             total_time: Duration::from_millis(31),
             batch_size: 4,
         }
@@ -253,6 +299,7 @@ mod tests {
         assert_eq!(v.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("tokens").unwrap().as_array().unwrap().len(), 3);
         assert_eq!(v.get("batch_size").unwrap().as_usize(), Some(4));
+        assert!((v.get("ttft_ms").unwrap().as_f64().unwrap() - 11.0).abs() < 1e-6);
     }
 
     #[test]

@@ -31,8 +31,16 @@
 //!     default: available parallelism).  And `backend::pjrt` (behind the
 //!     `pjrt` cargo feature), which replays the L2 artifacts through
 //!     PJRT;
-//!   * [`coordinator`] — dynamic batcher + scheduler + speculative
-//!     decoder + TCP front-end, generic over the backend trait;
+//!   * [`coordinator`] — the serving layer, generic over the backend
+//!     trait: a slot-based **continuous batching engine**
+//!     ([`coordinator::engine`], the default on row-maskable backends —
+//!     admit → prefill → decode → retire per slot, responses delivered
+//!     the moment a row completes, streams bit-identical to solo runs
+//!     under any arrival schedule), a static batch-at-a-time fallback
+//!     ([`coordinator::scheduler`], for static-shape backends;
+//!     `QUIK_ENGINE` selects explicitly), plus admission queue,
+//!     speculative decoder, TTFT/occupancy metrics and a TCP front-end
+//!     with a metrics verb;
 //!   * [`quant`] — the native QUIK quantization substrate (shared by both
 //!     backends' stories and property-tested against the Python oracle);
 //!   * [`devicemodel`] / [`memmodel`] — the calibrated RTX-3090 device

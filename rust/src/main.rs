@@ -95,6 +95,7 @@ fn print_help() {
          USAGE: quik <command> [--flag value]...\n\n\
          COMMANDS\n\
            serve          --variant quik4|fp16 [--backend native|pjrt]\n\
+                          [--engine auto|continuous|static]  (QUIK_ENGINE env)\n\
                           --requests 16 --prompt-len 48 --gen 16 [--rate <req/s>]\n\
                           [--ckpt model.bin | --seed-model 5]     (native)\n\
                           [--model llama-s --artifacts artifacts]  (pjrt)\n\
@@ -136,6 +137,8 @@ fn native_checkpoint(args: &Args) -> Result<(NativeCheckpoint, QuikPolicy)> {
 fn serve(args: &Args) -> Result<()> {
     let variant = parse_variant(args)?;
     let backend = args.get("backend", "native");
+    let engine = quik::coordinator::EngineMode::parse(&args.get("engine", "auto"))
+        .context("--engine must be auto, continuous or static")?;
     let spec = WorkloadSpec {
         n_requests: args.get_usize("requests", 16)?,
         prompt_len: args.get_usize("prompt-len", 48)?,
@@ -146,8 +149,8 @@ fn serve(args: &Args) -> Result<()> {
     let coord = match backend.as_str() {
         "native" => {
             let (ckpt, policy) = native_checkpoint(args)?;
-            println!("starting coordinator: backend=native variant={variant:?}");
-            Coordinator::start_native(ckpt, policy, variant, batcher_cfg())?
+            println!("starting coordinator: backend=native variant={variant:?} engine={engine:?}");
+            Coordinator::start_native_with_mode(ckpt, policy, variant, batcher_cfg(), engine)?
         }
         "pjrt" => start_pjrt_coordinator(args, variant)?,
         other => bail!("unknown --backend {other} (native|pjrt)"),
@@ -163,7 +166,8 @@ fn serve(args: &Args) -> Result<()> {
          requests: {}  wall: {:.2?}\n\
          tokens: {} total ({} prompt + {} generated)\n\
          throughput: {:.1} tok/s, {:.2} req/s\n\
-         latency: mean {:.2?}, p99 {:.2?}\n\n{}",
+         latency: mean {:.2?}, p99 {:.2?}\n\
+         ttft: mean {:.2?}, p95 {:.2?}\n\n{}",
         report.n_requests,
         report.wall_time,
         report.total_tokens,
@@ -173,6 +177,8 @@ fn serve(args: &Args) -> Result<()> {
         report.requests_per_s(),
         report.mean_e2e,
         report.p99_e2e,
+        report.mean_ttft,
+        report.p95_ttft,
         report.metrics.report()
     );
     coord.shutdown()

@@ -1,0 +1,276 @@
+//! Continuous batching engine integration: the repo's signature
+//! invariant — every admitted request's token stream is **bit-identical
+//! to its solo run** — under randomized arrival schedules, slot reuse,
+//! mid-decode admission and shutdown drains, on the native backend.
+//!
+//! The solo oracle drives the backend directly (prefill → greedy decode
+//! loop), with no engine and no coordinator in the loop, so any
+//! divergence is attributable to the serving layer under test.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use quik::backend::native::{demo_policy, NativeBackend, NativeCheckpoint, NativeConfig};
+use quik::backend::{InferenceBackend, Phase, Variant};
+use quik::coordinator::batcher::BatcherConfig;
+use quik::coordinator::engine::ContinuousEngine;
+use quik::coordinator::request::{Request, Response};
+use quik::coordinator::server::Coordinator;
+use quik::coordinator::EngineMode;
+use quik::util::argmax;
+use quik::util::rng::Rng;
+
+const MODEL_SEED: u64 = 5;
+
+fn backend() -> NativeBackend {
+    NativeBackend::seeded("engine-int", NativeConfig::demo(), MODEL_SEED, demo_policy()).unwrap()
+}
+
+fn cfg() -> BatcherConfig {
+    BatcherConfig {
+        batch_sizes: vec![4, 1],
+        max_wait: Duration::from_millis(10),
+        bucket: 64,
+        max_queue: 1024,
+    }
+}
+
+fn start_mode(variant: Variant, mode: EngineMode) -> Coordinator {
+    let ckpt = NativeCheckpoint::seeded(NativeConfig::demo(), MODEL_SEED);
+    Coordinator::start_native_with_mode(ckpt, demo_policy(), variant, cfg(), mode).unwrap()
+}
+
+/// The oracle: greedy generation of `max_new` tokens (clipped by the
+/// context budget) on a fresh solo backend — exactly what a lone
+/// request gets, with no serving machinery at all.
+fn solo_stream(variant: Variant, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let mut b = backend();
+    b.prepare(variant, Phase::Prefill, 1).unwrap();
+    b.prepare(variant, Phase::Decode, 1).unwrap();
+    let budget = max_new.min(b.max_context().saturating_sub(prompt.len()));
+    let mut cache = b.new_cache(variant, 1).unwrap();
+    let out = b.forward(variant, Phase::Prefill, prompt, 1, &mut cache).unwrap();
+    let mut next = argmax(out.row(0, prompt.len() - 1));
+    let mut gen = Vec::new();
+    while gen.len() < budget {
+        gen.push(next);
+        if gen.len() >= budget {
+            break;
+        }
+        let step = b.forward(variant, Phase::Decode, &[next], 1, &mut cache).unwrap();
+        next = argmax(step.row(0, 0));
+    }
+    gen
+}
+
+#[test]
+fn randomized_schedule_is_bit_identical_to_solo() {
+    // Random prompt lengths, decode budgets and admission times over a
+    // 3-slot engine: every retired stream must equal its solo run.  A
+    // newly admitted row perturbing a resident (or a retiring row
+    // leaving residue for its successor) fails this bit-for-bit.
+    let variant = Variant::Quik4;
+    let mut b = backend();
+    let mut engine = ContinuousEngine::new(&mut b, variant, 3).unwrap();
+    let mut rng = Rng::new(0xC0FFEE);
+    let n_req = 12usize;
+    let reqs: Vec<(Vec<i32>, usize)> = (0..n_req)
+        .map(|_| {
+            let len = 4 + rng.below(36);
+            let max_new = 1 + rng.below(16);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.range_i32(0, 89)).collect();
+            (prompt, max_new)
+        })
+        .collect();
+
+    let mut pending = 0usize;
+    let mut done: Vec<Response> = Vec::new();
+    let mut guard = 0;
+    while done.len() < n_req {
+        guard += 1;
+        assert!(guard < 10_000, "engine failed to converge");
+        // random admission pressure: sometimes admit, sometimes let the
+        // residents decode alone (and always admit into an idle engine)
+        while pending < n_req
+            && engine.has_free_slot()
+            && (engine.resident() == 0 || rng.below(3) == 0)
+        {
+            let (prompt, max_new) = reqs[pending].clone();
+            engine.admit(&mut b, Request::new(pending as u64, prompt, max_new)).unwrap();
+            pending += 1;
+        }
+        done.extend(engine.step(&mut b).unwrap());
+    }
+    assert_eq!(done.len(), n_req);
+    let mut seen: Vec<u64> = done.iter().map(|r| r.id).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..n_req as u64).collect::<Vec<_>>(), "lost or duplicated a request");
+    for resp in &done {
+        let (prompt, max_new) = &reqs[resp.id as usize];
+        let solo = solo_stream(variant, prompt, *max_new);
+        assert_eq!(
+            resp.generated, solo,
+            "request {} diverged from its solo stream under the random schedule",
+            resp.id
+        );
+    }
+}
+
+#[test]
+fn slot_reuse_fuzz_admit_retire_readmit() {
+    // One slot, many sequential tenants: each admit → retire → re-admit
+    // cycle must leave no residue (stream equals solo every round).
+    let variant = Variant::Fp16;
+    let mut b = backend();
+    let mut engine = ContinuousEngine::new(&mut b, variant, 1).unwrap();
+    let mut rng = Rng::new(77);
+    for round in 0..8u64 {
+        let len = 3 + rng.below(30);
+        let max_new = 1 + rng.below(10);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.range_i32(0, 89)).collect();
+        engine.admit(&mut b, Request::new(round, prompt.clone(), max_new)).unwrap();
+        let done = engine.drain(&mut b).unwrap();
+        assert_eq!(done.len(), 1);
+        let solo = solo_stream(variant, &prompt, max_new);
+        assert_eq!(done[0].generated, solo, "round {round}: recycled slot perturbed the stream");
+    }
+}
+
+#[test]
+fn slot_recycled_under_a_decoding_neighbor() {
+    // Admit long A and short B; B retires mid-A; C re-uses B's slot
+    // while A is still decoding.  All three must match solo — this is
+    // the admit → retire → re-admit path *with* a live neighbor.
+    let variant = Variant::Fp16;
+    let mut b = backend();
+    let mut engine = ContinuousEngine::new(&mut b, variant, 2).unwrap();
+    let pa: Vec<i32> = (0..20).map(|i| (i * 3 + 1) % 90).collect();
+    let pb: Vec<i32> = (0..8).map(|i| (i * 5 + 2) % 90).collect();
+    let pc: Vec<i32> = (0..12).map(|i| (i * 7 + 4) % 90).collect();
+    engine.admit(&mut b, Request::new(0, pa.clone(), 30)).unwrap();
+    engine.admit(&mut b, Request::new(1, pb.clone(), 3)).unwrap();
+    let mut done = Vec::new();
+    while done.is_empty() {
+        done.extend(engine.step(&mut b).unwrap());
+    }
+    assert_eq!(done[0].id, 1, "short request should retire first");
+    assert!(engine.has_free_slot(), "retirement must free the slot immediately");
+    assert_eq!(engine.resident(), 1, "long request must still be decoding");
+    engine.admit(&mut b, Request::new(2, pc.clone(), 5)).unwrap();
+    done.extend(engine.drain(&mut b).unwrap());
+    assert_eq!(done.len(), 3);
+    let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(by_id(0).generated, solo_stream(variant, &pa, 30), "resident A perturbed");
+    assert_eq!(by_id(1).generated, solo_stream(variant, &pb, 3), "B diverged");
+    assert_eq!(by_id(2).generated, solo_stream(variant, &pc, 5), "slot-recycled C diverged");
+}
+
+#[test]
+fn coordinator_continuous_staggered_arrivals_match_solo() {
+    // Full coordinator path in continuous mode: staggered submissions,
+    // per-row completion, bit-exact streams, and the new metrics.
+    let variant = Variant::Quik4;
+    let mut coord = start_mode(variant, EngineMode::Continuous);
+    let prompts: Vec<(Vec<i32>, usize)> = (0..6)
+        .map(|s| {
+            let len = 10 + s * 7;
+            let p: Vec<i32> =
+                (0..len as i32).map(|i| (i * 11 + s as i32 * 3 + 1).rem_euclid(90)).collect();
+            (p, 4 + s)
+        })
+        .collect();
+    let mut rxs = Vec::new();
+    for (prompt, max_new) in &prompts {
+        rxs.push(coord.submit(prompt.clone(), *max_new));
+        std::thread::sleep(Duration::from_millis(3)); // staggered arrivals
+    }
+    for (rx, (prompt, max_new)) in rxs.into_iter().zip(&prompts) {
+        let resp = rx.recv().unwrap();
+        let solo = solo_stream(variant, prompt, *max_new);
+        assert_eq!(resp.generated, solo, "continuous coordinator diverged from solo");
+    }
+    let m = coord.metrics().unwrap();
+    assert_eq!(m.requests_completed, 6);
+    assert!(m.engine_steps > 0, "continuous engine never stepped");
+    assert_eq!(m.batches, 0, "continuous mode must not form static batches");
+    assert_eq!(m.ttft_time.count(), 6, "every request records a TTFT sample");
+    assert!(m.step_occupancy() > 0.0 && m.step_occupancy() <= 1.0);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn static_and_continuous_modes_produce_identical_streams() {
+    // The two serving loops are different schedulers over the same
+    // row-independent forward — their outputs must agree (and match the
+    // no-serving-machinery oracle).
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 7 + 5) % 90).collect();
+    let mut streams = Vec::new();
+    for mode in [EngineMode::Continuous, EngineMode::Static] {
+        let mut coord = start_mode(Variant::Fp16, mode);
+        let resp = coord.submit(prompt.clone(), 6).recv().unwrap();
+        streams.push(resp.generated);
+        coord.shutdown().unwrap();
+    }
+    assert_eq!(streams[0], streams[1], "engine modes disagree");
+    assert_eq!(streams[0], solo_stream(Variant::Fp16, &prompt, 6));
+}
+
+#[test]
+fn static_mode_still_forms_batches() {
+    // The fallback loop must keep its batch-formation behavior (PJRT's
+    // serving path) even now that it is no longer the default.
+    let mut coord = start_mode(Variant::Fp16, EngineMode::Static);
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 3 + 1) % 90).collect();
+    let rxs: Vec<_> = (0..4).map(|_| coord.submit(prompt.clone(), 2)).collect();
+    for rx in rxs {
+        assert_eq!(rx.recv().unwrap().generated.len(), 2);
+    }
+    let m = coord.metrics().unwrap();
+    assert!(m.batches > 0, "static mode formed no batches");
+    assert_eq!(m.engine_steps, 0, "static mode must not report engine steps");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_resolves_every_request_deterministically() {
+    // Regression for the shutdown bug: in-flight and queued requests
+    // used to be implicitly dropped; now resident rows drain to full
+    // responses and queued requests get an immediate channel close —
+    // either way, no client may hang.  `shutdown()` joins the worker,
+    // so by the time it returns every channel has its outcome.
+    let mut coord = start_mode(Variant::Fp16, EngineMode::Continuous);
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 3 + 2) % 90).collect();
+    let rxs: Vec<_> = (0..8).map(|_| coord.submit(prompt.clone(), 8)).collect();
+    coord.shutdown().unwrap();
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            // drained resident row: a complete, untruncated stream
+            Ok(resp) => assert_eq!(resp.generated.len(), 8, "drained response truncated"),
+            // queued/never-admitted: deterministic close
+            Err(RecvTimeoutError::Disconnected) => {}
+            Err(RecvTimeoutError::Timeout) => panic!("shutdown left a client hanging"),
+        }
+    }
+}
+
+#[test]
+fn tcp_metrics_verb_reports_engine_counters() {
+    use quik::coordinator::tcp::{serve, Client};
+    use std::sync::mpsc;
+
+    let coord = start_mode(Variant::Fp16, EngineMode::Continuous);
+    let (ready_tx, ready_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        serve("127.0.0.1:0", coord, Some(ready_tx), Some(1)).unwrap();
+    });
+    let addr = ready_rx.recv().unwrap();
+    let mut client = Client::connect(addr).unwrap();
+    let prompt: Vec<i32> = (0..12).map(|i| i % 90).collect();
+    let tokens = client.infer(&prompt, 3).unwrap();
+    assert_eq!(tokens.len(), 3);
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("requests_completed").unwrap().as_usize(), Some(1));
+    assert!(m.get("engine_steps").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(m.get("ttft").unwrap().get("count").unwrap().as_usize(), Some(1));
+    assert!(m.get("step_occupancy").unwrap().as_f64().is_some());
+}
