@@ -17,7 +17,9 @@ use std::time::{Duration, Instant};
 
 use quik::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use quik::coordinator::request::Request;
+use quik::coordinator::sampler::{GenerationParams, Sampler};
 use quik::quant::{int4, outlier, quantize_acts};
+use quik::util::argmax;
 use quik::util::bench::{bench_auto, report, BenchResult};
 use quik::util::rng::Rng;
 
@@ -175,6 +177,34 @@ fn main() {
     );
     benches.push(json_bench(&r));
 
+    // --- sampled decode: the per-token sampler on a realistic vocab ---
+    // The v2 generation API puts one Sampler::sample call per emitted
+    // token on the serving path; `argmax` is the greedy baseline the
+    // temperature==0 default routes through.  32k ≈ a real LLM vocab.
+    {
+        let vocab = 32_000usize;
+        let logits: Vec<f32> = (0..vocab).map(|_| rng.normal() * 4.0).collect();
+        let r = bench_auto("greedy argmax vocab 32k", budget, || {
+            std::hint::black_box(argmax(&logits));
+        });
+        report(&r);
+        benches.push(json_bench(&r));
+        let params = GenerationParams {
+            max_new_tokens: 1,
+            temperature: 0.8,
+            top_k: 50,
+            top_p: 0.95,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut sampler = Sampler::new(&params);
+        let r = bench_auto("sampled top_k=50 top_p=0.95 vocab 32k", budget, || {
+            std::hint::black_box(sampler.sample(&logits));
+        });
+        report(&r);
+        benches.push(json_bench(&r));
+    }
+
     // --- native decode step (the serving inner loop) ---
     {
         use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
@@ -213,7 +243,7 @@ fn main() {
         let spec = WorkloadSpec {
             n_requests: 16,
             prompt_len: 24,
-            max_new_tokens: 48,
+            params: GenerationParams::greedy(48),
             arrival_rate: Some(400.0), // staggered: arrivals overlap decode
             seed: 11,
         };
@@ -264,6 +294,89 @@ fn main() {
         println!("    -> {ratio:.2}x continuous-vs-static throughput (staggered arrivals)");
         derived.push(format!(
             "    {{\"name\": \"serve staggered continuous_vs_static tok_ratio\", \"value\": {ratio:.3}}}"
+        ));
+    }
+
+    // --- serving engine: stop-token-heavy early retirement -------------
+    // The v2 early-retire comparison: the same burst workload with a
+    // dense stop-token set (rows retire within a few tokens) against
+    // the run-to-budget variant, continuous vs static.  Early stop is
+    // admission capacity: the continuous engine should serve the
+    // stop-heavy workload in far fewer decode steps than run-to-budget,
+    // and beat the static loop (which must drag every formed batch to
+    // its longest row) on tokens/s.
+    {
+        use quik::backend::native::{demo_policy, NativeCheckpoint, NativeConfig};
+        use quik::backend::Variant;
+        use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
+        use quik::coordinator::EngineMode;
+
+        // every 8th vocab token stops: streams end after ~8 tokens of
+        // the 48 budget on average (demo vocab 96)
+        let stop_tokens: Vec<i32> = (0..96).step_by(8).collect();
+        let serve_cfg = BatcherConfig {
+            batch_sizes: vec![4, 1],
+            max_wait: Duration::from_millis(5),
+            bucket: 64,
+            max_queue: 1024,
+        };
+        let spec = |stops: Vec<i32>| WorkloadSpec {
+            n_requests: 16,
+            prompt_len: 24,
+            params: GenerationParams {
+                max_new_tokens: 48,
+                stop_tokens: stops,
+                ..Default::default()
+            },
+            arrival_rate: None, // burst: stresses slot turnover
+            seed: 13,
+        };
+        let mut runs = Vec::new();
+        for (mode, stops, name) in [
+            (EngineMode::Continuous, stop_tokens.clone(), "stop-heavy continuous"),
+            (EngineMode::Continuous, Vec::new(), "run-to-budget continuous"),
+            (EngineMode::Static, stop_tokens.clone(), "stop-heavy static"),
+        ] {
+            let ckpt = NativeCheckpoint::seeded(NativeConfig::demo(), 5);
+            let mut coord = Coordinator::start_native_with_mode(
+                ckpt,
+                demo_policy(),
+                Variant::Quik4,
+                serve_cfg.clone(),
+                mode,
+            )
+            .expect("start coordinator");
+            let report = run_workload(&mut coord, &spec(stops)).expect("serve workload");
+            println!(
+                "serve[{name}]: {:.1} tok/s, {} gen tokens, {} engine steps, {} stop hits",
+                report.tokens_per_s(),
+                report.generated_tokens,
+                report.metrics.engine_steps,
+                report.metrics.stop_hits,
+            );
+            derived.push(format!(
+                "    {{\"name\": \"serve {name} tok_per_s\", \"value\": {:.3}}}",
+                report.tokens_per_s()
+            ));
+            derived.push(format!(
+                "    {{\"name\": \"serve {name} engine_steps\", \"value\": {}}}",
+                report.metrics.engine_steps
+            ));
+            runs.push(report);
+            coord.shutdown().expect("shutdown");
+        }
+        let step_saving =
+            runs[1].metrics.engine_steps as f64 / runs[0].metrics.engine_steps.max(1) as f64;
+        println!(
+            "    -> {step_saving:.2}x fewer decode steps from early stop-token retirement"
+        );
+        derived.push(format!(
+            "    {{\"name\": \"serve stop-heavy early_retire_step_saving\", \"value\": {step_saving:.3}}}"
+        ));
+        let ratio = runs[0].tokens_per_s() / runs[2].tokens_per_s();
+        println!("    -> {ratio:.2}x continuous-vs-static throughput (stop-heavy)");
+        derived.push(format!(
+            "    {{\"name\": \"serve stop-heavy continuous_vs_static tok_ratio\", \"value\": {ratio:.3}}}"
         ));
     }
 

@@ -13,7 +13,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::request::Request;
+use super::request::{Request, RequestId};
 
 /// A formed batch: the requests plus the artifact batch size to use
 /// (requests.len() ≤ batch_size; the gap is padded with dummy rows).
@@ -96,6 +96,15 @@ impl DynamicBatcher {
 
     pub fn queued(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Remove a queued request by id (the cancel verb's queued-request
+    /// path).  Returns the request if it was still waiting; `None` if it
+    /// was already admitted/dispatched or never existed.  Frees queue
+    /// capacity for admission immediately.
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        let pos = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(pos)
     }
 
     fn bucket_of(&self, prompt_len: usize) -> usize {
@@ -280,6 +289,27 @@ mod tests {
         assert_eq!(b.pop().unwrap().id, 2);
         assert_eq!(b.pop().unwrap().id, 4);
         assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn remove_by_id_frees_capacity_and_preserves_order() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            batch_sizes: vec![1],
+            max_wait: Duration::from_millis(0),
+            bucket: 64,
+            max_queue: 3,
+        });
+        for i in 0..3 {
+            assert!(b.try_push(req(i, 60)).is_ok());
+        }
+        assert!(b.remove(99).is_none());
+        let gone = b.remove(1).expect("queued request must be removable");
+        assert_eq!(gone.id, 1);
+        assert_eq!(b.queued(), 2);
+        assert!(b.try_push(req(3, 60)).is_ok(), "removal must free capacity");
+        assert_eq!(b.pop().unwrap().id, 0);
+        assert_eq!(b.pop().unwrap().id, 2);
+        assert_eq!(b.pop().unwrap().id, 3);
     }
 
     #[test]

@@ -21,17 +21,27 @@
 //!   positions untouched — a chunked-prefill step that cannot perturb a
 //!   neighbor.
 //! * **decode** — each step advances every resident slot by one token;
-//!   free slots ride along masked off at zero attention cost.
-//! * **retire** — the moment a row hits its budget its [`Response`] is
-//!   delivered and the cache row is recycled ([`KvCache::reset_row`]);
-//!   the next admission reuses the slot immediately.
+//!   free slots ride along masked off at zero attention cost.  Tokens
+//!   are *streamed*: the slot's [`Event::Token`] goes out the moment the
+//!   step boundary emits it, with the next token chosen by the slot's
+//!   own seeded [`Sampler`] (greedy argmax at `temperature == 0`).
+//! * **retire** — a row leaves the engine the moment it hits its budget
+//!   **or** emits a stop/EOS token **or** its client cancels (handle
+//!   dropped / cancel verb): its [`Event::Done`] response is delivered
+//!   and the cache row is recycled ([`KvCache::reset_row`]); the next
+//!   admission reuses the slot immediately.  Early retirement is a
+//!   throughput feature — a stopped or abandoned row never burns decode
+//!   steps to budget.
 //!
 //! The repo's signature invariant survives the inversion of control
 //! flow: rows are computationally independent and the row-masked forward
 //! freezes inactive rows bit-for-bit, so **every admitted request's
 //! token stream is bit-identical to its solo run** under any arrival
 //! schedule, at every thread count (pinned by
-//! `tests/engine_integration.rs`).
+//! `tests/engine_integration.rs`).  Sampled rows inherit it: the sampler
+//! is keyed only by the request's seed and consumes one draw per emitted
+//! token in emission order, so sampled streams replay exactly under any
+//! schedule, thread count or engine mode (`tests/generation_api.rs`).
 //!
 //! Requirements: the backend must answer `true` from
 //! [`InferenceBackend::supports_row_masking`] and its cache from
@@ -39,13 +49,15 @@
 //! artifacts) are served by the static batch-at-a-time fallback loop in
 //! [`crate::coordinator::server`].
 
+use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::request::{Request, RequestId, Response};
+use super::metrics::Metrics;
+use super::request::{Event, FinishReason, Request, RequestId, Response};
+use super::sampler::Sampler;
 use crate::backend::{InferenceBackend, KvCache, Phase, Variant};
-use crate::util::argmax;
 
 /// Environment override for the serving loop (`QUIK_ENGINE=continuous`
 /// or `QUIK_ENGINE=static`), consulted when the coordinator is started
@@ -86,9 +98,17 @@ struct Slot {
     generated: Vec<i32>,
     /// Sampled but not yet emitted token (fed to the next decode step).
     next: i32,
+    /// Per-request seeded sampler (greedy argmax at temperature 0).
+    sampler: Sampler,
+    /// The client's event stream.  A failed send means the handle was
+    /// dropped — cancellation, observed at the step boundary.
+    tx: Sender<Event>,
     admitted: Instant,
     prefill_time: Duration,
     decode_start: Instant,
+    /// Previous token-emission instant (ITL measurement); seeded with
+    /// the end of prefill.
+    last_emit: Instant,
     ttft: Duration,
 }
 
@@ -167,12 +187,15 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
     }
 
     /// Admit one request into a free slot: a row-masked prefill of its
-    /// prompt while every resident row stays frozen.  Returns the slot
-    /// row.  The caller must have validated the request (non-empty
-    /// prompt, in-vocab tokens, prompt within the context budget) and
+    /// prompt while every resident row stays frozen.  `tx` is the
+    /// client's event stream — it receives every [`Event::Token`] and
+    /// the final [`Event::Done`].  Returns the slot row.  The caller
+    /// must have validated the request (non-empty prompt, in-vocab
+    /// tokens, prompt within the context budget, valid params) and
     /// checked [`ContinuousEngine::has_free_slot`]; an error here means
-    /// the request cannot be served (its waiter should be closed).
-    pub fn admit(&mut self, backend: &mut B, req: Request) -> Result<usize> {
+    /// the request cannot be served (its event channel should be
+    /// dropped).
+    pub fn admit(&mut self, backend: &mut B, req: Request, tx: Sender<Event>) -> Result<usize> {
         let row = self
             .slots
             .iter()
@@ -188,7 +211,7 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         }
         // The same per-row clip a solo run gets: this row's own prompt,
         // never a batch-max.
-        let budget = req.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
+        let budget = req.params.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
         let admitted = Instant::now();
         self.cache.reset_row(row);
         // [n_slots, prompt_len] token grid: the new row carries the
@@ -207,41 +230,70 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             &mut self.cache,
             &active,
         )?;
-        let next = argmax(out.row(row, prompt_len - 1));
+        let mut sampler = Sampler::new(&req.params);
+        let next = sampler.sample(out.row(row, prompt_len - 1));
         let prefill_time = admitted.elapsed();
+        let now = Instant::now();
         self.slots[row] = Some(Slot {
             ttft: req.arrival.elapsed(),
             req,
             budget,
             generated: Vec::new(),
             next,
+            sampler,
+            tx,
             admitted,
             prefill_time,
-            decode_start: Instant::now(),
+            decode_start: now,
+            last_emit: now,
         });
         Ok(row)
     }
 
-    /// One engine step: emit every resident row's pending token, retire
-    /// rows that hit their budget (freeing their slot and resetting the
-    /// cache row), then run one row-masked decode forward for the rows
-    /// still resident.  Returns the responses retired by this step.
-    pub fn step(&mut self, backend: &mut B) -> Result<Vec<Response>> {
+    /// One engine step: emit every resident row's pending token to its
+    /// event stream, retire rows that finished — budget exhausted, stop
+    /// token / EOS emitted, or client gone (failed event send) — freeing
+    /// their slot, resetting the cache row, delivering [`Event::Done`]
+    /// and folding the retirement into `metrics`; then run one
+    /// row-masked decode forward for the rows still resident and sample
+    /// each row's next token.  Returns the responses retired by this
+    /// step (already delivered to their streams).
+    pub fn step(&mut self, backend: &mut B, metrics: &mut Metrics) -> Result<Vec<Response>> {
         let mut done = Vec::new();
         for row in 0..self.n_slots {
-            let retire = match &mut self.slots[row] {
+            let finish = match &mut self.slots[row] {
                 Some(slot) => {
                     if slot.generated.len() < slot.budget {
-                        slot.generated.push(slot.next);
+                        let token = slot.next;
+                        let index = slot.generated.len();
+                        slot.generated.push(token);
+                        if slot.tx.send(Event::Token { token, index }).is_err() {
+                            // Receiver dropped: the client cancelled.
+                            // No ITL sample — nobody received this token.
+                            Some(FinishReason::Cancelled)
+                        } else {
+                            let now = Instant::now();
+                            metrics.record_itl(now.duration_since(slot.last_emit));
+                            slot.last_emit = now;
+                            let stop_hit = FinishReason::stop_match(&slot.req.params, token);
+                            if stop_hit.is_some() {
+                                stop_hit
+                            } else if slot.generated.len() >= slot.budget {
+                                Some(FinishReason::Length)
+                            } else {
+                                None
+                            }
+                        }
+                    } else {
+                        // Zero-budget admission: retires with an empty
+                        // stream on its first step.
+                        Some(FinishReason::Length)
                     }
-                    slot.generated.len() >= slot.budget
                 }
-                None => false,
+                None => None,
             };
-            if retire {
-                let slot = self.slots[row].take().expect("slot resident");
-                self.cache.reset_row(row);
-                done.push(finish(slot, self.n_slots));
+            if let Some(reason) = finish {
+                done.push(self.retire(row, reason, metrics));
             }
         }
 
@@ -268,30 +320,68 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             )?;
             for (row, s) in self.slots.iter_mut().enumerate() {
                 if let Some(slot) = s {
-                    slot.next = argmax(out.row(row, 0));
+                    slot.next = slot.sampler.sample(out.row(row, 0));
                 }
             }
         }
         Ok(done)
     }
 
+    /// Cancel a *resident* request by id (the explicit cancel verb):
+    /// the row retires immediately with [`FinishReason::Cancelled`] and
+    /// its partial stream, and the slot frees for the next admission.
+    /// Returns the response, or `None` when no resident row has this id
+    /// (the caller should then check the admission queue).
+    pub fn cancel(&mut self, id: RequestId, metrics: &mut Metrics) -> Option<Response> {
+        let row = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|slot| slot.req.id == id))?;
+        Some(self.retire(row, FinishReason::Cancelled, metrics))
+    }
+
+    /// Retire one resident row: free the slot, recycle the cache row,
+    /// deliver `Done` (best effort — a cancelled client is gone) and
+    /// record the finish.
+    fn retire(&mut self, row: usize, reason: FinishReason, metrics: &mut Metrics) -> Response {
+        let slot = self.slots[row].take().expect("slot resident");
+        self.cache.reset_row(row);
+        let resp = Response {
+            id: slot.req.id,
+            prompt_len: slot.req.prompt_len(),
+            generated: slot.generated,
+            finish: reason,
+            queue_time: slot.admitted.duration_since(slot.req.arrival),
+            prefill_time: slot.prefill_time,
+            decode_time: slot.decode_start.elapsed(),
+            ttft: slot.ttft,
+            total_time: slot.req.arrival.elapsed(),
+            batch_size: self.n_slots,
+        };
+        metrics.record_finish(&resp);
+        let _ = slot.tx.send(Event::Done(resp.clone()));
+        resp
+    }
+
     /// Run steps until every resident row retires (shutdown drain).
     /// Bounded by the context budget — each row finishes within its
     /// remaining decode budget, which can never exceed `max_ctx`.
-    pub fn drain(&mut self, backend: &mut B) -> Result<Vec<Response>> {
+    pub fn drain(&mut self, backend: &mut B, metrics: &mut Metrics) -> Result<Vec<Response>> {
         let mut done = Vec::new();
         for _ in 0..=self.max_ctx + 1 {
             if self.resident() == 0 {
                 return Ok(done);
             }
-            done.extend(self.step(backend)?);
+            done.extend(self.step(backend, metrics)?);
         }
         bail!("engine failed to drain within the context budget");
     }
 
     /// Evict every resident request without responses (a failed forward
-    /// left them unservable); returns their ids so the caller can close
-    /// the waiting channels.  All cache rows are reset.
+    /// left them unservable); returns their ids so the caller can count
+    /// them.  Dropping the slots closes their event channels, so every
+    /// client observes the failure immediately.  All cache rows are
+    /// reset.
     pub fn fail_all(&mut self) -> Vec<RequestId> {
         let mut ids = Vec::new();
         for row in 0..self.n_slots {
@@ -304,25 +394,12 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
     }
 }
 
-/// Build the response of one retiring slot.
-fn finish(slot: Slot, n_slots: usize) -> Response {
-    Response {
-        id: slot.req.id,
-        prompt_len: slot.req.prompt_len(),
-        generated: slot.generated,
-        queue_time: slot.admitted.duration_since(slot.req.arrival),
-        prefill_time: slot.prefill_time,
-        decode_time: slot.decode_start.elapsed(),
-        ttft: slot.ttft,
-        total_time: slot.req.arrival.elapsed(),
-        batch_size: n_slots,
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::native::{demo_policy, NativeBackend, NativeConfig};
+    use crate::coordinator::request::GenerationParams;
+    use std::sync::mpsc::{self, Receiver};
 
     fn backend() -> NativeBackend {
         NativeBackend::seeded("engine-test", NativeConfig::demo(), 5, demo_policy())
@@ -334,10 +411,24 @@ mod tests {
         (0..len as i32).map(|i| (i * 7 + seed).rem_euclid(90)).collect()
     }
 
+    /// Admit with a live event channel; the receiver keeps the request
+    /// uncancelled (dropping it is the cancellation path under test
+    /// elsewhere).
+    fn admit(
+        engine: &mut ContinuousEngine<NativeBackend>,
+        b: &mut NativeBackend,
+        req: Request,
+    ) -> Receiver<Event> {
+        let (tx, rx) = mpsc::channel();
+        engine.admit(b, req, tx).unwrap();
+        rx
+    }
+
     /// Drive the engine until `want` responses have retired.
     fn run_until(
         engine: &mut ContinuousEngine<NativeBackend>,
         backend: &mut NativeBackend,
+        metrics: &mut Metrics,
         want: usize,
     ) -> Vec<Response> {
         let mut out = Vec::new();
@@ -345,7 +436,7 @@ mod tests {
             if out.len() >= want {
                 break;
             }
-            out.extend(engine.step(backend).unwrap());
+            out.extend(engine.step(backend, metrics).unwrap());
         }
         out
     }
@@ -353,24 +444,60 @@ mod tests {
     #[test]
     fn admit_decode_retire_lifecycle() {
         let mut b = backend();
+        let mut m = Metrics::default();
         let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
         assert_eq!(engine.slot_count(), 2);
         assert!(engine.has_free_slot());
         assert_eq!(engine.resident(), 0);
 
-        engine.admit(&mut b, Request::new(0, prompt(3, 8), 4)).unwrap();
-        engine.admit(&mut b, Request::new(1, prompt(5, 12), 2)).unwrap();
+        let _rx0 = admit(&mut engine, &mut b, Request::new(0, prompt(3, 8), 4));
+        let _rx1 = admit(&mut engine, &mut b, Request::new(1, prompt(5, 12), 2));
         assert_eq!(engine.resident(), 2);
         assert!(!engine.has_free_slot());
 
-        let done = run_until(&mut engine, &mut b, 2);
+        let done = run_until(&mut engine, &mut b, &mut m, 2);
         assert_eq!(done.len(), 2);
         assert_eq!(engine.resident(), 0);
         let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();
         assert_eq!(by_id(0).generated.len(), 4);
+        assert_eq!(by_id(0).finish, FinishReason::Length);
         assert_eq!(by_id(1).generated.len(), 2);
         assert_eq!(by_id(1).batch_size, 2);
         assert!(by_id(0).ttft <= by_id(0).total_time);
+        assert_eq!(m.requests_completed, 2);
+        assert!(m.itl_time.count() >= 6, "one ITL sample per emitted token");
+    }
+
+    #[test]
+    fn events_stream_tokens_before_done() {
+        // The streaming contract: after one engine step the first token
+        // is already on the wire while the row is still resident.
+        let mut b = backend();
+        let mut m = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        let rx = admit(&mut engine, &mut b, Request::new(0, prompt(2, 8), 5));
+        assert!(engine.step(&mut b, &mut m).unwrap().is_empty());
+        assert_eq!(engine.resident(), 1, "row must still be decoding");
+        match rx.try_recv().expect("first token must be delivered at the first step") {
+            Event::Token { index, .. } => assert_eq!(index, 0),
+            other => panic!("expected a token event, got {other:?}"),
+        }
+        let done = run_until(&mut engine, &mut b, &mut m, 1);
+        // the stream replays the full response, in order
+        let mut streamed = Vec::new();
+        for ev in rx.try_iter() {
+            match ev {
+                Event::Token { token, index } => {
+                    assert_eq!(index, streamed.len() + 1, "token indexes must be sequential");
+                    streamed.push(token);
+                }
+                Event::Done(resp) => {
+                    assert_eq!(resp.generated[1..], streamed[..], "stream vs summary mismatch");
+                    assert_eq!(resp.generated.len(), 5);
+                }
+            }
+        }
+        assert_eq!(done[0].finish, FinishReason::Length);
     }
 
     #[test]
@@ -379,33 +506,148 @@ mod tests {
         // not wait for an earlier long decoder (the old run-to-completion
         // loop serialized them).
         let mut b = backend();
+        let mut m = Metrics::default();
         let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
-        engine.admit(&mut b, Request::new(0, prompt(1, 8), 40)).unwrap();
+        let _rx0 = admit(&mut engine, &mut b, Request::new(0, prompt(1, 8), 40));
         // a few resident-only decode steps before the second arrival
         let mut done = Vec::new();
         for _ in 0..3 {
-            done.extend(engine.step(&mut b).unwrap());
+            done.extend(engine.step(&mut b, &mut m).unwrap());
         }
         assert!(done.is_empty());
-        engine.admit(&mut b, Request::new(1, prompt(2, 8), 2)).unwrap();
-        let first = run_until(&mut engine, &mut b, 1);
+        let _rx1 = admit(&mut engine, &mut b, Request::new(1, prompt(2, 8), 2));
+        let first = run_until(&mut engine, &mut b, &mut m, 1);
         assert_eq!(first[0].id, 1, "short request did not overtake the long resident");
         assert_eq!(engine.resident(), 1, "long request must still be decoding");
-        let rest = run_until(&mut engine, &mut b, 1);
+        let rest = run_until(&mut engine, &mut b, &mut m, 1);
         assert_eq!(rest[0].id, 0);
         assert_eq!(rest[0].generated.len(), 40);
     }
 
     #[test]
+    fn stop_token_retires_early_and_frees_the_slot() {
+        // Discover the greedy stream, then rerun with its third token as
+        // a stop token: the row must retire right after emitting it —
+        // tokens and slot both — instead of decoding to budget.
+        let mut b = backend();
+        let mut m = Metrics::default();
+        let p = prompt(4, 10);
+        let mut probe = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        let _rx = admit(&mut probe, &mut b, Request::new(0, p.clone(), 12));
+        let full = probe.drain(&mut b, &mut m).unwrap().remove(0);
+        assert_eq!(full.generated.len(), 12);
+        let stop = full.generated[2];
+        // earlier occurrences would stop even sooner; find the true
+        // first hit so the assertion below is exact
+        let first_hit = full.generated.iter().position(|&t| t == stop).unwrap();
+
+        let params = GenerationParams {
+            max_new_tokens: 12,
+            stop_tokens: vec![stop],
+            ..Default::default()
+        };
+        let mut m2 = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        let (tx, _rx2) = mpsc::channel();
+        engine.admit(&mut b, Request::with_params(1, p, params), tx).unwrap();
+        let done = run_until(&mut engine, &mut b, &mut m2, 1);
+        assert_eq!(done[0].finish, FinishReason::Stop);
+        assert_eq!(
+            done[0].generated,
+            full.generated[..=first_hit],
+            "stop must truncate inclusively"
+        );
+        assert!(engine.has_free_slot(), "stop hit must free the slot");
+        assert_eq!(m2.stop_hits, 1);
+    }
+
+    #[test]
+    fn eos_token_reports_eos_finish() {
+        let mut b = backend();
+        let mut m = Metrics::default();
+        let p = prompt(6, 10);
+        let mut probe = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        let _rx = admit(&mut probe, &mut b, Request::new(0, p.clone(), 8));
+        let full = probe.drain(&mut b, &mut m).unwrap().remove(0);
+        let eos = full.generated[1];
+        let first_hit = full.generated.iter().position(|&t| t == eos).unwrap();
+
+        let params =
+            GenerationParams { max_new_tokens: 8, eos: Some(eos), ..Default::default() };
+        let mut m2 = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        let (tx, _rx2) = mpsc::channel();
+        engine.admit(&mut b, Request::with_params(1, p, params), tx).unwrap();
+        let done = run_until(&mut engine, &mut b, &mut m2, 1);
+        assert_eq!(done[0].finish, FinishReason::Eos);
+        assert_eq!(done[0].generated, full.generated[..=first_hit]);
+        assert_eq!(m2.eos_hits, 1);
+    }
+
+    #[test]
+    fn dropped_handle_cancels_at_the_next_step_boundary() {
+        let mut b = backend();
+        let mut m = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
+        let (tx, rx) = mpsc::channel();
+        engine.admit(&mut b, Request::new(0, prompt(3, 8), 30), tx).unwrap();
+        drop(rx); // client walks away
+        let done = run_until(&mut engine, &mut b, &mut m, 1);
+        assert_eq!(done[0].finish, FinishReason::Cancelled);
+        assert!(
+            done[0].generated.len() <= 1,
+            "cancellation must be observed at the first step boundary, got {} tokens",
+            done[0].generated.len()
+        );
+        assert!(engine.has_free_slot(), "cancellation must free the slot");
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.requests_completed, 0, "a cancelled row is not a completion");
+    }
+
+    #[test]
+    fn cancel_verb_retires_a_resident_row_with_partial_stream() {
+        let mut b = backend();
+        let mut m = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
+        let rx = admit(&mut engine, &mut b, Request::new(7, prompt(1, 8), 30));
+        let _rx2 = admit(&mut engine, &mut b, Request::new(8, prompt(2, 8), 30));
+        for _ in 0..4 {
+            engine.step(&mut b, &mut m).unwrap();
+        }
+        assert!(engine.cancel(99, &mut m).is_none(), "unknown id must not retire anything");
+        let resp = engine.cancel(7, &mut m).expect("resident row must be cancellable");
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert_eq!(resp.generated.len(), 4, "partial stream at the cancel point");
+        assert!(engine.has_free_slot(), "cancel must free the slot");
+        assert_eq!(engine.resident(), 1, "the neighbor row must keep decoding");
+        // the client's stream ends with Done(cancelled)
+        let mut saw_done = false;
+        for ev in rx.try_iter() {
+            if let Event::Done(r) = ev {
+                assert_eq!(r.finish, FinishReason::Cancelled);
+                saw_done = true;
+            }
+        }
+        assert!(saw_done, "cancelled stream must still deliver Done");
+        // the neighbor is unperturbed and finishes its full budget
+        let done = engine.drain(&mut b, &mut m).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 8);
+        assert_eq!(done[0].generated.len(), 30);
+    }
+
+    #[test]
     fn zero_budget_request_retires_with_empty_stream() {
         let mut b = backend();
+        let mut m = Metrics::default();
         let max = b.config().max_seq;
         let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
         // prompt fills the whole context: budget clips to 0
-        engine.admit(&mut b, Request::new(7, prompt(0, max), 5)).unwrap();
-        let done = run_until(&mut engine, &mut b, 1);
+        let _rx = admit(&mut engine, &mut b, Request::new(7, prompt(0, max), 5));
+        let done = run_until(&mut engine, &mut b, &mut m, 1);
         assert_eq!(done.len(), 1);
         assert!(done[0].generated.is_empty());
+        assert_eq!(done[0].finish, FinishReason::Length);
         assert!(engine.has_free_slot());
     }
 
@@ -414,26 +656,34 @@ mod tests {
         let mut b = backend();
         let max = b.config().max_seq;
         let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
-        engine.admit(&mut b, Request::new(0, prompt(0, 8), 4)).unwrap();
-        assert!(engine.admit(&mut b, Request::new(1, prompt(0, 8), 4)).is_err());
+        let _rx = admit(&mut engine, &mut b, Request::new(0, prompt(0, 8), 4));
+        let (tx, _rx1) = mpsc::channel();
+        assert!(engine.admit(&mut b, Request::new(1, prompt(0, 8), 4), tx).is_err());
         let mut engine2 = ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap();
-        assert!(engine2.admit(&mut b, Request::new(2, prompt(0, max + 1), 1)).is_err());
+        let (tx, _rx2) = mpsc::channel();
+        assert!(engine2.admit(&mut b, Request::new(2, prompt(0, max + 1), 1), tx).is_err());
         assert!(engine2.has_free_slot(), "failed admission must not leak a slot");
     }
 
     #[test]
     fn fail_all_evicts_and_frees_every_slot() {
         let mut b = backend();
+        let mut m = Metrics::default();
         let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
-        engine.admit(&mut b, Request::new(0, prompt(1, 8), 4)).unwrap();
-        engine.admit(&mut b, Request::new(1, prompt(2, 8), 4)).unwrap();
+        let rx0 = admit(&mut engine, &mut b, Request::new(0, prompt(1, 8), 4));
+        let _rx1 = admit(&mut engine, &mut b, Request::new(1, prompt(2, 8), 4));
         let mut ids = engine.fail_all();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1]);
         assert_eq!(engine.resident(), 0);
+        // eviction closes the event channels (client sees the failure)
+        assert!(matches!(
+            rx0.try_recv(),
+            Err(std::sync::mpsc::TryRecvError::Disconnected)
+        ));
         // slots are reusable afterwards
-        engine.admit(&mut b, Request::new(2, prompt(3, 8), 1)).unwrap();
-        let done = engine.drain(&mut b).unwrap();
+        let _rx2 = admit(&mut engine, &mut b, Request::new(2, prompt(3, 8), 1));
+        let done = engine.drain(&mut b, &mut m).unwrap();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 2);
     }
@@ -441,10 +691,11 @@ mod tests {
     #[test]
     fn drain_finishes_every_resident_row() {
         let mut b = backend();
+        let mut m = Metrics::default();
         let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
-        engine.admit(&mut b, Request::new(0, prompt(1, 8), 10)).unwrap();
-        engine.admit(&mut b, Request::new(1, prompt(2, 16), 3)).unwrap();
-        let done = engine.drain(&mut b).unwrap();
+        let _rx0 = admit(&mut engine, &mut b, Request::new(0, prompt(1, 8), 10));
+        let _rx1 = admit(&mut engine, &mut b, Request::new(1, prompt(2, 16), 3));
+        let done = engine.drain(&mut b, &mut m).unwrap();
         assert_eq!(done.len(), 2);
         assert_eq!(engine.resident(), 0);
         let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();

@@ -5,11 +5,16 @@
 //! [`Metrics::step_occupancy`] is the continuous engine's per-decode-step
 //! slot utilization (resident rows / total slots, sampled every step) —
 //! the number QUIK's compute-bound batching argument cares about.
-//! Time-to-first-token is tracked per request in [`Metrics::ttft_time`].
+//! Time-to-first-token is tracked per request in [`Metrics::ttft_time`],
+//! inter-token latency per emitted token in [`Metrics::itl_time`], and
+//! the v2 early-retire paths (stop token / EOS / cancellation — each of
+//! which frees an engine slot before the decode budget runs out) in
+//! [`Metrics::stop_hits`] / [`Metrics::eos_hits`] /
+//! [`Metrics::cancelled`].
 
 use std::time::Duration;
 
-use super::request::Response;
+use super::request::{FinishReason, Response};
 
 /// Log-scale histogram from 1µs to ~17min (doubling buckets).
 #[derive(Debug, Clone)]
@@ -73,6 +78,12 @@ impl Histogram {
 pub struct Metrics {
     pub requests_completed: u64,
     pub rejected: u64,
+    /// Rows retired early on a stop token (slot freed before budget).
+    pub stop_hits: u64,
+    /// Rows retired early on the EOS token (slot freed before budget).
+    pub eos_hits: u64,
+    /// Rows cancelled — handle dropped / connection lost / cancel verb.
+    pub cancelled: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub batches: u64,
@@ -90,6 +101,11 @@ pub struct Metrics {
     /// Time-to-first-token per request (arrival → first generated token
     /// available).
     pub ttft_time: Histogram,
+    /// Inter-token latency: one sample per *delivered* token, the gap
+    /// since the row's previous emission (the first token's gap is
+    /// measured from the end of its prefill; a token whose failed send
+    /// detects a cancellation records nothing).  Continuous engine only.
+    pub itl_time: Histogram,
     pub e2e_time: Histogram,
 }
 
@@ -120,6 +136,32 @@ impl Metrics {
         self.e2e_time.record(r.total_time);
     }
 
+    /// Fold one *retired* request by finish reason: completed requests
+    /// (budget/stop/EOS) go through [`Metrics::record_response`] with
+    /// the early-retire counters on top; cancelled rows only bump
+    /// [`Metrics::cancelled`] — their partial timings would pollute the
+    /// latency histograms.
+    pub fn record_finish(&mut self, r: &Response) {
+        match r.finish {
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::Stop => {
+                self.stop_hits += 1;
+                self.record_response(r);
+            }
+            FinishReason::Eos => {
+                self.eos_hits += 1;
+                self.record_response(r);
+            }
+            FinishReason::Length => self.record_response(r),
+        }
+    }
+
+    /// One inter-token-latency sample (gap between consecutive token
+    /// emissions of one row).
+    pub fn record_itl(&mut self, gap: Duration) {
+        self.itl_time.record(gap);
+    }
+
     /// Mean batch occupancy (1.0 = no padding waste).
     pub fn occupancy(&self) -> f64 {
         if self.batches == 0 {
@@ -148,15 +190,20 @@ impl Metrics {
             format!("{:.2}", self.step_occupancy())
         };
         format!(
-            "requests={} rejected={} prompt_toks={} gen_toks={} batches={} occupancy={:.2}\n\
+            "requests={} rejected={} stop_hits={} eos_hits={} cancelled={} \
+             prompt_toks={} gen_toks={} batches={} occupancy={:.2}\n\
              engine_steps={} step_occupancy={step_occ}\n\
              queue   mean={:?} p50={:?} p99={:?}\n\
              prefill mean={:?} p50={:?} p99={:?}\n\
              decode  mean={:?} p50={:?} p99={:?}\n\
              ttft    mean={:?} p50={:?} p95={:?} p99={:?}\n\
+             itl     mean={:?} p50={:?} p95={:?} p99={:?}\n\
              e2e     mean={:?} p50={:?} p99={:?}",
             self.requests_completed,
             self.rejected,
+            self.stop_hits,
+            self.eos_hits,
+            self.cancelled,
             self.prompt_tokens,
             self.generated_tokens,
             self.batches,
@@ -175,6 +222,10 @@ impl Metrics {
             self.ttft_time.quantile(0.5),
             self.ttft_time.quantile(0.95),
             self.ttft_time.quantile(0.99),
+            self.itl_time.mean(),
+            self.itl_time.quantile(0.5),
+            self.itl_time.quantile(0.95),
+            self.itl_time.quantile(0.99),
             self.e2e_time.mean(),
             self.e2e_time.quantile(0.5),
             self.e2e_time.quantile(0.99),
@@ -203,9 +254,12 @@ impl Metrics {
             format!("{:.4}", self.step_occupancy())
         };
         format!(
-            "{{\"requests_completed\":{},\"rejected\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"e2e\":{}}}",
+            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
             self.requests_completed,
             self.rejected,
+            self.stop_hits,
+            self.eos_hits,
+            self.cancelled,
             self.prompt_tokens,
             self.generated_tokens,
             self.batches,
@@ -215,6 +269,7 @@ impl Metrics {
             hist(&self.prefill_time),
             hist(&self.decode_time),
             hist(&self.ttft_time),
+            hist(&self.itl_time),
             hist(&self.e2e_time),
         )
     }
@@ -263,26 +318,46 @@ mod tests {
         assert!((m.step_occupancy() - 8.0 / 12.0).abs() < 1e-9);
     }
 
-    #[test]
-    fn record_response_fills_every_histogram() {
-        let mut m = Metrics::default();
-        let r = Response {
+    fn resp(finish: FinishReason) -> Response {
+        Response {
             id: 0,
             prompt_len: 4,
             generated: vec![1, 2],
+            finish,
             queue_time: Duration::from_micros(10),
             prefill_time: Duration::from_micros(100),
             decode_time: Duration::from_micros(200),
             ttft: Duration::from_micros(110),
             total_time: Duration::from_micros(310),
             batch_size: 2,
-        };
-        m.record_response(&r);
+        }
+    }
+
+    #[test]
+    fn record_response_fills_every_histogram() {
+        let mut m = Metrics::default();
+        m.record_response(&resp(FinishReason::Length));
         assert_eq!(m.requests_completed, 1);
         assert_eq!(m.prompt_tokens, 4);
         assert_eq!(m.generated_tokens, 2);
         assert_eq!(m.ttft_time.count(), 1);
         assert_eq!(m.e2e_time.count(), 1);
+    }
+
+    #[test]
+    fn record_finish_routes_by_reason() {
+        let mut m = Metrics::default();
+        m.record_finish(&resp(FinishReason::Length));
+        m.record_finish(&resp(FinishReason::Stop));
+        m.record_finish(&resp(FinishReason::Eos));
+        m.record_finish(&resp(FinishReason::Cancelled));
+        assert_eq!(m.requests_completed, 3, "cancelled rows are not completions");
+        assert_eq!(m.stop_hits, 1);
+        assert_eq!(m.eos_hits, 1);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.e2e_time.count(), 3, "cancelled timings stay out of the histograms");
+        m.record_itl(Duration::from_micros(50));
+        assert_eq!(m.itl_time.count(), 1);
     }
 
     #[test]

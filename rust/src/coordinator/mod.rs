@@ -10,28 +10,41 @@
 //! Rust QUIK engine by default, the PJRT artifact runtime behind
 //! `--features pjrt`.
 //!
-//! Continuous pipeline (the default on capable backends):
+//! The **v2 generation API** spans every layer: a request is a prompt
+//! plus [`GenerationParams`] (budget, temperature / top-k / top-p /
+//! per-request seed, stop tokens, EOS — greedy is the `temperature == 0`
+//! default, byte-identical to the v1 surface), and a submission returns
+//! a [`StreamHandle`] that yields [`Event::Token`]s as decode steps
+//! land, then [`Event::Done`].  Dropping the handle — or a streaming
+//! TCP client's disconnect (the one-shot wire form buffers server-side
+//! and keeps v1 run-to-completion semantics) — is cancellation:
 //!
 //! ```text
-//! submit() ──▶ queue ──▶ DynamicBatcher (admission queue, backpressure)
+//! submit(GenerationRequest) ─▶ queue ─▶ DynamicBatcher (backpressure)
 //!                             │ one request per free slot
 //!                             ▼
 //!            ContinuousEngine: admit ─▶ prefill ─▶ decode…─▶ retire
 //!              (one long-lived KV cache; row-masked forwards freeze
-//!               residents during admission; slots recycle instantly)
-//!                             │ per-row, the moment a row completes
-//!                             ▼
-//!                        Response (+ Metrics: TTFT, step occupancy)
+//!               residents during admission; per-request Sampler picks
+//!               each token; slots recycle instantly)
+//!                  │ Event::Token per step      │ budget / stop / EOS /
+//!                  ▼                            ▼ cancel ⇒ early retire
+//!            StreamHandle ◀──────────── Event::Done(Response)
+//!                                       (+ Metrics: TTFT, ITL, early-retire)
 //! ```
 //!
 //! The slot lifecycle is **admit → prefill → decode → retire**: a queued
 //! request claims a free slot at any step boundary (no waiting for the
 //! resident batch to finish), its prompt prefills through a row-masked
 //! forward that leaves every resident row frozen bit-for-bit, it decodes
-//! at its own per-row cache positions, and on hitting its budget the
-//! response is delivered immediately and the cache row is reset for the
-//! next admission.  Every stream stays bit-identical to its solo run
-//! under any arrival schedule (`tests/engine_integration.rs`).
+//! at its own per-row cache positions with its own seeded
+//! [`sampler::Sampler`], and it retires the moment it hits its budget,
+//! emits a stop/EOS token, or loses its client — early retirement frees
+//! the slot immediately instead of burning decode steps to budget.
+//! Every stream stays bit-identical to its solo run under any arrival
+//! schedule, thread count and engine mode — greedy *and* sampled, since
+//! the sampler is keyed only by the request's seed
+//! (`tests/engine_integration.rs`, `tests/generation_api.rs`).
 //!
 //! Two historical static-batching caveats no longer apply on the native
 //! backend: requests are *not* bucketed by prompt length (admission is
@@ -40,17 +53,19 @@
 //!
 //! Backends without per-row caches / row masking (static-shape PJRT
 //! artifacts) keep the classic fallback: length-bucketed [`BatchPlan`]s
-//! run to completion by the [`Scheduler`], prompts padded to the batch
-//! max, one shared logical cache length — there the old caveats (pad-KV
-//! approximation between a short row's length and the bucket max) still
-//! hold.  `QUIK_ENGINE=continuous|static` (or
-//! [`server::Coordinator::start_with_mode`]) selects the loop
+//! run to completion by the [`Scheduler`] (tokens still stream per
+//! decode step; stop/cancel freeze the row while the batch finishes),
+//! prompts padded to the batch max, one shared logical cache length —
+//! there the old caveats (pad-KV approximation between a short row's
+//! length and the bucket max) still hold.  `QUIK_ENGINE=continuous|static`
+//! (or [`server::Coordinator::start_with_mode`]) selects the loop
 //! explicitly; CI runs the suite in both.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod request;
+pub mod sampler;
 pub mod scheduler;
 pub mod server;
 pub mod speculative;
@@ -59,7 +74,11 @@ pub mod tcp;
 pub use batcher::{BatchPlan, DynamicBatcher};
 pub use engine::{ContinuousEngine, EngineMode};
 pub use metrics::Metrics;
-pub use request::{Request, RequestId, Response};
+pub use request::{
+    Event, FinishReason, GenerationRequest, Request, RequestId, Response, StreamHandle,
+};
+pub use sampler::{GenerationParams, Sampler};
 pub use scheduler::Scheduler;
 pub use server::{Coordinator, ServeReport, WorkloadSpec};
 pub use speculative::{SpecStats, SpeculativeDecoder};
+pub use tcp::ServerConfig;

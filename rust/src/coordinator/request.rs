@@ -1,26 +1,171 @@
-//! Request/response types for the serving path.
+//! Request/response types for the serving path — the v2 generation API.
+//!
+//! A client submits a [`GenerationRequest`] (prompt + full
+//! [`GenerationParams`]) and gets back a [`StreamHandle`]: an event
+//! stream that yields one [`Event::Token`] per decode step the moment
+//! it lands, then a final [`Event::Done`] with the [`Response`]
+//! summary.  **Dropping the handle is cancellation** — the serving loop
+//! observes the closed channel at the next step boundary and retires
+//! the row, freeing its engine slot.  Streams end with an explicit
+//! [`FinishReason`]: budget exhausted, stop token, EOS, or cancelled.
 
+use std::sync::mpsc::{Receiver, RecvError, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
+
+pub use super::sampler::GenerationParams;
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
 
-/// One inference request: a tokenized prompt + generation budget.
+/// Why a generation stream ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The decode budget (`max_new_tokens`, context-clipped) ran out.
+    Length,
+    /// A [`GenerationParams::stop_tokens`] entry was emitted (it is the
+    /// stream's last token).
+    Stop,
+    /// The [`GenerationParams::eos`] token was emitted (it is the
+    /// stream's last token).
+    Eos,
+    /// The client cancelled — handle dropped, connection lost, or an
+    /// explicit cancel verb — and the row retired with a partial stream.
+    Cancelled,
+}
+
+impl FinishReason {
+    /// Wire-protocol name (the `"finish"` field of a TCP response line).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Eos => "eos",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+
+    /// Does emitting `token` end the stream early, and why?  Checked by
+    /// every serving loop right after a token joins the stream (the
+    /// matched token stays in the output).  EOS outranks an identical
+    /// explicit stop token.
+    pub fn stop_match(params: &GenerationParams, token: i32) -> Option<FinishReason> {
+        if params.eos == Some(token) {
+            Some(FinishReason::Eos)
+        } else if params.stop_tokens.contains(&token) {
+            Some(FinishReason::Stop)
+        } else {
+            None
+        }
+    }
+}
+
+/// What a client submits: a tokenized prompt plus generation params.
+#[derive(Debug, Clone)]
+pub struct GenerationRequest {
+    pub prompt: Vec<i32>,
+    pub params: GenerationParams,
+}
+
+impl GenerationRequest {
+    pub fn new(prompt: Vec<i32>, params: GenerationParams) -> Self {
+        Self { prompt, params }
+    }
+
+    /// The v1 request shape: greedy decode, no stop conditions —
+    /// byte-identical streams to the pre-v2 API.
+    pub fn greedy(prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self { prompt, params: GenerationParams::greedy(max_new_tokens) }
+    }
+}
+
+/// One inference request as tracked inside the coordinator: an id, the
+/// prompt, the full generation params and the arrival clock.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<i32>,
-    pub max_new_tokens: usize,
+    pub params: GenerationParams,
     pub arrival: Instant,
 }
 
 impl Request {
+    /// Greedy-default constructor (tests/benches; the v1 shape).
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        Self { id, prompt, max_new_tokens, arrival: Instant::now() }
+        Self::with_params(id, prompt, GenerationParams::greedy(max_new_tokens))
+    }
+
+    pub fn with_params(id: RequestId, prompt: Vec<i32>, params: GenerationParams) -> Self {
+        Self { id, prompt, params, arrival: Instant::now() }
     }
 
     pub fn prompt_len(&self) -> usize {
         self.prompt.len()
+    }
+
+    /// Requested decode budget (before the serving layer's context clip).
+    pub fn max_new_tokens(&self) -> usize {
+        self.params.max_new_tokens
+    }
+}
+
+/// One event on a generation stream.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A generated token, delivered the moment its decode step lands.
+    /// `index` is its position in the generated stream (0-based).
+    Token { token: i32, index: usize },
+    /// The stream is complete; always the final event.
+    Done(Response),
+}
+
+/// Client-side handle to one submitted request's event stream.
+///
+/// Yields [`Event::Token`]s incrementally, then [`Event::Done`].
+/// Dropping the handle (without having received `Done`) cancels the
+/// request: the serving loop notices the closed channel at its next
+/// step boundary and retires the row, freeing its slot for the queue.
+/// A receive error means the request was rejected (admission control,
+/// invalid request, or coordinator shutdown) — no response exists.
+#[derive(Debug)]
+pub struct StreamHandle {
+    id: RequestId,
+    rx: Receiver<Event>,
+}
+
+impl StreamHandle {
+    pub(crate) fn new(id: RequestId, rx: Receiver<Event>) -> Self {
+        Self { id, rx }
+    }
+
+    /// The coordinator-assigned request id (the cancel-verb key).
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Block for the next event.
+    pub fn recv(&self) -> Result<Event, RecvError> {
+        self.rx.recv()
+    }
+
+    /// Non-blocking poll for the next event.
+    pub fn try_recv(&self) -> Result<Event, TryRecvError> {
+        self.rx.try_recv()
+    }
+
+    /// Block for the next event with a timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Event, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+
+    /// Drain the stream to completion and return the final [`Response`]
+    /// (the one-shot convenience — v1 `Receiver::recv` semantics).
+    pub fn wait(self) -> Result<Response, RecvError> {
+        loop {
+            match self.rx.recv()? {
+                Event::Done(resp) => return Ok(resp),
+                Event::Token { .. } => continue,
+            }
+        }
     }
 }
 
@@ -30,6 +175,8 @@ pub struct Response {
     pub id: RequestId,
     pub prompt_len: usize,
     pub generated: Vec<i32>,
+    /// Why the stream ended (budget / stop token / EOS / cancellation).
+    pub finish: FinishReason,
     /// Time spent queued before its batch was formed.
     pub queue_time: Duration,
     /// Prefill wall time of the batch this request rode in.
@@ -57,11 +204,69 @@ impl Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc;
 
     #[test]
     fn request_basics() {
         let r = Request::new(7, vec![1, 2, 3], 16);
         assert_eq!(r.prompt_len(), 3);
         assert_eq!(r.id, 7);
+        assert_eq!(r.max_new_tokens(), 16);
+        assert!(r.params.is_greedy());
+    }
+
+    #[test]
+    fn greedy_request_carries_default_params() {
+        let g = GenerationRequest::greedy(vec![1, 2], 8);
+        assert_eq!(g.params, GenerationParams::greedy(8));
+        assert!(g.params.stop_tokens.is_empty());
+    }
+
+    #[test]
+    fn finish_reason_wire_names() {
+        assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::Stop.as_str(), "stop");
+        assert_eq!(FinishReason::Eos.as_str(), "eos");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+    }
+
+    fn resp(id: RequestId, generated: Vec<i32>) -> Response {
+        Response {
+            id,
+            prompt_len: 2,
+            generated,
+            finish: FinishReason::Length,
+            queue_time: Duration::ZERO,
+            prefill_time: Duration::ZERO,
+            decode_time: Duration::ZERO,
+            ttft: Duration::ZERO,
+            total_time: Duration::ZERO,
+            batch_size: 1,
+        }
+    }
+
+    #[test]
+    fn handle_streams_tokens_then_done() {
+        let (tx, rx) = mpsc::channel();
+        let handle = StreamHandle::new(3, rx);
+        assert_eq!(handle.id(), 3);
+        tx.send(Event::Token { token: 42, index: 0 }).unwrap();
+        tx.send(Event::Token { token: 7, index: 1 }).unwrap();
+        tx.send(Event::Done(resp(3, vec![42, 7]))).unwrap();
+        match handle.recv().unwrap() {
+            Event::Token { token, index } => {
+                assert_eq!((token, index), (42, 0));
+            }
+            other => panic!("expected first token, got {other:?}"),
+        }
+        let done = handle.wait().unwrap();
+        assert_eq!(done.generated, vec![42, 7]);
+    }
+
+    #[test]
+    fn handle_wait_surfaces_rejection_as_error() {
+        let (tx, rx) = mpsc::channel::<Event>();
+        drop(tx); // the coordinator rejected the request
+        assert!(StreamHandle::new(0, rx).wait().is_err());
     }
 }

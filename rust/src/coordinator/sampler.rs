@@ -1,0 +1,363 @@
+//! Seeded token sampling: the generation-params surface and the
+//! per-request sampler behind it.
+//!
+//! QUIK's signature serving invariant is that every stream is
+//! **bit-identical to its solo run at any thread count and in any
+//! engine mode**.  Greedy decoding gets that for free (argmax over
+//! logits that are themselves bit-identical across `QUIK_THREADS`);
+//! sampled decoding keeps it by construction:
+//!
+//! * every request carries its own seed in [`GenerationParams::seed`] —
+//!   there is **no ambient randomness** (no clocks, no global RNG, no
+//!   per-slot state that depends on scheduling), so a cancel/re-submit
+//!   or a rerun at a different thread count replays the exact stream;
+//! * the [`Sampler`] is keyed by that seed through the same SplitMix64
+//!   generator the rest of the repo uses ([`crate::util::rng::Rng`]) and
+//!   consumes exactly **one draw per emitted token**, in emission order.
+//!   The serving loops (continuous engine, static scheduler,
+//!   speculative decoder) all preserve that consumption order, which is
+//!   why their sampled streams agree with each other and with a plain
+//!   sequential decode;
+//! * all candidate ordering is totally deterministic: logits sort
+//!   descending with index-ascending tie-breaks, NaN never wins
+//!   (matching [`crate::util::argmax`]'s tie/NaN discipline).
+//!
+//! `temperature == 0.0` is the greedy default and routes through the
+//! shared [`crate::util::argmax`] — byte-identical to the pre-sampling
+//! serving stack, and it consumes no RNG draws.
+
+use anyhow::{bail, Result};
+
+use super::request::FinishReason;
+use crate::util::{argmax, rng::Rng};
+
+/// How a request wants its tokens decoded, and when to stop.
+///
+/// The full v2 generation surface: budget, sampling knobs
+/// (temperature / top-k / top-p / seed) and stop conditions (explicit
+/// stop tokens + EOS).  `Default` is the v1 behavior exactly: greedy,
+/// 16 tokens, no stop conditions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerationParams {
+    /// Decode budget (still clipped by the serving layer to the
+    /// backend's remaining context, exactly like a solo run).
+    pub max_new_tokens: usize,
+    /// `0.0` = greedy argmax (the default; consumes no RNG).  `> 0.0`
+    /// divides logits before the softmax.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit candidates (`0` = disabled).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest candidate prefix with
+    /// cumulative probability `>= top_p` (`1.0` = disabled).
+    pub top_p: f32,
+    /// Per-request RNG key (SplitMix64).  Same `(prompt, params)` ⇒
+    /// same stream, on every thread count and engine mode.
+    pub seed: u64,
+    /// Retire the row the moment one of these tokens is emitted.  The
+    /// matched token **is included** in the generated stream.
+    pub stop_tokens: Vec<i32>,
+    /// End-of-sequence token; like a stop token but reported as
+    /// [`crate::coordinator::request::FinishReason::Eos`].
+    pub eos: Option<i32>,
+}
+
+impl Default for GenerationParams {
+    fn default() -> Self {
+        Self {
+            max_new_tokens: 16,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+            eos: None,
+        }
+    }
+}
+
+impl GenerationParams {
+    /// The v1 request shape: greedy decode of `max_new_tokens` tokens.
+    pub fn greedy(max_new_tokens: usize) -> Self {
+        Self { max_new_tokens, ..Self::default() }
+    }
+
+    /// Sampled decode with the given temperature and seed (top-k/top-p
+    /// disabled; set the fields directly for nucleus sampling).
+    pub fn sampled(max_new_tokens: usize, temperature: f32, seed: u64) -> Self {
+        Self { max_new_tokens, temperature, seed, ..Self::default() }
+    }
+
+    /// Greedy iff the sampler will route through plain argmax.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Admission-time validation (shared by every serving loop): a bad
+    /// knob fails the one request up front instead of a forward later.
+    pub fn validate(&self) -> Result<()> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            bail!("temperature must be finite and >= 0, got {}", self.temperature);
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            bail!("top_p must be in (0, 1], got {}", self.top_p);
+        }
+        Ok(())
+    }
+
+    /// Does emitting `token` end the stream early?  Checked *after* the
+    /// token joins the stream (the matched token is part of the output).
+    /// The single source of truth is
+    /// [`FinishReason::stop_match`] — this is its boolean view, so the
+    /// two can never drift.
+    pub fn is_stop(&self, token: i32) -> bool {
+        FinishReason::stop_match(self, token).is_some()
+    }
+}
+
+/// Per-request token sampler: one instance per served row, consuming
+/// one RNG draw per emitted token (none in greedy mode).
+///
+/// Self-contained by design — the only state is the params snapshot and
+/// the SplitMix64 stream keyed by [`GenerationParams::seed`] — so the
+/// serving layer can recreate the exact stream from `(seed, params)`
+/// alone (cancel/re-submit reproducibility).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    greedy: bool,
+    temperature: f32,
+    top_k: usize,
+    top_p: f32,
+    rng: Rng,
+    /// Reused candidate buffer (index, logit) — no per-token allocation
+    /// once warm.
+    scratch: Vec<(usize, f32)>,
+    /// Reused softmax buffer, same warm-path contract.
+    probs: Vec<f64>,
+}
+
+/// The candidate order: logit descending, index ascending on ties — a
+/// strict total order (NaN is mapped to −∞ before comparison), so both
+/// the top-k *set* and the sorted order are deterministic.
+fn cand_cmp(a: &(usize, f32), b: &(usize, f32)) -> std::cmp::Ordering {
+    b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+}
+
+impl Sampler {
+    pub fn new(params: &GenerationParams) -> Self {
+        Self {
+            greedy: params.is_greedy(),
+            temperature: params.temperature,
+            top_k: params.top_k,
+            top_p: params.top_p,
+            rng: Rng::new(params.seed),
+            scratch: Vec::new(),
+            probs: Vec::new(),
+        }
+    }
+
+    /// Pick the next token from one logits row.
+    ///
+    /// Greedy mode is *exactly* [`crate::util::argmax`] (first maximum
+    /// wins ties, NaN never wins, no RNG consumed).  Sampled mode:
+    /// temperature-scaled softmax over the top-k / top-p candidate set,
+    /// one uniform draw.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        if self.greedy {
+            return argmax(logits);
+        }
+        if logits.is_empty() {
+            return 0;
+        }
+        // Candidate list ordered by [`cand_cmp`] (logit desc, index asc)
+        // — a total, deterministic order.  NaN is mapped to -inf so it
+        // can never be sampled ahead of a real logit.  With top-k
+        // active, an O(V) partial selection keeps only the k best
+        // before sorting — the full O(V log V) sort is paid only by
+        // pure nucleus sampling, which needs the complete order.
+        self.scratch.clear();
+        self.scratch.extend(
+            logits
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| (i, if l.is_nan() { f32::NEG_INFINITY } else { l })),
+        );
+        if self.top_k > 0 && self.top_k < self.scratch.len() {
+            // The comparator is a strict total order, so the k-smallest
+            // set is unique — partial selection cannot perturb the
+            // sampled distribution.
+            self.scratch.select_nth_unstable_by(self.top_k - 1, cand_cmp);
+            self.scratch.truncate(self.top_k);
+        }
+        self.scratch.sort_by(cand_cmp);
+        let mut n = self.scratch.len();
+
+        // Temperature-scaled softmax over the candidates (max
+        // subtraction keeps exp() in range; exact value irrelevant to
+        // determinism — it's the same f64 expression every run).
+        let max_l = self.scratch[0].1 as f64;
+        let inv_t = 1.0 / self.temperature as f64;
+        self.probs.clear();
+        let mut total = 0.0f64;
+        for &(_, l) in &self.scratch[..n] {
+            let p = ((l as f64 - max_l) * inv_t).exp();
+            self.probs.push(p);
+            total += p;
+        }
+
+        // Nucleus cut: smallest prefix with cumulative mass >= top_p
+        // (always at least one candidate).
+        if self.top_p < 1.0 {
+            let target = self.top_p as f64 * total;
+            let mut cum = 0.0f64;
+            let mut keep = n;
+            for (i, &p) in self.probs.iter().enumerate() {
+                cum += p;
+                if cum >= target {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            n = keep;
+            total = self.probs[..n].iter().sum();
+        }
+
+        // One uniform draw over the kept mass, walked front-to-back.
+        let u = self.rng.f64() * total;
+        let mut cum = 0.0f64;
+        for (i, &p) in self.probs[..n].iter().enumerate() {
+            cum += p;
+            if u < cum {
+                return self.scratch[i].0 as i32;
+            }
+        }
+        // Float round-off fallback: the last kept candidate.
+        self.scratch[n - 1].0 as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_v1_greedy() {
+        let p = GenerationParams::default();
+        assert!(p.is_greedy());
+        assert_eq!(p.max_new_tokens, 16);
+        assert!(p.stop_tokens.is_empty());
+        assert_eq!(p.eos, None);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn greedy_sampler_is_argmax_and_consumes_no_rng() {
+        let logits = vec![0.1, 0.9, -0.5, 0.9];
+        let mut s = Sampler::new(&GenerationParams::greedy(4));
+        for _ in 0..3 {
+            assert_eq!(s.sample(&logits), argmax(&logits));
+        }
+    }
+
+    #[test]
+    fn sampled_streams_reproduce_from_seed() {
+        let params = GenerationParams::sampled(8, 0.8, 1234);
+        let logits: Vec<f32> = (0..96).map(|i| ((i * 37 + 11) % 17) as f32 * 0.1).collect();
+        let mut a = Sampler::new(&params);
+        let mut b = Sampler::new(&params);
+        for _ in 0..32 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
+        // a different seed diverges somewhere over 32 draws
+        let mut c = Sampler::new(&GenerationParams::sampled(8, 0.8, 4321));
+        let mut d = Sampler::new(&params);
+        let differs = (0..32).any(|_| d.sample(&logits) != c.sample(&logits));
+        assert!(differs, "independent seeds produced identical 32-draw streams");
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let logits = vec![0.3, 2.0, -1.0, 1.9];
+        let params = GenerationParams {
+            max_new_tokens: 4,
+            temperature: 1.0,
+            top_k: 1,
+            ..Default::default()
+        };
+        let mut s = Sampler::new(&params);
+        for _ in 0..8 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_keeps_only_the_peak() {
+        let logits = vec![0.0, 8.0, 0.1, 0.2];
+        let params = GenerationParams {
+            max_new_tokens: 4,
+            temperature: 1.0,
+            top_p: 1e-6,
+            ..Default::default()
+        };
+        let mut s = Sampler::new(&params);
+        for _ in 0..8 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_masks_the_tail() {
+        // With top_k = 2, only the two largest logits may ever appear.
+        let logits = vec![1.0, 5.0, 4.0, -2.0];
+        let params = GenerationParams {
+            max_new_tokens: 4,
+            temperature: 1.5,
+            top_k: 2,
+            seed: 9,
+            ..Default::default()
+        };
+        let mut s = Sampler::new(&params);
+        for _ in 0..64 {
+            let t = s.sample(&logits);
+            assert!(t == 1 || t == 2, "sampled outside the top-k set: {t}");
+        }
+    }
+
+    #[test]
+    fn nan_logits_never_win() {
+        let logits = vec![f32::NAN, 1.0, f32::NAN];
+        let params = GenerationParams::sampled(4, 1.0, 3);
+        let mut s = Sampler::new(&params);
+        for _ in 0..16 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn stop_and_eos_detection() {
+        let p = GenerationParams {
+            stop_tokens: vec![7, 9],
+            eos: Some(2),
+            ..Default::default()
+        };
+        assert!(p.is_stop(7));
+        assert!(p.is_stop(9));
+        assert!(p.is_stop(2));
+        assert!(!p.is_stop(3));
+        assert!(!GenerationParams::default().is_stop(0));
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        let bad = |temperature: f32, top_p: f32| GenerationParams {
+            temperature,
+            top_p,
+            ..Default::default()
+        };
+        assert!(bad(f32::NAN, 1.0).validate().is_err());
+        assert!(bad(-1.0, 1.0).validate().is_err());
+        assert!(bad(0.7, 0.0).validate().is_err());
+        assert!(bad(0.7, 1.5).validate().is_err());
+        assert!(bad(0.7, f32::NAN).validate().is_err());
+        bad(0.7, 0.9).validate().unwrap();
+    }
+}

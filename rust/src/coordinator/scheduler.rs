@@ -12,8 +12,18 @@
 //! prompt to the backend's prefill step length (the *longest* prompt in
 //! the batch for dynamic-shape backends, the compiled artifact length for
 //! PJRT), run one prefill step, roll the shared cache length back to the
-//! longest true prompt, then decode greedily until every rider has its
-//! tokens.
+//! longest true prompt, then decode until every rider has finished.
+//!
+//! The v2 generation API runs here too: each row decodes through its
+//! *own* seeded [`Sampler`] (greedy argmax at `temperature == 0` — the
+//! default, byte-identical to the classic loop), streams every token to
+//! its [`Event`] channel the moment its decode step lands, and finishes
+//! per-row — budget, stop token / EOS, or cancellation (a failed event
+//! send: the client dropped its handle).  Finished rows are frozen (fed
+//! a pad token at a pinned position, their sampler never advanced)
+//! while co-riders keep decoding; the batch itself still runs until its
+//! last row finishes — that head-of-line blocking is the structural
+//! cost of the static loop the continuous engine exists to remove.
 //!
 //! Each row's first sampled token comes from the logits at *its own* last
 //! prompt position, so shorter prompts in a bucket are not silently
@@ -26,14 +36,16 @@
 //! short row's true length and the batch maximum (buckets keep that gap
 //! below the bucket granularity).
 
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::batcher::BatchPlan;
-use super::request::Response;
+use super::request::{Event, FinishReason, RequestId, Response};
+use super::sampler::Sampler;
 use crate::backend::{InferenceBackend, KvCache, Phase};
-use crate::util::argmax;
 
 pub use crate::backend::Variant;
 
@@ -51,7 +63,18 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
 
     /// Run one batch to completion (prefill + full decode).  Returns one
     /// [`Response`] per real request (padding rows are dropped).
-    pub fn run_batch(&mut self, plan: BatchPlan) -> Result<Vec<Response>> {
+    ///
+    /// `events` maps request ids to their client event streams: each
+    /// emitted token is sent as [`Event::Token`] as its decode step
+    /// lands (requests absent from the map simply aren't streamed — the
+    /// final `Done` delivery is the caller's job).  A failed send marks
+    /// the row cancelled: it freezes with its partial stream while the
+    /// rest of the batch decodes on.
+    pub fn run_batch(
+        &mut self,
+        plan: BatchPlan,
+        events: &HashMap<RequestId, Sender<Event>>,
+    ) -> Result<Vec<Response>> {
         let b = plan.batch_size;
         if plan.requests.is_empty() {
             bail!("empty batch");
@@ -73,18 +96,20 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
         // budget is clipped by *its own* remaining context — a short
         // rider in a mixed-length batch generates exactly the tokens it
         // would solo (the old batch-max clip silently truncated it).
-        // Rows that exhaust their budget are frozen (fed a pad token at a
-        // pinned position) while longer-budget rows keep decoding.
-        // Without per-row lengths every row shares one logical length,
-        // so the conservative batch-max clip is the only sound bound.
+        // Rows that finish — budget, stop token, cancellation — are
+        // frozen (fed a pad token at a pinned position) while other rows
+        // keep decoding.  Without per-row lengths every row shares one
+        // logical length, so the conservative batch-max clip is the only
+        // sound bound.
         let per_row = cache.per_row_lens();
+        let n_req = plan.requests.len();
         // One budget per cache row; padding rows (batch_size > requests)
         // get 0 and are frozen from the first decode step.
         let budgets: Vec<usize> = (0..b)
             .map(|row| {
                 let Some(r) = plan.requests.get(row) else { return 0 };
                 let cap = if per_row { r.prompt_len() } else { max_prompt };
-                r.max_new_tokens.min(max_ctx.saturating_sub(cap))
+                r.params.max_new_tokens.min(max_ctx.saturating_sub(cap))
             })
             .collect();
         let row_prompt =
@@ -112,41 +137,69 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
             cache.set_row_len(row, req.prompt_len());
         }
 
-        // ---- greedy decode ----------------------------------------------
+        // ---- decode ------------------------------------------------------
         // Each row's first token is sampled at its *own* last prompt
-        // position (no truncation to the batch-minimum length).
-        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); plan.requests.len()];
+        // position (no truncation to the batch-minimum length) by its
+        // own seeded sampler — one RNG draw per emitted token, in
+        // emission order, so sampled rows replay their solo streams
+        // exactly.  Padding rows have no sampler and ride a pad token.
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); n_req];
+        let mut finish: Vec<Option<FinishReason>> = vec![None; n_req];
+        let mut samplers: Vec<Sampler> =
+            plan.requests.iter().map(|r| Sampler::new(&r.params)).collect();
         let mut next: Vec<i32> = (0..b)
-            .map(|row| {
-                let pos =
-                    plan.requests.get(row).map(|r| r.prompt_len()).unwrap_or(max_prompt) - 1;
-                argmax(out.row(row, pos))
+            .map(|row| match plan.requests.get(row) {
+                Some(r) => samplers[row].sample(out.row(row, r.prompt_len() - 1)),
+                None => self.pad_token,
             })
             .collect();
         let t1 = Instant::now();
         for _step in 0..max_new {
-            for (row, g) in generated.iter_mut().enumerate() {
-                if g.len() < budgets[row] {
-                    g.push(next[row]);
+            // Emit each active row's pending token to its stream and
+            // settle its finish state.
+            for row in 0..n_req {
+                if finish[row].is_some() {
+                    continue;
+                }
+                if generated[row].len() >= budgets[row] {
+                    // zero-budget row (context-filled prompt)
+                    finish[row] = Some(FinishReason::Length);
+                    continue;
+                }
+                let token = next[row];
+                let index = generated[row].len();
+                generated[row].push(token);
+                if let Some(tx) = events.get(&plan.requests[row].id) {
+                    if tx.send(Event::Token { token, index }).is_err() {
+                        finish[row] = Some(FinishReason::Cancelled);
+                        continue;
+                    }
+                }
+                if let Some(r) = FinishReason::stop_match(&plan.requests[row].params, token) {
+                    finish[row] = Some(r);
+                } else if generated[row].len() >= budgets[row] {
+                    finish[row] = Some(FinishReason::Length);
                 }
             }
-            if generated.iter().zip(&budgets).all(|(g, &bud)| g.len() >= bud) {
+            if finish.iter().all(|f| f.is_some()) {
                 break;
             }
             if per_row {
                 // Freeze finished rows (and padding rows): feed a pad
                 // token and pin the row's cache length one below its
-                // final length, so the pad recompute reuses a single slot
-                // and can never push the row past the context budget
-                // while longer-budget rows keep decoding.  Frozen rows'
-                // outputs are discarded, and per-row lengths keep their
-                // cache invisible to every other row.
+                // current length, so the pad recompute reuses a single
+                // slot and can never push the row past the context
+                // budget while active rows keep decoding.  Frozen rows'
+                // outputs are discarded, their samplers never advance,
+                // and per-row lengths keep their cache invisible to
+                // every other row.
                 for row in 0..b {
-                    if generated.get(row).is_some_and(|g| g.len() < budgets[row]) {
+                    if row < n_req && finish[row].is_none() {
                         continue; // still decoding
                     }
                     next[row] = self.pad_token;
-                    let pin = (row_prompt(row) + budgets[row])
+                    let gen_len = generated.get(row).map(|g| g.len()).unwrap_or(0);
+                    let pin = (row_prompt(row) + gen_len)
                         .saturating_sub(1)
                         .min(max_ctx.saturating_sub(1));
                     cache.set_row_len(row, pin);
@@ -154,7 +207,15 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
             }
             let step_out =
                 self.backend.forward(self.variant, Phase::Decode, &next, b, &mut cache)?;
-            next = (0..b).map(|row| argmax(step_out.row(row, 0))).collect();
+            next = (0..b)
+                .map(|row| {
+                    if row < n_req && finish[row].is_none() {
+                        samplers[row].sample(step_out.row(row, 0))
+                    } else {
+                        self.pad_token
+                    }
+                })
+                .collect();
         }
         let decode_time = t1.elapsed();
 
@@ -164,12 +225,14 @@ impl<'b, B: InferenceBackend> Scheduler<'b, B> {
             .requests
             .iter()
             .zip(generated)
-            .map(|(req, gen)| {
+            .zip(finish)
+            .map(|((req, gen), fin)| {
                 let queue_time = t_batch.duration_since(req.arrival);
                 Response {
                     id: req.id,
                     prompt_len: req.prompt_len(),
                     generated: gen,
+                    finish: fin.unwrap_or(FinishReason::Length),
                     queue_time,
                     prefill_time,
                     decode_time,
@@ -187,7 +250,12 @@ mod tests {
     use super::*;
     use crate::backend::native::{demo_policy, NativeBackend, NativeConfig};
     use crate::coordinator::batcher::BatchPlan;
-    use crate::coordinator::request::Request;
+    use crate::coordinator::request::{GenerationParams, Request};
+    use std::sync::mpsc;
+
+    fn no_events() -> HashMap<RequestId, Sender<Event>> {
+        HashMap::new()
+    }
 
     #[test]
     fn variant_reexport_parses() {
@@ -219,8 +287,9 @@ mod tests {
         };
         let mut solo_backend = backend();
         let mut solo_sched = Scheduler::new(&mut solo_backend, Variant::Fp16);
-        let solo = solo_sched.run_batch(solo_plan).unwrap();
+        let solo = solo_sched.run_batch(solo_plan, &no_events()).unwrap();
         assert_eq!(solo[0].generated.len(), 30);
+        assert_eq!(solo[0].finish, FinishReason::Length);
 
         // batch_size 3 leaves one padding row, which must be frozen too
         // (it has no budget to spend past the batch-max prompt)
@@ -231,7 +300,7 @@ mod tests {
         };
         let mut b = backend();
         let mut sched = Scheduler::new(&mut b, Variant::Fp16);
-        let out = sched.run_batch(plan).unwrap();
+        let out = sched.run_batch(plan, &no_events()).unwrap();
         // the long row's own budget really is 96 − 80 = 16
         assert_eq!(out[0].generated.len(), 16, "long row budget");
         assert_eq!(out[1].generated.len(), 30, "short row was clipped by the batch-max prompt");
@@ -250,9 +319,82 @@ mod tests {
         };
         let mut b = backend();
         let mut sched = Scheduler::new(&mut b, Variant::Fp16);
-        let out = sched.run_batch(plan).unwrap();
+        let out = sched.run_batch(plan, &no_events()).unwrap();
         for r in &out {
             assert_eq!(r.generated.len(), 6, "96 − 90 = 6 tokens fit");
         }
+    }
+
+    #[test]
+    fn stop_token_freezes_a_row_while_coriders_finish() {
+        // Find the greedy stream, rerun with its second token as a stop
+        // token next to an unconstrained co-rider: the stopped row must
+        // truncate inclusively (same prefix as the full run) while the
+        // co-rider still gets every budgeted token.
+        let p: Vec<i32> = (0..12).map(|i| (i * 5 + 2) % 90).collect();
+        let solo_plan = BatchPlan {
+            requests: vec![Request::new(0, p.clone(), 10)],
+            batch_size: 1,
+            prompt_len: p.len(),
+        };
+        let mut b0 = backend();
+        let full = Scheduler::new(&mut b0, Variant::Fp16)
+            .run_batch(solo_plan, &no_events())
+            .unwrap()
+            .remove(0);
+        assert_eq!(full.generated.len(), 10);
+        let stop = full.generated[1];
+        let first_hit = full.generated.iter().position(|&t| t == stop).unwrap();
+
+        let params = GenerationParams {
+            max_new_tokens: 10,
+            stop_tokens: vec![stop],
+            ..Default::default()
+        };
+        let plan = BatchPlan {
+            requests: vec![
+                Request::with_params(1, p.clone(), params),
+                Request::new(2, p, 10),
+            ],
+            batch_size: 2,
+            prompt_len: 12,
+        };
+        let mut b = backend();
+        let out = Scheduler::new(&mut b, Variant::Fp16).run_batch(plan, &no_events()).unwrap();
+        assert_eq!(out[0].finish, FinishReason::Stop);
+        assert_eq!(out[0].generated, full.generated[..=first_hit]);
+        assert_eq!(out[1].finish, FinishReason::Length);
+        assert_eq!(out[1].generated, full.generated, "co-rider perturbed by a frozen neighbor");
+    }
+
+    #[test]
+    fn tokens_stream_per_decode_step_and_dropped_stream_cancels() {
+        let p: Vec<i32> = (0..8).map(|i| (i * 3 + 1) % 90).collect();
+        let plan = BatchPlan {
+            requests: vec![Request::new(0, p.clone(), 4), Request::new(1, p, 6)],
+            batch_size: 2,
+            prompt_len: 8,
+        };
+        let mut events = HashMap::new();
+        let (tx0, rx0) = mpsc::channel();
+        events.insert(0u64, tx0);
+        let (tx1, rx1) = mpsc::channel();
+        drop(rx1); // client 1 walked away before the batch ran
+        events.insert(1u64, tx1);
+        let mut b = backend();
+        let out = Scheduler::new(&mut b, Variant::Fp16).run_batch(plan, &events).unwrap();
+        // row 0: streamed tokens match the response, in order
+        let streamed: Vec<i32> = rx0
+            .try_iter()
+            .map(|ev| match ev {
+                Event::Token { token, .. } => token,
+                Event::Done(_) => panic!("Done delivery is the caller's job"),
+            })
+            .collect();
+        assert_eq!(streamed, out[0].generated);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        // row 1: first send fails -> cancelled with exactly one token
+        assert_eq!(out[1].finish, FinishReason::Cancelled);
+        assert_eq!(out[1].generated.len(), 1);
     }
 }

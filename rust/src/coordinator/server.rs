@@ -5,6 +5,12 @@
 //! happiest owning its weight stacks on the thread that runs them —
 //! so only channels cross the thread boundary.
 //!
+//! The v2 submission surface: [`Coordinator::submit`] takes a
+//! [`GenerationRequest`] (prompt + sampling/stop params) and returns a
+//! [`StreamHandle`] that yields [`Event::Token`]s as decode steps land,
+//! then [`Event::Done`].  Dropping the handle cancels the request;
+//! [`Coordinator::cancel`] cancels by id (the TCP cancel verb).
+//!
 //! Two serving loops share the worker ([`EngineMode`] picks one at
 //! startup, `QUIK_ENGINE` overrides in `Auto` mode):
 //!
@@ -12,11 +18,13 @@
 //!   [`ContinuousEngine`] per step: drain the mailbox, admit queued
 //!   requests into free slots (the [`DynamicBatcher`] acts as a pure
 //!   admission queue with the same backpressure), run one decode step,
-//!   deliver every response the moment its row retires.
+//!   stream each token and deliver every response the moment its row
+//!   retires — budget, stop token/EOS, or cancellation, each of which
+//!   frees the slot at that step boundary.
 //! * **static fallback** — backends without per-row caches / row masking
 //!   (e.g. PJRT artifacts) keep the classic loop: form a [`BatchPlan`],
-//!   run it to completion through the [`Scheduler`], deliver at batch
-//!   end.
+//!   run it to completion through the [`Scheduler`] (tokens still
+//!   stream per decode step), deliver at batch end.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -28,7 +36,10 @@ use anyhow::{Context, Result};
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::engine::{ContinuousEngine, EngineMode, ENGINE_ENV};
 use super::metrics::Metrics;
-use super::request::{Request, RequestId, Response};
+use super::request::{
+    Event, FinishReason, GenerationParams, GenerationRequest, Request, RequestId, Response,
+    StreamHandle,
+};
 use super::scheduler::Scheduler;
 use crate::backend::native::{NativeBackend, NativeCheckpoint};
 use crate::backend::{InferenceBackend, Phase, Variant};
@@ -36,7 +47,8 @@ use crate::config::QuikPolicy;
 use crate::util::rng::Rng;
 
 enum Msg {
-    Submit(Request, Sender<Response>),
+    Submit(Request, Sender<Event>),
+    Cancel(RequestId, Sender<bool>),
     Metrics(Sender<Metrics>),
     Shutdown,
 }
@@ -140,13 +152,27 @@ impl Coordinator {
         )
     }
 
-    /// Submit a request; returns the channel the response will arrive on.
-    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> Receiver<Response> {
+    /// Submit a request; returns the stream handle its events arrive on.
+    /// Tokens arrive incrementally ([`Event::Token`]), then the final
+    /// [`Event::Done`] summary.  Dropping the handle cancels the
+    /// request at the serving loop's next step boundary.
+    pub fn submit(&mut self, req: GenerationRequest) -> StreamHandle {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id;
         self.next_id += 1;
-        let _ = self.tx.send(Msg::Submit(Request::new(id, prompt, max_new_tokens), tx));
-        rx
+        let _ = self.tx.send(Msg::Submit(Request::with_params(id, req.prompt, req.params), tx));
+        StreamHandle::new(id, rx)
+    }
+
+    /// Cancel a request by id (the TCP `{"cancel": id}` verb).  Returns
+    /// whether the request was found still in flight — resident in the
+    /// engine (retired immediately with its partial stream) or queued
+    /// (removed; its stream receives a `Done(Cancelled)` with no
+    /// tokens).  `false` means it already finished or never existed.
+    pub fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Cancel(id, tx)).context("worker gone")?;
+        rx.recv().context("worker gone")
     }
 
     /// Snapshot of the worker's metrics.
@@ -256,35 +282,67 @@ where
     }
 }
 
-/// Admission validation shared by both loops: a bad token (or an
-/// oversized prompt) would fail a whole forward — reject the one
-/// request up front instead (its client sees a closed channel).
+/// Admission validation shared by both loops: a bad token, an oversized
+/// prompt or malformed sampling params would fail a whole forward —
+/// reject the one request up front instead (its client sees a closed
+/// channel).
 fn request_is_valid(req: &Request, vocab: usize, max_context: usize) -> bool {
     !req.prompt.is_empty()
         && req.prompt.len() <= max_context
         && req.prompt.iter().all(|&t| t >= 0 && (t as usize) < vocab)
+        && req.params.validate().is_ok()
 }
 
-/// Deliver retired responses: fold into metrics, wake the waiters.
+/// Deliver retired responses (static loop): fold into metrics by finish
+/// reason, send `Done` to the waiting streams.
 fn deliver(
     responses: Vec<Response>,
-    waiters: &mut HashMap<RequestId, Sender<Response>>,
+    waiters: &mut HashMap<RequestId, Sender<Event>>,
     metrics: &mut Metrics,
 ) {
     for resp in responses {
-        metrics.record_response(&resp);
+        metrics.record_finish(&resp);
         if let Some(tx) = waiters.remove(&resp.id) {
-            let _ = tx.send(resp);
+            let _ = tx.send(Event::Done(resp));
         }
     }
+}
+
+/// Cancel a *queued* (never admitted) request: remove it from the
+/// batcher and resolve its stream with an empty `Done(Cancelled)`.
+fn cancel_queued(
+    batcher: &mut DynamicBatcher,
+    waiters: &mut HashMap<RequestId, Sender<Event>>,
+    metrics: &mut Metrics,
+    id: RequestId,
+) -> bool {
+    let Some(req) = batcher.remove(id) else { return false };
+    let resp = Response {
+        id,
+        prompt_len: req.prompt_len(),
+        generated: Vec::new(),
+        finish: FinishReason::Cancelled,
+        queue_time: req.arrival.elapsed(),
+        prefill_time: Duration::ZERO,
+        decode_time: Duration::ZERO,
+        ttft: Duration::ZERO,
+        total_time: req.arrival.elapsed(),
+        batch_size: 0,
+    };
+    metrics.record_finish(&resp);
+    if let Some(tx) = waiters.remove(&id) {
+        let _ = tx.send(Event::Done(resp));
+    }
+    true
 }
 
 /// The continuous serving loop: per iteration, drain the mailbox, admit
 /// queued requests into free slots (each admission is a row-masked
 /// prefill that leaves residents frozen), then run **one** engine decode
-/// step and deliver whatever retired.  A request arriving mid-decode is
-/// admitted at the next step boundary — it never waits for the resident
-/// batch to finish.
+/// step — streaming each emitted token — and deliver whatever retired.
+/// A request arriving mid-decode is admitted at the next step boundary —
+/// it never waits for the resident batch to finish; a stop/EOS hit or a
+/// cancellation frees its slot at the same granularity.
 fn run_continuous<B: InferenceBackend>(
     backend: &mut B,
     mut engine: ContinuousEngine<B>,
@@ -294,7 +352,9 @@ fn run_continuous<B: InferenceBackend>(
     max_context: usize,
 ) -> Result<()> {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
-    let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+    // Event senders of *queued* requests only — admission moves the
+    // sender into the engine slot (resident rows own their streams).
+    let mut waiters: HashMap<RequestId, Sender<Event>> = HashMap::new();
     let mut metrics = Metrics::default();
 
     loop {
@@ -333,23 +393,25 @@ fn run_continuous<B: InferenceBackend>(
                 }
                 continue; // keep draining the mailbox before stepping
             }
+            Some(Msg::Cancel(id, ack)) => {
+                let found = engine.cancel(id, &mut metrics).is_some()
+                    || cancel_queued(&mut batcher, &mut waiters, &mut metrics, id);
+                let _ = ack.send(found);
+                continue;
+            }
             Some(Msg::Metrics(tx)) => {
                 let _ = tx.send(metrics.clone());
                 continue;
             }
             Some(Msg::Shutdown) => {
-                // Finish resident rows (complete responses), then close
-                // every queued request's channel: all clients observe a
-                // deterministic outcome instead of a hang.
-                match engine.drain(backend) {
-                    Ok(done) => deliver(done, &mut waiters, &mut metrics),
-                    Err(e) => {
-                        eprintln!("[coordinator] shutdown drain failed: {e:#}");
-                        for id in engine.fail_all() {
-                            if waiters.remove(&id).is_some() {
-                                metrics.rejected += 1;
-                            }
-                        }
+                // Finish resident rows (complete responses, delivered by
+                // the engine as they retire), then close every queued
+                // request's channel: all clients observe a deterministic
+                // outcome instead of a hang.
+                if let Err(e) = engine.drain(backend, &mut metrics) {
+                    eprintln!("[coordinator] shutdown drain failed: {e:#}");
+                    for _ in engine.fail_all() {
+                        metrics.rejected += 1;
                     }
                 }
                 while let Some(req) = batcher.pop() {
@@ -366,18 +428,17 @@ fn run_continuous<B: InferenceBackend>(
         while engine.has_free_slot() {
             let Some(req) = batcher.pop() else { break };
             let id = req.id;
-            if let Err(e) = engine.admit(backend, req) {
+            let Some(tx) = waiters.remove(&id) else { continue };
+            if let Err(e) = engine.admit(backend, req, tx) {
                 eprintln!("[coordinator] admission failed: {e:#}");
-                if waiters.remove(&id).is_some() {
-                    metrics.rejected += 1;
-                }
+                metrics.rejected += 1;
             }
         }
 
         // ---- one decode step ------------------------------------------
         if engine.resident() > 0 {
-            match engine.step(backend) {
-                Ok(done) => {
+            match engine.step(backend, &mut metrics) {
+                Ok(_done) => {
                     // Rows resident *after* the step are exactly the rows
                     // the decode forward computed (retire happens before
                     // the forward; admissions happen between steps), so
@@ -387,16 +448,14 @@ fn run_continuous<B: InferenceBackend>(
                     if decoded > 0 {
                         metrics.record_step(decoded, engine.slot_count());
                     }
-                    deliver(done, &mut waiters, &mut metrics)
                 }
                 Err(e) => {
                     eprintln!("[coordinator] engine step failed: {e:#}");
                     // Evict everything: the cache state after a failed
-                    // step is not trustworthy for resident rows.
-                    for id in engine.fail_all() {
-                        if waiters.remove(&id).is_some() {
-                            metrics.rejected += 1;
-                        }
+                    // step is not trustworthy for resident rows.  The
+                    // eviction closes every resident stream.
+                    for _ in engine.fail_all() {
+                        metrics.rejected += 1;
                     }
                 }
             }
@@ -406,7 +465,9 @@ fn run_continuous<B: InferenceBackend>(
 
 /// The static batch-at-a-time fallback (backends without per-row caches
 /// or row masking): form a batch, run it to completion, deliver at the
-/// end.  Kept bit-for-bit compatible with the pre-engine coordinator.
+/// end.  Kept bit-for-bit compatible with the pre-engine coordinator on
+/// greedy defaults; tokens stream per decode step through the
+/// scheduler's event senders.
 fn run_static<B: InferenceBackend>(
     backend: &mut B,
     variant: Variant,
@@ -416,7 +477,7 @@ fn run_static<B: InferenceBackend>(
     max_context: usize,
 ) -> Result<()> {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
-    let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+    let mut waiters: HashMap<RequestId, Sender<Event>> = HashMap::new();
     let mut metrics = Metrics::default();
 
     loop {
@@ -452,6 +513,14 @@ fn run_static<B: InferenceBackend>(
                 }
                 continue; // keep draining before forming a batch
             }
+            Some(Msg::Cancel(id, ack)) => {
+                // No engine: only queued requests are cancellable (a
+                // running batch observes cancellation through its failed
+                // event sends when the client is truly gone).
+                let found = cancel_queued(&mut batcher, &mut waiters, &mut metrics, id);
+                let _ = ack.send(found);
+                continue;
+            }
             Some(Msg::Metrics(tx)) => {
                 let _ = tx.send(metrics.clone());
                 continue;
@@ -476,7 +545,7 @@ fn run_static<B: InferenceBackend>(
             let bsize = plan.batch_size;
             let ids: Vec<RequestId> = plan.requests.iter().map(|r| r.id).collect();
             let mut scheduler = Scheduler::new(backend, variant);
-            match scheduler.run_batch(plan) {
+            match scheduler.run_batch(plan, &waiters) {
                 Ok(responses) => {
                     metrics.record_batch(bsize, used);
                     deliver(responses, &mut waiters, &mut metrics);
@@ -506,7 +575,10 @@ fn run_static<B: InferenceBackend>(
 pub struct WorkloadSpec {
     pub n_requests: usize,
     pub prompt_len: usize,
-    pub max_new_tokens: usize,
+    /// Generation params template.  Each request gets its own seed
+    /// (`params.seed + request index`) so sampled workloads exercise
+    /// independent streams while staying fully reproducible.
+    pub params: GenerationParams,
     /// Requests/s Poisson arrival rate; `None` = submit all at once (burst).
     pub arrival_rate: Option<f64>,
     pub seed: u64,
@@ -514,7 +586,13 @@ pub struct WorkloadSpec {
 
 impl Default for WorkloadSpec {
     fn default() -> Self {
-        Self { n_requests: 16, prompt_len: 48, max_new_tokens: 16, arrival_rate: None, seed: 0 }
+        Self {
+            n_requests: 16,
+            prompt_len: 48,
+            params: GenerationParams::greedy(16),
+            arrival_rate: None,
+            seed: 0,
+        }
     }
 }
 
@@ -556,22 +634,26 @@ pub fn run_workload(coord: &mut Coordinator, spec: &WorkloadSpec) -> Result<Serv
     let prompt_len = spec
         .prompt_len
         .min(coord.prefill_seq)
-        .min(coord.max_context.saturating_sub(spec.max_new_tokens))
+        .min(coord.max_context.saturating_sub(spec.params.max_new_tokens))
         .max(1);
 
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(spec.n_requests);
-    for _ in 0..spec.n_requests {
+    for i in 0..spec.n_requests {
         let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.range_i32(0, vocab - 1)).collect();
-        pending.push(coord.submit(prompt, spec.max_new_tokens));
+        let params = GenerationParams {
+            seed: spec.params.seed.wrapping_add(i as u64),
+            ..spec.params.clone()
+        };
+        pending.push(coord.submit(GenerationRequest::new(prompt, params)));
         if let Some(rate) = spec.arrival_rate {
             std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
         }
     }
 
     let mut responses = Vec::with_capacity(spec.n_requests);
-    for rx in pending {
-        responses.push(rx.recv().context("coordinator dropped a request")?);
+    for handle in pending {
+        responses.push(handle.wait().context("coordinator dropped a request")?);
     }
     let wall = t0.elapsed();
 

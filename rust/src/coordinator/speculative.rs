@@ -3,23 +3,34 @@
 //!
 //! The cheap **draft** model is the QUIK-4B quantized variant; the
 //! **target** is the full-precision variant of the *same* checkpoint.
-//! Greedy speculative decoding:
+//! Speculative decoding:
 //!
-//! 1. draft K tokens autoregressively with `(Quik4, Decode)` steps;
+//! 1. draft K tokens autoregressively with `(Quik4, Decode)` steps
+//!    (always greedy — the draft only *proposes*);
 //! 2. score all K in one `(Fp16, Verify)` call — a cached multi-token
 //!    forward, a first-class phase of the backend trait;
-//! 3. accept the longest prefix where the target's greedy choice equals
-//!    the draft; emit one extra target token at the first divergence;
+//! 3. walk the window in order, picking the target's token at each
+//!    position through the request's seeded [`Sampler`] (greedy argmax
+//!    at `temperature == 0`): accept while the target's pick equals the
+//!    draft; at the first divergence emit the target's pick and cut;
 //! 4. **roll back** both caches to the accepted position via
 //!    [`KvCache::set_len`] — sound because positions at or beyond the
 //!    logical length are masked and overwritten in order.
 //!
 //! On the native backend a verify window is bit-identical to K sequential
-//! decode steps (row-independent forward), so greedy spec-dec is exactly
-//! lossless: the emitted stream *is* the target's greedy stream.
+//! decode steps (row-independent forward), so spec-dec is exactly
+//! lossless — greedy *and sampled*: position `i`'s verify logits depend
+//! only on the already-emitted tokens before it, and the sampler
+//! consumes exactly one draw per emitted token in emission order
+//! (draws past the divergence are never taken), so the emitted stream
+//! *is* the stream a plain sequential target decode with the same
+//! `(seed, params)` would produce (pinned by `tests/generation_api.rs`).
+//! Stop tokens and EOS retire the stream early, mid-window included.
 
 use anyhow::{bail, Result};
 
+use super::request::FinishReason;
+use super::sampler::{GenerationParams, Sampler};
 use crate::backend::{InferenceBackend, KvCache, Phase, Variant};
 use crate::util::argmax;
 
@@ -85,14 +96,36 @@ impl<'b, B: InferenceBackend> SpeculativeDecoder<'b, B> {
         self.k
     }
 
-    /// Generate `n_tokens` greedily from `prompt`; returns the tokens (as
-    /// the full-precision target would have produced them) + statistics.
+    /// Greedy generation of `n_tokens` from `prompt` (the v1 surface):
+    /// exactly [`SpeculativeDecoder::generate_with`] under default
+    /// params.
     pub fn generate(&self, prompt: &[i32], n_tokens: usize) -> Result<(Vec<i32>, SpecStats)> {
+        let (tokens, _finish, stats) =
+            self.generate_with(prompt, &GenerationParams::greedy(n_tokens))?;
+        Ok((tokens, stats))
+    }
+
+    /// Generate up to `params.max_new_tokens` from `prompt` with the
+    /// full v2 surface (seeded sampling + stop conditions); returns the
+    /// tokens exactly as a plain sequential target decode with the same
+    /// `(seed, params)` would produce them, the finish reason, and the
+    /// speculation statistics.
+    pub fn generate_with(
+        &self,
+        prompt: &[i32],
+        params: &GenerationParams,
+    ) -> Result<(Vec<i32>, FinishReason, SpecStats)> {
         let seq = self.backend.step_seq(Variant::Fp16, Phase::Prefill, 1, prompt.len())?;
         if prompt.len() != seq {
             bail!("prompt must be exactly {seq} tokens for this backend's prefill");
         }
+        params.validate()?;
+        let n_tokens = params.max_new_tokens;
         let mut stats = SpecStats::default();
+        let mut sampler = Sampler::new(params);
+        if n_tokens == 0 {
+            return Ok((Vec::new(), FinishReason::Length, stats));
+        }
 
         // Prefill both models on the same prompt.
         let mut tgt_cache = self.backend.new_cache(Variant::Fp16, 1)?;
@@ -102,7 +135,11 @@ impl<'b, B: InferenceBackend> SpeculativeDecoder<'b, B> {
         self.backend.forward(Variant::Quik4, Phase::Prefill, prompt, 1, &mut drf_cache)?;
 
         // The first token comes from the target's prefill logits.
-        let mut out = vec![tgt_out.argmax_last()[0]];
+        let first = sampler.sample(tgt_out.row(0, prompt.len() - 1));
+        let mut out = vec![first];
+        if let Some(reason) = FinishReason::stop_match(params, first) {
+            return Ok((out, reason, stats));
+        }
         let max_ctx = self.backend.max_context();
 
         while out.len() < n_tokens {
@@ -114,6 +151,9 @@ impl<'b, B: InferenceBackend> SpeculativeDecoder<'b, B> {
                 break;
             }
             // --- draft k tokens (starting from the last emitted token) ---
+            // The draft is always greedy: it only proposes, and the
+            // acceptance test below compares against the target's
+            // (possibly sampled) pick.
             let mut draft = Vec::with_capacity(k);
             let mut cur = *out.last().unwrap();
             for _ in 0..k {
@@ -121,7 +161,7 @@ impl<'b, B: InferenceBackend> SpeculativeDecoder<'b, B> {
                     .backend
                     .forward(Variant::Quik4, Phase::Decode, &[cur], 1, &mut drf_cache)?;
                 stats.draft_calls += 1;
-                cur = step.argmax_last()[0];
+                cur = argmax(step.row(0, 0));
                 draft.push(cur);
             }
             stats.draft_tokens += k;
@@ -139,23 +179,34 @@ impl<'b, B: InferenceBackend> SpeculativeDecoder<'b, B> {
                 self.backend.forward(Variant::Fp16, Phase::Verify, &window, 1, &mut tgt_cache)?;
             stats.target_calls += 1;
 
-            // --- accept longest agreeing prefix; emit target's fix-up ---
+            // --- walk the window in emission order -----------------------
+            // Position i's logits depend only on the already-emitted
+            // tokens before it, so sampling here consumes the exact draw
+            // a sequential decode would — accept while the pick equals
+            // the draft, emit the pick and cut at the first divergence,
+            // and never draw past it.
             let mut accepted = 0;
-            let mut fixup = None;
+            let mut had_fixup = false;
+            let mut finish = None;
             for i in 0..k {
-                let t = argmax(v.row(0, i));
+                let t = sampler.sample(v.row(0, i));
                 if t == draft[i] {
                     accepted += 1;
                 } else {
-                    fixup = Some(t);
+                    had_fixup = true;
+                }
+                out.push(t);
+                if let Some(reason) = FinishReason::stop_match(params, t) {
+                    finish = Some(reason);
+                    break;
+                }
+                if had_fixup {
                     break;
                 }
             }
             stats.accepted_tokens += accepted;
-            out.extend(&draft[..accepted]);
-            let had_fixup = fixup.is_some();
-            if let Some(t) = fixup {
-                out.push(t);
+            if let Some(reason) = finish {
+                return Ok((out, reason, stats));
             }
             // --- roll both caches back to the true emitted length -------
             // Invariant: the cache holds every emitted token except the
@@ -172,7 +223,7 @@ impl<'b, B: InferenceBackend> SpeculativeDecoder<'b, B> {
             }
         }
         out.truncate(n_tokens);
-        Ok((out, stats))
+        Ok((out, FinishReason::Length, stats))
     }
 }
 

@@ -1,14 +1,79 @@
-//! TCP front-end: a JSON-lines inference protocol over the coordinator.
+//! TCP front-end: the **v2 JSON-lines wire protocol** over the
+//! coordinator.  One JSON object per line in either direction; every
+//! server reply is strict JSON parseable by [`crate::util::json::parse`].
 //!
-//! Wire format — one JSON object per line, in either direction::
+//! # Request line (inference)
 //!
-//!   → {"prompt": [1, 2, 3, ...], "max_new_tokens": 16}
-//!   ← {"id": 0, "tokens": [7, 42, ...], "prompt_len": 3,
-//!      "prefill_ms": 12.3, "decode_ms": 40.1, "ttft_ms": 13.1,
-//!      "total_ms": 55.0}
-//!   → {"metrics": true}                      (metrics verb)
-//!   ← {"requests_completed": 9, "ttft": {...}, ...}  (see Metrics::to_json)
-//!   ← {"error": "..."}                       (malformed request)
+//! ```text
+//! → {"prompt": [1, 2, 3, ...],        required; non-negative integers
+//!    "max_new_tokens": 16,            optional; default + hard cap from ServerConfig
+//!    "temperature": 0.8,              optional; 0 (greedy) default
+//!    "top_k": 40,                     optional; 0 (off) default
+//!    "top_p": 0.95,                   optional; 1.0 (off) default
+//!    "seed": 1234,                    optional; per-request RNG key, 0 default
+//!    "stop_tokens": [7, 42],          optional; emitted stop token ends the stream
+//!    "eos": 2,                        optional; like a stop token, "finish":"eos"
+//!    "stream": true}                  optional; false = one-shot (v1-compatible)
+//! ```
+//!
+//! # One-shot reply (and the final line of a stream)
+//!
+//! The summary line **echoes the effective params** — `max_new_tokens`
+//! after the server cap, `temperature`, `top_k`, `top_p`, `seed` — so a
+//! client can detect clamping, and carries the finish reason
+//! (`"length" | "stop" | "eos" | "cancelled"`):
+//!
+//! ```text
+//! ← {"id": 0, "tokens": [7, 42, ...], "prompt_len": 3, "finish": "length",
+//!    "max_new_tokens": 16, "temperature": 0, "top_k": 0, "top_p": 1,
+//!    "seed": 0, "prefill_ms": 12.3, "decode_ms": 40.1,
+//!    "ttft_ms": 13.1, "total_ms": 55.0, "batch_size": 4}
+//! ```
+//!
+//! Floats are echoed in shortest round-trip form (and `seed` must be
+//! below 2^53 — JSON numbers are f64), so feeding the echoed params
+//! back replays the exact stream.  The one-shot form buffers events
+//! server-side and runs to completion even if the client disconnects
+//! (v1 semantics — the dead socket is only discovered at the final
+//! write); disconnect-triggered cancellation is a property of the
+//! streaming form below, whose per-token writes observe the socket.
+//!
+//! # Streaming form (`"stream": true`)
+//!
+//! An immediate ack line (the request id + effective params, so the
+//! client can cancel from another connection), then one line per
+//! generated token *as its decode step lands*, then the summary line:
+//!
+//! ```text
+//! ← {"id": 0, "stream": true, "max_new_tokens": 16, "temperature": 0.8,
+//!    "top_k": 0, "top_p": 1, "seed": 7}
+//! ← {"id": 0, "token": 42, "index": 0}
+//! ← {"id": 0, "token": 7, "index": 1}
+//! ← {"id": 0, "tokens": [42, 7], "finish": "length", ...}     (summary)
+//! ```
+//!
+//! Disconnecting mid-stream cancels the request: the engine observes
+//! the dead stream at its next step boundary and frees the slot.
+//!
+//! # Verbs
+//!
+//! ```text
+//! → {"metrics": true}                  metrics snapshot
+//! ← {"requests_completed": 9, "stop_hits": 2, "cancelled": 1,
+//!    "itl": {...}, "ttft": {...}, ...}          (see Metrics::to_json)
+//!
+//! → {"cancel": 3}                      cancel request id 3
+//! ← {"cancelled": 3, "found": true}    found = still queued or decoding
+//! ```
+//!
+//! # Errors and backpressure
+//!
+//! Malformed requests get `{"error": "..."}` and the connection keeps
+//! serving; a rejected submission (admission queue full / invalid
+//! request) gets `{"error": "request rejected..."}`.  The accept loop
+//! enforces [`ServerConfig::max_concurrent`]: excess connections are
+//! answered with `{"error": "server busy"}` and closed immediately —
+//! the same fail-fast philosophy as the batcher's `try_push`.
 //!
 //! Connections are handled on std threads; each request is forwarded to
 //! the (single) coordinator worker through its channel, so requests from
@@ -17,15 +82,46 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use super::metrics::Metrics;
-use super::request::Response;
+use super::request::{
+    Event, GenerationParams, GenerationRequest, RequestId, Response, StreamHandle,
+};
 use super::server::Coordinator;
 use crate::util::json::{parse, Value};
+
+/// Front-end policy knobs (the wire-protocol limits).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Hard cap on any request's `max_new_tokens`.  Clamping is **not
+    /// silent**: the response line echoes the effective value.
+    pub max_new_cap: usize,
+    /// Default budget when a request omits `max_new_tokens`.
+    pub default_max_new: usize,
+    /// Concurrent-connection limit; excess connections get one
+    /// `{"error": "server busy"}` line and are closed (fail-fast
+    /// backpressure, like the batcher's `try_push`).
+    pub max_concurrent: usize,
+    /// Stop accepting after this many served connections (`None` =
+    /// serve forever).  Test hook for bounded accept loops.
+    pub accept_limit: Option<usize>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_new_cap: 1024,
+            default_max_new: 16,
+            max_concurrent: 64,
+            accept_limit: None,
+        }
+    }
+}
 
 /// A handle that forwards submissions to the coordinator thread-safely.
 ///
@@ -39,13 +135,18 @@ impl SharedCoordinator {
         Self(Arc::new(Mutex::new(coord)))
     }
 
-    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<Response> {
+    pub fn submit(&self, req: GenerationRequest) -> StreamHandle {
         // A submitter that panicked while holding the lock poisons the
         // mutex; the guarded state is just an id counter + channel
         // sender (always consistent between statements), so recover the
         // guard instead of letting one panic take down every future
         // connection with `PoisonError` panics.
-        self.0.lock().unwrap_or_else(|e| e.into_inner()).submit(prompt, max_new)
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).submit(req)
+    }
+
+    /// Cancel by id (the `{"cancel": id}` verb).
+    pub fn cancel(&self, id: RequestId) -> Result<bool> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).cancel(id)
     }
 
     /// Snapshot of the worker's metrics (the `{"metrics": true}` verb).
@@ -58,51 +159,136 @@ impl SharedCoordinator {
     }
 }
 
-/// Parse one request line. Returns `(prompt, max_new_tokens)`.
-pub fn parse_request(line: &str) -> Result<(Vec<i32>, usize)> {
-    let v = parse(line).context("invalid JSON")?;
-    request_from_value(&v)
+/// A `prompt`/`stop_tokens` element: a non-negative integer token.
+fn token_i32(t: &Value) -> Result<i32> {
+    t.as_f64()
+        .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= i32::MAX as f64)
+        .map(|x| x as i32)
+        .context("tokens must be non-negative integers")
 }
 
-/// Extract `(prompt, max_new_tokens)` from an already-parsed line.
-fn request_from_value(v: &Value) -> Result<(Vec<i32>, usize)> {
+fn opt_usize(v: &Value, key: &str, default: usize) -> Result<usize> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(default),
+        Some(x) => x
+            .as_usize()
+            .with_context(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn opt_f32(v: &Value, key: &str, default: f32) -> Result<f32> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(default),
+        Some(x) => x
+            .as_f64()
+            .filter(|x| x.is_finite())
+            .map(|x| x as f32)
+            .with_context(|| format!("'{key}' must be a finite number")),
+    }
+}
+
+/// Parse one v2 request line against the server's limits.  Returns the
+/// request plus whether the client asked for the streaming form.
+pub fn parse_request(line: &str, cfg: &ServerConfig) -> Result<(GenerationRequest, bool)> {
+    let v = parse(line).context("invalid JSON")?;
+    request_from_value(&v, cfg)
+}
+
+/// Extract a [`GenerationRequest`] (+ stream flag) from a parsed line.
+fn request_from_value(v: &Value, cfg: &ServerConfig) -> Result<(GenerationRequest, bool)> {
     let prompt = v
         .get("prompt")
         .and_then(Value::as_array)
         .context("missing 'prompt' array")?
         .iter()
-        .map(|t| {
-            t.as_f64()
-                .filter(|x| x.fract() == 0.0 && *x >= 0.0)
-                .map(|x| x as i32)
-                .context("prompt tokens must be non-negative integers")
-        })
+        .map(|t| token_i32(t).context("prompt tokens must be non-negative integers"))
         .collect::<Result<Vec<i32>>>()?;
     if prompt.is_empty() {
         anyhow::bail!("empty prompt");
     }
-    let max_new = v
-        .get("max_new_tokens")
-        .and_then(Value::as_usize)
-        .unwrap_or(16)
-        .min(1024);
-    Ok((prompt, max_new))
+    // The budget cap is a ServerConfig knob, and clamping is visible:
+    // the effective value is echoed in the response/ack line.
+    let max_new_tokens =
+        opt_usize(v, "max_new_tokens", cfg.default_max_new)?.min(cfg.max_new_cap);
+    let stop_tokens = match v.get("stop_tokens") {
+        None | Some(Value::Null) => Vec::new(),
+        Some(x) => x
+            .as_array()
+            .context("'stop_tokens' must be an array")?
+            .iter()
+            .map(|t| token_i32(t).context("'stop_tokens' must hold non-negative integers"))
+            .collect::<Result<Vec<i32>>>()?,
+    };
+    let eos = match v.get("eos") {
+        None | Some(Value::Null) => None,
+        Some(x) => Some(token_i32(x).context("'eos' must be a non-negative integer")?),
+    };
+    let stream = match v.get("stream") {
+        None | Some(Value::Null) => false,
+        Some(Value::Bool(b)) => *b,
+        Some(_) => anyhow::bail!("'stream' must be a boolean"),
+    };
+    // JSON numbers ride an f64, which is exact only up to 2^53 — a
+    // larger seed would be *silently rounded* to a different RNG key
+    // than the client asked for, breaking the (seed, params) replay
+    // contract.  Reject instead of guessing.
+    let seed = opt_usize(v, "seed", 0)?;
+    if seed as u64 >= (1u64 << 53) {
+        anyhow::bail!("'seed' must be below 2^53 (JSON number precision)");
+    }
+    let params = GenerationParams {
+        max_new_tokens,
+        temperature: opt_f32(v, "temperature", 0.0)?,
+        top_k: opt_usize(v, "top_k", 0)?,
+        top_p: opt_f32(v, "top_p", 1.0)?,
+        seed: seed as u64,
+        stop_tokens,
+        eos,
+    };
+    params.validate()?;
+    Ok((GenerationRequest::new(prompt, params), stream))
 }
 
-/// Serialize a response line.
-pub fn format_response(r: &Response) -> String {
+/// The effective-params echo shared by the summary and ack lines.
+/// Floats use Rust's shortest round-trip `Display` (never exponent
+/// notation, always finite post-validation), so re-submitting the
+/// echoed params replays the *exact* stream — a fixed-precision echo
+/// would silently turn a tiny temperature into greedy.
+fn params_fields(p: &GenerationParams) -> String {
+    format!(
+        "\"max_new_tokens\":{},\"temperature\":{},\"top_k\":{},\"top_p\":{},\"seed\":{}",
+        p.max_new_tokens, p.temperature, p.top_k, p.top_p, p.seed,
+    )
+}
+
+/// Serialize the summary line (one-shot reply / final line of a stream):
+/// the generated tokens, the finish reason, the **effective** params
+/// (post-cap — clients detect clamping here) and the timing breakdown.
+pub fn format_response(r: &Response, params: &GenerationParams) -> String {
     let toks: Vec<String> = r.generated.iter().map(|t| t.to_string()).collect();
     format!(
-        "{{\"id\":{},\"tokens\":[{}],\"prompt_len\":{},\"prefill_ms\":{:.3},\"decode_ms\":{:.3},\"ttft_ms\":{:.3},\"total_ms\":{:.3},\"batch_size\":{}}}",
+        "{{\"id\":{},\"tokens\":[{}],\"prompt_len\":{},\"finish\":\"{}\",{},\"prefill_ms\":{:.3},\"decode_ms\":{:.3},\"ttft_ms\":{:.3},\"total_ms\":{:.3},\"batch_size\":{}}}",
         r.id,
         toks.join(","),
         r.prompt_len,
+        r.finish.as_str(),
+        params_fields(params),
         r.prefill_time.as_secs_f64() * 1e3,
         r.decode_time.as_secs_f64() * 1e3,
         r.ttft.as_secs_f64() * 1e3,
         r.total_time.as_secs_f64() * 1e3,
         r.batch_size,
     )
+}
+
+/// The streaming ack line: request id + effective params.
+fn format_ack(id: RequestId, params: &GenerationParams) -> String {
+    format!("{{\"id\":{},\"stream\":true,{}}}", id, params_fields(params))
+}
+
+/// One streamed token line.
+fn format_token(id: RequestId, token: i32, index: usize) -> String {
+    format!("{{\"id\":{id},\"token\":{token},\"index\":{index}}}")
 }
 
 /// JSON string literal for `s` (the subset of escapes our strict parser
@@ -126,14 +312,24 @@ fn json_escape(s: &str) -> String {
     out
 }
 
+fn error_line(msg: &str) -> String {
+    format!("{{\"error\":{}}}", json_escape(msg))
+}
+
+/// Write one reply line; `false` means the connection is gone.
+fn write_line(writer: &mut TcpStream, line: &str) -> bool {
+    writer.write_all(line.as_bytes()).is_ok() && writer.write_all(b"\n").is_ok()
+}
+
 /// One connection's serve loop.  The contract regression-pinned by
 /// `tests/coordinator_integration.rs`: a malformed request — bad JSON,
-/// non-integer prompt tokens, empty prompt — gets a `{"error": ...}`
-/// line and the loop keeps serving; nothing a client sends may panic
-/// this handler or kill the connection.  A `{"metrics": true}` line is
-/// the metrics verb: it answers with the worker's metrics snapshot
-/// ([`Metrics::to_json`]) instead of running inference.
-fn handle_conn(stream: TcpStream, coord: SharedCoordinator) {
+/// non-integer prompt tokens, empty prompt, bad sampling knobs — gets a
+/// `{"error": ...}` line and the loop keeps serving; nothing a client
+/// sends may panic this handler or kill the connection.  Streaming
+/// requests relay events as they land; a failed socket write drops the
+/// [`StreamHandle`], which cancels the request at the engine's next
+/// step boundary.
+fn handle_conn(stream: TcpStream, coord: SharedCoordinator, cfg: ServerConfig) {
     let Ok(read_half) = stream.try_clone() else {
         return; // nothing we can report without a functioning socket
     };
@@ -144,64 +340,172 @@ fn handle_conn(stream: TcpStream, coord: SharedCoordinator) {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse(&line) {
+        let v = match parse(&line) {
+            Ok(v) => v,
             Err(e) => {
-                format!("{{\"error\":{}}}", json_escape(&format!("invalid JSON: {e}")))
+                if !write_line(&mut writer, &error_line(&format!("invalid JSON: {e}"))) {
+                    break;
+                }
+                continue;
             }
-            // The verb requires `"metrics": true` — a stray falsy
-            // `metrics` field on an inference request must not hijack
-            // the reply with a metrics snapshot.
-            Ok(v) if matches!(v.get("metrics"), Some(Value::Bool(true))) => {
-                match coord.metrics() {
-                    Ok(m) => m.to_json(),
-                    Err(_) => "{\"error\":\"coordinator unavailable\"}".to_string(),
+        };
+        // The metrics verb requires `"metrics": true` — a stray falsy
+        // `metrics` field on an inference request must not hijack the
+        // reply with a metrics snapshot.
+        if matches!(v.get("metrics"), Some(Value::Bool(true))) {
+            let reply = match coord.metrics() {
+                Ok(m) => m.to_json(),
+                Err(_) => error_line("coordinator unavailable"),
+            };
+            if !write_line(&mut writer, &reply) {
+                break;
+            }
+            continue;
+        }
+        // The cancel verb: {"cancel": <id>}.
+        if let Some(cv) = v.get("cancel") {
+            let reply = match cv.as_usize() {
+                Some(id) => match coord.cancel(id as RequestId) {
+                    Ok(found) => format!("{{\"cancelled\":{id},\"found\":{found}}}"),
+                    Err(_) => error_line("coordinator unavailable"),
+                },
+                None => error_line("'cancel' must be a request id"),
+            };
+            if !write_line(&mut writer, &reply) {
+                break;
+            }
+            continue;
+        }
+        match request_from_value(&v, &cfg) {
+            Ok((req, stream_mode)) => {
+                let params = req.params.clone();
+                let handle = coord.submit(req);
+                if stream_mode {
+                    if !write_line(&mut writer, &format_ack(handle.id(), &params)) {
+                        break; // dropping the handle cancels the request
+                    }
+                    let mut dead = false;
+                    loop {
+                        match handle.recv() {
+                            Ok(Event::Token { token, index }) => {
+                                if !write_line(
+                                    &mut writer,
+                                    &format_token(handle.id(), token, index),
+                                ) {
+                                    dead = true;
+                                    break; // handle drops below: cancellation
+                                }
+                            }
+                            Ok(Event::Done(resp)) => {
+                                if !write_line(&mut writer, &format_response(&resp, &params)) {
+                                    dead = true;
+                                }
+                                break;
+                            }
+                            Err(_) => {
+                                if !write_line(
+                                    &mut writer,
+                                    &error_line(
+                                        "request rejected (queue full or invalid request)",
+                                    ),
+                                ) {
+                                    dead = true;
+                                }
+                                break;
+                            }
+                        }
+                    }
+                    if dead {
+                        break;
+                    }
+                } else {
+                    let reply = match handle.wait() {
+                        Ok(resp) => format_response(&resp, &params),
+                        Err(_) => {
+                            error_line("request rejected (queue full or invalid request)")
+                        }
+                    };
+                    if !write_line(&mut writer, &reply) {
+                        break;
+                    }
                 }
             }
-            Ok(v) => match request_from_value(&v) {
-                Ok((prompt, max_new)) => match coord.submit(prompt, max_new).recv() {
-                    Ok(resp) => format_response(&resp),
-                    Err(_) => "{\"error\":\"coordinator unavailable\"}".to_string(),
-                },
-                Err(e) => format!("{{\"error\":{}}}", json_escape(&e.to_string())),
-            },
-        };
-        if writer.write_all(reply.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
-            break;
+            Err(e) => {
+                if !write_line(&mut writer, &error_line(&format!("{e:#}"))) {
+                    break;
+                }
+            }
         }
     }
 }
 
 /// Serve forever on `addr` (e.g. `127.0.0.1:8191`).  Returns the bound
 /// address via `on_ready` before entering the accept loop (tests use an
-/// ephemeral port).
+/// ephemeral port).  Per-connection threads are bounded by
+/// [`ServerConfig::max_concurrent`]: excess connections receive one
+/// `{"error": "server busy"}` line and are closed immediately instead
+/// of spawning unboundedly.
 pub fn serve(
     addr: &str,
     coord: Coordinator,
     on_ready: Option<Sender<std::net::SocketAddr>>,
-    max_conns: Option<usize>,
+    cfg: ServerConfig,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     if let Some(tx) = on_ready {
         let _ = tx.send(local);
     }
-    println!("[tcp] serving on {local} (JSON-lines: {{\"prompt\": [...]}})");
+    println!("[tcp] serving on {local} (JSON-lines v2: {{\"prompt\": [...]}})");
     let shared = SharedCoordinator::new(coord);
+    let active = Arc::new(AtomicUsize::new(0));
     let mut served = 0usize;
     for stream in listener.incoming() {
-        let stream = stream?;
+        let mut stream = stream?;
+        if active.load(Ordering::Acquire) >= cfg.max_concurrent {
+            // Busy connections don't count toward the accept limit and
+            // spawn no thread: one error line, then hang up.
+            let _ = stream.write_all(b"{\"error\":\"server busy\"}\n");
+            continue;
+        }
+        // Incremented on the accept thread (before the next accept), so
+        // the limit is enforced deterministically; decremented by the
+        // handler's drop guard however it exits.
+        active.fetch_add(1, Ordering::AcqRel);
+        struct ActiveGuard(Arc<AtomicUsize>);
+        impl Drop for ActiveGuard {
+            fn drop(&mut self) {
+                self.0.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        let guard = ActiveGuard(Arc::clone(&active));
         let c = shared.clone_ref();
-        std::thread::spawn(move || handle_conn(stream, c));
+        let conn_cfg = cfg.clone();
+        std::thread::spawn(move || {
+            let _guard = guard;
+            handle_conn(stream, c, conn_cfg);
+        });
         served += 1;
-        if let Some(max) = max_conns {
+        if let Some(max) = cfg.accept_limit {
             if served >= max {
                 break;
             }
         }
     }
     Ok(())
+}
+
+/// A fully parsed streaming reply (the [`Client::stream`] result).
+#[derive(Debug)]
+pub struct StreamedReply {
+    /// Server-assigned request id (from the ack line).
+    pub id: RequestId,
+    /// The ack line (effective params echo).
+    pub ack: Value,
+    /// Tokens exactly as the incremental lines delivered them.
+    pub tokens: Vec<i32>,
+    /// The final summary line.
+    pub summary: Value,
 }
 
 /// Minimal blocking client (used by tests and the demo driver).
@@ -216,7 +520,37 @@ impl Client {
         Ok(Self { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
-    /// Send one request, wait for its JSON-line reply.
+    fn read_value(&mut self) -> Result<Value> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the connection");
+        }
+        parse(&line).context("bad server reply")
+    }
+
+    fn request_json(prompt: &[i32], params: &GenerationParams, stream: bool) -> String {
+        let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        let stops: Vec<String> = params.stop_tokens.iter().map(|t| t.to_string()).collect();
+        let eos = match params.eos {
+            Some(e) => e.to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"prompt\":[{}],\"max_new_tokens\":{},\"temperature\":{},\"top_k\":{},\"top_p\":{},\"seed\":{},\"stop_tokens\":[{}],\"eos\":{},\"stream\":{}}}",
+            toks.join(","),
+            params.max_new_tokens,
+            params.temperature,
+            params.top_k,
+            params.top_p,
+            params.seed,
+            stops.join(","),
+            eos,
+            stream,
+        )
+    }
+
+    /// Send one v1-style greedy request, wait for its summary line and
+    /// return the generated tokens.
     pub fn infer(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
         let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
         writeln!(
@@ -224,12 +558,83 @@ impl Client {
             "{{\"prompt\":[{}],\"max_new_tokens\":{max_new}}}",
             toks.join(",")
         )?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let v = parse(&line).context("bad server reply")?;
+        let v = self.read_value()?;
         if let Some(err) = v.get("error") {
             anyhow::bail!("server error: {err:?}");
         }
+        Self::tokens_of(&v)
+    }
+
+    /// One-shot request with full v2 params; returns the parsed summary
+    /// line (tokens + finish + effective-params echo).
+    pub fn infer_with(&mut self, prompt: &[i32], params: &GenerationParams) -> Result<Value> {
+        writeln!(self.writer, "{}", Self::request_json(prompt, params, false))?;
+        let v = self.read_value()?;
+        if let Some(err) = v.get("error") {
+            anyhow::bail!("server error: {err:?}");
+        }
+        Ok(v)
+    }
+
+    /// Streaming request: reads the ack line, every incremental token
+    /// line and the final summary; checks the lines arrive in protocol
+    /// order with sequential token indexes.
+    pub fn stream(&mut self, prompt: &[i32], params: &GenerationParams) -> Result<StreamedReply> {
+        writeln!(self.writer, "{}", Self::request_json(prompt, params, true))?;
+        let ack = self.read_value()?;
+        if let Some(err) = ack.get("error") {
+            anyhow::bail!("server error: {err:?}");
+        }
+        if ack.get("stream") != Some(&Value::Bool(true)) {
+            anyhow::bail!("expected a stream ack line, got {ack:?}");
+        }
+        let id = ack.get("id").and_then(Value::as_usize).context("ack missing id")? as RequestId;
+        let mut tokens = Vec::new();
+        loop {
+            let v = self.read_value()?;
+            if let Some(err) = v.get("error") {
+                anyhow::bail!("server error: {err:?}");
+            }
+            if let Some(tok) = v.get("token") {
+                let index =
+                    v.get("index").and_then(Value::as_usize).context("token line w/o index")?;
+                if index != tokens.len() {
+                    anyhow::bail!("token index {index} out of order (expected {})", tokens.len());
+                }
+                tokens.push(token_i32(tok)?);
+                continue;
+            }
+            // anything else must be the summary line
+            return Ok(StreamedReply { id, ack, tokens, summary: v });
+        }
+    }
+
+    /// Cancel a request by id; returns the server's `found` answer.
+    pub fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        writeln!(self.writer, "{{\"cancel\":{id}}}")?;
+        let v = self.read_value()?;
+        if let Some(err) = v.get("error") {
+            anyhow::bail!("server error: {err:?}");
+        }
+        match v.get("found") {
+            Some(Value::Bool(b)) => Ok(*b),
+            _ => anyhow::bail!("malformed cancel reply: {v:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics snapshot (the `{"metrics": true}`
+    /// verb), returned as the parsed JSON value.
+    pub fn metrics(&mut self) -> Result<Value> {
+        writeln!(self.writer, "{{\"metrics\":true}}")?;
+        let v = self.read_value()?;
+        if let Some(err) = v.get("error") {
+            anyhow::bail!("server error: {err:?}");
+        }
+        Ok(v)
+    }
+
+    /// Extract the `tokens` array of a summary line.
+    fn tokens_of(v: &Value) -> Result<Vec<i32>> {
         // A reply with non-numeric tokens is a protocol error, not a
         // panic (the old `as_f64().unwrap()` here crashed the caller's
         // connection handling on any malformed line).
@@ -237,32 +642,15 @@ impl Client {
             .and_then(Value::as_array)
             .context("missing tokens")?
             .iter()
-            .map(|t| {
-                t.as_f64()
-                    .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= i32::MAX as f64)
-                    .map(|x| x as i32)
-                    .context("non-integer token in server reply")
-            })
+            .map(|t| token_i32(t).context("non-integer token in server reply"))
             .collect()
-    }
-
-    /// Fetch the server's metrics snapshot (the `{"metrics": true}`
-    /// verb), returned as the parsed JSON value.
-    pub fn metrics(&mut self) -> Result<Value> {
-        writeln!(self.writer, "{{\"metrics\":true}}")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let v = parse(&line).context("bad metrics reply")?;
-        if let Some(err) = v.get("error") {
-            anyhow::bail!("server error: {err:?}");
-        }
-        Ok(v)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::FinishReason;
     use std::time::Duration;
 
     fn resp() -> Response {
@@ -270,6 +658,7 @@ mod tests {
             id: 3,
             prompt_len: 5,
             generated: vec![1, 2, 3],
+            finish: FinishReason::Length,
             queue_time: Duration::from_millis(1),
             prefill_time: Duration::from_millis(10),
             decode_time: Duration::from_millis(20),
@@ -279,36 +668,143 @@ mod tests {
         }
     }
 
+    fn cfg() -> ServerConfig {
+        ServerConfig::default()
+    }
+
     #[test]
-    fn request_parsing() {
-        let (p, n) = parse_request(r#"{"prompt": [1, 2, 3], "max_new_tokens": 8}"#).unwrap();
-        assert_eq!(p, vec![1, 2, 3]);
-        assert_eq!(n, 8);
-        let (_, n) = parse_request(r#"{"prompt": [0]}"#).unwrap();
-        assert_eq!(n, 16); // default
-        assert!(parse_request(r#"{"prompt": []}"#).is_err());
-        assert!(parse_request(r#"{"prompt": [1.5]}"#).is_err());
-        assert!(parse_request("not json").is_err());
-        assert!(parse_request(r#"{"max_new_tokens": 4}"#).is_err());
+    fn request_parsing_v1_compatible() {
+        let (req, stream) =
+            parse_request(r#"{"prompt": [1, 2, 3], "max_new_tokens": 8}"#, &cfg()).unwrap();
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.params.max_new_tokens, 8);
+        assert!(req.params.is_greedy());
+        assert!(!stream);
+        let (req, _) = parse_request(r#"{"prompt": [0]}"#, &cfg()).unwrap();
+        assert_eq!(req.params.max_new_tokens, 16); // ServerConfig default
+        assert!(parse_request(r#"{"prompt": []}"#, &cfg()).is_err());
+        assert!(parse_request(r#"{"prompt": [1.5]}"#, &cfg()).is_err());
+        assert!(parse_request("not json", &cfg()).is_err());
+        assert!(parse_request(r#"{"max_new_tokens": 4}"#, &cfg()).is_err());
+    }
+
+    #[test]
+    fn request_parsing_v2_params() {
+        let line = r#"{"prompt": [1], "max_new_tokens": 9, "temperature": 0.8,
+                       "top_k": 40, "top_p": 0.95, "seed": 77,
+                       "stop_tokens": [5, 6], "eos": 2, "stream": true}"#;
+        let (req, stream) = parse_request(line, &cfg()).unwrap();
+        assert!(stream);
+        let p = &req.params;
+        assert_eq!(p.max_new_tokens, 9);
+        assert!((p.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(p.top_k, 40);
+        assert!((p.top_p - 0.95).abs() < 1e-6);
+        assert_eq!(p.seed, 77);
+        assert_eq!(p.stop_tokens, vec![5, 6]);
+        assert_eq!(p.eos, Some(2));
+        // bad knobs are rejected at parse time
+        assert!(parse_request(r#"{"prompt": [1], "temperature": -1}"#, &cfg()).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "top_p": 0}"#, &cfg()).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "stream": 1}"#, &cfg()).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "stop_tokens": [1.5]}"#, &cfg()).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "seed": -4}"#, &cfg()).is_err());
+        // seeds at/above 2^53 would be silently rounded by the f64 JSON
+        // number — the replay contract demands a loud rejection instead
+        assert!(parse_request(r#"{"prompt": [1], "seed": 9007199254740992}"#, &cfg()).is_err());
+        let (req, _) =
+            parse_request(r#"{"prompt": [1], "seed": 9007199254740991}"#, &cfg()).unwrap();
+        assert_eq!(req.params.seed, (1u64 << 53) - 1);
+    }
+
+    #[test]
+    fn effective_params_echo_round_trips_exactly() {
+        // The echo exists so clients can replay: tiny-but-sampled knobs
+        // must survive the round trip (a fixed-precision echo would
+        // collapse temperature 4e-5 to greedy 0).
+        let params = GenerationParams {
+            max_new_tokens: 2,
+            temperature: 4e-5,
+            top_p: 0.999_99,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut r = resp();
+        r.generated = vec![1, 2];
+        let v = parse(&format_response(&r, &params)).unwrap();
+        assert_eq!(v.get("temperature").unwrap().as_f64().unwrap() as f32, params.temperature);
+        assert_eq!(v.get("top_p").unwrap().as_f64().unwrap() as f32, params.top_p);
+    }
+
+    #[test]
+    fn max_new_cap_is_a_config_knob() {
+        let tight = ServerConfig { max_new_cap: 8, default_max_new: 4, ..cfg() };
+        let (req, _) =
+            parse_request(r#"{"prompt": [1], "max_new_tokens": 5000}"#, &tight).unwrap();
+        assert_eq!(req.params.max_new_tokens, 8, "cap must clamp");
+        let (req, _) = parse_request(r#"{"prompt": [1]}"#, &tight).unwrap();
+        assert_eq!(req.params.max_new_tokens, 4, "default comes from config");
     }
 
     #[test]
     fn response_roundtrip_through_parser() {
-        let line = format_response(&resp());
+        let params = GenerationParams { max_new_tokens: 3, seed: 9, ..Default::default() };
+        let line = format_response(&resp(), &params);
         let v = parse(&line).unwrap();
         assert_eq!(v.get("id").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("tokens").unwrap().as_array().unwrap().len(), 3);
         assert_eq!(v.get("batch_size").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("finish").unwrap().as_str(), Some("length"));
+        // the effective-params echo (clamp detection)
+        assert_eq!(v.get("max_new_tokens").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("seed").unwrap().as_usize(), Some(9));
+        assert!(v.get("temperature").unwrap().as_f64().is_some());
         assert!((v.get("ttft_ms").unwrap().as_f64().unwrap() - 11.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ack_and_token_lines_parse() {
+        let params = GenerationParams::sampled(4, 0.7, 3);
+        let ack = parse(&format_ack(12, &params)).unwrap();
+        assert_eq!(ack.get("id").unwrap().as_usize(), Some(12));
+        assert_eq!(ack.get("stream"), Some(&Value::Bool(true)));
+        assert_eq!(ack.get("seed").unwrap().as_usize(), Some(3));
+        let tok = parse(&format_token(12, 42, 7)).unwrap();
+        assert_eq!(tok.get("token").unwrap().as_usize(), Some(42));
+        assert_eq!(tok.get("index").unwrap().as_usize(), Some(7));
     }
 
     #[test]
     fn error_lines_are_valid_json_for_any_message() {
         for msg in ["plain", "with \"quotes\"", "back\\slash", "tab\there\nnewline", "héllo ✓"] {
-            let line = format!("{{\"error\":{}}}", json_escape(msg));
+            let line = error_line(msg);
             let v = parse(&line).unwrap_or_else(|e| panic!("{msg:?} escaped to invalid JSON: {e}"));
             assert_eq!(v.get("error").unwrap().as_str(), Some(msg));
         }
+    }
+
+    #[test]
+    fn client_request_json_roundtrips_through_the_parser() {
+        let params = GenerationParams {
+            max_new_tokens: 6,
+            temperature: 0.9,
+            top_k: 50,
+            top_p: 0.92,
+            seed: 123,
+            stop_tokens: vec![4],
+            eos: Some(2),
+        };
+        let line = Client::request_json(&[1, 2, 3], &params, true);
+        let (req, stream) = parse_request(&line, &cfg()).unwrap();
+        assert!(stream);
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.params.stop_tokens, vec![4]);
+        assert_eq!(req.params.eos, Some(2));
+        assert_eq!(req.params.seed, 123);
+        let none = Client::request_json(&[1], &GenerationParams::greedy(2), false);
+        let (req, stream) = parse_request(&none, &cfg()).unwrap();
+        assert!(!stream);
+        assert_eq!(req.params.eos, None);
     }
 
     #[test]
@@ -342,8 +838,8 @@ mod tests {
         });
         assert!(poisoner.join().is_err(), "poisoner must panic");
         let resp = shared
-            .submit((0..8).map(|i| i % 90).collect(), 2)
-            .recv()
+            .submit(GenerationRequest::greedy((0..8).map(|i| i % 90).collect(), 2))
+            .wait()
             .expect("submit after poisoning must still serve");
         assert_eq!(resp.generated.len(), 2);
     }

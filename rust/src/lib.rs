@@ -34,13 +34,25 @@
 //!   * [`coordinator`] — the serving layer, generic over the backend
 //!     trait: a slot-based **continuous batching engine**
 //!     ([`coordinator::engine`], the default on row-maskable backends —
-//!     admit → prefill → decode → retire per slot, responses delivered
-//!     the moment a row completes, streams bit-identical to solo runs
-//!     under any arrival schedule), a static batch-at-a-time fallback
-//!     ([`coordinator::scheduler`], for static-shape backends;
-//!     `QUIK_ENGINE` selects explicitly), plus admission queue,
-//!     speculative decoder, TTFT/occupancy metrics and a TCP front-end
-//!     with a metrics verb;
+//!     admit → prefill → decode → retire per slot, streams bit-identical
+//!     to solo runs under any arrival schedule), a static
+//!     batch-at-a-time fallback ([`coordinator::scheduler`], for
+//!     static-shape backends; `QUIK_ENGINE` selects explicitly), and the
+//!     **v2 generation API** end-to-end: requests carry
+//!     [`coordinator::GenerationParams`] (temperature/top-k/top-p with a
+//!     per-request seed — greedy at `temperature == 0`, and sampled
+//!     streams reproduce bit-exactly from `(seed, params)` at every
+//!     thread count and engine mode — plus stop tokens and EOS),
+//!     submissions return a [`coordinator::StreamHandle`] yielding
+//!     [`coordinator::Event::Token`] per decode step then
+//!     `Event::Done`, and a row retires *early* — freeing its slot at
+//!     that step boundary — on a stop/EOS hit or on cancellation
+//!     (dropping the handle, a streaming TCP client's disconnect, or
+//!     the explicit cancel verb).  Plus admission queue, speculative decoder (greedy and
+//!     losslessly sampled), TTFT/ITL/occupancy/early-retire metrics and
+//!     a JSON-lines TCP front-end (v2 wire protocol: sampling params,
+//!     `"stream": true` incremental delivery, cancel + metrics verbs,
+//!     connection-count backpressure — see [`coordinator::tcp`]);
 //!   * [`quant`] — the native QUIK quantization substrate (shared by both
 //!     backends' stories and property-tested against the Python oracle);
 //!   * [`devicemodel`] / [`memmodel`] — the calibrated RTX-3090 device

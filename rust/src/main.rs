@@ -27,7 +27,9 @@ use quik::backend::native::{demo_policy, NativeCheckpoint, NativeConfig};
 use quik::backend::Variant;
 use quik::config::{model_zoo, QuikPolicy};
 use quik::coordinator::batcher::BatcherConfig;
+use quik::coordinator::sampler::{GenerationParams, Sampler};
 use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
+use quik::coordinator::tcp::ServerConfig;
 use quik::devicemodel::gpu::RTX3090;
 use quik::devicemodel::layer::FusionVersion;
 use quik::devicemodel::{QuikLayerModel, TransformerModel};
@@ -70,6 +72,46 @@ impl Args {
             .parse()
             .with_context(|| format!("--{key} must be an integer"))
     }
+
+    fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        self.get(key, &default.to_string())
+            .parse()
+            .with_context(|| format!("--{key} must be a number"))
+    }
+
+    /// Comma-separated token list (e.g. `--stop 7,42`); empty = none.
+    fn get_tokens(&self, key: &str) -> Result<Vec<i32>> {
+        let raw = self.get(key, "");
+        if raw.is_empty() {
+            return Ok(Vec::new());
+        }
+        raw.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<i32>()
+                    .with_context(|| format!("--{key} must be comma-separated integers"))
+            })
+            .collect()
+    }
+
+    /// The sampling/stop surface shared by `serve` and `generate`
+    /// (`max_new` names the budget flag: `--gen` or `--tokens`).
+    fn generation_params(&self, max_new: usize) -> Result<GenerationParams> {
+        let params = GenerationParams {
+            max_new_tokens: max_new,
+            temperature: self.get_f32("temperature", 0.0)?,
+            top_k: self.get_usize("top-k", 0)?,
+            top_p: self.get_f32("top-p", 1.0)?,
+            seed: self.get_usize("sample-seed", 0)? as u64,
+            stop_tokens: self.get_tokens("stop")?,
+            eos: match self.flags.get("eos") {
+                Some(e) => Some(e.parse().context("--eos must be an integer")?),
+                None => None,
+            },
+        };
+        params.validate()?;
+        Ok(params)
+    }
 }
 
 fn run() -> Result<()> {
@@ -97,10 +139,14 @@ fn print_help() {
            serve          --variant quik4|fp16 [--backend native|pjrt]\n\
                           [--engine auto|continuous|static]  (QUIK_ENGINE env)\n\
                           --requests 16 --prompt-len 48 --gen 16 [--rate <req/s>]\n\
+                          [--temperature 0.8 --top-k 40 --top-p 0.95\n\
+                           --sample-seed 7 --stop 7,42 --eos 2]  (sampling/stop)\n\
                           [--ckpt model.bin | --seed-model 5]     (native)\n\
                           [--model llama-s --artifacts artifacts]  (pjrt)\n\
-                          [--tcp 127.0.0.1:8191]  (JSON-lines network mode)\n\
+                          [--tcp 127.0.0.1:8191]  (JSON-lines v2 network mode)\n\
+                          [--max-new-cap 1024 --max-conns 64]  (tcp limits)\n\
            generate       --variant quik4 --tokens 32 [--backend native|pjrt]\n\
+                          [--temperature ... --stop ... --eos ...]  (as serve)\n\
            memory-report  (Table 6)\n\
            flops-report   (Figure 11)\n\
            layer-report   (Figure 7)\n\
@@ -142,7 +188,7 @@ fn serve(args: &Args) -> Result<()> {
     let spec = WorkloadSpec {
         n_requests: args.get_usize("requests", 16)?,
         prompt_len: args.get_usize("prompt-len", 48)?,
-        max_new_tokens: args.get_usize("gen", 16)?,
+        params: args.generation_params(args.get_usize("gen", 16)?)?,
         arrival_rate: args.flags.get("rate").map(|r| r.parse()).transpose()?,
         seed: args.get_usize("seed", 0)? as u64,
     };
@@ -156,8 +202,14 @@ fn serve(args: &Args) -> Result<()> {
         other => bail!("unknown --backend {other} (native|pjrt)"),
     };
     if let Some(addr) = args.flags.get("tcp") {
-        // network mode: JSON-lines over TCP, batching across connections
-        return quik::coordinator::tcp::serve(addr, coord, None, None);
+        // network mode: JSON-lines v2 over TCP, batching across
+        // connections, bounded by the ServerConfig limits
+        let tcp_cfg = ServerConfig {
+            max_new_cap: args.get_usize("max-new-cap", 1024)?,
+            max_concurrent: args.get_usize("max-conns", 64)?,
+            ..ServerConfig::default()
+        };
+        return quik::coordinator::tcp::serve(addr, coord, None, tcp_cfg);
     }
     let mut coord = coord;
     let report = run_workload(&mut coord, &spec)?;
@@ -212,8 +264,10 @@ fn generate(args: &Args) -> Result<()> {
 fn generate_native(args: &Args, variant: Variant, n_tokens: usize, seed: u64) -> Result<()> {
     use quik::backend::native::NativeBackend;
     use quik::backend::{InferenceBackend, Phase};
+    use quik::coordinator::FinishReason;
 
     let (ckpt, policy) = native_checkpoint(args)?;
+    let params = args.generation_params(n_tokens)?;
     let mut backend = NativeBackend::new("native-cli", ckpt, policy)?;
     backend.prepare(variant, Phase::Prefill, 1)?;
     let vocab = backend.vocab() as i32;
@@ -223,15 +277,24 @@ fn generate_native(args: &Args, variant: Variant, n_tokens: usize, seed: u64) ->
 
     let mut cache = backend.new_cache(variant, 1)?;
     let out = backend.forward(variant, Phase::Prefill, &prompt, 1, &mut cache)?;
-    let mut next = out.argmax_last()[0];
+    let mut sampler = Sampler::new(&params);
+    let mut next = sampler.sample(out.row(0, prompt.len() - 1));
     print!("prompt[..8]={:?} →", &prompt[..8.min(prompt.len())]);
     let budget = n_tokens.min(backend.max_context().saturating_sub(prompt_len));
-    for _ in 0..budget {
+    let mut finish = FinishReason::Length;
+    for emitted in 1..=budget {
         print!(" {next}");
+        if let Some(reason) = FinishReason::stop_match(&params, next) {
+            finish = reason;
+            break;
+        }
+        if emitted == budget {
+            break;
+        }
         let step = backend.forward(variant, Phase::Decode, &[next], 1, &mut cache)?;
-        next = step.argmax_last()[0];
+        next = sampler.sample(step.row(0, 0));
     }
-    println!();
+    println!("  [finish: {}]", finish.as_str());
     Ok(())
 }
 
@@ -239,7 +302,9 @@ fn generate_native(args: &Args, variant: Variant, n_tokens: usize, seed: u64) ->
 fn generate_pjrt(args: &Args, variant: Variant, n_tokens: usize, seed: u64) -> Result<()> {
     use quik::backend::pjrt::PjrtBackend;
     use quik::backend::{InferenceBackend, Phase};
+    use quik::coordinator::FinishReason;
 
+    let params = args.generation_params(n_tokens)?;
     let model = args.get("model", "llama-s");
     let artifacts = args.get("artifacts", "artifacts");
     let mut backend = PjrtBackend::load(&artifacts, &model)?;
@@ -252,14 +317,23 @@ fn generate_pjrt(args: &Args, variant: Variant, n_tokens: usize, seed: u64) -> R
 
     let mut cache = backend.new_cache(variant, 1)?;
     let out = backend.forward(variant, Phase::Prefill, &prompt, 1, &mut cache)?;
-    let mut next = out.argmax_last()[0];
+    let mut sampler = Sampler::new(&params);
+    let mut next = sampler.sample(out.row(0, prompt.len() - 1));
     print!("prompt[..8]={:?} →", &prompt[..8.min(prompt.len())]);
-    for _ in 0..n_tokens {
+    let mut finish = FinishReason::Length;
+    for emitted in 1..=n_tokens {
         print!(" {next}");
+        if let Some(reason) = FinishReason::stop_match(&params, next) {
+            finish = reason;
+            break;
+        }
+        if emitted == n_tokens {
+            break;
+        }
         let step = backend.forward(variant, Phase::Decode, &[next], 1, &mut cache)?;
-        next = step.argmax_last()[0];
+        next = sampler.sample(step.row(0, 0));
     }
-    println!();
+    println!("  [finish: {}]", finish.as_str());
     Ok(())
 }
 

@@ -9,6 +9,8 @@ use quik::backend::native::{demo_policy, NativeBackend, NativeCheckpoint, Native
 use quik::backend::Variant;
 use quik::coordinator::batcher::BatcherConfig;
 use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
+use quik::coordinator::tcp::ServerConfig;
+use quik::coordinator::{GenerationParams, GenerationRequest};
 
 const MODEL_SEED: u64 = 5;
 
@@ -32,7 +34,7 @@ fn serves_burst_workload_quik4() {
     let spec = WorkloadSpec {
         n_requests: 9,
         prompt_len: 48,
-        max_new_tokens: 6,
+        params: GenerationParams::greedy(6),
         arrival_rate: None,
         seed: 1,
     };
@@ -40,7 +42,8 @@ fn serves_burst_workload_quik4() {
     assert_eq!(report.n_requests, 9);
     assert_eq!(report.generated_tokens, 9 * 6);
     assert!(report.tokens_per_s() > 0.0);
-    // burst of 9 with batch sizes {4,1} must have used some 4-batches
+    // continuous mode forms no static batches at all; the static
+    // fallback must have used some 4-batches for a burst of 9
     assert!(report.metrics.batches < 9, "batching never kicked in");
     coord.shutdown().unwrap();
 }
@@ -51,7 +54,7 @@ fn serves_fp32_reference_variant_too() {
     let spec = WorkloadSpec {
         n_requests: 3,
         prompt_len: 32,
-        max_new_tokens: 4,
+        params: GenerationParams::greedy(4),
         arrival_rate: None,
         seed: 2,
     };
@@ -71,20 +74,23 @@ fn responses_are_deterministic_per_prompt() {
 
     // alone
     let mut solo = start(Variant::Quik4, BatcherConfig { batch_sizes: vec![1], ..cfg() });
-    let rx = solo.submit(prompt.clone(), 5);
-    let alone = rx.recv().unwrap().generated;
+    let alone = solo
+        .submit(GenerationRequest::greedy(prompt.clone(), 5))
+        .wait()
+        .unwrap()
+        .generated;
     solo.shutdown().unwrap();
 
     // batched with three other requests
     let mut coord = start(Variant::Quik4, cfg());
-    let mut rxs = vec![coord.submit(prompt.clone(), 5)];
+    let mut handles = vec![coord.submit(GenerationRequest::greedy(prompt.clone(), 5))];
     for seed in 0..3 {
         let other: Vec<i32> = (0..48).map(|i| (i * 13 + seed) % 90).collect();
-        rxs.push(coord.submit(other, 5));
+        handles.push(coord.submit(GenerationRequest::greedy(other, 5)));
     }
-    let batched = rxs.remove(0).recv().unwrap();
-    for rx in rxs {
-        rx.recv().unwrap();
+    let batched = handles.remove(0).wait().unwrap();
+    for handle in handles {
+        handle.wait().unwrap();
     }
     assert_eq!(batched.generated, alone, "batching changed greedy output");
     coord.shutdown().unwrap();
@@ -100,8 +106,8 @@ fn mixed_length_prompts_keep_their_true_positions() {
     let long: Vec<i32> = (0..48).map(|i| (i * 5 + 3) % 90).collect();
 
     let mut solo = start(Variant::Fp16, BatcherConfig { batch_sizes: vec![1], ..cfg() });
-    let short_alone = solo.submit(short.clone(), 1).recv().unwrap();
-    let long_alone = solo.submit(long.clone(), 1).recv().unwrap();
+    let short_alone = solo.submit(GenerationRequest::greedy(short.clone(), 1)).wait().unwrap();
+    let long_alone = solo.submit(GenerationRequest::greedy(long.clone(), 1)).wait().unwrap();
     solo.shutdown().unwrap();
     assert_eq!(short_alone.prompt_len, 40);
 
@@ -109,11 +115,11 @@ fn mixed_length_prompts_keep_their_true_positions() {
         Variant::Fp16,
         BatcherConfig { batch_sizes: vec![2], max_wait: Duration::from_millis(200), ..cfg() },
     );
-    let rx_short = coord.submit(short, 1);
-    let rx_long = coord.submit(long, 1);
-    let got_short = rx_short.recv().unwrap();
-    let got_long = rx_long.recv().unwrap();
-    assert_eq!(got_short.batch_size, 2, "requests did not share a batch");
+    let h_short = coord.submit(GenerationRequest::greedy(short, 1));
+    let h_long = coord.submit(GenerationRequest::greedy(long, 1));
+    let got_short = h_short.wait().unwrap();
+    let got_long = h_long.wait().unwrap();
+    assert_eq!(got_short.batch_size, 2, "requests did not share the serving envelope");
     assert_eq!(got_short.prompt_len, 40, "true prompt length lost");
     assert_eq!(got_long.prompt_len, 48);
     assert_eq!(got_short.generated, short_alone.generated, "short prompt was truncated/shifted");
@@ -127,7 +133,7 @@ fn metrics_accumulate() {
     let spec = WorkloadSpec {
         n_requests: 4,
         prompt_len: 40,
-        max_new_tokens: 3,
+        params: GenerationParams::greedy(3),
         arrival_rate: None,
         seed: 3,
     };
@@ -156,8 +162,8 @@ fn generic_start_accepts_any_backend_factory() {
     assert_eq!(coord.prefill_seq, 96); // dynamic backend: full context
     assert_eq!(coord.max_context, 96);
     let resp = coord
-        .submit((0..24).map(|i| i % 90).collect(), 4)
-        .recv()
+        .submit(GenerationRequest::greedy((0..24).map(|i| i % 90).collect(), 4))
+        .wait()
         .unwrap();
     assert_eq!(resp.generated.len(), 4);
     coord.shutdown().unwrap();
@@ -168,13 +174,20 @@ fn invalid_tokens_are_rejected_not_batched() {
     // An out-of-vocab token would fail the whole batch at forward time;
     // admission control must fail only the offending request, promptly.
     let mut coord = start(Variant::Fp16, cfg());
-    let rx = coord.submit(vec![5, 200, 7], 4); // 200 outside vocab 96
-    assert!(rx.recv().is_err(), "invalid request must close its channel");
+    let handle = coord.submit(GenerationRequest::greedy(vec![5, 200, 7], 4)); // 200 outside vocab
+    assert!(handle.wait().is_err(), "invalid request must close its channel");
+    // malformed sampling params are rejected the same way
+    let bad_params = GenerationParams { temperature: -3.0, ..GenerationParams::greedy(4) };
+    let handle = coord.submit(GenerationRequest::new(vec![1, 2, 3], bad_params));
+    assert!(handle.wait().is_err(), "invalid params must close the channel");
     // a valid request right after is unaffected
-    let ok = coord.submit((0..24).map(|i| i % 90).collect(), 2).recv().unwrap();
+    let ok = coord
+        .submit(GenerationRequest::greedy((0..24).map(|i| i % 90).collect(), 2))
+        .wait()
+        .unwrap();
     assert_eq!(ok.generated.len(), 2);
     let m = coord.metrics().unwrap();
-    assert_eq!(m.rejected, 1);
+    assert_eq!(m.rejected, 2);
     coord.shutdown().unwrap();
 }
 
@@ -182,9 +195,9 @@ fn invalid_tokens_are_rejected_not_batched() {
 fn malformed_tcp_requests_get_error_lines_not_disconnects() {
     // Regression: nothing a client sends may kill its connection (or the
     // handler thread).  Every malformed request — non-integer prompt
-    // elements, fractional tokens, garbage bytes, empty prompts — must
-    // produce a parseable {"error": ...} line, and the *same* connection
-    // must keep serving real requests afterwards.
+    // elements, fractional tokens, garbage bytes, empty prompts, bad
+    // sampling knobs — must produce a parseable {"error": ...} line, and
+    // the *same* connection must keep serving real requests afterwards.
     use quik::coordinator::tcp::serve;
     use quik::util::json::parse;
     use std::io::{BufRead, BufReader, Write};
@@ -194,7 +207,8 @@ fn malformed_tcp_requests_get_error_lines_not_disconnects() {
     let coord = start(Variant::Fp16, cfg());
     let (ready_tx, ready_rx) = mpsc::channel();
     std::thread::spawn(move || {
-        serve("127.0.0.1:0", coord, Some(ready_tx), Some(1)).unwrap();
+        let cfg = ServerConfig { accept_limit: Some(1), ..Default::default() };
+        serve("127.0.0.1:0", coord, Some(ready_tx), cfg).unwrap();
     });
     let addr = ready_rx.recv().unwrap();
     let stream = TcpStream::connect(addr).unwrap();
@@ -207,6 +221,11 @@ fn malformed_tcp_requests_get_error_lines_not_disconnects() {
         "not json at all",
         r#"{"prompt": []}"#,
         r#"{"max_new_tokens": 4}"#,
+        r#"{"prompt": [1], "temperature": -0.5}"#,
+        r#"{"prompt": [1], "top_p": 7}"#,
+        r#"{"prompt": [1], "stream": "yes"}"#,
+        r#"{"prompt": [1], "stop_tokens": 4}"#,
+        r#"{"cancel": "x"}"#,
     ] {
         writeln!(writer, "{bad}").unwrap();
         let mut line = String::new();
@@ -236,7 +255,8 @@ fn tcp_server_roundtrip() {
     let coord = start(Variant::Quik4, cfg());
     let (ready_tx, ready_rx) = mpsc::channel();
     std::thread::spawn(move || {
-        serve("127.0.0.1:0", coord, Some(ready_tx), Some(2)).unwrap();
+        let cfg = ServerConfig { accept_limit: Some(2), ..Default::default() };
+        serve("127.0.0.1:0", coord, Some(ready_tx), cfg).unwrap();
     });
     let addr = ready_rx.recv().unwrap();
 

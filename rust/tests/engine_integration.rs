@@ -2,22 +2,26 @@
 //! invariant — every admitted request's token stream is **bit-identical
 //! to its solo run** — under randomized arrival schedules, slot reuse,
 //! mid-decode admission and shutdown drains, on the native backend.
+//! The v2 API extends the invariant to *sampled* rows: the randomized
+//! schedule mixes greedy and seeded-sampled requests, and each must
+//! still match its solo oracle exactly.
 //!
-//! The solo oracle drives the backend directly (prefill → greedy decode
-//! loop), with no engine and no coordinator in the loop, so any
+//! The solo oracle drives the backend directly (prefill → sample/argmax
+//! decode loop), with no engine and no coordinator in the loop, so any
 //! divergence is attributable to the serving layer under test.
 
-use std::sync::mpsc::RecvTimeoutError;
+use std::sync::mpsc::{self, RecvTimeoutError};
 use std::time::Duration;
 
 use quik::backend::native::{demo_policy, NativeBackend, NativeCheckpoint, NativeConfig};
 use quik::backend::{InferenceBackend, Phase, Variant};
 use quik::coordinator::batcher::BatcherConfig;
 use quik::coordinator::engine::ContinuousEngine;
-use quik::coordinator::request::{Request, Response};
+use quik::coordinator::request::{GenerationRequest, Request, Response};
+use quik::coordinator::sampler::{GenerationParams, Sampler};
 use quik::coordinator::server::Coordinator;
-use quik::coordinator::EngineMode;
-use quik::util::argmax;
+use quik::coordinator::tcp::ServerConfig;
+use quik::coordinator::{EngineMode, Metrics};
 use quik::util::rng::Rng;
 
 const MODEL_SEED: u64 = 5;
@@ -40,50 +44,66 @@ fn start_mode(variant: Variant, mode: EngineMode) -> Coordinator {
     Coordinator::start_native_with_mode(ckpt, demo_policy(), variant, cfg(), mode).unwrap()
 }
 
-/// The oracle: greedy generation of `max_new` tokens (clipped by the
-/// context budget) on a fresh solo backend — exactly what a lone
+/// The oracle: generation under `params` (greedy or sampled, stop
+/// conditions honored) on a fresh solo backend — exactly what a lone
 /// request gets, with no serving machinery at all.
-fn solo_stream(variant: Variant, prompt: &[i32], max_new: usize) -> Vec<i32> {
+fn solo_stream_with(variant: Variant, prompt: &[i32], params: &GenerationParams) -> Vec<i32> {
     let mut b = backend();
     b.prepare(variant, Phase::Prefill, 1).unwrap();
     b.prepare(variant, Phase::Decode, 1).unwrap();
-    let budget = max_new.min(b.max_context().saturating_sub(prompt.len()));
+    let budget = params.max_new_tokens.min(b.max_context().saturating_sub(prompt.len()));
     let mut cache = b.new_cache(variant, 1).unwrap();
     let out = b.forward(variant, Phase::Prefill, prompt, 1, &mut cache).unwrap();
-    let mut next = argmax(out.row(0, prompt.len() - 1));
+    let mut sampler = Sampler::new(params);
+    let mut next = sampler.sample(out.row(0, prompt.len() - 1));
     let mut gen = Vec::new();
     while gen.len() < budget {
         gen.push(next);
-        if gen.len() >= budget {
+        if params.is_stop(next) || gen.len() >= budget {
             break;
         }
         let step = b.forward(variant, Phase::Decode, &[next], 1, &mut cache).unwrap();
-        next = argmax(step.row(0, 0));
+        next = sampler.sample(step.row(0, 0));
     }
     gen
 }
 
+/// Greedy oracle (the v1 shape).
+fn solo_stream(variant: Variant, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    solo_stream_with(variant, prompt, &GenerationParams::greedy(max_new))
+}
+
 #[test]
 fn randomized_schedule_is_bit_identical_to_solo() {
-    // Random prompt lengths, decode budgets and admission times over a
-    // 3-slot engine: every retired stream must equal its solo run.  A
-    // newly admitted row perturbing a resident (or a retiring row
-    // leaving residue for its successor) fails this bit-for-bit.
+    // Random prompt lengths, decode budgets, admission times AND
+    // decoding modes (greedy rows riding next to seeded-sampled rows)
+    // over a 3-slot engine: every retired stream must equal its solo
+    // run.  A newly admitted row perturbing a resident (or a retiring
+    // row leaving residue for its successor — RNG state included)
+    // fails this bit-for-bit.
     let variant = Variant::Quik4;
     let mut b = backend();
+    let mut metrics = Metrics::default();
     let mut engine = ContinuousEngine::new(&mut b, variant, 3).unwrap();
     let mut rng = Rng::new(0xC0FFEE);
     let n_req = 12usize;
-    let reqs: Vec<(Vec<i32>, usize)> = (0..n_req)
-        .map(|_| {
+    let reqs: Vec<(Vec<i32>, GenerationParams)> = (0..n_req)
+        .map(|i| {
             let len = 4 + rng.below(36);
-            let max_new = 1 + rng.below(16);
             let prompt: Vec<i32> = (0..len).map(|_| rng.range_i32(0, 89)).collect();
-            (prompt, max_new)
+            let mut params = GenerationParams::greedy(1 + rng.below(16));
+            if i % 2 == 1 {
+                // sampled rows: per-request seed, varied knobs
+                params.temperature = 0.5 + 0.25 * (i % 3) as f32;
+                params.seed = 1000 + i as u64;
+                params.top_k = if i % 4 == 1 { 8 } else { 0 };
+            }
+            (prompt, params)
         })
         .collect();
 
     let mut pending = 0usize;
+    let mut rxs = Vec::new();
     let mut done: Vec<Response> = Vec::new();
     let mut guard = 0;
     while done.len() < n_req {
@@ -95,43 +115,57 @@ fn randomized_schedule_is_bit_identical_to_solo() {
             && engine.has_free_slot()
             && (engine.resident() == 0 || rng.below(3) == 0)
         {
-            let (prompt, max_new) = reqs[pending].clone();
-            engine.admit(&mut b, Request::new(pending as u64, prompt, max_new)).unwrap();
+            let (prompt, params) = reqs[pending].clone();
+            let (tx, rx) = mpsc::channel();
+            engine
+                .admit(&mut b, Request::with_params(pending as u64, prompt, params), tx)
+                .unwrap();
+            rxs.push(rx); // keep streams alive: dropping one = cancel
             pending += 1;
         }
-        done.extend(engine.step(&mut b).unwrap());
+        done.extend(engine.step(&mut b, &mut metrics).unwrap());
     }
     assert_eq!(done.len(), n_req);
     let mut seen: Vec<u64> = done.iter().map(|r| r.id).collect();
     seen.sort_unstable();
     assert_eq!(seen, (0..n_req as u64).collect::<Vec<_>>(), "lost or duplicated a request");
     for resp in &done {
-        let (prompt, max_new) = &reqs[resp.id as usize];
-        let solo = solo_stream(variant, prompt, *max_new);
+        let (prompt, params) = &reqs[resp.id as usize];
+        let solo = solo_stream_with(variant, prompt, params);
         assert_eq!(
             resp.generated, solo,
-            "request {} diverged from its solo stream under the random schedule",
-            resp.id
+            "request {} ({}) diverged from its solo stream under the random schedule",
+            resp.id,
+            if params.is_greedy() { "greedy" } else { "sampled" }
         );
     }
 }
 
 #[test]
 fn slot_reuse_fuzz_admit_retire_readmit() {
-    // One slot, many sequential tenants: each admit → retire → re-admit
-    // cycle must leave no residue (stream equals solo every round).
+    // One slot, many sequential tenants alternating greedy and sampled:
+    // each admit → retire → re-admit cycle must leave no residue —
+    // neither KV state nor sampler state (stream equals solo every
+    // round).
     let variant = Variant::Fp16;
     let mut b = backend();
+    let mut metrics = Metrics::default();
     let mut engine = ContinuousEngine::new(&mut b, variant, 1).unwrap();
     let mut rng = Rng::new(77);
     for round in 0..8u64 {
         let len = 3 + rng.below(30);
-        let max_new = 1 + rng.below(10);
         let prompt: Vec<i32> = (0..len).map(|_| rng.range_i32(0, 89)).collect();
-        engine.admit(&mut b, Request::new(round, prompt.clone(), max_new)).unwrap();
-        let done = engine.drain(&mut b).unwrap();
+        let mut params = GenerationParams::greedy(1 + rng.below(10));
+        if round % 2 == 0 {
+            params.temperature = 0.9;
+            params.seed = round;
+        }
+        let (tx, _rx) = mpsc::channel();
+        let req = Request::with_params(round, prompt.clone(), params.clone());
+        engine.admit(&mut b, req, tx).unwrap();
+        let done = engine.drain(&mut b, &mut metrics).unwrap();
         assert_eq!(done.len(), 1);
-        let solo = solo_stream(variant, &prompt, max_new);
+        let solo = solo_stream_with(variant, &prompt, &params);
         assert_eq!(done[0].generated, solo, "round {round}: recycled slot perturbed the stream");
     }
 }
@@ -143,21 +177,25 @@ fn slot_recycled_under_a_decoding_neighbor() {
     // the admit → retire → re-admit path *with* a live neighbor.
     let variant = Variant::Fp16;
     let mut b = backend();
+    let mut metrics = Metrics::default();
     let mut engine = ContinuousEngine::new(&mut b, variant, 2).unwrap();
     let pa: Vec<i32> = (0..20).map(|i| (i * 3 + 1) % 90).collect();
     let pb: Vec<i32> = (0..8).map(|i| (i * 5 + 2) % 90).collect();
     let pc: Vec<i32> = (0..12).map(|i| (i * 7 + 4) % 90).collect();
-    engine.admit(&mut b, Request::new(0, pa.clone(), 30)).unwrap();
-    engine.admit(&mut b, Request::new(1, pb.clone(), 3)).unwrap();
+    let (txa, _rxa) = mpsc::channel();
+    engine.admit(&mut b, Request::new(0, pa.clone(), 30), txa).unwrap();
+    let (txb, _rxb) = mpsc::channel();
+    engine.admit(&mut b, Request::new(1, pb.clone(), 3), txb).unwrap();
     let mut done = Vec::new();
     while done.is_empty() {
-        done.extend(engine.step(&mut b).unwrap());
+        done.extend(engine.step(&mut b, &mut metrics).unwrap());
     }
     assert_eq!(done[0].id, 1, "short request should retire first");
     assert!(engine.has_free_slot(), "retirement must free the slot immediately");
     assert_eq!(engine.resident(), 1, "long request must still be decoding");
-    engine.admit(&mut b, Request::new(2, pc.clone(), 5)).unwrap();
-    done.extend(engine.drain(&mut b).unwrap());
+    let (txc, _rxc) = mpsc::channel();
+    engine.admit(&mut b, Request::new(2, pc.clone(), 5), txc).unwrap();
+    done.extend(engine.drain(&mut b, &mut metrics).unwrap());
     assert_eq!(done.len(), 3);
     let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();
     assert_eq!(by_id(0).generated, solo_stream(variant, &pa, 30), "resident A perturbed");
@@ -179,13 +217,13 @@ fn coordinator_continuous_staggered_arrivals_match_solo() {
             (p, 4 + s)
         })
         .collect();
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
     for (prompt, max_new) in &prompts {
-        rxs.push(coord.submit(prompt.clone(), *max_new));
+        handles.push(coord.submit(GenerationRequest::greedy(prompt.clone(), *max_new)));
         std::thread::sleep(Duration::from_millis(3)); // staggered arrivals
     }
-    for (rx, (prompt, max_new)) in rxs.into_iter().zip(&prompts) {
-        let resp = rx.recv().unwrap();
+    for (handle, (prompt, max_new)) in handles.into_iter().zip(&prompts) {
+        let resp = handle.wait().unwrap();
         let solo = solo_stream(variant, prompt, *max_new);
         assert_eq!(resp.generated, solo, "continuous coordinator diverged from solo");
     }
@@ -194,6 +232,7 @@ fn coordinator_continuous_staggered_arrivals_match_solo() {
     assert!(m.engine_steps > 0, "continuous engine never stepped");
     assert_eq!(m.batches, 0, "continuous mode must not form static batches");
     assert_eq!(m.ttft_time.count(), 6, "every request records a TTFT sample");
+    assert!(m.itl_time.count() > 0, "token emissions record inter-token latency");
     assert!(m.step_occupancy() > 0.0 && m.step_occupancy() <= 1.0);
     coord.shutdown().unwrap();
 }
@@ -207,7 +246,7 @@ fn static_and_continuous_modes_produce_identical_streams() {
     let mut streams = Vec::new();
     for mode in [EngineMode::Continuous, EngineMode::Static] {
         let mut coord = start_mode(Variant::Fp16, mode);
-        let resp = coord.submit(prompt.clone(), 6).recv().unwrap();
+        let resp = coord.submit(GenerationRequest::greedy(prompt.clone(), 6)).wait().unwrap();
         streams.push(resp.generated);
         coord.shutdown().unwrap();
     }
@@ -221,9 +260,11 @@ fn static_mode_still_forms_batches() {
     // serving path) even now that it is no longer the default.
     let mut coord = start_mode(Variant::Fp16, EngineMode::Static);
     let prompt: Vec<i32> = (0..16).map(|i| (i * 3 + 1) % 90).collect();
-    let rxs: Vec<_> = (0..4).map(|_| coord.submit(prompt.clone(), 2)).collect();
-    for rx in rxs {
-        assert_eq!(rx.recv().unwrap().generated.len(), 2);
+    let handles: Vec<_> = (0..4)
+        .map(|_| coord.submit(GenerationRequest::greedy(prompt.clone(), 2)))
+        .collect();
+    for handle in handles {
+        assert_eq!(handle.wait().unwrap().generated.len(), 2);
     }
     let m = coord.metrics().unwrap();
     assert!(m.batches > 0, "static mode formed no batches");
@@ -240,15 +281,25 @@ fn shutdown_resolves_every_request_deterministically() {
     // so by the time it returns every channel has its outcome.
     let mut coord = start_mode(Variant::Fp16, EngineMode::Continuous);
     let prompt: Vec<i32> = (0..16).map(|i| (i * 3 + 2) % 90).collect();
-    let rxs: Vec<_> = (0..8).map(|_| coord.submit(prompt.clone(), 8)).collect();
+    let handles: Vec<_> = (0..8)
+        .map(|_| coord.submit(GenerationRequest::greedy(prompt.clone(), 8)))
+        .collect();
     coord.shutdown().unwrap();
-    for rx in rxs {
-        match rx.recv_timeout(Duration::from_secs(30)) {
-            // drained resident row: a complete, untruncated stream
-            Ok(resp) => assert_eq!(resp.generated.len(), 8, "drained response truncated"),
-            // queued/never-admitted: deterministic close
-            Err(RecvTimeoutError::Disconnected) => {}
-            Err(RecvTimeoutError::Timeout) => panic!("shutdown left a client hanging"),
+    for handle in handles {
+        // Drain any streamed tokens; the final event (or channel close)
+        // must arrive without a hang.
+        loop {
+            match handle.recv_timeout(Duration::from_secs(30)) {
+                Ok(quik::coordinator::Event::Token { .. }) => continue,
+                // drained resident row: a complete, untruncated stream
+                Ok(quik::coordinator::Event::Done(resp)) => {
+                    assert_eq!(resp.generated.len(), 8, "drained response truncated");
+                    break;
+                }
+                // queued/never-admitted: deterministic close
+                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => panic!("shutdown left a client hanging"),
+            }
         }
     }
 }
@@ -256,12 +307,12 @@ fn shutdown_resolves_every_request_deterministically() {
 #[test]
 fn tcp_metrics_verb_reports_engine_counters() {
     use quik::coordinator::tcp::{serve, Client};
-    use std::sync::mpsc;
 
     let coord = start_mode(Variant::Fp16, EngineMode::Continuous);
     let (ready_tx, ready_rx) = mpsc::channel();
     std::thread::spawn(move || {
-        serve("127.0.0.1:0", coord, Some(ready_tx), Some(1)).unwrap();
+        let cfg = ServerConfig { accept_limit: Some(1), ..Default::default() };
+        serve("127.0.0.1:0", coord, Some(ready_tx), cfg).unwrap();
     });
     let addr = ready_rx.recv().unwrap();
     let mut client = Client::connect(addr).unwrap();
@@ -272,5 +323,8 @@ fn tcp_metrics_verb_reports_engine_counters() {
     assert_eq!(m.get("requests_completed").unwrap().as_usize(), Some(1));
     assert!(m.get("engine_steps").unwrap().as_usize().unwrap() >= 1);
     assert_eq!(m.get("ttft").unwrap().get("count").unwrap().as_usize(), Some(1));
+    assert_eq!(m.get("itl").unwrap().get("count").unwrap().as_usize(), Some(3));
+    assert_eq!(m.get("stop_hits").unwrap().as_usize(), Some(0));
+    assert_eq!(m.get("cancelled").unwrap().as_usize(), Some(0));
     assert!(m.get("step_occupancy").unwrap().as_f64().is_some());
 }

@@ -1,0 +1,551 @@
+//! Generation API v2 integration: seeded-sampling determinism across
+//! thread counts / engine modes / batching schedules / cancel-resubmit,
+//! stop-condition early retirement (the throughput regression), and the
+//! TCP v2 wire protocol (streaming, effective-params echo, cancel verb,
+//! connection backpressure).
+//!
+//! The determinism contract under test: a stream is a pure function of
+//! `(prompt, GenerationParams)` — the model's logits are bit-identical
+//! at every `QUIK_THREADS` count (pinned since PR 3) and the sampler is
+//! keyed only by the request seed, consuming one draw per emitted token
+//! in emission order, so *every* serving path must reproduce the same
+//! bytes.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use quik::backend::native::{demo_policy, NativeBackend, NativeCheckpoint, NativeConfig};
+use quik::backend::{InferenceBackend, Phase, Variant};
+use quik::coordinator::batcher::BatcherConfig;
+use quik::coordinator::engine::ContinuousEngine;
+use quik::coordinator::request::{FinishReason, GenerationRequest, Request, Response};
+use quik::coordinator::sampler::{GenerationParams, Sampler};
+use quik::coordinator::server::Coordinator;
+use quik::coordinator::speculative::SpeculativeDecoder;
+use quik::coordinator::tcp::{serve, Client, ServerConfig};
+use quik::coordinator::{EngineMode, Metrics};
+
+const MODEL_SEED: u64 = 5;
+
+fn backend_with_threads(threads: usize) -> NativeBackend {
+    NativeBackend::seeded("gen-api", NativeConfig::demo(), MODEL_SEED, demo_policy())
+        .unwrap()
+        .with_threads(threads)
+}
+
+fn backend() -> NativeBackend {
+    backend_with_threads(1)
+}
+
+fn cfg() -> BatcherConfig {
+    BatcherConfig {
+        batch_sizes: vec![4, 1],
+        max_wait: Duration::from_millis(10),
+        bucket: 64,
+        max_queue: 1024,
+    }
+}
+
+fn start_mode(variant: Variant, mode: EngineMode) -> Coordinator {
+    let ckpt = NativeCheckpoint::seeded(NativeConfig::demo(), MODEL_SEED);
+    Coordinator::start_native_with_mode(ckpt, demo_policy(), variant, cfg(), mode).unwrap()
+}
+
+fn prompt(seed: i32, len: usize) -> Vec<i32> {
+    (0..len as i32).map(|i| (i * 7 + seed).rem_euclid(90)).collect()
+}
+
+/// The no-serving-machinery oracle: prefill → sample → decode on a given
+/// backend, honoring budget and stop conditions exactly like the v2
+/// serving loops.
+fn solo_with(
+    b: &mut NativeBackend,
+    variant: Variant,
+    p: &[i32],
+    params: &GenerationParams,
+) -> Vec<i32> {
+    b.prepare(variant, Phase::Prefill, 1).unwrap();
+    b.prepare(variant, Phase::Decode, 1).unwrap();
+    let budget = params.max_new_tokens.min(b.max_context().saturating_sub(p.len()));
+    let mut cache = b.new_cache(variant, 1).unwrap();
+    let out = b.forward(variant, Phase::Prefill, p, 1, &mut cache).unwrap();
+    let mut sampler = Sampler::new(params);
+    let mut next = sampler.sample(out.row(0, p.len() - 1));
+    let mut gen = Vec::new();
+    while gen.len() < budget {
+        gen.push(next);
+        if params.is_stop(next) || gen.len() >= budget {
+            break;
+        }
+        let step = b.forward(variant, Phase::Decode, &[next], 1, &mut cache).unwrap();
+        next = sampler.sample(step.row(0, 0));
+    }
+    gen
+}
+
+fn sampled_params(max_new: usize, seed: u64) -> GenerationParams {
+    GenerationParams {
+        max_new_tokens: max_new,
+        temperature: 0.85,
+        top_k: 12,
+        top_p: 0.97,
+        seed,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// determinism matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sampled_stream_reproducible_across_thread_counts() {
+    // The forward's logits are bit-identical at every worker-pool width
+    // (PR-3 invariant); the sampler sits on top of them, so the sampled
+    // stream must be byte-identical too.
+    let p = prompt(3, 24);
+    for variant in [Variant::Fp16, Variant::Quik4] {
+        let params = sampled_params(14, 0xDEC0DE);
+        let mut b1 = backend_with_threads(1);
+        let mut b4 = backend_with_threads(4);
+        let s1 = solo_with(&mut b1, variant, &p, &params);
+        let s4 = solo_with(&mut b4, variant, &p, &params);
+        assert!(!s1.is_empty());
+        assert_eq!(s1, s4, "{variant:?}: sampled stream diverged across thread counts");
+    }
+}
+
+#[test]
+fn sampled_streams_identical_across_engine_modes_and_solo() {
+    // Same (prompt, seed, params) through the continuous engine, the
+    // static loop and the bare backend: three code paths, one stream.
+    let p = prompt(9, 20);
+    let params = sampled_params(10, 77);
+    let mut oracle_backend = backend();
+    let solo = solo_with(&mut oracle_backend, Variant::Quik4, &p, &params);
+    for mode in [EngineMode::Continuous, EngineMode::Static] {
+        let mut coord = start_mode(Variant::Quik4, mode);
+        let resp = coord
+            .submit(GenerationRequest::new(p.clone(), params.clone()))
+            .wait()
+            .unwrap();
+        assert_eq!(resp.generated, solo, "{mode:?} sampled stream diverged from solo");
+        coord.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn sampled_row_unperturbed_by_greedy_riders() {
+    // A sampled request batched with greedy neighbors (both engine
+    // modes) must still replay its solo stream — no cross-row RNG or
+    // KV leakage.
+    let p = prompt(5, 16);
+    let params = sampled_params(8, 4242);
+    let mut oracle_backend = backend();
+    let solo = solo_with(&mut oracle_backend, Variant::Fp16, &p, &params);
+    for mode in [EngineMode::Continuous, EngineMode::Static] {
+        let mut coord = start_mode(Variant::Fp16, mode);
+        let sampled = coord.submit(GenerationRequest::new(p.clone(), params.clone()));
+        let riders: Vec<_> = (0..3)
+            .map(|s| coord.submit(GenerationRequest::greedy(prompt(40 + s, 16), 8)))
+            .collect();
+        assert_eq!(sampled.wait().unwrap().generated, solo, "{mode:?}: rider perturbed sampling");
+        for r in riders {
+            assert_eq!(r.wait().unwrap().generated.len(), 8);
+        }
+        coord.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn cancel_then_resubmit_replays_the_exact_stream() {
+    // Cancellation must not leak serving state into the retry: the
+    // cancelled prefix and the re-submitted full run both equal the
+    // solo oracle (the per-request seed is the whole RNG state).
+    let variant = Variant::Fp16;
+    let p = prompt(8, 12);
+    let params = sampled_params(16, 31337);
+    let mut b = backend();
+    let solo = solo_with(&mut b, variant, &p, &params);
+    assert_eq!(solo.len(), 16);
+
+    let mut m = Metrics::default();
+    let mut engine = ContinuousEngine::new(&mut b, variant, 2).unwrap();
+    let (tx, rx) = mpsc::channel();
+    engine.admit(&mut b, Request::with_params(0, p.clone(), params.clone()), tx).unwrap();
+    for _ in 0..5 {
+        engine.step(&mut b, &mut m).unwrap();
+    }
+    let cancelled = engine.cancel(0, &mut m).expect("resident row cancels");
+    assert_eq!(cancelled.finish, FinishReason::Cancelled);
+    assert_eq!(
+        cancelled.generated[..],
+        solo[..cancelled.generated.len()],
+        "cancelled prefix diverged from solo"
+    );
+    drop(rx);
+
+    // re-submit the identical (prompt, params) into the *same* engine
+    let (tx2, _rx2) = mpsc::channel();
+    engine.admit(&mut b, Request::with_params(1, p, params), tx2).unwrap();
+    let done = engine.drain(&mut b, &mut m).unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].generated, solo, "re-submitted stream diverged after a cancel");
+}
+
+// ---------------------------------------------------------------------------
+// stop conditions as a throughput feature
+// ---------------------------------------------------------------------------
+
+/// Drive an engine over a fixed request list (admit whenever a slot
+/// frees, FIFO), returning the responses and the number of engine steps
+/// it took to serve everything.
+fn drive_engine(
+    variant: Variant,
+    n_slots: usize,
+    reqs: &[(Vec<i32>, GenerationParams)],
+) -> (Vec<Response>, u64) {
+    let mut b = backend();
+    let mut m = Metrics::default();
+    let mut engine = ContinuousEngine::new(&mut b, variant, n_slots).unwrap();
+    let mut rxs = Vec::new();
+    let mut pending = 0usize;
+    let mut done = Vec::new();
+    let mut steps = 0u64;
+    while done.len() < reqs.len() {
+        while pending < reqs.len() && engine.has_free_slot() {
+            let (p, params) = reqs[pending].clone();
+            let (tx, rx) = mpsc::channel();
+            engine.admit(&mut b, Request::with_params(pending as u64, p, params), tx).unwrap();
+            rxs.push(rx);
+            pending += 1;
+        }
+        done.extend(engine.step(&mut b, &mut m).unwrap());
+        steps += 1;
+        assert!(steps < 100_000, "engine failed to converge");
+    }
+    (done, steps)
+}
+
+#[test]
+fn stop_heavy_workload_finishes_in_fewer_engine_steps() {
+    // The acceptance regression: a row hitting its stop token frees its
+    // slot at that step boundary, so a stop-heavy workload serves the
+    // same request list in strictly fewer total decode steps than the
+    // run-to-budget variant — early retirement is admission capacity.
+    let variant = Variant::Fp16;
+    let budget = 20usize;
+    let prompts: Vec<Vec<i32>> = (0..8).map(|s| prompt(s * 3 + 1, 10)).collect();
+
+    // discover each prompt's greedy stream to pick a stop token that
+    // hits within the first 3 tokens
+    let mut b = backend();
+    let greedy: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| solo_with(&mut b, variant, p, &GenerationParams::greedy(budget)))
+        .collect();
+
+    let run_to_budget: Vec<(Vec<i32>, GenerationParams)> = prompts
+        .iter()
+        .map(|p| (p.clone(), GenerationParams::greedy(budget)))
+        .collect();
+    let stop_heavy: Vec<(Vec<i32>, GenerationParams)> = prompts
+        .iter()
+        .zip(&greedy)
+        .map(|(p, g)| {
+            let params = GenerationParams {
+                max_new_tokens: budget,
+                stop_tokens: vec![g[2]],
+                ..Default::default()
+            };
+            (p.clone(), params)
+        })
+        .collect();
+
+    let (full, steps_full) = drive_engine(variant, 2, &run_to_budget);
+    let (stopped, steps_stopped) = drive_engine(variant, 2, &stop_heavy);
+    assert_eq!(full.len(), 8);
+    assert_eq!(stopped.len(), 8);
+    for resp in &full {
+        assert_eq!(resp.generated.len(), budget);
+    }
+    for resp in &stopped {
+        assert_eq!(resp.finish, FinishReason::Stop);
+        let g = &greedy[resp.id as usize];
+        let first_hit = g.iter().position(|t| t == resp.generated.last().unwrap()).unwrap();
+        assert_eq!(resp.generated[..], g[..=first_hit], "stop stream is not a solo prefix");
+        assert!(resp.generated.len() <= 3, "stop token must hit within 3 tokens");
+    }
+    assert!(
+        steps_stopped < steps_full,
+        "stop-heavy workload must finish in fewer steps ({steps_stopped} vs {steps_full})"
+    );
+}
+
+#[test]
+fn eos_via_coordinator_reports_eos_and_short_stream() {
+    // End-to-end EOS through the coordinator: discover the greedy
+    // stream, re-request with its second token as EOS.
+    let p = prompt(2, 14);
+    let mut b = backend();
+    let greedy = solo_with(&mut b, Variant::Fp16, &p, &GenerationParams::greedy(10));
+    let eos = greedy[1];
+    let first_hit = greedy.iter().position(|&t| t == eos).unwrap();
+    let mut coord = start_mode(Variant::Fp16, EngineMode::Continuous);
+    let params = GenerationParams { max_new_tokens: 10, eos: Some(eos), ..Default::default() };
+    let resp = coord.submit(GenerationRequest::new(p, params)).wait().unwrap();
+    assert_eq!(resp.finish, FinishReason::Eos);
+    assert_eq!(resp.generated[..], greedy[..=first_hit]);
+    let m = coord.metrics().unwrap();
+    assert_eq!(m.eos_hits, 1);
+    coord.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// cancellation through the coordinator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cancel_verb_resolves_a_queued_request() {
+    // One engine slot, a long resident, then a queued request: the
+    // cancel verb must find it in the queue and resolve its stream with
+    // an empty Done(Cancelled) — and the resident must be unaffected.
+    let mut coord = start_mode_single_slot(Variant::Fp16);
+    let long = coord.submit(GenerationRequest::greedy(prompt(1, 8), 80));
+    let queued = coord.submit(GenerationRequest::greedy(prompt(2, 8), 5));
+    let found = coord.cancel(queued.id()).unwrap();
+    assert!(found, "queued request must be cancellable by id");
+    let resp = queued.wait().expect("cancelled stream still delivers Done");
+    assert_eq!(resp.finish, FinishReason::Cancelled);
+    assert!(resp.generated.is_empty(), "queued cancel must deliver an empty stream");
+    let long_resp = long.wait().unwrap();
+    assert_eq!(long_resp.generated.len(), 80, "resident must run to its budget");
+    let m = coord.metrics().unwrap();
+    assert_eq!(m.cancelled, 1);
+    // cancelling a finished/unknown id reports not-found
+    assert!(!coord.cancel(queued.id()).unwrap());
+    assert!(!coord.cancel(9999).unwrap());
+    coord.shutdown().unwrap();
+}
+
+fn start_mode_single_slot(variant: Variant) -> Coordinator {
+    let ckpt = NativeCheckpoint::seeded(NativeConfig::demo(), MODEL_SEED);
+    let cfg = BatcherConfig {
+        batch_sizes: vec![1],
+        max_wait: Duration::from_millis(1),
+        bucket: 64,
+        max_queue: 64,
+    };
+    Coordinator::start_native_with_mode(ckpt, demo_policy(), variant, cfg, EngineMode::Continuous)
+        .unwrap()
+}
+
+#[test]
+fn dropping_the_handle_cancels_and_frees_capacity() {
+    // Drop a long request's handle mid-flight; the engine must notice
+    // at a step boundary and the metrics must record the cancellation
+    // (the slot becomes available again — the follow-up request
+    // completes promptly).
+    let mut coord = start_mode_single_slot(Variant::Fp16);
+    let doomed = coord.submit(GenerationRequest::greedy(prompt(4, 8), 80));
+    // walk away immediately: whether the drop lands before admission or
+    // mid-decode, the engine's next event send fails and the row retires
+    // as cancelled (80 decode steps cannot complete in the meantime)
+    drop(doomed);
+    let follow_up = coord.submit(GenerationRequest::greedy(prompt(5, 8), 3));
+    let resp = follow_up.wait().unwrap();
+    assert_eq!(resp.generated.len(), 3);
+    let m = coord.metrics().unwrap();
+    assert_eq!(m.cancelled, 1, "dropped handle must be recorded as a cancellation");
+    coord.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// speculative decoding with the v2 surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn speculative_sampled_stream_equals_sequential_target_decode() {
+    // Lossless sampled spec-dec: the emitted stream must equal a plain
+    // sequential sampled decode of the target with the same (seed,
+    // params) — the verify-window walk consumes RNG draws in emission
+    // order and never draws past a divergence.
+    let mut b = backend();
+    SpeculativeDecoder::prepare(&mut b).unwrap();
+    let p = prompt(6, 24);
+    for (params, label) in [
+        (GenerationParams::greedy(16), "greedy"),
+        (sampled_params(16, 99), "sampled"),
+        (GenerationParams { temperature: 1.2, seed: 7, ..GenerationParams::greedy(16) }, "hot"),
+    ] {
+        let solo = solo_with(&mut b, Variant::Fp16, &p, &params);
+        let spec = SpeculativeDecoder::new(&b).unwrap();
+        let (tokens, finish, _stats) = spec.generate_with(&p, &params).unwrap();
+        assert_eq!(tokens, solo, "{label}: speculative stream diverged from sequential target");
+        assert_eq!(finish, FinishReason::Length);
+    }
+}
+
+#[test]
+fn speculative_stop_token_truncates_inclusively() {
+    let mut b = backend();
+    SpeculativeDecoder::prepare(&mut b).unwrap();
+    let p = prompt(11, 24);
+    let greedy = solo_with(&mut b, Variant::Fp16, &p, &GenerationParams::greedy(16));
+    let stop = greedy[3];
+    let first_hit = greedy.iter().position(|&t| t == stop).unwrap();
+    let params = GenerationParams {
+        max_new_tokens: 16,
+        stop_tokens: vec![stop],
+        ..Default::default()
+    };
+    let spec = SpeculativeDecoder::new(&b).unwrap();
+    let (tokens, finish, _stats) = spec.generate_with(&p, &params).unwrap();
+    assert_eq!(finish, FinishReason::Stop);
+    assert_eq!(tokens[..], greedy[..=first_hit]);
+}
+
+// ---------------------------------------------------------------------------
+// TCP v2 wire protocol
+// ---------------------------------------------------------------------------
+
+fn start_tcp(server_cfg: ServerConfig) -> std::net::SocketAddr {
+    let coord = start_mode(Variant::Fp16, EngineMode::Continuous);
+    let (ready_tx, ready_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        serve("127.0.0.1:0", coord, Some(ready_tx), server_cfg).unwrap();
+    });
+    ready_rx.recv().unwrap()
+}
+
+#[test]
+fn tcp_streaming_delivers_token_lines_then_summary() {
+    let addr = start_tcp(ServerConfig { accept_limit: Some(1), ..Default::default() });
+    let mut client = Client::connect(addr).unwrap();
+    let p = prompt(7, 12);
+    let params = sampled_params(6, 2024);
+    let reply = client.stream(&p, &params).unwrap();
+    // incremental lines arrived before the summary, with sequential
+    // indexes (Client::stream enforces ordering), and agree with it
+    assert_eq!(reply.tokens.len(), 6);
+    let summary_tokens: Vec<i64> = reply
+        .summary
+        .get("tokens")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i64)
+        .collect();
+    assert_eq!(
+        summary_tokens,
+        reply.tokens.iter().map(|&t| t as i64).collect::<Vec<i64>>(),
+        "streamed tokens disagree with the summary line"
+    );
+    assert_eq!(reply.summary.get("finish").unwrap().as_str(), Some("length"));
+    // the ack echoed the effective params
+    assert_eq!(reply.ack.get("max_new_tokens").unwrap().as_usize(), Some(6));
+    assert_eq!(reply.ack.get("seed").unwrap().as_usize(), Some(2024));
+    // the same (prompt, params) one-shot replays the identical stream
+    let one_shot = client.infer_with(&p, &params).unwrap();
+    let one_shot_tokens: Vec<i64> = one_shot
+        .get("tokens")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i64)
+        .collect();
+    assert_eq!(one_shot_tokens, summary_tokens, "one-shot vs streaming mismatch");
+}
+
+#[test]
+fn tcp_clamp_is_visible_in_the_effective_params_echo() {
+    // The silent `.min(1024)` is gone: the cap is a ServerConfig knob
+    // and the response line echoes the clamped value.
+    let addr = start_tcp(ServerConfig {
+        max_new_cap: 4,
+        accept_limit: Some(1),
+        ..Default::default()
+    });
+    let mut client = Client::connect(addr).unwrap();
+    let params = GenerationParams::greedy(5000); // way over the cap
+    let v = client.infer_with(&prompt(1, 10), &params).unwrap();
+    assert_eq!(
+        v.get("max_new_tokens").unwrap().as_usize(),
+        Some(4),
+        "response must echo the clamped budget"
+    );
+    assert_eq!(v.get("tokens").unwrap().as_array().unwrap().len(), 4);
+    assert_eq!(v.get("finish").unwrap().as_str(), Some("length"));
+}
+
+#[test]
+fn tcp_cancel_verb_answers_found_false_for_unknown_ids() {
+    let addr = start_tcp(ServerConfig { accept_limit: Some(1), ..Default::default() });
+    let mut client = Client::connect(addr).unwrap();
+    assert!(!client.cancel(424242).unwrap(), "unknown id must answer found=false");
+    // and the connection keeps serving inference afterwards
+    let tokens = client.infer(&prompt(3, 10), 2).unwrap();
+    assert_eq!(tokens.len(), 2);
+}
+
+#[test]
+fn tcp_connection_limit_rejects_with_server_busy() {
+    use std::io::{BufRead, BufReader};
+    use std::net::TcpStream;
+
+    let addr = start_tcp(ServerConfig {
+        max_concurrent: 1,
+        accept_limit: Some(2),
+        ..Default::default()
+    });
+    // First connection occupies the only slot (held open, no traffic).
+    let holder = TcpStream::connect(addr).unwrap();
+    // Give the accept loop a beat to register it.
+    std::thread::sleep(Duration::from_millis(30));
+    // Second connection: one busy line, then EOF.
+    let busy = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(busy.try_clone().unwrap());
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "busy reply missing");
+    let v = quik::util::json::parse(&line).unwrap();
+    assert_eq!(v.get("error").unwrap().as_str(), Some("server busy"));
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "busy connection must be closed");
+    drop(busy);
+    // Freeing the holder re-opens capacity: a retry eventually serves.
+    drop(holder);
+    let mut served = false;
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(10));
+        let Ok(mut client) = Client::connect(addr) else { continue };
+        match client.infer(&prompt(2, 8), 1) {
+            Ok(tokens) => {
+                assert_eq!(tokens.len(), 1);
+                served = true;
+                break;
+            }
+            Err(_) => continue, // still busy: retry
+        }
+    }
+    assert!(served, "capacity never recovered after the holder disconnected");
+}
+
+#[test]
+fn tcp_stop_tokens_round_trip_with_stop_finish() {
+    let addr = start_tcp(ServerConfig { accept_limit: Some(1), ..Default::default() });
+    let mut client = Client::connect(addr).unwrap();
+    let p = prompt(9, 10);
+    // discover the greedy stream over the wire, then stop on its 2nd token
+    let greedy = client.infer(&p, 8).unwrap();
+    assert_eq!(greedy.len(), 8);
+    let params = GenerationParams {
+        max_new_tokens: 8,
+        stop_tokens: vec![greedy[1]],
+        ..Default::default()
+    };
+    let v = client.infer_with(&p, &params).unwrap();
+    assert_eq!(v.get("finish").unwrap().as_str(), Some("stop"));
+    let n = v.get("tokens").unwrap().as_array().unwrap().len();
+    assert!(n <= 2, "stop token must truncate the stream (got {n} tokens)");
+}

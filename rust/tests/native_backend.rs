@@ -228,7 +228,7 @@ fn coordinator_serves_end_to_end_through_native_backend() {
         &WorkloadSpec {
             n_requests: 8,
             prompt_len: 32,
-            max_new_tokens: 5,
+            params: quik::coordinator::GenerationParams::greedy(5),
             arrival_rate: None,
             seed: 11,
         },
