@@ -227,6 +227,117 @@ fn main() {
         }
     }
 
+    // --- compacted masked decode: occupancy sweep ----------------------
+    // The compaction contract measured directly: one 8-slot cache,
+    // masked decode with 1, 4 and 8 rows active.  Step compute must
+    // scale with the *active* width, not the slot count — the 1-of-8
+    // step should cost well under half of the 8-of-8 step (retired and
+    // still-prefilling slots contribute no GEMM rows and no attention).
+    {
+        use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+        use quik::backend::{InferenceBackend, KvCache, Phase, Variant};
+        let mut backend =
+            NativeBackend::seeded("occupancy", NativeConfig::demo(), 5, demo_policy()).unwrap();
+        backend.prepare(Variant::Quik4, Phase::Decode, 8).unwrap();
+        let prompt: Vec<i32> = (0..8 * 24).map(|i| i % 90).collect();
+        let mut cache = backend.new_cache(Variant::Quik4, 8).unwrap();
+        backend.forward(Variant::Quik4, Phase::Prefill, &prompt, 8, &mut cache).unwrap();
+        let step: Vec<i32> = (0..8).map(|i| (i as i32) % 90).collect();
+        let mut means = Vec::new();
+        for n_active in [1usize, 4, 8] {
+            let active: Vec<bool> = (0..8).map(|b| b < n_active).collect();
+            let r =
+                bench_auto(&format!("masked decode {n_active}of8 active quik4"), budget, || {
+                    cache.set_len(24);
+                    std::hint::black_box(
+                        backend
+                            .forward_masked(
+                                Variant::Quik4,
+                                Phase::Decode,
+                                &step,
+                                8,
+                                &mut cache,
+                                &active,
+                            )
+                            .unwrap(),
+                    );
+                });
+            report(&r);
+            means.push(r.mean.as_secs_f64());
+            benches.push(json_bench(&r));
+        }
+        let scaling = means[0] / means[2];
+        println!(
+            "    -> 1-of-8 masked step costs {scaling:.2}x of the 8-of-8 step \
+             (compacted compute scaling)"
+        );
+        derived.push(format!(
+            "    {{\"name\": \"masked decode compute_scaling 1of8_vs_8of8\", \"value\": {scaling:.3}}}"
+        ));
+    }
+
+    // --- chunked admission prefill: long-prompt ITL tail ---------------
+    // Chunking bounds the decode stall a long admission inflicts on
+    // residents: at most one chunk of prefill work per engine step
+    // instead of the whole prompt.  Same staggered long-prompt workload
+    // through 4 pinned slots, unchunked vs chunk 16 — the chunked run
+    // should show a tighter inter-token-latency tail (p95 ITL).
+    {
+        use quik::backend::native::{demo_policy, NativeCheckpoint, NativeConfig};
+        use quik::backend::Variant;
+        use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
+        use quik::coordinator::{EngineConfig, EngineMode};
+
+        let spec = WorkloadSpec {
+            n_requests: 12,
+            prompt_len: 64,
+            params: GenerationParams::greedy(16),
+            arrival_rate: Some(200.0), // admissions land mid-decode
+            seed: 17,
+        };
+        let serve_cfg = BatcherConfig {
+            batch_sizes: vec![4, 1],
+            max_wait: Duration::from_millis(5),
+            bucket: 64,
+            max_queue: 1024,
+        };
+        for (chunk, name) in [(0usize, "unchunked"), (16, "chunk16")] {
+            let ckpt = NativeCheckpoint::seeded(NativeConfig::demo(), 5);
+            let mut coord = Coordinator::start_native_with_engine(
+                ckpt,
+                demo_policy(),
+                Variant::Quik4,
+                serve_cfg.clone(),
+                EngineMode::Continuous,
+                EngineConfig {
+                    slots: Some(4),
+                    prefill_chunk: Some(chunk),
+                    ..Default::default()
+                },
+            )
+            .expect("start coordinator");
+            let report = run_workload(&mut coord, &spec).expect("serve workload");
+            let itl_p95 = report.metrics.itl_time.quantile(0.95);
+            println!(
+                "serve[long-prompt {name}]: {:.1} tok/s, itl p95 {:?}, {} prefill chunks \
+                 ({} chunked admissions)",
+                report.tokens_per_s(),
+                itl_p95,
+                report.metrics.prefill_chunks,
+                report.metrics.chunked_admissions,
+            );
+            derived.push(format!(
+                "    {{\"name\": \"serve long-prompt {name} itl_p95_us\", \"value\": {:.3}}}",
+                itl_p95.as_secs_f64() * 1e6
+            ));
+            derived.push(format!(
+                "    {{\"name\": \"serve long-prompt {name} tok_per_s\", \"value\": {:.3}}}",
+                report.tokens_per_s()
+            ));
+            coord.shutdown().expect("shutdown");
+        }
+    }
+
     // --- serving engine: continuous vs static, staggered arrivals ------
     // The PR-4 tentpole comparison: the same Poisson-staggered workload
     // through the slot-based continuous engine and through the static

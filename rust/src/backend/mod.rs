@@ -212,13 +212,20 @@ pub trait InferenceBackend {
     /// their KV entries are neither attended nor written, their logical
     /// cache length does not advance, and their logits rows are
     /// unspecified (callers must discard them).  Token values in
-    /// inactive rows are arbitrary placeholders (pad tokens).
+    /// inactive rows are arbitrary placeholders (pad tokens) — a
+    /// masking backend may never read them at all.
+    ///
+    /// Masking backends are expected to **compact**: gather the active
+    /// rows into a dense `1..=batch`-row activation batch before the
+    /// linears (any compacted width must be valid under the `prepare`d
+    /// shapes), so step compute scales with occupancy rather than slot
+    /// count, and scatter logits back to slot positions bit-identically.
     ///
     /// This is the primitive behind the continuous batching engine
     /// ([`crate::coordinator::engine::ContinuousEngine`]): a newly
     /// admitted request prefills its slot while every resident row stays
-    /// frozen mid-decode, and free slots ride along at zero attention
-    /// cost.
+    /// frozen mid-decode, and free slots cost nothing — no attention
+    /// *and* no GEMM rows.
     ///
     /// The default implementation **ignores the mask** and runs a plain
     /// [`InferenceBackend::forward`] with every row live — only sound
@@ -244,6 +251,17 @@ pub trait InferenceBackend {
     /// `false` (the default) are served by the static fallback loop.
     fn supports_row_masking(&self) -> bool {
         false
+    }
+
+    /// Estimated incremental memory cost, in bytes, of serving **one
+    /// additional concurrent slot** at full context (its KV-cache rows
+    /// plus its share of activation buffers).  The continuous engine
+    /// divides a memory budget by this to autoscale its slot count when
+    /// no explicit `QUIK_SLOTS`/`--slots` setting is given.  `None` (the
+    /// default) means the backend cannot estimate it; the engine then
+    /// falls back to its workload floor.
+    fn slot_bytes(&self) -> Option<u64> {
+        None
     }
 }
 

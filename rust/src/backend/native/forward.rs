@@ -25,11 +25,18 @@
 //! * the KV cache tracks a *per-row* logical length, so a short row in a
 //!   right-padded mixed-length batch decodes at its own positions and
 //!   never attends pad KV — batched decode is bit-exact with solo decode;
-//! * [`forward_pass_masked`] accepts an active-row mask: inactive rows
-//!   skip the attention loop and all KV writes and do not advance, which
-//!   is what lets the continuous batching engine prefill a newly admitted
-//!   slot while resident rows stay frozen (and retired slots cost no
-//!   attention work at all).
+//! * [`forward_pass_masked`] accepts an active-row mask and **compacts**:
+//!   active rows are gathered into a dense activation batch before the
+//!   embedding, so every linear (and the lm-head) runs at
+//!   `m = n_active × seq` instead of `n_slots × seq` — compute scales
+//!   with occupancy, not slot count.  Only attention keeps absolute slot
+//!   indices (it addresses the cache by row), and logits are scattered
+//!   back to slot positions at the end.  The kernels are row-independent,
+//!   so compaction is bit-preserving by construction.  Inactive rows
+//!   skip all KV writes and do not advance, which is what lets the
+//!   continuous batching engine prefill a newly admitted slot while
+//!   resident rows stay frozen (and retired slots cost no work at all —
+//!   not even GEMM rows).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -411,6 +418,14 @@ pub struct ForwardScratch {
     scores: Vec<f32>, // attention score row [max context]
     xf: Vec<f32>,     // final-norm output [m, d]
     inv_freq: Vec<f32>,
+    /// Active slot indices in slot order — the gather list mapping
+    /// compact activation row `ci` back to absolute cache row
+    /// `gather[ci]`.  Reused across steps so compaction costs no warm
+    /// allocation.
+    gather: Vec<usize>,
+    /// Compact logits `[n_active * seq, vocab]` staging buffer, scattered
+    /// into the slot-indexed output when `n_active < batch`.
+    logits_c: Vec<f32>,
 }
 
 /// RoPE inverse frequencies for a head dimension — constant per config,
@@ -490,14 +505,24 @@ pub(crate) fn forward_pass(
 }
 
 /// Row-masked forward: the continuous-batching primitive.  With
-/// `active = Some(mask)`, only rows whose mask bit is set participate:
-/// inactive rows skip the attention loop entirely (no score/value work,
-/// no KV writes) and their logical cache length does not advance, so a
-/// frozen resident row is untouched — bit-for-bit — by a neighboring
-/// row's prefill or decode.  Inactive rows still flow through the
-/// (row-independent) linears as placeholder content; their logits are
-/// unspecified and must be discarded by the caller.  `active = None`
-/// runs every row, exactly the classic [`forward_pass`].
+/// `active = Some(mask)`, only rows whose mask bit is set participate —
+/// and only they are *computed*: active rows are gathered into a dense
+/// `[n_active, seq]` activation batch ahead of the embedding, every
+/// linear and the lm-head run at the compacted width, and logits are
+/// scattered back to slot positions at the end.  Compaction is
+/// bit-preserving by construction: each output element is a pure
+/// function of its own activation row and the weights, evaluated in the
+/// serial accumulation order regardless of batch width (the pool only
+/// partitions index space).  Attention keeps absolute slot indices for
+/// cache addressing, so cache state never moves.
+///
+/// Inactive rows' tokens are never read (any placeholder value is fine,
+/// including out-of-vocab), they get no KV writes, their logical cache
+/// length does not advance — a frozen resident row is untouched,
+/// bit-for-bit, by a neighboring row's prefill or decode — and their
+/// logits rows come back zero-filled and must be treated as
+/// unspecified.  `active = None` runs every row, exactly the classic
+/// [`forward_pass`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn forward_pass_masked(
     ckpt: &NativeCheckpoint,
@@ -526,14 +551,16 @@ pub(crate) fn forward_pass_masked(
     }
     let row_active = |b: usize| active.map_or(true, |m| m[b]);
     let seq = tokens.len() / batch;
+    // Gather list: active slot rows, in slot order.  Everything dense
+    // below runs over `n_active` compacted rows; attention and the final
+    // logits scatter map compact row `ci` back to slot `gather[ci]`.
+    s.gather.clear();
+    s.gather.extend((0..batch).filter(|&b| row_active(b)));
+    let n_active = s.gather.len();
     // The context budget binds only the rows that actually advance: a
     // resident row frozen near the context limit must not veto another
     // slot's admission prefill.
-    let p0_max = (0..batch)
-        .filter(|&b| row_active(b))
-        .map(|b| cache.row_len[b])
-        .max()
-        .unwrap_or(0);
+    let p0_max = s.gather.iter().map(|&b| cache.row_len[b]).max().unwrap_or(0);
     if p0_max + seq > cfg.max_seq {
         bail!("context overflow: cache {} + step {seq} > max_seq {}", p0_max, cfg.max_seq);
     }
@@ -544,7 +571,7 @@ pub(crate) fn forward_pass_masked(
     let group = n_heads / cfg.n_kv_heads;
     let att_scale = (1.0 / (dh as f64).sqrt()) as f32;
     rope_inv_freq_into(dh, &mut s.inv_freq);
-    let m = batch * seq;
+    let m = n_active * seq;
     s.qr.clear();
     s.qr.resize(dh, 0.0);
     s.kr.clear();
@@ -552,15 +579,19 @@ pub(crate) fn forward_pass_masked(
     s.scores.clear();
     s.scores.resize(p0_max + seq, 0.0);
 
-    // ---- embedding ------------------------------------------------------
+    // ---- embedding (gather: active rows → dense batch) ------------------
     s.x.clear();
     s.x.resize(m * d, 0.0);
-    for (i, &t) in tokens.iter().enumerate() {
-        if t < 0 || t as usize >= cfg.vocab {
-            bail!("token {t} outside vocab {}", cfg.vocab);
+    for (ci, &b) in s.gather.iter().enumerate() {
+        for t in 0..seq {
+            let tok = tokens[b * seq + t];
+            if tok < 0 || tok as usize >= cfg.vocab {
+                bail!("token {tok} outside vocab {}", cfg.vocab);
+            }
+            let tok = tok as usize;
+            let row = ci * seq + t;
+            s.x[row * d..(row + 1) * d].copy_from_slice(&ckpt.embedding[tok * d..(tok + 1) * d]);
         }
-        let t = t as usize;
-        s.x[i * d..(i + 1) * d].copy_from_slice(&ckpt.embedding[t * d..(t + 1) * d]);
     }
 
     // ---- blocks ---------------------------------------------------------
@@ -572,13 +603,13 @@ pub(crate) fn forward_pass_masked(
 
         s.attn.clear();
         s.attn.resize(m * d, 0.0);
-        for b in 0..batch {
-            if !row_active(b) {
-                continue; // frozen row: no KV writes, no attention work
-            }
+        // `ci` indexes the compacted activation batch, `b` the absolute
+        // cache row — attention is the one stage that needs both views.
+        for ci in 0..n_active {
+            let b = s.gather[ci];
             let p0 = cache.row_len[b];
             for t in 0..seq {
-                let row = b * seq + t;
+                let row = ci * seq + t;
                 let pos = p0 + t;
                 // write this position's K (rotated) and V into the cache
                 for kv_i in 0..cfg.n_kv_heads {
@@ -635,14 +666,27 @@ pub(crate) fn forward_pass_masked(
         }
     }
 
-    // ---- head -----------------------------------------------------------
+    // ---- head (scatter: compact logits → slot positions) ----------------
     rmsnorm_into(&s.x, &ckpt.final_norm, m, d, &mut s.xf);
     let mut logits = Vec::new();
-    matmul_f32_into_pooled(&s.xf, &ckpt.lm_head, m, cfg.vocab, d, pool, &mut logits);
-    for (b, len) in cache.row_len.iter_mut().enumerate() {
-        if row_active(b) {
-            *len += seq;
+    if n_active == batch {
+        // dense step: compute straight into the returned buffer
+        matmul_f32_into_pooled(&s.xf, &ckpt.lm_head, m, cfg.vocab, d, pool, &mut logits);
+    } else {
+        // compacted step: lm-head at the dense width into reused scratch,
+        // then scatter each active row's block to its slot position (the
+        // returned buffer is the step's one allocation either way;
+        // inactive rows' logits stay zero and are unspecified)
+        matmul_f32_into_pooled(&s.xf, &ckpt.lm_head, m, cfg.vocab, d, pool, &mut s.logits_c);
+        logits.resize(batch * seq * cfg.vocab, 0.0);
+        let block = seq * cfg.vocab;
+        for (ci, &b) in s.gather.iter().enumerate() {
+            logits[b * block..(b + 1) * block]
+                .copy_from_slice(&s.logits_c[ci * block..(ci + 1) * block]);
         }
+    }
+    for &b in &s.gather {
+        cache.row_len[b] += seq;
     }
     Ok(StepOutput { logits, batch, seq, vocab: cfg.vocab })
 }
@@ -845,6 +889,43 @@ mod tests {
         // row 0's next decode is bit-exact despite the interleaved admission
         let d2 = masked(&ck, &[9, 0], &mut cache, &mut scratch, &[true, false]);
         assert_eq!(d2.row(0, 0), s2.row(0, 0), "resident row perturbed by admission");
+    }
+
+    #[test]
+    fn compacted_masked_forward_matches_solo_bitwise() {
+        // Compaction contract: a masked step gathers active rows into a
+        // dense batch, so each active row's logits must be bit-identical
+        // to its solo run, inactive rows' logits come back zero, and
+        // inactive rows' tokens are never read (placeholder 99 is outside
+        // the vocab of 16 — it must not trip token validation).
+        let ck = tiny();
+        let prompts: [[i32; 2]; 3] = [[3, 7], [5, 9], [2, 11]];
+        let mut cache = NativeKvCache::new(&ck.config, 3);
+        let grid: Vec<i32> = prompts.iter().flatten().copied().collect();
+        fwd(&ck, &FpLinears(&ck), &grid, 3, &mut cache).unwrap();
+        let mut solo = Vec::new();
+        for p in [0usize, 2] {
+            let mut c = NativeKvCache::new(&ck.config, 1);
+            fwd(&ck, &FpLinears(&ck), &prompts[p], 1, &mut c).unwrap();
+            solo.push(fwd(&ck, &FpLinears(&ck), &[6], 1, &mut c).unwrap());
+        }
+        let mut scratch = ForwardScratch::default();
+        let out = forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[6, 99, 6],
+            3,
+            &mut cache,
+            WorkerPool::serial(),
+            &mut scratch,
+            Some(&[true, false, true]),
+        )
+        .unwrap();
+        let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(out.row(0, 0)), bits(solo[0].row(0, 0)), "row 0 diverged from solo");
+        assert_eq!(bits(out.row(2, 0)), bits(solo[1].row(0, 0)), "row 2 diverged from solo");
+        assert!(out.row(1, 0).iter().all(|&v| v == 0.0), "inactive logits not zeroed");
+        assert_eq!(cache.row_len, vec![3, 2, 3]);
     }
 
     #[test]

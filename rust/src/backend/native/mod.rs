@@ -18,9 +18,12 @@
 //! Unlike the PJRT artifact runtime, shapes are fully dynamic: any
 //! `[batch, seq]` step within the context budget is accepted, so the
 //! scheduler pads only to the longest prompt in a batch.  The forward is
-//! also *row-maskable* (`supports_row_masking`): the continuous batching
-//! engine prefills a newly admitted slot while resident rows stay frozen,
-//! and empty/retired slots cost no attention work.
+//! also *row-maskable and compacting* (`supports_row_masking`): a masked
+//! step gathers active rows into a dense activation batch before the
+//! linears and scatters logits back by slot index, so the continuous
+//! batching engine prefills a newly admitted slot while resident rows
+//! stay frozen — and empty/retired slots cost nothing, neither attention
+//! work nor GEMM rows.
 //!
 //! Every forward fans its MatMuls (quantized linears, FP32 outlier GEMM,
 //! lm-head) out across a persistent [`crate::util::parallel::WorkerPool`]
@@ -122,7 +125,7 @@ impl NativeBackend {
     /// `QUIK_THREADS` env default; clamped to ≥ 1).  Width 1 is the
     /// exact serial path.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        let width = ExecConfig { threads: Some(threads) }.resolve_threads();
+        let width = ExecConfig { threads: Some(threads), ..Default::default() }.resolve_threads();
         self.pool = std::sync::OnceLock::from(WorkerPool::new(width));
         self
     }
@@ -326,12 +329,25 @@ impl InferenceBackend for NativeBackend {
         self.run_forward(variant, tokens, batch, cache, Some(active))
     }
 
-    /// The native forward honors row masks: inactive rows skip all
-    /// attention work and KV writes (see
+    /// The native forward honors row masks *and compacts*: active rows
+    /// are gathered into a dense activation batch before the linears, so
+    /// a masked step's GEMM cost scales with occupancy (see
     /// [`crate::backend::InferenceBackend::forward_masked`]), which is
     /// what qualifies this backend for the continuous batching engine.
     fn supports_row_masking(&self) -> bool {
         true
+    }
+
+    /// Incremental bytes of one more concurrent slot at full context,
+    /// from the byte-exact [`crate::memmodel`] accounting: the batch-1
+    /// minus batch-0 report difference, which cancels out the
+    /// batch-invariant terms (weights, outliers, embeddings) and leaves
+    /// the slot's KV-cache rows plus its activation-buffer share.
+    fn slot_bytes(&self) -> Option<u64> {
+        let spec = self.ckpt.config.to_spec();
+        let with = crate::memmodel::memory_report(&spec, &self.policy, 1, spec.max_seq);
+        let without = crate::memmodel::memory_report(&spec, &self.policy, 0, spec.max_seq);
+        Some((with.total() - without.total()).max(1.0) as u64)
     }
 }
 
@@ -423,6 +439,19 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn slot_bytes_reports_per_slot_increment() {
+        let b = backend();
+        let per = b.slot_bytes().unwrap();
+        // a demo slot costs its KV rows plus an activation share: small
+        // but decidedly nonzero, and far under the whole-model footprint
+        assert!(per > 1024, "per-slot bytes {per} implausibly small");
+        let spec = b.config().to_spec();
+        let whole =
+            crate::memmodel::memory_report(&spec, &demo_policy(), 1, spec.max_seq).total();
+        assert!((per as f64) < whole, "per-slot {per} not below whole-model {whole}");
     }
 
     #[test]

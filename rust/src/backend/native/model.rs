@@ -49,6 +49,24 @@ impl NativeConfig {
         self.n_kv_heads * self.d_head()
     }
 
+    /// The equivalent paper-scale [`crate::config::ModelSpec`] (this is a
+    /// LLaMA-family block by construction), connecting a native
+    /// checkpoint to the byte-exact [`crate::memmodel`] accounting — the
+    /// continuous engine uses it to autoscale slot counts against a
+    /// memory budget.
+    pub fn to_spec(&self) -> crate::config::ModelSpec {
+        crate::config::ModelSpec {
+            family: crate::config::Family::Llama,
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            n_kv_heads: self.n_kv_heads,
+            d_ff: self.d_ff,
+            vocab: self.vocab,
+            max_seq: self.max_seq,
+        }
+    }
+
     /// The demo/golden-test architecture: small enough that startup
     /// quantization and CI serving runs take milliseconds, large enough
     /// to exercise GQA, multi-layer residual flow and outlier selection.

@@ -132,23 +132,46 @@ pub fn spec(name: &str) -> Option<ModelSpec> {
     model_zoo().into_iter().find(|(n, _)| *n == name).map(|(_, s)| s)
 }
 
-/// Execution-resource configuration for the native backend's parallel
-/// subsystem: how wide the per-backend [`crate::util::parallel::WorkerPool`]
-/// is.  Parallel execution is bit-identical to serial at any width (the
-/// pool only partitions output index space), so this is purely a
-/// throughput knob.
+/// Execution-resource configuration for the native serving stack: how
+/// wide the per-backend [`crate::util::parallel::WorkerPool`] is, how
+/// many continuous-engine decode slots to run, and how large an
+/// admission-prefill chunk may be.  None of these change any stream's
+/// bits (parallel execution is bit-identical to serial at any width, and
+/// chunked prefill is bit-identical to one-shot prefill) — they are
+/// purely throughput/latency knobs.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ExecConfig {
     /// Explicit worker-pool width (total, including the calling thread).
     /// `None` resolves from the [`ExecConfig::ENV_THREADS`] environment
     /// override, falling back to the machine's available parallelism.
     pub threads: Option<usize>,
+    /// Explicit continuous-engine slot count.  `None` resolves from the
+    /// [`ExecConfig::ENV_SLOTS`] environment override; if that is unset
+    /// too, the engine autoscales slots against a KV/activation memory
+    /// budget (see `coordinator::engine::EngineConfig`).
+    pub slots: Option<usize>,
+    /// Explicit admission-prefill chunk size in tokens (`Some(0)` =
+    /// unchunked one-shot prefill).  `None` resolves from the
+    /// [`ExecConfig::ENV_PREFILL_CHUNK`] environment override, falling
+    /// back to unchunked.
+    pub prefill_chunk: Option<usize>,
 }
 
 impl ExecConfig {
     /// Environment override for the pool width (`QUIK_THREADS=4`); CI
     /// runs the test suite at 1 and 4 to keep both paths green.
     pub const ENV_THREADS: &'static str = "QUIK_THREADS";
+
+    /// Environment override for the continuous-engine slot count
+    /// (`QUIK_SLOTS=8`).  `0` or unparsable falls through to memory-budget
+    /// autoscaling.
+    pub const ENV_SLOTS: &'static str = "QUIK_SLOTS";
+
+    /// Environment override for the admission-prefill chunk size in
+    /// tokens (`QUIK_PREFILL_CHUNK=64`); `0` or unset means unchunked.
+    /// CI crosses a chunked leg into the engine matrix so chunk-boundary
+    /// determinism is exercised on every push.
+    pub const ENV_PREFILL_CHUNK: &'static str = "QUIK_PREFILL_CHUNK";
 
     /// Resolve the pool width: explicit setting, else `QUIK_THREADS`,
     /// else available parallelism; always ≥ 1 (an explicit 0 — setting
@@ -163,6 +186,35 @@ impl ExecConfig {
             }
         }
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Resolve the continuous-engine slot count: explicit setting, else
+    /// `QUIK_SLOTS`.  Returns `None` (meaning "autoscale against the
+    /// memory budget") when neither is set, or when either is 0.
+    pub fn resolve_slots(&self) -> Option<usize> {
+        if let Some(n) = self.slots {
+            return (n > 0).then_some(n);
+        }
+        if let Ok(v) = std::env::var(Self::ENV_SLOTS) {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return (n > 0).then_some(n);
+            }
+        }
+        None
+    }
+
+    /// Resolve the admission-prefill chunk size: explicit setting, else
+    /// `QUIK_PREFILL_CHUNK`, else 0 (unchunked).
+    pub fn resolve_prefill_chunk(&self) -> usize {
+        if let Some(n) = self.prefill_chunk {
+            return n;
+        }
+        if let Ok(v) = std::env::var(Self::ENV_PREFILL_CHUNK) {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n;
+            }
+        }
+        0
     }
 }
 
@@ -289,11 +341,32 @@ mod tests {
 
     #[test]
     fn exec_config_resolves_threads() {
-        assert_eq!(ExecConfig { threads: Some(3) }.resolve_threads(), 3);
+        assert_eq!(ExecConfig { threads: Some(3), ..Default::default() }.resolve_threads(), 3);
         // explicit zero clamps to the serial floor
-        assert_eq!(ExecConfig { threads: Some(0) }.resolve_threads(), 1);
+        assert_eq!(ExecConfig { threads: Some(0), ..Default::default() }.resolve_threads(), 1);
         // default resolves to *something* runnable regardless of env
         assert!(ExecConfig::default().resolve_threads() >= 1);
+    }
+
+    #[test]
+    fn exec_config_resolves_slots_and_prefill_chunk() {
+        // explicit settings win over everything
+        let c = ExecConfig { slots: Some(6), prefill_chunk: Some(32), ..Default::default() };
+        assert_eq!(c.resolve_slots(), Some(6));
+        assert_eq!(c.resolve_prefill_chunk(), 32);
+        // explicit 0 slots means "autoscale", explicit 0 chunk means
+        // "unchunked" — both are the documented sentinel, not a clamp
+        let z = ExecConfig { slots: Some(0), prefill_chunk: Some(0), ..Default::default() };
+        assert_eq!(z.resolve_slots(), None);
+        assert_eq!(z.resolve_prefill_chunk(), 0);
+        // defaults fall through to the env overrides; only assert the
+        // env-independent cases so a user-set QUIK_SLOTS can't flake this
+        if std::env::var(ExecConfig::ENV_SLOTS).is_err() {
+            assert_eq!(ExecConfig::default().resolve_slots(), None);
+        }
+        if std::env::var(ExecConfig::ENV_PREFILL_CHUNK).is_err() {
+            assert_eq!(ExecConfig::default().resolve_prefill_chunk(), 0);
+        }
     }
 
     #[test]

@@ -1,30 +1,49 @@
 //! Continuous batching engine: a fixed set of decode **slots** over one
-//! long-lived backend cache.
+//! long-lived backend cache, with compute that scales with *occupancy*.
 //!
 //! The static loop ([`crate::coordinator::scheduler::Scheduler`]) runs a
 //! formed batch to completion — one long decoder blocks every queued
 //! request, and freed rows burn decode steps on pad tokens.  QUIK's whole
 //! premise is that batched inference is compute-bound, so served
 //! throughput is decided by how *full* the batch dimension stays.  This
-//! engine keeps it full continuously:
+//! engine keeps it full continuously, and pays only for the rows that
+//! are actually live:
 //!
 //! ```text
-//! slot lifecycle:   admit ──▶ prefill ──▶ decode …… decode ──▶ retire
-//!                     ▲        (row-masked: residents frozen)     │
-//!                     └──────────── slot freed, cache row reset ◀─┘
+//! slot lifecycle:  admit ─▶ prefill (chunked) ─▶ decode …… ─▶ retire
+//!                    ▲        row-masked, residents frozen      │
+//!                    └────────── slot freed, cache row reset ◀──┘
+//!
+//! one engine step:  [prefill-advance] ─▶ [emit / retire] ─▶ [decode]
+//!                    one chunk per        pending token       one masked
+//!                    admitting slot       per live row        forward
+//!
+//! masked forward:   gather active rows ─▶ dense linears ─▶ scatter
+//!                   (slot-indexed)         [n_active × seq]   logits by
+//!                                          GEMMs + lm-head    slot index
 //! ```
 //!
-//! * **admit** — a queued request claims a free slot at a step boundary.
-//!   Its prompt is prefilled through a *row-masked* forward
-//!   ([`InferenceBackend::forward_masked`]): only the new row is active,
-//!   so every resident row keeps its KV cache, logical length and RoPE
-//!   positions untouched — a chunked-prefill step that cannot perturb a
-//!   neighbor.
-//! * **decode** — each step advances every resident slot by one token;
-//!   free slots ride along masked off at zero attention cost.  Tokens
-//!   are *streamed*: the slot's [`Event::Token`] goes out the moment the
-//!   step boundary emits it, with the next token chosen by the slot's
-//!   own seeded [`Sampler`] (greedy argmax at `temperature == 0`).
+//! * **admit** — a queued request claims a free slot at a step boundary;
+//!   nothing is computed yet.  Its prompt prefills across the *next*
+//!   engine steps in fixed-size **chunks** (`prefill_chunk` tokens per
+//!   step; `QUIK_PREFILL_CHUNK` / [`crate::config::ExecConfig`] — 0
+//!   means the whole prompt in one step).  Each chunk is a row-masked
+//!   forward ([`InferenceBackend::forward_masked`]) with only the new
+//!   row active, so every resident row keeps its KV cache, logical
+//!   length and RoPE positions untouched — and because chunking only
+//!   splits the same token sequence across calls against the same cache
+//!   rows, the admitted stream is bit-identical to a one-shot prefill.
+//!   A 2k-token prompt therefore cannot stall residents' inter-token
+//!   latency by more than one chunk's compute per step.
+//! * **decode** — each step advances every live resident slot by one
+//!   token through one masked forward.  The backend *compacts*: active
+//!   rows are gathered into a dense `[n_active, 1]` batch before the
+//!   linears and the logits scattered back by slot index, so a
+//!   half-empty engine pays half the GEMM cost — free and prefilling
+//!   slots cost nothing at all.  Tokens are *streamed*: the slot's
+//!   [`Event::Token`] goes out the moment the step boundary emits it,
+//!   with the next token chosen by the slot's own seeded [`Sampler`]
+//!   (greedy argmax at `temperature == 0`).
 //! * **retire** — a row leaves the engine the moment it hits its budget
 //!   **or** emits a stop/EOS token **or** its client cancels (handle
 //!   dropped / cancel verb): its [`Event::Done`] response is delivered
@@ -33,15 +52,23 @@
 //!   throughput feature — a stopped or abandoned row never burns decode
 //!   steps to budget.
 //!
+//! Slot count comes from [`EngineConfig`]: an explicit `--slots` /
+//! `QUIK_SLOTS` setting wins, otherwise the engine **autoscales** —
+//! divides a memory budget by the backend's per-slot byte estimate
+//! ([`InferenceBackend::slot_bytes`], KV rows + activation share from
+//! the `memmodel` accounting) and clamps to a sane range.
+//!
 //! The repo's signature invariant survives the inversion of control
 //! flow: rows are computationally independent and the row-masked forward
-//! freezes inactive rows bit-for-bit, so **every admitted request's
-//! token stream is bit-identical to its solo run** under any arrival
-//! schedule, at every thread count (pinned by
-//! `tests/engine_integration.rs`).  Sampled rows inherit it: the sampler
-//! is keyed only by the request's seed and consumes one draw per emitted
-//! token in emission order, so sampled streams replay exactly under any
-//! schedule, thread count or engine mode (`tests/generation_api.rs`).
+//! freezes inactive rows bit-for-bit (and compaction preserves every
+//! active row's bits — the kernels are row-independent), so **every
+//! admitted request's token stream is bit-identical to its solo run**
+//! under any arrival schedule, at every thread count and chunk size
+//! (pinned by `tests/engine_integration.rs`).  Sampled rows inherit it:
+//! the sampler is keyed only by the request's seed and consumes one draw
+//! per emitted token in emission order, so sampled streams replay
+//! exactly under any schedule, thread count or engine mode
+//! (`tests/generation_api.rs`).
 //!
 //! Requirements: the backend must answer `true` from
 //! [`InferenceBackend::supports_row_masking`] and its cache from
@@ -58,11 +85,72 @@ use super::metrics::Metrics;
 use super::request::{Event, FinishReason, Request, RequestId, Response};
 use super::sampler::Sampler;
 use crate::backend::{InferenceBackend, KvCache, Phase, Variant};
+use crate::config::ExecConfig;
 
 /// Environment override for the serving loop (`QUIK_ENGINE=continuous`
 /// or `QUIK_ENGINE=static`), consulted when the coordinator is started
 /// with [`EngineMode::Auto`].  CI crosses this with `QUIK_THREADS`.
 pub const ENGINE_ENV: &str = "QUIK_ENGINE";
+
+/// Memory budget the slot autoscaler divides by the backend's per-slot
+/// byte estimate when nothing pins the slot count explicitly (512 MiB —
+/// generous for the demo models, deliberately conservative for
+/// paper-scale specs whose KV rows run to tens of MB).
+pub const DEFAULT_SLOT_MEM_BUDGET: u64 = 512 << 20;
+
+/// Ceiling on autoscaled slot counts: beyond ~16 concurrent rows the
+/// demo-scale models are deep into diminishing returns and the per-step
+/// scatter/bookkeeping overhead starts to show.  Explicit `--slots` /
+/// `QUIK_SLOTS` settings are *not* clamped by this.
+pub const MAX_AUTO_SLOTS: usize = 16;
+
+/// How the serving layer sizes and paces a [`ContinuousEngine`]:
+/// explicit slot/chunk settings (CLI flags or [`ExecConfig`] env
+/// overrides) with memory-budget autoscaling as the slots fallback.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Explicit slot count (`--slots`).  `None` falls through to the
+    /// `QUIK_SLOTS` env override, then to memory-budget autoscaling.
+    pub slots: Option<usize>,
+    /// Explicit admission-prefill chunk (`--prefill-chunk`; 0 =
+    /// unchunked).  `None` falls through to `QUIK_PREFILL_CHUNK`, then
+    /// to unchunked.
+    pub prefill_chunk: Option<usize>,
+    /// Memory budget for slot autoscaling.  `None` uses
+    /// [`DEFAULT_SLOT_MEM_BUDGET`].
+    pub mem_budget_bytes: Option<u64>,
+}
+
+impl EngineConfig {
+    /// Resolve the slot count against `backend`: explicit setting, else
+    /// `QUIK_SLOTS`, else the memory budget divided by the backend's
+    /// [`InferenceBackend::slot_bytes`] estimate, clamped to
+    /// `[floor, MAX_AUTO_SLOTS]`.  `floor` is the workload's minimum
+    /// useful width (e.g. the largest configured batch size); backends
+    /// that cannot estimate a per-slot cost get exactly `floor`.
+    pub fn resolve_slots<B: InferenceBackend>(&self, backend: &B, floor: usize) -> usize {
+        let floor = floor.max(1);
+        if let Some(n) = self.slots.filter(|&n| n > 0).or_else(|| {
+            ExecConfig::default().resolve_slots()
+        }) {
+            return n;
+        }
+        let budget = self.mem_budget_bytes.unwrap_or(DEFAULT_SLOT_MEM_BUDGET);
+        match backend.slot_bytes() {
+            Some(per) if per > 0 => {
+                ((budget / per) as usize).clamp(floor, MAX_AUTO_SLOTS.max(floor))
+            }
+            _ => floor,
+        }
+    }
+
+    /// Resolve the admission-prefill chunk: explicit setting, else the
+    /// `QUIK_PREFILL_CHUNK` env override, else 0 (unchunked).
+    pub fn resolve_prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+            .unwrap_or_else(|| ExecConfig::default().resolve_prefill_chunk())
+    }
+}
 
 /// Which serving loop the coordinator worker drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -89,15 +177,20 @@ impl EngineMode {
     }
 }
 
-/// One resident request: its decode state between engine steps.
+/// One resident request: its prefill/decode state between engine steps.
 struct Slot {
     req: Request,
     /// Tokens this row may still generate (clipped by its own remaining
     /// context, exactly like a solo run).
     budget: usize,
     generated: Vec<i32>,
-    /// Sampled but not yet emitted token (fed to the next decode step).
-    next: i32,
+    /// Prompt tokens already prefilled into the cache row.  Admission
+    /// defers all prefill work to the step loop, which advances this by
+    /// one chunk per step until the whole prompt is resident.
+    prefilled: usize,
+    /// Sampled but not yet emitted token (fed to the next decode step);
+    /// `None` while the slot is still prefilling its prompt.
+    next: Option<i32>,
     /// Per-request seeded sampler (greedy argmax at temperature 0).
     sampler: Sampler,
     /// The client's event stream.  A failed send means the handle was
@@ -123,6 +216,11 @@ pub struct ContinuousEngine<B: InferenceBackend> {
     n_slots: usize,
     pad_token: i32,
     max_ctx: usize,
+    /// Admission-prefill chunk size in tokens; 0 = the whole prompt in
+    /// one step.  Defaults from `QUIK_PREFILL_CHUNK`
+    /// ([`ExecConfig::resolve_prefill_chunk`]); override with
+    /// [`ContinuousEngine::with_prefill_chunk`].
+    prefill_chunk: usize,
     cache: B::Cache,
     slots: Vec<Option<Slot>>,
     /// Reused per-step buffers (decode runs once per generated token).
@@ -165,11 +263,25 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             n_slots,
             pad_token: 0,
             max_ctx: backend.max_context(),
+            prefill_chunk: ExecConfig::default().resolve_prefill_chunk(),
             cache,
             slots: (0..n_slots).map(|_| None).collect(),
             tokens_buf: Vec::new(),
             active_buf: Vec::new(),
         })
+    }
+
+    /// Builder override for the admission-prefill chunk size (beats the
+    /// `QUIK_PREFILL_CHUNK` env default); 0 = unchunked.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.prefill_chunk = chunk;
+        self
+    }
+
+    /// The admission-prefill chunk size this engine paces prompts at
+    /// (0 = whole prompt in one step).
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
     }
 
     /// Total decode slots.
@@ -186,15 +298,17 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         self.slots.iter().any(|s| s.is_none())
     }
 
-    /// Admit one request into a free slot: a row-masked prefill of its
-    /// prompt while every resident row stays frozen.  `tx` is the
-    /// client's event stream — it receives every [`Event::Token`] and
-    /// the final [`Event::Done`].  Returns the slot row.  The caller
-    /// must have validated the request (non-empty prompt, in-vocab
-    /// tokens, prompt within the context budget, valid params) and
-    /// checked [`ContinuousEngine::has_free_slot`]; an error here means
-    /// the request cannot be served (its event channel should be
-    /// dropped).
+    /// Admit one request into a free slot.  Admission only *registers*
+    /// the request — no forward runs here: the prompt prefills across
+    /// the following [`ContinuousEngine::step`] calls, one
+    /// `prefill_chunk`-token row-masked chunk per step, while every
+    /// resident row stays frozen.  `tx` is the client's event stream —
+    /// it receives every [`Event::Token`] and the final [`Event::Done`].
+    /// Returns the slot row.  The caller must have validated the request
+    /// (non-empty prompt, in-vocab tokens, prompt within the context
+    /// budget, valid params) and checked
+    /// [`ContinuousEngine::has_free_slot`]; an error here means the
+    /// request cannot be served (its event channel should be dropped).
     pub fn admit(&mut self, backend: &mut B, req: Request, tx: Sender<Event>) -> Result<usize> {
         let row = self
             .slots
@@ -205,91 +319,175 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         if prompt_len == 0 {
             bail!("empty prompt");
         }
-        let seq = backend.step_seq(self.variant, Phase::Prefill, self.n_slots, prompt_len)?;
-        if prompt_len > seq {
-            bail!("prompt length {prompt_len} exceeds prefill step {seq}");
+        // Negotiate the widest prefill call this prompt will need (its
+        // first chunk) so an unservable prompt is rejected here, at
+        // admission, not steps later inside the engine loop.
+        let first = if self.prefill_chunk == 0 {
+            prompt_len
+        } else {
+            prompt_len.min(self.prefill_chunk)
+        };
+        let seq = backend.step_seq(self.variant, Phase::Prefill, self.n_slots, first)?;
+        if first > seq {
+            bail!("prefill chunk {first} exceeds prefill step {seq}");
+        }
+        if prompt_len > self.max_ctx {
+            bail!("prompt length {prompt_len} exceeds context {}", self.max_ctx);
         }
         // The same per-row clip a solo run gets: this row's own prompt,
         // never a batch-max.
         let budget = req.params.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
-        let admitted = Instant::now();
         self.cache.reset_row(row);
-        // [n_slots, prompt_len] token grid: the new row carries the
-        // prompt, every other row a placeholder pad column.  Only the
-        // new row is active, so residents neither attend, nor write KV,
-        // nor advance.
-        let mut tokens = vec![self.pad_token; self.n_slots * prompt_len];
-        tokens[row * prompt_len..(row + 1) * prompt_len].copy_from_slice(&req.prompt);
-        let mut active = vec![false; self.n_slots];
-        active[row] = true;
-        let out = backend.forward_masked(
-            self.variant,
-            Phase::Prefill,
-            &tokens,
-            self.n_slots,
-            &mut self.cache,
-            &active,
-        )?;
-        let mut sampler = Sampler::new(&req.params);
-        let next = sampler.sample(out.row(row, prompt_len - 1));
-        let prefill_time = admitted.elapsed();
         let now = Instant::now();
+        let sampler = Sampler::new(&req.params);
         self.slots[row] = Some(Slot {
-            ttft: req.arrival.elapsed(),
             req,
             budget,
             generated: Vec::new(),
-            next,
+            prefilled: 0,
+            next: None,
             sampler,
             tx,
-            admitted,
-            prefill_time,
+            admitted: now,
+            prefill_time: Duration::ZERO,
             decode_start: now,
             last_emit: now,
+            ttft: Duration::ZERO,
         });
         Ok(row)
     }
 
-    /// One engine step: emit every resident row's pending token to its
-    /// event stream, retire rows that finished — budget exhausted, stop
-    /// token / EOS emitted, or client gone (failed event send) — freeing
-    /// their slot, resetting the cache row, delivering [`Event::Done`]
-    /// and folding the retirement into `metrics`; then run one
-    /// row-masked decode forward for the rows still resident and sample
-    /// each row's next token.  Returns the responses retired by this
-    /// step (already delivered to their streams).
+    /// Advance one admitting slot's prefill by a single chunk: a
+    /// row-masked forward of the next `prefill_chunk` prompt tokens
+    /// (everything at once when unchunked) with only this row active.
+    /// Chunking splits the same token sequence across calls against the
+    /// same cache row, so the resulting KV state — and therefore the
+    /// stream — is bit-identical to a one-shot prefill
+    /// (`multi_token_step_equals_sequential_steps` is the kernel-level
+    /// pin).  On the final chunk the slot samples its first token and
+    /// becomes a live decoder.
+    fn prefill_chunk_step(
+        &mut self,
+        backend: &mut B,
+        row: usize,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        let (start, end, prompt_len) = {
+            let slot = self.slots[row].as_ref().expect("prefilling slot resident");
+            let prompt_len = slot.req.prompt.len();
+            let remaining = prompt_len - slot.prefilled;
+            let take = if self.prefill_chunk == 0 {
+                remaining
+            } else {
+                remaining.min(self.prefill_chunk)
+            };
+            (slot.prefilled, slot.prefilled + take, prompt_len)
+        };
+        let seq = end - start;
+        // [n_slots, seq] token grid: this row carries its chunk, every
+        // other row placeholder pad columns (never read by a compacting
+        // backend).  Only this row is active, so residents neither
+        // attend, nor write KV, nor advance.
+        self.tokens_buf.clear();
+        self.tokens_buf.resize(self.n_slots * seq, self.pad_token);
+        {
+            let slot = self.slots[row].as_ref().expect("prefilling slot resident");
+            self.tokens_buf[row * seq..(row + 1) * seq]
+                .copy_from_slice(&slot.req.prompt[start..end]);
+        }
+        self.active_buf.clear();
+        self.active_buf.resize(self.n_slots, false);
+        self.active_buf[row] = true;
+        let out = backend.forward_masked(
+            self.variant,
+            Phase::Prefill,
+            &self.tokens_buf,
+            self.n_slots,
+            &mut self.cache,
+            &self.active_buf,
+        )?;
+        metrics.prefill_chunks += 1;
+        if start == 0 && end < prompt_len {
+            metrics.chunked_admissions += 1;
+        }
+        let slot = self.slots[row].as_mut().expect("prefilling slot resident");
+        slot.prefilled = end;
+        if end == prompt_len {
+            // prompt fully resident: sample the first token and start
+            // the decode clock (the sampler is keyed only by the
+            // request's seed and this is its first draw, so the token is
+            // identical to a solo run's)
+            slot.next = Some(slot.sampler.sample(out.row(row, seq - 1)));
+            slot.prefill_time = slot.admitted.elapsed();
+            slot.ttft = slot.req.arrival.elapsed();
+            let now = Instant::now();
+            slot.decode_start = now;
+            slot.last_emit = now;
+        }
+        Ok(())
+    }
+
+    /// One engine step, in three phases:
+    ///
+    /// 1. **prefill-advance** — every admitting slot (prompt not yet
+    ///    fully resident) runs one row-masked prefill chunk; a slot that
+    ///    finishes samples its first token and joins the decoders.
+    /// 2. **emit / retire** — every live row's pending token goes out to
+    ///    its event stream; rows that finished — budget exhausted, stop
+    ///    token / EOS emitted, or client gone (failed event send) —
+    ///    retire: slot freed, cache row reset, [`Event::Done`]
+    ///    delivered, retirement folded into `metrics`.
+    /// 3. **decode** — one row-masked (compacted) forward for the rows
+    ///    still live, sampling each row's next token.
+    ///
+    /// Returns the responses retired by this step (already delivered to
+    /// their streams).
     pub fn step(&mut self, backend: &mut B, metrics: &mut Metrics) -> Result<Vec<Response>> {
+        // ---- phase 1: advance admission prefills, one chunk each ----
+        for row in 0..self.n_slots {
+            let prefilling =
+                matches!(&self.slots[row], Some(slot) if slot.next.is_none());
+            if prefilling {
+                self.prefill_chunk_step(backend, row, metrics)?;
+            }
+        }
+
+        // ---- phase 2: emit pending tokens, retire finished rows ----
         let mut done = Vec::new();
         for row in 0..self.n_slots {
             let finish = match &mut self.slots[row] {
-                Some(slot) => {
-                    if slot.generated.len() < slot.budget {
-                        let token = slot.next;
-                        let index = slot.generated.len();
-                        slot.generated.push(token);
-                        if slot.tx.send(Event::Token { token, index }).is_err() {
-                            // Receiver dropped: the client cancelled.
-                            // No ITL sample — nobody received this token.
-                            Some(FinishReason::Cancelled)
-                        } else {
-                            let now = Instant::now();
-                            metrics.record_itl(now.duration_since(slot.last_emit));
-                            slot.last_emit = now;
-                            let stop_hit = FinishReason::stop_match(&slot.req.params, token);
-                            if stop_hit.is_some() {
-                                stop_hit
-                            } else if slot.generated.len() >= slot.budget {
-                                Some(FinishReason::Length)
+                Some(slot) => match slot.next {
+                    // Still prefilling (chunked admission): nothing to
+                    // emit yet; residents around it keep streaming.
+                    None => None,
+                    Some(token) => {
+                        if slot.generated.len() < slot.budget {
+                            let index = slot.generated.len();
+                            slot.generated.push(token);
+                            if slot.tx.send(Event::Token { token, index }).is_err() {
+                                // Receiver dropped: the client cancelled.
+                                // No ITL sample — nobody received this token.
+                                Some(FinishReason::Cancelled)
                             } else {
-                                None
+                                let now = Instant::now();
+                                metrics.record_itl(now.duration_since(slot.last_emit));
+                                slot.last_emit = now;
+                                let stop_hit = FinishReason::stop_match(&slot.req.params, token);
+                                if stop_hit.is_some() {
+                                    stop_hit
+                                } else if slot.generated.len() >= slot.budget {
+                                    Some(FinishReason::Length)
+                                } else {
+                                    None
+                                }
                             }
+                        } else {
+                            // Zero-budget admission: retires with an
+                            // empty stream as soon as its prefill lands.
+                            Some(FinishReason::Length)
                         }
-                    } else {
-                        // Zero-budget admission: retires with an empty
-                        // stream on its first step.
-                        Some(FinishReason::Length)
                     }
-                }
+                },
                 None => None,
             };
             if let Some(reason) = finish {
@@ -297,19 +495,23 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             }
         }
 
+        // ---- phase 3: one compacted decode forward for the live rows ----
         self.tokens_buf.clear();
         self.tokens_buf.resize(self.n_slots, self.pad_token);
         self.active_buf.clear();
         self.active_buf.resize(self.n_slots, false);
-        let mut any = false;
+        let mut n_active = 0usize;
         for (row, s) in self.slots.iter().enumerate() {
             if let Some(slot) = s {
-                self.tokens_buf[row] = slot.next;
-                self.active_buf[row] = true;
-                any = true;
+                if let Some(next) = slot.next {
+                    self.tokens_buf[row] = next;
+                    self.active_buf[row] = true;
+                    n_active += 1;
+                }
             }
         }
-        if any {
+        if n_active > 0 {
+            metrics.record_active_width(n_active);
             let out = backend.forward_masked(
                 self.variant,
                 Phase::Decode,
@@ -320,7 +522,9 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             )?;
             for (row, s) in self.slots.iter_mut().enumerate() {
                 if let Some(slot) = s {
-                    slot.next = slot.sampler.sample(out.row(row, 0));
+                    if slot.next.is_some() {
+                        slot.next = Some(slot.sampler.sample(out.row(row, 0)));
+                    }
                 }
             }
         }
@@ -364,11 +568,12 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
     }
 
     /// Run steps until every resident row retires (shutdown drain).
-    /// Bounded by the context budget — each row finishes within its
-    /// remaining decode budget, which can never exceed `max_ctx`.
+    /// Bounded by the context budget — each row prefills within its
+    /// prompt length's worth of chunk steps and finishes within its
+    /// remaining decode budget, and neither can exceed `max_ctx`.
     pub fn drain(&mut self, backend: &mut B, metrics: &mut Metrics) -> Result<Vec<Response>> {
         let mut done = Vec::new();
-        for _ in 0..=self.max_ctx + 1 {
+        for _ in 0..=2 * self.max_ctx + 2 {
             if self.resident() == 0 {
                 return Ok(done);
             }
@@ -701,6 +906,69 @@ mod tests {
         let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();
         assert_eq!(by_id(0).generated.len(), 10);
         assert_eq!(by_id(1).generated.len(), 3);
+    }
+
+    #[test]
+    fn engine_config_resolves_slots_against_memory_budget() {
+        let b = backend();
+        // an explicit setting wins and is never clamped by the autoscaler
+        let explicit = EngineConfig { slots: Some(3), ..Default::default() };
+        assert_eq!(explicit.resolve_slots(&b, 1), 3);
+        let wide = EngineConfig { slots: Some(MAX_AUTO_SLOTS + 8), ..Default::default() };
+        assert_eq!(wide.resolve_slots(&b, 1), MAX_AUTO_SLOTS + 8);
+        // autoscaled answers divide the budget by the backend's per-slot
+        // estimate; only assert when no user QUIK_SLOTS override can
+        // preempt the fallback chain
+        if std::env::var(ExecConfig::ENV_SLOTS).is_err() {
+            let per = b.slot_bytes().expect("native backend estimates slot bytes");
+            let four = EngineConfig { mem_budget_bytes: Some(4 * per), ..Default::default() };
+            assert_eq!(four.resolve_slots(&b, 1), 4);
+            let tiny = EngineConfig { mem_budget_bytes: Some(1), ..Default::default() };
+            assert_eq!(tiny.resolve_slots(&b, 2), 2, "floor binds under a starved budget");
+            let vast = EngineConfig { mem_budget_bytes: Some(u64::MAX), ..Default::default() };
+            assert_eq!(vast.resolve_slots(&b, 1), MAX_AUTO_SLOTS, "autoscale ceiling binds");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_and_streams_nothing_early() {
+        let mut b = backend();
+        let mut m = Metrics::default();
+        let p = prompt(4, 20);
+        // unchunked oracle stream
+        let mut probe =
+            ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap().with_prefill_chunk(0);
+        let _rx = admit(&mut probe, &mut b, Request::new(0, p.clone(), 6));
+        let oracle = probe.drain(&mut b, &mut m).unwrap().remove(0);
+        // 20 prompt tokens at chunk 7: two pure prefill steps, the third
+        // completes the prompt and emits the first token
+        let mut m2 = Metrics::default();
+        let mut engine =
+            ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap().with_prefill_chunk(7);
+        assert_eq!(engine.prefill_chunk(), 7);
+        let rx = admit(&mut engine, &mut b, Request::new(1, p, 6));
+        for _ in 0..2 {
+            assert!(engine.step(&mut b, &mut m2).unwrap().is_empty());
+            assert!(rx.try_recv().is_err(), "no token may be emitted mid-prefill");
+        }
+        let done = run_until(&mut engine, &mut b, &mut m2, 1);
+        assert_eq!(done[0].generated, oracle.generated, "chunked prefill changed the stream");
+        assert_eq!(m2.chunked_admissions, 1);
+        assert_eq!(m2.prefill_chunks, 3, "20 tokens at chunk 7 is 3 chunks");
+    }
+
+    #[test]
+    fn chunked_admission_still_rejects_oversized_prompts() {
+        // The one-shot path rejected oversized prompts via the prefill
+        // step negotiation; with chunking the first chunk always fits,
+        // so the context check must catch it at admission instead.
+        let mut b = backend();
+        let max = b.config().max_seq;
+        let mut engine =
+            ContinuousEngine::new(&mut b, Variant::Fp16, 1).unwrap().with_prefill_chunk(8);
+        let (tx, _rx) = mpsc::channel();
+        assert!(engine.admit(&mut b, Request::new(0, prompt(0, max + 1), 1), tx).is_err());
+        assert!(engine.has_free_slot(), "failed admission must not leak a slot");
     }
 
     #[test]

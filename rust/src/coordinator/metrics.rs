@@ -5,6 +5,12 @@
 //! [`Metrics::step_occupancy`] is the continuous engine's per-decode-step
 //! slot utilization (resident rows / total slots, sampled every step) —
 //! the number QUIK's compute-bound batching argument cares about.
+//! [`Metrics::active_width`] refines the latter for the compacting
+//! engine: the *actually decoded* batch width per step (resident rows
+//! that are live decoders, excluding slots still chunk-prefilling), i.e.
+//! the dense GEMM width each step really paid for.  Chunked admission is
+//! observable through [`Metrics::prefill_chunks`] /
+//! [`Metrics::chunked_admissions`].
 //! Time-to-first-token is tracked per request in [`Metrics::ttft_time`],
 //! inter-token latency per emitted token in [`Metrics::itl_time`], and
 //! the v2 early-retire paths (stop token / EOS / cancellation — each of
@@ -73,6 +79,63 @@ impl Histogram {
     }
 }
 
+/// Exact small-integer histogram for per-step batch widths.
+///
+/// Widths are tiny (bounded by the slot count), so buckets are exact —
+/// `counts[w]` is the number of steps that decoded exactly `w` rows —
+/// and quantiles are exact rather than bucket-edge approximations.
+#[derive(Debug, Default, Clone)]
+pub struct WidthHistogram {
+    counts: Vec<u64>, // counts[w] = steps that decoded exactly w rows
+    total: u64,
+    sum: u64,
+    max: usize,
+}
+
+impl WidthHistogram {
+    pub fn record(&mut self, w: usize) {
+        if self.counts.len() <= w {
+            self.counts.resize(w + 1, 0);
+        }
+        self.counts[w] += 1;
+        self.total += 1;
+        self.sum += w as u64;
+        self.max = self.max.max(w);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn max(&self) -> usize {
+        self.max
+    }
+
+    /// Exact quantile: the smallest width `w` such that at least
+    /// `q * count` recorded steps had width `<= w`.
+    pub fn quantile(&self, q: f64) -> usize {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (w, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return w;
+            }
+        }
+        self.max
+    }
+}
+
 /// All serving-path metrics (owned by the coordinator worker thread).
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
@@ -95,6 +158,18 @@ pub struct Metrics {
     pub occupied_slot_steps: u64,
     /// Sum over engine steps of the total slot count.
     pub slot_steps: u64,
+    /// Width of the *compacted* decode batch per engine step: how many
+    /// rows the step's dense GEMMs actually computed.  Differs from
+    /// step occupancy when slots are still chunk-prefilling (resident
+    /// but not yet decoding) — and from the slot count whenever the
+    /// engine runs below full occupancy.  Steps with zero live decoders
+    /// (pure prefill steps) record nothing.
+    pub active_width: WidthHistogram,
+    /// Chunked-prefill forward calls executed (one per admitted chunk;
+    /// an unchunked admission prefills in a single "chunk" and counts 1).
+    pub prefill_chunks: u64,
+    /// Admissions whose prompt needed more than one prefill chunk.
+    pub chunked_admissions: u64,
     pub queue_time: Histogram,
     pub prefill_time: Histogram,
     pub decode_time: Histogram,
@@ -162,6 +237,12 @@ impl Metrics {
         self.itl_time.record(gap);
     }
 
+    /// Record the compacted decode width of one engine step (rows the
+    /// step's GEMMs actually computed).
+    pub fn record_active_width(&mut self, w: usize) {
+        self.active_width.record(w);
+    }
+
     /// Mean batch occupancy (1.0 = no padding waste).
     pub fn occupancy(&self) -> f64 {
         if self.batches == 0 {
@@ -189,10 +270,21 @@ impl Metrics {
         } else {
             format!("{:.2}", self.step_occupancy())
         };
+        let width = if self.active_width.count() == 0 {
+            "n/a".to_string()
+        } else {
+            format!(
+                "mean={:.2} p50={} max={}",
+                self.active_width.mean(),
+                self.active_width.quantile(0.5),
+                self.active_width.max(),
+            )
+        };
         format!(
             "requests={} rejected={} stop_hits={} eos_hits={} cancelled={} \
              prompt_toks={} gen_toks={} batches={} occupancy={:.2}\n\
-             engine_steps={} step_occupancy={step_occ}\n\
+             engine_steps={} step_occupancy={step_occ} active_width {width}\n\
+             prefill_chunks={} chunked_admissions={}\n\
              queue   mean={:?} p50={:?} p99={:?}\n\
              prefill mean={:?} p50={:?} p99={:?}\n\
              decode  mean={:?} p50={:?} p99={:?}\n\
@@ -209,6 +301,8 @@ impl Metrics {
             self.batches,
             self.occupancy(),
             self.engine_steps,
+            self.prefill_chunks,
+            self.chunked_admissions,
             self.queue_time.mean(),
             self.queue_time.quantile(0.5),
             self.queue_time.quantile(0.99),
@@ -253,8 +347,15 @@ impl Metrics {
         } else {
             format!("{:.4}", self.step_occupancy())
         };
+        let width = format!(
+            "{{\"count\":{},\"mean\":{:.3},\"p50\":{},\"max\":{}}}",
+            self.active_width.count(),
+            self.active_width.mean(),
+            self.active_width.quantile(0.5),
+            self.active_width.max(),
+        );
         format!(
-            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
+            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"active_width\":{width},\"prefill_chunks\":{},\"chunked_admissions\":{},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
             self.requests_completed,
             self.rejected,
             self.stop_hits,
@@ -265,6 +366,8 @@ impl Metrics {
             self.batches,
             self.occupancy(),
             self.engine_steps,
+            self.prefill_chunks,
+            self.chunked_admissions,
             hist(&self.queue_time),
             hist(&self.prefill_time),
             hist(&self.decode_time),
@@ -358,6 +461,39 @@ mod tests {
         assert_eq!(m.e2e_time.count(), 3, "cancelled timings stay out of the histograms");
         m.record_itl(Duration::from_micros(50));
         assert_eq!(m.itl_time.count(), 1);
+    }
+
+    #[test]
+    fn width_histogram_is_exact() {
+        let mut w = WidthHistogram::default();
+        assert_eq!(w.quantile(0.5), 0);
+        for width in [1usize, 1, 4, 8] {
+            w.record(width);
+        }
+        assert_eq!(w.count(), 4);
+        assert!((w.mean() - 3.5).abs() < 1e-9);
+        assert_eq!(w.quantile(0.5), 1, "half the steps decoded exactly 1 row");
+        assert_eq!(w.quantile(1.0), 8);
+        assert_eq!(w.max(), 8);
+    }
+
+    #[test]
+    fn active_width_and_chunk_counters_surface_in_both_reports() {
+        let mut m = Metrics::default();
+        assert!(m.report().contains("active_width n/a"));
+        m.record_active_width(2);
+        m.record_active_width(4);
+        m.prefill_chunks = 3;
+        m.chunked_admissions = 1;
+        let r = m.report();
+        assert!(r.contains("active_width mean=3.00"));
+        assert!(r.contains("prefill_chunks=3 chunked_admissions=1"));
+        let v = crate::util::json::parse(&m.to_json()).expect("metrics JSON must parse");
+        let aw = v.get("active_width").unwrap();
+        assert_eq!(aw.get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(aw.get("max").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("prefill_chunks").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("chunked_admissions").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -35,12 +35,18 @@
 //!
 //! The slot lifecycle is **admit → prefill → decode → retire**: a queued
 //! request claims a free slot at any step boundary (no waiting for the
-//! resident batch to finish), its prompt prefills through a row-masked
-//! forward that leaves every resident row frozen bit-for-bit, it decodes
-//! at its own per-row cache positions with its own seeded
-//! [`sampler::Sampler`], and it retires the moment it hits its budget,
-//! emits a stop/EOS token, or loses its client — early retirement frees
-//! the slot immediately instead of burning decode steps to budget.
+//! resident batch to finish), its prompt prefills through row-masked
+//! forwards — in bounded chunks when `QUIK_PREFILL_CHUNK`/`--prefill-chunk`
+//! is set, so a long prompt stalls residents by at most one chunk — that
+//! leave every resident row frozen bit-for-bit, it decodes at its own
+//! per-row cache positions with its own seeded [`sampler::Sampler`], and
+//! it retires the moment it hits its budget, emits a stop/EOS token, or
+//! loses its client — early retirement frees the slot immediately
+//! instead of burning decode steps to budget.  Each decode step gathers
+//! only the live rows into a dense compacted batch, so step compute
+//! scales with occupancy rather than slot count; the slot count itself
+//! comes from `QUIK_SLOTS`/`--slots` or is autoscaled against a memory
+//! budget ([`engine::EngineConfig`]).
 //! Every stream stays bit-identical to its solo run under any arrival
 //! schedule, thread count and engine mode — greedy *and* sampled, since
 //! the sampler is keyed only by the request's seed
@@ -72,7 +78,7 @@ pub mod speculative;
 pub mod tcp;
 
 pub use batcher::{BatchPlan, DynamicBatcher};
-pub use engine::{ContinuousEngine, EngineMode};
+pub use engine::{ContinuousEngine, EngineConfig, EngineMode};
 pub use metrics::Metrics;
 pub use request::{
     Event, FinishReason, GenerationRequest, Request, RequestId, Response, StreamHandle,

@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
-use super::engine::{ContinuousEngine, EngineMode, ENGINE_ENV};
+use super::engine::{ContinuousEngine, EngineConfig, EngineMode, ENGINE_ENV};
 use super::metrics::Metrics;
 use super::request::{
     Event, FinishReason, GenerationParams, GenerationRequest, Request, RequestId, Response,
@@ -94,12 +94,33 @@ impl Coordinator {
         B: InferenceBackend,
         F: FnOnce() -> Result<B> + Send + 'static,
     {
+        Self::start_with_engine(factory, variant, batcher_cfg, mode, EngineConfig::default())
+    }
+
+    /// [`Coordinator::start_with_mode`] with explicit continuous-engine
+    /// tuning: slot count (or memory-budget autoscaling when unset, see
+    /// [`EngineConfig::resolve_slots`]) and the admission prefill chunk
+    /// length.  Unset fields fall back to the `QUIK_SLOTS` /
+    /// `QUIK_PREFILL_CHUNK` environment, then to autoscale / unchunked.
+    pub fn start_with_engine<B, F>(
+        factory: F,
+        variant: Variant,
+        batcher_cfg: BatcherConfig,
+        mode: EngineMode,
+        engine_cfg: EngineConfig,
+    ) -> Result<Self>
+    where
+        B: InferenceBackend,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
 
         let worker = std::thread::Builder::new()
             .name("quik-coordinator".into())
-            .spawn(move || worker_main(factory, variant, batcher_cfg, mode, rx, ready_tx))
+            .spawn(move || {
+                worker_main(factory, variant, batcher_cfg, mode, engine_cfg, rx, ready_tx)
+            })
             .context("spawning coordinator worker")?;
 
         let (vocab, prefill_seq, max_context) = ready_rx
@@ -126,11 +147,32 @@ impl Coordinator {
         batcher_cfg: BatcherConfig,
         mode: EngineMode,
     ) -> Result<Self> {
-        Self::start_with_mode(
+        Self::start_native_with_engine(
+            ckpt,
+            policy,
+            variant,
+            batcher_cfg,
+            mode,
+            EngineConfig::default(),
+        )
+    }
+
+    /// [`Coordinator::start_native_with_mode`] with explicit
+    /// continuous-engine tuning (slots / prefill chunk / memory budget).
+    pub fn start_native_with_engine(
+        ckpt: NativeCheckpoint,
+        policy: QuikPolicy,
+        variant: Variant,
+        batcher_cfg: BatcherConfig,
+        mode: EngineMode,
+        engine_cfg: EngineConfig,
+    ) -> Result<Self> {
+        Self::start_with_engine(
             move || NativeBackend::new("native", ckpt, policy),
             variant,
             batcher_cfg,
             mode,
+            engine_cfg,
         )
     }
 
@@ -210,6 +252,7 @@ fn worker_main<B, F>(
     variant: Variant,
     batcher_cfg: BatcherConfig,
     mode: EngineMode,
+    engine_cfg: EngineConfig,
     rx: Receiver<Msg>,
     ready_tx: Sender<Result<(usize, usize, usize)>>,
 ) -> Result<()>
@@ -242,9 +285,13 @@ where
 
     // Resolve the serving loop before reporting readiness, so a forced
     // `Continuous` on an incapable backend fails `start()` loudly.
-    // The continuous engine's slot count is the largest configured
-    // batch size — the same compute envelope the static loop pads to.
-    let n_slots = sizes.iter().copied().max().unwrap_or(1);
+    // The continuous engine's slot count comes from the engine config
+    // (explicit / `QUIK_SLOTS` / memory-budget autoscale); the workload
+    // floor is the largest configured batch size — the compute envelope
+    // the static loop pads to — so an autoscaled engine never offers
+    // fewer slots than the static loop would.
+    let floor = sizes.iter().copied().max().unwrap_or(1);
+    let n_slots = engine_cfg.resolve_slots(&backend, floor);
     // `QUIK_ENGINE=continuous` is as binding as an explicit
     // `EngineMode::Continuous`: if the backend cannot run the engine,
     // startup fails loudly instead of silently green-washing a CI leg
@@ -262,7 +309,7 @@ where
     };
     let engine = if want_continuous {
         match ContinuousEngine::new(&mut backend, variant, n_slots) {
-            Ok(engine) => Some(engine),
+            Ok(engine) => Some(engine.with_prefill_chunk(engine_cfg.resolve_prefill_chunk())),
             Err(e) if forced => {
                 let _ = ready_tx.send(Err(e));
                 return Ok(());

@@ -110,6 +110,13 @@ pub struct ServerConfig {
     /// Stop accepting after this many served connections (`None` =
     /// serve forever).  Test hook for bounded accept loops.
     pub accept_limit: Option<usize>,
+    /// Continuous-engine slot count (`--slots`).  `None` defers to
+    /// `QUIK_SLOTS`, then to memory-budget autoscaling
+    /// ([`crate::coordinator::engine::EngineConfig::resolve_slots`]).
+    pub slots: Option<usize>,
+    /// Admission prefill chunk length (`--prefill-chunk`).  `None`
+    /// defers to `QUIK_PREFILL_CHUNK`, then to unchunked (0).
+    pub prefill_chunk: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -119,6 +126,20 @@ impl Default for ServerConfig {
             default_max_new: 16,
             max_concurrent: 64,
             accept_limit: None,
+            slots: None,
+            prefill_chunk: None,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// The engine-tuning subset of this config, in the shape
+    /// [`Coordinator::start_with_engine`] consumes.
+    pub fn engine_config(&self) -> crate::coordinator::engine::EngineConfig {
+        crate::coordinator::engine::EngineConfig {
+            slots: self.slots,
+            prefill_chunk: self.prefill_chunk,
+            ..Default::default()
         }
     }
 }

@@ -35,7 +35,13 @@
 //!     trait: a slot-based **continuous batching engine**
 //!     ([`coordinator::engine`], the default on row-maskable backends —
 //!     admit → prefill → decode → retire per slot, streams bit-identical
-//!     to solo runs under any arrival schedule), a static
+//!     to solo runs under any arrival schedule; decode steps gather live
+//!     rows into a dense *compacted* batch so compute scales with
+//!     occupancy, admission prefills run in bounded chunks
+//!     (`QUIK_PREFILL_CHUNK`/`--prefill-chunk`) so long prompts stall
+//!     residents by at most one chunk, and the slot count autoscales
+//!     against a memory budget via [`memmodel`] unless pinned by
+//!     `QUIK_SLOTS`/`--slots`), a static
 //!     batch-at-a-time fallback ([`coordinator::scheduler`], for
 //!     static-shape backends; `QUIK_ENGINE` selects explicitly), and the
 //!     **v2 generation API** end-to-end: requests carry

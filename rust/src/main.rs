@@ -73,6 +73,14 @@ impl Args {
             .with_context(|| format!("--{key} must be an integer"))
     }
 
+    /// `None` when the flag is absent (callers defer to env/auto).
+    fn get_opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key} must be an integer")))
+            .transpose()
+    }
+
     fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
         self.get(key, &default.to_string())
             .parse()
@@ -138,6 +146,10 @@ fn print_help() {
          COMMANDS\n\
            serve          --variant quik4|fp16 [--backend native|pjrt]\n\
                           [--engine auto|continuous|static]  (QUIK_ENGINE env)\n\
+                          [--slots 8]          engine slot count (QUIK_SLOTS env;\n\
+                                               default: memory-budget autoscale)\n\
+                          [--prefill-chunk 64] admission prefill chunk length\n\
+                                               (QUIK_PREFILL_CHUNK env; 0 = whole prompt)\n\
                           --requests 16 --prompt-len 48 --gen 16 [--rate <req/s>]\n\
                           [--temperature 0.8 --top-k 40 --top-p 0.95\n\
                            --sample-seed 7 --stop 7,42 --eos 2]  (sampling/stop)\n\
@@ -185,6 +197,11 @@ fn serve(args: &Args) -> Result<()> {
     let backend = args.get("backend", "native");
     let engine = quik::coordinator::EngineMode::parse(&args.get("engine", "auto"))
         .context("--engine must be auto, continuous or static")?;
+    let engine_cfg = quik::coordinator::EngineConfig {
+        slots: args.get_opt_usize("slots")?,
+        prefill_chunk: args.get_opt_usize("prefill-chunk")?,
+        ..Default::default()
+    };
     let spec = WorkloadSpec {
         n_requests: args.get_usize("requests", 16)?,
         prompt_len: args.get_usize("prompt-len", 48)?,
@@ -196,7 +213,14 @@ fn serve(args: &Args) -> Result<()> {
         "native" => {
             let (ckpt, policy) = native_checkpoint(args)?;
             println!("starting coordinator: backend=native variant={variant:?} engine={engine:?}");
-            Coordinator::start_native_with_mode(ckpt, policy, variant, batcher_cfg(), engine)?
+            Coordinator::start_native_with_engine(
+                ckpt,
+                policy,
+                variant,
+                batcher_cfg(),
+                engine,
+                engine_cfg,
+            )?
         }
         "pjrt" => start_pjrt_coordinator(args, variant)?,
         other => bail!("unknown --backend {other} (native|pjrt)"),
@@ -207,6 +231,8 @@ fn serve(args: &Args) -> Result<()> {
         let tcp_cfg = ServerConfig {
             max_new_cap: args.get_usize("max-new-cap", 1024)?,
             max_concurrent: args.get_usize("max-conns", 64)?,
+            slots: engine_cfg.slots,
+            prefill_chunk: engine_cfg.prefill_chunk,
             ..ServerConfig::default()
         };
         return quik::coordinator::tcp::serve(addr, coord, None, tcp_cfg);

@@ -50,7 +50,7 @@ fn allocs() -> usize {
     ALLOCS.load(Ordering::Relaxed)
 }
 
-/// The two tests below count allocations globally, so they must not run
+/// The tests below count allocations globally, so they must not run
 /// concurrently (libtest runs test fns on parallel threads).
 static EXCLUSIVE: Mutex<()> = Mutex::new(());
 
@@ -108,5 +108,42 @@ fn warm_decode_step_allocation_is_small_and_shape_independent() {
     assert!(
         during <= 4,
         "warm decode step allocated {during} times; expected only the returned logits"
+    );
+}
+
+#[test]
+fn warm_compacted_masked_decode_stays_within_the_step_ceiling() {
+    let _guard = EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner());
+    // The compacting masked path (2 of 4 rows active: gather into a
+    // dense 2-row batch, scatter logits back by slot) reuses the same
+    // warmed scratch — its steady-state cost is the same ceiling as the
+    // dense decode step: the returned logits, nothing per-linear and
+    // nothing proportional to the inactive slots.
+    let mut backend =
+        NativeBackend::seeded("alloc-mask", NativeConfig::demo(), 5, demo_policy()).unwrap();
+    backend.prepare(Variant::Quik4, Phase::Decode, 4).unwrap();
+    let prompt: Vec<i32> = (0..4 * 24).map(|i| i % 90).collect();
+    let mut cache = backend.new_cache(Variant::Quik4, 4).unwrap();
+    backend.forward(Variant::Quik4, Phase::Prefill, &prompt, 4, &mut cache).unwrap();
+    let active = [true, false, true, false];
+    let step = [1i32, 0, 2, 0];
+    // warm the compact-shape buffers (gather list, compact logits stage)
+    for _ in 0..2 {
+        cache.set_len(24);
+        backend
+            .forward_masked(Variant::Quik4, Phase::Decode, &step, 4, &mut cache, &active)
+            .unwrap();
+    }
+    cache.set_len(24);
+    let before = allocs();
+    let out = backend
+        .forward_masked(Variant::Quik4, Phase::Decode, &step, 4, &mut cache, &active)
+        .unwrap();
+    let during = allocs() - before;
+    drop(out);
+    assert!(
+        during <= 4,
+        "warm compacted decode step allocated {during} times; expected only the \
+         returned logits"
     );
 }

@@ -17,7 +17,7 @@ use quik::backend::native::{demo_policy, NativeBackend, NativeCheckpoint, Native
 use quik::backend::{InferenceBackend, Phase, Variant};
 use quik::coordinator::batcher::BatcherConfig;
 use quik::coordinator::engine::ContinuousEngine;
-use quik::coordinator::request::{GenerationRequest, Request, Response};
+use quik::coordinator::request::{Event, GenerationRequest, Request, Response};
 use quik::coordinator::sampler::{GenerationParams, Sampler};
 use quik::coordinator::server::Coordinator;
 use quik::coordinator::tcp::ServerConfig;
@@ -201,6 +201,80 @@ fn slot_recycled_under_a_decoding_neighbor() {
     assert_eq!(by_id(0).generated, solo_stream(variant, &pa, 30), "resident A perturbed");
     assert_eq!(by_id(1).generated, solo_stream(variant, &pb, 3), "B diverged");
     assert_eq!(by_id(2).generated, solo_stream(variant, &pc, 5), "slot-recycled C diverged");
+}
+
+/// Count the `Event::Token`s currently buffered on a stream channel.
+fn drain_tokens(rx: &mpsc::Receiver<Event>) -> usize {
+    let mut n = 0;
+    while let Ok(ev) = rx.try_recv() {
+        if matches!(ev, Event::Token { .. }) {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[test]
+fn chunked_prefill_leaves_residents_bit_identical_and_bounded_stall() {
+    // A long prompt admitted next to a decoding resident, with
+    // `prefill_chunk = 8`: the resident must keep emitting **exactly one
+    // token per engine step** while the newcomer's 60-token prompt
+    // prefills in 8 bounded chunks (the stall is one chunk, not one
+    // prompt), the newcomer must stream nothing until its prefill
+    // completes, and both retired streams must equal their solo runs
+    // bit-for-bit.
+    let variant = Variant::Fp16;
+    let mut b = backend();
+    let mut metrics = Metrics::default();
+    let mut engine =
+        ContinuousEngine::new(&mut b, variant, 2).unwrap().with_prefill_chunk(8);
+    let pa: Vec<i32> = (0..8).map(|i| (i * 3 + 1) % 90).collect();
+    let pb: Vec<i32> = (0..60).map(|i| (i * 7 + 2) % 90).collect();
+
+    let (txa, rxa) = mpsc::channel();
+    engine.admit(&mut b, Request::new(0, pa.clone(), 30), txa).unwrap();
+    let mut done = Vec::new();
+    // A prefills (a single 8-token chunk) and starts decoding.
+    for _ in 0..3 {
+        done.extend(engine.step(&mut b, &mut metrics).unwrap());
+    }
+    assert!(done.is_empty(), "A must still be decoding");
+    assert_eq!(drain_tokens(&rxa), 3, "A emits one token per warm-up step");
+
+    let (txb, rxb) = mpsc::channel();
+    engine.admit(&mut b, Request::new(1, pb.clone(), 4), txb).unwrap();
+    // ceil(60 / 8) = 8 chunk steps.  Each one advances B's prefill by at
+    // most one chunk AND decodes the resident: A never stalls for more
+    // than a chunk's worth of work.
+    for chunk_step in 1..=8 {
+        done.extend(engine.step(&mut b, &mut metrics).unwrap());
+        assert_eq!(
+            drain_tokens(&rxa),
+            1,
+            "resident stalled (or double-stepped) at chunk step {chunk_step}"
+        );
+        let b_tokens = drain_tokens(&rxb);
+        if chunk_step < 8 {
+            assert_eq!(b_tokens, 0, "B streamed before its prefill completed");
+        } else {
+            assert_eq!(b_tokens, 1, "B's first token must land with its final chunk");
+        }
+    }
+    done.extend(engine.drain(&mut b, &mut metrics).unwrap());
+    assert_eq!(done.len(), 2);
+    let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(
+        by_id(0).generated,
+        solo_stream(variant, &pa, 30),
+        "resident stream perturbed by a chunked admission"
+    );
+    assert_eq!(
+        by_id(1).generated,
+        solo_stream(variant, &pb, 4),
+        "chunk-prefilled stream diverged from solo"
+    );
+    assert_eq!(metrics.chunked_admissions, 1, "only B needed multiple chunks");
+    assert_eq!(metrics.prefill_chunks, 9, "A took 1 chunk, B took 8");
 }
 
 #[test]

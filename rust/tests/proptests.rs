@@ -348,6 +348,110 @@ fn prop_sparse_mask_pattern_and_magnitude() {
 }
 
 #[test]
+fn prop_masked_forward_compaction_bitexact_random_masks() {
+    // The compacting masked forward (active rows gathered into a dense
+    // batch, logits scattered back by slot) must be bit-identical to the
+    // plain dense forward on the active rows, leave inactive rows frozen
+    // (their cache state and positions untouched — pinned by replaying
+    // the complement step against a never-stepped cache), and never read
+    // inactive rows' token values — at every pool width, random batch
+    // shape and random mask.
+    use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+    use quik::backend::{InferenceBackend, Phase, Variant};
+
+    let mut rng = Rng::new(111);
+    for threads in [1usize, 2, 4] {
+        let mut b =
+            NativeBackend::seeded("prop-compact", NativeConfig::demo(), 9, demo_policy())
+                .unwrap()
+                .with_threads(threads);
+        let vocab = b.vocab() as i32;
+        for case in 0..5 {
+            let batch = 2 + rng.below(4); // 2..=5 rows
+            let seq = 1 + rng.below(4); // masked step length 1..=4
+            let prompt_len = 2 + rng.below(6);
+            let variant = if case % 2 == 0 { Variant::Quik4 } else { Variant::Fp16 };
+            let phase = if seq == 1 { Phase::Decode } else { Phase::Prefill };
+            b.prepare(variant, Phase::Prefill, batch).unwrap();
+            b.prepare(variant, phase, batch).unwrap();
+
+            // identically prefill three caches: A (masked step), B (dense
+            // oracle), C (complement-step oracle, never sees step 1)
+            let prompt: Vec<i32> =
+                (0..batch * prompt_len).map(|_| rng.range_i32(0, vocab - 1)).collect();
+            let mut cache_a = b.new_cache(variant, batch).unwrap();
+            let mut cache_b = b.new_cache(variant, batch).unwrap();
+            let mut cache_c = b.new_cache(variant, batch).unwrap();
+            b.forward(variant, Phase::Prefill, &prompt, batch, &mut cache_a).unwrap();
+            b.forward(variant, Phase::Prefill, &prompt, batch, &mut cache_b).unwrap();
+            b.forward(variant, Phase::Prefill, &prompt, batch, &mut cache_c).unwrap();
+
+            // random mask with at least one active row
+            let mut active = vec![false; batch];
+            for a in active.iter_mut() {
+                *a = rng.below(2) == 0;
+            }
+            active[rng.below(batch)] = true;
+
+            let step: Vec<i32> =
+                (0..batch * seq).map(|_| rng.range_i32(0, vocab - 1)).collect();
+            let mut step_a = step.clone();
+            for (row, live) in active.iter().enumerate() {
+                if !live {
+                    // poison inactive rows: a compacting forward may
+                    // never read (or validate) these token values
+                    for t in &mut step_a[row * seq..(row + 1) * seq] {
+                        *t = vocab + 7777;
+                    }
+                }
+            }
+            let out_a = b.forward_masked(variant, phase, &step_a, batch, &mut cache_a, &active)
+                .unwrap();
+            let out_b = b.forward(variant, phase, &step, batch, &mut cache_b).unwrap();
+            for (row, live) in active.iter().enumerate() {
+                if !live {
+                    continue;
+                }
+                for t in 0..seq {
+                    assert_eq!(
+                        out_a.row(row, t).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        out_b.row(row, t).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "case {case}: compacted row {row}@{t} diverged from dense \
+                         (batch={batch} seq={seq} threads={threads})"
+                    );
+                }
+            }
+
+            // complement step: the rows frozen above must behave exactly
+            // like rows that never saw step 1 — same logits, because
+            // their KV content and RoPE positions are untouched
+            let complement: Vec<bool> = active.iter().map(|a| !a).collect();
+            if complement.iter().any(|&c| c) {
+                let out_a2 = b
+                    .forward_masked(variant, phase, &step, batch, &mut cache_a, &complement)
+                    .unwrap();
+                let out_c = b
+                    .forward_masked(variant, phase, &step, batch, &mut cache_c, &complement)
+                    .unwrap();
+                for (row, live) in complement.iter().enumerate() {
+                    if !live {
+                        continue;
+                    }
+                    for t in 0..seq {
+                        assert_eq!(
+                            out_a2.row(row, t).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                            out_c.row(row, t).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                            "case {case}: frozen row {row}@{t} was disturbed by the \
+                             masked step (batch={batch} seq={seq} threads={threads})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_batcher_never_loses_or_duplicates() {
     let mut rng = Rng::new(106);
     for _ in 0..20 {
