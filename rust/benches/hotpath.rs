@@ -276,6 +276,104 @@ fn main() {
         ));
     }
 
+    // --- paged vs dense-equivalent KV layout: occupancy sweep ----------
+    // The paged-cache perf guardrail: paging is pure indirection (page
+    // table lookup + offset arithmetic in the attention inner loop), so
+    // a masked decode step through 64-token pages must cost about the
+    // same as through the dense-equivalent layout (one page spanning the
+    // whole row) at every occupancy.  Logits are bit-identical by
+    // construction; only the address arithmetic differs.
+    {
+        use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+        use quik::backend::{InferenceBackend, KvCache, Phase, Variant};
+        let max_seq = NativeConfig::demo().max_seq;
+        let occupancies = [1usize, 4, 8];
+        let mut dense_means: Vec<f64> = Vec::new();
+        for (page, label) in [(max_seq, "dense-equiv"), (64usize, "paged p64")] {
+            let mut backend =
+                NativeBackend::seeded("paged-occ", NativeConfig::demo(), 5, demo_policy())
+                    .unwrap()
+                    .with_kv_page(page);
+            backend.prepare(Variant::Quik4, Phase::Decode, 8).unwrap();
+            let prompt: Vec<i32> = (0..8 * 24).map(|i| i % 90).collect();
+            let mut cache = backend.new_cache(Variant::Quik4, 8).unwrap();
+            backend.forward(Variant::Quik4, Phase::Prefill, &prompt, 8, &mut cache).unwrap();
+            let step: Vec<i32> = (0..8).map(|i| (i as i32) % 90).collect();
+            for (oi, &n_active) in occupancies.iter().enumerate() {
+                let active: Vec<bool> = (0..8).map(|b| b < n_active).collect();
+                let r = bench_auto(
+                    &format!("masked decode {n_active}of8 active quik4 {label}"),
+                    budget,
+                    || {
+                        cache.set_len(24);
+                        std::hint::black_box(
+                            backend
+                                .forward_masked(
+                                    Variant::Quik4,
+                                    Phase::Decode,
+                                    &step,
+                                    8,
+                                    &mut cache,
+                                    &active,
+                                )
+                                .unwrap(),
+                        );
+                    },
+                );
+                report(&r);
+                benches.push(json_bench(&r));
+                if page == max_seq {
+                    dense_means.push(r.mean.as_secs_f64());
+                } else {
+                    let ratio = r.mean.as_secs_f64() / dense_means[oi];
+                    println!("    -> {ratio:.2}x paged-vs-dense step cost at {n_active}of8");
+                    derived.push(format!(
+                        "    {{\"name\": \"masked decode {n_active}of8 paged_vs_dense\", \"value\": {ratio:.3}}}"
+                    ));
+                }
+            }
+        }
+    }
+
+    // --- admitted concurrency under a fixed KV budget: FP32 vs KV8 -----
+    // Page-granular slot autoscaling measured end to end: the same
+    // memory budget resolved through the engine autoscaler admits
+    // strictly more residents when the cache stores INT8 pages, because
+    // the per-slot estimate is charged at the configured KV precision.
+    {
+        use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+        use quik::backend::InferenceBackend;
+        use quik::coordinator::EngineConfig;
+        let fp32 = NativeBackend::seeded("budget-fp32", NativeConfig::demo(), 5, demo_policy())
+            .unwrap()
+            .with_kv_bits(32);
+        let kv8 = NativeBackend::seeded("budget-kv8", NativeConfig::demo(), 5, demo_policy())
+            .unwrap()
+            .with_kv_bits(8);
+        let per_fp32 = fp32.slot_bytes().expect("native backend estimates slot bytes");
+        let per_kv8 = kv8.slot_bytes().expect("native backend estimates slot bytes");
+        let budget_bytes = 8 * per_fp32; // 8 dense FP32 residents' worth
+        let cfg = EngineConfig { mem_budget_bytes: Some(budget_bytes), ..Default::default() };
+        let slots_fp32 = cfg.resolve_slots(&fp32, 1);
+        let cfg = EngineConfig { mem_budget_bytes: Some(budget_bytes), ..Default::default() };
+        let slots_kv8 = cfg.resolve_slots(&kv8, 1);
+        println!(
+            "admitted concurrency under a {budget_bytes} B budget: \
+             fp32 {slots_fp32} residents ({per_fp32} B/slot), \
+             kv8 {slots_kv8} residents ({per_kv8} B/slot)"
+        );
+        derived.push(format!(
+            "    {{\"name\": \"admitted residents fixed-budget fp32\", \"value\": {slots_fp32}}}"
+        ));
+        derived.push(format!(
+            "    {{\"name\": \"admitted residents fixed-budget kv8\", \"value\": {slots_kv8}}}"
+        ));
+        derived.push(format!(
+            "    {{\"name\": \"admitted concurrency kv8_vs_fp32\", \"value\": {:.3}}}",
+            slots_kv8 as f64 / slots_fp32.max(1) as f64
+        ));
+    }
+
     // --- chunked admission prefill: long-prompt ITL tail ---------------
     // Chunking bounds the decode stall a long admission inflicts on
     // residents: at most one chunk of prefill work per engine step

@@ -73,11 +73,36 @@ impl Phase {
 
 /// KV-cache handle threaded between consecutive forward steps.
 ///
-/// The only state callers may touch is the *logical* length: schedulers
-/// roll it back after padded prefills and the speculative decoder rolls it
+/// The state callers may touch is the *logical* length: schedulers roll
+/// it back after padded prefills and the speculative decoder rolls it
 /// back after partially-accepted draft windows.  Backends must guarantee
-/// that positions at or beyond `len()` are masked out of attention and are
-/// overwritten by subsequent steps (the fixed-buffer cache discipline).
+/// that positions at or beyond `len()` are masked out of attention and
+/// are overwritten by subsequent steps.
+///
+/// ### The paged cache discipline
+///
+/// Physical storage is a backend concern, and the native backend stores
+/// it as a shared **page pool**: fixed-size pages of `page_tokens`
+/// positions each, with a per-row page table mapping logical positions
+/// to pool pages.  The trait exposes that capacity model without leaking
+/// the layout:
+///
+/// * [`KvCache::page_tokens`] answers `Some(tokens-per-page)` for paged
+///   caches, `None` for backends with monolithic per-row buffers;
+/// * [`KvCache::total_pages`] / [`KvCache::free_pages`] are the
+///   occupancy gauge — admission control checks free-page headroom, the
+///   metrics report a pool-utilization gauge;
+/// * [`KvCache::try_reserve_row`] maps a row's whole context budget up
+///   front (all or nothing), so an admitted stream can never run dry
+///   mid-decode;
+/// * [`KvCache::reset_row`] returns the row's pages to the free list —
+///   retirement immediately releases capacity to the next admission;
+/// * rolling the logical length *back* keeps pages mapped: replay after
+///   rollback must read the previously written content.
+///
+/// Every hook has an unpaged default, so monolithic caches (and the PJRT
+/// artifact cache) implement nothing new: `page_tokens() == None`, the
+/// gauges read zero, and reservation always succeeds.
 pub trait KvCache {
     /// Current logical context length (tokens resident in the cache).
     fn len(&self) -> usize;
@@ -115,12 +140,56 @@ pub trait KvCache {
     /// of it is writable garbage.  The continuous batching engine
     /// ([`crate::coordinator::engine::ContinuousEngine`]) calls this when
     /// a slot retires, so the next admitted request starts from a clean
-    /// row while resident rows keep decoding in place.  The default
-    /// implementation is `set_row_len(row, 0)`, which is sufficient for
-    /// any cache whose `>= len` positions are masked and overwritten
-    /// (the fixed-buffer discipline above).
+    /// row while resident rows keep decoding in place.  Paged caches
+    /// additionally return the row's pages to the free pool here.  The
+    /// default implementation is `set_row_len(row, 0)`, which is
+    /// sufficient for any monolithic cache whose `>= len` positions are
+    /// masked and overwritten.
     fn reset_row(&mut self, row: usize) {
         self.set_row_len(row, 0);
+    }
+
+    /// Tokens per physical cache page, or `None` for caches without a
+    /// paged layout (monolithic per-row buffers).  When `Some`, the
+    /// page-granular hooks below are live and admission control should
+    /// check free-page headroom via [`KvCache::try_reserve_row`].
+    fn page_tokens(&self) -> Option<usize> {
+        None
+    }
+
+    /// Total pages in the pool (0 when unpaged).
+    fn total_pages(&self) -> usize {
+        0
+    }
+
+    /// Currently free pages in the pool (0 when unpaged).
+    fn free_pages(&self) -> usize {
+        0
+    }
+
+    /// Cumulative pages handed out from the free list (monotonic
+    /// counter; 0 when unpaged).  With [`KvCache::pages_freed`] this
+    /// gives the metrics pipeline churn counters alongside the
+    /// `free_pages` gauge.
+    fn pages_allocated(&self) -> u64 {
+        0
+    }
+
+    /// Cumulative pages returned to the free list (monotonic counter;
+    /// 0 when unpaged).
+    fn pages_freed(&self) -> u64 {
+        0
+    }
+
+    /// Reserve capacity for `row` to hold `tokens` total positions, all
+    /// or nothing: on `true` the row's pages are mapped and later writes
+    /// up to `tokens` cannot exhaust the pool; on `false` nothing
+    /// changed and the caller should defer (backpressure) rather than
+    /// admit.  Unpaged caches always succeed — their capacity was
+    /// reserved at construction.
+    fn try_reserve_row(&mut self, row: usize, tokens: usize) -> bool {
+        let _ = (row, tokens);
+        true
     }
 
     fn is_empty(&self) -> bool {

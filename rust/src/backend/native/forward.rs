@@ -47,6 +47,8 @@ use anyhow::{bail, Result};
 use super::linear::{LinearScratch, QuikLinear};
 use super::model::{LayerWeights, NativeCheckpoint, NativeConfig};
 use crate::backend::{KvCache, StepOutput};
+use crate::config::ExecConfig;
+use crate::quant::{act_qrange, half_range, SCALE_EPS};
 use crate::util::parallel::{SliceWriter, WorkerPool};
 
 /// Which linear inside a block (forward order).
@@ -319,8 +321,39 @@ fn matmul_f32_rows(
     }
 }
 
-/// Fixed-capacity KV cache laid out
-/// `[n_layers, batch, n_kv_heads, max_ctx, d_head]`.
+/// Physical page storage: one contiguous allocation per tensor (K and V),
+/// carved into fixed-size pages.  FP32 pages store raw key/value vectors;
+/// INT8 pages store per-token asymmetrically quantized vectors (the
+/// paper's Eq.-1 scheme applied to the cache itself) with one
+/// `(scale, zero)` pair per `(page slot, layer, kv_head)` `d_head` vector.
+#[derive(Debug, Clone)]
+enum PageStore {
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    I8 {
+        k: Vec<i8>,
+        v: Vec<i8>,
+        k_scale: Vec<f32>,
+        k_zero: Vec<f32>,
+        v_scale: Vec<f32>,
+        v_zero: Vec<f32>,
+    },
+}
+
+/// Paged KV cache: a shared pool of fixed-size pages (`page_tokens`
+/// positions each, covering all layers and kv heads for one row) plus a
+/// per-row page table mapping logical position `pos` to pool page
+/// `table[row][pos / page_tokens]`.
+///
+/// The paging is pure indirection: a position's `d_head` K/V vector is
+/// stored contiguously inside its page, the attention loop reads the
+/// same per-row positions in the same order as the dense layout, and
+/// FP32 pages are therefore **bit-identical** to the dense cache by
+/// construction (pinned by the compaction proptest across page sizes).
+/// INT8 pages quantize on append / dequantize on read and are pinned by
+/// greedy golden-parity instead.
 ///
 /// The logical length is tracked **per row**: after a right-padded
 /// mixed-length prefill the scheduler sets each row back to its true
@@ -328,35 +361,246 @@ fn matmul_f32_rows(
 /// positions — a short row's cache content and RoPE positions are then
 /// identical to a solo run, so batched decode is bit-exact (no pad-KV
 /// approximation).  [`KvCache::len`] reports the longest row.
+///
+/// Rolling a row's length *back* keeps its pages mapped (replay reads
+/// the old content — rollback/replay is exact); [`KvCache::reset_row`]
+/// returns the row's pages to the free list.  All storage (pages, free
+/// list, page-table capacity) is allocated at construction, so mapping a
+/// page on the decode path is a free-list pop — the warm step stays
+/// allocation-free.
 #[derive(Debug, Clone)]
 pub struct NativeKvCache {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    store: PageStore,
+    /// Per-row page tables; each pre-sized to `pages_per_row` capacity.
+    table: Vec<Vec<usize>>,
+    /// Free pool pages (LIFO).
+    free: Vec<usize>,
     row_len: Vec<usize>,
     pub batch: usize,
     n_kv_heads: usize,
     max_ctx: usize,
     d_head: usize,
+    page_tokens: usize,
+    /// Elements per page per tensor: `n_layers × n_kv_heads × page_tokens × d_head`.
+    page_elems: usize,
+    /// Quant-parameter slots per page: `n_layers × n_kv_heads × page_tokens`.
+    page_scales: usize,
+    n_pages: usize,
+    pages_allocated: u64,
+    pages_freed: u64,
 }
 
 impl NativeKvCache {
+    /// Pool-backed cache with layout knobs resolved from the process
+    /// [`ExecConfig`] (`QUIK_KV_PAGE` / `QUIK_KV_BITS`) and a full-size
+    /// pool — every row can reach `max_seq`, the dense layout's
+    /// guarantee.
     pub fn new(cfg: &NativeConfig, batch: usize) -> Self {
-        let elems = cfg.n_layers * batch * cfg.n_kv_heads * cfg.max_seq * cfg.d_head();
+        let exec = ExecConfig::default();
+        Self::with_layout(cfg, batch, exec.resolve_kv_page(), exec.resolve_kv_bits(), None)
+    }
+
+    /// Explicit layout: `page_tokens` positions per page, `kv_bits` page
+    /// precision (8 = INT8, anything else = FP32), and an optional pool
+    /// size in pages (`None` = `batch × ceil(max_seq / page_tokens)`, the
+    /// no-overcommit default).  A smaller pool overcommits context: the
+    /// forward bails cleanly (before any write) when the pool runs dry.
+    pub fn with_layout(
+        cfg: &NativeConfig,
+        batch: usize,
+        page_tokens: usize,
+        kv_bits: u32,
+        pool_pages: Option<usize>,
+    ) -> Self {
+        let page_tokens = page_tokens.max(1);
+        let d_head = cfg.d_head();
+        let pages_per_row = cfg.max_seq.div_ceil(page_tokens);
+        let n_pages = pool_pages.unwrap_or(batch * pages_per_row);
+        let page_elems = cfg.n_layers * cfg.n_kv_heads * page_tokens * d_head;
+        let page_scales = cfg.n_layers * cfg.n_kv_heads * page_tokens;
+        let store = if kv_bits == 8 {
+            PageStore::I8 {
+                k: vec![0i8; n_pages * page_elems],
+                v: vec![0i8; n_pages * page_elems],
+                k_scale: vec![0f32; n_pages * page_scales],
+                k_zero: vec![0f32; n_pages * page_scales],
+                v_scale: vec![0f32; n_pages * page_scales],
+                v_zero: vec![0f32; n_pages * page_scales],
+            }
+        } else {
+            PageStore::F32 {
+                k: vec![0f32; n_pages * page_elems],
+                v: vec![0f32; n_pages * page_elems],
+            }
+        };
+        let mut free = Vec::with_capacity(n_pages);
+        free.extend((0..n_pages).rev());
         Self {
-            k: vec![0f32; elems],
-            v: vec![0f32; elems],
+            store,
+            table: (0..batch).map(|_| Vec::with_capacity(pages_per_row)).collect(),
+            free,
             row_len: vec![0; batch],
             batch,
             n_kv_heads: cfg.n_kv_heads,
             max_ctx: cfg.max_seq,
-            d_head: cfg.d_head(),
+            d_head,
+            page_tokens,
+            page_elems,
+            page_scales,
+            n_pages,
+            pages_allocated: 0,
+            pages_freed: 0,
         }
     }
 
-    /// Offset of `(layer, batch_row, kv_head, pos)`'s `d_head` slice.
-    fn idx(&self, layer: usize, b: usize, kv_head: usize, pos: usize) -> usize {
-        (((layer * self.batch + b) * self.n_kv_heads + kv_head) * self.max_ctx + pos)
-            * self.d_head
+    /// Pages a row needs mapped to hold `len` positions.
+    fn pages_for(&self, len: usize) -> usize {
+        len.min(self.max_ctx).div_ceil(self.page_tokens)
+    }
+
+    /// How many *new* pages `row` must map to reach `len` positions.
+    fn page_deficit(&self, row: usize, len: usize) -> usize {
+        self.pages_for(len).saturating_sub(self.table[row].len())
+    }
+
+    /// Map pages so `row` can hold `len` positions.  Callers check the
+    /// deficit against [`KvCache::free_pages`] first; the pop cannot fail.
+    fn map_row(&mut self, row: usize, len: usize) {
+        let need = self.pages_for(len);
+        while self.table[row].len() < need {
+            let page = self.free.pop().expect("page deficit checked before mapping");
+            self.table[row].push(page);
+            self.pages_allocated += 1;
+        }
+    }
+
+    /// Element offset of `(layer, row, kv_head, pos)`'s `d_head` vector
+    /// inside the pool (a vector never straddles a page boundary).
+    #[inline]
+    fn page_base(&self, layer: usize, row: usize, kv_head: usize, pos: usize) -> usize {
+        let page = self.table[row][pos / self.page_tokens];
+        page * self.page_elems
+            + ((layer * self.n_kv_heads + kv_head) * self.page_tokens
+                + pos % self.page_tokens)
+                * self.d_head
+    }
+
+    /// Quant-parameter slot of `(layer, row, kv_head, pos)` (INT8 pages).
+    #[inline]
+    fn scale_slot(&self, layer: usize, row: usize, kv_head: usize, pos: usize) -> usize {
+        let page = self.table[row][pos / self.page_tokens];
+        page * self.page_scales
+            + (layer * self.n_kv_heads + kv_head) * self.page_tokens
+            + pos % self.page_tokens
+    }
+
+    /// Store one position's rotated K and raw V vectors (quantizing on
+    /// append for INT8 pages).
+    fn write_kv(&mut self, layer: usize, row: usize, kv_head: usize, pos: usize, kv_k: &[f32], kv_v: &[f32]) {
+        let base = self.page_base(layer, row, kv_head, pos);
+        let dh = self.d_head;
+        match &mut self.store {
+            PageStore::F32 { k, v } => {
+                k[base..base + dh].copy_from_slice(kv_k);
+                v[base..base + dh].copy_from_slice(kv_v);
+            }
+            PageStore::I8 { k, v, k_scale, k_zero, v_scale, v_zero } => {
+                let si = {
+                    let page = self.table[row][pos / self.page_tokens];
+                    page * self.page_scales
+                        + (layer * self.n_kv_heads + kv_head) * self.page_tokens
+                        + pos % self.page_tokens
+                };
+                kv_quantize_vec(kv_k, &mut k[base..base + dh], &mut k_scale[si], &mut k_zero[si]);
+                kv_quantize_vec(kv_v, &mut v[base..base + dh], &mut v_scale[si], &mut v_zero[si]);
+            }
+        }
+    }
+
+    /// Dot product of one cached key vector with the rotated query —
+    /// FP32 pages run the exact dense-layout accumulation order; INT8
+    /// pages dequantize elementwise inline.
+    #[inline]
+    fn key_dot(&self, layer: usize, row: usize, kv_head: usize, pos: usize, q: &[f32]) -> f32 {
+        let base = self.page_base(layer, row, kv_head, pos);
+        let dh = self.d_head;
+        let mut sum = 0f32;
+        match &self.store {
+            PageStore::F32 { k, .. } => {
+                let ks = &k[base..base + dh];
+                for e in 0..dh {
+                    sum += ks[e] * q[e];
+                }
+            }
+            PageStore::I8 { k, k_scale, k_zero, .. } => {
+                let si = self.scale_slot(layer, row, kv_head, pos);
+                let (s, z) = (k_scale[si], k_zero[si]);
+                let hr = half_range(8) as f32;
+                let ks = &k[base..base + dh];
+                for e in 0..dh {
+                    sum += (s * (ks[e] as f32 + hr) + z) * q[e];
+                }
+            }
+        }
+        sum
+    }
+
+    /// `out[e] += wgt * v[e]` over one cached value vector (the attention
+    /// weighted sum), preserving the dense accumulation order for FP32.
+    #[inline]
+    fn value_accumulate(
+        &self,
+        layer: usize,
+        row: usize,
+        kv_head: usize,
+        pos: usize,
+        wgt: f32,
+        out: &mut [f32],
+    ) {
+        let base = self.page_base(layer, row, kv_head, pos);
+        let dh = self.d_head;
+        match &self.store {
+            PageStore::F32 { v, .. } => {
+                let vs = &v[base..base + dh];
+                for e in 0..dh {
+                    out[e] += wgt * vs[e];
+                }
+            }
+            PageStore::I8 { v, v_scale, v_zero, .. } => {
+                let si = self.scale_slot(layer, row, kv_head, pos);
+                let (s, z) = (v_scale[si], v_zero[si]);
+                let hr = half_range(8) as f32;
+                let vs = &v[base..base + dh];
+                for e in 0..dh {
+                    out[e] += wgt * (s * (vs[e] as f32 + hr) + z);
+                }
+            }
+        }
+    }
+}
+
+/// Per-token asymmetric INT8 quantization of one `d_head` K/V vector —
+/// the same scale/zero/rounding formulas as
+/// [`crate::quant::quantize_acts_into`], specialized to a single short
+/// row on the append path (no scratch, no allocation).
+fn kv_quantize_vec(x: &[f32], q: &mut [i8], scale: &mut f32, zero: &mut f32) {
+    let (qmin, qmax) = act_qrange(8);
+    let (qminf, qmaxf) = (qmin as f32, qmax as f32);
+    let hr = half_range(8) as f32;
+    let levels = ((1u32 << 8) - 1) as f32;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let s = ((hi - lo) / levels).max(SCALE_EPS);
+    *scale = s;
+    *zero = lo;
+    let inv_s = 1.0 / s;
+    for (o, &v) in q.iter_mut().zip(x) {
+        let val = ((v - lo) * inv_s).round() - hr;
+        *o = val.clamp(qminf, qmaxf) as i8;
     }
 }
 
@@ -369,7 +613,8 @@ impl KvCache for NativeKvCache {
     /// rollback bookkeeping error would otherwise corrupt replay
     /// invariants invisibly): debug builds panic on it; release builds
     /// saturate at `max_ctx` and the next `forward` fails its context
-    /// check instead of replaying garbage.
+    /// check instead of replaying garbage.  Rolling *back* keeps the
+    /// row's pages mapped so a subsequent replay reads the old content.
     fn set_len(&mut self, len: usize) {
         debug_assert!(
             len <= self.max_ctx,
@@ -389,6 +634,48 @@ impl KvCache for NativeKvCache {
     }
 
     fn per_row_lens(&self) -> bool {
+        true
+    }
+
+    /// Retirement: zero the logical length *and* return every page the
+    /// row held to the free list — freed capacity is immediately
+    /// available to the next admission.
+    fn reset_row(&mut self, row: usize) {
+        self.row_len[row] = 0;
+        while let Some(page) = self.table[row].pop() {
+            self.free.push(page);
+            self.pages_freed += 1;
+        }
+    }
+
+    fn page_tokens(&self) -> Option<usize> {
+        Some(self.page_tokens)
+    }
+
+    fn total_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    fn pages_allocated(&self) -> u64 {
+        self.pages_allocated
+    }
+
+    fn pages_freed(&self) -> u64 {
+        self.pages_freed
+    }
+
+    /// Map enough pages for `row` to hold `tokens` positions, all or
+    /// nothing: admission reserves a row's whole context budget up front
+    /// so a resident stream can never run dry mid-decode.
+    fn try_reserve_row(&mut self, row: usize, tokens: usize) -> bool {
+        if self.page_deficit(row, tokens) > self.free.len() {
+            return false;
+        }
+        self.map_row(row, tokens);
         true
     }
 }
@@ -564,6 +851,25 @@ pub(crate) fn forward_pass_masked(
     if p0_max + seq > cfg.max_seq {
         bail!("context overflow: cache {} + step {seq} > max_seq {}", p0_max, cfg.max_seq);
     }
+    // Map every page this step needs *before any write or row advance*:
+    // a dry pool is a clean error up front, never a half-written resident
+    // row.  Rows the engine pre-reserved at admission have zero deficit
+    // here; unreserved callers (static path, tests, benches) map lazily.
+    let mut page_deficit = 0usize;
+    for &b in &s.gather {
+        page_deficit += cache.page_deficit(b, cache.row_len[b] + seq);
+    }
+    if page_deficit > cache.free.len() {
+        bail!(
+            "kv page pool exhausted: step needs {page_deficit} new pages, {} free of {}",
+            cache.free.len(),
+            cache.n_pages
+        );
+    }
+    for &b in &s.gather {
+        let need = cache.row_len[b] + seq;
+        cache.map_row(b, need);
+    }
     let d = cfg.d_model;
     let dh = cfg.d_head();
     let kvd = cfg.kv_dim();
@@ -611,15 +917,13 @@ pub(crate) fn forward_pass_masked(
             for t in 0..seq {
                 let row = ci * seq + t;
                 let pos = p0 + t;
-                // write this position's K (rotated) and V into the cache
+                // write this position's K (rotated) and V into its page
                 for kv_i in 0..cfg.n_kv_heads {
                     let src = &s.kp[row * kvd + kv_i * dh..row * kvd + (kv_i + 1) * dh];
                     s.kr.copy_from_slice(src);
                     rope_in_place(&mut s.kr, pos, &s.inv_freq);
-                    let ci = cache.idx(l, b, kv_i, pos);
-                    cache.k[ci..ci + dh].copy_from_slice(&s.kr);
                     let vsrc = &s.vp[row * kvd + kv_i * dh..row * kvd + (kv_i + 1) * dh];
-                    cache.v[ci..ci + dh].copy_from_slice(vsrc);
+                    cache.write_kv(l, b, kv_i, pos, &s.kr, vsrc);
                 }
                 // attend: query at `pos` over cache positions 0..=pos
                 for head in 0..n_heads {
@@ -629,20 +933,12 @@ pub(crate) fn forward_pass_masked(
                     let ctx = pos + 1;
                     let scores = &mut s.scores[..ctx];
                     for (p, sc) in scores.iter_mut().enumerate() {
-                        let ci = cache.idx(l, b, kv_i, p);
-                        let mut sum = 0f32;
-                        for e in 0..dh {
-                            sum += cache.k[ci + e] * s.qr[e];
-                        }
-                        *sc = sum * att_scale;
+                        *sc = cache.key_dot(l, b, kv_i, p, &s.qr) * att_scale;
                     }
                     softmax_in_place(scores);
                     let out = &mut s.attn[row * d + head * dh..row * d + (head + 1) * dh];
                     for (p, &wgt) in scores.iter().enumerate() {
-                        let ci = cache.idx(l, b, kv_i, p);
-                        for e in 0..dh {
-                            out[e] += wgt * cache.v[ci + e];
-                        }
+                        cache.value_accumulate(l, b, kv_i, p, wgt, out);
                     }
                 }
             }

@@ -95,6 +95,16 @@ pub struct NativeBackend {
     /// thread, so a `RefCell` is sound and keeps steady-state steps free
     /// of per-linear heap allocation.
     scratch: RefCell<ForwardScratch>,
+    /// KV page size in tokens for caches this backend builds; defaults
+    /// from `QUIK_KV_PAGE` ([`ExecConfig::resolve_kv_page`]).
+    kv_page: usize,
+    /// KV page precision (32 = FP32, 8 = INT8 quantize-on-append);
+    /// defaults from `QUIK_KV_BITS` ([`ExecConfig::resolve_kv_bits`]).
+    kv_bits: u32,
+    /// Optional page-pool cap for caches this backend builds (`None` =
+    /// full size, every row can reach `max_seq`).  Smaller pools
+    /// overcommit context; admission then defers on free-page headroom.
+    kv_pool_pages: Option<usize>,
 }
 
 impl NativeBackend {
@@ -104,6 +114,7 @@ impl NativeBackend {
         policy: QuikPolicy,
     ) -> Result<Self> {
         ckpt.config.validate()?;
+        let exec = ExecConfig::default();
         Ok(Self {
             name: name.into(),
             ckpt,
@@ -111,6 +122,9 @@ impl NativeBackend {
             quik: None,
             pool: std::sync::OnceLock::new(),
             scratch: RefCell::new(ForwardScratch::default()),
+            kv_page: exec.resolve_kv_page(),
+            kv_bits: exec.resolve_kv_bits(),
+            kv_pool_pages: None,
         })
     }
 
@@ -133,6 +147,45 @@ impl NativeBackend {
     /// Worker-pool width this backend fans its kernels out across.
     pub fn threads(&self) -> usize {
         self.pool().threads()
+    }
+
+    /// Builder override for the KV page size in tokens (beats the
+    /// `QUIK_KV_PAGE` env default; 0 falls back to the default size).
+    /// Purely a layout knob — bit-identical at every page size.
+    pub fn with_kv_page(mut self, page_tokens: usize) -> Self {
+        self.kv_page = ExecConfig { kv_page: Some(page_tokens), ..Default::default() }
+            .resolve_kv_page();
+        self
+    }
+
+    /// Builder override for the KV page precision (beats the
+    /// `QUIK_KV_BITS` env default; only 8 and 32 are valid — anything
+    /// else resolves back to FP32).
+    pub fn with_kv_bits(mut self, bits: u32) -> Self {
+        self.kv_bits =
+            ExecConfig { kv_bits: Some(bits), ..Default::default() }.resolve_kv_bits();
+        self
+    }
+
+    /// Builder cap on the page pool of caches this backend builds, in
+    /// pages.  The default (`None`) sizes the pool so every row can
+    /// reach `max_seq` — dense-equivalent capacity.  A smaller pool
+    /// overcommits context: admission defers on free-page headroom and
+    /// the forward bails cleanly (before any write) if a step finds the
+    /// pool dry.
+    pub fn with_kv_pool_pages(mut self, pages: Option<usize>) -> Self {
+        self.kv_pool_pages = pages;
+        self
+    }
+
+    /// KV page size (tokens) of caches this backend builds.
+    pub fn kv_page(&self) -> usize {
+        self.kv_page
+    }
+
+    /// KV page precision (bits) of caches this backend builds.
+    pub fn kv_bits(&self) -> u32 {
+        self.kv_bits
     }
 
     /// Deterministic random checkpoint (see [`NativeCheckpoint::seeded`]).
@@ -232,7 +285,11 @@ impl NativeBackend {
         let tokens: Vec<i32> =
             (0..calib_len).map(|_| rng.range_i32(0, cfg.vocab as i32 - 1)).collect();
         let calib = CalibLinears::new(&self.ckpt);
-        let mut cache = NativeKvCache::new(&cfg, 1);
+        // Calibration always runs over FP32 pages, whatever the serving
+        // cache precision: the captured activations (and therefore the
+        // outlier selection and quantized stack) stay identical across
+        // `QUIK_KV_BITS` settings, so KV8 changes *only* cache storage.
+        let mut cache = NativeKvCache::with_layout(&cfg, 1, self.kv_page, 32, None);
         let mut scratch = ForwardScratch::default();
         forward_pass(&self.ckpt, &calib, &tokens, 1, &mut cache, self.pool(), &mut scratch)
             .context("calibration forward")?;
@@ -303,7 +360,13 @@ impl InferenceBackend for NativeBackend {
         if batch == 0 {
             bail!("batch must be positive");
         }
-        Ok(NativeKvCache::new(&self.ckpt.config, batch))
+        Ok(NativeKvCache::with_layout(
+            &self.ckpt.config,
+            batch,
+            self.kv_page,
+            self.kv_bits,
+            self.kv_pool_pages,
+        ))
     }
 
     fn forward(
@@ -342,11 +405,17 @@ impl InferenceBackend for NativeBackend {
     /// from the byte-exact [`crate::memmodel`] accounting: the batch-1
     /// minus batch-0 report difference, which cancels out the
     /// batch-invariant terms (weights, outliers, embeddings) and leaves
-    /// the slot's KV-cache rows plus its activation-buffer share.
+    /// the slot's KV-cache rows plus its activation-buffer share.  The
+    /// KV term is charged at this backend's *configured* cache layout
+    /// (page size + precision), so KV8 pages shrink the per-slot cost
+    /// and the engine's memory-budget autoscaler admits more residents.
     fn slot_bytes(&self) -> Option<u64> {
         let spec = self.ckpt.config.to_spec();
-        let with = crate::memmodel::memory_report(&spec, &self.policy, 1, spec.max_seq);
-        let without = crate::memmodel::memory_report(&spec, &self.policy, 0, spec.max_seq);
+        let kv = crate::memmodel::KvCacheSpec::paged(self.kv_bits, self.kv_page);
+        let with =
+            crate::memmodel::memory_report_with_kv(&spec, &self.policy, 1, spec.max_seq, &kv);
+        let without =
+            crate::memmodel::memory_report_with_kv(&spec, &self.policy, 0, spec.max_seq, &kv);
         Some((with.total() - without.total()).max(1.0) as u64)
     }
 }

@@ -155,6 +155,17 @@ pub struct ExecConfig {
     /// [`ExecConfig::ENV_PREFILL_CHUNK`] environment override, falling
     /// back to unchunked.
     pub prefill_chunk: Option<usize>,
+    /// Explicit KV-cache page size in tokens.  `None` resolves from the
+    /// [`ExecConfig::ENV_KV_PAGE`] environment override, falling back to
+    /// [`ExecConfig::DEFAULT_KV_PAGE`].  Purely a layout knob: the paged
+    /// cache is bit-identical to the dense layout at every page size.
+    pub kv_page: Option<usize>,
+    /// Explicit KV-cache storage precision in bits (32 = FP32 pages,
+    /// 8 = per-token asymmetric INT8 pages).  `None` resolves from the
+    /// [`ExecConfig::ENV_KV_BITS`] environment override, falling back to
+    /// 32.  Unlike the other knobs this one *does* change stream bits at
+    /// 8 — KV8 is pinned by greedy golden-parity tests instead.
+    pub kv_bits: Option<u32>,
 }
 
 impl ExecConfig {
@@ -172,6 +183,20 @@ impl ExecConfig {
     /// CI crosses a chunked leg into the engine matrix so chunk-boundary
     /// determinism is exercised on every push.
     pub const ENV_PREFILL_CHUNK: &'static str = "QUIK_PREFILL_CHUNK";
+
+    /// Environment override for the KV-cache page size in tokens
+    /// (`QUIK_KV_PAGE=16`); `0` or unparsable falls back to
+    /// [`ExecConfig::DEFAULT_KV_PAGE`].  CI runs a small-page leg to
+    /// shake out page-boundary bugs.
+    pub const ENV_KV_PAGE: &'static str = "QUIK_KV_PAGE";
+
+    /// Environment override for the KV-cache storage precision
+    /// (`QUIK_KV_BITS=8`); anything other than 8 or 32 falls back to 32.
+    pub const ENV_KV_BITS: &'static str = "QUIK_KV_BITS";
+
+    /// Default KV page size in tokens when neither the explicit setting
+    /// nor [`ExecConfig::ENV_KV_PAGE`] resolves.
+    pub const DEFAULT_KV_PAGE: usize = 64;
 
     /// Resolve the pool width: explicit setting, else `QUIK_THREADS`,
     /// else available parallelism; always ≥ 1 (an explicit 0 — setting
@@ -215,6 +240,46 @@ impl ExecConfig {
             }
         }
         0
+    }
+
+    /// Resolve the KV page size in tokens: explicit setting, else
+    /// `QUIK_KV_PAGE`, else [`Self::DEFAULT_KV_PAGE`].  `0` and
+    /// unparsable values (explicit or env) fall back to the default — a
+    /// zero-token page is never valid.
+    pub fn resolve_kv_page(&self) -> usize {
+        if let Some(n) = self.kv_page {
+            if n > 0 {
+                return n;
+            }
+            return Self::DEFAULT_KV_PAGE;
+        }
+        if let Ok(v) = std::env::var(Self::ENV_KV_PAGE) {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        Self::DEFAULT_KV_PAGE
+    }
+
+    /// Resolve the KV storage precision in bits: explicit setting, else
+    /// `QUIK_KV_BITS`, else 32 (FP32).  Only 8 and 32 are valid page
+    /// precisions; invalid values (explicit or env) are rejected back to
+    /// the FP32 default rather than silently quantizing the cache.
+    pub fn resolve_kv_bits(&self) -> u32 {
+        let valid = |n: u32| n == 8 || n == 32;
+        if let Some(n) = self.kv_bits {
+            return if valid(n) { n } else { 32 };
+        }
+        if let Ok(v) = std::env::var(Self::ENV_KV_BITS) {
+            if let Ok(n) = v.trim().parse::<u32>() {
+                if valid(n) {
+                    return n;
+                }
+            }
+        }
+        32
     }
 }
 
@@ -366,6 +431,29 @@ mod tests {
         }
         if std::env::var(ExecConfig::ENV_PREFILL_CHUNK).is_err() {
             assert_eq!(ExecConfig::default().resolve_prefill_chunk(), 0);
+        }
+    }
+
+    #[test]
+    fn exec_config_resolves_kv_page_and_bits() {
+        // explicit settings win over everything
+        let c = ExecConfig { kv_page: Some(16), kv_bits: Some(8), ..Default::default() };
+        assert_eq!(c.resolve_kv_page(), 16);
+        assert_eq!(c.resolve_kv_bits(), 8);
+        // invalid values are rejected back to the defaults: a zero-token
+        // page is never valid, and only 8/32 are page precisions
+        let z = ExecConfig { kv_page: Some(0), kv_bits: Some(4), ..Default::default() };
+        assert_eq!(z.resolve_kv_page(), ExecConfig::DEFAULT_KV_PAGE);
+        assert_eq!(z.resolve_kv_bits(), 32);
+        let w = ExecConfig { kv_bits: Some(16), ..Default::default() };
+        assert_eq!(w.resolve_kv_bits(), 32);
+        // defaults fall through to the env overrides; only assert the
+        // env-independent cases so the CI kv legs can't flake this
+        if std::env::var(ExecConfig::ENV_KV_PAGE).is_err() {
+            assert_eq!(ExecConfig::default().resolve_kv_page(), ExecConfig::DEFAULT_KV_PAGE);
+        }
+        if std::env::var(ExecConfig::ENV_KV_BITS).is_err() {
+            assert_eq!(ExecConfig::default().resolve_kv_bits(), 32);
         }
     }
 

@@ -94,6 +94,14 @@ impl DynamicBatcher {
         self.queue.pop_front()
     }
 
+    /// The oldest queued request, without dequeuing it.  The continuous
+    /// engine's admission loop peeks before popping so an admission it
+    /// cannot take *right now* (page pool dry) defers in place — the
+    /// request keeps its FIFO position instead of being dropped.
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
@@ -281,6 +289,9 @@ mod tests {
         assert!(b.try_push(req(1, 200)).is_ok()); // different bucket
         assert!(b.try_push(req(2, 60)).is_ok());
         assert!(b.try_push(req(3, 60)).is_err()); // at capacity
+        // peek observes the head without dequeuing it
+        assert_eq!(b.peek().unwrap().id, 0);
+        assert_eq!(b.queued(), 3);
         // strict arrival order, ignoring buckets
         assert_eq!(b.pop().unwrap().id, 0);
         assert_eq!(b.pop().unwrap().id, 1);

@@ -56,7 +56,19 @@
 //! `QUIK_SLOTS` setting wins, otherwise the engine **autoscales** —
 //! divides a memory budget by the backend's per-slot byte estimate
 //! ([`InferenceBackend::slot_bytes`], KV rows + activation share from
-//! the `memmodel` accounting) and clamps to a sane range.
+//! the `memmodel` accounting) and clamps to a sane range.  The estimate
+//! is page- and precision-aware: INT8 KV pages (`QUIK_KV_BITS=8`)
+//! shrink the per-slot cost, so the same budget admits strictly more
+//! residents than dense FP32 rows.
+//!
+//! On a **paged** cache ([`KvCache::page_tokens`] returns `Some`)
+//! admission is additionally bounded by the shared page pool: `admit`
+//! reserves the request's whole footprint — prompt plus clipped decode
+//! budget — up front, all-or-nothing ([`KvCache::try_reserve_row`]), so
+//! an admitted row can never starve mid-stream.  Serving loops consult
+//! [`ContinuousEngine::can_admit`] first and *defer* admission (the
+//! request stays queued) when the pool is dry; retirements return pages
+//! ([`KvCache::reset_row`]) and the next poll succeeds.
 //!
 //! The repo's signature invariant survives the inversion of control
 //! flow: rows are computationally independent and the row-masked forward
@@ -298,6 +310,40 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         self.slots.iter().any(|s| s.is_none())
     }
 
+    /// Whether `req` can be admitted *right now*: a slot is free and —
+    /// on a paged cache — the page pool has headroom for the request's
+    /// whole footprint (prompt plus clipped decode budget).  Serving
+    /// loops call this before popping their queue so a dry pool
+    /// **defers** admission (the request stays queued, in order)
+    /// instead of failing it; pages return as residents retire and the
+    /// next poll succeeds.  Monolithic caches gate on slots alone.
+    pub fn can_admit(&self, req: &Request) -> bool {
+        if !self.has_free_slot() {
+            return false;
+        }
+        let Some(page_tokens) = self.cache.page_tokens() else {
+            return true;
+        };
+        let prompt_len = req.prompt.len();
+        let budget =
+            req.params.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
+        // A free row holds no pages (retirement returned them), so the
+        // request's page need is its full footprint, clipped exactly
+        // like the cache clips (`pages_for`).
+        let tokens = (prompt_len + budget).min(self.max_ctx);
+        tokens.div_ceil(page_tokens.max(1)) <= self.cache.free_pages()
+    }
+
+    /// Page-pool gauge for metrics sampling: `(used, total, allocated,
+    /// freed)` — current occupancy plus the cumulative map/free
+    /// counters.  `None` when the cache is monolithic (unpaged).
+    pub fn kv_page_stats(&self) -> Option<(usize, usize, u64, u64)> {
+        self.cache.page_tokens()?;
+        let total = self.cache.total_pages();
+        let used = total.saturating_sub(self.cache.free_pages());
+        Some((used, total, self.cache.pages_allocated(), self.cache.pages_freed()))
+    }
+
     /// Admit one request into a free slot.  Admission only *registers*
     /// the request — no forward runs here: the prompt prefills across
     /// the following [`ContinuousEngine::step`] calls, one
@@ -338,6 +384,21 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         // never a batch-max.
         let budget = req.params.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
         self.cache.reset_row(row);
+        // Paged caches: reserve the whole footprint up front, all-or-
+        // nothing, so an admitted row can never run the pool dry
+        // mid-stream.  Callers gate on `can_admit`, so failing here is
+        // exceptional (and leaks nothing — the slot was never
+        // installed).
+        if !self.cache.try_reserve_row(row, prompt_len + budget) {
+            bail!(
+                "kv page pool exhausted: {} tokens (prompt {prompt_len} + budget \
+                 {budget}) need more pages than the {} free of {}; defer admission \
+                 until residents retire",
+                prompt_len + budget,
+                self.cache.free_pages(),
+                self.cache.total_pages()
+            );
+        }
         let now = Instant::now();
         let sampler = Sampler::new(&req.params);
         self.slots[row] = Some(Slot {
@@ -928,6 +989,83 @@ mod tests {
             let vast = EngineConfig { mem_budget_bytes: Some(u64::MAX), ..Default::default() };
             assert_eq!(vast.resolve_slots(&b, 1), MAX_AUTO_SLOTS, "autoscale ceiling binds");
         }
+    }
+
+    #[test]
+    fn paged_kv8_admits_strictly_more_slots_under_the_same_budget() {
+        // The page-granular autoscaling satellite: the per-slot byte
+        // estimate tracks the configured KV precision, so the same
+        // memory budget must admit strictly more residents with INT8
+        // pages than with dense FP32 rows.  Only assert when no env
+        // override can preempt the comparison (CI crosses
+        // QUIK_KV_BITS=8, which would make both backends identical).
+        if std::env::var(ExecConfig::ENV_SLOTS).is_ok()
+            || std::env::var(ExecConfig::ENV_KV_BITS).is_ok()
+        {
+            return;
+        }
+        let fp32 = backend();
+        let kv8 = NativeBackend::seeded("engine-test-kv8", NativeConfig::demo(), 5, demo_policy())
+            .unwrap()
+            .with_kv_bits(8);
+        let per_fp32 = fp32.slot_bytes().expect("native backend estimates slot bytes");
+        let per_kv8 = kv8.slot_bytes().expect("native backend estimates slot bytes");
+        assert!(
+            per_kv8 < per_fp32,
+            "INT8 pages must shrink the per-slot estimate ({per_kv8} vs {per_fp32})"
+        );
+        let cfg = EngineConfig {
+            mem_budget_bytes: Some(6 * per_fp32),
+            ..Default::default()
+        };
+        let slots_fp32 = cfg.resolve_slots(&fp32, 1);
+        let slots_kv8 = cfg.resolve_slots(&kv8, 1);
+        assert_eq!(slots_fp32, 6);
+        assert!(
+            slots_kv8 > slots_fp32,
+            "same budget must admit strictly more KV8 residents ({slots_kv8} vs {slots_fp32})"
+        );
+    }
+
+    #[test]
+    fn page_pool_headroom_gates_admission_and_retire_returns_pages() {
+        // A one-page pool at page size == max context: two slots but
+        // only one row's worth of KV pages.  A dry pool must *defer*
+        // (can_admit false, admit errors without leaking the slot),
+        // and the retiring row must return its pages so the deferred
+        // request admits cleanly afterwards.
+        let max = NativeConfig::demo().max_seq;
+        let mut b = backend().with_kv_page(max).with_kv_pool_pages(Some(1));
+        let mut m = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
+        let (used0, total, alloc0, freed0) = engine.kv_page_stats().expect("paged cache");
+        assert_eq!((used0, total, alloc0, freed0), (0, 1, 0, 0));
+
+        let req1 = Request::new(0, prompt(1, 8), 2);
+        assert!(engine.can_admit(&req1));
+        let _rx0 = admit(&mut engine, &mut b, req1);
+        let (used, _, alloc, _) = engine.kv_page_stats().unwrap();
+        assert_eq!((used, alloc), (1, 1), "admission reserves the row's pages up front");
+
+        let req2 = Request::new(1, prompt(2, 8), 2);
+        assert!(!engine.can_admit(&req2), "dry pool must defer admission");
+        assert!(engine.has_free_slot(), "the gate is pages, not slots");
+        let (tx, _rx1) = mpsc::channel();
+        assert!(
+            engine.admit(&mut b, Request::new(2, prompt(2, 8), 2), tx).is_err(),
+            "forcing admission past a dry pool must error"
+        );
+        assert!(engine.has_free_slot(), "failed admission must not leak a slot");
+
+        let done = run_until(&mut engine, &mut b, &mut m, 1);
+        assert_eq!(done.len(), 1);
+        let (used, _, _, freed) = engine.kv_page_stats().unwrap();
+        assert_eq!((used, freed), (0, 1), "retirement returns pages to the pool");
+        assert!(engine.can_admit(&req2), "returned pages unblock the deferred request");
+        let _rx2 = admit(&mut engine, &mut b, req2);
+        let done = run_until(&mut engine, &mut b, &mut m, 1);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
     }
 
     #[test]

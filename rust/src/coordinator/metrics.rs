@@ -16,7 +16,12 @@
 //! the v2 early-retire paths (stop token / EOS / cancellation — each of
 //! which frees an engine slot before the decode budget runs out) in
 //! [`Metrics::stop_hits`] / [`Metrics::eos_hits`] /
-//! [`Metrics::cancelled`].
+//! [`Metrics::cancelled`].  The paged KV cache surfaces through
+//! [`Metrics::kv_pages`] (pool occupancy gauge, sampled per loop pass),
+//! the cumulative [`Metrics::kv_pages_allocated`] /
+//! [`Metrics::kv_pages_freed`] map/free counters, and
+//! [`Metrics::kv_admission_deferrals`] (admissions held back — not
+//! rejected — while the pool lacked headroom).
 
 use std::time::Duration;
 
@@ -170,6 +175,21 @@ pub struct Metrics {
     pub prefill_chunks: u64,
     /// Admissions whose prompt needed more than one prefill chunk.
     pub chunked_admissions: u64,
+    /// Paged-KV pool gauge: latest sampled `(used, total)` page counts.
+    /// `None` until a paged cache has been sampled — monolithic caches
+    /// never report one, and both reports say `n/a` / `null`.
+    pub kv_pages: Option<(usize, usize)>,
+    /// Cumulative pages mapped out of the paged-KV pool (cache-lifetime
+    /// counter, sampled alongside [`Metrics::kv_pages`]).
+    pub kv_pages_allocated: u64,
+    /// Cumulative pages returned to the paged-KV pool (row resets /
+    /// retirements).
+    pub kv_pages_freed: u64,
+    /// Admission polls deferred because the paged-KV pool lacked
+    /// headroom for the queue head's footprint.  The request stays
+    /// queued (FIFO intact) and retries after retirements return pages
+    /// — deferral is *not* rejection and never closes a stream.
+    pub kv_admission_deferrals: u64,
     pub queue_time: Histogram,
     pub prefill_time: Histogram,
     pub decode_time: Histogram,
@@ -243,6 +263,15 @@ impl Metrics {
         self.active_width.record(w);
     }
 
+    /// Sample the paged-KV pool gauge (the continuous loop calls this
+    /// once per pass): current occupancy plus the cache's cumulative
+    /// map/free counters.
+    pub fn record_kv_pages(&mut self, used: usize, total: usize, allocated: u64, freed: u64) {
+        self.kv_pages = Some((used, total));
+        self.kv_pages_allocated = allocated;
+        self.kv_pages_freed = freed;
+    }
+
     /// Mean batch occupancy (1.0 = no padding waste).
     pub fn occupancy(&self) -> f64 {
         if self.batches == 0 {
@@ -280,11 +309,19 @@ impl Metrics {
                 self.active_width.max(),
             )
         };
+        // Same honesty rule as step occupancy: a monolithic cache has
+        // no page pool — say n/a, never a fabricated 0/0.
+        let kv = match self.kv_pages {
+            None => "n/a".to_string(),
+            Some((used, total)) => format!("{used}/{total}"),
+        };
         format!(
             "requests={} rejected={} stop_hits={} eos_hits={} cancelled={} \
              prompt_toks={} gen_toks={} batches={} occupancy={:.2}\n\
              engine_steps={} step_occupancy={step_occ} active_width {width}\n\
              prefill_chunks={} chunked_admissions={}\n\
+             kv_pages={kv} kv_pages_allocated={} kv_pages_freed={} \
+             kv_admission_deferrals={}\n\
              queue   mean={:?} p50={:?} p99={:?}\n\
              prefill mean={:?} p50={:?} p99={:?}\n\
              decode  mean={:?} p50={:?} p99={:?}\n\
@@ -303,6 +340,9 @@ impl Metrics {
             self.engine_steps,
             self.prefill_chunks,
             self.chunked_admissions,
+            self.kv_pages_allocated,
+            self.kv_pages_freed,
+            self.kv_admission_deferrals,
             self.queue_time.mean(),
             self.queue_time.quantile(0.5),
             self.queue_time.quantile(0.99),
@@ -354,8 +394,13 @@ impl Metrics {
             self.active_width.quantile(0.5),
             self.active_width.max(),
         );
+        // `null` (not 0/0) when the cache is monolithic / never sampled.
+        let kv = match self.kv_pages {
+            None => "null".to_string(),
+            Some((used, total)) => format!("{{\"used\":{used},\"total\":{total}}}"),
+        };
         format!(
-            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"active_width\":{width},\"prefill_chunks\":{},\"chunked_admissions\":{},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
+            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"active_width\":{width},\"prefill_chunks\":{},\"chunked_admissions\":{},\"kv_pages\":{kv},\"kv_pages_allocated\":{},\"kv_pages_freed\":{},\"kv_admission_deferrals\":{},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
             self.requests_completed,
             self.rejected,
             self.stop_hits,
@@ -368,6 +413,9 @@ impl Metrics {
             self.engine_steps,
             self.prefill_chunks,
             self.chunked_admissions,
+            self.kv_pages_allocated,
+            self.kv_pages_freed,
+            self.kv_admission_deferrals,
             hist(&self.queue_time),
             hist(&self.prefill_time),
             hist(&self.decode_time),
@@ -494,6 +542,30 @@ mod tests {
         assert_eq!(aw.get("max").unwrap().as_usize(), Some(4));
         assert_eq!(v.get("prefill_chunks").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("chunked_admissions").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn kv_page_gauge_surfaces_in_both_reports() {
+        let mut m = Metrics::default();
+        // never sampled (monolithic cache): honest n/a / null
+        assert!(m.report().contains("kv_pages=n/a"));
+        let v = crate::util::json::parse(&m.to_json()).expect("metrics JSON must parse");
+        assert_eq!(v.get("kv_pages"), Some(&crate::util::json::Value::Null));
+        assert_eq!(v.get("kv_admission_deferrals").unwrap().as_usize(), Some(0));
+
+        m.record_kv_pages(3, 8, 12, 9);
+        m.kv_admission_deferrals = 2;
+        let r = m.report();
+        assert!(r.contains("kv_pages=3/8"));
+        assert!(r.contains("kv_pages_allocated=12 kv_pages_freed=9"));
+        assert!(r.contains("kv_admission_deferrals=2"));
+        let v = crate::util::json::parse(&m.to_json()).expect("metrics JSON must parse");
+        let kv = v.get("kv_pages").unwrap();
+        assert_eq!(kv.get("used").unwrap().as_usize(), Some(3));
+        assert_eq!(kv.get("total").unwrap().as_usize(), Some(8));
+        assert_eq!(v.get("kv_pages_allocated").unwrap().as_usize(), Some(12));
+        assert_eq!(v.get("kv_pages_freed").unwrap().as_usize(), Some(9));
+        assert_eq!(v.get("kv_admission_deferrals").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -167,8 +167,37 @@ impl Coordinator {
         mode: EngineMode,
         engine_cfg: EngineConfig,
     ) -> Result<Self> {
+        Self::start_native_with_kv(ckpt, policy, variant, batcher_cfg, mode, engine_cfg, None, None)
+    }
+
+    /// [`Coordinator::start_native_with_engine`] with explicit KV-cache
+    /// layout knobs: page size in tokens and page storage precision
+    /// (`32` = FP32 pages, `8` = INT8 quantized pages).  `None` fields
+    /// fall back to the `QUIK_KV_PAGE` / `QUIK_KV_BITS` environment,
+    /// then to the defaults (64-token FP32 pages) — see
+    /// [`crate::config::ExecConfig`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_native_with_kv(
+        ckpt: NativeCheckpoint,
+        policy: QuikPolicy,
+        variant: Variant,
+        batcher_cfg: BatcherConfig,
+        mode: EngineMode,
+        engine_cfg: EngineConfig,
+        kv_page: Option<usize>,
+        kv_bits: Option<u32>,
+    ) -> Result<Self> {
         Self::start_with_engine(
-            move || NativeBackend::new("native", ckpt, policy),
+            move || {
+                let mut b = NativeBackend::new("native", ckpt, policy)?;
+                if let Some(page) = kv_page {
+                    b = b.with_kv_page(page);
+                }
+                if let Some(bits) = kv_bits {
+                    b = b.with_kv_bits(bits);
+                }
+                Ok(b)
+            },
             variant,
             batcher_cfg,
             mode,
@@ -390,6 +419,12 @@ fn cancel_queued(
 /// A request arriving mid-decode is admitted at the next step boundary —
 /// it never waits for the resident batch to finish; a stop/EOS hit or a
 /// cancellation frees its slot at the same granularity.
+///
+/// On a paged KV cache admission is additionally gated on page headroom
+/// ([`ContinuousEngine::can_admit`]): a request whose footprint does not
+/// fit the pool *right now* stays queued (deferred, FIFO intact, counted
+/// in `kv_admission_deferrals`) until retirements return pages — the
+/// loop never panics or corrupts resident rows on an exhausted pool.
 fn run_continuous<B: InferenceBackend>(
     backend: &mut B,
     mut engine: ContinuousEngine<B>,
@@ -472,8 +507,31 @@ fn run_continuous<B: InferenceBackend>(
         }
 
         // ---- admission: fill free slots from the queue ----------------
+        // Peek before popping: an admission the engine cannot take right
+        // now (paged KV pool dry) **defers** — the request keeps its
+        // FIFO position and is retried next iteration, after the step
+        // below retires residents and returns their pages.  Deferral is
+        // not rejection: nothing is dropped, nothing reordered.
         while engine.has_free_slot() {
-            let Some(req) = batcher.pop() else { break };
+            let Some(head) = batcher.peek() else { break };
+            if !engine.can_admit(head) {
+                if engine.resident() > 0 {
+                    metrics.kv_admission_deferrals += 1;
+                    break;
+                }
+                // An empty engine holds no pages, so this request can
+                // never fit (its footprint exceeds the whole pool):
+                // reject it instead of spinning on it forever.
+                let req = batcher.pop().expect("peeked request still queued");
+                eprintln!(
+                    "[coordinator] request {} exceeds the kv page pool; rejected",
+                    req.id
+                );
+                waiters.remove(&req.id); // dropping tx closes the stream
+                metrics.rejected += 1;
+                continue;
+            }
+            let req = batcher.pop().expect("peeked request still queued");
             let id = req.id;
             let Some(tx) = waiters.remove(&id) else { continue };
             if let Err(e) = engine.admit(backend, req, tx) {
@@ -506,6 +564,13 @@ fn run_continuous<B: InferenceBackend>(
                     }
                 }
             }
+        }
+
+        // ---- page-pool gauge ------------------------------------------
+        // Sample once per loop pass (paged caches only) so the snapshot
+        // the metrics verb returns tracks live pool occupancy.
+        if let Some((used, total, allocated, freed)) = engine.kv_page_stats() {
+            metrics.record_kv_pages(used, total, allocated, freed);
         }
     }
 }

@@ -66,6 +66,19 @@
 //! ← {"cancelled": 3, "found": true}    found = still queued or decoding
 //! ```
 //!
+//! The metrics snapshot also carries the **paged KV cache** fields
+//! (continuous engine over a paged backend cache):
+//!
+//! ```text
+//!    "kv_pages": {"used": 3, "total": 32},   pool occupancy gauge, or null
+//!                                            when the cache is monolithic
+//!    "kv_pages_allocated": 120,              cumulative pages mapped
+//!    "kv_pages_freed": 117,                  cumulative pages returned
+//!    "kv_admission_deferrals": 2             admissions held back (still
+//!                                            queued, NOT rejected) while
+//!                                            the pool lacked headroom
+//! ```
+//!
 //! # Errors and backpressure
 //!
 //! Malformed requests get `{"error": "..."}` and the connection keeps
@@ -117,6 +130,14 @@ pub struct ServerConfig {
     /// Admission prefill chunk length (`--prefill-chunk`).  `None`
     /// defers to `QUIK_PREFILL_CHUNK`, then to unchunked (0).
     pub prefill_chunk: Option<usize>,
+    /// KV-cache page size in tokens (`--kv-page`).  `None` defers to
+    /// `QUIK_KV_PAGE`, then to the 64-token default
+    /// ([`crate::config::ExecConfig`]).
+    pub kv_page: Option<usize>,
+    /// KV-cache page storage precision (`--kv-bits`): 32 = FP32 pages
+    /// (bit-identical to the dense cache), 8 = INT8 quantized pages.
+    /// `None` defers to `QUIK_KV_BITS`, then to 32.
+    pub kv_bits: Option<u32>,
 }
 
 impl Default for ServerConfig {
@@ -128,6 +149,8 @@ impl Default for ServerConfig {
             accept_limit: None,
             slots: None,
             prefill_chunk: None,
+            kv_page: None,
+            kv_bits: None,
         }
     }
 }

@@ -28,9 +28,18 @@
 //!     micro-kernel (AVX2 widening i8→i32 MACs where available) — all of
 //!     it *bit-identical* to serial execution at every thread count
 //!     (`QUIK_THREADS` env override / `NativeBackend::with_threads`,
-//!     default: available parallelism).  And `backend::pjrt` (behind the
-//!     `pjrt` cargo feature), which replays the L2 artifacts through
-//!     PJRT;
+//!     default: available parallelism).  The KV cache is **paged and
+//!     precision-pluggable**: a shared pool of fixed-size pages
+//!     (`QUIK_KV_PAGE`/`--kv-page` tokens each) behind per-row page
+//!     tables — FP32 pages are bit-identical to the dense layout at
+//!     every page size (paging is pure indirection), INT8 pages
+//!     (`QUIK_KV_BITS=8`/`--kv-bits 8`) quantize each cached K/V vector
+//!     per token with the paper's asymmetric scheme and are pinned by
+//!     greedy golden-parity; retirement returns a row's pages to the
+//!     pool, and admission is additionally gated on free-page headroom
+//!     (see the cache contract in [`backend`]).  And `backend::pjrt`
+//!     (behind the `pjrt` cargo feature), which replays the L2 artifacts
+//!     through PJRT;
 //!   * [`coordinator`] — the serving layer, generic over the backend
 //!     trait: a slot-based **continuous batching engine**
 //!     ([`coordinator::engine`], the default on row-maskable backends —
@@ -41,7 +50,11 @@
 //!     (`QUIK_PREFILL_CHUNK`/`--prefill-chunk`) so long prompts stall
 //!     residents by at most one chunk, and the slot count autoscales
 //!     against a memory budget via [`memmodel`] unless pinned by
-//!     `QUIK_SLOTS`/`--slots`), a static
+//!     `QUIK_SLOTS`/`--slots` — the per-slot estimate is charged at the
+//!     configured KV page layout and precision, so INT8 pages admit
+//!     strictly more residents under the same budget, and on a paged
+//!     cache the serving loop additionally *defers* admissions the page
+//!     pool cannot hold until residents retire), a static
 //!     batch-at-a-time fallback ([`coordinator::scheduler`], for
 //!     static-shape backends; `QUIK_ENGINE` selects explicitly), and the
 //!     **v2 generation API** end-to-end: requests carry

@@ -150,6 +150,10 @@ fn print_help() {
                                                default: memory-budget autoscale)\n\
                           [--prefill-chunk 64] admission prefill chunk length\n\
                                                (QUIK_PREFILL_CHUNK env; 0 = whole prompt)\n\
+                          [--kv-page 64]       KV cache page size in tokens\n\
+                                               (QUIK_KV_PAGE env; native backend)\n\
+                          [--kv-bits 32|8]     KV page precision: 32 = FP32,\n\
+                                               8 = INT8 quantized (QUIK_KV_BITS env)\n\
                           --requests 16 --prompt-len 48 --gen 16 [--rate <req/s>]\n\
                           [--temperature 0.8 --top-k 40 --top-p 0.95\n\
                            --sample-seed 7 --stop 7,42 --eos 2]  (sampling/stop)\n\
@@ -202,6 +206,14 @@ fn serve(args: &Args) -> Result<()> {
         prefill_chunk: args.get_opt_usize("prefill-chunk")?,
         ..Default::default()
     };
+    // KV-cache layout knobs (native backend): page size in tokens and
+    // page precision.  Absent flags defer to QUIK_KV_PAGE / QUIK_KV_BITS.
+    let kv_page = args.get_opt_usize("kv-page")?;
+    let kv_bits = match args.get_opt_usize("kv-bits")? {
+        Some(b) if b == 8 || b == 32 => Some(b as u32),
+        Some(b) => bail!("--kv-bits must be 8 or 32, got {b}"),
+        None => None,
+    };
     let spec = WorkloadSpec {
         n_requests: args.get_usize("requests", 16)?,
         prompt_len: args.get_usize("prompt-len", 48)?,
@@ -213,13 +225,15 @@ fn serve(args: &Args) -> Result<()> {
         "native" => {
             let (ckpt, policy) = native_checkpoint(args)?;
             println!("starting coordinator: backend=native variant={variant:?} engine={engine:?}");
-            Coordinator::start_native_with_engine(
+            Coordinator::start_native_with_kv(
                 ckpt,
                 policy,
                 variant,
                 batcher_cfg(),
                 engine,
                 engine_cfg,
+                kv_page,
+                kv_bits,
             )?
         }
         "pjrt" => start_pjrt_coordinator(args, variant)?,
@@ -233,6 +247,8 @@ fn serve(args: &Args) -> Result<()> {
             max_concurrent: args.get_usize("max-conns", 64)?,
             slots: engine_cfg.slots,
             prefill_chunk: engine_cfg.prefill_chunk,
+            kv_page,
+            kv_bits,
             ..ServerConfig::default()
         };
         return quik::coordinator::tcp::serve(addr, coord, None, tcp_cfg);

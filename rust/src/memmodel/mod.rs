@@ -42,12 +42,80 @@ impl MemoryReport {
     }
 }
 
-/// Peak memory of a prefill pass (`batch` × `seq` tokens).
+/// How the serving stack stores resident K/V — the knobs that decide
+/// `kv_cache_bytes`.  The paper's Table-6 numbers model an FP16, densely
+/// allocated cache ([`KvCacheSpec::fp16_dense`]); the native backend
+/// stores FP32 or INT8 *pages* ([`KvCacheSpec::paged`]), which charge
+/// page-granular rounding, the page-table entries, and (for INT8) the
+/// per-token quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvCacheSpec {
+    /// Storage bits per K/V element (8, 16 or 32).
+    pub bits: u32,
+    /// Tokens per page; 0 = monolithic per-row buffers (no page rounding
+    /// and no page-table overhead).
+    pub page_tokens: usize,
+}
+
+impl KvCacheSpec {
+    /// The paper's serving model: FP16 K/V, dense per-row allocation.
+    pub fn fp16_dense() -> Self {
+        Self { bits: 16, page_tokens: 0 }
+    }
+
+    /// A paged pool at `bits` precision (the native backend's layout).
+    pub fn paged(bits: u32, page_tokens: usize) -> Self {
+        Self { bits, page_tokens }
+    }
+}
+
+/// KV-cache bytes for `batch` rows of `seq` resident tokens under `kv`:
+/// K and V at `kv.bits` per element (GQA/MQA-aware width), plus — for
+/// paged layouts — rounding up to whole pages, one 8-byte page-table
+/// entry per mapped page, and — for INT8 pages — one f32 `(scale, zero)`
+/// pair per cached `d_head` vector per tensor (the per-token asymmetric
+/// quantization parameters).
+pub fn kv_cache_bytes(spec: &ModelSpec, kv: &KvCacheSpec, batch: usize, seq: usize) -> f64 {
+    let (positions, table_bytes) = if kv.page_tokens > 0 {
+        let pages_per_row = seq.div_ceil(kv.page_tokens);
+        (pages_per_row * kv.page_tokens, (batch * pages_per_row) as f64 * 8.0)
+    } else {
+        (seq, 0.0)
+    };
+    let elems = (spec.n_layers * batch * positions * spec.kv_dim()) as f64;
+    let data = 2.0 * elems * (kv.bits as f64 / 8.0); // K and V planes
+    let quant_meta = if kv.bits == 8 {
+        // scale + zero f32, per (layer, row, kv_head, position), K and V
+        (spec.n_layers * batch * positions * spec.n_kv_heads) as f64 * 16.0
+    } else {
+        0.0
+    };
+    data + quant_meta + table_bytes
+}
+
+/// Peak memory of a prefill pass (`batch` × `seq` tokens) under the
+/// paper's serving model — FP16 dense K/V ([`KvCacheSpec::fp16_dense`]),
+/// which is what Table 6 reports.  Backends sizing their *own* slots
+/// must pass their actual cache layout to [`memory_report_with_kv`]
+/// instead (the native backend stores FP32 or INT8 pages, not FP16).
 pub fn memory_report(
     spec: &ModelSpec,
     policy: &QuikPolicy,
     batch: usize,
     seq: usize,
+) -> MemoryReport {
+    memory_report_with_kv(spec, policy, batch, seq, &KvCacheSpec::fp16_dense())
+}
+
+/// [`memory_report`] with an explicit KV-cache layout, so
+/// `kv_cache_bytes` reflects the precision and page structure a backend
+/// actually allocates.
+pub fn memory_report_with_kv(
+    spec: &ModelSpec,
+    policy: &QuikPolicy,
+    batch: usize,
+    seq: usize,
+    kv: &KvCacheSpec,
 ) -> MemoryReport {
     let policy = policy.specialize(spec.family);
     let mut weight_bytes = 0f64;
@@ -93,10 +161,9 @@ pub fn memory_report(
     };
     let activation_bytes = 2.0 * hidden + 2.0 * mlp_int + qbuf + logits + attn_ws;
 
-    // KV cache for the prefilled context (FP16 K and V per layer,
-    // GQA/MQA-aware width).
-    let kv_cache_bytes =
-        2.0 * (spec.n_layers * batch * seq * spec.kv_dim()) as f64 * 2.0;
+    // KV cache for the prefilled context, at the configured storage
+    // precision and page layout.
+    let kv_bytes = kv_cache_bytes(spec, kv, batch, seq);
 
     MemoryReport {
         weight_bytes,
@@ -104,7 +171,7 @@ pub fn memory_report(
         metadata_bytes,
         embedding_bytes,
         activation_bytes,
-        kv_cache_bytes,
+        kv_cache_bytes: kv_bytes,
     }
 }
 
@@ -171,6 +238,48 @@ mod tests {
         let [fp16, _q8, q4] = table6_row(&s, 1, 2048);
         assert!(fp16 > 192.0, "falcon-180b FP16 {fp16} GB must exceed 8×24 GB");
         assert!(q4 < 192.0, "falcon-180b QUIK-4B {q4} GB must fit the server");
+    }
+
+    #[test]
+    fn kv_bytes_per_precision() {
+        // One precision per test arm, against hand-computed expectations
+        // on llama2-70b (GQA: kv_dim = 8 heads × 128 = 1024).
+        let s = spec("llama2-70b").unwrap();
+        let (batch, seq) = (4usize, 2048usize);
+        let elems = (s.n_layers * batch * seq * s.kv_dim()) as f64;
+        // FP16 dense: 2 planes × 2 bytes, no page or quant overhead
+        let fp16 = kv_cache_bytes(&s, &KvCacheSpec::fp16_dense(), batch, seq);
+        assert_eq!(fp16, 2.0 * elems * 2.0);
+        // FP32 paged, page divides seq: 2 planes × 4 bytes + table entries
+        let f32p = kv_cache_bytes(&s, &KvCacheSpec::paged(32, 64), batch, seq);
+        let table = (batch * (seq / 64)) as f64 * 8.0;
+        assert_eq!(f32p, 2.0 * elems * 4.0 + table);
+        // INT8 paged: 1 byte/elem + f32 scale+zero per d_head vector per
+        // plane + table entries — well under half the FP32 layout
+        let i8p = kv_cache_bytes(&s, &KvCacheSpec::paged(8, 64), batch, seq);
+        let qmeta = (s.n_layers * batch * seq * s.n_kv_heads) as f64 * 16.0;
+        assert_eq!(i8p, 2.0 * elems + qmeta + table);
+        assert!(i8p < f32p / 2.0, "int8 pages {i8p} not under half of f32 {f32p}");
+        // page-granular rounding: a partial page is charged whole
+        let ragged = kv_cache_bytes(&s, &KvCacheSpec::paged(32, 64), 1, 65);
+        let full = kv_cache_bytes(&s, &KvCacheSpec::paged(32, 64), 1, 128);
+        assert_eq!(ragged, full, "65 tokens must charge 2 full 64-token pages");
+    }
+
+    #[test]
+    fn memory_report_with_kv_changes_only_kv_term() {
+        let s = spec("opt-66b").unwrap();
+        let pol = QuikPolicy::QUIK_4B;
+        let base = memory_report(&s, &pol, 1, 2048);
+        let paged = memory_report_with_kv(&s, &pol, 1, 2048, &KvCacheSpec::paged(8, 64));
+        assert_eq!(base.weight_bytes, paged.weight_bytes);
+        assert_eq!(base.activation_bytes, paged.activation_bytes);
+        assert!(paged.kv_cache_bytes < base.kv_cache_bytes);
+        // the default report is the paper's FP16 dense serving model
+        assert_eq!(
+            base.kv_cache_bytes,
+            kv_cache_bytes(&s, &KvCacheSpec::fp16_dense(), 1, 2048)
+        );
     }
 
     #[test]

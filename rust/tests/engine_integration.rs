@@ -203,6 +203,75 @@ fn slot_recycled_under_a_decoding_neighbor() {
     assert_eq!(by_id(2).generated, solo_stream(variant, &pc, 5), "slot-recycled C diverged");
 }
 
+#[test]
+fn near_exhaustion_admission_fuzz_defers_never_panics_and_stays_bit_exact() {
+    // A deliberately tiny page pool (10 pages × 8 tokens = 80 tokens
+    // shared by 3 slots, versus the 3 × 96 dense-equivalent) under random
+    // admission pressure.  The engine must *defer* admissions on
+    // free-page headroom — never panic, never corrupt a resident — every
+    // completed stream must still equal its solo run, and retirements
+    // must return every page to the pool.
+    let variant = Variant::Fp16;
+    let mut b = backend().with_kv_page(8).with_kv_pool_pages(Some(10));
+    let mut metrics = Metrics::default();
+    let mut engine = ContinuousEngine::new(&mut b, variant, 3).unwrap();
+    let (used0, total, _, _) = engine.kv_page_stats().expect("paged cache must report stats");
+    assert_eq!((used0, total), (0, 10));
+    let mut rng = Rng::new(0xBEEF);
+    let n_req = 16usize;
+    let reqs: Vec<(Vec<i32>, GenerationParams)> = (0..n_req)
+        .map(|_| {
+            let len = 20 + rng.below(24); // 20..=43 prompt tokens
+            let prompt: Vec<i32> = (0..len).map(|_| rng.range_i32(0, 89)).collect();
+            (prompt, GenerationParams::greedy(4 + rng.below(9))) // 4..=12 new
+        })
+        .collect();
+    let mut pending = 0usize;
+    let mut rxs = Vec::new();
+    let mut done: Vec<Response> = Vec::new();
+    let mut deferrals = 0usize;
+    let mut guard = 0;
+    while done.len() < n_req {
+        guard += 1;
+        assert!(guard < 20_000, "engine failed to converge near pool exhaustion");
+        while pending < n_req && engine.has_free_slot() {
+            let (prompt, params) = reqs[pending].clone();
+            let req = Request::with_params(pending as u64, prompt, params);
+            if !engine.can_admit(&req) {
+                // an empty engine holds no pages, and each of these
+                // requests fits an all-free pool — deferring there would
+                // be a livelock, not backpressure
+                assert!(engine.resident() > 0, "deferred into an empty engine");
+                deferrals += 1;
+                break; // decode residents until retirements free pages
+            }
+            let (tx, rx) = mpsc::channel();
+            engine.admit(&mut b, req, tx).unwrap();
+            rxs.push(rx);
+            pending += 1;
+        }
+        done.extend(engine.step(&mut b, &mut metrics).unwrap());
+    }
+    assert!(deferrals > 0, "pool never hit the admission gate — not a near-exhaustion run");
+    let mut seen: Vec<u64> = done.iter().map(|r| r.id).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..n_req as u64).collect::<Vec<_>>(), "lost or duplicated a request");
+    for resp in &done {
+        let (prompt, params) = &reqs[resp.id as usize];
+        let solo = solo_stream_with(variant, prompt, params);
+        assert_eq!(
+            resp.generated, solo,
+            "request {} diverged from solo under page-pool pressure",
+            resp.id
+        );
+    }
+    // every page returned: the pool ends exactly where it started
+    let (used, total, allocated, freed) = engine.kv_page_stats().unwrap();
+    assert_eq!((used, total), (0, 10), "retired rows left pages mapped");
+    assert_eq!(allocated, freed, "page alloc/free counters out of balance");
+    assert!(allocated > 0, "fuzz run never mapped a page");
+}
+
 /// Count the `Event::Token`s currently buffered on a stream channel.
 fn drain_tokens(rx: &mpsc::Receiver<Event>) -> usize {
     let mut n = 0;

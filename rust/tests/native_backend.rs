@@ -73,6 +73,44 @@ fn quik4_matches_fp32_argmax_token_for_token() {
 }
 
 #[test]
+fn kv8_paged_cache_preserves_the_golden_greedy_stream() {
+    // INT8 KV pages re-quantize every cached key/value vector, so bit
+    // identity is off the table — the contract is end-task parity: the
+    // golden model's greedy argmax stream must survive KV8 exactly, on
+    // both variants and across page sizes that straddle the prompt.
+    for page in [16usize, 64] {
+        let mut backend = golden_backend().with_kv_bits(8).with_kv_page(page);
+        assert_eq!((backend.kv_bits(), backend.kv_page()), (8, page));
+        backend.prepare(Variant::Quik4, Phase::Prefill, 1).unwrap();
+        let prompt = golden_prompt(backend.vocab());
+        let fp32 = greedy(&backend, Variant::Fp16, &prompt, N_GEN);
+        assert_eq!(
+            fp32, GOLDEN_FP32_STREAM,
+            "page={page}: FP32 weights + KV8 cache diverged from the golden stream"
+        );
+        let quik = greedy(&backend, Variant::Quik4, &prompt, N_GEN);
+        assert_eq!(
+            quik, GOLDEN_FP32_STREAM,
+            "page={page}: QUIK-4B + KV8 cache diverged from the golden stream"
+        );
+    }
+}
+
+#[test]
+fn kv8_rollback_replay_is_deterministic() {
+    // Rolling back keeps quantized pages mapped; replaying the rejected
+    // position must read the identical INT8 content back.
+    let backend = golden_backend().with_kv_bits(8);
+    let prompt = golden_prompt(backend.vocab());
+    let mut cache = backend.new_cache(Variant::Fp16, 1).unwrap();
+    backend.forward(Variant::Fp16, Phase::Prefill, &prompt, 1, &mut cache).unwrap();
+    let a = backend.forward(Variant::Fp16, Phase::Decode, &[9], 1, &mut cache).unwrap();
+    cache.set_len(PROMPT_LEN); // reject the speculative token
+    let b = backend.forward(Variant::Fp16, Phase::Decode, &[9], 1, &mut cache).unwrap();
+    assert_eq!(a.logits, b.logits, "KV8 rollback+replay must be deterministic");
+}
+
+#[test]
 fn verify_window_is_bitexact_with_sequential_decode() {
     // The property greedy speculative decoding's losslessness rests on:
     // scoring K tokens in one (Fp16, Verify) call must equal K sequential

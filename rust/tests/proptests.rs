@@ -452,6 +452,128 @@ fn prop_masked_forward_compaction_bitexact_random_masks() {
 }
 
 #[test]
+fn prop_paged_kv_cache_bitexact_across_page_sizes() {
+    // Paging is pure indirection: backends that differ only in KV page
+    // size — degenerate 1-token pages, odd sizes that straddle step
+    // boundaries, and the dense-equivalent single page per row — must
+    // produce bit-identical logits through prefill, masked steps and
+    // rollback replay (rolling back keeps pages mapped, so the replay
+    // reads the original content), while the page accounting (pages
+    // mapped on prefill, pages returned by reset_row) tracks exactly.
+    use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+    use quik::backend::{InferenceBackend, KvCache, Phase, Variant};
+
+    let mut rng = Rng::new(112);
+    let max_seq = NativeConfig::demo().max_seq;
+    let mut oracle = NativeBackend::seeded("prop-paged", NativeConfig::demo(), 9, demo_policy())
+        .unwrap()
+        .with_kv_page(max_seq); // one page per row — the dense layout
+    for page in [1usize, 3, 16, max_seq] {
+        let mut b = NativeBackend::seeded("prop-paged", NativeConfig::demo(), 9, demo_policy())
+            .unwrap()
+            .with_kv_page(page);
+        let vocab = b.vocab() as i32;
+        for case in 0..3 {
+            let batch = 1 + rng.below(3); // 1..=3 rows
+            let seq = 1 + rng.below(3); // step length 1..=3
+            let prompt_len = 2 + rng.below(6);
+            let variant = if case % 2 == 0 { Variant::Quik4 } else { Variant::Fp16 };
+            let phase = if seq == 1 { Phase::Decode } else { Phase::Prefill };
+            b.prepare(variant, Phase::Prefill, batch).unwrap();
+            oracle.prepare(variant, Phase::Prefill, batch).unwrap();
+
+            let prompt: Vec<i32> =
+                (0..batch * prompt_len).map(|_| rng.range_i32(0, vocab - 1)).collect();
+            let mut cache_p = b.new_cache(variant, batch).unwrap();
+            let mut cache_o = oracle.new_cache(variant, batch).unwrap();
+            assert_eq!(cache_p.page_tokens(), Some(page));
+            let pre_free = cache_p.free_pages();
+            let out_p =
+                b.forward(variant, Phase::Prefill, &prompt, batch, &mut cache_p).unwrap();
+            let out_o =
+                oracle.forward(variant, Phase::Prefill, &prompt, batch, &mut cache_o).unwrap();
+            let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits(&out_p.logits),
+                bits(&out_o.logits),
+                "case {case}: page={page} prefill diverged from the dense layout"
+            );
+            assert_eq!(
+                pre_free - cache_p.free_pages(),
+                batch * prompt_len.div_ceil(page),
+                "case {case}: page={page} prefill mapped the wrong page count"
+            );
+
+            // random mask with at least one active row; poison the rest
+            // (a compacting forward may never read those token values)
+            let mut active = vec![false; batch];
+            for a in active.iter_mut() {
+                *a = rng.below(2) == 0;
+            }
+            active[rng.below(batch)] = true;
+            let mut step: Vec<i32> =
+                (0..batch * seq).map(|_| rng.range_i32(0, vocab - 1)).collect();
+            for (row, live) in active.iter().enumerate() {
+                if !live {
+                    for t in &mut step[row * seq..(row + 1) * seq] {
+                        *t = vocab + 7777;
+                    }
+                }
+            }
+            let ms_p =
+                b.forward_masked(variant, phase, &step, batch, &mut cache_p, &active).unwrap();
+            let ms_o = oracle
+                .forward_masked(variant, phase, &step, batch, &mut cache_o, &active)
+                .unwrap();
+            for (row, live) in active.iter().enumerate() {
+                if !live {
+                    continue;
+                }
+                for t in 0..seq {
+                    assert_eq!(
+                        bits(ms_p.row(row, t)),
+                        bits(ms_o.row(row, t)),
+                        "case {case}: page={page} masked row {row}@{t} diverged"
+                    );
+                }
+            }
+
+            // rollback replay: rolling active rows back must keep their
+            // pages mapped, so replaying the same step is bit-identical
+            for (row, live) in active.iter().enumerate() {
+                if *live {
+                    cache_p.set_row_len(row, prompt_len);
+                }
+            }
+            let replay =
+                b.forward_masked(variant, phase, &step, batch, &mut cache_p, &active).unwrap();
+            for (row, live) in active.iter().enumerate() {
+                if !live {
+                    continue;
+                }
+                for t in 0..seq {
+                    assert_eq!(
+                        bits(replay.row(row, t)),
+                        bits(ms_p.row(row, t)),
+                        "case {case}: page={page} rollback replay diverged at row {row}@{t}"
+                    );
+                }
+            }
+
+            // retirement returns every page the row held to the free pool
+            let row0_len = prompt_len + if active[0] { seq } else { 0 };
+            let before = cache_p.free_pages();
+            cache_p.reset_row(0);
+            assert_eq!(
+                cache_p.free_pages() - before,
+                row0_len.div_ceil(page),
+                "case {case}: page={page} reset_row returned the wrong page count"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_batcher_never_loses_or_duplicates() {
     let mut rng = Rng::new(106);
     for _ in 0..20 {
