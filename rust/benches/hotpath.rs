@@ -589,6 +589,91 @@ fn main() {
         ));
     }
 
+    // --- demand-paged KV overcommit: stop-heavy admission capacity -----
+    // The PR-8 tentpole comparison: the same stop-heavy burst through a
+    // deliberately small page pool (10 pages of 16 tokens = two whole
+    // 72-token footprints), reserve vs demand admission.  Reserve maps
+    // every admission's worst-case footprint up front, so the pool caps
+    // concurrency at 2 residents; demand maps pages as they are written
+    // and gates admission on the first prefill chunk only, filling all
+    // 4 slots, preempting (spill + FIFO resume) only if the pool
+    // actually dries.  Stop-heavy rows retire long before touching
+    // their footprint, so demand should push more tokens/s through the
+    // same pool.
+    {
+        use quik::backend::native::{demo_policy, NativeCheckpoint, NativeConfig};
+        use quik::backend::Variant;
+        use quik::config::OvercommitMode;
+        use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
+        use quik::coordinator::{EngineConfig, EngineMode};
+
+        let stop_tokens: Vec<i32> = (0..96).step_by(8).collect();
+        let spec = WorkloadSpec {
+            n_requests: 16,
+            prompt_len: 24,
+            params: GenerationParams {
+                max_new_tokens: 48,
+                stop_tokens,
+                ..Default::default()
+            },
+            arrival_rate: None, // burst: admission capacity is the contest
+            seed: 13,
+        };
+        let serve_cfg = BatcherConfig {
+            batch_sizes: vec![4, 1],
+            max_wait: Duration::from_millis(5),
+            bucket: 64,
+            max_queue: 1024,
+        };
+        let mut tput = Vec::new();
+        for (mode, name) in
+            [(OvercommitMode::Reserve, "reserve"), (OvercommitMode::Demand, "demand")]
+        {
+            let ckpt = NativeCheckpoint::seeded(NativeConfig::demo(), 5);
+            let mut coord = Coordinator::start_native_with_kv(
+                ckpt,
+                demo_policy(),
+                Variant::Quik4,
+                serve_cfg.clone(),
+                EngineMode::Continuous,
+                EngineConfig {
+                    slots: Some(4),
+                    kv_overcommit: Some(mode),
+                    ..Default::default()
+                },
+                Some(16), // 16-token pages
+                None,
+                Some(10), // 10-page pool: two 72-token footprints' worth
+            )
+            .expect("start coordinator");
+            let report = run_workload(&mut coord, &spec).expect("serve workload");
+            println!(
+                "serve[overcommit {name}]: {:.1} tok/s, {} engine steps, \
+                 kv high-water {} pages, {} preemptions, {} pages spilled",
+                report.tokens_per_s(),
+                report.metrics.engine_steps,
+                report.metrics.kv_pages_high_water,
+                report.metrics.kv_preemptions,
+                report.metrics.kv_pages_spilled,
+            );
+            derived.push(format!(
+                "    {{\"name\": \"serve overcommit {name} tok_per_s\", \"value\": {:.3}}}",
+                report.tokens_per_s()
+            ));
+            derived.push(format!(
+                "    {{\"name\": \"serve overcommit {name} kv_high_water_pages\", \"value\": {}}}",
+                report.metrics.kv_pages_high_water
+            ));
+            tput.push(report.tokens_per_s());
+            coord.shutdown().expect("shutdown");
+        }
+        let ratio = tput[1] / tput[0];
+        println!("    -> {ratio:.2}x demand-vs-reserve throughput (stop-heavy, 10-page pool)");
+        derived.push(format!(
+            "    {{\"name\": \"serve overcommit demand_vs_reserve tok_ratio\", \"value\": {ratio:.3}}}"
+        ));
+    }
+
     // --- PJRT decode step (artifact runtime, pjrt feature only) ---
     #[cfg(feature = "pjrt")]
     {

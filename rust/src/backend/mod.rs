@@ -85,24 +85,46 @@ impl Phase {
 /// it as a shared **page pool**: fixed-size pages of `page_tokens`
 /// positions each, with a per-row page table mapping logical positions
 /// to pool pages.  The trait exposes that capacity model without leaking
-/// the layout:
+/// the layout.  The contract is **incremental**: capacity is claimed as
+/// writes advance, not reserved for a worst case up front.
 ///
 /// * [`KvCache::page_tokens`] answers `Some(tokens-per-page)` for paged
 ///   caches, `None` for backends with monolithic per-row buffers;
 /// * [`KvCache::total_pages`] / [`KvCache::free_pages`] are the
 ///   occupancy gauge — admission control checks free-page headroom, the
 ///   metrics report a pool-utilization gauge;
-/// * [`KvCache::try_reserve_row`] maps a row's whole context budget up
-///   front (all or nothing), so an admitted stream can never run dry
-///   mid-decode;
+/// * [`KvCache::ensure_row_capacity`] is the demand-paging primitive:
+///   map just enough pages for `row` to hold `tokens` positions, or
+///   report `false` without side effects so the caller can free
+///   capacity first (preempt a resident, defer an admission).  Forward
+///   passes call it implicitly — the native forward checks the whole
+///   step's page deficit *before* writing anything;
+/// * [`KvCache::try_reserve_row`] survives as the optional
+///   *conservative* mode: map a row's whole context budget up front,
+///   all or nothing, so an admitted stream can never run dry mid-decode
+///   (at the cost of concurrency — budget pages a stop token never
+///   spends stay reserved);
+/// * [`KvCache::evict_row`] / [`KvCache::restore_row`] are the victim
+///   path behind preemption: eviction copies a row's mapped pages into
+///   a spill buffer and returns them to the free list; restoration
+///   remaps and refills them **bit-exactly** — including rollback/
+///   replay state, so a restored row is indistinguishable from one that
+///   was never touched.  [`KvCache::pages_spilled`] /
+///   [`KvCache::pages_restored`] count the traffic;
 /// * [`KvCache::reset_row`] returns the row's pages to the free list —
 ///   retirement immediately releases capacity to the next admission;
 /// * rolling the logical length *back* keeps pages mapped: replay after
 ///   rollback must read the previously written content.
 ///
-/// Every hook has an unpaged default, so monolithic caches (and the PJRT
-/// artifact cache) implement nothing new: `page_tokens() == None`, the
-/// gauges read zero, and reservation always succeeds.
+/// Every hook has an unpaged default, so a dense fallback cache (and
+/// the PJRT artifact cache) implements nothing new: `page_tokens() ==
+/// None`, the gauges read zero, `ensure_row_capacity` and
+/// `try_reserve_row` always succeed (capacity was allocated at
+/// construction), and `evict_row`/`restore_row` answer `false` — a
+/// dense cache has no pages to spill, so engines never preempt on it.
+/// A dense cache **must** keep positions `>= len` masked and
+/// overwritable; it need **not** implement spill, reservation, or any
+/// page accounting.
 pub trait KvCache {
     /// Current logical context length (tokens resident in the cache).
     fn len(&self) -> usize;
@@ -185,11 +207,68 @@ pub trait KvCache {
     /// or nothing: on `true` the row's pages are mapped and later writes
     /// up to `tokens` cannot exhaust the pool; on `false` nothing
     /// changed and the caller should defer (backpressure) rather than
-    /// admit.  Unpaged caches always succeed — their capacity was
-    /// reserved at construction.
+    /// admit.  This is the *conservative* admission mode
+    /// ([`crate::config::OvercommitMode::Reserve`]); demand-paged
+    /// serving uses [`KvCache::ensure_row_capacity`] instead.  Unpaged
+    /// caches always succeed — their capacity was reserved at
+    /// construction.
     fn try_reserve_row(&mut self, row: usize, tokens: usize) -> bool {
         let _ = (row, tokens);
         true
+    }
+
+    /// Map just enough pages for `row` to hold `tokens` total positions
+    /// — the demand-paging primitive.  Idempotent over already-mapped
+    /// pages: only the deficit beyond the row's current mapping is
+    /// claimed.  On `false` nothing changed (the pool cannot supply the
+    /// deficit) and the caller should free capacity — preempt a
+    /// resident, defer an admission — before retrying.  Unpaged caches
+    /// always succeed.
+    fn ensure_row_capacity(&mut self, row: usize, tokens: usize) -> bool {
+        let _ = (row, tokens);
+        true
+    }
+
+    /// Spill one row: copy its mapped pages (data *and* any quantization
+    /// metadata) into an internal spill buffer, return the pages to the
+    /// free list, and remember the row's logical length.  Returns
+    /// `false` — with no side effects — when the cache cannot spill
+    /// (unpaged, or the row holds no pages).  The engine's preemption
+    /// path; [`KvCache::restore_row`] is the exact inverse.
+    fn evict_row(&mut self, row: usize) -> bool {
+        let _ = row;
+        false
+    }
+
+    /// Restore a previously evicted row **bit-exactly**: remap pages
+    /// from the free list, refill them from the spill buffer, and
+    /// reinstate the row's logical length — the row then replays as if
+    /// never spilled (rollback semantics included).  Returns `false` —
+    /// with no side effects — when no spill exists for `row` or the
+    /// pool lacks the pages; the caller retries after retirements.
+    fn restore_row(&mut self, row: usize) -> bool {
+        let _ = row;
+        false
+    }
+
+    /// Cumulative pages spilled by [`KvCache::evict_row`] (monotonic
+    /// counter; 0 when unpaged or never preempted).
+    fn pages_spilled(&self) -> u64 {
+        0
+    }
+
+    /// Cumulative pages refilled by [`KvCache::restore_row`] (monotonic
+    /// counter; 0 when unpaged or never preempted).
+    fn pages_restored(&self) -> u64 {
+        0
+    }
+
+    /// High-water mark of simultaneously mapped pages over the cache's
+    /// lifetime (gauge; 0 when unpaged).  Tracked at map/restore time so
+    /// it catches intra-step peaks the per-loop metrics sample would
+    /// miss.
+    fn pages_high_water(&self) -> usize {
+        0
     }
 
     fn is_empty(&self) -> bool {

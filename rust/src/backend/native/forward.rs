@@ -342,6 +342,37 @@ enum PageStore {
     },
 }
 
+/// One evicted row's spilled content, variant-matched to [`PageStore`]:
+/// every mapped page's K/V data (and, for INT8 pages, the per-token
+/// quantization parameters) copied out in page-table order.
+#[derive(Debug, Clone)]
+enum SpillStore {
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    I8 {
+        k: Vec<i8>,
+        v: Vec<i8>,
+        k_scale: Vec<f32>,
+        k_zero: Vec<f32>,
+        v_scale: Vec<f32>,
+        v_zero: Vec<f32>,
+    },
+}
+
+/// A preempted row parked off-pool: its page contents plus the logical
+/// length to reinstate on [`KvCache::restore_row`].  Spill buffers
+/// heap-allocate — preemption is the exceptional path, so the
+/// zero-warm-allocation pin covers forward steps and free-list pops,
+/// not eviction.
+#[derive(Debug, Clone)]
+struct SpillRow {
+    store: SpillStore,
+    n_pages: usize,
+    row_len: usize,
+}
+
 /// Paged KV cache: a shared pool of fixed-size pages (`page_tokens`
 /// positions each, covering all layers and kv heads for one row) plus a
 /// per-row page table mapping logical position `pos` to pool page
@@ -388,6 +419,11 @@ pub struct NativeKvCache {
     n_pages: usize,
     pages_allocated: u64,
     pages_freed: u64,
+    pages_spilled: u64,
+    pages_restored: u64,
+    high_water: usize,
+    /// At most one pending spill per row ([`KvCache::evict_row`]).
+    spill: Vec<Option<SpillRow>>,
 }
 
 impl NativeKvCache {
@@ -450,6 +486,10 @@ impl NativeKvCache {
             n_pages,
             pages_allocated: 0,
             pages_freed: 0,
+            pages_spilled: 0,
+            pages_restored: 0,
+            high_water: 0,
+            spill: (0..batch).map(|_| None).collect(),
         }
     }
 
@@ -472,6 +512,7 @@ impl NativeKvCache {
             self.table[row].push(page);
             self.pages_allocated += 1;
         }
+        self.high_water = self.high_water.max(self.n_pages - self.free.len());
     }
 
     /// Element offset of `(layer, row, kv_head, pos)`'s `d_head` vector
@@ -639,9 +680,12 @@ impl KvCache for NativeKvCache {
 
     /// Retirement: zero the logical length *and* return every page the
     /// row held to the free list — freed capacity is immediately
-    /// available to the next admission.
+    /// available to the next admission.  Any pending spill is discarded
+    /// too (a cancelled-while-suspended stream never resumes, so its
+    /// spilled pages count as spilled-but-never-restored).
     fn reset_row(&mut self, row: usize) {
         self.row_len[row] = 0;
+        self.spill[row] = None;
         while let Some(page) = self.table[row].pop() {
             self.free.push(page);
             self.pages_freed += 1;
@@ -677,6 +721,142 @@ impl KvCache for NativeKvCache {
         }
         self.map_row(row, tokens);
         true
+    }
+
+    /// Incremental mapping (demand mode): same all-or-nothing pop as
+    /// [`KvCache::try_reserve_row`], but callers pass only the capacity
+    /// the *next step* writes, not the whole context budget.
+    fn ensure_row_capacity(&mut self, row: usize, tokens: usize) -> bool {
+        if self.page_deficit(row, tokens) > self.free.len() {
+            return false;
+        }
+        self.map_row(row, tokens);
+        true
+    }
+
+    /// Spill `row` off-pool: copy every mapped page's K/V data (and INT8
+    /// quant parameters) into a heap spill buffer in page-table order,
+    /// return the pages to the free list (`pages_spilled`, not
+    /// `pages_freed`), and park the logical length for
+    /// [`KvCache::restore_row`].  The live row then reads as empty.
+    fn evict_row(&mut self, row: usize) -> bool {
+        if self.spill[row].is_some() || self.table[row].is_empty() {
+            return false;
+        }
+        let pe = self.page_elems;
+        let ps = self.page_scales;
+        let pages = &self.table[row];
+        let gather_f32 = |src: &[f32], width: usize| {
+            let mut out = Vec::with_capacity(pages.len() * width);
+            for &p in pages {
+                out.extend_from_slice(&src[p * width..(p + 1) * width]);
+            }
+            out
+        };
+        let gather_i8 = |src: &[i8]| {
+            let mut out = Vec::with_capacity(pages.len() * pe);
+            for &p in pages {
+                out.extend_from_slice(&src[p * pe..(p + 1) * pe]);
+            }
+            out
+        };
+        let store = match &self.store {
+            PageStore::F32 { k, v } => {
+                SpillStore::F32 { k: gather_f32(k, pe), v: gather_f32(v, pe) }
+            }
+            PageStore::I8 { k, v, k_scale, k_zero, v_scale, v_zero } => SpillStore::I8 {
+                k: gather_i8(k),
+                v: gather_i8(v),
+                k_scale: gather_f32(k_scale, ps),
+                k_zero: gather_f32(k_zero, ps),
+                v_scale: gather_f32(v_scale, ps),
+                v_zero: gather_f32(v_zero, ps),
+            },
+        };
+        self.spill[row] =
+            Some(SpillRow { store, n_pages: self.table[row].len(), row_len: self.row_len[row] });
+        while let Some(page) = self.table[row].pop() {
+            self.free.push(page);
+            self.pages_spilled += 1;
+        }
+        self.row_len[row] = 0;
+        true
+    }
+
+    /// Resume a spilled row: remap as many pages as the spill held (all
+    /// or nothing — `false` with no side effects when the pool lacks
+    /// them or no spill exists), refill them bit-exactly from the spill
+    /// buffer, and reinstate the parked logical length.  The physical
+    /// pages may differ from the evicted ones; the page table's
+    /// indirection makes that invisible.
+    fn restore_row(&mut self, row: usize) -> bool {
+        let need = match self.spill[row].as_ref() {
+            Some(sp) => sp.n_pages,
+            None => return false,
+        };
+        if need > self.free.len() || !self.table[row].is_empty() {
+            return false;
+        }
+        let sp = self.spill[row].take().expect("spill presence checked above");
+        for _ in 0..need {
+            let page = self.free.pop().expect("headroom checked above");
+            self.table[row].push(page);
+            self.pages_allocated += 1;
+            self.pages_restored += 1;
+        }
+        self.high_water = self.high_water.max(self.n_pages - self.free.len());
+        let pe = self.page_elems;
+        let ps = self.page_scales;
+        let pages = &self.table[row];
+        let scatter_f32 = |src: &[f32], dst: &mut [f32], width: usize| {
+            for (i, &p) in pages.iter().enumerate() {
+                dst[p * width..(p + 1) * width].copy_from_slice(&src[i * width..(i + 1) * width]);
+            }
+        };
+        let scatter_i8 = |src: &[i8], dst: &mut [i8]| {
+            for (i, &p) in pages.iter().enumerate() {
+                dst[p * pe..(p + 1) * pe].copy_from_slice(&src[i * pe..(i + 1) * pe]);
+            }
+        };
+        match (&mut self.store, &sp.store) {
+            (PageStore::F32 { k, v }, SpillStore::F32 { k: sk, v: sv }) => {
+                scatter_f32(sk, k, pe);
+                scatter_f32(sv, v, pe);
+            }
+            (
+                PageStore::I8 { k, v, k_scale, k_zero, v_scale, v_zero },
+                SpillStore::I8 {
+                    k: sk,
+                    v: sv,
+                    k_scale: sks,
+                    k_zero: skz,
+                    v_scale: svs,
+                    v_zero: svz,
+                },
+            ) => {
+                scatter_i8(sk, k);
+                scatter_i8(sv, v);
+                scatter_f32(sks, k_scale, ps);
+                scatter_f32(skz, k_zero, ps);
+                scatter_f32(svs, v_scale, ps);
+                scatter_f32(svz, v_zero, ps);
+            }
+            _ => unreachable!("spill variant always matches the page store it came from"),
+        }
+        self.row_len[row] = sp.row_len;
+        true
+    }
+
+    fn pages_spilled(&self) -> u64 {
+        self.pages_spilled
+    }
+
+    fn pages_restored(&self) -> u64 {
+        self.pages_restored
+    }
+
+    fn pages_high_water(&self) -> usize {
+        self.high_water
     }
 }
 
@@ -1285,6 +1465,123 @@ mod tests {
         let solo = fwd(&ck, &FpLinears(&ck), &[7, 3], 1, &mut c1).unwrap();
         assert_eq!(re.row(1, 1), solo.row(0, 1), "recycled slot saw stale cache state");
         assert_eq!(cache.row_len, vec![3, 2]);
+    }
+
+    #[test]
+    fn evict_restore_round_trip_is_bit_exact() {
+        // Evict a row, let a neighbor claim its physical pages (the LIFO
+        // free list hands out exactly the pages just returned), restore
+        // into different pages, decode: the output must be bit-identical
+        // to an uninterrupted solo run.  Runs both page precisions —
+        // INT8 restore must also carry the per-token quant parameters.
+        let ck = tiny();
+        for kv_bits in [32u32, 8] {
+            let pool = WorkerPool::serial();
+            let mut scratch = ForwardScratch::default();
+            let mut solo_cache = NativeKvCache::with_layout(&ck.config, 1, 2, kv_bits, None);
+            fwd(&ck, &FpLinears(&ck), &[3, 7, 11], 1, &mut solo_cache).unwrap();
+            let solo = fwd(&ck, &FpLinears(&ck), &[5], 1, &mut solo_cache).unwrap();
+            let mut cache = NativeKvCache::with_layout(&ck.config, 2, 2, kv_bits, None);
+            forward_pass_masked(
+                &ck,
+                &FpLinears(&ck),
+                &[3, 7, 11, 0, 0, 0],
+                2,
+                &mut cache,
+                pool,
+                &mut scratch,
+                Some(&[true, false]),
+            )
+            .unwrap();
+            let used = (cache.total_pages() - cache.free_pages()) as u64;
+            assert!(cache.evict_row(0), "evict of a mapped row must succeed");
+            assert!(!cache.evict_row(0), "double evict must refuse");
+            assert_eq!(cache.free_pages(), cache.total_pages(), "evict returned the pages");
+            assert_eq!(cache.pages_spilled(), used);
+            assert_eq!(cache.row_len[0], 0, "suspended row must read empty");
+            forward_pass_masked(
+                &ck,
+                &FpLinears(&ck),
+                &[0, 0, 0, 2, 6, 10],
+                2,
+                &mut cache,
+                pool,
+                &mut scratch,
+                Some(&[false, true]),
+            )
+            .unwrap();
+            assert!(cache.restore_row(0), "pool has headroom; restore must succeed");
+            assert_eq!(cache.pages_restored(), used);
+            assert_eq!(cache.row_len[0], 3, "restore reinstates the logical length");
+            let step = forward_pass_masked(
+                &ck,
+                &FpLinears(&ck),
+                &[5, 0],
+                2,
+                &mut cache,
+                pool,
+                &mut scratch,
+                Some(&[true, false]),
+            )
+            .unwrap();
+            let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits(step.row(0, 0)),
+                bits(solo.row(0, 0)),
+                "kv_bits={kv_bits}: restored row diverged from solo decode"
+            );
+        }
+    }
+
+    #[test]
+    fn restore_is_all_or_nothing_and_reset_discards_spill() {
+        let ck = tiny();
+        let pool = WorkerPool::serial();
+        let mut scratch = ForwardScratch::default();
+        // 2-page pool, 2-token pages: row 0's 3-token prompt maps both.
+        let mut cache = NativeKvCache::with_layout(&ck.config, 2, 2, 32, Some(2));
+        forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[3, 7, 11, 0, 0, 0],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[true, false]),
+        )
+        .unwrap();
+        assert!(!cache.restore_row(0), "no spill to restore yet");
+        assert!(cache.evict_row(0));
+        // row 1 eats one of the freed pages: restore now lacks headroom
+        // and must refuse without touching the pool or the spill.
+        forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[0, 0, 2, 6],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[false, true]),
+        )
+        .unwrap();
+        assert_eq!(cache.free_pages(), 1);
+        assert!(!cache.restore_row(0), "restore must refuse without full headroom");
+        assert_eq!(cache.free_pages(), 1, "failed restore must not touch the pool");
+        assert_eq!(cache.row_len[0], 0);
+        cache.reset_row(1);
+        // the failed restore left the spill intact — with pages free it succeeds
+        assert!(cache.restore_row(0));
+        assert_eq!(cache.row_len[0], 3);
+        // reset_row discards a pending spill outright
+        assert!(cache.evict_row(0));
+        cache.reset_row(0);
+        assert!(!cache.restore_row(0), "reset must discard the pending spill");
+        assert!(!cache.evict_row(1), "empty row has nothing to spill");
+        assert_eq!(cache.pages_spilled(), 4);
+        assert_eq!(cache.pages_restored(), 2);
+        assert_eq!(cache.pages_high_water(), 2);
     }
 
     #[test]

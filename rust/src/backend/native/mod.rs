@@ -102,7 +102,8 @@ pub struct NativeBackend {
     /// defaults from `QUIK_KV_BITS` ([`ExecConfig::resolve_kv_bits`]).
     kv_bits: u32,
     /// Optional page-pool cap for caches this backend builds (`None` =
-    /// full size, every row can reach `max_seq`).  Smaller pools
+    /// full size, every row can reach `max_seq`); defaults from
+    /// `QUIK_KV_POOL` ([`ExecConfig::resolve_kv_pool`]).  Smaller pools
     /// overcommit context; admission then defers on free-page headroom.
     kv_pool_pages: Option<usize>,
 }
@@ -124,7 +125,7 @@ impl NativeBackend {
             scratch: RefCell::new(ForwardScratch::default()),
             kv_page: exec.resolve_kv_page(),
             kv_bits: exec.resolve_kv_bits(),
-            kv_pool_pages: None,
+            kv_pool_pages: exec.resolve_kv_pool(),
         })
     }
 

@@ -62,13 +62,35 @@
 //! residents than dense FP32 rows.
 //!
 //! On a **paged** cache ([`KvCache::page_tokens`] returns `Some`)
-//! admission is additionally bounded by the shared page pool: `admit`
-//! reserves the request's whole footprint — prompt plus clipped decode
-//! budget — up front, all-or-nothing ([`KvCache::try_reserve_row`]), so
-//! an admitted row can never starve mid-stream.  Serving loops consult
-//! [`ContinuousEngine::can_admit`] first and *defer* admission (the
-//! request stays queued) when the pool is dry; retirements return pages
-//! ([`KvCache::reset_row`]) and the next poll succeeds.
+//! admission is additionally bounded by the shared page pool, under one
+//! of two disciplines ([`crate::config::OvercommitMode`],
+//! `QUIK_KV_OVERCOMMIT` / `--kv-overcommit`):
+//!
+//! * **reserve** (default) — `admit` reserves the request's whole
+//!   footprint (prompt plus clipped decode budget) up front,
+//!   all-or-nothing ([`KvCache::try_reserve_row`]), so an admitted row
+//!   can never starve mid-stream.  Admitted concurrency is bounded by
+//!   worst-case usage.
+//! * **demand** — `admit` maps only the first prefill chunk's pages
+//!   ([`KvCache::ensure_row_capacity`]); each step maps the pages it is
+//!   about to write, just in time.  When a step needs a page the pool
+//!   cannot supply, the engine **preempts**: the lowest-progress
+//!   resident is suspended ([`KvCache::evict_row`] spills its pages to
+//!   a heap buffer and frees them; the slot parks on an internal queue
+//!   that outranks the admission queue) and is resumed — restored
+//!   bit-exactly, [`KvCache::restore_row`] — once pages free.  Requests
+//!   that stop early never hold pages they would not have touched, so
+//!   the same pool admits strictly more concurrent residents, and every
+//!   preempted-and-resumed stream is still bit-identical to its solo
+//!   run (the spill round-trip is exact and the sampler/emission state
+//!   parks with the slot).
+//!
+//! In both modes serving loops consult [`ContinuousEngine::can_admit`]
+//! first and *defer* admission (the request stays queued) when the pool
+//! is dry; retirements return pages ([`KvCache::reset_row`]) and the
+//! next poll succeeds.  In demand mode `can_admit` gates on the *first
+//! chunk*, not the footprint — only a request whose full footprint
+//! exceeds the whole pool is unservable outright.
 //!
 //! The repo's signature invariant survives the inversion of control
 //! flow: rows are computationally independent and the row-masked forward
@@ -88,16 +110,17 @@
 //! artifacts) are served by the static batch-at-a-time fallback loop in
 //! [`crate::coordinator::server`].
 
+use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::metrics::Metrics;
+use super::metrics::{KvPageStats, Metrics};
 use super::request::{Event, FinishReason, Request, RequestId, Response};
 use super::sampler::Sampler;
 use crate::backend::{InferenceBackend, KvCache, Phase, Variant};
-use crate::config::ExecConfig;
+use crate::config::{ExecConfig, OvercommitMode};
 
 /// Environment override for the serving loop (`QUIK_ENGINE=continuous`
 /// or `QUIK_ENGINE=static`), consulted when the coordinator is started
@@ -131,6 +154,10 @@ pub struct EngineConfig {
     /// Memory budget for slot autoscaling.  `None` uses
     /// [`DEFAULT_SLOT_MEM_BUDGET`].
     pub mem_budget_bytes: Option<u64>,
+    /// Explicit page-pool admission discipline (`--kv-overcommit`).
+    /// `None` falls through to `QUIK_KV_OVERCOMMIT`, then to
+    /// [`OvercommitMode::Reserve`].
+    pub kv_overcommit: Option<OvercommitMode>,
 }
 
 impl EngineConfig {
@@ -161,6 +188,13 @@ impl EngineConfig {
     pub fn resolve_prefill_chunk(&self) -> usize {
         self.prefill_chunk
             .unwrap_or_else(|| ExecConfig::default().resolve_prefill_chunk())
+    }
+
+    /// Resolve the page-pool admission discipline: explicit setting,
+    /// else the `QUIK_KV_OVERCOMMIT` env override, else reserve.
+    pub fn resolve_kv_overcommit(&self) -> OvercommitMode {
+        self.kv_overcommit
+            .unwrap_or_else(|| ExecConfig::default().resolve_kv_overcommit())
     }
 }
 
@@ -217,6 +251,17 @@ struct Slot {
     ttft: Duration,
 }
 
+/// A preempted slot parked off its row: the full [`Slot`] state (the
+/// resume point — sampler draw position, generated stream, pending
+/// token, prefill progress) plus the row whose spilled cache content
+/// [`KvCache::restore_row`] will reinstate.  While parked, the row
+/// stays dedicated (not admittable) so the resume target is always
+/// free.
+struct Suspended {
+    row: usize,
+    slot: Slot,
+}
+
 /// Slot-based continuous batching engine over one backend cache.
 ///
 /// The engine owns the long-lived cache and the slot table; the backend
@@ -233,8 +278,17 @@ pub struct ContinuousEngine<B: InferenceBackend> {
     /// ([`ExecConfig::resolve_prefill_chunk`]); override with
     /// [`ContinuousEngine::with_prefill_chunk`].
     prefill_chunk: usize,
+    /// Page-pool admission discipline; [`OvercommitMode::Demand`]
+    /// enables lazy mapping plus the preemption path.  Defaults from
+    /// `QUIK_KV_OVERCOMMIT` ([`ExecConfig::resolve_kv_overcommit`]);
+    /// override with [`ContinuousEngine::with_kv_overcommit`].
+    overcommit: OvercommitMode,
     cache: B::Cache,
     slots: Vec<Option<Slot>>,
+    /// Preempted slots awaiting resume, in preemption order (FIFO).
+    /// They outrank the external admission queue: `can_admit` answers
+    /// `false` while anything is parked here.
+    suspended: VecDeque<Suspended>,
     /// Reused per-step buffers (decode runs once per generated token).
     tokens_buf: Vec<i32>,
     active_buf: Vec<bool>,
@@ -276,8 +330,10 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             pad_token: 0,
             max_ctx: backend.max_context(),
             prefill_chunk: ExecConfig::default().resolve_prefill_chunk(),
+            overcommit: ExecConfig::default().resolve_kv_overcommit(),
             cache,
             slots: (0..n_slots).map(|_| None).collect(),
+            suspended: VecDeque::new(),
             tokens_buf: Vec::new(),
             active_buf: Vec::new(),
         })
@@ -290,10 +346,28 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         self
     }
 
+    /// Builder override for the page-pool admission discipline (beats
+    /// the `QUIK_KV_OVERCOMMIT` env default).
+    pub fn with_kv_overcommit(mut self, mode: OvercommitMode) -> Self {
+        self.overcommit = mode;
+        self
+    }
+
     /// The admission-prefill chunk size this engine paces prompts at
     /// (0 = whole prompt in one step).
     pub fn prefill_chunk(&self) -> usize {
         self.prefill_chunk
+    }
+
+    /// The page-pool admission discipline this engine runs under.
+    pub fn overcommit(&self) -> OvercommitMode {
+        self.overcommit
+    }
+
+    /// The cache's page size in tokens (`None` when unpaged) — the
+    /// serving layer uses it to page-align its prefill chunk.
+    pub fn page_tokens(&self) -> Option<usize> {
+        self.cache.page_tokens()
     }
 
     /// Total decode slots.
@@ -301,22 +375,47 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         self.n_slots
     }
 
-    /// Currently resident (admitted, not yet retired) requests.
+    /// Currently resident (admitted, not yet retired, not suspended)
+    /// requests — the rows the next decode forward computes.
     pub fn resident(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Preempted requests parked off their rows, awaiting resume.
+    pub fn suspended(&self) -> usize {
+        self.suspended.len()
+    }
+
+    /// Every admitted-but-unfinished request: resident plus suspended.
+    /// Serving loops gate "keep stepping" on this, not on
+    /// [`ContinuousEngine::resident`] — a fully suspended engine still
+    /// needs steps to resume its streams.
+    pub fn outstanding(&self) -> usize {
+        self.resident() + self.suspended.len()
+    }
+
+    /// Whether `row` is dedicated to a parked (suspended) request.
+    fn row_parked(&self, row: usize) -> bool {
+        self.suspended.iter().any(|p| p.row == row)
+    }
+
     pub fn has_free_slot(&self) -> bool {
-        self.slots.iter().any(|s| s.is_none())
+        self.slots.iter().enumerate().any(|(row, s)| s.is_none() && !self.row_parked(row))
     }
 
     /// Whether `req` can be admitted *right now*: a slot is free and —
     /// on a paged cache — the page pool has headroom for the request's
-    /// whole footprint (prompt plus clipped decode budget).  Serving
-    /// loops call this before popping their queue so a dry pool
-    /// **defers** admission (the request stays queued, in order)
-    /// instead of failing it; pages return as residents retire and the
-    /// next poll succeeds.  Monolithic caches gate on slots alone.
+    /// page need under the engine's discipline: the whole footprint
+    /// (prompt plus clipped decode budget) in reserve mode, only the
+    /// first prefill chunk in demand mode.  Serving loops call this
+    /// before popping their queue so a dry pool **defers** admission
+    /// (the request stays queued, in order) instead of failing it;
+    /// pages return as residents retire and the next poll succeeds.
+    /// Demand mode additionally defers while any preempted stream is
+    /// parked (suspended requests are the head of the effective
+    /// admission queue) and refuses outright a request whose footprint
+    /// exceeds the *whole* pool — such a stream could never complete.
+    /// Monolithic caches gate on slots alone.
     pub fn can_admit(&self, req: &Request) -> bool {
         if !self.has_free_slot() {
             return false;
@@ -324,24 +423,50 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         let Some(page_tokens) = self.cache.page_tokens() else {
             return true;
         };
+        let page_tokens = page_tokens.max(1);
         let prompt_len = req.prompt.len();
         let budget =
             req.params.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
         // A free row holds no pages (retirement returned them), so the
         // request's page need is its full footprint, clipped exactly
         // like the cache clips (`pages_for`).
-        let tokens = (prompt_len + budget).min(self.max_ctx);
-        tokens.div_ceil(page_tokens.max(1)) <= self.cache.free_pages()
+        let footprint = (prompt_len + budget).min(self.max_ctx);
+        match self.overcommit {
+            OvercommitMode::Reserve => {
+                footprint.div_ceil(page_tokens) <= self.cache.free_pages()
+            }
+            OvercommitMode::Demand => {
+                if !self.suspended.is_empty() {
+                    return false;
+                }
+                if footprint.div_ceil(page_tokens) > self.cache.total_pages() {
+                    return false;
+                }
+                let first = if self.prefill_chunk == 0 {
+                    prompt_len
+                } else {
+                    prompt_len.min(self.prefill_chunk)
+                };
+                first.div_ceil(page_tokens) <= self.cache.free_pages()
+            }
+        }
     }
 
-    /// Page-pool gauge for metrics sampling: `(used, total, allocated,
-    /// freed)` — current occupancy plus the cumulative map/free
+    /// Page-pool gauge for metrics sampling: current occupancy, the
+    /// high-water mark, and the cumulative map/free/spill/restore
     /// counters.  `None` when the cache is monolithic (unpaged).
-    pub fn kv_page_stats(&self) -> Option<(usize, usize, u64, u64)> {
+    pub fn kv_page_stats(&self) -> Option<KvPageStats> {
         self.cache.page_tokens()?;
         let total = self.cache.total_pages();
-        let used = total.saturating_sub(self.cache.free_pages());
-        Some((used, total, self.cache.pages_allocated(), self.cache.pages_freed()))
+        Some(KvPageStats {
+            used: total.saturating_sub(self.cache.free_pages()),
+            total,
+            allocated: self.cache.pages_allocated(),
+            freed: self.cache.pages_freed(),
+            spilled: self.cache.pages_spilled(),
+            restored: self.cache.pages_restored(),
+            high_water: self.cache.pages_high_water(),
+        })
     }
 
     /// Admit one request into a free slot.  Admission only *registers*
@@ -356,10 +481,8 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
     /// [`ContinuousEngine::has_free_slot`]; an error here means the
     /// request cannot be served (its event channel should be dropped).
     pub fn admit(&mut self, backend: &mut B, req: Request, tx: Sender<Event>) -> Result<usize> {
-        let row = self
-            .slots
-            .iter()
-            .position(|s| s.is_none())
+        let row = (0..self.n_slots)
+            .find(|&row| self.slots[row].is_none() && !self.row_parked(row))
             .ok_or_else(|| anyhow!("no free slot"))?;
         let prompt_len = req.prompt.len();
         if prompt_len == 0 {
@@ -384,20 +507,50 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         // never a batch-max.
         let budget = req.params.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
         self.cache.reset_row(row);
-        // Paged caches: reserve the whole footprint up front, all-or-
-        // nothing, so an admitted row can never run the pool dry
-        // mid-stream.  Callers gate on `can_admit`, so failing here is
-        // exceptional (and leaks nothing — the slot was never
-        // installed).
-        if !self.cache.try_reserve_row(row, prompt_len + budget) {
-            bail!(
-                "kv page pool exhausted: {} tokens (prompt {prompt_len} + budget \
-                 {budget}) need more pages than the {} free of {}; defer admission \
-                 until residents retire",
-                prompt_len + budget,
-                self.cache.free_pages(),
-                self.cache.total_pages()
-            );
+        // Paged caches, by discipline.  Callers gate on `can_admit`, so
+        // failing here is exceptional (and leaks nothing — the slot was
+        // never installed).
+        match self.overcommit {
+            // Reserve the whole footprint up front, all-or-nothing, so
+            // an admitted row can never run the pool dry mid-stream.
+            OvercommitMode::Reserve => {
+                if !self.cache.try_reserve_row(row, prompt_len + budget) {
+                    bail!(
+                        "kv page pool exhausted: {} tokens (prompt {prompt_len} + budget \
+                         {budget}) need more pages than the {} free of {}; defer admission \
+                         until residents retire",
+                        prompt_len + budget,
+                        self.cache.free_pages(),
+                        self.cache.total_pages()
+                    );
+                }
+            }
+            // Map only the first prefill chunk; later pages map just in
+            // time at each step (with preemption as the backstop).  A
+            // footprint wider than the whole pool can never complete —
+            // reject it here rather than deadlock mid-stream.
+            OvercommitMode::Demand => {
+                if let Some(page_tokens) = self.cache.page_tokens() {
+                    let footprint = (prompt_len + budget).min(self.max_ctx);
+                    if footprint.div_ceil(page_tokens.max(1)) > self.cache.total_pages() {
+                        bail!(
+                            "request footprint of {footprint} tokens exceeds the whole \
+                             kv page pool ({} pages of {page_tokens} tokens); the stream \
+                             could never complete",
+                            self.cache.total_pages()
+                        );
+                    }
+                }
+                if !self.cache.ensure_row_capacity(row, first) {
+                    bail!(
+                        "kv page pool exhausted: the first prefill chunk ({first} tokens) \
+                         needs more pages than the {} free of {}; defer admission until \
+                         pages free",
+                        self.cache.free_pages(),
+                        self.cache.total_pages()
+                    );
+                }
+            }
         }
         let now = Instant::now();
         let sampler = Sampler::new(&req.params);
@@ -488,8 +641,128 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         Ok(())
     }
 
-    /// One engine step, in three phases:
+    /// Resume parked streams, oldest first, while the pool can restore
+    /// them.  Strictly FIFO: if the front spill does not fit, nothing
+    /// behind it resumes either (preemption order is resume order).  A
+    /// resumed slot continues exactly where it parked — pending token,
+    /// generated stream, sampler draw position and (restored bit-exact)
+    /// cache content — so the stream is bit-identical to a solo run.
+    fn resume_suspended(&mut self) {
+        while let Some(front) = self.suspended.front() {
+            let row = front.row;
+            if !self.cache.restore_row(row) {
+                break;
+            }
+            let parked = self.suspended.pop_front().expect("front checked above");
+            debug_assert!(self.slots[row].is_none(), "parked row must stay dedicated");
+            self.slots[row] = Some(parked.slot);
+        }
+    }
+
+    /// Suspend the lowest-progress resident (progress = prefilled +
+    /// generated tokens; ties break toward the lowest row): spill its
+    /// cache row and park its slot at the back of the resume queue.
+    /// Refuses (`false`) when `requester` is the only resident — a
+    /// stream cannot make room by preempting itself alone, so the
+    /// caller must fail loudly instead of thrashing.
+    fn preempt_one(&mut self, requester: usize, metrics: &mut Metrics) -> bool {
+        let victim = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(row, s)| {
+                s.as_ref().map(|slot| (slot.prefilled + slot.generated.len(), row))
+            })
+            .min()
+            .map(|(_, row)| row);
+        let Some(row) = victim else { return false };
+        if row == requester && self.resident() == 1 {
+            return false;
+        }
+        if !self.cache.evict_row(row) {
+            return false;
+        }
+        let slot = self.slots[row].take().expect("victim slot resident");
+        self.suspended.push_back(Suspended { row, slot });
+        metrics.kv_preemptions += 1;
+        true
+    }
+
+    /// Demand-mode page gate, run at the step boundary where every slot
+    /// is in a suspendable state (pending token not yet emitted, or
+    /// mid-prefill): map the pages each resident's next piece of work
+    /// will write — one prefill chunk, or one decode token — preempting
+    /// the lowest-progress resident whenever the pool runs short.  Rows
+    /// that will retire at this step's emit (budget or stop hit) are
+    /// skipped: they free pages, they don't need them.  After this gate
+    /// the step's forwards cannot hit the pool-exhausted bail.
+    fn ensure_step_headroom(&mut self, metrics: &mut Metrics) -> Result<()> {
+        if self.cache.page_tokens().is_none() {
+            return Ok(());
+        }
+        for row in 0..self.n_slots {
+            loop {
+                let need = match &self.slots[row] {
+                    None => break,
+                    Some(slot) => {
+                        let prompt_len = slot.req.prompt.len();
+                        match slot.next {
+                            None => {
+                                let remaining = prompt_len - slot.prefilled;
+                                let take = if self.prefill_chunk == 0 {
+                                    remaining
+                                } else {
+                                    remaining.min(self.prefill_chunk)
+                                };
+                                let end = slot.prefilled + take;
+                                // A final chunk samples the first token,
+                                // which (budget permitting) decodes in
+                                // this same step — map its page too.
+                                if end == prompt_len && slot.budget >= 2 {
+                                    end + 1
+                                } else {
+                                    end
+                                }
+                            }
+                            Some(token) => {
+                                let will_decode = slot.generated.len() + 1 < slot.budget
+                                    && FinishReason::stop_match(&slot.req.params, token)
+                                        .is_none();
+                                if !will_decode {
+                                    break;
+                                }
+                                prompt_len + slot.generated.len() + 1
+                            }
+                        }
+                    }
+                };
+                if self.cache.ensure_row_capacity(row, need) {
+                    break;
+                }
+                // The victim may be `row` itself (then the next pass
+                // sees the slot empty and moves on).
+                if !self.preempt_one(row, metrics) {
+                    bail!(
+                        "kv page pool exhausted: row {row} needs capacity for {need} \
+                         tokens, no resident can be preempted, and only {} of {} pages \
+                         are free — the pool is too small for a single stream",
+                        self.cache.free_pages(),
+                        self.cache.total_pages()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One engine step, in three phases (plus, in demand mode, a
+    /// phase-0 page gate):
     ///
+    /// 0. **resume / headroom** (demand overcommit only) — parked
+    ///    streams whose spill fits the pool again are restored, oldest
+    ///    first; then every resident's next piece of work gets its
+    ///    pages mapped, preempting the lowest-progress resident when
+    ///    the pool runs short ([`ContinuousEngine::ensure_step_headroom`]).
     /// 1. **prefill-advance** — every admitting slot (prompt not yet
     ///    fully resident) runs one row-masked prefill chunk; a slot that
     ///    finishes samples its first token and joins the decoders.
@@ -504,6 +777,13 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
     /// Returns the responses retired by this step (already delivered to
     /// their streams).
     pub fn step(&mut self, backend: &mut B, metrics: &mut Metrics) -> Result<Vec<Response>> {
+        // ---- phase 0: demand paging — resume parked streams, then map
+        // this step's pages (preempting when the pool runs short) ----
+        if self.overcommit == OvercommitMode::Demand {
+            self.resume_suspended();
+            self.ensure_step_headroom(metrics)?;
+        }
+
         // ---- phase 1: advance admission prefills, one chunk each ----
         for row in 0..self.n_slots {
             let prefilling =
@@ -592,17 +872,23 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         Ok(done)
     }
 
-    /// Cancel a *resident* request by id (the explicit cancel verb):
-    /// the row retires immediately with [`FinishReason::Cancelled`] and
-    /// its partial stream, and the slot frees for the next admission.
-    /// Returns the response, or `None` when no resident row has this id
-    /// (the caller should then check the admission queue).
+    /// Cancel a *resident or suspended* request by id (the explicit
+    /// cancel verb): the row retires immediately with
+    /// [`FinishReason::Cancelled`] and its partial stream, and the slot
+    /// frees for the next admission.  A suspended request is unparked
+    /// first (its spill is discarded with the row — it never resumes).
+    /// Returns the response, or `None` when no admitted request has
+    /// this id (the caller should then check the admission queue).
     pub fn cancel(&mut self, id: RequestId, metrics: &mut Metrics) -> Option<Response> {
-        let row = self
-            .slots
-            .iter()
-            .position(|s| s.as_ref().is_some_and(|slot| slot.req.id == id))?;
-        Some(self.retire(row, FinishReason::Cancelled, metrics))
+        if let Some(row) =
+            self.slots.iter().position(|s| s.as_ref().is_some_and(|slot| slot.req.id == id))
+        {
+            return Some(self.retire(row, FinishReason::Cancelled, metrics));
+        }
+        let idx = self.suspended.iter().position(|p| p.slot.req.id == id)?;
+        let parked = self.suspended.remove(idx).expect("index found above");
+        self.slots[parked.row] = Some(parked.slot);
+        Some(self.retire(parked.row, FinishReason::Cancelled, metrics))
     }
 
     /// Retire one resident row: free the slot, recycle the cache row,
@@ -628,14 +914,17 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         resp
     }
 
-    /// Run steps until every resident row retires (shutdown drain).
-    /// Bounded by the context budget — each row prefills within its
-    /// prompt length's worth of chunk steps and finishes within its
-    /// remaining decode budget, and neither can exceed `max_ctx`.
+    /// Run steps until every outstanding request — resident *or*
+    /// suspended — retires (shutdown drain).  Bounded by the context
+    /// budget per slot: each row prefills within its prompt length's
+    /// worth of chunk steps and finishes within its remaining decode
+    /// budget, neither can exceed `max_ctx`, and demand-mode preemption
+    /// can at worst serialize the slots (some resident always advances
+    /// each step, so the per-slot bounds add rather than multiply).
     pub fn drain(&mut self, backend: &mut B, metrics: &mut Metrics) -> Result<Vec<Response>> {
         let mut done = Vec::new();
-        for _ in 0..=2 * self.max_ctx + 2 {
-            if self.resident() == 0 {
+        for _ in 0..=(2 * self.max_ctx + 2) * self.n_slots.max(1) {
+            if self.outstanding() == 0 {
                 return Ok(done);
             }
             done.extend(self.step(backend, metrics)?);
@@ -643,11 +932,12 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         bail!("engine failed to drain within the context budget");
     }
 
-    /// Evict every resident request without responses (a failed forward
-    /// left them unservable); returns their ids so the caller can count
-    /// them.  Dropping the slots closes their event channels, so every
-    /// client observes the failure immediately.  All cache rows are
-    /// reset.
+    /// Evict every outstanding request — resident or suspended —
+    /// without responses (a failed forward left them unservable);
+    /// returns their ids so the caller can count them.  Dropping the
+    /// slots closes their event channels, so every client observes the
+    /// failure immediately.  All cache rows are reset (which also
+    /// discards suspended requests' spills).
     pub fn fail_all(&mut self) -> Vec<RequestId> {
         let mut ids = Vec::new();
         for row in 0..self.n_slots {
@@ -655,6 +945,10 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
                 self.cache.reset_row(row);
                 ids.push(slot.req.id);
             }
+        }
+        while let Some(parked) = self.suspended.pop_front() {
+            self.cache.reset_row(parked.row);
+            ids.push(parked.slot.req.id);
         }
         ids
     }
@@ -1037,15 +1331,18 @@ mod tests {
         let max = NativeConfig::demo().max_seq;
         let mut b = backend().with_kv_page(max).with_kv_pool_pages(Some(1));
         let mut m = Metrics::default();
-        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2).unwrap();
-        let (used0, total, alloc0, freed0) = engine.kv_page_stats().expect("paged cache");
-        assert_eq!((used0, total, alloc0, freed0), (0, 1, 0, 0));
+        // pin the reservation discipline: CI crosses QUIK_KV_OVERCOMMIT
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2)
+            .unwrap()
+            .with_kv_overcommit(OvercommitMode::Reserve);
+        let s0 = engine.kv_page_stats().expect("paged cache");
+        assert_eq!((s0.used, s0.total, s0.allocated, s0.freed), (0, 1, 0, 0));
 
         let req1 = Request::new(0, prompt(1, 8), 2);
         assert!(engine.can_admit(&req1));
         let _rx0 = admit(&mut engine, &mut b, req1);
-        let (used, _, alloc, _) = engine.kv_page_stats().unwrap();
-        assert_eq!((used, alloc), (1, 1), "admission reserves the row's pages up front");
+        let s = engine.kv_page_stats().unwrap();
+        assert_eq!((s.used, s.allocated), (1, 1), "admission reserves the row's pages up front");
 
         let req2 = Request::new(1, prompt(2, 8), 2);
         assert!(!engine.can_admit(&req2), "dry pool must defer admission");
@@ -1059,13 +1356,152 @@ mod tests {
 
         let done = run_until(&mut engine, &mut b, &mut m, 1);
         assert_eq!(done.len(), 1);
-        let (used, _, _, freed) = engine.kv_page_stats().unwrap();
-        assert_eq!((used, freed), (0, 1), "retirement returns pages to the pool");
+        let s = engine.kv_page_stats().unwrap();
+        assert_eq!((s.used, s.freed), (0, 1), "retirement returns pages to the pool");
         assert!(engine.can_admit(&req2), "returned pages unblock the deferred request");
         let _rx2 = admit(&mut engine, &mut b, req2);
         let done = run_until(&mut engine, &mut b, &mut m, 1);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 1);
+    }
+
+    #[test]
+    fn demand_mode_preempts_and_resumes_bit_identically() {
+        // Two 10-token streams (4-prompt + 6-budget = 5 pages each at
+        // 2-token pages) on a 6-page pool: both prefill and decode
+        // until the pool dries mid-decode, then the tie-broken victim
+        // (row 0, holding real prompt + decoded content) is spilled,
+        // parked, and later restored.  Its stream must be bit-identical
+        // to a solo run, and the page ledger must balance at drain.
+        let mut b = backend().with_kv_page(2).with_kv_pool_pages(Some(6));
+        let mut m = Metrics::default();
+        let p0 = prompt(1, 4);
+        let p1 = prompt(2, 4);
+        let mut solo = Vec::new();
+        for (id, p) in [(0u64, &p0), (1, &p1)] {
+            let mut probe = ContinuousEngine::new(&mut b, Variant::Fp16, 1)
+                .unwrap()
+                .with_prefill_chunk(0)
+                .with_kv_overcommit(OvercommitMode::Demand);
+            let _rx = admit(&mut probe, &mut b, Request::new(id, p.clone(), 6));
+            solo.push(probe.drain(&mut b, &mut m).unwrap().remove(0).generated);
+        }
+        let mut m2 = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2)
+            .unwrap()
+            .with_prefill_chunk(0)
+            .with_kv_overcommit(OvercommitMode::Demand);
+        let req0 = Request::new(0, p0, 6);
+        let req1 = Request::new(1, p1, 6);
+        assert!(engine.can_admit(&req0));
+        let _rx0 = admit(&mut engine, &mut b, req0);
+        assert!(
+            engine.can_admit(&req1),
+            "demand admission gates on the first chunk, not the 5-page footprint"
+        );
+        let _rx1 = admit(&mut engine, &mut b, req1);
+        let done = engine.drain(&mut b, &mut m2).unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(engine.outstanding(), 0);
+        assert!(
+            m2.kv_preemptions > 0,
+            "a 6-page pool cannot hold two 5-page streams without preemption"
+        );
+        let by_id = |id: u64| done.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).generated, solo[0], "preempted stream 0 diverged from solo");
+        assert_eq!(by_id(1).generated, solo[1], "preempted stream 1 diverged from solo");
+        let s = engine.kv_page_stats().unwrap();
+        assert_eq!(s.used, 0, "drained engine must hold no pages");
+        assert_eq!(s.allocated, s.freed + s.spilled, "page ledger must balance at drain");
+        assert_eq!(s.spilled, s.restored, "every preempted stream resumed");
+        assert!(s.spilled > 0);
+        assert!(s.high_water >= 4 && s.high_water <= 6, "high-water tracks the squeeze");
+    }
+
+    #[test]
+    fn demand_admits_strictly_more_concurrent_residents_than_reserve() {
+        // The overcommit regression: a stop-heavy workload (streams
+        // stop-retire after ~2 tokens of an 8-token budget) on the same
+        // 6-page pool.  Reserve gates admission on the 6-page worst-case
+        // footprint (one resident at a time); demand gates on the
+        // 2-page first chunk and must keep strictly more rows resident
+        // — with every stream identical across both modes.
+        let mut b = backend().with_kv_page(2).with_kv_pool_pages(Some(6));
+        let n = 6u64;
+        // discover each prompt's second greedy token: used as its stop
+        // token, so the stop hits at emission index <= 1
+        let mut stops = Vec::new();
+        for i in 0..n {
+            let mut m = Metrics::default();
+            let mut probe = ContinuousEngine::new(&mut b, Variant::Fp16, 1)
+                .unwrap()
+                .with_prefill_chunk(0)
+                .with_kv_overcommit(OvercommitMode::Reserve);
+            let _rx = admit(&mut probe, &mut b, Request::new(i, prompt(i as i32 + 1, 4), 8));
+            stops.push(probe.drain(&mut b, &mut m).unwrap().remove(0).generated[1]);
+        }
+        fn requests(n: u64, stops: &[i32]) -> VecDeque<Request> {
+            (0..n)
+                .map(|i| {
+                    let params = GenerationParams {
+                        max_new_tokens: 8,
+                        stop_tokens: vec![stops[i as usize]],
+                        ..Default::default()
+                    };
+                    Request::with_params(i, prompt(i as i32 + 1, 4), params)
+                })
+                .collect()
+        }
+        let mut peaks = Vec::new();
+        let mut streams = Vec::new();
+        for mode in [OvercommitMode::Reserve, OvercommitMode::Demand] {
+            let mut m = Metrics::default();
+            let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 4)
+                .unwrap()
+                .with_prefill_chunk(0)
+                .with_kv_overcommit(mode);
+            let mut queue = requests(n, &stops);
+            let mut rxs = Vec::new();
+            let mut done = Vec::new();
+            let mut peak = 0usize;
+            for _ in 0..10_000 {
+                while let Some(head) = queue.front() {
+                    if !engine.can_admit(head) {
+                        break;
+                    }
+                    let req = queue.pop_front().unwrap();
+                    let (tx, rx) = mpsc::channel();
+                    engine.admit(&mut b, req, tx).unwrap();
+                    rxs.push(rx);
+                }
+                peak = peak.max(engine.resident());
+                if queue.is_empty() && engine.outstanding() == 0 {
+                    break;
+                }
+                if engine.outstanding() > 0 {
+                    done.extend(engine.step(&mut b, &mut m).unwrap());
+                }
+            }
+            assert_eq!(done.len(), n as usize, "{mode:?} must serve the whole workload");
+            assert!(
+                done.iter().all(|r| r.finish == FinishReason::Stop),
+                "{mode:?}: the workload is stop-heavy by construction"
+            );
+            let mut by_id = vec![Vec::new(); n as usize];
+            for r in done {
+                by_id[r.id as usize] = r.generated;
+            }
+            peaks.push(peak);
+            streams.push(by_id);
+        }
+        assert_eq!(streams[0], streams[1], "overcommit mode must not change any stream");
+        assert!(
+            peaks[1] > peaks[0],
+            "demand must admit strictly more concurrent residents than reserve \
+             ({} vs {})",
+            peaks[1],
+            peaks[0]
+        );
     }
 
     #[test]

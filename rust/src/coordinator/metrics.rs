@@ -21,7 +21,13 @@
 //! the cumulative [`Metrics::kv_pages_allocated`] /
 //! [`Metrics::kv_pages_freed`] map/free counters, and
 //! [`Metrics::kv_admission_deferrals`] (admissions held back — not
-//! rejected — while the pool lacked headroom).
+//! rejected — while the pool lacked headroom).  Demand-paged overcommit
+//! adds [`Metrics::kv_preemptions`] (residents suspended to free pages),
+//! the [`Metrics::kv_pages_spilled`] / [`Metrics::kv_pages_restored`]
+//! spill-buffer counters, and [`Metrics::kv_pages_high_water`] (peak
+//! pages simultaneously mapped, tracked by the cache at map/restore time
+//! so it catches intra-step peaks the per-loop sample would miss).  All
+//! of these are carried from the cache in one [`KvPageStats`] snapshot.
 
 use std::time::Duration;
 
@@ -141,6 +147,26 @@ impl WidthHistogram {
     }
 }
 
+/// One snapshot of the paged-KV pool's gauges and lifetime counters,
+/// as sampled from the cache (`ContinuousEngine::kv_page_stats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPageStats {
+    /// Pages currently mapped to rows.
+    pub used: usize,
+    /// Pool size in pages.
+    pub total: usize,
+    /// Cumulative pages mapped out of the free list (map + restore).
+    pub allocated: u64,
+    /// Cumulative pages returned by row resets / retirements.
+    pub freed: u64,
+    /// Cumulative pages returned by evicting a row into its spill buffer.
+    pub spilled: u64,
+    /// Cumulative pages remapped while restoring a spilled row.
+    pub restored: u64,
+    /// Peak pages simultaneously mapped over the cache's lifetime.
+    pub high_water: usize,
+}
+
 /// All serving-path metrics (owned by the coordinator worker thread).
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
@@ -185,6 +211,21 @@ pub struct Metrics {
     /// Cumulative pages returned to the paged-KV pool (row resets /
     /// retirements).
     pub kv_pages_freed: u64,
+    /// Cumulative pages returned to the pool by spilling a victim row
+    /// into its spill buffer (demand-paged overcommit only).
+    pub kv_pages_spilled: u64,
+    /// Cumulative pages remapped while restoring a spilled row.  At
+    /// quiescence `allocated == freed + spilled` and
+    /// `spilled == restored` (+ any spills discarded by cancellation).
+    pub kv_pages_restored: u64,
+    /// Peak pages simultaneously mapped (cache-lifetime high-water mark,
+    /// tracked at map/restore time — it catches intra-step peaks the
+    /// per-loop gauge sample would miss).  Displayed only once the pool
+    /// gauge has been sampled, same honesty rule as [`Metrics::kv_pages`].
+    pub kv_pages_high_water: usize,
+    /// Residents suspended (spilled + parked) by the continuous engine
+    /// to free pages for a lower-footprint step under demand overcommit.
+    pub kv_preemptions: u64,
     /// Admission polls deferred because the paged-KV pool lacked
     /// headroom for the queue head's footprint.  The request stays
     /// queued (FIFO intact) and retries after retirements return pages
@@ -263,13 +304,16 @@ impl Metrics {
         self.active_width.record(w);
     }
 
-    /// Sample the paged-KV pool gauge (the continuous loop calls this
+    /// Sample the paged-KV pool gauges (the continuous loop calls this
     /// once per pass): current occupancy plus the cache's cumulative
-    /// map/free counters.
-    pub fn record_kv_pages(&mut self, used: usize, total: usize, allocated: u64, freed: u64) {
-        self.kv_pages = Some((used, total));
-        self.kv_pages_allocated = allocated;
-        self.kv_pages_freed = freed;
+    /// map/free/spill/restore counters and high-water mark.
+    pub fn record_kv_pages(&mut self, s: &KvPageStats) {
+        self.kv_pages = Some((s.used, s.total));
+        self.kv_pages_allocated = s.allocated;
+        self.kv_pages_freed = s.freed;
+        self.kv_pages_spilled = s.spilled;
+        self.kv_pages_restored = s.restored;
+        self.kv_pages_high_water = s.high_water;
     }
 
     /// Mean batch occupancy (1.0 = no padding waste).
@@ -310,10 +354,13 @@ impl Metrics {
             )
         };
         // Same honesty rule as step occupancy: a monolithic cache has
-        // no page pool — say n/a, never a fabricated 0/0.
+        // no page pool — say n/a, never a fabricated 0/0.  The high-water
+        // mark rides on the same gauge sample, so it shares the rule.
         let kv = match self.kv_pages {
             None => "n/a".to_string(),
-            Some((used, total)) => format!("{used}/{total}"),
+            Some((used, total)) => {
+                format!("{used}/{total} kv_high_water={}", self.kv_pages_high_water)
+            }
         };
         format!(
             "requests={} rejected={} stop_hits={} eos_hits={} cancelled={} \
@@ -321,6 +368,7 @@ impl Metrics {
              engine_steps={} step_occupancy={step_occ} active_width {width}\n\
              prefill_chunks={} chunked_admissions={}\n\
              kv_pages={kv} kv_pages_allocated={} kv_pages_freed={} \
+             kv_pages_spilled={} kv_pages_restored={} kv_preemptions={} \
              kv_admission_deferrals={}\n\
              queue   mean={:?} p50={:?} p99={:?}\n\
              prefill mean={:?} p50={:?} p99={:?}\n\
@@ -342,6 +390,9 @@ impl Metrics {
             self.chunked_admissions,
             self.kv_pages_allocated,
             self.kv_pages_freed,
+            self.kv_pages_spilled,
+            self.kv_pages_restored,
+            self.kv_preemptions,
             self.kv_admission_deferrals,
             self.queue_time.mean(),
             self.queue_time.quantile(0.5),
@@ -394,13 +445,17 @@ impl Metrics {
             self.active_width.quantile(0.5),
             self.active_width.max(),
         );
-        // `null` (not 0/0) when the cache is monolithic / never sampled.
+        // `null` (not 0/0) when the cache is monolithic / never sampled;
+        // the high-water mark is part of the same gauge object.
         let kv = match self.kv_pages {
             None => "null".to_string(),
-            Some((used, total)) => format!("{{\"used\":{used},\"total\":{total}}}"),
+            Some((used, total)) => format!(
+                "{{\"used\":{used},\"total\":{total},\"high_water\":{}}}",
+                self.kv_pages_high_water
+            ),
         };
         format!(
-            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"active_width\":{width},\"prefill_chunks\":{},\"chunked_admissions\":{},\"kv_pages\":{kv},\"kv_pages_allocated\":{},\"kv_pages_freed\":{},\"kv_admission_deferrals\":{},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
+            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"active_width\":{width},\"prefill_chunks\":{},\"chunked_admissions\":{},\"kv_pages\":{kv},\"kv_pages_allocated\":{},\"kv_pages_freed\":{},\"kv_pages_spilled\":{},\"kv_pages_restored\":{},\"kv_preemptions\":{},\"kv_admission_deferrals\":{},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
             self.requests_completed,
             self.rejected,
             self.stop_hits,
@@ -415,6 +470,9 @@ impl Metrics {
             self.chunked_admissions,
             self.kv_pages_allocated,
             self.kv_pages_freed,
+            self.kv_pages_spilled,
+            self.kv_pages_restored,
+            self.kv_preemptions,
             self.kv_admission_deferrals,
             hist(&self.queue_time),
             hist(&self.prefill_time),
@@ -553,18 +611,32 @@ mod tests {
         assert_eq!(v.get("kv_pages"), Some(&crate::util::json::Value::Null));
         assert_eq!(v.get("kv_admission_deferrals").unwrap().as_usize(), Some(0));
 
-        m.record_kv_pages(3, 8, 12, 9);
+        m.record_kv_pages(&KvPageStats {
+            used: 3,
+            total: 8,
+            allocated: 12,
+            freed: 5,
+            spilled: 4,
+            restored: 3,
+            high_water: 7,
+        });
         m.kv_admission_deferrals = 2;
+        m.kv_preemptions = 1;
         let r = m.report();
-        assert!(r.contains("kv_pages=3/8"));
-        assert!(r.contains("kv_pages_allocated=12 kv_pages_freed=9"));
+        assert!(r.contains("kv_pages=3/8 kv_high_water=7"));
+        assert!(r.contains("kv_pages_allocated=12 kv_pages_freed=5"));
+        assert!(r.contains("kv_pages_spilled=4 kv_pages_restored=3 kv_preemptions=1"));
         assert!(r.contains("kv_admission_deferrals=2"));
         let v = crate::util::json::parse(&m.to_json()).expect("metrics JSON must parse");
         let kv = v.get("kv_pages").unwrap();
         assert_eq!(kv.get("used").unwrap().as_usize(), Some(3));
         assert_eq!(kv.get("total").unwrap().as_usize(), Some(8));
+        assert_eq!(kv.get("high_water").unwrap().as_usize(), Some(7));
         assert_eq!(v.get("kv_pages_allocated").unwrap().as_usize(), Some(12));
-        assert_eq!(v.get("kv_pages_freed").unwrap().as_usize(), Some(9));
+        assert_eq!(v.get("kv_pages_freed").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("kv_pages_spilled").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("kv_pages_restored").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("kv_preemptions").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("kv_admission_deferrals").unwrap().as_usize(), Some(2));
     }
 

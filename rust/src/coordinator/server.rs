@@ -167,15 +167,26 @@ impl Coordinator {
         mode: EngineMode,
         engine_cfg: EngineConfig,
     ) -> Result<Self> {
-        Self::start_native_with_kv(ckpt, policy, variant, batcher_cfg, mode, engine_cfg, None, None)
+        Self::start_native_with_kv(
+            ckpt,
+            policy,
+            variant,
+            batcher_cfg,
+            mode,
+            engine_cfg,
+            None,
+            None,
+            None,
+        )
     }
 
     /// [`Coordinator::start_native_with_engine`] with explicit KV-cache
-    /// layout knobs: page size in tokens and page storage precision
-    /// (`32` = FP32 pages, `8` = INT8 quantized pages).  `None` fields
-    /// fall back to the `QUIK_KV_PAGE` / `QUIK_KV_BITS` environment,
-    /// then to the defaults (64-token FP32 pages) — see
-    /// [`crate::config::ExecConfig`].
+    /// layout knobs: page size in tokens, page storage precision
+    /// (`32` = FP32 pages, `8` = INT8 quantized pages) and the page-pool
+    /// size in pages (`0` = full-size pool, the no-overcommit sentinel).
+    /// `None` fields fall back to the `QUIK_KV_PAGE` / `QUIK_KV_BITS` /
+    /// `QUIK_KV_POOL` environment, then to the defaults (64-token FP32
+    /// pages, full-size pool) — see [`crate::config::ExecConfig`].
     #[allow(clippy::too_many_arguments)]
     pub fn start_native_with_kv(
         ckpt: NativeCheckpoint,
@@ -186,6 +197,7 @@ impl Coordinator {
         engine_cfg: EngineConfig,
         kv_page: Option<usize>,
         kv_bits: Option<u32>,
+        kv_pool: Option<usize>,
     ) -> Result<Self> {
         Self::start_with_engine(
             move || {
@@ -195,6 +207,9 @@ impl Coordinator {
                 }
                 if let Some(bits) = kv_bits {
                     b = b.with_kv_bits(bits);
+                }
+                if let Some(pool) = kv_pool {
+                    b = b.with_kv_pool_pages((pool > 0).then_some(pool));
                 }
                 Ok(b)
             },
@@ -338,7 +353,22 @@ where
     };
     let engine = if want_continuous {
         match ContinuousEngine::new(&mut backend, variant, n_slots) {
-            Ok(engine) => Some(engine.with_prefill_chunk(engine_cfg.resolve_prefill_chunk())),
+            Ok(engine) => {
+                let engine = engine.with_kv_overcommit(engine_cfg.resolve_kv_overcommit());
+                // Page-align the effective prefill chunk so chunk and
+                // page boundaries coincide — a straddling chunk would
+                // map its last page for only a fraction of its tokens.
+                let raw = engine_cfg.resolve_prefill_chunk();
+                let page = engine.page_tokens().unwrap_or(0);
+                let chunk = crate::config::ExecConfig::page_align_chunk(raw, page);
+                if chunk != raw {
+                    eprintln!(
+                        "[coordinator] prefill chunk {raw} rounded up to {chunk} \
+                         ({page}-token page alignment)"
+                    );
+                }
+                Some(engine.with_prefill_chunk(chunk))
+            }
             Err(e) if forced => {
                 let _ = ready_tx.send(Err(e));
                 return Ok(());
@@ -421,10 +451,16 @@ fn cancel_queued(
 /// cancellation frees its slot at the same granularity.
 ///
 /// On a paged KV cache admission is additionally gated on page headroom
-/// ([`ContinuousEngine::can_admit`]): a request whose footprint does not
-/// fit the pool *right now* stays queued (deferred, FIFO intact, counted
-/// in `kv_admission_deferrals`) until retirements return pages — the
-/// loop never panics or corrupts resident rows on an exhausted pool.
+/// ([`ContinuousEngine::can_admit`]): a request that cannot be admitted
+/// *right now* stays queued (deferred, FIFO intact, counted in
+/// `kv_admission_deferrals`) until retirements return pages — the loop
+/// never panics or corrupts resident rows on an exhausted pool.  Under
+/// `reserve` overcommit the gate is the request's whole worst-case
+/// footprint; under `demand` it is just the first prefill chunk (pages
+/// map lazily as the stream grows, and the engine preempts low-progress
+/// residents when the pool runs dry mid-step).  The loop therefore keeps
+/// stepping while anything is *outstanding* — resident **or** suspended
+/// — since a fully preempted engine still needs steps to resume.
 fn run_continuous<B: InferenceBackend>(
     backend: &mut B,
     mut engine: ContinuousEngine<B>,
@@ -440,9 +476,10 @@ fn run_continuous<B: InferenceBackend>(
     let mut metrics = Metrics::default();
 
     loop {
-        // Drain the mailbox without stalling resident rows: non-blocking
-        // while anything is resident or queued, short block when idle.
-        let busy = engine.resident() > 0 || batcher.queued() > 0;
+        // Drain the mailbox without stalling in-flight rows: non-blocking
+        // while anything is outstanding (resident or suspended) or
+        // queued, short block when idle.
+        let busy = engine.outstanding() > 0 || batcher.queued() > 0;
         let msg = if busy {
             match rx.try_recv() {
                 Ok(m) => Some(m),
@@ -515,13 +552,15 @@ fn run_continuous<B: InferenceBackend>(
         while engine.has_free_slot() {
             let Some(head) = batcher.peek() else { break };
             if !engine.can_admit(head) {
-                if engine.resident() > 0 {
+                if engine.outstanding() > 0 {
                     metrics.kv_admission_deferrals += 1;
                     break;
                 }
-                // An empty engine holds no pages, so this request can
-                // never fit (its footprint exceeds the whole pool):
-                // reject it instead of spinning on it forever.
+                // An empty engine (nothing resident, nothing suspended)
+                // holds no pages, so this request can never fit (its
+                // footprint exceeds the whole pool under either
+                // overcommit mode): reject it instead of spinning on it
+                // forever.
                 let req = batcher.pop().expect("peeked request still queued");
                 eprintln!(
                     "[coordinator] request {} exceeds the kv page pool; rejected",
@@ -541,7 +580,9 @@ fn run_continuous<B: InferenceBackend>(
         }
 
         // ---- one decode step ------------------------------------------
-        if engine.resident() > 0 {
+        // Gate on outstanding, not resident: a fully suspended engine
+        // still needs steps to restore its parked streams.
+        if engine.outstanding() > 0 {
             match engine.step(backend, &mut metrics) {
                 Ok(_done) => {
                     // Rows resident *after* the step are exactly the rows
@@ -569,8 +610,8 @@ fn run_continuous<B: InferenceBackend>(
         // ---- page-pool gauge ------------------------------------------
         // Sample once per loop pass (paged caches only) so the snapshot
         // the metrics verb returns tracks live pool occupancy.
-        if let Some((used, total, allocated, freed)) = engine.kv_page_stats() {
-            metrics.record_kv_pages(used, total, allocated, freed);
+        if let Some(stats) = engine.kv_page_stats() {
+            metrics.record_kv_pages(&stats);
         }
     }
 }

@@ -70,10 +70,17 @@
 //! (continuous engine over a paged backend cache):
 //!
 //! ```text
-//!    "kv_pages": {"used": 3, "total": 32},   pool occupancy gauge, or null
+//!    "kv_pages": {"used": 3, "total": 32,    pool occupancy gauge + peak
+//!                 "high_water": 30},          pages ever mapped, or null
 //!                                            when the cache is monolithic
 //!    "kv_pages_allocated": 120,              cumulative pages mapped
-//!    "kv_pages_freed": 117,                  cumulative pages returned
+//!    "kv_pages_freed": 110,                  cumulative pages returned
+//!    "kv_pages_spilled": 7,                  pages returned by evicting a
+//!                                            preemption victim's row
+//!    "kv_pages_restored": 7,                 pages remapped restoring a
+//!                                            preempted row (bit-exact)
+//!    "kv_preemptions": 2,                    residents suspended to free
+//!                                            pages (demand overcommit)
 //!    "kv_admission_deferrals": 2             admissions held back (still
 //!                                            queued, NOT rejected) while
 //!                                            the pool lacked headroom
@@ -138,6 +145,14 @@ pub struct ServerConfig {
     /// (bit-identical to the dense cache), 8 = INT8 quantized pages.
     /// `None` defers to `QUIK_KV_BITS`, then to 32.
     pub kv_bits: Option<u32>,
+    /// KV page-pool size in pages (`--kv-pool`; `Some(0)` = explicit
+    /// full-size sentinel).  `None` defers to `QUIK_KV_POOL`, then to a
+    /// full-size pool ([`crate::config::ExecConfig::resolve_kv_pool`]).
+    pub kv_pool: Option<usize>,
+    /// Page-pool admission discipline (`--kv-overcommit`):
+    /// reserve = whole-footprint up front, demand = lazy paging with
+    /// preemption.  `None` defers to `QUIK_KV_OVERCOMMIT`, then reserve.
+    pub kv_overcommit: Option<crate::config::OvercommitMode>,
 }
 
 impl Default for ServerConfig {
@@ -151,6 +166,8 @@ impl Default for ServerConfig {
             prefill_chunk: None,
             kv_page: None,
             kv_bits: None,
+            kv_pool: None,
+            kv_overcommit: None,
         }
     }
 }
@@ -162,6 +179,7 @@ impl ServerConfig {
         crate::coordinator::engine::EngineConfig {
             slots: self.slots,
             prefill_chunk: self.prefill_chunk,
+            kv_overcommit: self.kv_overcommit,
             ..Default::default()
         }
     }

@@ -36,8 +36,10 @@
 //!     (`QUIK_KV_BITS=8`/`--kv-bits 8`) quantize each cached K/V vector
 //!     per token with the paper's asymmetric scheme and are pinned by
 //!     greedy golden-parity; retirement returns a row's pages to the
-//!     pool, and admission is additionally gated on free-page headroom
-//!     (see the cache contract in [`backend`]).  And `backend::pjrt`
+//!     pool, rows map pages **on demand** as tokens are written, and a
+//!     mapped row can be *spilled* to a heap buffer and later restored
+//!     bit-exactly — the primitives behind demand-paged overcommit (see
+//!     the cache contract in [`backend`]).  And `backend::pjrt`
 //!     (behind the `pjrt` cargo feature), which replays the L2 artifacts
 //!     through PJRT;
 //!   * [`coordinator`] — the serving layer, generic over the backend
@@ -52,9 +54,19 @@
 //!     against a memory budget via [`memmodel`] unless pinned by
 //!     `QUIK_SLOTS`/`--slots` — the per-slot estimate is charged at the
 //!     configured KV page layout and precision, so INT8 pages admit
-//!     strictly more residents under the same budget, and on a paged
-//!     cache the serving loop additionally *defers* admissions the page
-//!     pool cannot hold until residents retire), a static
+//!     strictly more residents under the same budget.  On a paged cache
+//!     the page pool (`QUIK_KV_POOL`/`--kv-pool`) is an admission
+//!     resource with two disciplines
+//!     (`QUIK_KV_OVERCOMMIT`/`--kv-overcommit`): **reserve** maps each
+//!     admission's whole worst-case footprint up front so a resident
+//!     can never starve, while **demand** maps pages just in time,
+//!     gates admission on the first prefill chunk only — so stop-heavy
+//!     workloads fit strictly more concurrent residents in the same
+//!     pool — and, when the pool dries mid-stream, *preempts* the
+//!     lowest-progress resident (its pages spill to a buffer, the
+//!     stream parks and later resumes FIFO, restored bit-exactly);
+//!     either way the serving loop *defers* admissions the pool cannot
+//!     hold until pages free), a static
 //!     batch-at-a-time fallback ([`coordinator::scheduler`], for
 //!     static-shape backends; `QUIK_ENGINE` selects explicitly), and the
 //!     **v2 generation API** end-to-end: requests carry

@@ -25,7 +25,7 @@ use anyhow::{bail, Context, Result};
 
 use quik::backend::native::{demo_policy, NativeCheckpoint, NativeConfig};
 use quik::backend::Variant;
-use quik::config::{model_zoo, QuikPolicy};
+use quik::config::{model_zoo, OvercommitMode, QuikPolicy};
 use quik::coordinator::batcher::BatcherConfig;
 use quik::coordinator::sampler::{GenerationParams, Sampler};
 use quik::coordinator::server::{run_workload, Coordinator, WorkloadSpec};
@@ -154,6 +154,10 @@ fn print_help() {
                                                (QUIK_KV_PAGE env; native backend)\n\
                           [--kv-bits 32|8]     KV page precision: 32 = FP32,\n\
                                                8 = INT8 quantized (QUIK_KV_BITS env)\n\
+                          [--kv-pool 48]       KV page-pool size in pages\n\
+                                               (QUIK_KV_POOL env; 0 = full size)\n\
+                          [--kv-overcommit reserve|demand]  pool admission\n\
+                                               discipline (QUIK_KV_OVERCOMMIT env)\n\
                           --requests 16 --prompt-len 48 --gen 16 [--rate <req/s>]\n\
                           [--temperature 0.8 --top-k 40 --top-p 0.95\n\
                            --sample-seed 7 --stop 7,42 --eos 2]  (sampling/stop)\n\
@@ -201,18 +205,28 @@ fn serve(args: &Args) -> Result<()> {
     let backend = args.get("backend", "native");
     let engine = quik::coordinator::EngineMode::parse(&args.get("engine", "auto"))
         .context("--engine must be auto, continuous or static")?;
-    let engine_cfg = quik::coordinator::EngineConfig {
-        slots: args.get_opt_usize("slots")?,
-        prefill_chunk: args.get_opt_usize("prefill-chunk")?,
-        ..Default::default()
-    };
-    // KV-cache layout knobs (native backend): page size in tokens and
-    // page precision.  Absent flags defer to QUIK_KV_PAGE / QUIK_KV_BITS.
+    // KV-cache layout/policy knobs (native backend): page size in
+    // tokens, page precision, page-pool size and overcommit discipline.
+    // Absent flags defer to the QUIK_KV_* environment.
     let kv_page = args.get_opt_usize("kv-page")?;
     let kv_bits = match args.get_opt_usize("kv-bits")? {
         Some(b) if b == 8 || b == 32 => Some(b as u32),
         Some(b) => bail!("--kv-bits must be 8 or 32, got {b}"),
         None => None,
+    };
+    let kv_pool = args.get_opt_usize("kv-pool")?;
+    let kv_overcommit = match args.flags.get("kv-overcommit") {
+        Some(s) => Some(
+            OvercommitMode::parse(s)
+                .with_context(|| format!("--kv-overcommit must be reserve or demand, got {s}"))?,
+        ),
+        None => None,
+    };
+    let engine_cfg = quik::coordinator::EngineConfig {
+        slots: args.get_opt_usize("slots")?,
+        prefill_chunk: args.get_opt_usize("prefill-chunk")?,
+        kv_overcommit,
+        ..Default::default()
     };
     let spec = WorkloadSpec {
         n_requests: args.get_usize("requests", 16)?,
@@ -234,6 +248,7 @@ fn serve(args: &Args) -> Result<()> {
                 engine_cfg,
                 kv_page,
                 kv_bits,
+                kv_pool,
             )?
         }
         "pjrt" => start_pjrt_coordinator(args, variant)?,
@@ -249,6 +264,8 @@ fn serve(args: &Args) -> Result<()> {
             prefill_chunk: engine_cfg.prefill_chunk,
             kv_page,
             kv_bits,
+            kv_pool,
+            kv_overcommit,
             ..ServerConfig::default()
         };
         return quik::coordinator::tcp::serve(addr, coord, None, tcp_cfg);

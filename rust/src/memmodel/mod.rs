@@ -93,6 +93,30 @@ pub fn kv_cache_bytes(spec: &ModelSpec, kv: &KvCacheSpec, batch: usize, seq: usi
     data + quant_meta + table_bytes
 }
 
+/// Spill-buffer bytes for preempting one victim row holding `seq`
+/// resident tokens under demand-paged overcommit: the row's mapped
+/// pages are copied out verbatim — page data at `kv.bits` (whole pages,
+/// same rounding as the pool) plus, for INT8 pages, the per-token
+/// quantization parameters that make the restore bit-exact.  No
+/// page-table entries are charged: the spill buffer stores contents,
+/// not mappings (the pages themselves return to the free list — that is
+/// the point of the eviction).  Monolithic layouts (`page_tokens == 0`)
+/// have no victim path and spill nothing.
+pub fn kv_spill_bytes(spec: &ModelSpec, kv: &KvCacheSpec, seq: usize) -> f64 {
+    if kv.page_tokens == 0 {
+        return 0.0;
+    }
+    let positions = seq.div_ceil(kv.page_tokens) * kv.page_tokens;
+    let elems = (spec.n_layers * positions * spec.kv_dim()) as f64;
+    let data = 2.0 * elems * (kv.bits as f64 / 8.0); // K and V planes
+    let quant_meta = if kv.bits == 8 {
+        (spec.n_layers * positions * spec.n_kv_heads) as f64 * 16.0
+    } else {
+        0.0
+    };
+    data + quant_meta
+}
+
 /// Peak memory of a prefill pass (`batch` × `seq` tokens) under the
 /// paper's serving model — FP16 dense K/V ([`KvCacheSpec::fp16_dense`]),
 /// which is what Table 6 reports.  Backends sizing their *own* slots
@@ -264,6 +288,23 @@ mod tests {
         let ragged = kv_cache_bytes(&s, &KvCacheSpec::paged(32, 64), 1, 65);
         let full = kv_cache_bytes(&s, &KvCacheSpec::paged(32, 64), 1, 128);
         assert_eq!(ragged, full, "65 tokens must charge 2 full 64-token pages");
+    }
+
+    #[test]
+    fn spill_bytes_track_one_row_without_table_overhead() {
+        let s = spec("llama2-70b").unwrap();
+        // a one-row pool's data cost minus its page-table entries is
+        // exactly what the spill buffer must hold
+        let seq = 100usize; // ragged: charges 2 full 64-token pages
+        let f32_pool_row = kv_cache_bytes(&s, &KvCacheSpec::paged(32, 64), 1, seq);
+        let f32_table = seq.div_ceil(64) as f64 * 8.0;
+        assert_eq!(kv_spill_bytes(&s, &KvCacheSpec::paged(32, 64), seq), f32_pool_row - f32_table);
+        // INT8 spills carry the per-token quant params (restore must be
+        // bit-exact), same table exclusion
+        let i8_pool_row = kv_cache_bytes(&s, &KvCacheSpec::paged(8, 64), 1, seq);
+        assert_eq!(kv_spill_bytes(&s, &KvCacheSpec::paged(8, 64), seq), i8_pool_row - f32_table);
+        // monolithic caches have no victim path
+        assert_eq!(kv_spill_bytes(&s, &KvCacheSpec::fp16_dense(), seq), 0.0);
     }
 
     #[test]

@@ -574,6 +574,83 @@ fn prop_paged_kv_cache_bitexact_across_page_sizes() {
 }
 
 #[test]
+fn prop_preempted_streams_bitexact_across_pages_precisions_threads() {
+    // The demand-overcommit signature invariant, swept: at every page
+    // size, KV page precision and worker-thread count, a stream that is
+    // spilled mid-decode and later restored must be bit-identical to
+    // its solo run.  The squeeze is structural, not seeded: two streams
+    // whose footprints are 4 pages each share a 6-page pool, so their
+    // joint decode must cross the pool edge and preempt the tie-broken
+    // victim (row 0 — holding real prompt + decoded content by then).
+    use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+    use quik::backend::Variant;
+    use quik::config::OvercommitMode;
+    use quik::coordinator::engine::ContinuousEngine;
+    use quik::coordinator::Metrics;
+    use std::sync::mpsc;
+
+    let variant = Variant::Fp16;
+    for page in [2usize, 4] {
+        for kv_bits in [32u32, 8] {
+            for threads in [1usize, 2, 4] {
+                let mut b =
+                    NativeBackend::seeded("prop-preempt", NativeConfig::demo(), 9, demo_policy())
+                        .unwrap()
+                        .with_threads(threads)
+                        .with_kv_page(page)
+                        .with_kv_bits(kv_bits)
+                        .with_kv_pool_pages(Some(6));
+                let mut m = Metrics::default();
+                let prompts: Vec<Vec<i32>> = (0..2)
+                    .map(|s| (0..2 * page as i32).map(|i| (i * 7 + s + 3).rem_euclid(90)).collect())
+                    .collect();
+                let budget = 2 * page; // footprint 4 pages per stream
+                // solo oracles through a 1-slot engine on the same layout
+                // (4 of 6 pages: a lone stream never preempts itself)
+                let mut solo = Vec::new();
+                for (id, p) in prompts.iter().enumerate() {
+                    let mut probe = ContinuousEngine::new(&mut b, variant, 1)
+                        .unwrap()
+                        .with_kv_overcommit(OvercommitMode::Demand);
+                    let (tx, _rx) = mpsc::channel();
+                    probe.admit(&mut b, Request::new(id as u64, p.clone(), budget), tx).unwrap();
+                    solo.push(probe.drain(&mut b, &mut m).unwrap().remove(0).generated);
+                }
+                let mut engine = ContinuousEngine::new(&mut b, variant, 2)
+                    .unwrap()
+                    .with_kv_overcommit(OvercommitMode::Demand);
+                let mut rxs = Vec::new();
+                for (id, p) in prompts.iter().enumerate() {
+                    let (tx, rx) = mpsc::channel();
+                    engine.admit(&mut b, Request::new(id as u64, p.clone(), budget), tx).unwrap();
+                    rxs.push(rx);
+                }
+                let done = engine.drain(&mut b, &mut m).unwrap();
+                assert_eq!(done.len(), 2);
+                assert!(
+                    m.kv_preemptions > 0,
+                    "page={page} bits={kv_bits} threads={threads}: \
+                     8 pages of demand on a 6-page pool never preempted"
+                );
+                for resp in &done {
+                    assert_eq!(
+                        resp.generated, solo[resp.id as usize],
+                        "page={page} bits={kv_bits} threads={threads}: preempted stream {} \
+                         diverged from its solo run",
+                        resp.id
+                    );
+                }
+                let s = engine.kv_page_stats().unwrap();
+                assert_eq!(s.used, 0, "page={page} bits={kv_bits}: drained pool not empty");
+                assert_eq!(s.allocated, s.freed + s.spilled);
+                assert_eq!(s.spilled, s.restored);
+                assert!(s.spilled > 0);
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_batcher_never_loses_or_duplicates() {
     let mut rng = Rng::new(106);
     for _ in 0..20 {
