@@ -674,6 +674,105 @@ fn main() {
         ));
     }
 
+    // --- radix prefix cache: shared-prefix TTFT, cold vs warm ----------
+    // The PR-9 tentpole comparison: a Zipf-ish mixture of three shared
+    // 64-token prompt templates (4 pages of 16) with short random
+    // suffixes, served twice through the same coordinator.  With the
+    // prefix cache on, wave 1 seeds the radix store at retire and wave
+    // 2 aliases the template pages, prefilling only the 8-token suffix
+    // — so its steady-state TTFT should sit well under the no-cache
+    // control's, which re-prefills all 72 prompt tokens every time.
+    {
+        use quik::backend::native::{demo_policy, NativeCheckpoint, NativeConfig};
+        use quik::backend::Variant;
+        use quik::coordinator::request::GenerationRequest;
+        use quik::coordinator::server::Coordinator;
+        use quik::coordinator::{EngineConfig, EngineMode};
+
+        let templates: Vec<Vec<i32>> = (0..3)
+            .map(|_| (0..64).map(|_| rng.range_i32(0, 89)).collect())
+            .collect();
+        let prompts: Vec<Vec<i32>> = (0..12)
+            .map(|_| {
+                // Zipf-ish: template 0 dominates, 2 is rare
+                let t = match rng.below(10) {
+                    0..=5 => 0,
+                    6..=8 => 1,
+                    _ => 2,
+                };
+                let mut p = templates[t].clone();
+                p.extend((0..8).map(|_| rng.range_i32(0, 89)));
+                p
+            })
+            .collect();
+        let serve_cfg = BatcherConfig {
+            batch_sizes: vec![4, 1],
+            max_wait: Duration::from_millis(5),
+            bucket: 64,
+            max_queue: 1024,
+        };
+        let ttft_stats = |ts: &[f64]| {
+            let mut us = ts.to_vec();
+            us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean = us.iter().sum::<f64>() / us.len() as f64;
+            (mean, us[(us.len() * 95) / 100])
+        };
+        let mut means = Vec::new();
+        for (on, label) in [(false, "cold"), (true, "warm")] {
+            let ckpt = NativeCheckpoint::seeded(NativeConfig::demo(), 5);
+            let mut coord = Coordinator::start_native_with_kv(
+                ckpt,
+                demo_policy(),
+                Variant::Quik4,
+                serve_cfg.clone(),
+                EngineMode::Continuous,
+                EngineConfig { slots: Some(4), prefix: Some(on), ..Default::default() },
+                Some(16), // 16-token pages
+                None,
+                None,
+            )
+            .expect("start coordinator");
+            // wave 1 seeds the store (or is a plain dry run for the
+            // control); wave 2 is the steady-state measurement
+            let mut steady: Vec<f64> = Vec::new();
+            for wave in 0..2 {
+                for p in &prompts {
+                    let resp = coord
+                        .submit(GenerationRequest::greedy(p.clone(), 8))
+                        .wait()
+                        .expect("stream completes");
+                    if wave == 1 {
+                        steady.push(resp.ttft.as_secs_f64() * 1e6);
+                    }
+                }
+            }
+            let (mean, p95) = ttft_stats(&steady);
+            let reused = coord.metrics().map(|m| m.prefix_tokens_reused).unwrap_or(0);
+            println!(
+                "serve[shared-prefix {label}]: steady ttft mean {mean:.1}us p95 {p95:.1}us, \
+                 {reused} prompt tokens reused"
+            );
+            derived.push(format!(
+                "    {{\"name\": \"serve shared-prefix {label} ttft_mean_us\", \"value\": {mean:.3}}}"
+            ));
+            derived.push(format!(
+                "    {{\"name\": \"serve shared-prefix {label} ttft_p95_us\", \"value\": {p95:.3}}}"
+            ));
+            if on {
+                derived.push(format!(
+                    "    {{\"name\": \"serve shared-prefix prefix_tokens_reused\", \"value\": {reused}}}"
+                ));
+            }
+            means.push(mean);
+            coord.shutdown().expect("shutdown");
+        }
+        let speedup = means[0] / means[1];
+        println!("    -> {speedup:.2}x steady-state TTFT speedup from prefix-page reuse");
+        derived.push(format!(
+            "    {{\"name\": \"serve shared-prefix prefix_ttft_speedup\", \"value\": {speedup:.3}}}"
+        ));
+    }
+
     // --- PJRT decode step (artifact runtime, pjrt feature only) ---
     #[cfg(feature = "pjrt")]
     {

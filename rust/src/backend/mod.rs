@@ -116,6 +116,35 @@ impl Phase {
 /// * rolling the logical length *back* keeps pages mapped: replay after
 ///   rollback must read the previously written content.
 ///
+/// ### The refcount / aliasing contract
+///
+/// Paged caches may additionally support **page aliasing** — the
+/// substrate of prefix caching ([`crate::coordinator::prefix`]).  Pages
+/// are then reference-counted: each row page-table entry holding a page
+/// counts one reference, and an out-of-band holder (the prefix store)
+/// adds one via [`KvCache::retain_page`].  The rules:
+///
+/// * a page returns to the free list only when its **last** reference
+///   drops — `reset_row`/`evict_row` *release* rather than free, so a
+///   retiring row never yanks a page a neighbor still reads;
+/// * [`KvCache::adopt_pages`] aliases a page-aligned run of live pages
+///   into an **empty** row as its immutable prefix: no data movement,
+///   logical length set to the aliased depth, the next forward appends
+///   after it into fresh pages.  Everything inside a page travels with
+///   the alias — for INT8 pages the per-token quant parameters — so an
+///   aliased read is bit-identical to reading the original row;
+/// * shared pages are **immutable** while any other holder references
+///   them: a rollback into the aliased depth must privatize
+///   (copy-before-write) before replay can rewrite a position;
+/// * [`KvCache::release_page`] drops a `retain_page` reference (store
+///   eviction); [`KvCache::row_pages`] exposes a row's table so the
+///   engine can offer a retiring row's prompt pages to the store.
+///
+/// Every aliasing hook has an inert default (`row_pages` empty,
+/// `adopt_pages` refuses, retain/release no-ops), so unpaged caches and
+/// paged caches without aliasing need nothing new — engines detect
+/// support by `adopt_pages` answering `true`.
+///
 /// Every hook has an unpaged default, so a dense fallback cache (and
 /// the PJRT artifact cache) implements nothing new: `page_tokens() ==
 /// None`, the gauges read zero, `ensure_row_capacity` and
@@ -249,6 +278,49 @@ pub trait KvCache {
     fn restore_row(&mut self, row: usize) -> bool {
         let _ = row;
         false
+    }
+
+    /// The pool pages `row` currently maps, in page-table order (empty
+    /// when unpaged or the cache does not expose aliasing).  The engine
+    /// reads this at retirement to offer the row's prompt-prefix pages
+    /// to the prefix store.
+    fn row_pages(&self, row: usize) -> Vec<usize> {
+        let _ = row;
+        Vec::new()
+    }
+
+    /// Alias `pages` into the empty `row` as its immutable prefix (see
+    /// the refcount/aliasing contract above): each page gains a
+    /// reference, the row's logical length becomes
+    /// `pages.len() × page_tokens`, and no data moves.  Returns `false`
+    /// — with no side effects — when the row is not empty, the alias
+    /// would exceed the context, or the cache does not support aliasing
+    /// (the default).
+    fn adopt_pages(&mut self, row: usize, pages: &[usize]) -> bool {
+        let _ = (row, pages);
+        false
+    }
+
+    /// Add one out-of-band reference to `page` (the prefix store pinning
+    /// a retired row's prompt pages).  No-op when unsupported.
+    fn retain_page(&mut self, page: usize) {
+        let _ = page;
+    }
+
+    /// Drop an out-of-band reference to `page` (prefix-store eviction);
+    /// the page returns to the free list once no row aliases it either.
+    /// No-op when unsupported.
+    fn release_page(&mut self, page: usize) {
+        let _ = page;
+    }
+
+    /// Current reference count of `page` (1 = sole holder, so releasing
+    /// the last out-of-band reference would return it to the free
+    /// list).  Only meaningful for page ids obtained from
+    /// [`KvCache::row_pages`]; caches without aliasing answer 1.
+    fn page_refcount(&self, page: usize) -> u32 {
+        let _ = page;
+        1
     }
 
     /// Cumulative pages spilled by [`KvCache::evict_row`] (monotonic
@@ -409,6 +481,17 @@ pub trait InferenceBackend {
     /// default) means the backend cannot estimate it; the engine then
     /// falls back to its workload floor.
     fn slot_bytes(&self) -> Option<u64> {
+        None
+    }
+
+    /// Estimated resident cost, in bytes, of a **full prefix store** over
+    /// this backend's paged KV pool (the store's page capacity at the
+    /// configured page layout and precision).  The continuous engine
+    /// charges this against the same memory budget slot autoscaling
+    /// divides, so enabling the prefix cache trades slots for reuse
+    /// explicitly instead of silently overcommitting memory.  `None`
+    /// (the default) means unpaged or unsupported — nothing is charged.
+    fn prefix_store_bytes(&self) -> Option<u64> {
         None
     }
 }

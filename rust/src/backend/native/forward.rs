@@ -399,6 +399,21 @@ struct SpillRow {
 /// list, page-table capacity) is allocated at construction, so mapping a
 /// page on the decode path is a free-list pop — the warm step stays
 /// allocation-free.
+///
+/// Pages are **refcounted** so several holders can alias the same
+/// physical page: each row's page-table entry and each prefix-store
+/// retention ([`KvCache::retain_page`]) counts one reference, and a page
+/// returns to the free list only when the last reference drops.  A row
+/// whose leading pages were adopted from another holder
+/// ([`KvCache::adopt_pages`]) records that aliased depth; shared pages
+/// are immutable while any other holder references them — appends past
+/// the (page-aligned) aliased depth land in fresh pages by construction,
+/// and a rollback *into* the aliased prefix privatizes the affected
+/// pages first (copy-before-write), so replay stays exact without ever
+/// mutating a neighbor's bytes.  For INT8 pages the per-token quant
+/// parameters live inside the page, so an aliased read dequantizes the
+/// identical `(scale, zero, q)` triples the original append wrote —
+/// KV8 prefix reuse is bit-exact, not approximately equal.
 #[derive(Debug, Clone)]
 pub struct NativeKvCache {
     store: PageStore,
@@ -424,6 +439,15 @@ pub struct NativeKvCache {
     high_water: usize,
     /// At most one pending spill per row ([`KvCache::evict_row`]).
     spill: Vec<Option<SpillRow>>,
+    /// Per-page reference count: one per row page-table entry holding the
+    /// page plus one per [`KvCache::retain_page`].  Zero iff the page is
+    /// on the free list.
+    refcount: Vec<u32>,
+    /// Per-row aliased-prefix depth in tokens (page-aligned; 0 = the row
+    /// owns every mapped page privately).  Set by
+    /// [`KvCache::adopt_pages`], lowered by copy-before-write rollbacks,
+    /// cleared by reset/evict.
+    shared_prefix: Vec<usize>,
 }
 
 impl NativeKvCache {
@@ -490,6 +514,8 @@ impl NativeKvCache {
             pages_restored: 0,
             high_water: 0,
             spill: (0..batch).map(|_| None).collect(),
+            refcount: vec![0; n_pages],
+            shared_prefix: vec![0; batch],
         }
     }
 
@@ -509,10 +535,67 @@ impl NativeKvCache {
         let need = self.pages_for(len);
         while self.table[row].len() < need {
             let page = self.free.pop().expect("page deficit checked before mapping");
+            self.refcount[page] = 1;
             self.table[row].push(page);
             self.pages_allocated += 1;
         }
         self.high_water = self.high_water.max(self.n_pages - self.free.len());
+    }
+
+    /// Drop one reference to `page`: decrement the refcount and, when it
+    /// reaches zero, return the page to the free list counting it under
+    /// `counter` (freed on the retire/release path, spilled on the evict
+    /// path).  Free-standing over split borrows so the release loops can
+    /// pop from a row's table while pushing to the free list.
+    fn release_ref(free: &mut Vec<usize>, refcount: &mut [u32], page: usize, counter: &mut u64) {
+        debug_assert!(refcount[page] > 0, "releasing unreferenced page {page}");
+        refcount[page] -= 1;
+        if refcount[page] == 0 {
+            free.push(page);
+            *counter += 1;
+        }
+    }
+
+    /// Replace `table[row][idx]` with a freshly mapped private copy of
+    /// its contents (K/V data and, for INT8 pages, the per-token quant
+    /// parameters), releasing the shared original.  Rollback support:
+    /// replay then reads identical bytes but writes land in the copy.
+    /// Pops from the free pool — rolling an aliased row back without
+    /// free-pool headroom is a caller bug (the engine never does; a
+    /// direct caller must leave room).
+    fn privatize_page(&mut self, row: usize, idx: usize) {
+        let old = self.table[row][idx];
+        let fresh = self
+            .free
+            .pop()
+            .expect("copy-before-write below an aliased prefix needs free-pool headroom");
+        self.pages_allocated += 1;
+        self.high_water = self.high_water.max(self.n_pages - self.free.len());
+        let pe = self.page_elems;
+        let ps = self.page_scales;
+        let copy_f32 = |buf: &mut Vec<f32>, width: usize| {
+            buf.copy_within(old * width..(old + 1) * width, fresh * width);
+        };
+        let copy_i8 = |buf: &mut Vec<i8>| {
+            buf.copy_within(old * pe..(old + 1) * pe, fresh * pe);
+        };
+        match &mut self.store {
+            PageStore::F32 { k, v } => {
+                copy_f32(k, pe);
+                copy_f32(v, pe);
+            }
+            PageStore::I8 { k, v, k_scale, k_zero, v_scale, v_zero } => {
+                copy_i8(k);
+                copy_i8(v);
+                copy_f32(k_scale, ps);
+                copy_f32(k_zero, ps);
+                copy_f32(v_scale, ps);
+                copy_f32(v_zero, ps);
+            }
+        }
+        self.refcount[fresh] = 1;
+        self.table[row][idx] = fresh;
+        Self::release_ref(&mut self.free, &mut self.refcount, old, &mut self.pages_freed);
     }
 
     /// Element offset of `(layer, row, kv_head, pos)`'s `d_head` vector
@@ -662,7 +745,9 @@ impl KvCache for NativeKvCache {
             "set_len({len}) rolls past cache capacity {}",
             self.max_ctx
         );
-        self.row_len.fill(len.min(self.max_ctx));
+        for row in 0..self.batch {
+            self.set_row_len(row, len.min(self.max_ctx));
+        }
     }
 
     fn set_row_len(&mut self, row: usize, len: usize) {
@@ -671,24 +756,42 @@ impl KvCache for NativeKvCache {
             "set_row_len({row}, {len}) rolls past cache capacity {}",
             self.max_ctx
         );
-        self.row_len[row] = len.min(self.max_ctx);
+        let len = len.min(self.max_ctx);
+        if len < self.shared_prefix[row] {
+            // Copy-before-write: a rollback into the aliased prefix means
+            // replay will rewrite positions inside pages other holders
+            // still reference.  Privatize every still-shared page from
+            // the one containing `len` up to the aliased depth, then
+            // lower the aliased depth to the page boundary at or below
+            // `len` — pages strictly below stay aliased (read-only).
+            let first = len / self.page_tokens;
+            let last = self.shared_prefix[row].div_ceil(self.page_tokens);
+            for idx in first..last {
+                if self.refcount[self.table[row][idx]] > 1 {
+                    self.privatize_page(row, idx);
+                }
+            }
+            self.shared_prefix[row] = first * self.page_tokens;
+        }
+        self.row_len[row] = len;
     }
 
     fn per_row_lens(&self) -> bool {
         true
     }
 
-    /// Retirement: zero the logical length *and* return every page the
-    /// row held to the free list — freed capacity is immediately
-    /// available to the next admission.  Any pending spill is discarded
-    /// too (a cancelled-while-suspended stream never resumes, so its
-    /// spilled pages count as spilled-but-never-restored).
+    /// Retirement: zero the logical length *and* drop the row's reference
+    /// on every page it held — pages nobody else aliases return to the
+    /// free list immediately, pages the prefix store (or another row)
+    /// still references survive untouched.  Any pending spill is
+    /// discarded too (a cancelled-while-suspended stream never resumes,
+    /// so its spilled pages count as spilled-but-never-restored).
     fn reset_row(&mut self, row: usize) {
         self.row_len[row] = 0;
         self.spill[row] = None;
+        self.shared_prefix[row] = 0;
         while let Some(page) = self.table[row].pop() {
-            self.free.push(page);
-            self.pages_freed += 1;
+            Self::release_ref(&mut self.free, &mut self.refcount, page, &mut self.pages_freed);
         }
     }
 
@@ -775,11 +878,16 @@ impl KvCache for NativeKvCache {
         };
         self.spill[row] =
             Some(SpillRow { store, n_pages: self.table[row].len(), row_len: self.row_len[row] });
+        // The spill copied every page's bytes, so the row's references
+        // can drop: unshared pages go back to the pool as spilled;
+        // aliased pages stay with their other holders (the later restore
+        // pops fresh pages for everything, so `pages_restored` can
+        // legitimately exceed `pages_spilled` when prefixes were shared).
         while let Some(page) = self.table[row].pop() {
-            self.free.push(page);
-            self.pages_spilled += 1;
+            Self::release_ref(&mut self.free, &mut self.refcount, page, &mut self.pages_spilled);
         }
         self.row_len[row] = 0;
+        self.shared_prefix[row] = 0;
         true
     }
 
@@ -800,6 +908,7 @@ impl KvCache for NativeKvCache {
         let sp = self.spill[row].take().expect("spill presence checked above");
         for _ in 0..need {
             let page = self.free.pop().expect("headroom checked above");
+            self.refcount[page] = 1;
             self.table[row].push(page);
             self.pages_allocated += 1;
             self.pages_restored += 1;
@@ -845,6 +954,54 @@ impl KvCache for NativeKvCache {
         }
         self.row_len[row] = sp.row_len;
         true
+    }
+
+    fn row_pages(&self, row: usize) -> Vec<usize> {
+        self.table[row].clone()
+    }
+
+    /// Alias `pages` into an empty `row` as its immutable prefix: each
+    /// page gains a reference, the page table points at the shared
+    /// physical pages (no data movement), and the row's logical length
+    /// becomes the aliased depth — the next forward appends *after* the
+    /// prefix, into fresh pages.  Refuses on a non-empty row (mapped
+    /// pages, live length, or pending spill) or an over-long alias.
+    fn adopt_pages(&mut self, row: usize, pages: &[usize]) -> bool {
+        let depth = pages.len() * self.page_tokens;
+        if pages.is_empty()
+            || depth > self.max_ctx
+            || self.row_len[row] != 0
+            || !self.table[row].is_empty()
+            || self.spill[row].is_some()
+        {
+            return false;
+        }
+        for &page in pages {
+            debug_assert!(self.refcount[page] > 0, "adopting unreferenced page {page}");
+            self.refcount[page] += 1;
+            self.table[row].push(page);
+        }
+        self.row_len[row] = depth;
+        self.shared_prefix[row] = depth;
+        true
+    }
+
+    /// One more holder for `page` (the prefix store pinning a retired
+    /// row's prompt pages).  The reference must be dropped with
+    /// [`KvCache::release_page`] for the pool to drain.
+    fn retain_page(&mut self, page: usize) {
+        debug_assert!(self.refcount[page] > 0, "retaining unreferenced page {page}");
+        self.refcount[page] += 1;
+    }
+
+    /// Drop a [`KvCache::retain_page`] reference (prefix-store eviction);
+    /// the page returns to the free list when no row aliases it either.
+    fn release_page(&mut self, page: usize) {
+        Self::release_ref(&mut self.free, &mut self.refcount, page, &mut self.pages_freed);
+    }
+
+    fn page_refcount(&self, page: usize) -> u32 {
+        self.refcount[page]
     }
 
     fn pages_spilled(&self) -> u64 {
@@ -1582,6 +1739,211 @@ mod tests {
         assert_eq!(cache.pages_spilled(), 4);
         assert_eq!(cache.pages_restored(), 2);
         assert_eq!(cache.pages_high_water(), 2);
+    }
+
+    #[test]
+    fn aliased_prefix_reuse_is_bit_exact() {
+        // Prefix-cache primitive, straight on the pool: run a 4-token
+        // page-aligned prefix in row 0, retain its pages (the store's
+        // reference), retire the row, alias the pages into row 1 and
+        // forward only the 1-token suffix.  The suffix logits and the
+        // following decode must be bit-identical to an uninterrupted
+        // cold run of the full 5-token prompt — FP32 because aliasing is
+        // pure indirection, INT8 because the per-token quant parameters
+        // live inside the aliased page.
+        let ck = tiny();
+        for kv_bits in [32u32, 8] {
+            let pool = WorkerPool::serial();
+            let mut scratch = ForwardScratch::default();
+            let mut solo_cache = NativeKvCache::with_layout(&ck.config, 1, 2, kv_bits, None);
+            let solo = fwd(&ck, &FpLinears(&ck), &[3, 7, 11, 2, 6], 1, &mut solo_cache).unwrap();
+            let solo_dec = fwd(&ck, &FpLinears(&ck), &[9], 1, &mut solo_cache).unwrap();
+
+            let mut cache = NativeKvCache::with_layout(&ck.config, 2, 2, kv_bits, None);
+            forward_pass_masked(
+                &ck,
+                &FpLinears(&ck),
+                &[3, 7, 11, 2, 0, 0, 0, 0],
+                2,
+                &mut cache,
+                pool,
+                &mut scratch,
+                Some(&[true, false]),
+            )
+            .unwrap();
+            let prefix = cache.row_pages(0);
+            assert_eq!(prefix.len(), 2);
+            for &p in &prefix {
+                cache.retain_page(p);
+            }
+            cache.reset_row(0);
+            let held = cache.total_pages() - cache.free_pages();
+            assert_eq!(held, 2, "retained pages must survive the row's retirement");
+            assert!(!cache.adopt_pages(0, &[]), "empty alias must refuse");
+            assert!(cache.adopt_pages(1, &prefix), "empty row must accept the alias");
+            assert!(!cache.adopt_pages(1, &prefix), "non-empty row must refuse");
+            assert_eq!(cache.row_len[1], 4, "alias sets the logical length to the cached depth");
+            // suffix-only prefill: one token at position 4, no recompute
+            let warm = forward_pass_masked(
+                &ck,
+                &FpLinears(&ck),
+                &[0, 6],
+                2,
+                &mut cache,
+                pool,
+                &mut scratch,
+                Some(&[false, true]),
+            )
+            .unwrap();
+            let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits(warm.row(1, 0)),
+                bits(solo.row(0, 4)),
+                "kv_bits={kv_bits}: aliased suffix prefill diverged from cold run"
+            );
+            let warm_dec = forward_pass_masked(
+                &ck,
+                &FpLinears(&ck),
+                &[0, 9],
+                2,
+                &mut cache,
+                pool,
+                &mut scratch,
+                Some(&[false, true]),
+            )
+            .unwrap();
+            assert_eq!(
+                bits(warm_dec.row(1, 0)),
+                bits(solo_dec.row(0, 0)),
+                "kv_bits={kv_bits}: decode after aliased prefill diverged from cold run"
+            );
+            // drain: row drops its refs, then the store drops its own —
+            // only the second release frees the shared pages.
+            cache.reset_row(1);
+            assert_eq!(cache.total_pages() - cache.free_pages(), 2, "store ref must pin pages");
+            for &p in &prefix {
+                cache.release_page(p);
+            }
+            assert_eq!(cache.free_pages(), cache.total_pages(), "pool must drain");
+            assert_eq!(cache.pages_allocated(), cache.pages_freed(), "ledger must balance");
+        }
+    }
+
+    #[test]
+    fn rollback_into_aliased_prefix_copies_before_write() {
+        // Row 1 aliases row 0's live pages, then rolls back to zero and
+        // replays a different prompt.  Copy-before-write must hand row 1
+        // private pages — row 0's subsequent decode stays bit-identical
+        // to a solo run, and the two rows' page tables end up disjoint.
+        let ck = tiny();
+        let pool = WorkerPool::serial();
+        let mut scratch = ForwardScratch::default();
+        let mut solo_cache = NativeKvCache::with_layout(&ck.config, 1, 2, 32, None);
+        fwd(&ck, &FpLinears(&ck), &[3, 7, 11, 2], 1, &mut solo_cache).unwrap();
+        let solo_dec = fwd(&ck, &FpLinears(&ck), &[6], 1, &mut solo_cache).unwrap();
+
+        let mut cache = NativeKvCache::with_layout(&ck.config, 2, 2, 32, None);
+        forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[3, 7, 11, 2, 0, 0, 0, 0],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[true, false]),
+        )
+        .unwrap();
+        let shared = cache.row_pages(0);
+        assert!(cache.adopt_pages(1, &shared));
+        let free_before = cache.free_pages();
+        cache.set_row_len(1, 0);
+        let private = cache.row_pages(1);
+        assert_eq!(private.len(), shared.len(), "rollback must keep the pages mapped");
+        assert!(
+            private.iter().all(|p| !shared.contains(p)),
+            "rollback into the aliased prefix must privatize the shared pages"
+        );
+        assert_eq!(cache.free_pages(), free_before - shared.len(), "copies pop from the pool");
+        // replay a different prompt in the privatized pages
+        forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[0, 0, 5, 9],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[false, true]),
+        )
+        .unwrap();
+        // row 0 is oblivious: its decode matches the solo run bit-exactly
+        let step = forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[6, 0],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[true, false]),
+        )
+        .unwrap();
+        let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(step.row(0, 0)),
+            bits(solo_dec.row(0, 0)),
+            "neighbor's rollback mutated a shared page"
+        );
+        cache.reset_row(0);
+        cache.reset_row(1);
+        assert_eq!(cache.free_pages(), cache.total_pages());
+        assert_eq!(cache.pages_allocated(), cache.pages_freed());
+    }
+
+    #[test]
+    fn evict_of_aliased_row_keeps_shared_pages_alive() {
+        // Preemption crossing the prefix cache: evicting a row that
+        // aliases shared pages copies its content to the spill and drops
+        // only its own references — the shared pages stay with the other
+        // holder, and the restore pops fresh private pages (so
+        // `pages_restored` may exceed `pages_spilled`).
+        let ck = tiny();
+        let pool = WorkerPool::serial();
+        let mut scratch = ForwardScratch::default();
+        let mut cache = NativeKvCache::with_layout(&ck.config, 2, 2, 32, None);
+        forward_pass_masked(
+            &ck,
+            &FpLinears(&ck),
+            &[3, 7, 11, 2, 0, 0, 0, 0],
+            2,
+            &mut cache,
+            pool,
+            &mut scratch,
+            Some(&[true, false]),
+        )
+        .unwrap();
+        let shared = cache.row_pages(0);
+        assert!(cache.adopt_pages(1, &shared));
+        assert!(cache.evict_row(1), "aliased row must evict");
+        assert_eq!(cache.pages_spilled(), 0, "shared pages stay with row 0, nothing freed");
+        let row0 = cache.row_pages(0);
+        assert_eq!(row0, shared, "other holder's table must be untouched");
+        assert!(cache.restore_row(1), "restore must succeed with pool headroom");
+        assert_eq!(cache.pages_restored(), 2, "restore pops fresh private pages");
+        assert_eq!(cache.row_len[1], 4);
+        assert!(
+            cache.row_pages(1).iter().all(|p| !shared.contains(p)),
+            "restored row must own private pages"
+        );
+        cache.reset_row(0);
+        cache.reset_row(1);
+        assert_eq!(cache.free_pages(), cache.total_pages());
+        assert_eq!(
+            cache.pages_allocated(),
+            cache.pages_freed() + cache.pages_spilled(),
+            "ledger must balance at drain"
+        );
     }
 
     #[test]

@@ -419,6 +419,18 @@ impl InferenceBackend for NativeBackend {
             crate::memmodel::memory_report_with_kv(&spec, &self.policy, 0, spec.max_seq, &kv);
         Some((with.total() - without.total()).max(1.0) as u64)
     }
+
+    /// Resident cost of a full prefix store: the engine caps the store
+    /// at one row's worth of pages (`ceil(max_seq / page_tokens)`), so
+    /// that is what the memory budget is charged — at this backend's
+    /// configured page layout and precision, same as
+    /// [`InferenceBackend::slot_bytes`].
+    fn prefix_store_bytes(&self) -> Option<u64> {
+        let spec = self.ckpt.config.to_spec();
+        let kv = crate::memmodel::KvCacheSpec::paged(self.kv_bits, self.kv_page);
+        let pages = spec.max_seq.div_ceil(self.kv_page);
+        Some(crate::memmodel::kv_prefix_store_bytes(&spec, &kv, pages).max(1.0) as u64)
+    }
 }
 
 #[cfg(test)]

@@ -222,6 +222,14 @@ pub struct ExecConfig {
     /// override (`reserve`/`demand`), falling back to
     /// [`OvercommitMode::Reserve`].
     pub kv_overcommit: Option<OvercommitMode>,
+    /// Explicit prefix-cache switch.  `None` resolves from the
+    /// [`ExecConfig::ENV_PREFIX`] environment override, falling back to
+    /// disabled.  When enabled (and the backend's KV cache is paged),
+    /// retiring rows donate their prompt-prefix pages to a radix-tree
+    /// store and admissions alias cached pages instead of recomputing
+    /// them — streams stay bit-identical to cold runs (aliasing is
+    /// indirection; INT8 page quantization is deterministic per token).
+    pub prefix: Option<bool>,
 }
 
 impl ExecConfig {
@@ -264,6 +272,13 @@ impl ExecConfig {
     /// the engine matrix so preemption determinism is exercised on
     /// every push.
     pub const ENV_KV_OVERCOMMIT: &'static str = "QUIK_KV_OVERCOMMIT";
+
+    /// Environment override for the prefix cache (`QUIK_PREFIX=on`;
+    /// `on`/`true`/`1`/`yes` enable, `off`/`false`/`0`/`no` disable,
+    /// anything else falls back to disabled).  CI crosses a prefix leg
+    /// into the engine matrix so page aliasing is exercised against the
+    /// preemption/spill path on every push.
+    pub const ENV_PREFIX: &'static str = "QUIK_PREFIX";
 
     /// Default KV page size in tokens when neither the explicit setting
     /// nor [`ExecConfig::ENV_KV_PAGE`] resolves.
@@ -384,6 +399,20 @@ impl ExecConfig {
             }
         }
         OvercommitMode::Reserve
+    }
+
+    /// Resolve the prefix-cache switch: explicit setting, else
+    /// `QUIK_PREFIX` (`on`/`true`/`1`/`yes` vs `off`/`false`/`0`/`no`),
+    /// else disabled.  Unparsable env values fall back to disabled
+    /// rather than silently pinning pool pages.
+    pub fn resolve_prefix(&self) -> bool {
+        if let Some(on) = self.prefix {
+            return on;
+        }
+        if let Ok(v) = std::env::var(Self::ENV_PREFIX) {
+            return matches!(v.trim().to_ascii_lowercase().as_str(), "on" | "true" | "1" | "yes");
+        }
+        false
     }
 
     /// Round a prefill-chunk size up to a multiple of the KV page size
@@ -596,6 +625,18 @@ mod tests {
         }
         if std::env::var(ExecConfig::ENV_KV_OVERCOMMIT).is_err() {
             assert_eq!(ExecConfig::default().resolve_kv_overcommit(), OvercommitMode::Reserve);
+        }
+    }
+
+    #[test]
+    fn exec_config_resolves_prefix() {
+        // explicit settings win over everything, including the env
+        assert!(ExecConfig { prefix: Some(true), ..Default::default() }.resolve_prefix());
+        assert!(!ExecConfig { prefix: Some(false), ..Default::default() }.resolve_prefix());
+        // default falls through to the env override; only assert the
+        // env-independent case so the CI prefix leg can't flake this
+        if std::env::var(ExecConfig::ENV_PREFIX).is_err() {
+            assert!(!ExecConfig::default().resolve_prefix());
         }
     }
 

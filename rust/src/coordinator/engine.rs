@@ -117,6 +117,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::metrics::{KvPageStats, Metrics};
+use super::prefix::{PrefixStats, PrefixStore};
 use super::request::{Event, FinishReason, Request, RequestId, Response};
 use super::sampler::Sampler;
 use crate::backend::{InferenceBackend, KvCache, Phase, Variant};
@@ -158,6 +159,9 @@ pub struct EngineConfig {
     /// `None` falls through to `QUIK_KV_OVERCOMMIT`, then to
     /// [`OvercommitMode::Reserve`].
     pub kv_overcommit: Option<OvercommitMode>,
+    /// Explicit prefix-cache switch (`--prefix-cache`).  `None` falls
+    /// through to `QUIK_PREFIX`, then to off.
+    pub prefix: Option<bool>,
 }
 
 impl EngineConfig {
@@ -174,7 +178,15 @@ impl EngineConfig {
         }) {
             return n;
         }
-        let budget = self.mem_budget_bytes.unwrap_or(DEFAULT_SLOT_MEM_BUDGET);
+        let mut budget = self.mem_budget_bytes.unwrap_or(DEFAULT_SLOT_MEM_BUDGET);
+        // The prefix store pins pool pages out of the same memory the
+        // slots divide: charge its worst-case footprint against the
+        // budget before autoscaling so slots + store stay inside it.
+        if self.resolve_prefix() {
+            if let Some(store) = backend.prefix_store_bytes() {
+                budget = budget.saturating_sub(store);
+            }
+        }
         match backend.slot_bytes() {
             Some(per) if per > 0 => {
                 ((budget / per) as usize).clamp(floor, MAX_AUTO_SLOTS.max(floor))
@@ -190,11 +202,28 @@ impl EngineConfig {
             .unwrap_or_else(|| ExecConfig::default().resolve_prefill_chunk())
     }
 
+    /// Resolve the admission-prefill chunk *page-aligned*: the resolved
+    /// chunk rounded up to a whole number of `page_tokens` (pass the
+    /// engine's [`ContinuousEngine::page_tokens`]).  A chunk that ends
+    /// mid-page would strand a partially written page per admission;
+    /// aligning here — in config resolution, not in the TCP server —
+    /// gives embedded users the same guarantee the server applies.
+    /// Unchunked (0) and unpaged (`None`) pass through untouched.
+    pub fn resolve_prefill_chunk_aligned(&self, page_tokens: Option<usize>) -> usize {
+        ExecConfig::page_align_chunk(self.resolve_prefill_chunk(), page_tokens.unwrap_or(0))
+    }
+
     /// Resolve the page-pool admission discipline: explicit setting,
     /// else the `QUIK_KV_OVERCOMMIT` env override, else reserve.
     pub fn resolve_kv_overcommit(&self) -> OvercommitMode {
         self.kv_overcommit
             .unwrap_or_else(|| ExecConfig::default().resolve_kv_overcommit())
+    }
+
+    /// Resolve the prefix-cache switch: explicit setting, else the
+    /// `QUIK_PREFIX` env override, else off.
+    pub fn resolve_prefix(&self) -> bool {
+        self.prefix.unwrap_or_else(|| ExecConfig::default().resolve_prefix())
     }
 }
 
@@ -234,6 +263,9 @@ struct Slot {
     /// defers all prefill work to the step loop, which advances this by
     /// one chunk per step until the whole prompt is resident.
     prefilled: usize,
+    /// Prompt tokens served by prefix-cache aliasing at admission
+    /// (`prefilled` starts here; 0 on a miss or with the store off).
+    prefix_reused: usize,
     /// Sampled but not yet emitted token (fed to the next decode step);
     /// `None` while the slot is still prefilling its prompt.
     next: Option<i32>,
@@ -285,6 +317,18 @@ pub struct ContinuousEngine<B: InferenceBackend> {
     overcommit: OvercommitMode,
     cache: B::Cache,
     slots: Vec<Option<Slot>>,
+    /// Radix-tree prefix cache over the page pool (`None` = off or the
+    /// cache is unpaged).  Admissions alias its pages in as their
+    /// prompt prefix; retirements donate their prompt pages back.
+    /// Defaults from `QUIK_PREFIX` ([`ExecConfig::resolve_prefix`]);
+    /// override with [`ContinuousEngine::with_prefix_cache`].
+    prefix: Option<PrefixStore>,
+    /// Admissions that aliased at least one cached page.
+    prefix_hits: u64,
+    /// Admissions that found no cached prefix (store enabled).
+    prefix_misses: u64,
+    /// Cumulative prompt tokens aliased instead of prefilled.
+    prefix_tokens_reused: u64,
     /// Preempted slots awaiting resume, in preemption order (FIFO).
     /// They outrank the external admission queue: `can_admit` answers
     /// `false` while anything is parked here.
@@ -324,19 +368,39 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
                 backend.name()
             );
         }
+        let max_ctx = backend.max_context();
+        let prefix = if ExecConfig::default().resolve_prefix() {
+            Self::build_store(&cache, max_ctx)
+        } else {
+            None
+        };
         Ok(Self {
             variant,
             n_slots,
             pad_token: 0,
-            max_ctx: backend.max_context(),
+            max_ctx,
             prefill_chunk: ExecConfig::default().resolve_prefill_chunk(),
             overcommit: ExecConfig::default().resolve_kv_overcommit(),
             cache,
             slots: (0..n_slots).map(|_| None).collect(),
+            prefix,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_tokens_reused: 0,
             suspended: VecDeque::new(),
             tokens_buf: Vec::new(),
             active_buf: Vec::new(),
         })
+    }
+
+    /// A store sized for `cache`: capacity one full context's worth of
+    /// pages, but never more than half the pool — the other half stays
+    /// for live rows so a saturated store cannot starve admission.
+    /// `None` when the cache is unpaged (nothing to alias).
+    fn build_store(cache: &B::Cache, max_ctx: usize) -> Option<PrefixStore> {
+        let pt = cache.page_tokens()?.max(1);
+        let cap = max_ctx.div_ceil(pt).min(cache.total_pages() / 2).max(1);
+        Some(PrefixStore::new(pt, cap))
     }
 
     /// Builder override for the admission-prefill chunk size (beats the
@@ -351,6 +415,81 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
     pub fn with_kv_overcommit(mut self, mode: OvercommitMode) -> Self {
         self.overcommit = mode;
         self
+    }
+
+    /// Builder override for the prefix cache (beats the `QUIK_PREFIX`
+    /// env default).  Enabling on an unpaged cache is a no-op; turning
+    /// the store off releases every page it pinned.
+    pub fn with_prefix_cache(mut self, on: bool) -> Self {
+        if on {
+            if self.prefix.is_none() {
+                self.prefix = Self::build_store(&self.cache, self.max_ctx);
+            }
+        } else {
+            self.clear_prefix_cache();
+            self.prefix = None;
+        }
+        self
+    }
+
+    /// Whether this engine runs a prefix cache.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Prefix-cache gauge for metrics sampling: cumulative hit / miss /
+    /// reused-token counters plus the store's resident page count.
+    /// `None` when the store is off.
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.as_ref().map(|store| PrefixStats {
+            hits: self.prefix_hits,
+            misses: self.prefix_misses,
+            tokens_reused: self.prefix_tokens_reused,
+            pages: store.pages(),
+        })
+    }
+
+    /// Drop every cached prefix and release its pool pages (the
+    /// counters keep counting).  Tests use this to drain the pool to a
+    /// balanced ledger; serving loops never need it.
+    pub fn clear_prefix_cache(&mut self) {
+        if let Some(store) = self.prefix.as_mut() {
+            for page in store.clear() {
+                self.cache.release_page(page);
+            }
+        }
+    }
+
+    /// Pinned store pages that eviction could return to the free list
+    /// *right now*: pages nothing but the store references.  A page
+    /// also aliased by a live row frees nothing when released, so it
+    /// does not count as admission headroom.
+    fn store_reclaimable(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |store| {
+            store
+                .page_ids()
+                .iter()
+                .filter(|&&page| self.cache.page_refcount(page) == 1)
+                .count()
+        })
+    }
+
+    /// Evict one store page and release its pool reference.  Returns
+    /// `false` when the store is off or empty.  Note a single eviction
+    /// may free nothing (the page can still be aliased by a live row) —
+    /// callers loop until the pool satisfies them or this answers
+    /// `false`.
+    fn reclaim_store_page(&mut self) -> bool {
+        let Some(store) = self.prefix.as_mut() else {
+            return false;
+        };
+        match store.evict_one() {
+            Some(page) => {
+                self.cache.release_page(page);
+                true
+            }
+            None => false,
+        }
     }
 
     /// The admission-prefill chunk size this engine paces prompts at
@@ -415,7 +554,10 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
     /// parked (suspended requests are the head of the effective
     /// admission queue) and refuses outright a request whose footprint
     /// exceeds the *whole* pool — such a stream could never complete.
-    /// Monolithic caches gate on slots alone.
+    /// With the prefix cache on, pages the store alone pins count as
+    /// headroom — `admit` reclaims them on demand — so a store grown to
+    /// capacity never deadlocks an empty engine.  Monolithic caches
+    /// gate on slots alone.
     pub fn can_admit(&self, req: &Request) -> bool {
         if !self.has_free_slot() {
             return false;
@@ -429,12 +571,12 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             req.params.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
         // A free row holds no pages (retirement returned them), so the
         // request's page need is its full footprint, clipped exactly
-        // like the cache clips (`pages_for`).
+        // like the cache clips (`pages_for`).  Store-pinned pages that
+        // nothing else references are one eviction away from free.
+        let available = self.cache.free_pages() + self.store_reclaimable();
         let footprint = (prompt_len + budget).min(self.max_ctx);
         match self.overcommit {
-            OvercommitMode::Reserve => {
-                footprint.div_ceil(page_tokens) <= self.cache.free_pages()
-            }
+            OvercommitMode::Reserve => footprint.div_ceil(page_tokens) <= available,
             OvercommitMode::Demand => {
                 if !self.suspended.is_empty() {
                     return false;
@@ -447,7 +589,7 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
                 } else {
                     prompt_len.min(self.prefill_chunk)
                 };
-                first.div_ceil(page_tokens) <= self.cache.free_pages()
+                first.div_ceil(page_tokens) <= available
             }
         }
     }
@@ -507,22 +649,62 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         // never a batch-max.
         let budget = req.params.max_new_tokens.min(self.max_ctx.saturating_sub(prompt_len));
         self.cache.reset_row(row);
+        // Prefix cache: alias the longest cached page-aligned prefix of
+        // this prompt into the empty row — those positions never
+        // prefill.  Capped at `(prompt_len - 1) / page_tokens` pages so
+        // at least one suffix token remains (the final chunk must
+        // sample a first token).  The aliased pages already hold the
+        // bit-exact KV of these positions (causal attention + absolute
+        // RoPE + deterministic INT8 quantization), so the stream is
+        // identical to a cold run that prefilled them.
+        let mut reused = 0usize;
+        if let (Some(page_tokens), Some(store)) =
+            (self.cache.page_tokens(), self.prefix.as_mut())
+        {
+            let page_tokens = page_tokens.max(1);
+            let max_pages = (prompt_len - 1) / page_tokens;
+            let pages = store.lookup(&req.prompt, max_pages);
+            if !pages.is_empty() && self.cache.adopt_pages(row, &pages) {
+                reused = pages.len() * page_tokens;
+            }
+            if reused > 0 {
+                self.prefix_hits += 1;
+                self.prefix_tokens_reused += reused as u64;
+            } else {
+                self.prefix_misses += 1;
+            }
+        }
+        // The first chunk the step loop will actually forward: the
+        // suffix past the aliased prefix, chunk-clipped.
+        let first = if self.prefill_chunk == 0 {
+            prompt_len - reused
+        } else {
+            (prompt_len - reused).min(self.prefill_chunk)
+        };
         // Paged caches, by discipline.  Callers gate on `can_admit`, so
         // failing here is exceptional (and leaks nothing — the slot was
-        // never installed).
+        // never installed and the row is reset before bailing, which
+        // also drops any prefix pages it aliased above).  `can_admit`
+        // counts store-pinned pages as headroom, so a short free list
+        // first reclaims store pages (LRU) before giving up.
         match self.overcommit {
             // Reserve the whole footprint up front, all-or-nothing, so
             // an admitted row can never run the pool dry mid-stream.
+            // An aliased prefix already maps its pages; the cache
+            // claims only the deficit.
             OvercommitMode::Reserve => {
-                if !self.cache.try_reserve_row(row, prompt_len + budget) {
-                    bail!(
-                        "kv page pool exhausted: {} tokens (prompt {prompt_len} + budget \
-                         {budget}) need more pages than the {} free of {}; defer admission \
-                         until residents retire",
-                        prompt_len + budget,
-                        self.cache.free_pages(),
-                        self.cache.total_pages()
-                    );
+                while !self.cache.try_reserve_row(row, prompt_len + budget) {
+                    if !self.reclaim_store_page() {
+                        self.cache.reset_row(row);
+                        bail!(
+                            "kv page pool exhausted: {} tokens (prompt {prompt_len} + budget \
+                             {budget}) need more pages than the {} free of {}; defer admission \
+                             until residents retire",
+                            prompt_len + budget,
+                            self.cache.free_pages(),
+                            self.cache.total_pages()
+                        );
+                    }
                 }
             }
             // Map only the first prefill chunk; later pages map just in
@@ -533,6 +715,7 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
                 if let Some(page_tokens) = self.cache.page_tokens() {
                     let footprint = (prompt_len + budget).min(self.max_ctx);
                     if footprint.div_ceil(page_tokens.max(1)) > self.cache.total_pages() {
+                        self.cache.reset_row(row);
                         bail!(
                             "request footprint of {footprint} tokens exceeds the whole \
                              kv page pool ({} pages of {page_tokens} tokens); the stream \
@@ -541,14 +724,17 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
                         );
                     }
                 }
-                if !self.cache.ensure_row_capacity(row, first) {
-                    bail!(
-                        "kv page pool exhausted: the first prefill chunk ({first} tokens) \
-                         needs more pages than the {} free of {}; defer admission until \
-                         pages free",
-                        self.cache.free_pages(),
-                        self.cache.total_pages()
-                    );
+                while !self.cache.ensure_row_capacity(row, reused + first) {
+                    if !self.reclaim_store_page() {
+                        self.cache.reset_row(row);
+                        bail!(
+                            "kv page pool exhausted: the first prefill chunk ({first} tokens) \
+                             needs more pages than the {} free of {}; defer admission until \
+                             pages free",
+                            self.cache.free_pages(),
+                            self.cache.total_pages()
+                        );
+                    }
                 }
             }
         }
@@ -558,7 +744,8 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             req,
             budget,
             generated: Vec::new(),
-            prefilled: 0,
+            prefilled: reused,
+            prefix_reused: reused,
             next: None,
             sampler,
             tx,
@@ -621,7 +808,10 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
             &self.active_buf,
         )?;
         metrics.prefill_chunks += 1;
-        if start == 0 && end < prompt_len {
+        let slot = self.slots[row].as_ref().expect("prefilling slot resident");
+        // First *forwarded* chunk (prefix-aliased tokens never prefill,
+        // so a hit admission starts at its reused depth, not 0).
+        if start == slot.prefix_reused && end < prompt_len {
             metrics.chunked_admissions += 1;
         }
         let slot = self.slots[row].as_mut().expect("prefilling slot resident");
@@ -648,10 +838,14 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
     /// generated stream, sampler draw position and (restored bit-exact)
     /// cache content — so the stream is bit-identical to a solo run.
     fn resume_suspended(&mut self) {
-        while let Some(front) = self.suspended.front() {
+        'resume: while let Some(front) = self.suspended.front() {
             let row = front.row;
-            if !self.cache.restore_row(row) {
-                break;
+            // A dry pool first spends the prefix store (LRU) — a parked
+            // stream's progress outranks speculative prefix reuse.
+            while !self.cache.restore_row(row) {
+                if !self.reclaim_store_page() {
+                    break 'resume;
+                }
             }
             let parked = self.suspended.pop_front().expect("front checked above");
             debug_assert!(self.slots[row].is_none(), "parked row must stay dedicated");
@@ -738,6 +932,12 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
                 };
                 if self.cache.ensure_row_capacity(row, need) {
                     break;
+                }
+                // Prefer spending the prefix store over preempting a
+                // live resident: an evicted prefix re-prefills on some
+                // future miss, a preempted stream stalls *now*.
+                if self.reclaim_store_page() {
+                    continue;
                 }
                 // The victim may be `row` itself (then the next pass
                 // sees the slot empty and moves on).
@@ -891,11 +1091,47 @@ impl<B: InferenceBackend> ContinuousEngine<B> {
         Some(self.retire(parked.row, FinishReason::Cancelled, metrics))
     }
 
+    /// Offer a retiring row's prompt-prefix pages to the prefix store:
+    /// every page *fully* covered by prefilled prompt tokens (the page
+    /// decode first wrote into is excluded — it mixes generated KV).
+    /// The store adopts pages only for chunks it does not already hold;
+    /// the engine pins exactly those ([`KvCache::retain_page`]) so the
+    /// row's `reset_row` release keeps them alive, then trims the store
+    /// to capacity (LRU) releasing what falls out.  Rows that retire
+    /// without cache content (a suspended row cancelled mid-park has an
+    /// empty page table) donate nothing.
+    fn donate_prefix(&mut self, row: usize, slot: &Slot) {
+        let Some(store) = self.prefix.as_mut() else {
+            return;
+        };
+        let Some(page_tokens) = self.cache.page_tokens() else {
+            return;
+        };
+        let page_tokens = page_tokens.max(1);
+        let eligible = slot.prefilled / page_tokens;
+        if eligible == 0 {
+            return;
+        }
+        let pages = self.cache.row_pages(row);
+        if pages.len() < eligible {
+            return;
+        }
+        let adopted =
+            store.insert(&slot.req.prompt[..eligible * page_tokens], &pages[..eligible]);
+        for &page in &adopted {
+            self.cache.retain_page(page);
+        }
+        for page in store.evict_to_capacity() {
+            self.cache.release_page(page);
+        }
+    }
+
     /// Retire one resident row: free the slot, recycle the cache row,
     /// deliver `Done` (best effort — a cancelled client is gone) and
     /// record the finish.
     fn retire(&mut self, row: usize, reason: FinishReason, metrics: &mut Metrics) -> Response {
         let slot = self.slots[row].take().expect("slot resident");
+        self.donate_prefix(row, &slot);
         self.cache.reset_row(row);
         let resp = Response {
             id: slot.req.id,
@@ -1275,12 +1511,26 @@ mod tests {
         // estimate; only assert when no user QUIK_SLOTS override can
         // preempt the fallback chain
         if std::env::var(ExecConfig::ENV_SLOTS).is_err() {
+            // pin the prefix cache off: its store charge would shrink
+            // the budgets below (CI crosses QUIK_PREFIX)
             let per = b.slot_bytes().expect("native backend estimates slot bytes");
-            let four = EngineConfig { mem_budget_bytes: Some(4 * per), ..Default::default() };
+            let four = EngineConfig {
+                mem_budget_bytes: Some(4 * per),
+                prefix: Some(false),
+                ..Default::default()
+            };
             assert_eq!(four.resolve_slots(&b, 1), 4);
-            let tiny = EngineConfig { mem_budget_bytes: Some(1), ..Default::default() };
+            let tiny = EngineConfig {
+                mem_budget_bytes: Some(1),
+                prefix: Some(false),
+                ..Default::default()
+            };
             assert_eq!(tiny.resolve_slots(&b, 2), 2, "floor binds under a starved budget");
-            let vast = EngineConfig { mem_budget_bytes: Some(u64::MAX), ..Default::default() };
+            let vast = EngineConfig {
+                mem_budget_bytes: Some(u64::MAX),
+                prefix: Some(false),
+                ..Default::default()
+            };
             assert_eq!(vast.resolve_slots(&b, 1), MAX_AUTO_SLOTS, "autoscale ceiling binds");
         }
     }
@@ -1310,6 +1560,7 @@ mod tests {
         );
         let cfg = EngineConfig {
             mem_budget_bytes: Some(6 * per_fp32),
+            prefix: Some(false),
             ..Default::default()
         };
         let slots_fp32 = cfg.resolve_slots(&fp32, 1);
@@ -1379,10 +1630,13 @@ mod tests {
         let p1 = prompt(2, 4);
         let mut solo = Vec::new();
         for (id, p) in [(0u64, &p0), (1, &p1)] {
+            // prefix cache pinned off: the ledger asserts below expect
+            // the exact unaliased counters (CI crosses QUIK_PREFIX)
             let mut probe = ContinuousEngine::new(&mut b, Variant::Fp16, 1)
                 .unwrap()
                 .with_prefill_chunk(0)
-                .with_kv_overcommit(OvercommitMode::Demand);
+                .with_kv_overcommit(OvercommitMode::Demand)
+                .with_prefix_cache(false);
             let _rx = admit(&mut probe, &mut b, Request::new(id, p.clone(), 6));
             solo.push(probe.drain(&mut b, &mut m).unwrap().remove(0).generated);
         }
@@ -1390,7 +1644,8 @@ mod tests {
         let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 2)
             .unwrap()
             .with_prefill_chunk(0)
-            .with_kv_overcommit(OvercommitMode::Demand);
+            .with_kv_overcommit(OvercommitMode::Demand)
+            .with_prefix_cache(false);
         let req0 = Request::new(0, p0, 6);
         let req1 = Request::new(1, p1, 6);
         assert!(engine.can_admit(&req0));
@@ -1436,7 +1691,8 @@ mod tests {
             let mut probe = ContinuousEngine::new(&mut b, Variant::Fp16, 1)
                 .unwrap()
                 .with_prefill_chunk(0)
-                .with_kv_overcommit(OvercommitMode::Reserve);
+                .with_kv_overcommit(OvercommitMode::Reserve)
+                .with_prefix_cache(false);
             let _rx = admit(&mut probe, &mut b, Request::new(i, prompt(i as i32 + 1, 4), 8));
             stops.push(probe.drain(&mut b, &mut m).unwrap().remove(0).generated[1]);
         }
@@ -1456,10 +1712,13 @@ mod tests {
         let mut streams = Vec::new();
         for mode in [OvercommitMode::Reserve, OvercommitMode::Demand] {
             let mut m = Metrics::default();
+            // prefix off: the reserve-vs-demand peak comparison assumes
+            // every admission pays its full footprint from the free list
             let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 4)
                 .unwrap()
                 .with_prefill_chunk(0)
-                .with_kv_overcommit(mode);
+                .with_kv_overcommit(mode)
+                .with_prefix_cache(false);
             let mut queue = requests(n, &stops);
             let mut rxs = Vec::new();
             let mut done = Vec::new();
@@ -1543,6 +1802,122 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         assert!(engine.admit(&mut b, Request::new(0, prompt(0, max + 1), 1), tx).is_err());
         assert!(engine.has_free_slot(), "failed admission must not leak a slot");
+    }
+
+    #[test]
+    fn prefix_cache_reuses_pages_and_keeps_streams_bit_identical() {
+        // Serve the same prompt twice through one engine with the
+        // prefix store on: the second admission must alias the cached
+        // prompt pages (suffix-only prefill) and still produce the
+        // exact stream of the first (cold) run, then the pool must
+        // drain to a balanced ledger once the store is cleared.
+        let mut b = backend().with_kv_page(2).with_kv_pool_pages(Some(12));
+        let mut m = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1)
+            .unwrap()
+            .with_prefill_chunk(0)
+            .with_kv_overcommit(OvercommitMode::Reserve)
+            .with_prefix_cache(true);
+        assert!(engine.prefix_enabled());
+        let p = prompt(3, 8);
+
+        let _rx0 = admit(&mut engine, &mut b, Request::new(0, p.clone(), 4));
+        let cold = engine.drain(&mut b, &mut m).unwrap().remove(0).generated;
+        let s = engine.prefix_stats().expect("store on");
+        // retirement donates every fully prompt-covered page: 8 tokens
+        // at 2-token pages = 4 pages (decode pages stay private)
+        assert_eq!((s.hits, s.misses, s.tokens_reused, s.pages), (0, 1, 0, 4));
+
+        let _rx1 = admit(&mut engine, &mut b, Request::new(1, p.clone(), 4));
+        let s = engine.prefix_stats().unwrap();
+        // lookup is capped at (8 - 1) / 2 = 3 pages — at least one
+        // suffix token must prefill to sample the first output
+        assert_eq!((s.hits, s.misses, s.tokens_reused), (1, 1, 6));
+        let warm = engine.drain(&mut b, &mut m).unwrap().remove(0).generated;
+        assert_eq!(warm, cold, "prefix-hit stream diverged from its cold run");
+        assert_eq!(engine.prefix_stats().unwrap().pages, 4, "re-donation merges, not grows");
+
+        engine.clear_prefix_cache();
+        assert_eq!(engine.prefix_stats().unwrap().pages, 0);
+        let s = engine.kv_page_stats().unwrap();
+        assert_eq!(s.used, 0, "cleared store + drained engine must hold no pages");
+        assert_eq!(s.allocated, s.freed + s.spilled, "page ledger must balance");
+    }
+
+    #[test]
+    fn admission_reclaims_store_pages_when_the_free_list_runs_short() {
+        // A 6-page pool, all of a retired row's prompt pages pinned by
+        // the store: a new request needing the whole pool must still
+        // admit — `can_admit` counts the sole-owned store pages as
+        // headroom and `admit` evicts them (LRU) to cover the reserve.
+        let mut b = backend().with_kv_page(2).with_kv_pool_pages(Some(6));
+        let mut m = Metrics::default();
+        let mut engine = ContinuousEngine::new(&mut b, Variant::Fp16, 1)
+            .unwrap()
+            .with_prefill_chunk(0)
+            .with_kv_overcommit(OvercommitMode::Reserve)
+            .with_prefix_cache(true);
+        let _rx0 = admit(&mut engine, &mut b, Request::new(0, prompt(1, 4), 4));
+        engine.drain(&mut b, &mut m).unwrap();
+        assert_eq!(engine.prefix_stats().unwrap().pages, 2, "4-token prompt donates 2 pages");
+
+        // 4-token prompt + 8-token budget = 6 pages: the whole pool.
+        let req = Request::new(1, prompt(9, 4), 8);
+        assert!(
+            engine.can_admit(&req),
+            "store-pinned pages must count as admission headroom"
+        );
+        let _rx1 = admit(&mut engine, &mut b, req);
+        assert_eq!(
+            engine.prefix_stats().unwrap().pages,
+            0,
+            "the reserve must have spent the store"
+        );
+        let done = engine.drain(&mut b, &mut m).unwrap();
+        assert_eq!(done[0].generated.len(), 8);
+        engine.clear_prefix_cache();
+        let s = engine.kv_page_stats().unwrap();
+        assert_eq!((s.used, s.allocated), (0, s.freed + s.spilled));
+    }
+
+    #[test]
+    fn engine_config_resolves_prefix_and_aligned_chunk() {
+        // explicit settings beat the env chain
+        let on = EngineConfig { prefix: Some(true), ..Default::default() };
+        assert!(on.resolve_prefix());
+        let off = EngineConfig { prefix: Some(false), ..Default::default() };
+        assert!(!off.resolve_prefix());
+        // chunk alignment lives in config resolution so embedded users
+        // get page-aligned chunks, not just the TCP server
+        let cfg = EngineConfig { prefill_chunk: Some(10), ..Default::default() };
+        assert_eq!(cfg.resolve_prefill_chunk_aligned(Some(16)), 16);
+        assert_eq!(cfg.resolve_prefill_chunk_aligned(Some(4)), 12);
+        assert_eq!(cfg.resolve_prefill_chunk_aligned(None), 10, "unpaged passes through");
+        let unchunked = EngineConfig { prefill_chunk: Some(0), ..Default::default() };
+        assert_eq!(unchunked.resolve_prefill_chunk_aligned(Some(16)), 0, "0 stays unchunked");
+    }
+
+    #[test]
+    fn prefix_store_charge_shrinks_the_slot_budget() {
+        if std::env::var(ExecConfig::ENV_SLOTS).is_ok() {
+            return;
+        }
+        let b = backend();
+        let per = b.slot_bytes().expect("native backend estimates slot bytes");
+        let store = b.prefix_store_bytes().expect("paged native cache prices its store");
+        assert!(store > 0);
+        // a budget of exactly 6 slots + one store: with the prefix
+        // cache on the store term comes off the top
+        let budget = Some(6 * per + store);
+        let off = EngineConfig {
+            mem_budget_bytes: budget,
+            prefix: Some(false),
+            ..Default::default()
+        };
+        let on = EngineConfig { mem_budget_bytes: budget, prefix: Some(true), ..off };
+        let slots_on = on.resolve_slots(&b, 1);
+        assert_eq!(slots_on, 6, "budget minus the store charge is exactly 6 slots");
+        assert!(slots_on <= off.resolve_slots(&b, 1));
     }
 
     #[test]

@@ -28,9 +28,17 @@
 //! pages simultaneously mapped, tracked by the cache at map/restore time
 //! so it catches intra-step peaks the per-loop sample would miss).  All
 //! of these are carried from the cache in one [`KvPageStats`] snapshot.
+//! The prefix cache rides the same sampling pass: one
+//! [`super::prefix::PrefixStats`] snapshot fills the
+//! [`Metrics::prefix_hits`] / [`Metrics::prefix_misses`] /
+//! [`Metrics::prefix_tokens_reused`] counters and the
+//! [`Metrics::prefix_pages`] resident gauge, and
+//! [`Metrics::queue_depth`] samples the scheduling backlog (queued plus
+//! suspended rows) alongside it.
 
 use std::time::Duration;
 
+use super::prefix::PrefixStats;
 use super::request::{FinishReason, Response};
 
 /// Log-scale histogram from 1µs to ~17min (doubling buckets).
@@ -231,6 +239,22 @@ pub struct Metrics {
     /// queued (FIFO intact) and retries after retirements return pages
     /// — deferral is *not* rejection and never closes a stream.
     pub kv_admission_deferrals: u64,
+    /// Admissions that aliased at least one prefix-cached page
+    /// (suffix-only prefill).
+    pub prefix_hits: u64,
+    /// Admissions that found no cached prefix while the store was on.
+    pub prefix_misses: u64,
+    /// Cumulative prompt tokens served by page aliasing instead of
+    /// prefill compute.
+    pub prefix_tokens_reused: u64,
+    /// Prefix-store resident gauge: pages the store currently pins.
+    /// `None` until a prefix-enabled engine has been sampled — the
+    /// store-off and static loops never report one, and both reports
+    /// say `n/a` / `null` (the [`Metrics::kv_pages`] honesty rule).
+    pub prefix_pages: Option<usize>,
+    /// Scheduling-backlog gauge: queued requests plus suspended
+    /// (preempted) rows at the latest loop pass.
+    pub queue_depth: usize,
     pub queue_time: Histogram,
     pub prefill_time: Histogram,
     pub decode_time: Histogram,
@@ -316,6 +340,20 @@ impl Metrics {
         self.kv_pages_high_water = s.high_water;
     }
 
+    /// Sample the prefix-cache counters and resident-page gauge (the
+    /// continuous loop calls this once per pass when the store is on).
+    pub fn record_prefix(&mut self, s: &PrefixStats) {
+        self.prefix_hits = s.hits;
+        self.prefix_misses = s.misses;
+        self.prefix_tokens_reused = s.tokens_reused;
+        self.prefix_pages = Some(s.pages);
+    }
+
+    /// Sample the scheduling backlog (queued + suspended rows).
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.queue_depth = depth;
+    }
+
     /// Mean batch occupancy (1.0 = no padding waste).
     pub fn occupancy(&self) -> f64 {
         if self.batches == 0 {
@@ -362,6 +400,12 @@ impl Metrics {
                 format!("{used}/{total} kv_high_water={}", self.kv_pages_high_water)
             }
         };
+        // The prefix gauge shares the honesty rule: n/a until a
+        // prefix-enabled engine has actually been sampled.
+        let prefix_pages = match self.prefix_pages {
+            None => "n/a".to_string(),
+            Some(pages) => pages.to_string(),
+        };
         format!(
             "requests={} rejected={} stop_hits={} eos_hits={} cancelled={} \
              prompt_toks={} gen_toks={} batches={} occupancy={:.2}\n\
@@ -370,6 +414,8 @@ impl Metrics {
              kv_pages={kv} kv_pages_allocated={} kv_pages_freed={} \
              kv_pages_spilled={} kv_pages_restored={} kv_preemptions={} \
              kv_admission_deferrals={}\n\
+             prefix_pages={prefix_pages} prefix_hits={} prefix_misses={} \
+             prefix_tokens_reused={} queue_depth={}\n\
              queue   mean={:?} p50={:?} p99={:?}\n\
              prefill mean={:?} p50={:?} p99={:?}\n\
              decode  mean={:?} p50={:?} p99={:?}\n\
@@ -394,6 +440,10 @@ impl Metrics {
             self.kv_pages_restored,
             self.kv_preemptions,
             self.kv_admission_deferrals,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_tokens_reused,
+            self.queue_depth,
             self.queue_time.mean(),
             self.queue_time.quantile(0.5),
             self.queue_time.quantile(0.99),
@@ -454,8 +504,13 @@ impl Metrics {
                 self.kv_pages_high_water
             ),
         };
+        // `null` (not 0) when no prefix-enabled engine has been sampled.
+        let prefix_pages = match self.prefix_pages {
+            None => "null".to_string(),
+            Some(pages) => pages.to_string(),
+        };
         format!(
-            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"active_width\":{width},\"prefill_chunks\":{},\"chunked_admissions\":{},\"kv_pages\":{kv},\"kv_pages_allocated\":{},\"kv_pages_freed\":{},\"kv_pages_spilled\":{},\"kv_pages_restored\":{},\"kv_preemptions\":{},\"kv_admission_deferrals\":{},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
+            "{{\"requests_completed\":{},\"rejected\":{},\"stop_hits\":{},\"eos_hits\":{},\"cancelled\":{},\"prompt_tokens\":{},\"generated_tokens\":{},\"batches\":{},\"occupancy\":{:.4},\"engine_steps\":{},\"step_occupancy\":{step_occ},\"active_width\":{width},\"prefill_chunks\":{},\"chunked_admissions\":{},\"kv_pages\":{kv},\"kv_pages_allocated\":{},\"kv_pages_freed\":{},\"kv_pages_spilled\":{},\"kv_pages_restored\":{},\"kv_preemptions\":{},\"kv_admission_deferrals\":{},\"prefix_pages\":{prefix_pages},\"prefix_hits\":{},\"prefix_misses\":{},\"prefix_tokens_reused\":{},\"queue_depth\":{},\"queue\":{},\"prefill\":{},\"decode\":{},\"ttft\":{},\"itl\":{},\"e2e\":{}}}",
             self.requests_completed,
             self.rejected,
             self.stop_hits,
@@ -474,6 +529,10 @@ impl Metrics {
             self.kv_pages_restored,
             self.kv_preemptions,
             self.kv_admission_deferrals,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_tokens_reused,
+            self.queue_depth,
             hist(&self.queue_time),
             hist(&self.prefill_time),
             hist(&self.decode_time),
@@ -638,6 +697,28 @@ mod tests {
         assert_eq!(v.get("kv_pages_restored").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("kv_preemptions").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("kv_admission_deferrals").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn prefix_and_queue_gauges_surface_in_both_reports() {
+        let mut m = Metrics::default();
+        // never sampled (store off / static loop): honest n/a / null
+        assert!(m.report().contains("prefix_pages=n/a"));
+        let v = crate::util::json::parse(&m.to_json()).expect("metrics JSON must parse");
+        assert_eq!(v.get("prefix_pages"), Some(&crate::util::json::Value::Null));
+        assert_eq!(v.get("queue_depth").unwrap().as_usize(), Some(0));
+
+        m.record_prefix(&PrefixStats { hits: 5, misses: 2, tokens_reused: 96, pages: 6 });
+        m.record_queue_depth(3);
+        let r = m.report();
+        assert!(r.contains("prefix_pages=6 prefix_hits=5 prefix_misses=2"));
+        assert!(r.contains("prefix_tokens_reused=96 queue_depth=3"));
+        let v = crate::util::json::parse(&m.to_json()).expect("metrics JSON must parse");
+        assert_eq!(v.get("prefix_pages").unwrap().as_usize(), Some(6));
+        assert_eq!(v.get("prefix_hits").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("prefix_misses").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("prefix_tokens_reused").unwrap().as_usize(), Some(96));
+        assert_eq!(v.get("queue_depth").unwrap().as_usize(), Some(3));
     }
 
     #[test]

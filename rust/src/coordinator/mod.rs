@@ -70,6 +70,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod prefix;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
@@ -80,6 +81,7 @@ pub mod tcp;
 pub use batcher::{BatchPlan, DynamicBatcher};
 pub use engine::{ContinuousEngine, EngineConfig, EngineMode};
 pub use metrics::Metrics;
+pub use prefix::{PrefixStats, PrefixStore};
 pub use request::{
     Event, FinishReason, GenerationRequest, Request, RequestId, Response, StreamHandle,
 };

@@ -1,0 +1,306 @@
+//! Radix-tree prefix store over the paged KV pool.
+//!
+//! Shared-prefix workloads (system preamble + few-shot header + short
+//! user suffix) recompute the same leading KV pages per request; on the
+//! paged cache that work is addressable — a page is a page-aligned run
+//! of `page_tokens` positions, and two requests whose prompts agree
+//! token-for-token through a page boundary produce **bit-identical**
+//! page contents (causal attention + absolute RoPE: a position's K/V
+//! depends only on tokens `0..=pos`; INT8 per-token quantization is
+//! deterministic).  So the store maps token-ID prefixes, rounded down to
+//! page boundaries, to the pool pages that already hold their KV.
+//!
+//! Structure: a radix tree keyed on `page_tokens`-sized token chunks —
+//! each node owns exactly one pool page (pinned via
+//! [`crate::backend::KvCache::retain_page`] by the engine, not by this
+//! module: the store tracks page *ids*, the cache owns refcounts).
+//! [`PrefixStore::lookup`] walks the longest matching chunk path and
+//! returns its pages for [`crate::backend::KvCache::adopt_pages`];
+//! [`PrefixStore::insert`] merges a retiring row's prompt pages,
+//! adopting pages only for chunks the tree does not already hold.
+//!
+//! Eviction is LRU-by-last-hit over **leaves** (an inner node is always
+//! at least as recently useful as its deepest descendant, and removing
+//! leaves first keeps every stored path contiguous from the root), with
+//! the page id as a deterministic tie-break.  Capacity is charged in
+//! pages against the same memory budget slot autoscaling divides
+//! ([`crate::memmodel::kv_prefix_store_bytes`]); the engine evicts to
+//! capacity after every insert and releases the evicted pages' pool
+//! references.
+
+use std::collections::HashMap;
+
+/// One stored page: the chunk of `page_tokens` token ids keying it is
+/// the edge label (the parent map's key), the node pins one pool page.
+#[derive(Debug)]
+struct Node {
+    page: usize,
+    /// Logical timestamp of the last lookup that traversed this node
+    /// (or its insertion time) — the LRU axis.
+    last_hit: u64,
+    children: HashMap<Vec<i32>, Node>,
+}
+
+/// Sampled store state for the metrics pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Admissions that aliased at least one cached page.
+    pub hits: u64,
+    /// Admissions that found no cached prefix (store enabled).
+    pub misses: u64,
+    /// Cumulative prompt tokens served by aliasing instead of prefill.
+    pub tokens_reused: u64,
+    /// Pages currently pinned by the store (resident gauge).
+    pub pages: usize,
+}
+
+/// Radix/trie prefix store: token-ID chunks → pinned pool pages.
+///
+/// The store is pure bookkeeping — it never touches the cache.  The
+/// engine is the sole caller and keeps the invariant that every page id
+/// held here carries exactly one [`retain_page`] reference
+/// ([`crate::backend::KvCache::retain_page`]), dropped with
+/// [`release_page`](crate::backend::KvCache::release_page) when
+/// [`PrefixStore::evict_to_capacity`] / [`PrefixStore::clear`] hand the
+/// page back.
+#[derive(Debug)]
+pub struct PrefixStore {
+    children: HashMap<Vec<i32>, Node>,
+    page_tokens: usize,
+    /// Maximum pages the store may pin; eviction trims to this.
+    capacity: usize,
+    /// Pages currently pinned (gauge; `== capacity` at steady state).
+    pages: usize,
+    /// Logical clock driving LRU: bumped once per lookup/insert.
+    clock: u64,
+}
+
+impl PrefixStore {
+    /// Empty store for a pool of `page_tokens`-sized pages, allowed to
+    /// pin at most `capacity` pages.
+    pub fn new(page_tokens: usize, capacity: usize) -> Self {
+        Self {
+            children: HashMap::new(),
+            page_tokens: page_tokens.max(1),
+            capacity,
+            pages: 0,
+            clock: 0,
+        }
+    }
+
+    /// Pages currently pinned by the store.
+    pub fn pages(&self) -> usize {
+        self.pages
+    }
+
+    /// Maximum pages the store may pin.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Longest cached page-aligned prefix of `prompt`, capped at
+    /// `max_pages` (callers pass `(prompt_len - 1) / page_tokens` so at
+    /// least one suffix token always remains to prefill — a forward step
+    /// must sample *something*).  Returns the pages root-to-leaf;
+    /// matched nodes are touched for LRU.
+    pub fn lookup(&mut self, prompt: &[i32], max_pages: usize) -> Vec<usize> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut pages = Vec::new();
+        let mut children = &mut self.children;
+        for chunk in prompt.chunks_exact(self.page_tokens).take(max_pages) {
+            match children.get_mut(chunk) {
+                Some(node) => {
+                    node.last_hit = clock;
+                    pages.push(node.page);
+                    children = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        pages
+    }
+
+    /// Insert-or-merge a retired row's prompt prefix: `pages[i]` holds
+    /// the KV of token chunk `i`.  Chunks the tree already stores keep
+    /// their existing page (the contents are bit-identical by
+    /// construction — the duplicate stays with the row and dies with
+    /// it); chunks it does not gain a node pinning the offered page.
+    /// Returns the **newly adopted** pages — the engine must
+    /// `retain_page` exactly these.
+    pub fn insert(&mut self, prompt: &[i32], pages: &[usize]) -> Vec<usize> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut adopted = Vec::new();
+        let mut children = &mut self.children;
+        for (chunk, &page) in prompt.chunks_exact(self.page_tokens).zip(pages) {
+            let node = children.entry(chunk.to_vec()).or_insert_with(|| {
+                adopted.push(page);
+                Node { page, last_hit: clock, children: HashMap::new() }
+            });
+            node.last_hit = clock;
+            children = &mut node.children;
+        }
+        self.pages += adopted.len();
+        adopted
+    }
+
+    /// Evict least-recently-hit leaves until the store fits its
+    /// capacity; returns the evicted pages for the engine to
+    /// `release_page`.  Deterministic: ties on `last_hit` break on the
+    /// smaller page id, so map iteration order never shows.
+    pub fn evict_to_capacity(&mut self) -> Vec<usize> {
+        let mut evicted = Vec::new();
+        while self.pages > self.capacity {
+            match Self::remove_lru_leaf(&mut self.children) {
+                Some(page) => {
+                    self.pages -= 1;
+                    evicted.push(page);
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    /// Evict exactly one least-recently-hit leaf regardless of capacity
+    /// — the engine's pool-pressure valve (reclaim a pinned page for an
+    /// admission the free list cannot cover).
+    pub fn evict_one(&mut self) -> Option<usize> {
+        let page = Self::remove_lru_leaf(&mut self.children)?;
+        self.pages -= 1;
+        Some(page)
+    }
+
+    /// Every page id the store currently pins, in no particular order.
+    /// The engine uses this (with the cache's per-page refcounts) to
+    /// count how many pinned pages eviction could actually return to
+    /// the free list — a page also aliased by a live row frees nothing.
+    pub fn page_ids(&self) -> Vec<usize> {
+        let mut pages = Vec::new();
+        Self::collect_pages(&self.children, &mut pages);
+        pages
+    }
+
+    /// Drop every stored prefix, returning all pinned pages for release.
+    pub fn clear(&mut self) -> Vec<usize> {
+        let mut pages = Vec::new();
+        Self::collect_pages(&self.children, &mut pages);
+        self.children.clear();
+        self.pages = 0;
+        pages
+    }
+
+    /// `(last_hit, page)` of the LRU leaf in `node`'s subtree — the
+    /// eviction metric.  Page ids are unique, so the minimum is too.
+    fn lru_leaf(node: &Node) -> (u64, usize) {
+        if node.children.is_empty() {
+            (node.last_hit, node.page)
+        } else {
+            node.children.values().map(Self::lru_leaf).min().expect("non-empty children")
+        }
+    }
+
+    /// Remove the leaf with the smallest `(last_hit, page)` from the
+    /// forest and return its page.
+    fn remove_lru_leaf(children: &mut HashMap<Vec<i32>, Node>) -> Option<usize> {
+        let key = children
+            .iter()
+            .min_by_key(|(_, node)| Self::lru_leaf(node))
+            .map(|(key, _)| key.clone())?;
+        let node = children.get_mut(&key).expect("key just found");
+        if node.children.is_empty() {
+            Some(children.remove(&key).expect("key just found").page)
+        } else {
+            Self::remove_lru_leaf(&mut node.children)
+        }
+    }
+
+    fn collect_pages(children: &HashMap<Vec<i32>, Node>, out: &mut Vec<usize>) {
+        for node in children.values() {
+            out.push(node.page);
+            Self::collect_pages(&node.children, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_returns_longest_page_aligned_prefix() {
+        let mut s = PrefixStore::new(2, 8);
+        // prompt [1,2,3,4,5,6] → three chunks, pages 10/11/12
+        assert_eq!(s.insert(&[1, 2, 3, 4, 5, 6], &[10, 11, 12]), vec![10, 11, 12]);
+        assert_eq!(s.pages(), 3);
+        // full match capped by max_pages (suffix must remain)
+        assert_eq!(s.lookup(&[1, 2, 3, 4, 5, 6, 7], 3), vec![10, 11, 12]);
+        assert_eq!(s.lookup(&[1, 2, 3, 4, 5, 6], 2), vec![10, 11]);
+        // divergence mid-path stops the walk
+        assert_eq!(s.lookup(&[1, 2, 9, 9, 5, 6], 3), vec![10]);
+        assert_eq!(s.lookup(&[9, 9], 1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn insert_merges_and_adopts_only_new_chunks() {
+        let mut s = PrefixStore::new(2, 8);
+        assert_eq!(s.insert(&[1, 2, 3, 4], &[10, 11]), vec![10, 11]);
+        // same prefix, longer: the shared chunks keep their pages, only
+        // the extension is adopted
+        assert_eq!(s.insert(&[1, 2, 3, 4, 5, 6], &[20, 21, 22]), vec![22]);
+        assert_eq!(s.pages(), 3);
+        assert_eq!(s.lookup(&[1, 2, 3, 4, 5, 6, 0], 3), vec![10, 11, 22]);
+        // divergent sibling under a shared parent
+        assert_eq!(s.insert(&[1, 2, 7, 8], &[30, 31]), vec![31]);
+        assert_eq!(s.lookup(&[1, 2, 7, 8, 0], 2), vec![10, 31]);
+        assert_eq!(s.pages(), 4);
+    }
+
+    #[test]
+    fn eviction_is_lru_over_leaves_and_deterministic() {
+        let mut s = PrefixStore::new(2, 2);
+        s.insert(&[1, 2, 3, 4], &[10, 11]);
+        s.insert(&[5, 6], &[20]);
+        // [5,6] is more recent; capacity 2 must evict the deepest stale
+        // leaf first (page 11), never an inner node with children
+        assert_eq!(s.evict_to_capacity(), vec![11]);
+        assert_eq!(s.pages(), 2);
+        assert_eq!(s.lookup(&[1, 2, 0, 0], 1), vec![10]);
+        // merge-touch [5,6], then touch [1,2] more recently: a third
+        // insert overflows capacity and must evict the [5,6] leaf
+        assert_eq!(s.insert(&[5, 6], &[99]), Vec::<usize>::new(), "merge adopts nothing");
+        assert_eq!(s.lookup(&[1, 2, 0, 0], 1), vec![10]);
+        assert_eq!(s.insert(&[7, 8], &[30]), vec![30]);
+        assert_eq!(s.evict_to_capacity(), vec![20]);
+        assert_eq!(s.pages(), 2);
+    }
+
+    #[test]
+    fn evict_one_and_clear_release_everything() {
+        let mut s = PrefixStore::new(2, 8);
+        s.insert(&[1, 2, 3, 4], &[10, 11]);
+        assert_eq!(s.evict_one(), Some(11), "leaf first");
+        assert_eq!(s.evict_one(), Some(10));
+        assert_eq!(s.evict_one(), None);
+        assert_eq!(s.pages(), 0);
+        s.insert(&[1, 2, 3, 4], &[10, 11]);
+        s.insert(&[5, 6], &[20]);
+        let mut all = s.clear();
+        all.sort_unstable();
+        assert_eq!(all, vec![10, 11, 20]);
+        assert_eq!(s.pages(), 0);
+        assert_eq!(s.lookup(&[1, 2, 0, 0], 1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn short_prompts_never_store_partial_chunks() {
+        let mut s = PrefixStore::new(4, 8);
+        // 3 tokens < one 4-token chunk: nothing to key on
+        assert_eq!(s.insert(&[1, 2, 3], &[10]), Vec::<usize>::new());
+        assert_eq!(s.pages(), 0);
+        // 6 tokens: one full chunk, the ragged tail is ignored
+        assert_eq!(s.insert(&[1, 2, 3, 4, 5, 6], &[10, 11]), vec![10]);
+        assert_eq!(s.pages(), 1);
+    }
+}

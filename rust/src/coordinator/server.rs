@@ -354,17 +354,20 @@ where
     let engine = if want_continuous {
         match ContinuousEngine::new(&mut backend, variant, n_slots) {
             Ok(engine) => {
-                let engine = engine.with_kv_overcommit(engine_cfg.resolve_kv_overcommit());
-                // Page-align the effective prefill chunk so chunk and
-                // page boundaries coincide — a straddling chunk would
-                // map its last page for only a fraction of its tokens.
+                let engine = engine
+                    .with_kv_overcommit(engine_cfg.resolve_kv_overcommit())
+                    .with_prefix_cache(engine_cfg.resolve_prefix());
+                // The chunk is page-aligned in config resolution
+                // ([`EngineConfig::resolve_prefill_chunk_aligned`]) so
+                // embedded engine users get the same guarantee; the
+                // server's job is just to say when rounding happened.
                 let raw = engine_cfg.resolve_prefill_chunk();
-                let page = engine.page_tokens().unwrap_or(0);
-                let chunk = crate::config::ExecConfig::page_align_chunk(raw, page);
+                let chunk = engine_cfg.resolve_prefill_chunk_aligned(engine.page_tokens());
                 if chunk != raw {
                     eprintln!(
                         "[coordinator] prefill chunk {raw} rounded up to {chunk} \
-                         ({page}-token page alignment)"
+                         ({}-token page alignment)",
+                        engine.page_tokens().unwrap_or(0)
                     );
                 }
                 Some(engine.with_prefill_chunk(chunk))
@@ -607,12 +610,16 @@ fn run_continuous<B: InferenceBackend>(
             }
         }
 
-        // ---- page-pool gauge ------------------------------------------
+        // ---- page-pool / prefix / queue gauges ------------------------
         // Sample once per loop pass (paged caches only) so the snapshot
         // the metrics verb returns tracks live pool occupancy.
         if let Some(stats) = engine.kv_page_stats() {
             metrics.record_kv_pages(&stats);
         }
+        if let Some(stats) = engine.prefix_stats() {
+            metrics.record_prefix(&stats);
+        }
+        metrics.record_queue_depth(batcher.queued() + engine.suspended());
     }
 }
 
@@ -692,6 +699,10 @@ fn run_static<B: InferenceBackend>(
             }
             None => {}
         }
+
+        // No engine, so queue depth is the whole story (nothing can be
+        // suspended); sampled before batch formation drains the queue.
+        metrics.record_queue_depth(batcher.queued());
 
         if let Some(plan) = batcher.next_batch(Instant::now()) {
             let used = plan.requests.len();

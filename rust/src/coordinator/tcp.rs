@@ -86,6 +86,22 @@
 //!                                            the pool lacked headroom
 //! ```
 //!
+//! and the **prefix cache / queueing** fields:
+//!
+//! ```text
+//!    "prefix_pages": 6,                      pages resident in the prefix
+//!                                            store, or null when the
+//!                                            prefix cache is off
+//!    "prefix_hits": 5,                       admissions that aliased at
+//!                                            least one cached prefix page
+//!    "prefix_misses": 2,                     admissions that found no
+//!                                            cached prefix
+//!    "prefix_tokens_reused": 96,             prompt tokens skipped by
+//!                                            suffix-only prefill
+//!    "queue_depth": 3                        queued + suspended rows at
+//!                                            the last sample
+//! ```
+//!
 //! # Errors and backpressure
 //!
 //! Malformed requests get `{"error": "..."}` and the connection keeps
@@ -153,6 +169,11 @@ pub struct ServerConfig {
     /// reserve = whole-footprint up front, demand = lazy paging with
     /// preemption.  `None` defers to `QUIK_KV_OVERCOMMIT`, then reserve.
     pub kv_overcommit: Option<crate::config::OvercommitMode>,
+    /// Radix-tree prefix cache over the page pool (`--prefix-cache`):
+    /// retired prompt pages are kept refcounted and aliased into later
+    /// requests sharing the prefix, which then prefill only the suffix.
+    /// `None` defers to `QUIK_PREFIX`, then off.
+    pub prefix: Option<bool>,
 }
 
 impl Default for ServerConfig {
@@ -168,6 +189,7 @@ impl Default for ServerConfig {
             kv_bits: None,
             kv_pool: None,
             kv_overcommit: None,
+            prefix: None,
         }
     }
 }
@@ -180,6 +202,7 @@ impl ServerConfig {
             slots: self.slots,
             prefill_chunk: self.prefill_chunk,
             kv_overcommit: self.kv_overcommit,
+            prefix: self.prefix,
             ..Default::default()
         }
     }

@@ -39,7 +39,12 @@
 //!     pool, rows map pages **on demand** as tokens are written, and a
 //!     mapped row can be *spilled* to a heap buffer and later restored
 //!     bit-exactly — the primitives behind demand-paged overcommit (see
-//!     the cache contract in [`backend`]).  And `backend::pjrt`
+//!     the cache contract in [`backend`]).  Pages are **refcounted**, so
+//!     several rows can alias one physical page: a shared prompt prefix
+//!     is stored once and each holder releases its reference on retire,
+//!     the page returning to the free list only at refcount zero (INT8
+//!     quant metadata lives inside the page, so KV8 aliasing is
+//!     bit-exact too).  And `backend::pjrt`
 //!     (behind the `pjrt` cargo feature), which replays the L2 artifacts
 //!     through PJRT;
 //!   * [`coordinator`] — the serving layer, generic over the backend
@@ -66,7 +71,20 @@
 //!     lowest-progress resident (its pages spill to a buffer, the
 //!     stream parks and later resumes FIFO, restored bit-exactly);
 //!     either way the serving loop *defers* admissions the pool cannot
-//!     hold until pages free), a static
+//!     hold until pages free.  On top of the pool sits a **radix-tree
+//!     prefix cache** (`QUIK_PREFIX`/`--prefix-cache`): retiring rows
+//!     donate their full prompt-prefix pages to a refcounted store
+//!     keyed on token-ID prefixes at page granularity, and a later
+//!     admission sharing the prefix *aliases* those pages into its page
+//!     table and prefills only the novel suffix — TTFT on
+//!     shared-prefix traffic drops from O(prompt) to O(suffix), while
+//!     the hit stream stays bit-identical to its cold run at every
+//!     page size, KV precision, overcommit mode and thread count
+//!     (proptest-swept).  The store is LRU-evicted against the same
+//!     memory budget slot autoscaling charges, and under pool pressure
+//!     it is the first thing reclaimed — admission, headroom and
+//!     resume all spend cached pages before preempting a resident), a
+//!     static
 //!     batch-at-a-time fallback ([`coordinator::scheduler`], for
 //!     static-shape backends; `QUIK_ENGINE` selects explicitly), and the
 //!     **v2 generation API** end-to-end: requests carry

@@ -158,6 +158,8 @@ fn print_help() {
                                                (QUIK_KV_POOL env; 0 = full size)\n\
                           [--kv-overcommit reserve|demand]  pool admission\n\
                                                discipline (QUIK_KV_OVERCOMMIT env)\n\
+                          [--prefix-cache on|off]  radix-tree prompt-prefix\n\
+                                               page reuse (QUIK_PREFIX env; off)\n\
                           --requests 16 --prompt-len 48 --gen 16 [--rate <req/s>]\n\
                           [--temperature 0.8 --top-k 40 --top-p 0.95\n\
                            --sample-seed 7 --stop 7,42 --eos 2]  (sampling/stop)\n\
@@ -222,10 +224,18 @@ fn serve(args: &Args) -> Result<()> {
         ),
         None => None,
     };
+    // Bare `--prefix-cache` parses as "true" (absent value defaults).
+    let prefix = match args.flags.get("prefix-cache").map(String::as_str) {
+        Some("on" | "true" | "1" | "yes") => Some(true),
+        Some("off" | "false" | "0" | "no") => Some(false),
+        Some(s) => bail!("--prefix-cache must be on or off, got {s}"),
+        None => None,
+    };
     let engine_cfg = quik::coordinator::EngineConfig {
         slots: args.get_opt_usize("slots")?,
         prefill_chunk: args.get_opt_usize("prefill-chunk")?,
         kv_overcommit,
+        prefix,
         ..Default::default()
     };
     let spec = WorkloadSpec {
@@ -266,6 +276,7 @@ fn serve(args: &Args) -> Result<()> {
             kv_bits,
             kv_pool,
             kv_overcommit,
+            prefix,
             ..ServerConfig::default()
         };
         return quik::coordinator::tcp::serve(addr, coord, None, tcp_cfg);

@@ -117,6 +117,31 @@ pub fn kv_spill_bytes(spec: &ModelSpec, kv: &KvCacheSpec, seq: usize) -> f64 {
     data + quant_meta
 }
 
+/// Resident bytes of a prefix store pinning `pages` pool pages: page
+/// data at `kv.bits` for both K/V planes, the INT8 per-token quant
+/// parameters (they travel inside the page — aliased KV8 reads are
+/// bit-exact), and one 8-byte index entry per page (the radix node's
+/// page pointer, the aliasing analog of a page-table entry).  The
+/// continuous engine charges this against the same memory budget slot
+/// autoscaling divides, so enabling the prefix cache visibly trades a
+/// slot's worth of budget for reuse instead of overcommitting.
+/// Monolithic layouts (`page_tokens == 0`) cannot alias and store
+/// nothing.
+pub fn kv_prefix_store_bytes(spec: &ModelSpec, kv: &KvCacheSpec, pages: usize) -> f64 {
+    if kv.page_tokens == 0 || pages == 0 {
+        return 0.0;
+    }
+    let positions = pages * kv.page_tokens;
+    let elems = (spec.n_layers * positions * spec.kv_dim()) as f64;
+    let data = 2.0 * elems * (kv.bits as f64 / 8.0); // K and V planes
+    let quant_meta = if kv.bits == 8 {
+        (spec.n_layers * positions * spec.n_kv_heads) as f64 * 16.0
+    } else {
+        0.0
+    };
+    data + quant_meta + pages as f64 * 8.0
+}
+
 /// Peak memory of a prefill pass (`batch` × `seq` tokens) under the
 /// paper's serving model — FP16 dense K/V ([`KvCacheSpec::fp16_dense`]),
 /// which is what Table 6 reports.  Backends sizing their *own* slots
@@ -305,6 +330,27 @@ mod tests {
         assert_eq!(kv_spill_bytes(&s, &KvCacheSpec::paged(8, 64), seq), i8_pool_row - f32_table);
         // monolithic caches have no victim path
         assert_eq!(kv_spill_bytes(&s, &KvCacheSpec::fp16_dense(), seq), 0.0);
+    }
+
+    #[test]
+    fn prefix_store_bytes_match_one_row_of_pages() {
+        let s = spec("llama2-70b").unwrap();
+        // a store pinning exactly one row's worth of pages costs that
+        // row's pool bytes (data + quant meta + one index entry per page)
+        let seq = 128usize;
+        let pages = seq / 64;
+        for bits in [32u32, 8] {
+            let kv = KvCacheSpec::paged(bits, 64);
+            let row = kv_cache_bytes(&s, &kv, 1, seq);
+            assert_eq!(
+                kv_prefix_store_bytes(&s, &kv, pages),
+                row,
+                "bits={bits}: store pages must cost the same as pool pages"
+            );
+        }
+        // monolithic layouts cannot alias; empty stores are free
+        assert_eq!(kv_prefix_store_bytes(&s, &KvCacheSpec::fp16_dense(), 4), 0.0);
+        assert_eq!(kv_prefix_store_bytes(&s, &KvCacheSpec::paged(32, 64), 0), 0.0);
     }
 
     #[test]

@@ -216,10 +216,13 @@ fn near_exhaustion_admission_fuzz_defers_never_panics_and_stays_bit_exact() {
     let mut b = backend().with_kv_page(8).with_kv_pool_pages(Some(10));
     let mut metrics = Metrics::default();
     // pin the reservation discipline: CI crosses QUIK_KV_OVERCOMMIT, and
-    // this test's deferral/ledger assertions are reserve-mode semantics
+    // this test's deferral/ledger assertions are reserve-mode semantics;
+    // the prefix cache is pinned off likewise — a store retaining pages
+    // would break the exact used==0 / allocated==freed drain below
     let mut engine = ContinuousEngine::new(&mut b, variant, 3)
         .unwrap()
-        .with_kv_overcommit(OvercommitMode::Reserve);
+        .with_kv_overcommit(OvercommitMode::Reserve)
+        .with_prefix_cache(false);
     let s0 = engine.kv_page_stats().expect("paged cache must report stats");
     assert_eq!((s0.used, s0.total), (0, 10));
     let mut rng = Rng::new(0xBEEF);
@@ -293,9 +296,12 @@ fn demand_overcommit_fuzz_preempts_never_panics_and_stays_bit_exact() {
     let variant = Variant::Fp16;
     let mut b = backend().with_kv_page(8).with_kv_pool_pages(Some(7));
     let mut metrics = Metrics::default();
+    // prefix cache pinned off: this test asserts the exact unaliased
+    // ledger (used==0, spilled==restored) after the drain
     let mut engine = ContinuousEngine::new(&mut b, variant, 3)
         .unwrap()
-        .with_kv_overcommit(OvercommitMode::Demand);
+        .with_kv_overcommit(OvercommitMode::Demand)
+        .with_prefix_cache(false);
     let mut rng = Rng::new(0xBEEF2);
     let n_req = 16usize;
     let reqs: Vec<(Vec<i32>, GenerationParams)> = (0..n_req)

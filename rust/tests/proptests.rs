@@ -607,18 +607,22 @@ fn prop_preempted_streams_bitexact_across_pages_precisions_threads() {
                 let budget = 2 * page; // footprint 4 pages per stream
                 // solo oracles through a 1-slot engine on the same layout
                 // (4 of 6 pages: a lone stream never preempts itself)
+                // prefix cache pinned off: this test asserts the exact
+                // unaliased ledger (spilled == restored, empty drain)
                 let mut solo = Vec::new();
                 for (id, p) in prompts.iter().enumerate() {
                     let mut probe = ContinuousEngine::new(&mut b, variant, 1)
                         .unwrap()
-                        .with_kv_overcommit(OvercommitMode::Demand);
+                        .with_kv_overcommit(OvercommitMode::Demand)
+                        .with_prefix_cache(false);
                     let (tx, _rx) = mpsc::channel();
                     probe.admit(&mut b, Request::new(id as u64, p.clone(), budget), tx).unwrap();
                     solo.push(probe.drain(&mut b, &mut m).unwrap().remove(0).generated);
                 }
                 let mut engine = ContinuousEngine::new(&mut b, variant, 2)
                     .unwrap()
-                    .with_kv_overcommit(OvercommitMode::Demand);
+                    .with_kv_overcommit(OvercommitMode::Demand)
+                    .with_prefix_cache(false);
                 let mut rxs = Vec::new();
                 for (id, p) in prompts.iter().enumerate() {
                     let (tx, rx) = mpsc::channel();
@@ -647,6 +651,212 @@ fn prop_preempted_streams_bitexact_across_pages_precisions_threads() {
                 assert!(s.spilled > 0);
             }
         }
+    }
+}
+
+#[test]
+fn prop_prefix_hit_streams_bitexact_across_layouts() {
+    // The prefix-cache signature invariant, swept: at every page size,
+    // KV page precision, worker-thread count and overcommit mode, a
+    // stream whose prompt prefix is served from the radix store (pages
+    // aliased into the row, prefill suffix-only) must be bit-identical
+    // to its cold run with the cache off.  INT8 pages carry their
+    // per-token quant parameters inside the page, so KV8 reuse is as
+    // exact as FP32.
+    use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+    use quik::backend::Variant;
+    use quik::config::OvercommitMode;
+    use quik::coordinator::engine::ContinuousEngine;
+    use quik::coordinator::Metrics;
+    use std::sync::mpsc;
+
+    let variant = Variant::Fp16;
+    for page in [2usize, 4] {
+        for kv_bits in [32u32, 8] {
+            for threads in [1usize, 2, 4] {
+                for mode in [OvercommitMode::Reserve, OvercommitMode::Demand] {
+                    let mut b = NativeBackend::seeded(
+                        "prop-prefix",
+                        NativeConfig::demo(),
+                        9,
+                        demo_policy(),
+                    )
+                    .unwrap()
+                    .with_threads(threads)
+                    .with_kv_page(page)
+                    .with_kv_bits(kv_bits)
+                    .with_kv_pool_pages(Some(12));
+                    let mut m = Metrics::default();
+                    // shared 2-page template + per-request 1-page suffix
+                    let template: Vec<i32> =
+                        (0..2 * page as i32).map(|i| (i * 11 + 5).rem_euclid(90)).collect();
+                    let prompts: Vec<Vec<i32>> = (0..2)
+                        .map(|s| {
+                            let mut p = template.clone();
+                            p.extend(
+                                (0..page as i32).map(|i| (i * 13 + 41 + 17 * s).rem_euclid(90)),
+                            );
+                            p
+                        })
+                        .collect();
+                    let budget = page; // footprint 4 pages per stream
+                    // cold oracles through 1-slot engines, cache pinned off
+                    let mut cold = Vec::new();
+                    for (id, p) in prompts.iter().enumerate() {
+                        let mut probe = ContinuousEngine::new(&mut b, variant, 1)
+                            .unwrap()
+                            .with_kv_overcommit(mode)
+                            .with_prefix_cache(false);
+                        let (tx, _rx) = mpsc::channel();
+                        probe
+                            .admit(&mut b, Request::new(id as u64, p.clone(), budget), tx)
+                            .unwrap();
+                        cold.push(probe.drain(&mut b, &mut m).unwrap().remove(0).generated);
+                    }
+                    // warm engine: stream 0 seeds the store at retire,
+                    // stream 1 aliases the shared template pages
+                    let mut engine = ContinuousEngine::new(&mut b, variant, 1)
+                        .unwrap()
+                        .with_kv_overcommit(mode)
+                        .with_prefix_cache(true);
+                    for (id, p) in prompts.iter().enumerate() {
+                        let (tx, _rx) = mpsc::channel();
+                        engine
+                            .admit(&mut b, Request::new(id as u64, p.clone(), budget), tx)
+                            .unwrap();
+                        let got = engine.drain(&mut b, &mut m).unwrap().remove(0).generated;
+                        assert_eq!(
+                            got, cold[id],
+                            "page={page} bits={kv_bits} threads={threads} mode={mode:?}: \
+                             stream {id} diverged from its cold run"
+                        );
+                    }
+                    let stats = engine.prefix_stats().expect("prefix cache is on");
+                    assert_eq!(
+                        stats.hits, 1,
+                        "page={page} bits={kv_bits} threads={threads} mode={mode:?}: \
+                         the shared template never hit"
+                    );
+                    assert_eq!(stats.tokens_reused, (2 * page) as u64);
+                    // releasing the store drains the pool completely
+                    engine.clear_prefix_cache();
+                    let s = engine.kv_page_stats().unwrap();
+                    assert_eq!(
+                        s.used, 0,
+                        "page={page} bits={kv_bits} mode={mode:?}: store release left pages"
+                    );
+                    assert_eq!(s.allocated, s.freed + s.spilled);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_prefix_refcounts_survive_random_churn() {
+    // Refcount accounting under churn: random admissions over a
+    // Zipf-ish mixture of shared prompt templates, retires, demand-mode
+    // preemptions and store evictions, all through a pool small enough
+    // that every reclaim valve fires.  An aliased page freed early or a
+    // rollback mutating a shared page would corrupt some stream's KV
+    // content, so pinning every stream against its solo cold run pins
+    // the refcount discipline; afterwards the pool must drain to
+    // `allocated == freed + spilled` with the store empty.
+    use quik::backend::native::{demo_policy, NativeBackend, NativeConfig};
+    use quik::backend::Variant;
+    use quik::config::OvercommitMode;
+    use quik::coordinator::engine::ContinuousEngine;
+    use quik::coordinator::Metrics;
+    use std::sync::mpsc;
+
+    let variant = Variant::Fp16;
+    let page = 2usize;
+    for kv_bits in [32u32, 8] {
+        let mut b = NativeBackend::seeded("prop-churn", NativeConfig::demo(), 9, demo_policy())
+            .unwrap()
+            .with_kv_page(page)
+            .with_kv_bits(kv_bits)
+            .with_kv_pool_pages(Some(8));
+        let vocab = b.vocab() as i32;
+        let mut rng = Rng::new(113 + kv_bits as u64);
+        let templates: Vec<Vec<i32>> = [4usize, 6, 4]
+            .iter()
+            .map(|&len| (0..len).map(|_| rng.range_i32(0, vocab - 1)).collect())
+            .collect();
+        // Zipf-ish mixture: template 0 dominates, 2 is rare
+        let reqs: Vec<(Vec<i32>, usize)> = (0..14)
+            .map(|_| {
+                let t = match rng.below(10) {
+                    0..=4 => 0,
+                    5..=7 => 1,
+                    _ => 2,
+                };
+                let mut p = templates[t].clone();
+                let suffix = 1 + rng.below(3);
+                p.extend((0..suffix).map(|_| rng.range_i32(0, vocab - 1)));
+                (p, 1 + rng.below(4)) // prompt, decode budget
+            })
+            .collect();
+        let mut m = Metrics::default();
+        // solo cold oracles (prefix off; an 8-page pool never squeezes
+        // one stream, so these runs are preemption-free too)
+        let mut cold = Vec::new();
+        for (id, (p, budget)) in reqs.iter().enumerate() {
+            let mut probe = ContinuousEngine::new(&mut b, variant, 1)
+                .unwrap()
+                .with_kv_overcommit(OvercommitMode::Demand)
+                .with_prefix_cache(false);
+            let (tx, _rx) = mpsc::channel();
+            probe.admit(&mut b, Request::new(id as u64, p.clone(), *budget), tx).unwrap();
+            cold.push(probe.drain(&mut b, &mut m).unwrap().remove(0).generated);
+        }
+        // churn: 2 decode slots, prefix on, admissions arriving in
+        // random-sized waves; every few waves the store is dropped
+        // wholesale (the other eviction path, LRU-to-capacity, runs
+        // continuously inside donation and the admission reclaim valve)
+        let mut engine = ContinuousEngine::new(&mut b, variant, 2)
+            .unwrap()
+            .with_kv_overcommit(OvercommitMode::Demand)
+            .with_prefix_cache(true);
+        let mut pending: Vec<usize> = (0..reqs.len()).collect();
+        let mut wave = 0usize;
+        while !pending.is_empty() {
+            wave += 1;
+            let take = (1 + rng.below(2)).min(pending.len());
+            let mut rxs = Vec::new();
+            for _ in 0..take {
+                let id = pending.remove(0);
+                let (p, budget) = &reqs[id];
+                let req = Request::new(id as u64, p.clone(), *budget);
+                if !engine.can_admit(&req) {
+                    pending.insert(0, id);
+                    break;
+                }
+                let (tx, rx) = mpsc::channel();
+                engine.admit(&mut b, req, tx).unwrap();
+                rxs.push(rx);
+            }
+            for resp in engine.drain(&mut b, &mut m).unwrap() {
+                assert_eq!(
+                    resp.generated, cold[resp.id as usize],
+                    "bits={kv_bits} wave={wave}: stream {} diverged under churn",
+                    resp.id
+                );
+            }
+            if wave % 5 == 0 {
+                engine.clear_prefix_cache();
+            }
+        }
+        let stats = engine.prefix_stats().expect("prefix cache is on");
+        assert!(
+            stats.hits > 0 && stats.tokens_reused > 0,
+            "bits={kv_bits}: the Zipf-ish mixture never hit the store"
+        );
+        engine.clear_prefix_cache();
+        let s = engine.kv_page_stats().unwrap();
+        assert_eq!(s.used, 0, "bits={kv_bits}: churn left pages mapped after drain");
+        assert_eq!(s.allocated, s.freed + s.spilled, "bits={kv_bits}: ledger out of balance");
+        assert!(s.restored >= s.spilled, "bits={kv_bits}: restores under-count");
     }
 }
 
