@@ -286,7 +286,7 @@ fn matmul_f32_cols(
         let xrow = &x[i * k..(i + 1) * k];
         // SAFETY: column ranges are disjoint across shards
         let orow = unsafe { dst.slice(i * n + js.start, js.len()) };
-        for (o, j) in orow.iter_mut().zip(js.clone()) {
+        for (o, j) in orow.iter_mut().zip(js.start..js.end) {
             let wrow = &w[j * k..(j + 1) * k];
             let mut s = 0f32;
             for (a, b) in xrow.iter().zip(wrow) {
@@ -1301,6 +1301,8 @@ pub(crate) fn forward_pass_masked(
 
     // ---- head (scatter: compact logits → slot positions) ----------------
     rmsnorm_into(&s.x, &ckpt.final_norm, m, d, &mut s.xf);
+    // quik-lint: allow(hotpath-alloc): the returned logits buffer is the step's
+    // one documented allocation (StepOutput owns it); all else is reused scratch.
     let mut logits = Vec::new();
     if n_active == batch {
         // dense step: compute straight into the returned buffer

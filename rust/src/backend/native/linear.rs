@@ -217,7 +217,7 @@ impl QuikLinear {
                     let xrow = &x_fp[i * no..(i + 1) * no];
                     // SAFETY: column ranges are disjoint across shards
                     let orow = unsafe { dst.slice(i * n + js.start, js.len()) };
-                    for (o, j) in orow.iter_mut().zip(js.clone()) {
+                    for (o, j) in orow.iter_mut().zip(js.start..js.end) {
                         let wrow = &self.w_fp[j * no..(j + 1) * no];
                         let mut s = 0f32;
                         for (xv, wv) in xrow.iter().zip(wrow) {

@@ -280,9 +280,22 @@ impl ExecConfig {
     /// preemption/spill path on every push.
     pub const ENV_PREFIX: &'static str = "QUIK_PREFIX";
 
+    /// Environment override for the server's engine mode
+    /// (`QUIK_ENGINE=continuous` / `QUIK_ENGINE=batch`); unparsable
+    /// values fall through to the server's CLI/default resolution.
+    pub const ENV_ENGINE: &'static str = "QUIK_ENGINE";
+
     /// Default KV page size in tokens when neither the explicit setting
     /// nor [`ExecConfig::ENV_KV_PAGE`] resolves.
     pub const DEFAULT_KV_PAGE: usize = 64;
+
+    /// Raw `QUIK_ENGINE` value, if set.  Parsing stays with the
+    /// coordinator (`EngineMode::parse`) — this helper only owns the
+    /// environment read, so every `QUIK_*` knob is read inside `config/`
+    /// (quik-lint rule `env-discipline`).
+    pub fn engine_env() -> Option<String> {
+        std::env::var(Self::ENV_ENGINE).ok()
+    }
 
     /// Resolve the pool width: explicit setting, else `QUIK_THREADS`,
     /// else available parallelism; always ≥ 1 (an explicit 0 — setting

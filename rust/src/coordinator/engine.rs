@@ -126,7 +126,10 @@ use crate::config::{ExecConfig, OvercommitMode};
 /// Environment override for the serving loop (`QUIK_ENGINE=continuous`
 /// or `QUIK_ENGINE=static`), consulted when the coordinator is started
 /// with [`EngineMode::Auto`].  CI crosses this with `QUIK_THREADS`.
-pub const ENGINE_ENV: &str = "QUIK_ENGINE";
+/// The name (and the env *read*, [`ExecConfig::engine_env`]) live in
+/// `config/` with every other `QUIK_*` knob; this re-export keeps the
+/// coordinator's public surface stable.
+pub const ENGINE_ENV: &str = ExecConfig::ENV_ENGINE;
 
 /// Memory budget the slot autoscaler divides by the backend's per-slot
 /// byte estimate when nothing pins the slot count explicitly (512 MiB —

@@ -22,13 +22,16 @@
 //! Eviction is LRU-by-last-hit over **leaves** (an inner node is always
 //! at least as recently useful as its deepest descendant, and removing
 //! leaves first keeps every stored path contiguous from the root), with
-//! the page id as a deterministic tie-break.  Capacity is charged in
+//! the page id and then the chunk key as deterministic tie-breaks —
+//! children live in a `BTreeMap`, never a `HashMap`, so no decision in
+//! this module depends on hash iteration order (quik-lint rule
+//! `hash-iteration`).  Capacity is charged in
 //! pages against the same memory budget slot autoscaling divides
 //! ([`crate::memmodel::kv_prefix_store_bytes`]); the engine evicts to
 //! capacity after every insert and releases the evicted pages' pool
 //! references.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// One stored page: the chunk of `page_tokens` token ids keying it is
 /// the edge label (the parent map's key), the node pins one pool page.
@@ -38,7 +41,7 @@ struct Node {
     /// Logical timestamp of the last lookup that traversed this node
     /// (or its insertion time) — the LRU axis.
     last_hit: u64,
-    children: HashMap<Vec<i32>, Node>,
+    children: BTreeMap<Vec<i32>, Node>,
 }
 
 /// Sampled store state for the metrics pipeline.
@@ -65,7 +68,7 @@ pub struct PrefixStats {
 /// page back.
 #[derive(Debug)]
 pub struct PrefixStore {
-    children: HashMap<Vec<i32>, Node>,
+    children: BTreeMap<Vec<i32>, Node>,
     page_tokens: usize,
     /// Maximum pages the store may pin; eviction trims to this.
     capacity: usize,
@@ -80,7 +83,7 @@ impl PrefixStore {
     /// pin at most `capacity` pages.
     pub fn new(page_tokens: usize, capacity: usize) -> Self {
         Self {
-            children: HashMap::new(),
+            children: BTreeMap::new(),
             page_tokens: page_tokens.max(1),
             capacity,
             pages: 0,
@@ -136,7 +139,7 @@ impl PrefixStore {
         for (chunk, &page) in prompt.chunks_exact(self.page_tokens).zip(pages) {
             let node = children.entry(chunk.to_vec()).or_insert_with(|| {
                 adopted.push(page);
-                Node { page, last_hit: clock, children: HashMap::new() }
+                Node { page, last_hit: clock, children: BTreeMap::new() }
             });
             node.last_hit = clock;
             children = &mut node.children;
@@ -148,7 +151,9 @@ impl PrefixStore {
     /// Evict least-recently-hit leaves until the store fits its
     /// capacity; returns the evicted pages for the engine to
     /// `release_page`.  Deterministic: ties on `last_hit` break on the
-    /// smaller page id, so map iteration order never shows.
+    /// smaller page id, and (should both ever collide) on the smaller
+    /// chunk key — `BTreeMap` iteration is key-ordered, so eviction is a
+    /// pure function of the store's contents.
     pub fn evict_to_capacity(&mut self) -> Vec<usize> {
         let mut evicted = Vec::new();
         while self.pages > self.capacity {
@@ -172,17 +177,21 @@ impl PrefixStore {
         Some(page)
     }
 
-    /// Every page id the store currently pins, in no particular order.
-    /// The engine uses this (with the cache's per-page refcounts) to
-    /// count how many pinned pages eviction could actually return to
-    /// the free list — a page also aliased by a live row frees nothing.
+    /// Every page id the store currently pins, in key-ordered
+    /// depth-first order (parent before child) — deterministic, so
+    /// downstream release order (and therefore pool free-list order)
+    /// is identical across runs.  The engine uses this (with the
+    /// cache's per-page refcounts) to count how many pinned pages
+    /// eviction could actually return to the free list — a page also
+    /// aliased by a live row frees nothing.
     pub fn page_ids(&self) -> Vec<usize> {
         let mut pages = Vec::new();
         Self::collect_pages(&self.children, &mut pages);
         pages
     }
 
-    /// Drop every stored prefix, returning all pinned pages for release.
+    /// Drop every stored prefix, returning all pinned pages for release
+    /// (same key-ordered depth-first order as [`PrefixStore::page_ids`]).
     pub fn clear(&mut self) -> Vec<usize> {
         let mut pages = Vec::new();
         Self::collect_pages(&self.children, &mut pages);
@@ -202,8 +211,10 @@ impl PrefixStore {
     }
 
     /// Remove the leaf with the smallest `(last_hit, page)` from the
-    /// forest and return its page.
-    fn remove_lru_leaf(children: &mut HashMap<Vec<i32>, Node>) -> Option<usize> {
+    /// forest and return its page.  `min_by_key` keeps the *first*
+    /// minimum: over a `BTreeMap` that is the smallest chunk key, making
+    /// even a full-metric tie deterministic.
+    fn remove_lru_leaf(children: &mut BTreeMap<Vec<i32>, Node>) -> Option<usize> {
         let key = children
             .iter()
             .min_by_key(|(_, node)| Self::lru_leaf(node))
@@ -216,7 +227,7 @@ impl PrefixStore {
         }
     }
 
-    fn collect_pages(children: &HashMap<Vec<i32>, Node>, out: &mut Vec<usize>) {
+    fn collect_pages(children: &BTreeMap<Vec<i32>, Node>, out: &mut Vec<usize>) {
         for node in children.values() {
             out.push(node.page);
             Self::collect_pages(&node.children, out);
@@ -291,6 +302,52 @@ mod tests {
         assert_eq!(all, vec![10, 11, 20]);
         assert_eq!(s.pages(), 0);
         assert_eq!(s.lookup(&[1, 2, 0, 0], 1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn page_enumeration_is_key_ordered_dfs() {
+        // Regression for the HashMap-children store: `page_ids`/`clear`
+        // enumerated children in per-process hash order, leaking a
+        // random order into the engine's release loop and from there
+        // into the pool free-list.  With BTreeMap children the exact
+        // sequence is a pure function of the stored chunks: chunk-key
+        // order, parent before child.  (Under the old code this assert
+        // failed with overwhelming probability — 5 pages admit 120
+        // orders and the hash seed varies per process.)
+        let mut s = PrefixStore::new(2, 8);
+        s.insert(&[5, 6, 7, 8], &[20, 21]);
+        s.insert(&[1, 2, 3, 4], &[10, 11]);
+        s.insert(&[1, 2, 9, 9], &[10, 12]);
+        assert_eq!(s.page_ids(), vec![10, 11, 12, 20, 21]);
+        assert_eq!(s.clear(), vec![10, 11, 12, 20, 21]);
+        assert_eq!(s.pages(), 0);
+    }
+
+    #[test]
+    fn same_clock_eviction_tie_breaks_by_key_order_not_map_order() {
+        // Regression for the nondeterministic LRU tie-break: two sibling
+        // leaves with an identical `(last_hit, page)` metric.  The old
+        // `remove_lru_leaf` kept the first minimum in HashMap iteration
+        // order, so *which key survived* depended on the per-process
+        // hash seed; BTreeMap iteration makes it the smallest chunk key,
+        // every run.
+        let mut s = PrefixStore::new(2, 8);
+        s.children.insert(vec![9, 9], Node { page: 7, last_hit: 1, children: BTreeMap::new() });
+        s.children.insert(vec![1, 1], Node { page: 7, last_hit: 1, children: BTreeMap::new() });
+        s.pages = 2;
+        assert_eq!(s.evict_one(), Some(7));
+        assert!(
+            s.children.contains_key([9, 9].as_slice()),
+            "the smaller key [1, 1] must be evicted first"
+        );
+        assert!(!s.children.contains_key([1, 1].as_slice()));
+        // And with distinct pages at the same clock, the smaller page id
+        // wins regardless of key order (the documented metric).
+        s.children.insert(vec![0, 0], Node { page: 9, last_hit: 1, children: BTreeMap::new() });
+        s.pages = 2;
+        assert_eq!(s.evict_one(), Some(7), "page 7 under key [9, 9] beats page 9 under [0, 0]");
+        assert_eq!(s.evict_one(), Some(9));
+        assert_eq!(s.pages(), 0);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
-use super::engine::{ContinuousEngine, EngineConfig, EngineMode, ENGINE_ENV};
+use super::engine::{ContinuousEngine, EngineConfig, EngineMode};
 use super::metrics::Metrics;
 use super::request::{
     Event, FinishReason, GenerationParams, GenerationRequest, Request, RequestId, Response,
@@ -43,7 +43,7 @@ use super::request::{
 use super::scheduler::Scheduler;
 use crate::backend::native::{NativeBackend, NativeCheckpoint};
 use crate::backend::{InferenceBackend, Phase, Variant};
-use crate::config::QuikPolicy;
+use crate::config::{ExecConfig, QuikPolicy};
 use crate::util::rng::Rng;
 
 enum Msg {
@@ -341,7 +341,7 @@ where
     // startup fails loudly instead of silently green-washing a CI leg
     // with the static loop.  Only the unset/`auto` (or unparseable)
     // case keeps the capability-probing fallback.
-    let env_mode = std::env::var(ENGINE_ENV).ok().and_then(|s| EngineMode::parse(&s));
+    let env_mode = ExecConfig::engine_env().and_then(|s| EngineMode::parse(&s));
     let (want_continuous, forced) = match mode {
         EngineMode::Static => (false, false),
         EngineMode::Continuous => (true, true),

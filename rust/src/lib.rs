@@ -112,6 +112,48 @@
 //! (`cargo build`) nothing outside this crate is either: the native
 //! backend builds and serves anywhere.  Enable `--features pjrt` (plus
 //! the vendored `xla` crate) to execute AOT artifacts instead.
+//!
+//! ## Machine-enforced invariants
+//!
+//! The bit-identity guarantees above (parallel == serial, paged ==
+//! dense, prefix-hit == cold run, zero warm-path allocation) are
+//! *structural* properties of this source tree, not just proptest
+//! observations — and `cargo run -p xtask -- lint` (the `rust/xtask/`
+//! workspace member, enforced by CI's `static-analysis` job) checks the
+//! structure on every push:
+//!
+//! * **`hash-iteration`** — no `HashMap`/`HashSet` iteration in
+//!   [`coordinator`], [`backend`], [`quant`]: hash order varies per
+//!   process, so an eviction tie-break or page-release loop over it is
+//!   nondeterministic.  Keyed lookups are fine; iteration wants
+//!   `BTreeMap` (see [`coordinator`]'s prefix store) or sorted keys.
+//! * **`lock-unwrap`** — serving-path mutexes recover from poisoning
+//!   (`.lock().unwrap_or_else(|e| e.into_inner())`); one panicking
+//!   worker must not wedge every later request.
+//! * **`unsafe-confinement`** — `unsafe` only in [`util::parallel`],
+//!   `quant::dequant`, `backend::native::{linear, forward}`, each
+//!   occurrence justified by a `// SAFETY:` comment (or `# Safety` doc);
+//!   the crate root pairs this with `#![deny(unsafe_op_in_unsafe_fn)]`,
+//!   and CI runs the pool/writer tests under Miri.
+//! * **`hotpath-alloc`** — functions in the lint's hot-path manifest
+//!   (forward steps, micro-kernels, page mapping, pool dispatch) contain
+//!   no allocating calls; the static complement of the
+//!   `tests/alloc_hotpath.rs` counting allocator.
+//! * **`env-discipline`** — `QUIK_*` environment reads live only in
+//!   [`config`], so every knob stays documented and explicit-beats-env.
+//! * **`broadcast-confinement`** — `WorkerPool::broadcast` is reached
+//!   only through the partition-only helpers (`for_chunks`/`shard_2d`),
+//!   whose disjoint index ranges make cross-shard float accumulation
+//!   structurally impossible.
+//!
+//! Escape hatch, sparingly:
+//! `// quik-lint: allow(<rule>): <mandatory justification>` on the line
+//! or up to two lines above it.
+
+// Rule `unsafe-confinement`'s compiler-side half: inside an `unsafe fn`,
+// every unsafe operation still needs its own `unsafe {}` block (and a
+// `// SAFETY:` comment for the lint).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod backend;
 pub mod config;

@@ -439,17 +439,24 @@ mod simd {
     #[target_feature(enable = "avx2")]
     pub unsafe fn panel_dot_avx2(xrow: &[i8], panel: &[i8], lanes: &mut [i32; PANEL_ROWS]) {
         debug_assert!(panel.len() >= xrow.len() * PANEL_ROWS);
-        let mut acc = _mm256_loadu_si256(lanes.as_ptr() as *const __m256i);
-        let wp = panel.as_ptr();
-        for (kk, &xv) in xrow.iter().enumerate() {
-            // 8 i8 weights sign-extended to 8×i32, MAC'd against the
-            // broadcast activation — the widening SIMD form of the
-            // scalar lane loop (exact i32 arithmetic either way).
-            let w8 = _mm_loadl_epi64(wp.add(kk * PANEL_ROWS) as *const __m128i);
-            let w = _mm256_cvtepi8_epi32(w8);
-            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(w, _mm256_set1_epi32(xv as i32)));
+        // SAFETY: AVX2 is guaranteed by the fn contract, so the
+        // intrinsics are callable; `lanes` is exactly 8 i32s (the
+        // unaligned load/store width) and `wp.add(kk * PANEL_ROWS)`
+        // stays in `panel` by the length precondition asserted above.
+        unsafe {
+            let mut acc = _mm256_loadu_si256(lanes.as_ptr() as *const __m256i);
+            let wp = panel.as_ptr();
+            for (kk, &xv) in xrow.iter().enumerate() {
+                // 8 i8 weights sign-extended to 8×i32, MAC'd against the
+                // broadcast activation — the widening SIMD form of the
+                // scalar lane loop (exact i32 arithmetic either way).
+                let w8 = _mm_loadl_epi64(wp.add(kk * PANEL_ROWS) as *const __m128i);
+                let w = _mm256_cvtepi8_epi32(w8);
+                acc =
+                    _mm256_add_epi32(acc, _mm256_mullo_epi32(w, _mm256_set1_epi32(xv as i32)));
+            }
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
         }
-        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
     }
 
     /// # Safety
@@ -465,23 +472,29 @@ mod simd {
     ) {
         debug_assert_eq!(x0.len(), x1.len());
         debug_assert!(panel.len() >= x0.len() * PANEL_ROWS);
-        let mut a0 = _mm256_loadu_si256(l0.as_ptr() as *const __m256i);
-        let mut a1 = _mm256_loadu_si256(l1.as_ptr() as *const __m256i);
-        let wp = panel.as_ptr();
-        for kk in 0..x0.len() {
-            let w8 = _mm_loadl_epi64(wp.add(kk * PANEL_ROWS) as *const __m128i);
-            let w = _mm256_cvtepi8_epi32(w8);
-            a0 = _mm256_add_epi32(
-                a0,
-                _mm256_mullo_epi32(w, _mm256_set1_epi32(*x0.get_unchecked(kk) as i32)),
-            );
-            a1 = _mm256_add_epi32(
-                a1,
-                _mm256_mullo_epi32(w, _mm256_set1_epi32(*x1.get_unchecked(kk) as i32)),
-            );
+        // SAFETY: AVX2 per the fn contract; `l0`/`l1` are exactly 8 i32s
+        // each, the panel pointer arithmetic stays in bounds by the
+        // length precondition, and `kk < x0.len() == x1.len()` makes the
+        // `get_unchecked` indexing in-range.
+        unsafe {
+            let mut a0 = _mm256_loadu_si256(l0.as_ptr() as *const __m256i);
+            let mut a1 = _mm256_loadu_si256(l1.as_ptr() as *const __m256i);
+            let wp = panel.as_ptr();
+            for kk in 0..x0.len() {
+                let w8 = _mm_loadl_epi64(wp.add(kk * PANEL_ROWS) as *const __m128i);
+                let w = _mm256_cvtepi8_epi32(w8);
+                a0 = _mm256_add_epi32(
+                    a0,
+                    _mm256_mullo_epi32(w, _mm256_set1_epi32(*x0.get_unchecked(kk) as i32)),
+                );
+                a1 = _mm256_add_epi32(
+                    a1,
+                    _mm256_mullo_epi32(w, _mm256_set1_epi32(*x1.get_unchecked(kk) as i32)),
+                );
+            }
+            _mm256_storeu_si256(l0.as_mut_ptr() as *mut __m256i, a0);
+            _mm256_storeu_si256(l1.as_mut_ptr() as *mut __m256i, a1);
         }
-        _mm256_storeu_si256(l0.as_mut_ptr() as *mut __m256i, a0);
-        _mm256_storeu_si256(l1.as_mut_ptr() as *mut __m256i, a1);
     }
 }
 

@@ -28,8 +28,21 @@
 use std::marker::PhantomData;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+// Under `--cfg loom` (the CI model-checking leg, see the `loom_model`
+// tests at the bottom) every sync primitive comes from loom's permuting
+// runtime instead of std; loom mirrors the std API surface used here
+// (`lock()`/`wait()` returning `LockResult`, `PoisonError::into_inner`),
+// so the pool body itself is identical under both.
+#[cfg(not(loom))]
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+#[cfg(not(loom))]
 use std::thread::JoinHandle;
+
+#[cfg(loom)]
+use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+use loom::thread::JoinHandle;
 
 /// Work-size floor (≈ scalar multiply-accumulates) below which fanning a
 /// kernel out is a loss: waking workers costs a few microseconds, so
@@ -107,6 +120,22 @@ fn worker_loop(shared: Arc<Shared>, slot: usize) {
     }
 }
 
+/// Spawn one worker thread on `slot`.  std names the thread for
+/// debuggers/`ps`; loom's model runtime has no `Builder`, so the loom
+/// variant drops the name.
+#[cfg(not(loom))]
+fn spawn_worker(shared: Arc<Shared>, slot: usize) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("quik-worker-{slot}"))
+        .spawn(move || worker_loop(shared, slot))
+        .expect("spawning worker thread")
+}
+
+#[cfg(loom)]
+fn spawn_worker(shared: Arc<Shared>, slot: usize) -> JoinHandle<()> {
+    loom::thread::spawn(move || worker_loop(shared, slot))
+}
+
 /// A fixed-width pool of persistent worker threads with scoped,
 /// borrow-friendly fork/join execution (see module docs).
 pub struct WorkerPool {
@@ -132,22 +161,24 @@ impl WorkerPool {
             work: Condvar::new(),
             done: Condvar::new(),
         });
-        let handles = (1..threads)
-            .map(|slot| {
-                let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("quik-worker-{slot}"))
-                    .spawn(move || worker_loop(sh, slot))
-                    .expect("spawning worker thread")
-            })
-            .collect();
+        let handles =
+            (1..threads).map(|slot| spawn_worker(Arc::clone(&shared), slot)).collect();
         WorkerPool { shared, handles, threads }
     }
 
     /// A process-wide width-1 pool: the serial execution oracle.
+    #[cfg(not(loom))]
     pub fn serial() -> &'static WorkerPool {
         static SERIAL: OnceLock<WorkerPool> = OnceLock::new();
         SERIAL.get_or_init(|| WorkerPool::new(1))
+    }
+
+    /// Loom has no `OnceLock`: leak one width-1 pool per call.  Only the
+    /// model tests run under `--cfg loom`, and they don't call this in a
+    /// loop, so the leak is bounded.
+    #[cfg(loom)]
+    pub fn serial() -> &'static WorkerPool {
+        Box::leak(Box::new(WorkerPool::new(1)))
     }
 
     /// Total parallelism (worker threads + the calling thread).
@@ -169,8 +200,13 @@ impl WorkerPool {
             f(0);
             return;
         }
+        // SAFETY: callers pass only a `p` erased from `&F` by the
+        // enclosing `broadcast`, which cannot return before every worker
+        // has finished — the closure outlives every invocation.
         unsafe fn trampoline<F: Fn(usize)>(p: *const (), slot: usize) {
-            (*(p as *const F))(slot)
+            // SAFETY: `p` is the `&F` published in `st.job` below, alive
+            // for the whole dispatch (see fn-level contract).
+            unsafe { (*(p as *const F))(slot) }
         }
         {
             let mut st = lock(&self.shared.state);
@@ -306,7 +342,10 @@ impl<'a, T> SliceWriter<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
         debug_assert!(start + len <= self.len, "SliceWriter range out of bounds");
-        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+        // SAFETY: `start + len <= self.len` per the caller contract, so
+        // the pointer arithmetic stays inside the borrowed slice; the
+        // disjoint-ranges contract makes each `&mut` reborrow unique.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
     }
 }
 
@@ -396,5 +435,69 @@ mod tests {
         for (i, &x) in v.iter().enumerate() {
             assert_eq!(x, i);
         }
+    }
+}
+
+/// Exhaustive model check of the pool's job-publication protocol under
+/// loom's permuting scheduler: every interleaving of (caller publishes
+/// job → worker observes epoch → worker runs closure → worker decrements
+/// `remaining` → caller observes zero) is explored, so a missing
+/// happens-before edge (e.g. decrementing `remaining` outside the lock)
+/// fails deterministically instead of once a month in CI.
+///
+/// Runs only on the CI `loom` leg:
+///   sed -i 's|^# loom = |loom = |' rust/Cargo.toml
+///   RUSTFLAGS="--cfg loom" cargo test --release --lib loom_model
+#[cfg(all(loom, test))]
+mod loom_model {
+    use super::*;
+    use loom::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Job visibility: each slot runs the closure exactly once, and its
+    /// effects are visible to the caller as soon as `broadcast` returns
+    /// (the `remaining == 0` observation under the state mutex is the
+    /// synchronizing edge).  The per-slot `Relaxed` counters rely on
+    /// exactly that edge — loom fails the final asserts in any
+    /// interleaving where it is missing.
+    #[test]
+    fn broadcast_runs_each_slot_once_and_publishes_writes() {
+        loom::model(|| {
+            let pool = WorkerPool::new(2);
+            let hits = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+            let h = Arc::clone(&hits);
+            pool.broadcast(&move |slot| {
+                h[slot].fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits[0].load(Ordering::Relaxed), 1, "caller slot ran once");
+            assert_eq!(hits[1].load(Ordering::Relaxed), 1, "worker slot ran once");
+            // Drop joins the worker through the shutdown flag in every
+            // interleaving — a hang here is a lost-wakeup bug.
+            drop(pool);
+        });
+    }
+
+    /// Panic propagation: a worker panic is caught on the worker, the
+    /// join still happens (no lost `remaining` decrement), the caller
+    /// panics after the join, and the pool stays usable.
+    #[test]
+    fn worker_panic_joins_then_propagates_and_pool_survives() {
+        loom::model(|| {
+            let pool = WorkerPool::new(2);
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                pool.broadcast(&|slot| {
+                    if slot == 1 {
+                        panic!("boom");
+                    }
+                });
+            }));
+            assert!(res.is_err(), "worker panic must reach the caller");
+            let hits = Arc::new(AtomicUsize::new(0));
+            let h = Arc::clone(&hits);
+            pool.broadcast(&move |_| {
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 2, "pool unusable after a panic");
+            drop(pool);
+        });
     }
 }

@@ -1,0 +1,374 @@
+//! A minimal Rust source scanner for the lint rules in [`crate::rules`].
+//!
+//! Not a parser: the rules need exactly three structural facts about a
+//! file — (1) which bytes are code versus comments/string literals, so
+//! token scans cannot match inside either; (2) which lines belong to
+//! `#[cfg(test)]` / `#[cfg(loom)]` items, which the lint skips (tests
+//! may poison locks or allocate at will); (3) the line span of a named
+//! `fn`, so the hot-path rule can scan exactly one body.  All three fall
+//! out of a character-class state machine plus brace matching, which —
+//! unlike a `syn` dependency — builds offline anywhere the crate does.
+
+/// One analyzed source file.
+pub struct Source {
+    /// Path relative to the crate root, forward slashes (`src/…/x.rs`).
+    pub path: String,
+    /// Raw lines — comments intact; `// SAFETY:` and `// quik-lint:
+    /// allow(…)` directives are read from here.
+    pub raw: Vec<String>,
+    /// Lines with comments and string/char literals blanked to spaces
+    /// (byte-for-byte, so columns line up with `raw`).
+    pub code: Vec<String>,
+    /// Per-line: inside a `#[cfg(test)]`- or `#[cfg(loom)]`-gated item.
+    pub test: Vec<bool>,
+}
+
+impl Source {
+    pub fn analyze(path: &str, text: &str) -> Source {
+        let blanked = blank_comments_and_strings(text);
+        let raw: Vec<String> = text.lines().map(str::to_string).collect();
+        let code: Vec<String> = blanked.lines().map(str::to_string).collect();
+        let test = test_mask(&code);
+        Source { path: path.to_string(), raw, code, test }
+    }
+}
+
+/// `true` for characters that can continue a Rust identifier.
+pub fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Replace every comment and string/char-literal byte with a space,
+/// preserving newlines and byte offsets.  Handles nested block comments,
+/// escapes, raw strings, and the char-literal/lifetime ambiguity (a
+/// lone `'` followed by an identifier is a lifetime and stays code).
+fn blank_comments_and_strings(src: &str) -> String {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(usize),
+        Char,
+    }
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match st {
+            St::Code => {
+                if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                    st = St::Line;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    st = St::Block(1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    // raw string? look behind for r / r# / br## …
+                    st = St::Str;
+                    let mut j = i;
+                    let mut hashes = 0;
+                    while j > 0 && b[j - 1] == b'#' {
+                        hashes += 1;
+                        j -= 1;
+                    }
+                    if j > 0 && (b[j - 1] == b'r') {
+                        st = St::RawStr(hashes);
+                    }
+                    out.push(b' ');
+                    i += 1;
+                } else if c == b'\'' {
+                    // char literal vs lifetime
+                    let esc = b.get(i + 1) == Some(&b'\\');
+                    let closed = b.get(i + 2) == Some(&b'\'');
+                    if esc || closed {
+                        st = St::Char;
+                        out.push(b' ');
+                    } else {
+                        out.push(c); // lifetime tick stays code
+                    }
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                if c == b'\n' {
+                    st = St::Code;
+                    out.push(b'\n');
+                } else {
+                    out.push(b' ');
+                }
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    st = St::Block(d + 1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'*' && b.get(i + 1) == Some(&b'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else {
+                    out.push(if c == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == b'\\' && i + 1 < b.len() {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else {
+                    if c == b'"' {
+                        st = St::Code;
+                    }
+                    out.push(if c == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == b'"' && b[i + 1..].iter().take(h).filter(|&&x| x == b'#').count() == h {
+                    out.push(b' ');
+                    out.extend(std::iter::repeat(b' ').take(h));
+                    i += 1 + h;
+                    st = St::Code;
+                } else {
+                    out.push(if c == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == b'\\' && i + 1 < b.len() {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else {
+                    if c == b'\'' {
+                        st = St::Code;
+                    }
+                    out.push(if c == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Blanked bytes are all ASCII spaces/newlines; code bytes pass
+    // through untouched, so the result is valid UTF-8 iff the input was.
+    String::from_utf8(out).expect("blanking preserves UTF-8")
+}
+
+/// Mark every line that belongs to a `#[cfg(test)]`- or
+/// `#[cfg(loom)]`-gated item (module, fn, or use): brace-match from the
+/// attribute to the item's closing brace.  `#[cfg(not(loom))]` items are
+/// real code and stay unmarked.
+fn test_mask(code: &[String]) -> Vec<bool> {
+    const GATES: [&str; 4] = ["#[cfg(test)]", "#[cfg(all(test", "#[cfg(loom)]", "#[cfg(all(loom"];
+    let mut mask = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        if !GATES.iter().any(|g| code[i].contains(g)) {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut nest = 0i64; // ( ) [ ] nesting (attributes, signatures)
+        let mut opened = false;
+        let mut j = i;
+        'scan: while j < code.len() {
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth <= 0 {
+                            break 'scan;
+                        }
+                    }
+                    '(' | '[' => nest += 1,
+                    ')' | ']' => nest -= 1,
+                    ';' if !opened && nest <= 0 => break 'scan, // braceless item (use/type)
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        let end = j.min(code.len() - 1);
+        for m in mask.iter_mut().take(end + 1).skip(i) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Inclusive line span of `fn name`'s declaration + body, or `None`.
+/// Matches the *definition* (`fn name`), never callsites, and requires
+/// word boundaries so `panel_dot` cannot match `panel_dot_x2`.
+pub fn fn_span(code: &[String], name: &str) -> Option<(usize, usize)> {
+    let needle = format!("fn {name}");
+    for (i, line) in code.iter().enumerate() {
+        let mut from = 0;
+        while let Some(rel) = line.get(from..).and_then(|s| s.find(&needle)) {
+            let at = from + rel;
+            let after = at + needle.len();
+            let before_ok =
+                at == 0 || !is_ident(line[..at].chars().next_back().unwrap_or(' '));
+            let after_ok = line[after..].chars().next().map_or(true, |c| !is_ident(c));
+            if before_ok && after_ok {
+                // brace-match from just past the name; a `;` ends a
+                // bodyless decl only at top level — `[i32; N]` array
+                // types inside the signature's parens/brackets don't.
+                let mut depth = 0i64;
+                let mut nest = 0i64; // ( ) [ ] nesting within the signature
+                let mut opened = false;
+                let mut j = i;
+                let mut col = after;
+                while j < code.len() {
+                    let seg = code[j].get(col..).unwrap_or("");
+                    for ch in seg.chars() {
+                        match ch {
+                            '{' => {
+                                depth += 1;
+                                opened = true;
+                            }
+                            '}' => {
+                                depth -= 1;
+                                if opened && depth <= 0 {
+                                    return Some((i, j));
+                                }
+                            }
+                            '(' | '[' => nest += 1,
+                            ')' | ']' => nest -= 1,
+                            ';' if !opened && nest <= 0 => return None, // bodyless decl
+                            _ => {}
+                        }
+                    }
+                    j += 1;
+                    col = 0;
+                }
+                return Some((i, code.len() - 1));
+            }
+            from = after;
+        }
+    }
+    None
+}
+
+/// Outcome of looking for a `// quik-lint: allow(<rule>): <why>`
+/// directive near a violation.
+pub enum Allow {
+    /// No directive: report the violation.
+    No,
+    /// Directive with a real justification: suppress the violation.
+    Justified,
+    /// Directive whose justification is missing or too short — itself a
+    /// violation (carries the directive's 0-based line).
+    Unjustified(usize),
+}
+
+/// Minimum justification length: long enough that `: ok` or `: todo`
+/// cannot pass for a rationale.
+const MIN_JUSTIFICATION: usize = 10;
+
+/// Look on the violation line and up to two lines above it for an allow
+/// directive naming `rule`.
+pub fn allow_at(raw: &[String], line: usize, rule: &str) -> Allow {
+    let needle = format!("quik-lint: allow({rule})");
+    let lo = line.saturating_sub(2);
+    for j in (lo..=line.min(raw.len().saturating_sub(1))).rev() {
+        if let Some(p) = raw[j].find(&needle) {
+            let rest = &raw[j][p + needle.len()..];
+            let just = rest.strip_prefix(':').map(str::trim).unwrap_or("");
+            return if just.len() >= MIN_JUSTIFICATION {
+                Allow::Justified
+            } else {
+                Allow::Unjustified(j)
+            };
+        }
+    }
+    Allow::No
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanking_strips_comments_and_strings_only() {
+        let src = "let a = \"HashMap.iter()\"; // HashMap.iter()\nlet b = m.iter();\n";
+        let out = blank_comments_and_strings(src);
+        assert!(!out.lines().next().unwrap().contains("iter"), "literal/comment leaked");
+        assert!(out.lines().nth(1).unwrap().contains("m.iter()"), "code was over-blanked");
+        assert_eq!(out.len(), src.len(), "byte offsets must be preserved");
+    }
+
+    #[test]
+    fn blanking_keeps_lifetimes_but_blanks_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { '{' }\n";
+        let out = blank_comments_and_strings(src);
+        assert!(out.contains("<'a>"), "lifetime must stay code");
+        assert!(!out.contains('{') || out.matches('{').count() == 1, "char literal must blank");
+    }
+
+    #[test]
+    fn nested_block_comments_blank_fully() {
+        let src = "/* a /* b */ still comment */ code()\n";
+        let out = blank_comments_and_strings(src);
+        assert!(out.contains("code()"));
+        assert!(!out.contains("still"));
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let code = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let s = Source::analyze("x.rs", code);
+        assert_eq!(s.test, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn test_mask_ignores_cfg_not_loom() {
+        let code = "#[cfg(not(loom))]\nfn real() {\n    work();\n}\n";
+        let s = Source::analyze("x.rs", code);
+        assert!(s.test.iter().all(|&t| !t), "cfg(not(loom)) is production code");
+    }
+
+    #[test]
+    fn fn_span_is_word_bounded_and_brace_matched() {
+        let code = "fn panel_dot_x2(a: u8) {\n    inner();\n}\nfn panel_dot(b: u8) {\n    x();\n}\n";
+        let s = Source::analyze("x.rs", code);
+        assert_eq!(fn_span(&s.code, "panel_dot"), Some((3, 5)));
+        assert_eq!(fn_span(&s.code, "panel_dot_x2"), Some((0, 2)));
+        assert_eq!(fn_span(&s.code, "absent"), None);
+    }
+
+    #[test]
+    fn fn_span_tolerates_array_types_in_signature() {
+        let code =
+            "fn panel_dot(xrow: &[i8], lanes: &mut [i32; 8]) {\n    x();\n}\nfn decl(a: u8);\n";
+        let s = Source::analyze("x.rs", code);
+        assert_eq!(fn_span(&s.code, "panel_dot"), Some((0, 2)), "`;` in array type is not a decl");
+        assert_eq!(fn_span(&s.code, "decl"), None, "top-level `;` is a bodyless decl");
+    }
+
+    #[test]
+    fn allow_requires_a_real_justification() {
+        let raw = vec![
+            "// quik-lint: allow(hotpath-alloc): the one documented allocation".to_string(),
+            "let v = Vec::new();".to_string(),
+            "// quik-lint: allow(hotpath-alloc)".to_string(),
+            "let w = Vec::new();".to_string(),
+        ];
+        assert!(matches!(allow_at(&raw, 1, "hotpath-alloc"), Allow::Justified));
+        assert!(matches!(allow_at(&raw, 3, "hotpath-alloc"), Allow::Unjustified(2)));
+        assert!(matches!(allow_at(&raw, 1, "lock-unwrap"), Allow::No));
+    }
+}

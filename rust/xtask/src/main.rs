@@ -1,0 +1,173 @@
+//! `cargo run -p xtask -- lint` — machine-enforce the quik crate's
+//! determinism, hot-path and unsafe invariants.
+//!
+//! Exit codes: 0 = clean, 1 = violations found, 2 = usage error.
+//! `--json` emits one machine-readable object per violation (an array),
+//! for CI annotation tooling; the default output is rustc-style
+//! `path:line` diagnostics.
+//!
+//! The rules and their rationale live in [`rules`]; the "Machine-enforced
+//! invariants" sections of `ROADMAP.md` and `rust/src/lib.rs` are the
+//! human-facing index.  Suppress a finding with
+//! `// quik-lint: allow(<rule>): <justification>` on the line or up to
+//! two lines above it — the justification is mandatory and checked.
+
+mod lexer;
+mod rules;
+
+use std::path::{Path, PathBuf};
+
+use lexer::Source;
+use rules::{lint_source, Violation};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = false;
+    let mut cmd = None;
+    for a in &args {
+        match a.as_str() {
+            "--json" => json = true,
+            "lint" if cmd.is_none() => cmd = Some("lint"),
+            other => {
+                eprintln!("xtask: unknown argument `{other}`");
+                eprintln!("usage: cargo run -p xtask -- lint [--json]");
+                std::process::exit(2);
+            }
+        }
+    }
+    if cmd != Some("lint") {
+        eprintln!("usage: cargo run -p xtask -- lint [--json]");
+        std::process::exit(2);
+    }
+
+    let root = crate_src_root();
+    let violations = match lint_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("xtask: cannot scan {}: {e}", root.display());
+            std::process::exit(2);
+        }
+    };
+
+    if json {
+        println!("{}", to_json(&violations));
+    } else {
+        for v in &violations {
+            println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.msg);
+        }
+        if violations.is_empty() {
+            eprintln!("quik-lint: clean");
+        } else {
+            eprintln!("quik-lint: {} violation(s)", violations.len());
+        }
+    }
+    std::process::exit(if violations.is_empty() { 0 } else { 1 });
+}
+
+/// `rust/src` of the main crate, resolved relative to this crate so the
+/// lint runs from any working directory.
+fn crate_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+}
+
+/// Lint every `.rs` file under `root` (sorted recursive walk, so output
+/// order — and therefore CI diffs — is stable).
+fn lint_tree(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = std::fs::read_to_string(f)?;
+        out.extend(lint_source(&Source::analyze(&format!("src/{rel}"), &text)));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Hand-rolled JSON (the crate is deliberately dependency-free); the
+/// only dynamic strings are paths and rule messages, so escaping the
+/// JSON specials + control characters is sufficient.
+fn to_json(vs: &[Violation]) -> String {
+    let mut s = String::from("[");
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"msg\":\"{}\"}}",
+            esc(v.rule),
+            esc(&v.path),
+            v.line,
+            esc(&v.msg)
+        ));
+    }
+    s.push(']');
+    s
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The teeth of the lint: `cargo test -p xtask` fails if the main
+    /// crate ever regresses, even without the dedicated CI job.
+    #[test]
+    fn repo_is_lint_clean() {
+        let root = crate_src_root();
+        let vs = lint_tree(&root).expect("scan rust/src");
+        let report: Vec<String> =
+            vs.iter().map(|v| format!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.msg)).collect();
+        assert!(vs.is_empty(), "quik-lint violations:\n{}", report.join("\n"));
+    }
+
+    #[test]
+    fn json_output_escapes_specials() {
+        let vs = vec![Violation {
+            rule: "hotpath-alloc",
+            path: "src/a \"b\".rs".to_string(),
+            line: 3,
+            msg: "back\\slash".to_string(),
+        }];
+        let j = to_json(&vs);
+        assert_eq!(
+            j,
+            "[{\"rule\":\"hotpath-alloc\",\"path\":\"src/a \\\"b\\\".rs\",\"line\":3,\
+             \"msg\":\"back\\\\slash\"}]"
+        );
+    }
+}

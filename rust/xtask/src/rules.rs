@@ -1,0 +1,654 @@
+//! The six lint rules.  Each encodes a load-bearing invariant of the
+//! quik crate (see "Machine-enforced invariants" in `rust/src/lib.rs`
+//! and ROADMAP.md); each can be suppressed per-site with
+//! `// quik-lint: allow(<rule>): <justification>` on or just above the
+//! flagged line — the justification is mandatory.
+//!
+//! | rule                    | invariant                                              |
+//! |-------------------------|--------------------------------------------------------|
+//! | `hash-iteration`        | no HashMap/HashSet iteration in serving/kernel modules |
+//! | `lock-unwrap`           | poisoned mutexes are recovered, never unwrapped        |
+//! | `unsafe-confinement`    | `unsafe` only in the four audited modules, with SAFETY |
+//! | `hotpath-alloc`         | manifest functions never heap-allocate                 |
+//! | `env-discipline`        | `QUIK_*` env reads only inside `config/`               |
+//! | `broadcast-confinement` | parallelism only via partition-only pool helpers       |
+
+use crate::lexer::{allow_at, fn_span, is_ident, Allow, Source};
+
+/// One confirmed rule violation (1-based line for display).
+#[derive(Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Modules whose decisions feed serving output or page/slot bookkeeping:
+/// unordered hash iteration here can change eviction choices, page
+/// free-list order, or float evaluation order between runs.
+const HASH_SCOPE: &[&str] = &["src/coordinator/", "src/backend/", "src/quant/"];
+
+/// Modules on the serving path: a poisoned lock here must be recovered
+/// (`unwrap_or_else(|e| e.into_inner())`), not unwrapped — one panicking
+/// worker must not wedge the whole server.
+const LOCK_SCOPE: &[&str] = &["src/coordinator/", "src/backend/", "src/util/"];
+
+/// The only modules allowed to contain `unsafe`: the worker-pool
+/// dispatch, the integer micro-kernels, and the two matmul shard
+/// writers.  Everything else must stay safe Rust.
+const UNSAFE_ALLOWED: &[&str] = &[
+    "src/util/parallel.rs",
+    "src/quant/dequant.rs",
+    "src/backend/native/linear.rs",
+    "src/backend/native/forward.rs",
+];
+
+/// The hot-path manifest: functions on the warm serving path (forward
+/// steps, page mapping, micro-kernels, pool dispatch).  The static
+/// complement of the `tests/alloc_hotpath.rs` counting allocator: these
+/// bodies may not contain heap-allocating calls.
+const HOTPATH_MANIFEST: &[(&str, &str)] = &[
+    ("src/backend/native/linear.rs", "forward_into"),
+    ("src/backend/native/forward.rs", "forward_pass_masked"),
+    ("src/backend/native/forward.rs", "matmul_f32_into_pooled"),
+    ("src/backend/native/forward.rs", "matmul_f32_rows"),
+    ("src/backend/native/forward.rs", "matmul_f32_cols"),
+    ("src/backend/native/forward.rs", "map_row"),
+    ("src/backend/native/forward.rs", "write_kv"),
+    ("src/backend/native/forward.rs", "key_dot"),
+    ("src/backend/native/forward.rs", "value_accumulate"),
+    ("src/backend/native/forward.rs", "try_reserve_row"),
+    ("src/backend/native/forward.rs", "ensure_row_capacity"),
+    ("src/backend/native/forward.rs", "kv_quantize_vec"),
+    ("src/backend/native/forward.rs", "rmsnorm_into"),
+    ("src/backend/native/forward.rs", "softmax_in_place"),
+    ("src/backend/native/forward.rs", "rope_in_place"),
+    ("src/quant/dequant.rs", "int_tile"),
+    ("src/quant/dequant.rs", "quik_tile"),
+    ("src/quant/dequant.rs", "epilogue"),
+    ("src/quant/dequant.rs", "panel_dot"),
+    ("src/quant/dequant.rs", "panel_dot_x2"),
+    ("src/quant/dequant.rs", "panel_dot_generic"),
+    ("src/quant/dequant.rs", "panel_dot_x2_generic"),
+    ("src/quant/dequant.rs", "panel_dot_avx2"),
+    ("src/quant/dequant.rs", "panel_dot_x2_avx2"),
+    ("src/util/parallel.rs", "broadcast"),
+    ("src/util/parallel.rs", "for_chunks"),
+    ("src/util/parallel.rs", "shard_2d"),
+    ("src/util/parallel.rs", "worker_loop"),
+    ("src/util/parallel.rs", "lock"),
+];
+
+/// Calls that heap-allocate (or strongly imply it) — banned inside
+/// manifest bodies.  `resize`/`extend` on reused scratch are allowed:
+/// they are no-ops once the buffer is warm, which is exactly the
+/// property the counting allocator pins dynamically.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    ".to_vec()",
+    ".clone()",
+    ".collect()",
+    "Box::new",
+    "Box::leak",
+    "format!",
+    ".to_string()",
+    "String::new",
+    "String::from",
+    "with_capacity",
+];
+
+/// The partition-only fan-out helpers: the only production callers of
+/// `WorkerPool::broadcast`.  Their closures receive disjoint index
+/// ranges, so no shard can accumulate floats across a shard boundary —
+/// the structural guarantee behind bit-identity at any thread count.
+const BROADCAST_HELPERS: &[(&str, &str)] = &[("src/util/parallel.rs", "for_chunks")];
+
+fn in_scope(path: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|s| path.starts_with(s))
+}
+
+/// All ident-bounded occurrences of `tok` in `line` (byte offsets).
+fn token_hits(line: &str, tok: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = line.get(from..).and_then(|s| s.find(tok)) {
+        let at = from + rel;
+        let first = tok.chars().next().unwrap_or(' ');
+        let before_ok = if is_ident(first) {
+            at == 0 || !is_ident(line[..at].chars().next_back().unwrap_or(' '))
+        } else {
+            true
+        };
+        let last = tok.chars().next_back().unwrap_or(' ');
+        let after_ok = if is_ident(last) {
+            line[at + tok.len()..].chars().next().map_or(true, |c| !is_ident(c))
+        } else {
+            true
+        };
+        if before_ok && after_ok {
+            hits.push(at);
+        }
+        from = at + tok.len();
+    }
+    hits
+}
+
+/// Identifiers bound to a `HashMap`/`HashSet` type anywhere in the file
+/// (field declarations, `let` bindings, fn parameters — including
+/// through reference and wrapper types like `&mut` / `RefCell<…>`).
+fn hash_collection_names(code: &[String]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for line in code {
+        for marker in ["HashMap", "HashSet"] {
+            for at in token_hits(line, marker) {
+                if let Some(name) = binding_name(&line[..at]) {
+                    if !names.contains(&name) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+/// Given the text left of a `HashMap`/`HashSet` token, recover the
+/// identifier it is bound to: unwrap `&`/`mut`/`Wrapper<` layers, then
+/// accept `name:` (declaration) or `name =` (binding).  Return-type and
+/// constructor positions yield `None`.
+fn binding_name(prefix: &str) -> Option<String> {
+    let mut s = prefix.trim_end();
+    loop {
+        if let Some(r) = s.strip_suffix('<') {
+            // strip the wrapper identifier too (RefCell<, Mutex<, …)
+            let r = r.trim_end();
+            let cut = r.rfind(|c: char| !is_ident(c)).map(|i| i + 1).unwrap_or(0);
+            if cut == r.len() {
+                return None;
+            }
+            s = r[..cut].trim_end();
+        } else if let Some(r) = s.strip_suffix('&') {
+            s = r.trim_end();
+        } else if let Some(r) = s.strip_suffix("mut") {
+            if r.ends_with([' ', '\t', '&', '(']) || r.is_empty() {
+                s = r.trim_end();
+            } else {
+                return None; // `foomut` — not the keyword
+            }
+        } else {
+            break;
+        }
+    }
+    let s = s.strip_suffix(':').or_else(|| s.strip_suffix('='))?.trim_end();
+    let cut = s.rfind(|c: char| !is_ident(c)).map(|i| i + 1).unwrap_or(0);
+    let name = &s[cut..];
+    if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    const KEYWORDS: &[&str] = &["let", "mut", "pub", "fn", "const", "static", "if", "in"];
+    if KEYWORDS.contains(&name) {
+        None
+    } else {
+        Some(name.to_string())
+    }
+}
+
+/// Rule 1 — `hash-iteration`: no iteration over hash-ordered collections
+/// in serving/kernel modules.  Hash iteration order varies per process
+/// (`RandomState`), so an LRU tie-break, a page-release loop, or any
+/// fold over it silently breaks run-to-run determinism.  Use `BTreeMap`
+/// or sort keys first.
+pub fn hash_iteration(src: &Source) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if !in_scope(&src.path, HASH_SCOPE) {
+        return out;
+    }
+    let names = hash_collection_names(&src.code);
+    const METHODS: &[&str] = &[
+        ".iter()",
+        ".iter_mut()",
+        ".keys()",
+        ".values()",
+        ".values_mut()",
+        ".into_iter()",
+        ".drain(",
+        ".retain(",
+    ];
+    for (i, line) in src.code.iter().enumerate() {
+        if src.test[i] {
+            continue;
+        }
+        for name in &names {
+            for m in METHODS {
+                let pat = format!("{name}{m}");
+                for _at in token_hits(line, &pat) {
+                    out.push(Violation {
+                        rule: "hash-iteration",
+                        path: src.path.clone(),
+                        line: i + 1,
+                        msg: format!(
+                            "`{name}` is a hash-ordered collection; `{name}{m}…` iterates \
+                             it in nondeterministic order — use BTreeMap/BTreeSet or sort \
+                             keys first"
+                        ),
+                    });
+                }
+            }
+            // `for x in [&[mut ]]name` loops
+            for at in token_hits(line, name) {
+                let before = line[..at].trim_end();
+                if before.ends_with("in") || before.ends_with("in &") || before.ends_with("in &mut")
+                {
+                    out.push(Violation {
+                        rule: "hash-iteration",
+                        path: src.path.clone(),
+                        line: i + 1,
+                        msg: format!(
+                            "`for … in {name}` iterates a hash-ordered collection in \
+                             nondeterministic order — use BTreeMap/BTreeSet or sort keys first"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Rule 2 — `lock-unwrap`: serving modules must recover poisoned
+/// mutexes (`.lock().unwrap_or_else(|e| e.into_inner())`), the
+/// established `SharedCoordinator::submit` pattern — a panicking worker
+/// must degrade one request, not wedge every subsequent one.
+pub fn lock_unwrap(src: &Source) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if !in_scope(&src.path, LOCK_SCOPE) {
+        return out;
+    }
+    for (i, line) in src.code.iter().enumerate() {
+        if src.test[i] {
+            continue;
+        }
+        for pat in [".lock().unwrap()", ".lock().expect("] {
+            if line.contains(pat) {
+                out.push(Violation {
+                    rule: "lock-unwrap",
+                    path: src.path.clone(),
+                    line: i + 1,
+                    msg: "serving-path lock must recover from poisoning: use \
+                          `.lock().unwrap_or_else(|e| e.into_inner())`"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Rule 3 — `unsafe-confinement`: `unsafe` appears only in the four
+/// audited modules, and every occurrence carries a `// SAFETY:` comment
+/// (or, for `unsafe fn`, a `# Safety` doc section) justifying it.
+pub fn unsafe_confinement(src: &Source) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let allowed = UNSAFE_ALLOWED.contains(&src.path.as_str());
+    for (i, line) in src.code.iter().enumerate() {
+        if src.test[i] {
+            continue;
+        }
+        let hits = token_hits(line, "unsafe");
+        if hits.is_empty() {
+            continue;
+        }
+        if !allowed {
+            out.push(Violation {
+                rule: "unsafe-confinement",
+                path: src.path.clone(),
+                line: i + 1,
+                msg: "`unsafe` outside the audited kernel/pool modules — keep unsafe code \
+                      confined to util/parallel.rs, quant/dequant.rs, backend/native/{linear,\
+                      forward}.rs"
+                    .to_string(),
+            });
+            continue;
+        }
+        // fn-pointer *types* (`call: unsafe fn(…)`) assert nothing and
+        // need no comment.
+        if line.contains(": unsafe fn") || line.contains("= unsafe fn") {
+            continue;
+        }
+        let safety_near = (i.saturating_sub(3)..=i).any(|j| src.raw[j].contains("SAFETY:"));
+        let doc_above = line.contains("unsafe fn")
+            && (i.saturating_sub(12)..i).any(|j| src.raw[j].contains("# Safety"));
+        if !safety_near && !doc_above {
+            out.push(Violation {
+                rule: "unsafe-confinement",
+                path: src.path.clone(),
+                line: i + 1,
+                msg: "unsafe without a `// SAFETY:` comment (or `# Safety` doc for unsafe fn) \
+                      justifying why the contract holds"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Rule 4 — `hotpath-alloc`: manifest functions may not contain
+/// heap-allocating calls.  The static complement of the
+/// `tests/alloc_hotpath.rs` counting allocator: the dynamic test proves
+/// warm steps allocate nothing, this rule stops a `.clone()` from ever
+/// reaching them.
+pub fn hotpath_alloc(src: &Source) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (file, func) in HOTPATH_MANIFEST {
+        if src.path != *file {
+            continue;
+        }
+        let Some((lo, hi)) = fn_span(&src.code, func) else { continue };
+        for i in lo..=hi.min(src.code.len() - 1) {
+            if src.test[i] {
+                continue;
+            }
+            for tok in ALLOC_TOKENS {
+                if src.code[i].contains(tok) {
+                    out.push(Violation {
+                        rule: "hotpath-alloc",
+                        path: src.path.clone(),
+                        line: i + 1,
+                        msg: format!(
+                            "`{tok}` inside hot-path function `{func}` — warm serving steps \
+                             must not heap-allocate; reuse scratch buffers instead"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Rule 5 — `env-discipline`: `std::env::var` only inside `config/`.
+/// Every `QUIK_*` knob flows through `ExecConfig` so it stays
+/// documented, testable, and explicit-beats-env.
+pub fn env_discipline(src: &Source) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if src.path.starts_with("src/config/") {
+        return out;
+    }
+    for (i, line) in src.code.iter().enumerate() {
+        if src.test[i] {
+            continue;
+        }
+        if line.contains("env::var") {
+            out.push(Violation {
+                rule: "env-discipline",
+                path: src.path.clone(),
+                line: i + 1,
+                msg: "environment read outside config/ — route the knob through \
+                      `config::ExecConfig` (explicit-beats-env, one documented surface)"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Rule 6 — `broadcast-confinement`: `WorkerPool::broadcast` is called
+/// only from the partition-only helpers (`for_chunks`, and through it
+/// `shard_2d`).  A direct broadcast closure sees every slot index and
+/// *can* accumulate `f32`/`f64` across shard boundaries, which breaks
+/// bit-identity across thread counts; the helpers hand each closure a
+/// disjoint range, making cross-shard reduction structurally impossible.
+pub fn broadcast_confinement(src: &Source) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut allowed_spans = Vec::new();
+    for (file, func) in BROADCAST_HELPERS {
+        if src.path == *file {
+            if let Some(span) = fn_span(&src.code, func) {
+                allowed_spans.push(span);
+            }
+        }
+    }
+    for (i, line) in src.code.iter().enumerate() {
+        if src.test[i] {
+            continue;
+        }
+        if line.contains(".broadcast(")
+            && !allowed_spans.iter().any(|&(lo, hi)| i >= lo && i <= hi)
+        {
+            out.push(Violation {
+                rule: "broadcast-confinement",
+                path: src.path.clone(),
+                line: i + 1,
+                msg: "direct `WorkerPool::broadcast` call — use the partition-only helpers \
+                      (`for_chunks`/`shard_2d`) so closures cannot accumulate floats across \
+                      shard boundaries"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Run every rule over one file and apply the allow-directive filter:
+/// justified allows suppress, unjustified allows become violations of
+/// their own.
+pub fn lint_source(src: &Source) -> Vec<Violation> {
+    let mut raw = Vec::new();
+    raw.extend(hash_iteration(src));
+    raw.extend(lock_unwrap(src));
+    raw.extend(unsafe_confinement(src));
+    raw.extend(hotpath_alloc(src));
+    raw.extend(env_discipline(src));
+    raw.extend(broadcast_confinement(src));
+    let mut out = Vec::new();
+    for v in raw {
+        match allow_at(&src.raw, v.line - 1, v.rule) {
+            Allow::No => out.push(v),
+            Allow::Justified => {}
+            Allow::Unjustified(dline) => out.push(Violation {
+                rule: "allow-justification",
+                path: v.path,
+                line: dline + 1,
+                msg: format!(
+                    "`quik-lint: allow({})` requires a justification: \
+                     `// quik-lint: allow({}): <why this site is sound>`",
+                    v.rule, v.rule
+                ),
+            }),
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out.dedup_by(|a, b| a.line == b.line && a.rule == b.rule && a.msg == b.msg);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(path: &str, text: &str) -> Vec<Violation> {
+        lint_source(&Source::analyze(path, text))
+    }
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    // -- rule 1: hash-iteration ------------------------------------------
+
+    #[test]
+    fn hash_iteration_flags_map_iteration_in_scope() {
+        let bad = "use std::collections::HashMap;\n\
+                   struct S { children: HashMap<u32, u32> }\n\
+                   impl S {\n\
+                       fn f(&self) {\n\
+                           for v in self.children.values() { drop(v); }\n\
+                           let k = self.children.iter().min();\n\
+                           drop(k);\n\
+                       }\n\
+                   }\n";
+        let vs = lint("src/coordinator/x.rs", bad);
+        assert_eq!(rules_of(&vs), vec!["hash-iteration", "hash-iteration"]);
+        assert_eq!(vs[0].line, 5);
+        assert_eq!(vs[1].line, 6);
+    }
+
+    #[test]
+    fn hash_iteration_clean_on_btree_and_keyed_access() {
+        let ok = "use std::collections::{BTreeMap, HashMap};\n\
+                  struct S { children: BTreeMap<u32, u32>, lookup: HashMap<u32, u32> }\n\
+                  impl S {\n\
+                      fn f(&self) {\n\
+                          for v in self.children.values() { drop(v); }\n\
+                          let x = self.lookup.get(&3);\n\
+                          drop(x);\n\
+                      }\n\
+                  }\n";
+        assert!(lint("src/coordinator/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn hash_iteration_ignores_out_of_scope_and_tests() {
+        let bad = "struct S { m: HashMap<u32, u32> }\n\
+                   fn f(s: &S) { for v in s.m.values() { drop(v); } }\n";
+        assert!(lint("src/devicemodel/x.rs", bad).is_empty(), "out of scope");
+        let in_tests = "struct S { m: HashMap<u32, u32> }\n\
+                        #[cfg(test)]\n\
+                        mod tests {\n\
+                            fn f(s: &super::S) { for v in s.m.values() { drop(v); } }\n\
+                        }\n";
+        assert!(lint("src/coordinator/x.rs", in_tests).is_empty(), "tests exempt");
+    }
+
+    // -- rule 2: lock-unwrap ---------------------------------------------
+
+    #[test]
+    fn lock_unwrap_flags_unwrap_and_expect() {
+        let bad = "fn f(m: &std::sync::Mutex<u32>) {\n\
+                       let a = m.lock().unwrap();\n\
+                       let b = m.lock().expect(\"poisoned\");\n\
+                       drop((a, b));\n\
+                   }\n";
+        let vs = lint("src/coordinator/x.rs", bad);
+        assert_eq!(rules_of(&vs), vec!["lock-unwrap", "lock-unwrap"]);
+    }
+
+    #[test]
+    fn lock_unwrap_clean_on_poison_recovery() {
+        let ok = "fn f(m: &std::sync::Mutex<u32>) {\n\
+                      let g = m.lock().unwrap_or_else(|e| e.into_inner());\n\
+                      drop(g);\n\
+                  }\n";
+        assert!(lint("src/coordinator/x.rs", ok).is_empty());
+    }
+
+    // -- rule 3: unsafe-confinement --------------------------------------
+
+    #[test]
+    fn unsafe_flagged_outside_audited_modules() {
+        let bad = "fn f(p: *const u8) -> u8 {\n\
+                       // SAFETY: p is valid\n\
+                       unsafe { *p }\n\
+                   }\n";
+        let vs = lint("src/coordinator/x.rs", bad);
+        assert_eq!(rules_of(&vs), vec!["unsafe-confinement"]);
+    }
+
+    #[test]
+    fn unsafe_in_audited_module_needs_safety_comment() {
+        let missing = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let vs = lint("src/quant/dequant.rs", missing);
+        assert_eq!(rules_of(&vs), vec!["unsafe-confinement"]);
+        let present = "fn f(p: *const u8) -> u8 {\n\
+                       // SAFETY: caller guarantees p is valid\n\
+                       unsafe { *p }\n\
+                   }\n";
+        assert!(lint("src/quant/dequant.rs", present).is_empty());
+        let doc = "/// # Safety\n/// p must be valid.\npub unsafe fn f(p: *const u8) -> u8 {\n\
+                   // SAFETY: contract forwarded from the caller\n\
+                   unsafe { *p }\n}\n";
+        assert!(lint("src/quant/dequant.rs", doc).is_empty());
+    }
+
+    // -- rule 4: hotpath-alloc -------------------------------------------
+
+    #[test]
+    fn hotpath_alloc_flags_allocation_in_manifest_fn() {
+        let bad = "fn key_dot(v: &[f32]) -> Vec<f32> {\n    v.to_vec()\n}\n";
+        let vs = lint("src/backend/native/forward.rs", bad);
+        assert_eq!(rules_of(&vs), vec!["hotpath-alloc"]);
+        assert_eq!(vs[0].line, 2);
+    }
+
+    #[test]
+    fn hotpath_alloc_ignores_non_manifest_fns_and_reuse_idiom() {
+        let ok = "fn helper(v: &[f32]) -> Vec<f32> { v.to_vec() }\n\
+                  fn key_dot(out: &mut Vec<f32>, m: usize) {\n\
+                      out.clear();\n\
+                      out.resize(m, 0.0);\n\
+                  }\n";
+        assert!(lint("src/backend/native/forward.rs", ok).is_empty());
+    }
+
+    // -- rule 5: env-discipline ------------------------------------------
+
+    #[test]
+    fn env_read_flagged_outside_config() {
+        let bad = "fn f() -> Option<String> { std::env::var(\"QUIK_ENGINE\").ok() }\n";
+        let vs = lint("src/coordinator/server.rs", bad);
+        assert_eq!(rules_of(&vs), vec!["env-discipline"]);
+        assert!(lint("src/config/mod.rs", bad).is_empty(), "config/ owns env reads");
+    }
+
+    // -- rule 6: broadcast-confinement -----------------------------------
+
+    #[test]
+    fn direct_broadcast_flagged_outside_helpers() {
+        let bad = "fn fan_out(pool: &WorkerPool, acc: &mut f32) {\n\
+                       pool.broadcast(&|slot| { work(slot); });\n\
+                   }\n";
+        let vs = lint("src/backend/native/forward.rs", bad);
+        assert_eq!(rules_of(&vs), vec!["broadcast-confinement"]);
+    }
+
+    #[test]
+    fn broadcast_allowed_inside_for_chunks_helper() {
+        let ok = "impl WorkerPool {\n\
+                      pub fn for_chunks<F>(&self, units: usize, f: F) {\n\
+                          self.broadcast(&|slot| { f(slot..slot + 1); });\n\
+                      }\n\
+                  }\n";
+        assert!(lint("src/util/parallel.rs", ok).is_empty());
+    }
+
+    // -- allow escape hatch ----------------------------------------------
+
+    #[test]
+    fn justified_allow_suppresses_and_bare_allow_is_flagged() {
+        let justified = "fn key_dot(v: &[f32]) -> Vec<f32> {\n\
+             // quik-lint: allow(hotpath-alloc): the returned buffer is the step's one\n\
+             // documented allocation\n\
+             v.to_vec()\n\
+         }\n";
+        assert!(lint("src/backend/native/forward.rs", justified).is_empty());
+        let bare = "fn key_dot(v: &[f32]) -> Vec<f32> {\n\
+             // quik-lint: allow(hotpath-alloc)\n\
+             v.to_vec()\n\
+         }\n";
+        let vs = lint("src/backend/native/forward.rs", bare);
+        assert_eq!(rules_of(&vs), vec!["allow-justification"]);
+    }
+
+    #[test]
+    fn allow_for_wrong_rule_does_not_suppress() {
+        let wrong = "fn key_dot(v: &[f32]) -> Vec<f32> {\n\
+             // quik-lint: allow(lock-unwrap): irrelevant rule name here\n\
+             v.to_vec()\n\
+         }\n";
+        let vs = lint("src/backend/native/forward.rs", wrong);
+        assert_eq!(rules_of(&vs), vec!["hotpath-alloc"]);
+    }
+}
